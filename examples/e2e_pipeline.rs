@@ -1,0 +1,107 @@
+//! END-TO-END DRIVER — the full EvoSort system on a real workload, proving
+//! all layers compose (recorded in EXPERIMENTS.md §E2E):
+//!
+//!   L1 Pallas bitonic kernel  → AOT HLO artifact (`make artifacts`)
+//!   L2 JAX tile-sort graph    → loaded by the PJRT runtime
+//!   L3 rust coordinator       → GA tuning + Adaptive Partition Sort +
+//!                               master pipeline + validation + baselines
+//!
+//! Runs Algorithm 1 (GA-tuned) over three sizes, then exercises the XLA
+//! tile-sort backend (`A_code = 5`) on i32 data, then the symbolic path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example e2e_pipeline
+//! ```
+
+use evosort::coordinator::{pipeline, ParamSource, PipelineConfig};
+use evosort::data::{generate_i32, Distribution};
+use evosort::ga::GaConfig;
+use evosort::prelude::*;
+use evosort::runtime::XlaTileSorter;
+use evosort::util::{default_threads, fmt_count, fmt_secs, timer};
+
+fn main() {
+    let threads = default_threads();
+
+    // --- Stage 1: the master pipeline (Algorithm 1), GA-tuned. ------------
+    println!("=== Stage 1: master pipeline (GA-tuned, Algorithm 1) ===");
+    let config = PipelineConfig {
+        sizes: vec![500_000, 2_000_000, 8_000_000],
+        dist: Distribution::Uniform,
+        seed: 42,
+        threads,
+        params: ParamSource::Ga(GaConfig {
+            population: 10,
+            generations: 5,
+            seed: 42,
+            ..GaConfig::default()
+        }),
+        sample_cap: 1_000_000,
+        baselines: vec![Baseline::Quicksort, Baseline::Mergesort],
+    };
+    let rows = pipeline::run(&config);
+    println!("\n n       EvoSort    best-baseline  speedup  valid");
+    for r in &rows {
+        let best_base =
+            r.baselines.iter().map(|(_, t, _)| *t).fold(f64::INFINITY, f64::min);
+        println!(
+            " {:<7} {:<10} {:<13} {:<7.2}x {}",
+            fmt_count(r.n),
+            fmt_secs(r.evosort_secs),
+            fmt_secs(best_base),
+            r.best_speedup(),
+            r.validated
+        );
+        assert!(r.validated, "pipeline row must validate");
+    }
+
+    // --- Stage 2: the XLA tile backend (L1+L2+runtime on the hot path). ---
+    println!("\n=== Stage 2: XLA tile-sort backend (A_code = 5) ===");
+    match XlaTileSorter::from_default_artifacts() {
+        Ok(backend) => {
+            let sorter = AdaptiveSorter::new(threads).with_xla(std::sync::Arc::new(backend));
+            let params = SortParams {
+                algorithm: ACode::XlaTile,
+                fallback_threshold: 1024,
+                ..SortParams::default()
+            };
+            let n = 300_000;
+            let mut data = generate_i32(n, Distribution::Uniform, 7, threads);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            let (_, secs) = timer::time(|| sorter.sort_i32(&mut data, &params));
+            assert_eq!(data, expect, "XLA-backed sort must be correct");
+            println!(
+                "sorted {} i32 via Pallas-bitonic tiles + rust merge in {} — exact match vs oracle",
+                fmt_count(n),
+                fmt_secs(secs)
+            );
+        }
+        Err(e) => {
+            println!("SKIPPED: artifacts unavailable ({e}); run `make artifacts`");
+        }
+    }
+
+    // --- Stage 3: symbolic deployment (§7, Table 2 scenario). -------------
+    println!("\n=== Stage 3: symbolic-parameter pipeline (zero tuning) ===");
+    let config = PipelineConfig {
+        sizes: vec![4_000_000],
+        params: ParamSource::Symbolic(evosort::symbolic::SymbolicModel::paper()),
+        threads,
+        baselines: vec![Baseline::Quicksort],
+        ..PipelineConfig::default()
+    };
+    let rows = pipeline::run(&config);
+    for r in &rows {
+        assert!(r.validated);
+        println!(
+            " {}: {} vs baseline {} -> {:.2}x (params {})",
+            fmt_count(r.n),
+            fmt_secs(r.evosort_secs),
+            fmt_secs(r.baselines[0].1),
+            r.best_speedup(),
+            r.params
+        );
+    }
+    println!("\nE2E OK: all stages validated.");
+}

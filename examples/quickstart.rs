@@ -1,0 +1,41 @@
+//! Quickstart: sort 10M integers with EvoSort and compare against the
+//! sequential library baseline.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use evosort::data::{generate_i64, validate, Distribution};
+use evosort::prelude::*;
+use evosort::symbolic::SymbolicModel;
+use evosort::util::{default_threads, fmt_count, fmt_secs, timer};
+
+fn main() {
+    let n = 10_000_000;
+    let threads = default_threads();
+    println!("EvoSort quickstart: {} uniform i64, {threads} threads", fmt_count(n));
+
+    // 1. Generate the paper's workload: uniform integers in [-1e9, 1e9].
+    let data = generate_i64(n, Distribution::Uniform, 42, threads);
+    let fp = validate::fingerprint_i64(&data, threads);
+
+    // 2. Parameters from the symbolic model (§7) — no tuning run needed.
+    let params = SymbolicModel::paper().params_for(n);
+    println!("symbolic params: {params}");
+
+    // 3. Sort.
+    let sorter = AdaptiveSorter::new(threads);
+    let mut evo = data.clone();
+    let (_, evo_secs) = timer::time(|| sorter.sort_i64(&mut evo, &params));
+
+    // 4. Validate (ordering + multiset preservation).
+    assert_eq!(validate::validate_i64(fp, &evo, threads), validate::Verdict::Valid);
+    println!("evosort:  {} ({:.1} Melem/s)", fmt_secs(evo_secs), n as f64 / evo_secs / 1e6);
+
+    // 5. Baseline comparison (the np.sort analog).
+    let mut base = data.clone();
+    let (_, base_secs) = timer::time(|| Baseline::Quicksort.sort_i64(&mut base));
+    assert_eq!(base, evo);
+    println!("baseline: {} ({:.1} Melem/s)", fmt_secs(base_secs), n as f64 / base_secs / 1e6);
+    println!("speedup:  {:.2}x", base_secs / evo_secs);
+}

@@ -1,0 +1,63 @@
+//! The coordinator as a long-running service: concurrent job submission with
+//! backpressure, parameter resolution (override → tuning cache → symbolic
+//! model), validation, and a metrics report.
+//!
+//! ```sh
+//! cargo run --release --offline --example sort_service
+//! ```
+
+use evosort::coordinator::{ServiceConfig, SortJob, SortService};
+use evosort::data::{generate_i64, Distribution};
+use evosort::prelude::*;
+use evosort::util::{default_threads, fmt_count, fmt_secs};
+
+fn main() {
+    let threads = default_threads();
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: threads.div_ceil(2),
+        queue_capacity: 8, // small queue => visible backpressure
+    });
+
+    // Pre-warm the tuning cache for one workload class, as a tuned
+    // deployment would (other classes fall back to the symbolic model).
+    svc.cache().put(1_000_000, "uniform", SortParams::paper_1e7());
+
+    let workloads = [
+        ("uniform", Distribution::Uniform, 1_000_000usize),
+        ("zipf", Distribution::Zipf, 800_000),
+        ("gaussian", Distribution::Gaussian, 1_200_000),
+        ("nearly-sorted", Distribution::NearlySorted, 1_000_000),
+    ];
+
+    println!("submitting 12 jobs across {} workload classes...", workloads.len());
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let (name, dist, n) = workloads[i % workloads.len()];
+            let data = generate_i64(n, dist, i as u64, threads);
+            let mut job = SortJob::new(data);
+            job.dist = name.to_string();
+            svc.submit(job)
+        })
+        .collect();
+
+    for h in handles {
+        let out = h.wait();
+        assert!(out.valid, "job {} invalid", out.id);
+        println!(
+            "job {:>2}: {:>6} elems in {:>9}  params={}",
+            out.id,
+            fmt_count(out.data.len()),
+            fmt_secs(out.secs),
+            out.params
+        );
+    }
+
+    svc.drain();
+    println!("\nmetrics:\n{}", svc.metrics().report());
+    let hits = svc.metrics().counter("params.cache_hit");
+    let sym = svc.metrics().counter("params.symbolic");
+    println!("cache hits: {hits}, symbolic fallbacks: {sym}");
+    assert_eq!(svc.metrics().counter("jobs.completed"), 12);
+    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+}

@@ -1,0 +1,57 @@
+//! Symbolic-model deployment (§7): fit quadratics to a GA sweep on *this*
+//! machine, compare the fitted curves with the paper's Eqs. (1)-(4), then
+//! sort with zero tuning overhead (the Table 2 scenario).
+//!
+//! ```sh
+//! cargo run --release --offline --example symbolic_deploy
+//! ```
+
+use evosort::data::{generate_i64, Distribution};
+use evosort::ga::{GaConfig, GaDriver};
+use evosort::prelude::*;
+use evosort::symbolic::SymbolicModel;
+use evosort::util::{default_threads, fmt_count, fmt_secs, timer};
+
+fn main() {
+    let threads = default_threads();
+    let sweep_sizes = [100_000usize, 300_000, 1_000_000, 3_000_000, 10_000_000];
+
+    // 1. GA sweep (the training data of Figures 7-11).
+    println!("GA sweep over {} sizes:", sweep_sizes.len());
+    let mut points = Vec::new();
+    for &n in &sweep_sizes {
+        let cfg = GaConfig { population: 8, generations: 4, seed: 11 ^ n as u64, ..Default::default() };
+        let r = GaDriver::new(cfg).run_for_size(n, 2_000_000, Distribution::Uniform, AdaptiveSorter::new(threads));
+        println!("  n={:<6} best={} {}", fmt_count(n), fmt_secs(r.best_fitness), r.best);
+        points.push((n, r.best));
+    }
+
+    // 2. Fit degree-2 models in x = log10 n (the paper's §7.1 form).
+    let fitted = SymbolicModel::fit(&points).expect("fit");
+    let paper = SymbolicModel::paper();
+    println!("\nfitted vs paper quadratics (vertex x* = -b/2a):");
+    for (name, f, p) in [
+        ("T_insertion", fitted.insertion, paper.insertion),
+        ("T_par_merge", fitted.parallel_merge, paper.parallel_merge),
+        ("T_fallback ", fitted.fallback, paper.fallback),
+        ("T_tile     ", fitted.tile, paper.tile),
+    ] {
+        println!(
+            "  {name}: fitted a={:+.1} x*={:.2} | paper a={:+.1} x*={:.2}",
+            f.a,
+            f.vertex_x(),
+            p.a,
+            p.vertex_x()
+        );
+    }
+
+    // 3. Deploy: closed-form parameters, zero tuning overhead (Table 2).
+    let n = 20_000_000;
+    let params = fitted.params_for(n);
+    println!("\ndeploy at n={}: params {params}", fmt_count(n));
+    let mut data = generate_i64(n, Distribution::Uniform, 99, threads);
+    let sorter = AdaptiveSorter::new(threads);
+    let (_, secs) = timer::time(|| sorter.sort_i64(&mut data, &params));
+    assert!(data.windows(2).all(|w| w[0] <= w[1]));
+    println!("sorted {} in {} — no GA run needed", fmt_count(n), fmt_secs(secs));
+}

@@ -1,0 +1,64 @@
+//! The three-layer seam in isolation: load the AOT artifacts, run the Pallas
+//! bitonic tile sorter and the radix-histogram kernel through PJRT from
+//! rust, and cross-check both against rust oracles.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example xla_backend
+//! ```
+
+use evosort::data::{generate_i32, Distribution};
+use evosort::runtime::{Manifest, XlaTileSorter};
+use evosort::sort::TileSorter;
+use evosort::util::{fmt_secs, timer};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts in {}:", manifest.dir.display());
+    for e in &manifest.entries {
+        println!("  {} (batch={} tile={})", e.kind, e.batch, e.tile);
+    }
+
+    let backend = XlaTileSorter::new(&manifest)?;
+    let tile = backend.tile_size();
+    let batch = backend.batch();
+
+    // --- Tile sort through the Pallas bitonic artifact. -------------------
+    let n_tiles = batch * 2 + 3; // forces a padded partial batch
+    let mut data = generate_i32(tile * n_tiles, Distribution::Uniform, 3, 2);
+    let reference: Vec<i32> = data
+        .chunks(tile)
+        .flat_map(|c| {
+            let mut v = c.to_vec();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    let (_, secs) = timer::time(|| backend.sort_tiles_i32(&mut data).unwrap());
+    assert_eq!(data, reference, "tile sort must match the rust oracle");
+    println!(
+        "\ntile_sort: {} tiles x {} sorted via PJRT in {} — matches oracle",
+        n_tiles,
+        tile,
+        fmt_secs(secs)
+    );
+
+    // --- Histograms through the Pallas one-hot-reduction artifact. --------
+    let hdata = generate_i32(tile * batch, Distribution::Uniform, 5, 2);
+    for shift in [0, 8, 16, 24] {
+        let (hists, secs) =
+            timer::time(|| backend.histogram_batch(hdata.clone(), shift).unwrap());
+        // Rust oracle.
+        for (b, block) in hdata.chunks(tile).enumerate() {
+            let mut want = [0i32; 256];
+            for &x in block {
+                want[((x as u32 >> shift) & 0xFF) as usize] += 1;
+            }
+            assert_eq!(&hists[b * 256..(b + 1) * 256], &want[..]);
+        }
+        println!("radix_hist shift={shift:>2}: {} blocks verified in {}", batch, fmt_secs(secs));
+    }
+
+    println!("\nxla_backend OK — L1 (Pallas) + L2 (JAX) + runtime (PJRT) compose.");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts for the rust PJRT runtime.
+
+HLO **text** is the interchange format, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--tile 1024] [--batch 32]
+
+Emits:
+
+* ``tile_sort_b{B}_t{T}.hlo.txt``   — the bitonic tile-sort executable
+* ``radix_hist_b{B}_t{T}.hlo.txt``  — the histogram executable
+* ``manifest.txt``                  — one line per artifact:
+  ``<kind> <file> <batch> <tile>`` (parsed by rust/src/runtime/artifacts.rs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DEFAULT_TILE = 1024
+DEFAULT_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tile_sort(batch: int, tile: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, tile), jnp.int32)
+    return to_hlo_text(jax.jit(model.tile_sort_model).lower(spec))
+
+
+def lower_radix_hist(batch: int, tile: int) -> str:
+    xspec = jax.ShapeDtypeStruct((batch, tile), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return to_hlo_text(jax.jit(model.radix_histogram_model).lower(xspec, sspec))
+
+
+def emit(out_dir: str, batch: int, tile: int) -> list[tuple[str, str, int, int]]:
+    """Lower both models, write artifacts + manifest, return manifest rows."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for kind, lower in (("tile_sort", lower_tile_sort), ("radix_hist", lower_radix_hist)):
+        name = f"{kind}_b{batch}_t{tile}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        text = lower(batch, tile)
+        with open(path, "w") as f:
+            f.write(text)
+        rows.append((kind, name, batch, tile))
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        for kind, name, b, t in rows:
+            f.write(f"{kind} {name} {b} {t}\n")
+    print(f"wrote {manifest}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tile", type=int, default=DEFAULT_TILE)
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+    assert args.tile & (args.tile - 1) == 0, "--tile must be a power of two"
+    emit(args.out_dir, args.batch, args.tile)
+
+
+if __name__ == "__main__":
+    main()

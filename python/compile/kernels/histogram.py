@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: per-block byte histograms for the LSD radix sort.
+
+The paper's radix passes build thread-local 256-bin histograms of one key
+byte per block (Algorithm 4, line 5). A CPU builds them with data-dependent
+increments (``hist[byte] += 1``); on a TPU-shaped target scatters are
+hostile, so the count is re-expressed as a **one-hot reduction**: compare the
+byte lane against ``iota(256)`` and sum the boolean matrix over the block
+axis — a dense, branch-free VPU reduction.
+
+The rust coordinator performs the global-prefix-sum reduction across block
+histograms, mirroring the paper's "reduce to global histogram" step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BUCKETS = 256
+
+
+def _hist_kernel(x_ref, shift_ref, o_ref):
+    """Histogram of ((x >> shift) & 0xFF) for one (1, T) block."""
+    x = x_ref[...].reshape(-1).astype(jnp.int32)
+    shift = shift_ref[0]
+    byte = jax.lax.shift_right_logical(x, shift) & 0xFF
+    # One-hot reduction: (T, 1) == (1, 256) -> (T, 256) bools -> sum -> (256,)
+    onehot = byte[:, None] == jax.lax.iota(jnp.int32, BUCKETS)[None, :]
+    o_ref[...] = jnp.sum(onehot.astype(jnp.int32), axis=0).reshape(1, BUCKETS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_histograms(
+    x: jnp.ndarray, shift: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Per-row byte histograms: (B, T) int32, scalar shift -> (B, 256) int32."""
+    b, t = x.shape
+    shift = jnp.asarray(shift, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _hist_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, BUCKETS), jnp.int32),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, BUCKETS), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, shift)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference the
+pytest suite checks every kernel against (no Pallas, no custom code paths).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BUCKETS = 256
+
+
+def ref_sort_tiles(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference for ``bitonic.sort_tiles``: row-wise jnp.sort."""
+    return jnp.sort(x, axis=1)
+
+
+def ref_block_histograms(x: jnp.ndarray, shift) -> jnp.ndarray:
+    """Reference for ``histogram.block_histograms``: row-wise bincount of the
+    selected byte."""
+    shift = jnp.asarray(shift, jnp.int32)
+    byte = jax.lax.shift_right_logical(x.astype(jnp.int32), shift) & 0xFF
+
+    def row_hist(row):
+        return jnp.bincount(row, length=BUCKETS).astype(jnp.int32)
+
+    return jax.vmap(row_hist)(byte)

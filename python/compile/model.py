@@ -1,0 +1,45 @@
+"""Layer-2 JAX compute graphs, composed from the Layer-1 Pallas kernels.
+
+Two graphs are AOT-lowered to HLO text for the rust runtime:
+
+* ``tile_sort_model``     — (B, T) int32 -> (B, T) int32: every row sorted
+  (the Pallas bitonic network). The rust adaptive dispatcher uses this as
+  the ``A_code = 5`` tile-sort backend and merges the sorted runs itself.
+* ``radix_histogram_model`` — (B, T) int32 + scalar shift -> (B, 256) int32:
+  per-block byte histograms (the Pallas one-hot reduction kernel). The rust
+  radix path can offload histogram building through this artifact.
+
+Python never runs on the request path: these functions exist to be lowered
+once by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import bitonic, histogram
+
+
+def tile_sort_model(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Sort each (power-of-two wide) row of ``x`` ascending.
+
+    Returns a 1-tuple: the HLO interchange convention is ``return_tuple=True``
+    (see aot.py), matching the rust loader's ``to_tuple1`` unwrap.
+    """
+    return (bitonic.sort_tiles(x),)
+
+
+def radix_histogram_model(x: jnp.ndarray, shift: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Per-row 256-bin histograms of byte ``(x >> shift) & 0xFF``."""
+    return (histogram.block_histograms(x, shift),)
+
+
+def tile_sort_then_histogram(x: jnp.ndarray, shift: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused graph used by tests: sorted tiles and their byte histograms.
+
+    Exercises kernel composition inside one lowered module (XLA fuses the
+    surrounding element-wise ops; see EXPERIMENTS.md §Perf L2).
+    """
+    sorted_tiles = bitonic.sort_tiles(x)
+    hists = histogram.block_histograms(sorted_tiles, shift)
+    return (sorted_tiles, hists)

@@ -1,0 +1,36 @@
+"""L2 correctness: the composed JAX graphs (shapes, tuple convention, fusion
+of both kernels in one module)."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_tile_sort_model_tuple_and_shape():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-100, 100, (8, 64), dtype=np.int32))
+    out = model.tile_sort_model(x)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(ref.ref_sort_tiles(x)))
+
+
+def test_radix_histogram_model():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-(10**9), 10**9, (4, 128), dtype=np.int32))
+    (h,) = model.radix_histogram_model(x, jnp.asarray([8], jnp.int32))
+    assert h.shape == (4, 256)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(ref.ref_block_histograms(x, 8)))
+
+
+def test_fused_graph_consistency():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-1000, 1000, (2, 256), dtype=np.int32))
+    sorted_tiles, hists = model.tile_sort_then_histogram(x, jnp.asarray([0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(sorted_tiles), np.asarray(ref.ref_sort_tiles(x)))
+    # Sorting permutes within rows, so histograms equal those of the input.
+    np.testing.assert_array_equal(
+        np.asarray(hists), np.asarray(ref.ref_block_histograms(x, 0))
+    )

@@ -1,0 +1,116 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. GA-tuned vs default vs symbolic parameters (how much does tuning buy?)
+//!  B. Radix vs mergesort crossover across sizes (the A_code decision).
+//!  C. Tile-size sensitivity of the blocked merge (the T_tile gene).
+//!  D. Distribution robustness (uniform / zipf / nearly-sorted / few-unique).
+//!  E. Radix pass-skipping optimisation (narrow-range inputs).
+
+use evosort::bench_harness::{banner, measure, BenchConfig, Table};
+use evosort::data::{generate_i64, Distribution};
+use evosort::ga::{GaConfig, GaDriver};
+use evosort::params::{ACode, SortParams};
+use evosort::sort::{AdaptiveSorter, MergeTuning};
+use evosort::symbolic::SymbolicModel;
+use evosort::util::{default_threads, fmt_count};
+
+fn main() {
+    banner("ablation", "design-choice ablations A-E (see bench source for the list)");
+    let threads = default_threads();
+    let cfg = BenchConfig::from_env();
+    let sorter = AdaptiveSorter::new(threads);
+
+    // --- A: parameter-source ablation. -------------------------------------
+    println!("--- A: GA-tuned vs symbolic vs default parameters (n=4e6 uniform) ---");
+    let n = 4_000_000;
+    let base = generate_i64(n, Distribution::Uniform, 1, threads);
+    let ga_params = GaDriver::new(GaConfig { population: 8, generations: 4, seed: 3, ..Default::default() })
+        .run_for_size(n, 1_000_000, Distribution::Uniform, AdaptiveSorter::new(threads))
+        .best;
+    let cases = [
+        ("default", SortParams::default()),
+        ("symbolic", SymbolicModel::paper().params_for(n)),
+        ("ga-tuned", ga_params),
+    ];
+    let mut t = Table::new(&["params", "median(s)", "config"]);
+    for (name, p) in cases {
+        let m = measure(&cfg, name, || base.clone(), |mut d| sorter.sort_i64(&mut d, &p));
+        t.row(&[name.into(), format!("{:.4}", m.median()), p.to_string()]);
+    }
+    t.print();
+
+    // --- B: strategy crossover (radix vs merge vs samplesort). --------------
+    println!("--- B: radix vs merge vs samplesort across sizes (uniform i64) ---");
+    let mut t = Table::new(&["n", "radix(s)", "merge(s)", "sample(s)", "winner"]);
+    for n in [50_000usize, 200_000, 1_000_000, 4_000_000, 16_000_000] {
+        let data = generate_i64(n, Distribution::Uniform, 2, threads);
+        let radix = SortParams { algorithm: ACode::Radix, fallback_threshold: 256, ..SortParams::default() };
+        let merge = SortParams { algorithm: ACode::Merge, fallback_threshold: 256, ..SortParams::default() };
+        let sample = SortParams { algorithm: ACode::Sample, fallback_threshold: 256, ..SortParams::default() };
+        let mr = measure(&cfg, "radix", || data.clone(), |mut d| sorter.sort_i64(&mut d, &radix));
+        let mm = measure(&cfg, "merge", || data.clone(), |mut d| sorter.sort_i64(&mut d, &merge));
+        let ms = measure(&cfg, "sample", || data.clone(), |mut d| sorter.sort_i64(&mut d, &sample));
+        let winner = if mr.median() < mm.median() && mr.median() < ms.median() {
+            "radix"
+        } else if mm.median() < ms.median() {
+            "merge"
+        } else {
+            "samplesort"
+        };
+        t.row(&[
+            fmt_count(n),
+            format!("{:.4}", mr.median()),
+            format!("{:.4}", mm.median()),
+            format!("{:.4}", ms.median()),
+            winner.into(),
+        ]);
+    }
+    t.print();
+
+    // --- C: tile-size sensitivity. ------------------------------------------
+    println!("--- C: T_tile sensitivity of the blocked merge (n=4e6) ---");
+    let data = generate_i64(4_000_000, Distribution::Uniform, 4, threads);
+    let mut t = Table::new(&["tile", "median(s)"]);
+    for tile in [64usize, 256, 1024, 4096, 16384, 65536] {
+        let tuning = MergeTuning { tile, threads, ..MergeTuning::default() };
+        let m = measure(&cfg, "tile", || data.clone(), |mut d| {
+            evosort::sort::parallel_merge_sort(&mut d, &tuning)
+        });
+        t.row(&[tile.to_string(), format!("{:.4}", m.median())]);
+    }
+    t.print();
+
+    // --- D: distribution robustness. ----------------------------------------
+    println!("--- D: symbolic params across distributions (n=2e6) ---");
+    let p = SymbolicModel::paper().params_for(2_000_000);
+    let mut t = Table::new(&["distribution", "median(s)"]);
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Zipf,
+        Distribution::Gaussian,
+        Distribution::NearlySorted,
+        Distribution::FewUnique,
+        Distribution::Reverse,
+    ] {
+        let data = generate_i64(2_000_000, dist, 5, threads);
+        let m = measure(&cfg, dist.name(), || data.clone(), |mut d| sorter.sort_i64(&mut d, &p));
+        t.row(&[dist.name().into(), format!("{:.4}", m.median())]);
+    }
+    t.print();
+
+    // --- E: pass-skipping on narrow ranges. ----------------------------------
+    println!("--- E: radix pass-skipping (full-range vs byte-range values, n=4e6) ---");
+    let radix = SortParams { algorithm: ACode::Radix, fallback_threshold: 256, ..SortParams::default() };
+    let full = generate_i64(4_000_000, Distribution::Uniform, 6, threads);
+    let narrow = generate_i64(4_000_000, Distribution::UniformRange(0, 255), 6, threads);
+    let mf = measure(&cfg, "full", || full.clone(), |mut d| sorter.sort_i64(&mut d, &radix));
+    let mn = measure(&cfg, "narrow", || narrow.clone(), |mut d| sorter.sort_i64(&mut d, &radix));
+    let mut t = Table::new(&["input", "median(s)", "passes"]);
+    t.row(&["full range".into(), format!("{:.4}", mf.median()), "8 of 8".into()]);
+    t.row(&["narrow (1 byte)".into(), format!("{:.4}", mn.median()), "1 of 8 (7 skipped)".into()]);
+    t.print();
+    println!(
+        "pass-skip speedup on narrow data: {:.2}x",
+        mf.median() / mn.median().max(1e-9)
+    );
+}

@@ -1,0 +1,82 @@
+//! Regenerates **Figures 2–6**: GA convergence (best / worst / average
+//! execution time per generation) plus the final EvoSort-vs-baselines bars,
+//! for each paper size (scaled). One figure block per size.
+//!
+//! Expected shape (paper §6): a wide generation-0 spread that collapses
+//! within 2–3 generations; the best value then stays flat (elitism); final
+//! EvoSort beats both baselines.
+//!
+//! Flags via env: EVOSORT_BENCH_SIZES=1e5,1e6 overrides the size list.
+
+use evosort::bench_harness::{banner, scaled_size, Table};
+use evosort::coordinator::{pipeline, ParamSource, PipelineConfig};
+use evosort::data::Distribution;
+use evosort::ga::GaConfig;
+use evosort::sort::Baseline;
+use evosort::util::{default_threads, fmt_count, fmt_secs};
+
+fn main() {
+    banner(
+        "fig_ga_convergence",
+        "Figures 2-6: GA best/worst/avg per generation + final performance bars",
+    );
+    let threads = default_threads();
+    // Paper figures cover 1e7, 1e8, 5e8, 1e9, 1e10 — scaled here.
+    let sizes: Vec<usize> = match std::env::var("EVOSORT_BENCH_SIZES") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| evosort::cli::parse_count(t.trim()).expect("EVOSORT_BENCH_SIZES"))
+            .collect(),
+        Err(_) => [
+            10_000_000usize,
+            100_000_000,
+            500_000_000,
+            1_000_000_000,
+            10_000_000_000,
+        ]
+        .iter()
+        .map(|&n| scaled_size(n))
+        .collect(),
+    };
+    let mut dedup = sizes.clone();
+    dedup.dedup();
+
+    for n in dedup {
+        println!("--- figure: GA convergence at n={} ---", fmt_count(n));
+        let config = PipelineConfig {
+            sizes: vec![n],
+            dist: Distribution::Uniform,
+            seed: 42,
+            threads,
+            params: ParamSource::Ga(GaConfig {
+                population: 10,
+                generations: 8,
+                seed: 42 ^ n as u64,
+                ..GaConfig::default()
+            }),
+            sample_cap: 2_000_000,
+            baselines: vec![Baseline::Quicksort, Baseline::Mergesort],
+        };
+        let rows = pipeline::run(&config);
+        let row = &rows[0];
+        let ga = row.ga.as_ref().expect("ga history");
+
+        let mut t = Table::new(&["gen", "best(s)", "avg(s)", "worst(s)"]);
+        for h in &ga.history {
+            t.row(&[
+                h.generation.to_string(),
+                format!("{:.4}", h.best),
+                format!("{:.4}", h.average),
+                format!("{:.4}", h.worst),
+            ]);
+        }
+        t.print();
+        println!("best individual: {}", row.params);
+        println!("final bars (right panel):");
+        println!("  EvoSort          {}", fmt_secs(row.evosort_secs));
+        for (b, secs, speedup) in &row.baselines {
+            println!("  {:<16} {} ({speedup:.1}x)", b.name(), fmt_secs(*secs));
+        }
+        println!("validated: {}\n", row.validated);
+    }
+}

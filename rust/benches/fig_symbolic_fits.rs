@@ -1,0 +1,102 @@
+//! Regenerates **Figures 7–11**: GA-tuned thresholds versus dataset size n,
+//! with degree-2 symbolic fits in x = log10 n — plus the §7.3 residual
+//! analysis and the §7.4 analytical properties (curvature / vertex) table.
+//!
+//! Runs a GA sweep across sizes, fits quadratics to each threshold, prints
+//! (n, GA value, fitted value, residual) series per parameter, and compares
+//! vertex locations with the paper's.
+
+use evosort::bench_harness::{banner, Table};
+use evosort::data::Distribution;
+use evosort::ga::{GaConfig, GaDriver};
+use evosort::params::SortParams;
+use evosort::sort::AdaptiveSorter;
+use evosort::symbolic::SymbolicModel;
+use evosort::util::{default_threads, fmt_count};
+
+fn main() {
+    banner(
+        "fig_symbolic_fits",
+        "Figures 7-11: GA-tuned thresholds vs n, quadratic symbolic fits, residuals",
+    );
+    let threads = default_threads();
+    let sizes: Vec<usize> = match std::env::var("EVOSORT_BENCH_SIZES") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| evosort::cli::parse_count(t.trim()).expect("EVOSORT_BENCH_SIZES"))
+            .collect(),
+        Err(_) => vec![100_000, 300_000, 1_000_000, 3_000_000, 10_000_000, 30_000_000],
+    };
+
+    // --- GA sweep (training data). -----------------------------------------
+    let mut sweep: Vec<(usize, SortParams)> = Vec::new();
+    for &n in &sizes {
+        let cfg = GaConfig { population: 8, generations: 5, seed: 4242 ^ n as u64, ..Default::default() };
+        let r = GaDriver::new(cfg).run_for_size(
+            n,
+            2_000_000,
+            Distribution::Uniform,
+            AdaptiveSorter::new(threads),
+        );
+        println!("GA @ n={:<8} -> {}", fmt_count(n), r.best);
+        sweep.push((n, r.best));
+    }
+
+    let model = SymbolicModel::fit(&sweep).expect("fit quadratics");
+
+    // --- Per-parameter series (the scatter + line of each figure). ---------
+    for (fig, name, q, get) in [
+        (11, "insertion threshold", model.insertion, 0usize),
+        (10, "parallel-merge threshold", model.parallel_merge, 1),
+        (9, "fallback (numpy) threshold", model.fallback, 3),
+        (8, "tile size", model.tile, 4),
+    ] {
+        println!("--- Figure {fig}: {name} ---");
+        let mut t = Table::new(&["n", "GA value", "fit value", "residual"]);
+        for (n, p) in &sweep {
+            let ga_v = p.to_genes()[get] as f64;
+            let fit_v = q.eval_n(*n);
+            t.row(&[
+                fmt_count(*n),
+                format!("{ga_v:.0}"),
+                format!("{fit_v:.0}"),
+                format!("{:+.0}", ga_v - fit_v),
+            ]);
+        }
+        t.print();
+        let pts: Vec<(usize, f64)> =
+            sweep.iter().map(|(n, p)| (*n, p.to_genes()[get] as f64)).collect();
+        println!(
+            "fit: a={:+.2} (={}), vertex x*={:.2} (n*≈{:.1e}), R²={:.3}\n",
+            q.a,
+            if q.is_convex() { "convex/min" } else { "concave/max" },
+            q.vertex_x(),
+            q.vertex_n(),
+            q.r_squared(&pts)
+        );
+    }
+
+    // --- §7.4 comparison with the paper's analytical properties. ----------
+    println!("--- §7.4 vertex comparison (paper model vs our fit) ---");
+    let paper = SymbolicModel::paper();
+    let mut t = Table::new(&["threshold", "paper x*", "our x*", "paper shape", "our shape"]);
+    for (name, p, f) in [
+        ("T_insertion", paper.insertion, model.insertion),
+        ("T_par_merge", paper.parallel_merge, model.parallel_merge),
+        ("T_fallback", paper.fallback, model.fallback),
+        ("T_tile", paper.tile, model.tile),
+    ] {
+        let shape = |q: &evosort::symbolic::Quadratic| {
+            if q.is_convex() { "convex" } else { "concave" }
+        };
+        t.row(&[
+            name.into(),
+            format!("{:.2}", p.vertex_x()),
+            format!("{:.2}", f.vertex_x()),
+            shape(&p).into(),
+            shape(&f).into(),
+        ]);
+    }
+    t.print();
+    println!("(note: our sweep covers smaller n than the paper's 1e7-1e10, so vertices shift)");
+}

@@ -1,0 +1,112 @@
+//! Micro-benchmarks of the hot-path kernels — the §Perf profiling harness:
+//!
+//!  * merge kernels (plain / galloping / tiled) on interleaved + disjoint runs
+//!  * radix phases (histogram sweep vs scatter) and end-to-end throughput
+//!  * insertion-sort cutoff behaviour
+//!  * threadpool / scoped-spawn overhead (exec substrate)
+//!  * XLA tile backend throughput (when artifacts are present)
+//!
+//! Bandwidth roofline context: an 8-pass i64 radix moves ≥ passes × 16 B per
+//! element (read+write); the printed GB/s column shows how close we get.
+
+use evosort::bench_harness::{banner, measure, BenchConfig, Table};
+use evosort::data::{generate_i64, Distribution};
+use evosort::sort::merge::{merge_gallop_into, merge_into, merge_tiled_into};
+use evosort::sort::radix_sort;
+use evosort::util::{default_threads, fmt_count};
+
+fn main() {
+    banner("micro_kernels", "hot-path kernel microbenches (the §Perf harness)");
+    let threads = default_threads();
+    let cfg = BenchConfig::from_env();
+
+    // --- Merge kernels. ------------------------------------------------------
+    println!("--- merge kernels (1e6 + 1e6 elements) ---");
+    let mut a = generate_i64(1_000_000, Distribution::Uniform, 1, threads);
+    let mut b = generate_i64(1_000_000, Distribution::Uniform, 2, threads);
+    a.sort_unstable();
+    b.sort_unstable();
+    // Disjoint runs: galloping's best case.
+    let mut c: Vec<i64> = a.iter().map(|x| x - 3_000_000_000).collect();
+    c.sort_unstable();
+    let n_out = a.len() + b.len();
+    let mut t = Table::new(&["kernel", "interleaved(s)", "disjoint(s)", "Melem/s (interleaved)"]);
+    type MergeFn = fn(&[i64], &[i64], &mut [i64]);
+    let kernels: [(&str, MergeFn); 3] = [
+        ("merge_into", merge_into::<i64>),
+        ("merge_gallop", merge_gallop_into::<i64>),
+        ("merge_tiled(4096)", |x, y, d| merge_tiled_into(x, y, d, 4096)),
+    ];
+    for (name, f) in kernels {
+        let mi = measure(&cfg, name, || vec![0i64; n_out], |mut d| f(&a, &b, &mut d));
+        let md = measure(&cfg, name, || vec![0i64; n_out], |mut d| f(&c, &b, &mut d));
+        t.row(&[
+            name.into(),
+            format!("{:.4}", mi.median()),
+            format!("{:.4}", md.median()),
+            format!("{:.1}", n_out as f64 / mi.median() / 1e6),
+        ]);
+    }
+    t.print();
+
+    // --- Radix end-to-end throughput + roofline. ------------------------------
+    println!("--- LSD radix sort throughput (uniform i64) ---");
+    let mut t = Table::new(&["n", "median(s)", "Melem/s", "GB/s moved", "roofline note"]);
+    for n in [1_000_000usize, 4_000_000, 16_000_000] {
+        let data = generate_i64(n, Distribution::Uniform, 3, threads);
+        let m = measure(&cfg, "radix", || data.clone(), |mut d| radix_sort(&mut d, threads));
+        // 8 passes × (read + write) × 8 B + histogram read sweep.
+        let bytes = n as f64 * 8.0 * (8.0 * 2.0 + 1.0);
+        t.row(&[
+            fmt_count(n),
+            format!("{:.4}", m.median()),
+            format!("{:.1}", n as f64 / m.median() / 1e6),
+            format!("{:.2}", bytes / m.median() / 1e9),
+            "≥136 B/elem moved".into(),
+        ]);
+    }
+    t.print();
+
+    // --- Exec substrate overhead. ---------------------------------------------
+    println!("--- exec substrate: scoped parallel_for dispatch overhead ---");
+    let mut t = Table::new(&["threads", "spawn+join median (us)"]);
+    for nt in [1usize, 2, 4, 8] {
+        let m = measure(&cfg, "spawn", || vec![0u8; nt * 16], |mut d| {
+            evosort::exec::parallel_for_chunks(&mut d, nt, |_, c| {
+                for x in c.iter_mut() {
+                    *x = 1;
+                }
+            })
+        });
+        t.row(&[nt.to_string(), format!("{:.1}", m.median() * 1e6)]);
+    }
+    t.print();
+
+    // --- XLA tile backend (optional). -------------------------------------------
+    println!("--- XLA tile-sort backend (PJRT, Pallas bitonic artifact) ---");
+    match evosort::runtime::XlaTileSorter::from_default_artifacts() {
+        Ok(backend) => {
+            use evosort::sort::TileSorter;
+            let tile = backend.tile_size();
+            let batch = backend.batch();
+            let n = tile * batch;
+            let data: Vec<i32> = generate_i64(n, Distribution::Uniform, 4, threads)
+                .iter()
+                .map(|&x| x as i32)
+                .collect();
+            let m = measure(&cfg, "xla", || data.clone(), |mut d| {
+                backend.sort_tiles_i32(&mut d).unwrap()
+            });
+            println!(
+                "one executable call ({} tiles x {}): {:.4}s  ({:.2} Melem/s)",
+                batch,
+                tile,
+                m.median(),
+                n as f64 / m.median() / 1e6
+            );
+            println!("(interpret-mode Pallas on CPU: expect low absolute throughput; the");
+            println!(" artifact demonstrates composition, real-TPU estimates in DESIGN.md §Perf)");
+        }
+        Err(e) => println!("skipped (no artifacts: {e})"),
+    }
+}

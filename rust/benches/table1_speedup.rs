@@ -1,0 +1,17 @@
+//! Regenerates **Table 1** of the paper: GA-tuned EvoSort vs the sequential
+//! quicksort/mergesort baselines across the paper's dataset sizes (scaled to
+//! this testbed by `EVOSORT_BENCH_SCALE_DIV`, default 100).
+//!
+//! Expected *shape* (paper): EvoSort wins every row; the speedup factor grows
+//! with n; the GA selects LSD radix sort (A_code = 4) for all large sizes.
+
+use evosort::bench_harness::{banner, tables};
+use evosort::util::default_threads;
+
+fn main() {
+    banner(
+        "table1_speedup",
+        "Table 1: EvoSort (GA-tuned) vs NumPy-analog baselines, sizes scaled from the paper",
+    );
+    tables::print_table1(default_threads());
+}

@@ -1,0 +1,17 @@
+//! Regenerates **Table 2** (and the data of **Figure 12**): EvoSort with
+//! *symbolic* parameters (§7.5 — zero tuning overhead) vs the sequential
+//! quicksort baseline, at the paper's Table-2 sizes scaled to this testbed.
+//!
+//! Expected shape: speedups comparable to the GA-tuned Table 1 rows without
+//! any GA run, and growing with n.
+
+use evosort::bench_harness::{banner, tables};
+use evosort::util::default_threads;
+
+fn main() {
+    banner(
+        "table2_symbolic",
+        "Table 2 / Figure 12: symbolic-parameter EvoSort vs baseline (zero tuning overhead)",
+    );
+    tables::print_table2(default_threads());
+}

@@ -1,0 +1,242 @@
+//! Benchmark harness (criterion is unavailable offline): warmup + repeated
+//! timed runs with median/mean/stddev reporting, plus the table printer the
+//! paper-reproduction benches share.
+//!
+//! Every `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module; each regenerates one of the paper's tables/figures and
+//! prints the paper's reference values alongside the measured ones.
+
+pub mod tables;
+
+use crate::util::stats::Summary;
+use crate::util::{fmt_secs, timer};
+
+/// Measurement policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub repeats: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 1, repeats: 3 }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `EVOSORT_BENCH_REPEATS` / `EVOSORT_BENCH_WARMUP` overrides.
+    pub fn from_env() -> Self {
+        let mut c = BenchConfig::default();
+        if let Ok(v) = std::env::var("EVOSORT_BENCH_REPEATS") {
+            if let Ok(n) = v.parse() {
+                c.repeats = n;
+            }
+        }
+        if let Ok(v) = std::env::var("EVOSORT_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                c.warmup = n;
+            }
+        }
+        c
+    }
+}
+
+/// One benchmarked quantity.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// Time `op` (with per-run `setup`) under the config; reports the median.
+pub fn measure<S, T>(
+    config: &BenchConfig,
+    label: &str,
+    mut setup: impl FnMut() -> S,
+    mut op: impl FnMut(S) -> T,
+) -> Measurement {
+    for _ in 0..config.warmup {
+        let s = setup();
+        std::hint::black_box(op(s));
+    }
+    let mut samples = Vec::with_capacity(config.repeats);
+    for _ in 0..config.repeats.max(1) {
+        let s = setup();
+        let (out, secs) = timer::time(|| op(s));
+        std::hint::black_box(out);
+        samples.push(secs);
+    }
+    let summary = Summary::of(&samples).unwrap();
+    crate::log_debug!(
+        "bench {label}: median={} mean={} stddev={}",
+        fmt_secs(summary.median),
+        fmt_secs(summary.mean),
+        fmt_secs(summary.stddev)
+    );
+    Measurement { label: label.to_string(), summary }
+}
+
+/// Column-aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Paper reference data for Table 1: (n, evosort_secs, numpy_lo, numpy_hi).
+pub const PAPER_TABLE1: &[(usize, f64, f64, f64)] = &[
+    (10_000_000, 0.2416, 0.8157, 0.9733),
+    (100_000_000, 0.3781, 11.1105, 13.8122),
+    (500_000_000, 0.8863, 51.2772, 61.6276),
+    (1_000_000_000, 1.3806, 104.9122, 127.4918),
+    (5_000_000_000, 5.9955, 651.0830, 852.5336),
+    (10_000_000_000, 12.7142, 1164.9239, 1164.9239),
+];
+
+/// Paper reference data for Table 2: (n, evosort_secs, numpy_secs, speedup).
+pub const PAPER_TABLE2: &[(usize, f64, f64, f64)] = &[
+    (100_000_000, 0.3239, 11.2331, 34.7),
+    (500_000_000, 0.5862, 62.4810, 106.6),
+    (1_000_000_000, 0.9960, 112.2272, 112.6),
+    (5_000_000_000, 3.7241, 615.2936, 165.3),
+];
+
+/// Scale a paper-sized n down for this testbed: divide by
+/// `EVOSORT_BENCH_SCALE_DIV` (default 100), floored at 1e5.
+pub fn scaled_size(paper_n: usize) -> usize {
+    let denom: usize = std::env::var("EVOSORT_BENCH_SCALE_DIV")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    (paper_n / denom.max(1)).max(100_000)
+}
+
+/// Format a paper-vs-measured pair.
+pub fn vs(paper: f64, measured: f64) -> String {
+    format!("{} (paper {})", fmt_secs(measured), fmt_secs(paper))
+}
+
+/// Header line shared by all bench binaries.
+pub fn banner(name: &str, detail: &str) {
+    println!("\n=== EvoSort bench: {name} ===");
+    println!("{detail}");
+    println!(
+        "threads={} scale_div={} repeats={}\n",
+        crate::util::default_threads(),
+        std::env::var("EVOSORT_BENCH_SCALE_DIV").unwrap_or_else(|_| "100".into()),
+        BenchConfig::from_env().repeats
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_setup_each_time() {
+        let mut setups = 0;
+        let config = BenchConfig { warmup: 1, repeats: 3 };
+        let m = measure(
+            &config,
+            "test",
+            || {
+                setups += 1;
+                vec![3u64, 1, 2]
+            },
+            |mut v| {
+                v.sort_unstable();
+                v
+            },
+        );
+        assert_eq!(setups, 4); // 1 warmup + 3 timed
+        assert_eq!(m.summary.n, 3);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "time"]);
+        t.row(&["1e7".into(), "0.24s".into()]);
+        t.row(&["1e10".into(), "12.71s".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[3].contains("12.71s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn scaled_size_floor() {
+        assert!(scaled_size(10_000_000) >= 100_000);
+        if std::env::var("EVOSORT_BENCH_SCALE_DIV").is_err() {
+            assert_eq!(scaled_size(1_000_000_000), 10_000_000);
+        }
+    }
+
+    #[test]
+    fn paper_tables_consistent() {
+        for &(_, evo, lo, hi) in PAPER_TABLE1 {
+            assert!(lo <= hi);
+            assert!(evo < lo, "EvoSort beats both baselines in every row");
+        }
+        for &(_, evo, np, speedup) in PAPER_TABLE2 {
+            let s = np / evo;
+            assert!((s - speedup).abs() / speedup < 0.01, "{s} vs {speedup}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared table-regeneration logic: Table 1 (GA-tuned EvoSort vs baselines)
+//! and Table 2 (symbolic-parameter EvoSort vs baseline), at testbed scale.
+//! Used by both the `evosort repro` CLI command and the bench binaries.
+
+use crate::coordinator::{ParamSource, PipelineConfig};
+use crate::data::Distribution;
+use crate::ga::GaConfig;
+use crate::sort::Baseline;
+use crate::symbolic::SymbolicModel;
+use crate::util::{fmt_count, fmt_secs};
+
+use super::{scaled_size, Table, PAPER_TABLE1, PAPER_TABLE2};
+
+/// Regenerate Table 1: per size, GA-tuned EvoSort vs sequential quicksort /
+/// mergesort baselines. Sizes are the paper's, scaled by
+/// `EVOSORT_BENCH_SCALE_DIV`.
+pub fn print_table1(threads: usize) {
+    let sizes: Vec<usize> = PAPER_TABLE1.iter().map(|&(n, ..)| scaled_size(n)).collect();
+    let mut sizes_dedup = sizes.clone();
+    sizes_dedup.dedup();
+    let config = PipelineConfig {
+        sizes: sizes_dedup.clone(),
+        dist: Distribution::Uniform,
+        seed: 42,
+        threads,
+        params: ParamSource::Ga(GaConfig {
+            population: 10,
+            generations: 5,
+            seed: 42,
+            ..GaConfig::default()
+        }),
+        sample_cap: 2_000_000,
+        baselines: vec![Baseline::Quicksort, Baseline::Mergesort],
+    };
+    let rows = crate::coordinator::pipeline::run(&config);
+
+    let mut table = Table::new(&[
+        "paper n",
+        "our n",
+        "EvoSort(s)",
+        "baseline(s)",
+        "speedup",
+        "paper EvoSort(s)",
+        "paper baseline(s)",
+        "paper speedup",
+    ]);
+    for ((paper, our_n), row) in PAPER_TABLE1.iter().zip(&sizes).zip(rows_for(&rows, &sizes)) {
+        let (pn, pe, plo, phi) = *paper;
+        let base_lo = row
+            .baselines
+            .iter()
+            .map(|(_, t, _)| *t)
+            .fold(f64::INFINITY, f64::min);
+        table.row(&[
+            fmt_count(pn),
+            fmt_count(*our_n),
+            fmt_secs(row.evosort_secs),
+            fmt_secs(base_lo),
+            format!("{:.1}x", row.best_speedup()),
+            fmt_secs(pe),
+            format!("{}-{}", fmt_secs(plo), fmt_secs(phi)),
+            format!("{:.0}x", plo / pe),
+        ]);
+    }
+    table.print();
+    println!("(shape check: speedup should grow with n; radix should be selected for large n)");
+}
+
+/// Regenerate Table 2: symbolic-parameter EvoSort (zero tuning overhead) vs
+/// the sequential quicksort baseline, at the paper's Table-2 sizes scaled.
+pub fn print_table2(threads: usize) {
+    let sizes: Vec<usize> = PAPER_TABLE2.iter().map(|&(n, ..)| scaled_size(n)).collect();
+    let mut sizes_dedup = sizes.clone();
+    sizes_dedup.dedup();
+    let config = PipelineConfig {
+        sizes: sizes_dedup,
+        dist: Distribution::Uniform,
+        seed: 43,
+        threads,
+        params: ParamSource::Symbolic(SymbolicModel::paper()),
+        sample_cap: 0,
+        baselines: vec![Baseline::Quicksort],
+    };
+    let rows = crate::coordinator::pipeline::run(&config);
+
+    let mut table = Table::new(&[
+        "paper n",
+        "our n",
+        "EvoSort(s)",
+        "baseline(s)",
+        "speedup",
+        "paper EvoSort(s)",
+        "paper NumPy(s)",
+        "paper speedup",
+    ]);
+    for ((paper, our_n), row) in PAPER_TABLE2.iter().zip(&sizes).zip(rows_for(&rows, &sizes)) {
+        let (pn, pe, pnp, ps) = *paper;
+        let (_, bt, _) = row.baselines[0];
+        table.row(&[
+            fmt_count(pn),
+            fmt_count(*our_n),
+            fmt_secs(row.evosort_secs),
+            fmt_secs(bt),
+            format!("{:.1}x", row.best_speedup()),
+            fmt_secs(pe),
+            fmt_secs(pnp),
+            format!("{ps:.1}x"),
+        ]);
+    }
+    table.print();
+    println!("(symbolic params: zero tuning overhead — §7.5)");
+}
+
+/// Re-expand deduplicated pipeline rows back onto the possibly-repeating
+/// scaled-size list (small scale divisors can collapse adjacent paper sizes).
+fn rows_for<'a>(
+    rows: &'a [crate::coordinator::PipelineRow],
+    sizes: &[usize],
+) -> Vec<&'a crate::coordinator::PipelineRow> {
+    sizes
+        .iter()
+        .map(|n| {
+            rows.iter()
+                .find(|r| r.n == *n)
+                .expect("pipeline produced a row for every size")
+        })
+        .collect()
+}

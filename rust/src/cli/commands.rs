@@ -1,0 +1,345 @@
+//! CLI command implementations. Each maps one subcommand onto the library.
+
+use anyhow::{bail, Result};
+
+use crate::bench_harness::Table;
+use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortJob, SortService};
+use crate::data::{self, Distribution};
+use crate::ga::{GaConfig, GaDriver};
+use crate::params::{ACode, SortParams};
+use crate::runtime::{Manifest, XlaTileSorter};
+use crate::sort::{AdaptiveSorter, Baseline};
+use crate::symbolic::SymbolicModel;
+use crate::util::{default_threads, fmt_count, fmt_secs, timer};
+
+use super::Args;
+
+fn dist_of(args: &Args) -> Result<Distribution> {
+    let name = args.str_or("dist", "uniform");
+    Distribution::parse(name).ok_or_else(|| anyhow::anyhow!("unknown distribution {name:?}"))
+}
+
+fn threads_of(args: &Args) -> Result<usize> {
+    args.usize_or("threads", default_threads())
+}
+
+/// Try to attach the XLA tile backend; warn-and-continue when artifacts are
+/// absent (the dispatcher falls back to merge for A_code=5).
+fn sorter_with_optional_xla(threads: usize, want_xla: bool) -> AdaptiveSorter {
+    let sorter = AdaptiveSorter::new(threads);
+    if !want_xla {
+        return sorter;
+    }
+    match XlaTileSorter::from_default_artifacts() {
+        Ok(backend) => sorter.with_xla(std::sync::Arc::new(backend)),
+        Err(e) => {
+            crate::log_warn!("XLA backend unavailable ({e}); falling back to merge");
+            sorter
+        }
+    }
+}
+
+/// `evosort sort` — generate, sort, validate, report.
+pub fn cmd_sort(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 10_000_000)?;
+    let seed = args.u64_or("seed", 42)?;
+    let threads = threads_of(args)?;
+    let dist = dist_of(args)?;
+    let algo = args.str_or("algo", "auto");
+
+    println!("generating {} {} i64 elements (seed {seed})", fmt_count(n), dist.name());
+    let mut array = data::generate_i64(n, dist, seed, threads);
+    let fp = data::validate::fingerprint_i64(&array, threads);
+
+    // Baseline algos run directly; EvoSort paths resolve parameters.
+    let secs = match algo {
+        "baseline-quicksort" | "baseline-mergesort" | "std" => {
+            let b = match algo {
+                "baseline-quicksort" => Baseline::Quicksort,
+                "baseline-mergesort" => Baseline::Mergesort,
+                _ => Baseline::Std,
+            };
+            let (_, secs) = timer::time(|| b.sort_i64(&mut array));
+            println!("{}: {}", b.name(), fmt_secs(secs));
+            secs
+        }
+        _ => {
+            let params = resolve_params(args, n, dist, threads)?;
+            let sorter = sorter_with_optional_xla(threads, params.algorithm == ACode::XlaTile);
+            println!("params: {params}");
+            let (_, secs) = timer::time(|| sorter.sort_i64(&mut array, &params));
+            println!("evosort: {} ({:.1} Melem/s)", fmt_secs(secs), n as f64 / secs / 1e6);
+            secs
+        }
+    };
+
+    let verdict = data::validate::validate_i64(fp, &array, threads);
+    println!("validation: {verdict:?}  throughput {:.2} Melem/s", n as f64 / secs / 1e6);
+    if verdict != data::validate::Verdict::Valid {
+        bail!("output failed validation");
+    }
+    Ok(())
+}
+
+fn resolve_params(args: &Args, n: usize, dist: Distribution, threads: usize) -> Result<SortParams> {
+    if args.has("tune") {
+        let cfg = ga_config_from(args)?;
+        let driver = GaDriver::new(cfg);
+        let sample_cap = args.usize_or("sample-cap", 4_000_000)?;
+        let r = driver.run_for_size(n, sample_cap, dist, AdaptiveSorter::new(threads));
+        println!("GA tuned ({} evals): {}", r.evaluations, r.best);
+        return Ok(r.best);
+    }
+    if args.has("symbolic") {
+        return Ok(SymbolicModel::paper().params_for(n));
+    }
+    Ok(match args.str_or("algo", "auto") {
+        "auto" => SymbolicModel::paper().params_for(n),
+        "merge" => SortParams { algorithm: ACode::Merge, ..SymbolicModel::paper().params_for(n) },
+        "radix" => SortParams { algorithm: ACode::Radix, ..SymbolicModel::paper().params_for(n) },
+        "xla" => SortParams { algorithm: ACode::XlaTile, ..SymbolicModel::paper().params_for(n) },
+        other => bail!("unknown --algo {other:?}"),
+    })
+}
+
+fn ga_config_from(args: &Args) -> Result<GaConfig> {
+    Ok(GaConfig {
+        population: args.usize_or("population", 30)?,
+        generations: args.usize_or("generations", 10)?,
+        seed: args.u64_or("seed", 42)?,
+        crossover_prob: args.f64_or("crossover", 0.7)?,
+        mutation_prob: args.f64_or("mutation", 0.3)?,
+        ..GaConfig::default()
+    })
+}
+
+/// `evosort tune` — GA convergence table (the Figures 2–6 series).
+pub fn cmd_tune(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 10_000_000)?;
+    let threads = threads_of(args)?;
+    let dist = dist_of(args)?;
+    let sample_cap = args.usize_or("sample-cap", 4_000_000)?;
+    let cfg = ga_config_from(args)?;
+    println!(
+        "GA tuning for n={} (sample {}), pop={}, {} generations",
+        fmt_count(n),
+        fmt_count(n.min(sample_cap)),
+        cfg.population,
+        cfg.generations
+    );
+    let driver = GaDriver::new(cfg);
+    let result = driver.run_for_size(n, sample_cap, dist, AdaptiveSorter::new(threads));
+
+    let mut table = Table::new(&["gen", "best(s)", "avg(s)", "worst(s)", "best genome"]);
+    for h in &result.history {
+        table.row(&[
+            h.generation.to_string(),
+            format!("{:.4}", h.best),
+            format!("{:.4}", h.average),
+            format!("{:.4}", h.worst),
+            format!("{:?}", h.best_genome),
+        ]);
+    }
+    table.print();
+    println!("best individual: {}  ({} timed evals)", result.best, result.evaluations);
+    Ok(())
+}
+
+/// `evosort pipeline` — Algorithm 1 across sizes, Table-1-shaped output.
+/// With `--config file.toml`, all settings come from the config system.
+pub fn cmd_pipeline(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("config") {
+        let rc = crate::config::run::RunConfig::load(std::path::Path::new(path))?;
+        crate::log_info!("loaded config from {path} ({} sizes)", rc.pipeline.sizes.len());
+        let rows = crate::coordinator::pipeline::run(&rc.pipeline);
+        print_pipeline_rows(&rows);
+        return Ok(());
+    }
+    let sizes = args.sizes_or("sizes", &[1_000_000, 10_000_000])?;
+    let threads = threads_of(args)?;
+    let dist = dist_of(args)?;
+    let params = if args.has("symbolic") {
+        ParamSource::Symbolic(SymbolicModel::paper())
+    } else if args.has("fixed") {
+        ParamSource::Fixed(SortParams::paper_1e7())
+    } else {
+        ParamSource::Ga(GaConfig {
+            population: args.usize_or("population", 12)?,
+            generations: args.usize_or("generations", 6)?,
+            seed: args.u64_or("seed", 42)?,
+            ..GaConfig::default()
+        })
+    };
+    let config = PipelineConfig {
+        sizes,
+        dist,
+        seed: args.u64_or("seed", 42)?,
+        threads,
+        params,
+        sample_cap: args.usize_or("sample-cap", 4_000_000)?,
+        baselines: vec![Baseline::Quicksort, Baseline::Mergesort, Baseline::Std],
+    };
+    let rows = crate::coordinator::pipeline::run(&config);
+    print_pipeline_rows(&rows);
+    Ok(())
+}
+
+fn print_pipeline_rows(rows: &[crate::coordinator::PipelineRow]) {
+    let mut table = Table::new(&["n", "evosort", "quicksort", "mergesort", "std", "speedup", "valid"]);
+    for r in rows {
+        let find = |b: Baseline| {
+            r.baselines
+                .iter()
+                .find(|(bb, _, _)| *bb == b)
+                .map(|(_, t, _)| fmt_secs(*t))
+                .unwrap_or_else(|| "-".into())
+        };
+        table.row(&[
+            fmt_count(r.n),
+            fmt_secs(r.evosort_secs),
+            find(Baseline::Quicksort),
+            find(Baseline::Mergesort),
+            find(Baseline::Std),
+            format!("{:.1}x", r.best_speedup()),
+            r.validated.to_string(),
+        ]);
+    }
+    table.print();
+}
+
+/// `evosort symbolic` — §7: print closed-form params, optionally fit from a
+/// fresh GA sweep (Figures 7–11 data).
+pub fn cmd_symbolic(args: &Args) -> Result<()> {
+    let model = if let Some(_sweep) = args.get("sweep") {
+        let sizes = args.sizes_or("sweep", &[])?;
+        let threads = threads_of(args)?;
+        let dist = dist_of(args)?;
+        println!("running GA sweep over {} sizes to fit quadratics...", sizes.len());
+        let mut points = Vec::new();
+        for &n in &sizes {
+            let cfg = GaConfig {
+                population: args.usize_or("population", 10)?,
+                generations: args.usize_or("generations", 5)?,
+                seed: args.u64_or("seed", 42)? ^ n as u64,
+                ..GaConfig::default()
+            };
+            let r = GaDriver::new(cfg).run_for_size(
+                n,
+                args.usize_or("sample-cap", 2_000_000)?,
+                dist,
+                AdaptiveSorter::new(threads),
+            );
+            println!("  n={}: {}", fmt_count(n), r.best);
+            points.push((n, r.best));
+        }
+        SymbolicModel::fit(&points)
+            .ok_or_else(|| anyhow::anyhow!("sweep too small to fit (need >= 3 sizes)"))?
+    } else {
+        SymbolicModel::paper()
+    };
+
+    println!("\nquadratic models T(x) = a·x² + b·x + c, x = log10 n:");
+    let mut table = Table::new(&["threshold", "a", "b", "c", "vertex x*", "n*", "shape"]);
+    for (name, q) in [
+        ("T_insertion", model.insertion),
+        ("T_par_merge", model.parallel_merge),
+        ("T_fallback", model.fallback),
+        ("T_tile", model.tile),
+    ] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", q.a),
+            format!("{:.2}", q.b),
+            format!("{:.2}", q.c),
+            format!("{:.2}", q.vertex_x()),
+            format!("{:.2e}", q.vertex_n()),
+            if q.is_convex() { "convex (min)".into() } else { "concave (max)".into() },
+        ]);
+    }
+    table.print();
+
+    let n = args.usize_or("n", 100_000_000)?;
+    println!("params_for({}) = {}", fmt_count(n), model.params_for(n));
+    Ok(())
+}
+
+/// `evosort repro` — regenerate a paper table at testbed scale.
+pub fn cmd_repro(args: &Args) -> Result<()> {
+    let table_no = args.usize_or("table", 1)?;
+    if let Some(div) = args.get("scale-div") {
+        std::env::set_var("EVOSORT_BENCH_SCALE_DIV", div);
+    }
+    match table_no {
+        1 => crate::bench_harness::tables::print_table1(threads_of(args)?),
+        2 => crate::bench_harness::tables::print_table2(threads_of(args)?),
+        other => bail!("unknown table {other} (1 or 2)"),
+    }
+    Ok(())
+}
+
+/// `evosort serve` — run the sort service demo.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.usize_or("jobs", 16)?;
+    let n = args.usize_or("n", 1_000_000)?;
+    let workers = args.usize_or("workers", 2)?;
+    let threads = threads_of(args)?;
+    let svc = SortService::new(ServiceConfig {
+        workers,
+        sort_threads: (threads / workers.max(1)).max(1),
+        queue_capacity: 64,
+    });
+    println!("service: {workers} workers, {jobs} jobs of {} elements", fmt_count(n));
+    let dists = ["uniform", "zipf", "gaussian", "nearly-sorted"];
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let dist_name = dists[i % dists.len()];
+            let dist = Distribution::parse(dist_name).unwrap();
+            let data = data::generate_i64(n, dist, i as u64, threads);
+            let mut job = SortJob::new(data);
+            job.dist = dist_name.to_string();
+            svc.submit(job)
+        })
+        .collect();
+    for h in handles {
+        let out = h.wait();
+        println!(
+            "job {:>3}: {} in {}  valid={}  params={}",
+            out.id,
+            fmt_count(out.data.len()),
+            fmt_secs(out.secs),
+            out.valid,
+            out.params
+        );
+        anyhow::ensure!(out.valid, "job {} failed validation", out.id);
+    }
+    println!("\nmetrics:\n{}", svc.metrics().report());
+    Ok(())
+}
+
+/// `evosort info` — environment report.
+pub fn cmd_info(_args: &Args) -> Result<()> {
+    println!("evosort {} — paper reproduction build", env!("CARGO_PKG_VERSION"));
+    println!("threads available: {}", default_threads());
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts dir: {} ({} entries)", m.dir.display(), m.entries.len());
+            for e in &m.entries {
+                println!("  {} batch={} tile={} ({})", e.kind, e.batch, e.tile, e.path.display());
+            }
+            match XlaTileSorter::new(&m) {
+                Ok(b) => println!("PJRT backend: OK (tile={} batch={})", b.tile_size_pub(), b.batch()),
+                Err(e) => println!("PJRT backend: FAILED ({e})"),
+            }
+        }
+        Err(e) => println!("artifacts: not found ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+impl XlaTileSorter {
+    fn tile_size_pub(&self) -> usize {
+        use crate::sort::TileSorter;
+        self.tile_size()
+    }
+}

@@ -1,0 +1,186 @@
+//! Command-line interface (hand-rolled — no `clap` in the offline build).
+//!
+//! ```text
+//! evosort <command> [--flag value] [--switch]
+//!
+//! commands:
+//!   sort      sort one generated dataset and report timing
+//!   tune      run GA tuning and print the convergence table (Figs. 2–6)
+//!   pipeline  the paper's master pipeline (Algorithm 1) over several sizes
+//!   symbolic  symbolic-model parameters / fit from a GA sweep (§7)
+//!   repro     regenerate a paper table (--table 1|2)
+//!   serve     run the sort service demo (concurrent jobs + metrics)
+//!   info      platform, artifact and configuration report
+//! ```
+
+pub mod commands;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: one positional command plus `--key value` /
+/// `--switch` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // A flag is a switch when the next token is absent or another flag.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        args.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => args.switches.push(name.to_string()),
+                }
+            } else if args.command.is_empty() {
+                args.command = tok.clone();
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse a numeric flag supporting scientific notation (`1e7`, `5e8`).
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_count(v).with_context(|| format!("--{name}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_or(name, default as usize)? as u64)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}")),
+        }
+    }
+
+    /// Comma-separated list of counts (`--sizes 1e6,1e7,5e7`).
+    pub fn sizes_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| parse_count(tok.trim()))
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("--{name}")),
+        }
+    }
+}
+
+/// Parse `"10000000"`, `"1e7"` or `"2.5e6"` into a count.
+pub fn parse_count(s: &str) -> Result<usize> {
+    if let Ok(v) = s.parse::<usize>() {
+        return Ok(v);
+    }
+    let f: f64 = s.parse().with_context(|| format!("not a number: {s:?}"))?;
+    if !(f.is_finite() && f >= 0.0 && f <= 1e18) {
+        bail!("count out of range: {s:?}");
+    }
+    Ok(f.round() as usize)
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+EvoSort — GA-based adaptive parallel sorting (paper reproduction)
+
+USAGE: evosort <command> [flags]
+
+COMMANDS
+  sort      --n 1e7 [--dist uniform] [--seed 42] [--threads N]
+            [--algo auto|merge|radix|xla|baseline-quicksort|baseline-mergesort|std]
+            [--tune] [--symbolic]
+  tune      --n 1e7 [--generations 10] [--population 30] [--sample-cap 4e6]
+            [--dist uniform] [--seed ..] [--threads N]
+  pipeline  [--sizes 1e6,1e7] [--dist uniform] [--ga | --symbolic | --fixed]
+            [--generations ..] [--population ..] [--threads N]
+  symbolic  [--paper] [--sweep 1e5,1e6,1e7] [--n 1e8] (prints params; with
+            --sweep, fits quadratics to a fresh GA sweep — Figures 7–11)
+  repro     --table 1|2 [--scale-div 100] (regenerate a paper table, scaled)
+  serve     [--jobs 16] [--workers 2] [--n 1e6] (service demo + metrics)
+  info      (platform, threads, artifact status)
+
+FLAGS common: --threads N (default: all cores), --seed S, --dist DIST
+DISTS: uniform zipf gaussian sorted reverse nearly-sorted few-unique organ-pipe constant
+ENV:   EVOSORT_LOG=debug, EVOSORT_ARTIFACTS=dir, EVOSORT_BENCH_SCALE_DIV=N
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse(&["sort", "--n", "1e7", "--tune", "--dist", "zipf"]);
+        assert_eq!(a.command, "sort");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 10_000_000);
+        assert_eq!(a.str_or("dist", "uniform"), "zipf");
+        assert!(a.has("tune"));
+        assert!(!a.has("symbolic"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["pipeline", "--symbolic"]);
+        assert!(a.has("symbolic"));
+    }
+
+    #[test]
+    fn sizes_list() {
+        let a = parse(&["pipeline", "--sizes", "1e6,2.5e6,1000"]);
+        assert_eq!(a.sizes_or("sizes", &[]).unwrap(), vec![1_000_000, 2_500_000, 1000]);
+    }
+
+    #[test]
+    fn count_notations() {
+        assert_eq!(parse_count("12345").unwrap(), 12345);
+        assert_eq!(parse_count("1e7").unwrap(), 10_000_000);
+        assert_eq!(parse_count("5e8").unwrap(), 500_000_000);
+        assert!(parse_count("abc").is_err());
+        assert!(parse_count("-5.0").is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positional() {
+        let r = Args::parse(&["a".into(), "b".into()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["tune"]);
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+    }
+}

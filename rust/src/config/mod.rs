@@ -1,0 +1,302 @@
+//! Configuration system: a TOML-subset parser (no `serde`/`toml` crates in
+//! the offline environment) plus typed run configurations for the launcher.
+//!
+//! Supported syntax — the subset real deployments of this framework need:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! int       = 42
+//! count     = 1e7            # scientific counts, like the CLI
+//! float     = 0.7
+//! flag      = true
+//! name      = "uniform"      # or bare-word strings
+//! sizes     = [1e6, 1e7]     # arrays of counts
+//! ```
+//!
+//! Typed views: [`RunConfig`] maps a file onto pipeline / GA / service
+//! settings, used by `evosort pipeline --config run.toml`.
+
+pub mod run;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    IntList(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_count(&self) -> Option<usize> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as usize),
+            Value::Float(f) if *f >= 0.0 && f.fract() == 0.0 => Some(*f as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_counts(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::IntList(v) => {
+                v.iter().map(|&x| (x >= 0).then_some(x as usize)).collect()
+            }
+            _ => self.as_count().map(|c| vec![c]),
+        }
+    }
+}
+
+/// A parsed config document: `section.key -> Value` (top-level keys live in
+/// the `""` section).
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    values: HashMap<(String, String), Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, val.trim()))?;
+            doc.values.insert((section.clone(), key.trim().to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Document> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn count(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_count()
+                .ok_or_else(|| anyhow::anyhow!("[{section}] {key}: expected a count")),
+        }
+    }
+
+    pub fn f64(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => {
+                v.as_f64().ok_or_else(|| anyhow::anyhow!("[{section}] {key}: expected a number"))
+            }
+        }
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => {
+                v.as_bool().ok_or_else(|| anyhow::anyhow!("[{section}] {key}: expected a bool"))
+            }
+        }
+    }
+
+    pub fn str(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("[{section}] {key}: expected a string")),
+        }
+    }
+
+    pub fn counts(&self, section: &str, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(section, key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .as_counts()
+                .ok_or_else(|| anyhow::anyhow!("[{section}] {key}: expected counts")),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for tok in body.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            match parse_scalar(tok)? {
+                Value::Int(v) => items.push(v),
+                Value::Float(f) if f.fract() == 0.0 => items.push(f as i64),
+                other => bail!("array element {tok:?} not an integer count ({other:?})"),
+            }
+        }
+        return Ok(Value::IntList(items));
+    }
+    parse_scalar(s)
+}
+
+fn parse_scalar(s: &str) -> Result<Value> {
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        // Scientific counts (1e7) arrive here; keep integral floats exact.
+        return Ok(Value::Float(f));
+    }
+    // Bare words are strings ("uniform", "radix").
+    if s.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+threads = 4
+
+[pipeline]
+sizes = [1e6, 2.5e6, 1000]
+dist = uniform          # bare word
+seed = 42
+symbolic = true
+
+[ga]
+population = 30
+crossover = 0.7
+label = "paper defaults"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.count("", "threads", 0).unwrap(), 4);
+        assert_eq!(
+            doc.counts("pipeline", "sizes", &[]).unwrap(),
+            vec![1_000_000, 2_500_000, 1000]
+        );
+        assert_eq!(doc.str("pipeline", "dist", "x").unwrap(), "uniform");
+        assert!(doc.bool("pipeline", "symbolic", false).unwrap());
+        assert_eq!(doc.f64("ga", "crossover", 0.0).unwrap(), 0.7);
+        assert_eq!(doc.str("ga", "label", "").unwrap(), "paper defaults");
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = Document::parse("").unwrap();
+        assert!(doc.is_empty());
+        assert_eq!(doc.count("a", "b", 9).unwrap(), 9);
+        assert_eq!(doc.str("a", "b", "z").unwrap(), "z");
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = Document::parse("x = true").unwrap();
+        assert!(doc.count("", "x", 0).is_err());
+        assert!(doc.f64("", "x", 0.0).is_err());
+        assert!(doc.str("", "x", "").is_err());
+        assert!(doc.bool("", "x", false).unwrap());
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = Document::parse("s = \"a # b\"").unwrap();
+        assert_eq!(doc.str("", "s", "").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Document::parse("just a line").is_err());
+        assert!(Document::parse("x = [1, 2").is_err());
+        assert!(Document::parse("x = \"unterminated").is_err());
+        assert!(Document::parse("x = @?!").is_err());
+    }
+
+    #[test]
+    fn scientific_counts() {
+        let doc = Document::parse("n = 1e7").unwrap();
+        assert_eq!(doc.count("", "n", 0).unwrap(), 10_000_000);
+    }
+}

@@ -1,0 +1,206 @@
+//! Typed run configuration: map a config [`Document`](super::Document) onto
+//! the pipeline / GA / service settings the launcher consumes.
+//!
+//! ```toml
+//! threads = 8
+//!
+//! [pipeline]
+//! sizes    = [1e6, 1e7]
+//! dist     = uniform
+//! seed     = 42
+//! params   = ga            # ga | symbolic | fixed
+//! baselines = true
+//! sample_cap = 2e6
+//!
+//! [ga]
+//! population  = 30
+//! generations = 10
+//! crossover   = 0.7
+//! mutation    = 0.3
+//! elitism     = 2
+//!
+//! [service]
+//! workers        = 2
+//! sort_threads   = 4
+//! queue_capacity = 64
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::Document;
+use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig};
+use crate::data::Distribution;
+use crate::ga::GaConfig;
+use crate::sort::Baseline;
+use crate::symbolic::SymbolicModel;
+
+/// Everything a launcher invocation needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub threads: usize,
+    pub pipeline: PipelineConfig,
+    pub service: ServiceSettings,
+}
+
+/// Plain-data mirror of [`ServiceConfig`] (which holds no Clone state).
+#[derive(Debug, Clone)]
+pub struct ServiceSettings {
+    pub workers: usize,
+    pub sort_threads: usize,
+    pub queue_capacity: usize,
+}
+
+impl ServiceSettings {
+    pub fn to_config(&self) -> ServiceConfig {
+        ServiceConfig {
+            workers: self.workers,
+            sort_threads: self.sort_threads,
+            queue_capacity: self.queue_capacity,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_document(doc: &Document) -> Result<RunConfig> {
+        let threads = doc.count("", "threads", crate::util::default_threads())?;
+
+        // [ga]
+        let ga = GaConfig {
+            population: doc.count("ga", "population", 30)?,
+            generations: doc.count("ga", "generations", 10)?,
+            crossover_prob: doc.f64("ga", "crossover", 0.7)?,
+            mutation_prob: doc.f64("ga", "mutation", 0.3)?,
+            elitism: doc.count("ga", "elitism", 2)?,
+            tournament_k: doc.count("ga", "tournament_k", 3)?,
+            seed: doc.count("ga", "seed", 0xE50_50E7)? as u64,
+            repeats: doc.count("ga", "repeats", 1)?,
+            ..GaConfig::default()
+        };
+        if !(0.0..=1.0).contains(&ga.crossover_prob) || !(0.0..=1.0).contains(&ga.mutation_prob) {
+            bail!("[ga] crossover/mutation must be probabilities in [0, 1]");
+        }
+        if ga.population < 2 {
+            bail!("[ga] population must be >= 2");
+        }
+
+        // [pipeline]
+        let dist_name = doc.str("pipeline", "dist", "uniform")?;
+        let Some(dist) = Distribution::parse(&dist_name) else {
+            bail!("[pipeline] unknown dist {dist_name:?}");
+        };
+        let params = match doc.str("pipeline", "params", "ga")?.as_str() {
+            "ga" => ParamSource::Ga(ga),
+            "symbolic" => ParamSource::Symbolic(SymbolicModel::paper()),
+            "fixed" => ParamSource::Fixed(crate::params::SortParams::paper_1e7()),
+            other => bail!("[pipeline] params must be ga|symbolic|fixed, got {other:?}"),
+        };
+        let baselines = if doc.bool("pipeline", "baselines", true)? {
+            vec![Baseline::Quicksort, Baseline::Mergesort]
+        } else {
+            vec![]
+        };
+        let pipeline = PipelineConfig {
+            sizes: doc.counts("pipeline", "sizes", &[1_000_000, 10_000_000])?,
+            dist,
+            seed: doc.count("pipeline", "seed", 42)? as u64,
+            threads,
+            params,
+            sample_cap: doc.count("pipeline", "sample_cap", 4_000_000)?,
+            baselines,
+        };
+        if pipeline.sizes.is_empty() {
+            bail!("[pipeline] sizes must not be empty");
+        }
+
+        // [service]
+        let service = ServiceSettings {
+            workers: doc.count("service", "workers", 2)?.max(1),
+            sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
+            queue_capacity: doc.count("service", "queue_capacity", 64)?.max(1),
+        };
+
+        Ok(RunConfig { threads, pipeline, service })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        Self::from_document(&Document::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<RunConfig> {
+        RunConfig::from_document(&Document::parse(text).unwrap())
+    }
+
+    #[test]
+    fn full_config_round_trip() {
+        let rc = parse(
+            r#"
+threads = 3
+[pipeline]
+sizes = [1e5, 1e6]
+dist = zipf
+seed = 7
+params = symbolic
+baselines = false
+[service]
+workers = 4
+queue_capacity = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(rc.threads, 3);
+        assert_eq!(rc.pipeline.sizes, vec![100_000, 1_000_000]);
+        assert_eq!(rc.pipeline.dist, Distribution::Zipf);
+        assert!(matches!(rc.pipeline.params, ParamSource::Symbolic(_)));
+        assert!(rc.pipeline.baselines.is_empty());
+        assert_eq!(rc.service.workers, 4);
+        assert_eq!(rc.service.queue_capacity, 16);
+        let sc = rc.service.to_config();
+        assert_eq!(sc.workers, 4);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let rc = parse("").unwrap();
+        assert!(matches!(rc.pipeline.params, ParamSource::Ga(_)));
+        assert_eq!(rc.pipeline.sizes, vec![1_000_000, 10_000_000]);
+        assert_eq!(rc.pipeline.baselines.len(), 2);
+    }
+
+    #[test]
+    fn ga_settings_flow_through() {
+        let rc = parse(
+            r#"
+[pipeline]
+params = ga
+[ga]
+population = 12
+generations = 4
+crossover = 0.9
+"#,
+        )
+        .unwrap();
+        match &rc.pipeline.params {
+            ParamSource::Ga(cfg) => {
+                assert_eq!(cfg.population, 12);
+                assert_eq!(cfg.generations, 4);
+                assert_eq!(cfg.crossover_prob, 0.9);
+                assert_eq!(cfg.mutation_prob, 0.3); // default
+            }
+            other => panic!("expected GA source, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(parse("[pipeline]\ndist = nope").is_err());
+        assert!(parse("[pipeline]\nparams = magic").is_err());
+        assert!(parse("[pipeline]\nsizes = []").is_err());
+        assert!(parse("[ga]\ncrossover = 1.5").is_err());
+        assert!(parse("[ga]\npopulation = 1").is_err());
+    }
+}

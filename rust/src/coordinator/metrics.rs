@@ -1,0 +1,135 @@
+//! Metrics registry for the sort service: lock-free counters plus
+//! Welford-backed latency series, all `Send + Sync`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Welford;
+
+/// Registry shared across service workers.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, AtomicU64>>,
+    latencies: Mutex<HashMap<String, Welford>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a latency observation (seconds).
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut map = self.latencies.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(Welford::new).push(secs);
+    }
+
+    /// Snapshot of one latency series.
+    pub fn latency(&self, name: &str) -> Option<Welford> {
+        self.latencies.lock().unwrap().get(name).copied()
+    }
+
+    /// Render a human-readable report (CLI `info`/`serve` output).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        let mut names: Vec<&String> = counters.keys().collect();
+        names.sort();
+        for name in names {
+            out.push_str(&format!(
+                "counter {name} = {}\n",
+                counters[name].load(Ordering::Relaxed)
+            ));
+        }
+        let lats = self.latencies.lock().unwrap();
+        let mut names: Vec<&String> = lats.keys().collect();
+        names.sort();
+        for name in names {
+            let w = &lats[name];
+            out.push_str(&format!(
+                "latency {name}: n={} mean={:.6}s min={:.6}s max={:.6}s stddev={:.6}s\n",
+                w.count(),
+                w.mean(),
+                w.min(),
+                w.max(),
+                w.stddev()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("jobs");
+        m.add("jobs", 4);
+        assert_eq!(m.counter("jobs"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_series() {
+        let m = Metrics::new();
+        m.observe("sort", 0.5);
+        m.observe("sort", 1.5);
+        let w = m.latency("sort").unwrap();
+        assert_eq!(w.count(), 2);
+        assert!((w.mean() - 1.0).abs() < 1e-12);
+        assert!(m.latency("none").is_none());
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("hits");
+                        m.observe("lat", 0.001);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("hits"), 8000);
+        assert_eq!(m.latency("lat").unwrap().count(), 8000);
+    }
+
+    #[test]
+    fn report_contains_series() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.observe("b", 2.0);
+        let r = m.report();
+        assert!(r.contains("counter a = 1"));
+        assert!(r.contains("latency b:"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordination: the master pipeline (Algorithm 1), the long-running
+//! sort service (job queue + backpressure + metrics), and the tuning cache.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod service;
+pub mod tuning_cache;
+
+pub use metrics::Metrics;
+pub use pipeline::{ParamSource, PipelineConfig, PipelineRow};
+pub use service::{JobHandle, ServiceConfig, SortJob, SortOutcome, SortService};
+pub use tuning_cache::TuningCache;

@@ -1,0 +1,226 @@
+//! The EvoSort master pipeline — Algorithm 1 of the paper.
+//!
+//! For each requested dataset size: run GA tuning, generate the data array,
+//! compute the reference sort, run Adaptive Partition Sort with the tuned
+//! parameters, assert the output matches the reference, and compare runtime
+//! against the baselines (the paper's `np.sort` quicksort/mergesort).
+
+use crate::data::{self, validate, Distribution};
+use crate::ga::{GaConfig, GaDriver, GaResult};
+use crate::params::SortParams;
+use crate::sort::{AdaptiveSorter, Baseline};
+use crate::util::{fmt_count, fmt_secs, timer};
+
+/// How the pipeline obtains parameters for the final sort.
+#[derive(Debug, Clone)]
+pub enum ParamSource {
+    /// Run GA tuning per size (Algorithm 1 line 2).
+    Ga(GaConfig),
+    /// Use the symbolic model (§7 deployment path) — zero tuning overhead.
+    Symbolic(crate::symbolic::SymbolicModel),
+    /// Fixed parameters (ablations).
+    Fixed(SortParams),
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub sizes: Vec<usize>,
+    pub dist: Distribution,
+    pub seed: u64,
+    pub threads: usize,
+    pub params: ParamSource,
+    /// Cap on the GA's tuning-sample size (the paper tunes on the full array;
+    /// a cap keeps wall-clock sane at bench scale).
+    pub sample_cap: usize,
+    /// Which baselines to time alongside (empty = skip comparison).
+    pub baselines: Vec<Baseline>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            sizes: vec![1_000_000, 10_000_000],
+            dist: Distribution::Uniform,
+            seed: 42,
+            threads: crate::util::default_threads(),
+            params: ParamSource::Ga(GaConfig::default()),
+            sample_cap: 4_000_000,
+            baselines: vec![Baseline::Quicksort, Baseline::Mergesort],
+        }
+    }
+}
+
+/// Result row for one dataset size — one line of Table 1.
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    pub n: usize,
+    pub params: SortParams,
+    pub evosort_secs: f64,
+    /// `(baseline, seconds, speedup)` triples.
+    pub baselines: Vec<(Baseline, f64, f64)>,
+    pub validated: bool,
+    /// GA convergence history when GA tuning ran (Figures 2–6 data).
+    pub ga: Option<GaResult>,
+}
+
+impl PipelineRow {
+    /// Best (largest) speedup across baselines — the paper's headline factor.
+    pub fn best_speedup(&self) -> f64 {
+        self.baselines.iter().map(|(_, _, s)| *s).fold(0.0, f64::max)
+    }
+
+    pub fn table_line(&self) -> String {
+        let bl = self
+            .baselines
+            .iter()
+            .map(|(b, t, s)| format!("{}={} ({s:.1}x)", b.name(), fmt_secs(*t)))
+            .collect::<Vec<_>>()
+            .join("  ");
+        format!(
+            "{:>6}  evosort={}  {}  params={}  valid={}",
+            fmt_count(self.n),
+            fmt_secs(self.evosort_secs),
+            bl,
+            self.params,
+            self.validated
+        )
+    }
+}
+
+/// Run Algorithm 1 over every size in the config.
+pub fn run(config: &PipelineConfig) -> Vec<PipelineRow> {
+    run_with_sorter(config, AdaptiveSorter::new(config.threads))
+}
+
+/// Variant accepting a prepared sorter (e.g. with the XLA backend attached).
+pub fn run_with_sorter(config: &PipelineConfig, sorter: AdaptiveSorter) -> Vec<PipelineRow> {
+    let mut rows = Vec::with_capacity(config.sizes.len());
+    for &n in &config.sizes {
+        crate::log_info!("pipeline: n={}", fmt_count(n));
+
+        // (1) parameters.
+        let (params, ga) = match &config.params {
+            ParamSource::Ga(cfg) => {
+                let driver = GaDriver::new(cfg.clone());
+                let result = driver.run_for_size(
+                    n,
+                    config.sample_cap,
+                    config.dist,
+                    AdaptiveSorter::new(config.threads),
+                );
+                crate::log_info!(
+                    "GA best for {}: {} ({}, {} evals)",
+                    fmt_count(n),
+                    result.best,
+                    fmt_secs(result.best_fitness),
+                    result.evaluations
+                );
+                (result.best, Some(result))
+            }
+            ParamSource::Symbolic(model) => (model.params_for(n), None),
+            ParamSource::Fixed(p) => (*p, None),
+        };
+
+        // (2) data generation.
+        let mut array = data::generate_i64(n, config.dist, config.seed, config.threads);
+        let fp = validate::fingerprint_i64(&array, config.threads);
+
+        // (4) final sort with tuned parameters (timed).
+        let (_, evosort_secs) = timer::time(|| sorter.sort_i64(&mut array, &params));
+
+        // (5) validation — ordering + multiset (replaces the paper's
+        // element-by-element comparison with the reference array, without
+        // needing a second n-sized buffer).
+        let verdict = validate::validate_i64(fp, &array, config.threads);
+        let validated = verdict == validate::Verdict::Valid;
+        if !validated {
+            crate::log_error!("validation FAILED for n={n}: {verdict:?}");
+        }
+
+        // Baseline comparison (fresh copies, same seed).
+        let mut baselines = Vec::new();
+        for &b in &config.baselines {
+            let mut copy = data::generate_i64(n, config.dist, config.seed, config.threads);
+            let (_, secs) = timer::time(|| b.sort_i64(&mut copy));
+            debug_assert_eq!(copy, array);
+            baselines.push((b, secs, secs / evosort_secs));
+        }
+
+        let row = PipelineRow { n, params, evosort_secs, baselines, validated, ga };
+        crate::log_info!("{}", row.table_line());
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_fixed_params_runs_and_validates() {
+        let config = PipelineConfig {
+            sizes: vec![50_000, 120_000],
+            threads: 2,
+            params: ParamSource::Fixed(SortParams::paper_1e7()),
+            baselines: vec![Baseline::Std],
+            ..Default::default()
+        };
+        let rows = run(&config);
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert!(row.validated, "row {} invalid", row.n);
+            assert!(row.evosort_secs > 0.0);
+            assert_eq!(row.baselines.len(), 1);
+            assert!(row.best_speedup() > 0.0);
+            assert!(row.ga.is_none());
+        }
+    }
+
+    #[test]
+    fn pipeline_with_ga_records_history() {
+        let config = PipelineConfig {
+            sizes: vec![60_000],
+            threads: 2,
+            params: ParamSource::Ga(GaConfig { population: 6, generations: 2, seed: 5, ..Default::default() }),
+            sample_cap: 30_000,
+            baselines: vec![],
+            ..Default::default()
+        };
+        let rows = run(&config);
+        let ga = rows[0].ga.as_ref().expect("ga history");
+        assert_eq!(ga.history.len(), 3); // gen 0..=2
+        assert!(rows[0].validated);
+    }
+
+    #[test]
+    fn pipeline_symbolic_params() {
+        let config = PipelineConfig {
+            sizes: vec![80_000],
+            threads: 2,
+            params: ParamSource::Symbolic(crate::symbolic::SymbolicModel::paper()),
+            baselines: vec![],
+            ..Default::default()
+        };
+        let rows = run(&config);
+        assert!(rows[0].validated);
+        assert_eq!(rows[0].params.algorithm, crate::params::ACode::Radix);
+    }
+
+    #[test]
+    fn table_line_formats() {
+        let row = PipelineRow {
+            n: 10_000_000,
+            params: SortParams::paper_1e7(),
+            evosort_secs: 0.2886,
+            baselines: vec![(Baseline::Quicksort, 0.8157, 2.83)],
+            validated: true,
+            ga: None,
+        };
+        let line = row.table_line();
+        assert!(line.contains("1e7"), "{line}");
+        assert!(line.contains("0.2886s"));
+        assert!(line.contains("2.8x"));
+    }
+}

@@ -1,0 +1,254 @@
+//! The sort service: EvoSort as a long-running coordinator.
+//!
+//! Clients submit [`SortJob`]s; a bounded [`ThreadPool`](crate::exec::pool::ThreadPool)
+//! executes them (backpressure when the queue fills), each job resolving its
+//! parameters from — in priority order — the explicit override, the tuning
+//! cache, or the symbolic model, then running Adaptive Partition Sort and
+//! validating the output. Results come back over a per-job channel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::tuning_cache::TuningCache;
+use crate::data::validate::{self, Verdict};
+use crate::params::SortParams;
+use crate::sort::AdaptiveSorter;
+use crate::symbolic::SymbolicModel;
+use crate::util::timer;
+
+/// A sorting request.
+pub struct SortJob {
+    pub data: Vec<i64>,
+    /// Workload tag used for cache lookup ("uniform", "zipf", ...).
+    pub dist: String,
+    /// Explicit parameter override (skips cache + model).
+    pub params: Option<SortParams>,
+    /// Validate the output before returning (adds one parallel pass).
+    pub validate: bool,
+}
+
+impl SortJob {
+    pub fn new(data: Vec<i64>) -> Self {
+        SortJob { data, dist: "uniform".into(), params: None, validate: true }
+    }
+}
+
+/// A completed job.
+#[derive(Debug)]
+pub struct SortOutcome {
+    pub id: u64,
+    pub data: Vec<i64>,
+    pub params: SortParams,
+    pub secs: f64,
+    pub valid: bool,
+}
+
+/// Handle to an in-flight job.
+pub struct JobHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<SortOutcome>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> SortOutcome {
+        self.rx.recv().expect("service dropped job reply")
+    }
+}
+
+/// Service configuration.
+pub struct ServiceConfig {
+    /// Concurrent sort jobs (each job internally uses `sort_threads`).
+    pub workers: usize,
+    /// Threads each sort uses.
+    pub sort_threads: usize,
+    /// Pending-job queue bound (backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        let hw = crate::util::default_threads();
+        ServiceConfig { workers: 2, sort_threads: hw.div_ceil(2), queue_capacity: 64 }
+    }
+}
+
+/// The coordinator service.
+pub struct SortService {
+    pool: crate::exec::pool::ThreadPool,
+    sorter: Arc<AdaptiveSorter>,
+    cache: Arc<TuningCache>,
+    model: SymbolicModel,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl SortService {
+    pub fn new(config: ServiceConfig) -> Self {
+        Self::with_sorter(config, AdaptiveSorter::new(1))
+    }
+
+    /// Build with a prepared sorter (e.g. XLA backend attached). The sorter's
+    /// thread budget is replaced by `config.sort_threads`.
+    pub fn with_sorter(config: ServiceConfig, sorter: AdaptiveSorter) -> Self {
+        let sorter = sorter.rebudget(config.sort_threads);
+        SortService {
+            pool: crate::exec::pool::ThreadPool::with_capacity(
+                config.workers,
+                config.queue_capacity,
+            ),
+            sorter: Arc::new(sorter),
+            cache: Arc::new(TuningCache::new()),
+            model: SymbolicModel::paper(),
+            metrics: Arc::new(Metrics::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Replace the symbolic model (e.g. one fitted on this machine).
+    pub fn set_model(&mut self, model: SymbolicModel) {
+        self.model = model;
+    }
+
+    pub fn cache(&self) -> &Arc<TuningCache> {
+        &self.cache
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Resolve parameters for a job: override → cache → symbolic model.
+    fn resolve_params(&self, job: &SortJob) -> SortParams {
+        if let Some(p) = job.params {
+            self.metrics.incr("params.override");
+            return p;
+        }
+        if let Some(p) = self.cache.get(job.data.len(), &job.dist) {
+            self.metrics.incr("params.cache_hit");
+            return p;
+        }
+        self.metrics.incr("params.symbolic");
+        self.model.params_for(job.data.len())
+    }
+
+    /// Submit a job; blocks only when the queue is full (backpressure).
+    pub fn submit(&self, mut job: SortJob) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let sorter = Arc::clone(&self.sorter);
+        let metrics = Arc::clone(&self.metrics);
+        let params = self.resolve_params(&job);
+        self.metrics.incr("jobs.submitted");
+        let submitted = self.pool.submit(move || {
+            let threads = sorter.threads();
+            let fp = job.validate.then(|| validate::fingerprint_i64(&job.data, threads));
+            let (_, secs) = timer::time(|| sorter.sort_i64(&mut job.data, &params));
+            let valid = match fp {
+                Some(fp) => validate::validate_i64(fp, &job.data, threads) == Verdict::Valid,
+                None => true,
+            };
+            metrics.incr("jobs.completed");
+            metrics.observe("sort.latency", secs);
+            metrics.add("elements.sorted", job.data.len() as u64);
+            if !valid {
+                metrics.incr("jobs.invalid");
+            }
+            let _ = tx.send(SortOutcome { id, data: job.data, params, secs, valid });
+        });
+        assert!(submitted, "service is shutting down");
+        JobHandle { id, rx }
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn drain(&self) {
+        self.pool.wait_idle();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    fn service() -> SortService {
+        SortService::new(ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 8 })
+    }
+
+    #[test]
+    fn submit_and_wait_sorted() {
+        let svc = service();
+        let data = generate_i64(150_000, Distribution::Uniform, 1, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let out = svc.submit(SortJob::new(data)).wait();
+        assert!(out.valid);
+        assert_eq!(out.data, expect);
+        assert!(out.secs > 0.0);
+        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
+    }
+
+    #[test]
+    fn many_concurrent_jobs() {
+        let svc = service();
+        let handles: Vec<JobHandle> = (0..10u64)
+            .map(|seed| {
+                let data = generate_i64(30_000, Distribution::Uniform, seed, 2);
+                svc.submit(SortJob::new(data))
+            })
+            .collect();
+        let mut ids = std::collections::HashSet::new();
+        for h in handles {
+            let out = h.wait();
+            assert!(out.valid);
+            assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+            ids.insert(out.id);
+        }
+        assert_eq!(ids.len(), 10, "unique job ids");
+        assert_eq!(svc.metrics().counter("jobs.completed"), 10);
+        assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+    }
+
+    #[test]
+    fn params_resolution_order() {
+        let svc = service();
+        // 1. symbolic (cold cache).
+        let out = svc.submit(SortJob::new(generate_i64(200_000, Distribution::Uniform, 3, 2))).wait();
+        assert!(out.valid);
+        assert_eq!(svc.metrics().counter("params.symbolic"), 1);
+        // 2. cache hit after put.
+        svc.cache().put(200_000, "uniform", SortParams::paper_1e7());
+        let out = svc.submit(SortJob::new(generate_i64(200_000, Distribution::Uniform, 4, 2))).wait();
+        assert_eq!(out.params, SortParams::paper_1e7());
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        // 3. explicit override wins.
+        let mut job = SortJob::new(generate_i64(200_000, Distribution::Uniform, 5, 2));
+        let custom = SortParams { tile: 777, ..SortParams::paper_1e7() };
+        job.params = Some(custom);
+        let out = svc.submit(job).wait();
+        assert_eq!(out.params.tile, 777);
+        assert_eq!(svc.metrics().counter("params.override"), 1);
+    }
+
+    #[test]
+    fn drain_waits_for_all() {
+        let svc = service();
+        for seed in 0..5u64 {
+            // Fire-and-forget: drop the handles.
+            let _ = svc.submit(SortJob::new(generate_i64(20_000, Distribution::Uniform, seed, 2)));
+        }
+        svc.drain();
+        assert_eq!(svc.metrics().counter("jobs.completed"), 5);
+    }
+
+    #[test]
+    fn skip_validation_path() {
+        let svc = service();
+        let mut job = SortJob::new(generate_i64(50_000, Distribution::Uniform, 9, 2));
+        job.validate = false;
+        let out = svc.submit(job).wait();
+        assert!(out.valid, "unvalidated jobs report valid=true");
+        assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

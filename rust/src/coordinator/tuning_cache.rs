@@ -1,0 +1,167 @@
+//! Tuning cache: remembers GA results per workload class so repeat sorts pay
+//! zero tuning overhead (the gap §7 of the paper addresses with symbolic
+//! models; the cache is the service-side complement).
+//!
+//! Keys are `(size_band, distribution)` — the size band is the integer part
+//! of log10(n) · 2 (half-decade bands), since tuned thresholds vary smoothly
+//! in log10 n (paper §7). Persistence is a plain text file (no serde crate
+//! offline): `band dist genes...` per line.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::RwLock;
+
+use anyhow::{Context, Result};
+
+use crate::params::SortParams;
+
+/// Workload class key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub size_band: u32,
+    pub dist: String,
+}
+
+impl CacheKey {
+    /// Half-decade size banding: n ∈ [10^(b/2), 10^((b+1)/2)).
+    pub fn band_of(n: usize) -> u32 {
+        ((n.max(1) as f64).log10() * 2.0).floor() as u32
+    }
+
+    pub fn new(n: usize, dist: &str) -> CacheKey {
+        CacheKey { size_band: Self::band_of(n), dist: dist.to_string() }
+    }
+}
+
+/// Thread-safe tuned-parameter cache with text persistence.
+#[derive(Default)]
+pub struct TuningCache {
+    map: RwLock<HashMap<CacheKey, SortParams>>,
+}
+
+impl TuningCache {
+    pub fn new() -> Self {
+        TuningCache::default()
+    }
+
+    pub fn get(&self, n: usize, dist: &str) -> Option<SortParams> {
+        self.map.read().unwrap().get(&CacheKey::new(n, dist)).copied()
+    }
+
+    pub fn put(&self, n: usize, dist: &str, params: SortParams) {
+        self.map.write().unwrap().insert(CacheKey::new(n, dist), params);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Persist as `band dist g0 g1 g2 g3 g4` lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let map = self.map.read().unwrap();
+        let mut lines: Vec<String> = map
+            .iter()
+            .map(|(k, p)| {
+                let g = p.to_genes();
+                format!(
+                    "{} {} {} {} {} {} {}",
+                    k.size_band, k.dist, g[0], g[1], g[2], g[3], g[4]
+                )
+            })
+            .collect();
+        lines.sort();
+        std::fs::write(path, lines.join("\n") + "\n")
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load from the text format; unknown/corrupt lines are skipped with a
+    /// warning rather than failing the whole cache.
+    pub fn load(path: &Path) -> Result<TuningCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let cache = TuningCache::new();
+        {
+            let mut map = cache.map.write().unwrap();
+            for line in text.lines() {
+                let parts: Vec<&str> = line.split_whitespace().collect();
+                if parts.len() != 7 {
+                    if !line.trim().is_empty() {
+                        crate::log_warn!("skipping malformed cache line: {line:?}");
+                    }
+                    continue;
+                }
+                let parse = || -> Option<(CacheKey, SortParams)> {
+                    let band: u32 = parts[0].parse().ok()?;
+                    let mut genes = [0i64; 5];
+                    for (i, g) in genes.iter_mut().enumerate() {
+                        *g = parts[2 + i].parse().ok()?;
+                    }
+                    Some((
+                        CacheKey { size_band: band, dist: parts[1].to_string() },
+                        SortParams::from_genes(&genes),
+                    ))
+                };
+                match parse() {
+                    Some((k, p)) => {
+                        map.insert(k, p);
+                    }
+                    None => crate::log_warn!("skipping unparseable cache line: {line:?}"),
+                }
+            }
+        }
+        Ok(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banding_half_decades() {
+        assert_eq!(CacheKey::band_of(1), 0);
+        assert_eq!(CacheKey::band_of(10), 2);
+        assert_eq!(CacheKey::band_of(31_623), 9); // 10^4.5
+        assert_eq!(CacheKey::band_of(10_000_000), 14);
+        // Same band for nearby sizes, different across half-decades.
+        assert_eq!(CacheKey::band_of(1_000_000), CacheKey::band_of(2_000_000));
+        assert_ne!(CacheKey::band_of(1_000_000), CacheKey::band_of(5_000_000));
+    }
+
+    #[test]
+    fn put_get_same_band() {
+        let c = TuningCache::new();
+        assert!(c.get(1_000_000, "uniform").is_none());
+        c.put(1_000_000, "uniform", SortParams::paper_1e7());
+        assert_eq!(c.get(1_200_000, "uniform"), Some(SortParams::paper_1e7()));
+        assert!(c.get(1_200_000, "zipf").is_none(), "distribution is part of the key");
+        assert!(c.get(100_000_000, "uniform").is_none(), "band mismatch");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = TuningCache::new();
+        c.put(10_000_000, "uniform", SortParams::paper_1e7());
+        c.put(100_000_000, "zipf", SortParams::paper_1e8());
+        let path = std::env::temp_dir().join(format!("evosort-cache-{}.txt", std::process::id()));
+        c.save(&path).unwrap();
+        let loaded = TuningCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.get(10_000_000, "uniform"), Some(SortParams::paper_1e7()));
+        assert_eq!(loaded.get(100_000_000, "zipf"), Some(SortParams::paper_1e8()));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_skips_corrupt_lines() {
+        let path = std::env::temp_dir().join(format!("evosort-cache-bad-{}.txt", std::process::id()));
+        std::fs::write(&path, "garbage line\n14 uniform 3075 31291 4 99574 1418\n1 2 3\n").unwrap();
+        let loaded = TuningCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

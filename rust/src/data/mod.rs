@@ -1,0 +1,307 @@
+//! Workload generation and output validation.
+//!
+//! Mirrors the paper's §5 ("Dataset Generation"): arrays of integers drawn
+//! uniformly from [-1e9, +1e9] with a fixed seed, generated in parallel.
+//! Additional distributions (Zipf-skewed, Gaussian-clustered, nearly-sorted,
+//! reverse-sorted, few-unique, organ-pipe) cover the ablation benches and the
+//! adaptive dispatcher's decision surface.
+
+pub mod validate;
+
+use crate::exec;
+use crate::rng::distributions::{gaussian, Zipf};
+use crate::rng::Xoshiro256pp;
+
+/// The paper's sampling interval: x_i ~ U(-1e9, 1e9).
+pub const PAPER_LO: i64 = -1_000_000_000;
+pub const PAPER_HI: i64 = 1_000_000_000;
+
+/// Input-data shapes used across experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// Uniform over [-1e9, 1e9] — the paper's workload.
+    Uniform,
+    /// Uniform over a custom inclusive range.
+    UniformRange(i64, i64),
+    /// Zipf-ranked values (skewed, many duplicates at the head).
+    Zipf,
+    /// Gaussian-clustered around 0, stddev 1e8.
+    Gaussian,
+    /// Already sorted ascending.
+    Sorted,
+    /// Sorted descending.
+    Reverse,
+    /// Sorted with `swaps_per_million` random perturbations per 1e6 elements.
+    NearlySorted,
+    /// Only 16 distinct values.
+    FewUnique,
+    /// Ascending then descending (organ pipe) — adversarial for some merges.
+    OrganPipe,
+    /// All elements equal.
+    Constant,
+}
+
+impl Distribution {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::UniformRange(..) => "uniform-range",
+            Distribution::Zipf => "zipf",
+            Distribution::Gaussian => "gaussian",
+            Distribution::Sorted => "sorted",
+            Distribution::Reverse => "reverse",
+            Distribution::NearlySorted => "nearly-sorted",
+            Distribution::FewUnique => "few-unique",
+            Distribution::OrganPipe => "organ-pipe",
+            Distribution::Constant => "constant",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Distribution> {
+        Some(match s {
+            "uniform" => Distribution::Uniform,
+            "zipf" => Distribution::Zipf,
+            "gaussian" => Distribution::Gaussian,
+            "sorted" => Distribution::Sorted,
+            "reverse" => Distribution::Reverse,
+            "nearly-sorted" | "nearly_sorted" => Distribution::NearlySorted,
+            "few-unique" | "few_unique" => Distribution::FewUnique,
+            "organ-pipe" | "organ_pipe" => Distribution::OrganPipe,
+            "constant" => Distribution::Constant,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [Distribution] {
+        &[
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Gaussian,
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::NearlySorted,
+            Distribution::FewUnique,
+            Distribution::OrganPipe,
+            Distribution::Constant,
+        ]
+    }
+}
+
+/// Generate `n` i64 values with the given distribution and seed, filling in
+/// parallel with per-thread xoshiro jump streams (deterministic for a fixed
+/// seed *and* thread count-independent: stream index is derived from chunk
+/// index, and chunk geometry is fixed by `n`, not the machine).
+pub fn generate_i64(n: usize, dist: Distribution, seed: u64, threads: usize) -> Vec<i64> {
+    let mut data = vec![0i64; n];
+    fill_i64(&mut data, dist, seed, threads);
+    data
+}
+
+/// Number of fixed-size generation blocks (deterministic chunk geometry).
+const GEN_BLOCK: usize = 1 << 20;
+
+/// Fill an existing buffer (avoids reallocation in benches).
+pub fn fill_i64(data: &mut [i64], dist: Distribution, seed: u64, threads: usize) {
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    match dist {
+        Distribution::Sorted => {
+            exec::parallel_for_chunks(data, threads, |idx, chunk| {
+                let base = (idx * GEN_BLOCK) as i64; // monotone across chunk index only if chunks uniform; recompute below
+                let _ = base;
+                for x in chunk.iter_mut() {
+                    *x = 0;
+                }
+            });
+            // Simple deterministic ascending ramp (values don't need to be
+            // random for the sorted case).
+            for (i, x) in data.iter_mut().enumerate() {
+                *x = i as i64 - (n as i64 / 2);
+            }
+        }
+        Distribution::Reverse => {
+            for (i, x) in data.iter_mut().enumerate() {
+                *x = (n - i) as i64 - (n as i64 / 2);
+            }
+        }
+        Distribution::OrganPipe => {
+            let half = n / 2;
+            for (i, x) in data.iter_mut().enumerate() {
+                *x = if i < half { i as i64 } else { (n - i) as i64 };
+            }
+        }
+        Distribution::Constant => {
+            data.fill(42);
+        }
+        Distribution::NearlySorted => {
+            for (i, x) in data.iter_mut().enumerate() {
+                *x = i as i64;
+            }
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let swaps = (n / 1000).max(1);
+            for _ in 0..swaps {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                data.swap(i, j);
+            }
+        }
+        _ => {
+            // Random fills: deterministic block geometry + per-block streams.
+            let blocks: Vec<std::ops::Range<usize>> = (0..n)
+                .step_by(GEN_BLOCK)
+                .map(|s| s..(s + GEN_BLOCK).min(n))
+                .collect();
+            let nblocks = blocks.len();
+            // Give each fixed block its own seed; parallelise over blocks.
+            let mut views: Vec<&mut [i64]> = Vec::with_capacity(nblocks);
+            let mut rest = data;
+            for b in &blocks {
+                let (head, tail) = rest.split_at_mut(b.len());
+                views.push(head);
+                rest = tail;
+            }
+            let fill_block = |bi: usize, chunk: &mut [i64]| {
+                let mut rng = Xoshiro256pp::seeded(seed ^ (bi as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                match dist {
+                    Distribution::Uniform => {
+                        for x in chunk.iter_mut() {
+                            *x = rng.range_i64(PAPER_LO, PAPER_HI);
+                        }
+                    }
+                    Distribution::UniformRange(lo, hi) => {
+                        for x in chunk.iter_mut() {
+                            *x = rng.range_i64(lo, hi);
+                        }
+                    }
+                    Distribution::Zipf => {
+                        let z = Zipf::new(1_000_000, 1.1);
+                        for x in chunk.iter_mut() {
+                            *x = z.sample(&mut rng) as i64;
+                        }
+                    }
+                    Distribution::Gaussian => {
+                        for x in chunk.iter_mut() {
+                            *x = gaussian(&mut rng, 0.0, 1e8) as i64;
+                        }
+                    }
+                    Distribution::FewUnique => {
+                        for x in chunk.iter_mut() {
+                            *x = (rng.below(16) as i64) * 1_000_003 - 8_000_000;
+                        }
+                    }
+                    _ => unreachable!("handled above"),
+                }
+            };
+            // Parallel over blocks using scoped threads; stride assignment.
+            let nworkers = threads.max(1).min(nblocks);
+            if nworkers <= 1 {
+                for (bi, v) in views.into_iter().enumerate() {
+                    fill_block(bi, v);
+                }
+            } else {
+                let mut per_worker: Vec<Vec<(usize, &mut [i64])>> =
+                    (0..nworkers).map(|_| Vec::new()).collect();
+                for (bi, v) in views.into_iter().enumerate() {
+                    per_worker[bi % nworkers].push((bi, v));
+                }
+                std::thread::scope(|scope| {
+                    for work in per_worker {
+                        let fill_block = &fill_block;
+                        scope.spawn(move || {
+                            for (bi, v) in work {
+                                fill_block(bi, v);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// i32 variant of [`generate_i64`] (values clamped into i32 range).
+pub fn generate_i32(n: usize, dist: Distribution, seed: u64, threads: usize) -> Vec<i32> {
+    let wide = generate_i64(n, dist, seed, threads);
+    wide.into_iter().map(|x| x.clamp(i32::MIN as i64, i32::MAX as i64) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_respects_paper_interval() {
+        let xs = generate_i64(10_000, Distribution::Uniform, 42, 4);
+        assert_eq!(xs.len(), 10_000);
+        assert!(xs.iter().all(|&x| (PAPER_LO..=PAPER_HI).contains(&x)));
+        // Not constant.
+        assert!(xs.iter().any(|&x| x != xs[0]));
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let a = generate_i64(50_000, Distribution::Uniform, 7, 1);
+        let b = generate_i64(50_000, Distribution::Uniform, 7, 8);
+        assert_eq!(a, b, "fills must be independent of thread count");
+        let c = generate_i64(50_000, Distribution::Uniform, 8, 8);
+        assert_ne!(a, c, "different seeds differ");
+    }
+
+    #[test]
+    fn sorted_and_reverse_shapes() {
+        let s = generate_i64(1000, Distribution::Sorted, 0, 2);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        let r = generate_i64(1000, Distribution::Reverse, 0, 2);
+        assert!(r.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn organ_pipe_shape() {
+        let x = generate_i64(10, Distribution::OrganPipe, 0, 1);
+        assert!(x[0] <= x[4] && x[5] >= x[9]);
+    }
+
+    #[test]
+    fn few_unique_cardinality() {
+        let xs = generate_i64(10_000, Distribution::FewUnique, 3, 4);
+        let mut uniq = xs.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 16, "got {} distinct", uniq.len());
+    }
+
+    #[test]
+    fn nearly_sorted_mostly_ordered() {
+        let xs = generate_i64(100_000, Distribution::NearlySorted, 5, 4);
+        let inversions_adjacent =
+            xs.windows(2).filter(|w| w[0] > w[1]).count();
+        assert!(inversions_adjacent < xs.len() / 100, "{inversions_adjacent} adjacent inversions");
+    }
+
+    #[test]
+    fn i32_in_range() {
+        let xs = generate_i32(1000, Distribution::Uniform, 9, 2);
+        assert!(xs.iter().all(|&x| (-1_000_000_000..=1_000_000_000).contains(&x)));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in Distribution::all() {
+            if matches!(d, Distribution::UniformRange(..)) {
+                continue;
+            }
+            assert_eq!(Distribution::parse(d.name()), Some(*d));
+        }
+        assert_eq!(Distribution::parse("nope"), None);
+    }
+
+    #[test]
+    fn empty_fill_is_noop() {
+        let mut v: Vec<i64> = vec![];
+        fill_i64(&mut v, Distribution::Uniform, 1, 4);
+        assert!(v.is_empty());
+    }
+}

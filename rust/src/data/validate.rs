@@ -1,0 +1,154 @@
+//! Output validation: the paper's master pipeline asserts the EvoSort output
+//! equals the reference sort (Algorithm 1, line 6). We validate two
+//! properties, both in parallel:
+//!
+//! 1. **Ordering** — the output is non-decreasing.
+//! 2. **Multiset preservation** — the output is a permutation of the input,
+//!    checked via an order-independent commutative fingerprint (sum, xor and
+//!    a mixed hash accumulated per element), which is O(n) and needs no copy
+//!    of the reference array.
+
+use crate::exec;
+
+/// Order-independent multiset fingerprint of a slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub len: usize,
+    pub sum: u64,
+    pub xor: u64,
+    pub mix: u64,
+}
+
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    // splitmix64 finaliser — a good enough per-element mixer.
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Compute the fingerprint of `data` using up to `threads` threads.
+pub fn fingerprint_i64(data: &[i64], threads: usize) -> Fingerprint {
+    let bounds = exec::partition_even(data.len(), threads.max(1));
+    let parts = exec::parallel_map(bounds.len(), threads, |i| {
+        let chunk = &data[bounds[i].clone()];
+        let mut sum = 0u64;
+        let mut xor = 0u64;
+        let mut mix = 0u64;
+        for &x in chunk {
+            let u = x as u64;
+            sum = sum.wrapping_add(u);
+            xor ^= u;
+            mix = mix.wrapping_add(mix64(u));
+        }
+        (sum, xor, mix)
+    });
+    let mut fp = Fingerprint { len: data.len(), sum: 0, xor: 0, mix: 0 };
+    for (s, x, m) in parts {
+        fp.sum = fp.sum.wrapping_add(s);
+        fp.xor ^= x;
+        fp.mix = fp.mix.wrapping_add(m);
+    }
+    fp
+}
+
+/// Parallel check that `data` is non-decreasing.
+pub fn is_sorted_i64(data: &[i64], threads: usize) -> bool {
+    if data.len() < 2 {
+        return true;
+    }
+    let bounds = exec::partition_even(data.len(), threads.max(1));
+    let oks = exec::parallel_map(bounds.len(), threads, |i| {
+        let r = bounds[i].clone();
+        // Include the seam with the previous chunk.
+        let start = r.start.saturating_sub(1);
+        data[start..r.end].windows(2).all(|w| w[0] <= w[1])
+    });
+    oks.into_iter().all(|ok| ok)
+}
+
+/// Validation outcome for a sort run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Sorted and a permutation of the input.
+    Valid,
+    /// Ordering violated.
+    NotSorted { first_violation: usize },
+    /// Ordered but the multiset changed (elements lost/duplicated/corrupted).
+    MultisetMismatch,
+}
+
+/// Full validation: `output` must be a sorted permutation of whatever
+/// produced `input_fp` (compute the fingerprint *before* sorting in place).
+pub fn validate_i64(input_fp: Fingerprint, output: &[i64], threads: usize) -> Verdict {
+    if let Some(pos) = first_unsorted(output) {
+        return Verdict::NotSorted { first_violation: pos };
+    }
+    if fingerprint_i64(output, threads) != input_fp {
+        return Verdict::MultisetMismatch;
+    }
+    Verdict::Valid
+}
+
+fn first_unsorted(data: &[i64]) -> Option<usize> {
+    data.windows(2).position(|w| w[0] > w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_order_independent() {
+        let a = vec![3i64, -1, 7, 7, 0];
+        let b = vec![7i64, 0, 3, 7, -1];
+        assert_eq!(fingerprint_i64(&a, 2), fingerprint_i64(&b, 4));
+    }
+
+    #[test]
+    fn fingerprint_detects_mutation() {
+        let a = vec![1i64, 2, 3, 4];
+        let b = vec![1i64, 2, 3, 5];
+        assert_ne!(fingerprint_i64(&a, 1), fingerprint_i64(&b, 1));
+        // Sum+xor alone could be fooled by paired edits; mix catches e.g.
+        // {0, 3} -> {1, 2}: sums equal, xors equal.
+        let c = vec![0i64, 3];
+        let d = vec![1i64, 2];
+        assert_eq!(
+            fingerprint_i64(&c, 1).sum,
+            fingerprint_i64(&d, 1).sum
+        );
+        assert_ne!(fingerprint_i64(&c, 1), fingerprint_i64(&d, 1));
+    }
+
+    #[test]
+    fn is_sorted_seams() {
+        // Violation exactly at a chunk boundary must be caught.
+        let mut data: Vec<i64> = (0..1000).collect();
+        assert!(is_sorted_i64(&data, 7));
+        data.swap(499, 500);
+        assert!(!is_sorted_i64(&data, 7));
+    }
+
+    #[test]
+    fn is_sorted_trivial() {
+        assert!(is_sorted_i64(&[], 4));
+        assert!(is_sorted_i64(&[1], 4));
+        assert!(is_sorted_i64(&[2, 2, 2], 4));
+    }
+
+    #[test]
+    fn validate_full_path() {
+        let input = vec![5i64, -2, 9, 0, 5];
+        let fp = fingerprint_i64(&input, 2);
+        let mut out = input.clone();
+        out.sort_unstable();
+        assert_eq!(validate_i64(fp, &out, 2), Verdict::Valid);
+
+        let bad_order = vec![9i64, -2, 0, 5, 5];
+        assert!(matches!(validate_i64(fp, &bad_order, 2), Verdict::NotSorted { .. }));
+
+        let bad_multiset = vec![-2i64, 0, 5, 5, 10];
+        assert_eq!(validate_i64(fp, &bad_multiset, 2), Verdict::MultisetMismatch);
+    }
+}

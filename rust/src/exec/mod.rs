@@ -1,0 +1,236 @@
+//! Parallel-execution substrate, built on `std::thread` only.
+//!
+//! The paper's implementation relies on Numba's `prange` (an OpenMP-style
+//! parallel-for over chunks with thread-local state). No `rayon` crate is
+//! available in the offline build environment, so this module provides the
+//! equivalent primitives from scratch:
+//!
+//! * [`parallel_for_chunks`] — split a mutable slice into contiguous chunks
+//!   and process each on its own OS thread (scoped; zero `unsafe`).
+//! * [`parallel_map`] — run an indexed task set across a bounded number of
+//!   threads and collect per-task results (used for thread-local histograms).
+//! * [`partition_even`] — the chunk geometry helper shared by the sorts.
+//! * [`pool::ThreadPool`] — a persistent worker pool with a job queue, used
+//!   by the coordinator's sort service (long-lived jobs, backpressure).
+//!
+//! Scoped spawning costs ~10–20 µs per thread on Linux; the sorting hot paths
+//! only cross into these helpers for chunks of ≥10⁴ elements, so the spawn
+//! cost is noise relative to the work (measured in benches/micro_kernels.rs).
+
+pub mod pool;
+
+use std::ops::Range;
+
+/// Split `len` items into at most `parts` contiguous ranges of near-equal
+/// size (the first `len % parts` ranges get one extra element). Never returns
+/// empty ranges; may return fewer than `parts` ranges when `len < parts`.
+pub fn partition_even(len: usize, parts: usize) -> Vec<Range<usize>> {
+    if len == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Run `f(chunk_index, chunk)` over near-equal contiguous chunks of `data`,
+/// one OS thread per chunk (bounded by `threads`). Sequential fallback when
+/// `threads <= 1` or there is only one chunk.
+pub fn parallel_for_chunks<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ranges = partition_even(data.len(), threads.max(1));
+    if ranges.len() <= 1 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    // Carve the slice into disjoint &mut chunks up front, then hand one to
+    // each scoped thread. split_at_mut keeps this safe.
+    let mut chunks: Vec<&mut [T]> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut consumed = 0usize;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut(r.end - consumed);
+        consumed = r.end;
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (idx, chunk) in chunks.into_iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(idx, chunk));
+        }
+    });
+}
+
+/// Run `tasks` independent indexed jobs on up to `threads` worker threads and
+/// return their results in task order. Each worker owns a strided subset of
+/// task indices, so no queue synchronisation is needed.
+pub fn parallel_map<R, F>(tasks: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if tasks == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(tasks);
+    if threads == 1 {
+        return (0..tasks).map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..tasks).map(|_| None).collect();
+    {
+        // Distribute result slots to workers in the same strided pattern as
+        // the task indices, so each worker writes only its own slots.
+        let mut slot_refs: Vec<(usize, &mut Option<R>)> = slots.iter_mut().enumerate().collect();
+        let mut per_worker: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, slot) in slot_refs.drain(..) {
+            per_worker[i % threads].push((i, slot));
+        }
+        std::thread::scope(|scope| {
+            for worker_slots in per_worker {
+                let f = &f;
+                scope.spawn(move || {
+                    for (i, slot) in worker_slots {
+                        *slot = Some(f(i));
+                    }
+                });
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("task completed")).collect()
+}
+
+/// Process pairs `(a_chunk, b_chunk)` of two equally-partitioned mutable
+/// slices in parallel — used by merge passes that read one buffer and write
+/// the other with matching geometry.
+pub fn parallel_for_zip<T, U, F>(a: &mut [T], b: &mut [U], bounds: &[Range<usize>], f: F)
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "zip slices must match");
+    if bounds.is_empty() {
+        return;
+    }
+    if bounds.len() == 1 {
+        f(0, a, b);
+        return;
+    }
+    let mut pairs: Vec<(&mut [T], &mut [U])> = Vec::with_capacity(bounds.len());
+    let (mut ra, mut rb) = (a, b);
+    let mut consumed = 0usize;
+    for r in bounds {
+        let (ha, ta) = ra.split_at_mut(r.end - consumed);
+        let (hb, tb) = rb.split_at_mut(r.end - consumed);
+        consumed = r.end;
+        pairs.push((ha, hb));
+        ra = ta;
+        rb = tb;
+    }
+    std::thread::scope(|scope| {
+        for (idx, (ca, cb)) in pairs.into_iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || f(idx, ca, cb));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_even_covers_everything() {
+        for len in [0usize, 1, 7, 100, 101] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let rs = partition_even(len, parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len={len} parts={parts}");
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "contiguous");
+                }
+                for r in &rs {
+                    assert!(!r.is_empty(), "no empty ranges");
+                }
+                if !rs.is_empty() {
+                    let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                    let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                    assert!(mx - mn <= 1, "balanced: {sizes:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_chunks_touches_all() {
+        let mut data = vec![0u64; 10_000];
+        parallel_for_chunks(&mut data, 8, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx as u64 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x >= 1));
+        // Chunk 0 exists and later chunks too.
+        assert_eq!(data[0], 1);
+        assert!(*data.last().unwrap() >= 1);
+    }
+
+    #[test]
+    fn parallel_for_chunks_sequential_fallback() {
+        let mut data = vec![1i32; 5];
+        parallel_for_chunks(&mut data, 1, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert_eq!(data, vec![2; 5]);
+        let mut empty: Vec<i32> = vec![];
+        parallel_for_chunks(&mut empty, 4, |_, _| panic!("no chunks for empty data"));
+    }
+
+    #[test]
+    fn parallel_map_ordered_results() {
+        let out = parallel_map(100, 7, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_zero_tasks() {
+        let out: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_for_zip_matched_geometry() {
+        let mut a: Vec<u32> = (0..1000).collect();
+        let mut b = vec![0u32; 1000];
+        let bounds = partition_even(1000, 4);
+        parallel_for_zip(&mut a, &mut b, &bounds, |_, ca, cb| {
+            for (x, y) in ca.iter().zip(cb.iter_mut()) {
+                *y = *x * 2;
+            }
+        });
+        for i in 0..1000u32 {
+            assert_eq!(b[i as usize], i * 2);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Fitness evaluation: `f(x) = T_sort(x)` — wall-clock time to sort a
+//! representative sample with the candidate's parameters (paper §4.2).
+//!
+//! Details that matter for measurement quality:
+//! * the sample array is generated **once** per tuning run; every evaluation
+//!   sorts a fresh copy (the copy is outside the timed region);
+//! * evaluations are repeated `repeats` times and the **minimum** is taken
+//!   (minimum is the standard noise-robust estimator for cold-cache-free
+//!   timing; the paper's per-generation error bars motivate smoothing);
+//! * results are memoised by genome — elitism re-inserts identical genomes
+//!   every generation and re-timing them would both waste time and inject
+//!   noise into the convergence curves;
+//! * every evaluated output is validated (sortedness + multiset fingerprint)
+//!   so a buggy configuration can never win by "sorting" incorrectly — its
+//!   fitness becomes +inf instead.
+
+use std::collections::HashMap;
+
+use crate::data::validate::{fingerprint_i64, validate_i64, Fingerprint, Verdict};
+use crate::params::SortParams;
+use crate::sort::AdaptiveSorter;
+use crate::util::timer;
+
+use super::individual::Genome;
+
+/// Evaluates genomes by timing real sorts on a shared sample.
+pub struct SortTimingFitness {
+    sample: Vec<i64>,
+    sample_fp: Fingerprint,
+    sorter: AdaptiveSorter,
+    repeats: usize,
+    cache: HashMap<Genome, f64>,
+    evals: usize,
+    cache_hits: usize,
+    /// Reused buffers: candidate copy + radix scratch.
+    work: Vec<i64>,
+    scratch: Vec<i64>,
+}
+
+impl SortTimingFitness {
+    /// `sample` is the representative dataset (paper: a random array of the
+    /// target size, or a subsample for very large n).
+    pub fn new(sample: Vec<i64>, sorter: AdaptiveSorter, repeats: usize) -> Self {
+        let threads = sorter.threads();
+        let sample_fp = fingerprint_i64(&sample, threads);
+        let work = Vec::with_capacity(sample.len());
+        SortTimingFitness {
+            sample,
+            sample_fp,
+            sorter,
+            repeats: repeats.max(1),
+            cache: HashMap::new(),
+            evals: 0,
+            cache_hits: 0,
+            work,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.sample.len()
+    }
+
+    /// Total timed evaluations performed (cache misses).
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits
+    }
+
+    /// Evaluate a genome: minimum sort time over `repeats` runs, memoised.
+    pub fn eval(&mut self, genome: &Genome) -> f64 {
+        if let Some(&t) = self.cache.get(genome) {
+            self.cache_hits += 1;
+            return t;
+        }
+        let params = SortParams::from_genes(genome);
+        let mut best = f64::INFINITY;
+        for _ in 0..self.repeats {
+            self.work.clear();
+            self.work.extend_from_slice(&self.sample);
+            let (_, secs) = timer::time(|| {
+                self.sorter
+                    .sort_i64_with_scratch(&mut self.work, &params, &mut self.scratch)
+            });
+            // Correctness gate: invalid output disqualifies the candidate.
+            if validate_i64(self.sample_fp, &self.work, self.sorter.threads()) != Verdict::Valid {
+                crate::log_error!("candidate {params} produced invalid output");
+                best = f64::INFINITY;
+                break;
+            }
+            best = best.min(secs);
+        }
+        self.evals += 1;
+        self.cache.insert(*genome, best);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+    use crate::sort::AdaptiveSorter;
+
+    fn fitness_fixture(n: usize) -> SortTimingFitness {
+        let sample = generate_i64(n, Distribution::Uniform, 99, 2);
+        SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1)
+    }
+
+    #[test]
+    fn eval_returns_positive_time() {
+        let mut f = fitness_fixture(20_000);
+        let t = f.eval(&[3075, 31291, 4, 99574, 1418]);
+        assert!(t.is_finite() && t > 0.0);
+        assert_eq!(f.evals(), 1);
+    }
+
+    #[test]
+    fn cache_prevents_reevaluation() {
+        let mut f = fitness_fixture(10_000);
+        let g = [64i64, 4096, 3, 1000, 512];
+        let t1 = f.eval(&g);
+        let t2 = f.eval(&g);
+        assert_eq!(t1, t2, "cached value must be bit-identical");
+        assert_eq!(f.evals(), 1);
+        assert_eq!(f.cache_hits(), 1);
+    }
+
+    #[test]
+    fn different_genomes_timed_separately() {
+        let mut f = fitness_fixture(10_000);
+        f.eval(&[64, 4096, 3, 1000, 512]);
+        f.eval(&[64, 4096, 4, 1000, 512]);
+        assert_eq!(f.evals(), 2);
+    }
+
+    #[test]
+    fn sample_survives_evaluations() {
+        let mut f = fitness_fixture(5_000);
+        let before = f.sample.clone();
+        f.eval(&[100, 2048, 4, 500, 256]);
+        assert_eq!(f.sample, before, "sample must not be sorted in place");
+    }
+}

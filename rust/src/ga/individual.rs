@@ -1,0 +1,111 @@
+//! Genome representation and random initialisation.
+//!
+//! A candidate solution is the paper's 5-integer vector
+//! `x = (T_insertion, T_merge, A_code, T_numpy, T_tile)`. Threshold genes
+//! span several orders of magnitude, so random initialisation samples them
+//! **log-uniformly** — a uniform draw over [16, 1e5] would almost never
+//! propose values below 1e4, starving the search of small-threshold
+//! candidates (the paper's Generation-0 spread, e.g. 6.6 s → 0.24 s at 1e7,
+//! shows the initial population does explore both extremes).
+
+use crate::params::{Bounds, GeneRange};
+use crate::rng::Xoshiro256pp;
+
+/// The raw 5-gene chromosome (paper ordering).
+pub type Genome = [i64; 5];
+
+/// Sample one gene log-uniformly within its range (categorical genes, i.e.
+/// the algorithm code, are sampled uniformly).
+pub fn random_gene(range: GeneRange, categorical: bool, rng: &mut Xoshiro256pp) -> i64 {
+    if categorical || range.span() < 8 {
+        return range.lo + rng.next_below((range.span() + 1) as u64) as i64;
+    }
+    let lo = (range.lo.max(1)) as f64;
+    let hi = range.hi as f64;
+    let v = (lo.ln() + rng.next_f64() * (hi.ln() - lo.ln())).exp();
+    (v.round() as i64).clamp(range.lo, range.hi)
+}
+
+/// Sample a full random genome within `bounds`.
+pub fn random_genome(bounds: &Bounds, rng: &mut Xoshiro256pp) -> Genome {
+    [
+        random_gene(bounds.insertion, false, rng),
+        random_gene(bounds.parallel_merge, false, rng),
+        random_gene(bounds.algorithm, true, rng),
+        random_gene(bounds.fallback, false, rng),
+        random_gene(bounds.tile, false, rng),
+    ]
+}
+
+/// An evaluated individual.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Individual {
+    pub genome: Genome,
+    /// Sorting time in seconds (lower is better); `f64::INFINITY` before
+    /// evaluation.
+    pub fitness: f64,
+}
+
+impl Individual {
+    pub fn unevaluated(genome: Genome) -> Self {
+        Individual { genome, fitness: f64::INFINITY }
+    }
+
+    pub fn better_than(&self, other: &Individual) -> bool {
+        self.fitness < other.fitness
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_genome_within_bounds() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(1);
+        for _ in 0..1000 {
+            let g = random_genome(&bounds, &mut rng);
+            assert!(bounds.validate(&g), "{g:?}");
+        }
+    }
+
+    #[test]
+    fn log_uniform_reaches_both_extremes() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(2);
+        let (mut small, mut large) = (0, 0);
+        for _ in 0..2000 {
+            let g = random_gene(bounds.insertion, false, &mut rng);
+            if g < 200 {
+                small += 1;
+            }
+            if g > 20_000 {
+                large += 1;
+            }
+        }
+        assert!(small > 100, "log-uniform should visit small values ({small})");
+        assert!(large > 100, "and large values ({large})");
+    }
+
+    #[test]
+    fn categorical_gene_uniform() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(3);
+        let mut saw = std::collections::HashSet::new();
+        for _ in 0..200 {
+            saw.insert(random_gene(bounds.algorithm, true, &mut rng));
+        }
+        assert_eq!(saw, [3i64, 4].into_iter().collect());
+    }
+
+    #[test]
+    fn individual_comparison() {
+        let a = Individual { genome: [1; 5], fitness: 0.5 };
+        let b = Individual { genome: [2; 5], fitness: 0.7 };
+        assert!(a.better_than(&b));
+        assert!(!b.better_than(&a));
+        let u = Individual::unevaluated([0; 5]);
+        assert!(a.better_than(&u));
+    }
+}

@@ -1,0 +1,252 @@
+//! The GA auto-tuner — `RunGATuning` of Algorithm 2.
+//!
+//! Evolves a population of [`SortParams`](crate::params::SortParams) genomes
+//! to minimise measured sorting time. Defaults mirror the paper: population
+//! 30, ~10 generations, uniform recombination with probability 0.7, uniform
+//! mutation with probability 0.3, elitism.
+
+pub mod fitness;
+pub mod individual;
+pub mod operators;
+pub mod stats;
+
+pub use fitness::SortTimingFitness;
+pub use individual::{Genome, Individual};
+pub use stats::{Convergence, GenStats};
+
+use crate::data::{self, Distribution};
+use crate::params::{Bounds, SortParams};
+use crate::rng::Xoshiro256pp;
+use crate::sort::AdaptiveSorter;
+
+/// GA hyper-parameters (paper §6 defaults).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub elitism: usize,
+    pub tournament_k: usize,
+    pub bounds: Bounds,
+    pub seed: u64,
+    /// Timed repeats per fitness evaluation (min is taken).
+    pub repeats: usize,
+    /// Stop early once converged (patience in generations); `None` always
+    /// runs the full budget, like the paper's fixed 10-generation plots.
+    pub early_stop_patience: Option<usize>,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 30,
+            generations: 10,
+            crossover_prob: 0.7,
+            mutation_prob: 0.3,
+            elitism: 2,
+            tournament_k: 3,
+            bounds: Bounds::default(),
+            seed: 0xE50_50E7,
+            repeats: 1,
+            early_stop_patience: None,
+        }
+    }
+}
+
+impl GaConfig {
+    /// A fast configuration for tests and quick tuning runs.
+    pub fn quick() -> Self {
+        GaConfig { population: 8, generations: 4, ..Default::default() }
+    }
+}
+
+/// Outcome of one tuning run.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best: SortParams,
+    pub best_genome: Genome,
+    pub best_fitness: f64,
+    /// Per-generation best/worst/average — the Figures 2–6 series. Index 0
+    /// is the initial population ("Generation 0" in the paper).
+    pub history: Vec<GenStats>,
+    /// Timed evaluations performed (cache misses).
+    pub evaluations: usize,
+    /// Whether the early-stop criterion fired before the budget ran out.
+    pub converged_early: bool,
+}
+
+/// The GA driver (Algorithm 2).
+pub struct GaDriver {
+    pub config: GaConfig,
+}
+
+impl GaDriver {
+    pub fn new(config: GaConfig) -> Self {
+        GaDriver { config }
+    }
+
+    /// Tune for dataset size `n` (Algorithm 2): generate a sample of size
+    /// `n.min(sample_cap)`, evolve, return the best parameter set.
+    pub fn run_for_size(
+        &self,
+        n: usize,
+        sample_cap: usize,
+        dist: Distribution,
+        sorter: AdaptiveSorter,
+    ) -> GaResult {
+        let threads = sorter.threads();
+        let sample_n = n.min(sample_cap.max(1024));
+        let sample = data::generate_i64(sample_n, dist, self.config.seed ^ 0xDA7A, threads);
+        let fitness = SortTimingFitness::new(sample, sorter, self.config.repeats);
+        self.run(fitness)
+    }
+
+    /// Evolve against a prepared fitness function.
+    pub fn run(&self, mut fitness: SortTimingFitness) -> GaResult {
+        let cfg = &self.config;
+        assert!(cfg.population >= 2, "population must be at least 2");
+        let mut rng = Xoshiro256pp::seeded(cfg.seed);
+
+        // Generation 0: random initialisation (log-uniform thresholds).
+        let mut pop: Vec<Individual> = (0..cfg.population)
+            .map(|_| Individual::unevaluated(individual::random_genome(&cfg.bounds, &mut rng)))
+            .collect();
+        for ind in &mut pop {
+            ind.fitness = fitness.eval(&ind.genome);
+        }
+
+        let mut history = vec![GenStats::of(0, &pop)];
+        crate::log_debug!("{}", history[0].row());
+        let mut convergence = cfg.early_stop_patience.map(|p| Convergence::new(p, 0.01));
+        let mut converged_early = false;
+
+        for g in 1..=cfg.generations {
+            // Elitism: carry the best through unchanged.
+            let elite: Vec<Individual> = operators::elite_indices(&pop, cfg.elitism)
+                .into_iter()
+                .map(|i| pop[i])
+                .collect();
+
+            // Offspring via tournament selection + uniform crossover +
+            // uniform mutation.
+            let mut next: Vec<Individual> = elite.clone();
+            while next.len() < cfg.population {
+                let pa = operators::tournament(&pop, cfg.tournament_k, &mut rng).genome;
+                let pb = operators::tournament(&pop, cfg.tournament_k, &mut rng).genome;
+                let (mut ca, mut cb) =
+                    operators::uniform_crossover(&pa, &pb, cfg.crossover_prob, &mut rng);
+                operators::uniform_mutation(&mut ca, &cfg.bounds, cfg.mutation_prob, &mut rng);
+                operators::uniform_mutation(&mut cb, &cfg.bounds, cfg.mutation_prob, &mut rng);
+                next.push(Individual::unevaluated(ca));
+                if next.len() < cfg.population {
+                    next.push(Individual::unevaluated(cb));
+                }
+            }
+
+            for ind in &mut next {
+                if ind.fitness.is_infinite() {
+                    ind.fitness = fitness.eval(&ind.genome);
+                }
+            }
+            pop = next;
+            let gs = GenStats::of(g, &pop);
+            crate::log_debug!("{}", gs.row());
+            history.push(gs);
+
+            if let Some(c) = convergence.as_mut() {
+                if c.update(history.last().unwrap().best) {
+                    converged_early = true;
+                    break;
+                }
+            }
+        }
+
+        // Best individual across the entire run (elitism makes this the last
+        // generation's best, but be defensive).
+        let best_stats = history
+            .iter()
+            .min_by(|a, b| a.best.partial_cmp(&b.best).unwrap())
+            .unwrap();
+        GaResult {
+            best: SortParams::from_genes(&best_stats.best_genome),
+            best_genome: best_stats.best_genome,
+            best_fitness: best_stats.best,
+            history,
+            evaluations: fitness.evals(),
+            converged_early,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generate_i64;
+
+    fn quick_result(n: usize) -> GaResult {
+        let sample = generate_i64(n, Distribution::Uniform, 7, 2);
+        let fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1);
+        GaDriver::new(GaConfig { seed: 11, ..GaConfig::quick() }).run(fitness)
+    }
+
+    #[test]
+    fn ga_runs_and_never_regresses() {
+        let r = quick_result(30_000);
+        assert_eq!(r.history.len(), 5); // gen 0 + 4
+        assert!(r.best_fitness.is_finite() && r.best_fitness > 0.0);
+        // Elitism + fitness memoisation guarantee monotone best.
+        for w in r.history.windows(2) {
+            assert!(
+                w[1].best <= w[0].best + 1e-9,
+                "best must not regress: {} -> {}",
+                w[0].best,
+                w[1].best
+            );
+        }
+        assert!(Bounds::default().validate(&r.best_genome));
+    }
+
+    #[test]
+    fn population_initialisation_is_seed_deterministic() {
+        let cfg = GaConfig { seed: 13, ..GaConfig::quick() };
+        let mut rng1 = Xoshiro256pp::seeded(cfg.seed);
+        let mut rng2 = Xoshiro256pp::seeded(cfg.seed);
+        let g1 = individual::random_genome(&cfg.bounds, &mut rng1);
+        let g2 = individual::random_genome(&cfg.bounds, &mut rng2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn early_stop_bounded() {
+        let sample = generate_i64(5_000, Distribution::Uniform, 7, 2);
+        let fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1);
+        let cfg = GaConfig {
+            population: 6,
+            generations: 30,
+            early_stop_patience: Some(2),
+            seed: 17,
+            ..Default::default()
+        };
+        let r = GaDriver::new(cfg).run(fitness);
+        assert!(r.history.len() <= 31);
+        assert!(r.converged_early || r.history.len() == 31);
+    }
+
+    #[test]
+    fn run_for_size_caps_sample() {
+        let driver = GaDriver::new(GaConfig { seed: 19, ..GaConfig::quick() });
+        let r =
+            driver.run_for_size(1_000_000, 20_000, Distribution::Uniform, AdaptiveSorter::new(2));
+        assert!(r.best_fitness.is_finite());
+    }
+
+    #[test]
+    fn evaluations_bounded_by_budget() {
+        let r = quick_result(5_000);
+        // At most population × (generations + 1) timed evals (memoisation
+        // may reduce it).
+        assert!(r.evaluations <= 8 * 5, "evals = {}", r.evaluations);
+        assert!(r.evaluations >= 8, "gen-0 must be fully evaluated");
+    }
+}

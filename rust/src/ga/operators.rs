@@ -1,0 +1,192 @@
+//! GA variation and selection operators (paper §6: uniform recombination
+//! with probability 0.7, uniform mutation with probability 0.3, elitism,
+//! plus tournament selection — the standard companion to both).
+
+use super::individual::{random_gene, Genome, Individual};
+use crate::params::Bounds;
+use crate::rng::Xoshiro256pp;
+
+/// Tournament selection: draw `k` members uniformly, return the fittest.
+pub fn tournament<'a>(
+    pop: &'a [Individual],
+    k: usize,
+    rng: &mut Xoshiro256pp,
+) -> &'a Individual {
+    debug_assert!(!pop.is_empty());
+    let mut best = &pop[rng.below(pop.len())];
+    for _ in 1..k.max(1) {
+        let cand = &pop[rng.below(pop.len())];
+        if cand.better_than(best) {
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Uniform crossover: with probability `p_crossover` the parents exchange
+/// genes (each gene independently picks a parent, p = 0.5); otherwise the
+/// children are clones.
+pub fn uniform_crossover(
+    a: &Genome,
+    b: &Genome,
+    p_crossover: f64,
+    rng: &mut Xoshiro256pp,
+) -> (Genome, Genome) {
+    if rng.next_f64() >= p_crossover {
+        return (*a, *b);
+    }
+    let mut c = *a;
+    let mut d = *b;
+    for i in 0..a.len() {
+        if rng.next_f64() < 0.5 {
+            c[i] = b[i];
+            d[i] = a[i];
+        }
+    }
+    (c, d)
+}
+
+/// Uniform mutation: with probability `p_mutation` per *individual*, each
+/// gene independently mutates with probability 1/len. Threshold genes take a
+/// fresh log-uniform draw half the time and a relative ±50% perturbation the
+/// other half (local refinement — the paper's "exploring slight parameter
+/// variations" in later generations); the categorical gene resamples.
+pub fn uniform_mutation(
+    g: &mut Genome,
+    bounds: &Bounds,
+    p_mutation: f64,
+    rng: &mut Xoshiro256pp,
+) {
+    if rng.next_f64() >= p_mutation {
+        return;
+    }
+    let per_gene = 1.0 / g.len() as f64;
+    let mut mutated_any = false;
+    for i in 0..g.len() {
+        if rng.next_f64() < per_gene {
+            mutate_gene(g, i, bounds, rng);
+            mutated_any = true;
+        }
+    }
+    if !mutated_any {
+        // Guarantee at least one change once mutation triggered.
+        let i = rng.below(g.len());
+        mutate_gene(g, i, bounds, rng);
+    }
+}
+
+fn mutate_gene(g: &mut Genome, i: usize, bounds: &Bounds, rng: &mut Xoshiro256pp) {
+    let range = bounds.gene(i);
+    let categorical = i == 2;
+    if categorical || rng.next_f64() < 0.5 {
+        g[i] = random_gene(range, categorical, rng);
+    } else {
+        // Relative perturbation in [0.5x, 1.5x].
+        let factor = 0.5 + rng.next_f64();
+        let v = (g[i] as f64 * factor).round() as i64;
+        g[i] = v.clamp(range.lo, range.hi);
+    }
+}
+
+/// Elitism: indices of the `e` fittest individuals (stable order).
+pub fn elite_indices(pop: &[Individual], e: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..pop.len()).collect();
+    idx.sort_by(|&a, &b| {
+        pop[a]
+            .fitness
+            .partial_cmp(&pop[b].fitness)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(e);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pop_with(fitnesses: &[f64]) -> Vec<Individual> {
+        fitnesses
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| Individual { genome: [i as i64; 5], fitness: f })
+            .collect()
+    }
+
+    #[test]
+    fn tournament_prefers_fit() {
+        let pop = pop_with(&[5.0, 1.0, 3.0, 0.2, 4.0]);
+        let mut rng = Xoshiro256pp::seeded(5);
+        // With k = population size the winner is almost always the global best.
+        let mut best_wins = 0;
+        for _ in 0..200 {
+            if tournament(&pop, 16, &mut rng).genome == [3; 5] {
+                best_wins += 1;
+            }
+        }
+        assert!(best_wins > 190, "{best_wins}");
+    }
+
+    #[test]
+    fn crossover_preserves_gene_pool() {
+        let a = [1i64, 2, 3, 4, 5];
+        let b = [10i64, 20, 4, 40, 50];
+        let mut rng = Xoshiro256pp::seeded(6);
+        for _ in 0..100 {
+            let (c, d) = uniform_crossover(&a, &b, 1.0, &mut rng);
+            for i in 0..5 {
+                // Each child gene comes from one of the parents, and the pair
+                // (c[i], d[i]) is a permutation of (a[i], b[i]).
+                assert!(
+                    (c[i] == a[i] && d[i] == b[i]) || (c[i] == b[i] && d[i] == a[i]),
+                    "gene {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_prob_zero_clones() {
+        let a = [1i64, 2, 3, 4, 5];
+        let b = [9i64, 8, 4, 6, 5];
+        let mut rng = Xoshiro256pp::seeded(7);
+        let (c, d) = uniform_crossover(&a, &b, 0.0, &mut rng);
+        assert_eq!(c, a);
+        assert_eq!(d, b);
+    }
+
+    #[test]
+    fn mutation_respects_bounds_and_changes() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(8);
+        let mut changed = 0;
+        for _ in 0..300 {
+            let mut g = [3075i64, 31291, 4, 99574, 1418];
+            uniform_mutation(&mut g, &bounds, 1.0, &mut rng);
+            assert!(bounds.validate(&g), "{g:?}");
+            if g != [3075, 31291, 4, 99574, 1418] {
+                changed += 1;
+            }
+        }
+        // A mutation attempt can re-draw the same value (relative factor
+        // rounding to 1.0, or the categorical gene resampling itself), so
+        // require "nearly always changes" rather than strict equality.
+        assert!(changed >= 280, "p=1.0 should nearly always change a gene ({changed}/300)");
+    }
+
+    #[test]
+    fn mutation_prob_zero_is_identity() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(9);
+        let mut g = [100i64, 2000, 3, 5000, 700];
+        uniform_mutation(&mut g, &bounds, 0.0, &mut rng);
+        assert_eq!(g, [100, 2000, 3, 5000, 700]);
+    }
+
+    #[test]
+    fn elites_are_fittest() {
+        let pop = pop_with(&[5.0, 1.0, 3.0, 0.2, 4.0]);
+        assert_eq!(elite_indices(&pop, 2), vec![3, 1]);
+        assert_eq!(elite_indices(&pop, 0), Vec::<usize>::new());
+    }
+}

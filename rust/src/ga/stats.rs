@@ -1,0 +1,140 @@
+//! Per-generation statistics — the data behind the paper's Figures 2–6
+//! (best / worst / average execution time per GA generation).
+
+use super::individual::{Genome, Individual};
+
+/// One generation's snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenStats {
+    pub generation: usize,
+    pub best: f64,
+    pub worst: f64,
+    pub average: f64,
+    pub best_genome: Genome,
+}
+
+impl GenStats {
+    /// Summarise an evaluated population. Individuals disqualified with +inf
+    /// fitness are excluded from the average but counted in `worst` via the
+    /// worst *finite* value (the paper's plots are finite).
+    pub fn of(generation: usize, pop: &[Individual]) -> GenStats {
+        let finite: Vec<&Individual> = pop.iter().filter(|i| i.fitness.is_finite()).collect();
+        assert!(!finite.is_empty(), "population has no valid individuals");
+        let mut best = finite[0];
+        let mut worst = finite[0];
+        let mut sum = 0.0;
+        for ind in &finite {
+            if ind.better_than(best) {
+                best = ind;
+            }
+            if ind.fitness > worst.fitness {
+                worst = ind;
+            }
+            sum += ind.fitness;
+        }
+        GenStats {
+            generation,
+            best: best.fitness,
+            worst: worst.fitness,
+            average: sum / finite.len() as f64,
+            best_genome: best.genome,
+        }
+    }
+
+    /// Render one line of the convergence table (Figures 2–6 data series).
+    pub fn row(&self) -> String {
+        format!(
+            "gen {:>2}  best {:>9.4}s  avg {:>9.4}s  worst {:>9.4}s  best_genome {:?}",
+            self.generation, self.best, self.average, self.worst, self.best_genome
+        )
+    }
+}
+
+/// Convergence detector: the paper observes convergence "in 10 to 12
+/// generations", evidenced by the best value stalling. We call the search
+/// converged after `patience` generations without relative improvement
+/// better than `rel_tol`.
+#[derive(Debug, Clone)]
+pub struct Convergence {
+    best_so_far: f64,
+    stall: usize,
+    patience: usize,
+    rel_tol: f64,
+}
+
+impl Convergence {
+    pub fn new(patience: usize, rel_tol: f64) -> Self {
+        Convergence { best_so_far: f64::INFINITY, stall: 0, patience, rel_tol }
+    }
+
+    /// Feed a generation's best; returns `true` once converged.
+    pub fn update(&mut self, best: f64) -> bool {
+        if best < self.best_so_far * (1.0 - self.rel_tol) {
+            self.best_so_far = best;
+            self.stall = 0;
+        } else {
+            self.best_so_far = self.best_so_far.min(best);
+            self.stall += 1;
+        }
+        self.stall >= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best_so_far
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ind(f: f64) -> Individual {
+        Individual { genome: [0; 5], fitness: f }
+    }
+
+    #[test]
+    fn stats_basic() {
+        let pop = vec![ind(2.0), ind(1.0), ind(3.0)];
+        let s = GenStats::of(7, &pop);
+        assert_eq!(s.generation, 7);
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.worst, 3.0);
+        assert!((s.average - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_ignore_invalid() {
+        let pop = vec![ind(2.0), ind(f64::INFINITY), ind(4.0)];
+        let s = GenStats::of(0, &pop);
+        assert_eq!(s.best, 2.0);
+        assert_eq!(s.worst, 4.0);
+        assert!((s.average - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "no valid individuals")]
+    fn stats_all_invalid_panics() {
+        GenStats::of(0, &[ind(f64::INFINITY)]);
+    }
+
+    #[test]
+    fn convergence_detects_stall() {
+        let mut c = Convergence::new(3, 0.01);
+        assert!(!c.update(10.0));
+        assert!(!c.update(5.0)); // improving
+        assert!(!c.update(5.0)); // stall 1
+        assert!(!c.update(4.99)); // < 1% improvement: stall 2
+        assert!(c.update(5.01)); // stall 3 -> converged
+        assert_eq!(c.best(), 4.99);
+    }
+
+    #[test]
+    fn convergence_resets_on_improvement() {
+        let mut c = Convergence::new(2, 0.01);
+        c.update(10.0);
+        c.update(10.0); // stall 1
+        assert!(!c.update(8.0)); // big improvement resets
+        c.update(8.0);
+        assert!(c.update(8.0));
+    }
+}

@@ -1,0 +1,49 @@
+//! # EvoSort
+//!
+//! A reproduction of *"EvoSort: A Genetic-Algorithm-Based Adaptive Parallel
+//! Sorting Framework for Large-Scale High Performance Computing"* (Raj & Deb,
+//! 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Rust (this crate)** — the adaptive sorting framework: refined parallel
+//!   mergesort, block-based LSD radix sort, the GA auto-tuner, the
+//!   symbolic-regression performance model, and the coordination layer
+//!   (sort service, tuning cache, master pipeline, CLI, benches).
+//! * **JAX / Pallas (build time)** — the bitonic tile-sort and radix
+//!   histogram kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **PJRT runtime bridge** — [`runtime`] loads those artifacts and exposes
+//!   them as a [`sort::TileSorter`] backend selectable by the adaptive
+//!   dispatcher (`A_code = 5`).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use evosort::prelude::*;
+//!
+//! let mut data = evosort::data::generate_i64(1_000_000, Distribution::Uniform, 42, 8);
+//! let sorter = AdaptiveSorter::new(8);
+//! let params = SortParams::paper_1e7(); // or GaDriver::run(...) to tune
+//! sorter.sort_i64(&mut data, &params);
+//! assert!(data.windows(2).all(|w| w[0] <= w[1]));
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod ga;
+pub mod params;
+pub mod rng;
+pub mod runtime;
+pub mod sort;
+pub mod symbolic;
+pub mod testkit;
+pub mod util;
+
+/// Common imports for library users.
+pub mod prelude {
+    pub use crate::data::Distribution;
+    pub use crate::params::{ACode, Bounds, SortParams};
+    pub use crate::sort::{AdaptiveSorter, Baseline, MergeTuning};
+}

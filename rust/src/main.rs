@@ -1,0 +1,36 @@
+//! EvoSort launcher: `evosort <command> [flags]` (see `cli::USAGE`).
+
+use evosort::cli::{commands, Args, USAGE};
+
+fn main() {
+    evosort::util::logging::init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "sort" => commands::cmd_sort(&args),
+        "tune" => commands::cmd_tune(&args),
+        "pipeline" => commands::cmd_pipeline(&args),
+        "symbolic" => commands::cmd_symbolic(&args),
+        "repro" => commands::cmd_repro(&args),
+        "serve" => commands::cmd_serve(&args),
+        "info" => commands::cmd_info(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,291 @@
+//! The EvoSort parameter vector (the GA genome) and its bounds.
+//!
+//! The paper's candidate solution is
+//! `x = (T_insertion, T_merge, A_code, T_numpy, T_tile)` (§3.2, §4.2). We keep
+//! the exact encoding — five integers — with `A_code` interpreted as the
+//! algorithm selector (3 = refined parallel mergesort, 4 = block-based LSD
+//! radix sort, both per Algorithm 6; 5 = the XLA tile-sort backend this
+//! reproduction adds as a first-class strategy).
+
+use std::fmt;
+
+/// Algorithm selector (the paper's `merge_algorithm` / `A_code`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ACode {
+    /// Refined parallel mergesort (code 3).
+    Merge,
+    /// Block-based LSD radix sort (code 4) — integer dtypes only.
+    Radix,
+    /// XLA tile-sort backend: Pallas bitonic tiles + rust merge (code 5).
+    XlaTile,
+    /// Parallel samplesort (code 6) — the related-work comparison strategy
+    /// (Sanders & Winkel), available as an extension beyond the paper.
+    Sample,
+}
+
+impl ACode {
+    pub fn code(self) -> i64 {
+        match self {
+            ACode::Merge => 3,
+            ACode::Radix => 4,
+            ACode::XlaTile => 5,
+            ACode::Sample => 6,
+        }
+    }
+
+    pub fn from_code(c: i64) -> ACode {
+        match c {
+            4 => ACode::Radix,
+            5 => ACode::XlaTile,
+            6 => ACode::Sample,
+            _ => ACode::Merge, // the paper: "For other cases ... mergesort"
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ACode::Merge => "merge",
+            ACode::Radix => "radix",
+            ACode::XlaTile => "xla-tile",
+            ACode::Sample => "samplesort",
+        }
+    }
+}
+
+/// The five-gene EvoSort configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SortParams {
+    /// `T_insertion` — base chunk size handled by insertion sort.
+    pub insertion_threshold: usize,
+    /// `T_merge` — output size beyond which one merge is split across threads.
+    pub parallel_merge_threshold: usize,
+    /// `A_code` — algorithm selector for large arrays.
+    pub algorithm: ACode,
+    /// `T_numpy` — below this size, fall back to the tuned library routine
+    /// (rust `sort_unstable`, the `np.sort` analog).
+    pub fallback_threshold: usize,
+    /// `T_tile` — cache tile for blocked merging / histogram staging.
+    pub tile: usize,
+}
+
+impl Default for SortParams {
+    /// Untuned defaults — intentionally mediocre; the GA's job is to beat
+    /// them (the ablation bench quantifies by how much).
+    fn default() -> Self {
+        SortParams {
+            insertion_threshold: 64,
+            parallel_merge_threshold: 1 << 20,
+            algorithm: ACode::Merge,
+            fallback_threshold: 4096,
+            tile: 1024,
+        }
+    }
+}
+
+impl SortParams {
+    /// The paper's §6.2 best individual for 1e7: [3075, 31291, 4, 99574, 1418].
+    pub fn paper_1e7() -> Self {
+        SortParams::from_genes(&[3075, 31291, 4, 99574, 1418])
+    }
+
+    /// §6.3 best for 1e8: [4074, 20251, 4, 92531, 7649].
+    pub fn paper_1e8() -> Self {
+        SortParams::from_genes(&[4074, 20251, 4, 92531, 7649])
+    }
+
+    /// §6.4 best for 5e8: [1148, 1424, 4, 67698, 22136].
+    pub fn paper_5e8() -> Self {
+        SortParams::from_genes(&[1148, 1424, 4, 67698, 22136])
+    }
+
+    /// §6.5 best for 1e9: [2514, 24721, 4, 50840, 2020].
+    pub fn paper_1e9() -> Self {
+        SortParams::from_genes(&[2514, 24721, 4, 50840, 2020])
+    }
+
+    /// §6.6 best for 1e10: [2670, 12456, 4, 77432, 845].
+    pub fn paper_1e10() -> Self {
+        SortParams::from_genes(&[2670, 12456, 4, 77432, 845])
+    }
+
+    /// Decode from the paper's 5-integer genome ordering.
+    pub fn from_genes(g: &[i64; 5]) -> Self {
+        let b = Bounds::default();
+        SortParams {
+            insertion_threshold: b.insertion.clamp_val(g[0]),
+            parallel_merge_threshold: b.parallel_merge.clamp_val(g[1]),
+            algorithm: ACode::from_code(g[2]),
+            fallback_threshold: b.fallback.clamp_val(g[3]),
+            tile: b.tile.clamp_val(g[4]),
+        }
+    }
+
+    /// Encode to the genome ordering.
+    pub fn to_genes(&self) -> [i64; 5] {
+        [
+            self.insertion_threshold as i64,
+            self.parallel_merge_threshold as i64,
+            self.algorithm.code(),
+            self.fallback_threshold as i64,
+            self.tile as i64,
+        ]
+    }
+}
+
+impl fmt::Display for SortParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let g = self.to_genes();
+        write!(
+            f,
+            "[{}, {}, {} ({}), {}, {}]",
+            g[0],
+            g[1],
+            g[2],
+            self.algorithm.name(),
+            g[3],
+            g[4]
+        )
+    }
+}
+
+/// Inclusive integer range for one gene.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GeneRange {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl GeneRange {
+    pub fn new(lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi);
+        GeneRange { lo, hi }
+    }
+
+    pub fn clamp_val(&self, v: i64) -> usize {
+        v.clamp(self.lo, self.hi) as usize
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        (self.lo..=self.hi).contains(&v)
+    }
+
+    pub fn span(&self) -> i64 {
+        self.hi - self.lo
+    }
+}
+
+/// Search-space bounds for the genome, matching the magnitudes the paper's
+/// GA explores (§6: insertion thresholds in the thousands, merge/fallback
+/// thresholds in the tens of thousands, tiles from hundreds to tens of
+/// thousands).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bounds {
+    pub insertion: GeneRange,
+    pub parallel_merge: GeneRange,
+    pub algorithm: GeneRange,
+    pub fallback: GeneRange,
+    pub tile: GeneRange,
+}
+
+impl Default for Bounds {
+    fn default() -> Self {
+        Bounds {
+            insertion: GeneRange::new(16, 100_000),
+            parallel_merge: GeneRange::new(1_024, 10_000_000),
+            algorithm: GeneRange::new(3, 4),
+            fallback: GeneRange::new(256, 1_000_000),
+            tile: GeneRange::new(64, 100_000),
+        }
+    }
+}
+
+impl Bounds {
+    /// Bounds that also let the GA choose the XLA tile backend.
+    pub fn with_xla() -> Self {
+        Bounds { algorithm: GeneRange::new(3, 5), ..Bounds::default() }
+    }
+
+    /// Bounds including every strategy (merge, radix, xla, samplesort).
+    pub fn with_all_strategies() -> Self {
+        Bounds { algorithm: GeneRange::new(3, 6), ..Bounds::default() }
+    }
+
+    pub fn gene(&self, i: usize) -> GeneRange {
+        match i {
+            0 => self.insertion,
+            1 => self.parallel_merge,
+            2 => self.algorithm,
+            3 => self.fallback,
+            4 => self.tile,
+            _ => panic!("gene index {i} out of range"),
+        }
+    }
+
+    /// Validate a genome against the bounds.
+    pub fn validate(&self, g: &[i64; 5]) -> bool {
+        (0..5).all(|i| self.gene(i).contains(g[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acode_roundtrip() {
+        assert_eq!(ACode::from_code(3), ACode::Merge);
+        assert_eq!(ACode::from_code(4), ACode::Radix);
+        assert_eq!(ACode::from_code(5), ACode::XlaTile);
+        assert_eq!(ACode::from_code(0), ACode::Merge); // "other cases"
+        for a in [ACode::Merge, ACode::Radix, ACode::XlaTile] {
+            assert_eq!(ACode::from_code(a.code()), a);
+        }
+    }
+
+    #[test]
+    fn genome_roundtrip_paper_values() {
+        let p = SortParams::paper_1e7();
+        assert_eq!(p.to_genes(), [3075, 31291, 4, 99574, 1418]);
+        assert_eq!(p.algorithm, ACode::Radix);
+        let q = SortParams::from_genes(&p.to_genes());
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_genes_clamps() {
+        let p = SortParams::from_genes(&[-5, 0, 4, 999_999_999, 1]);
+        let b = Bounds::default();
+        assert_eq!(p.insertion_threshold as i64, b.insertion.lo);
+        assert_eq!(p.parallel_merge_threshold as i64, b.parallel_merge.lo);
+        assert_eq!(p.fallback_threshold as i64, b.fallback.hi);
+        assert_eq!(p.tile as i64, b.tile.lo);
+    }
+
+    #[test]
+    fn bounds_validate() {
+        let b = Bounds::default();
+        assert!(b.validate(&[3075, 31291, 4, 99574, 1418]));
+        assert!(!b.validate(&[3075, 31291, 5, 99574, 1418]), "xla needs with_xla()");
+        assert!(Bounds::with_xla().validate(&[3075, 31291, 5, 99574, 1418]));
+        assert!(!b.validate(&[0, 31291, 4, 99574, 1418]));
+    }
+
+    #[test]
+    fn display_matches_paper_format() {
+        let s = format!("{}", SortParams::paper_1e8());
+        assert!(s.contains("4074") && s.contains("radix"), "{s}");
+    }
+
+    #[test]
+    fn all_paper_configs_pick_radix() {
+        for p in [
+            SortParams::paper_1e7(),
+            SortParams::paper_1e8(),
+            SortParams::paper_5e8(),
+            SortParams::paper_1e9(),
+            SortParams::paper_1e10(),
+        ] {
+            assert_eq!(p.algorithm, ACode::Radix);
+        }
+    }
+}

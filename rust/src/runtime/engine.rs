@@ -1,0 +1,116 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many times.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). The engine is **not**
+//! `Send`/`Sync` — the crate's types are raw-pointer wrappers — so it lives
+//! on a dedicated worker thread (see [`super::xla_sort`]) and everything
+//! crossing threads is plain `Vec<i32>`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::Manifest;
+
+/// A compiled artifact plus its shape metadata.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub tile: usize,
+}
+
+/// The PJRT CPU engine: one client, one compiled executable per artifact.
+pub struct PjRtEngine {
+    client: xla::PjRtClient,
+    kernels: HashMap<String, CompiledKernel>,
+}
+
+impl PjRtEngine {
+    /// Create a CPU client and compile every artifact in the manifest.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        crate::log_info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut kernels = HashMap::new();
+        for entry in &manifest.entries {
+            let compiled = Self::compile_file(&client, &entry.path)
+                .with_context(|| format!("compiling {}", entry.path.display()))?;
+            kernels.insert(
+                entry.kind.clone(),
+                CompiledKernel { exe: compiled, batch: entry.batch, tile: entry.tile },
+            );
+            crate::log_info!("compiled artifact '{}' (batch={} tile={})", entry.kind, entry.batch, entry.tile);
+        }
+        Ok(PjRtEngine { client, kernels })
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn kernel(&self, kind: &str) -> Option<&CompiledKernel> {
+        self.kernels.get(kind)
+    }
+
+    /// Execute the tile-sort artifact on one (batch × tile) i32 buffer,
+    /// returning the row-sorted buffer.
+    pub fn run_tile_sort(&self, input: &[i32]) -> Result<Vec<i32>> {
+        let k = self.kernel("tile_sort").ok_or_else(|| anyhow!("tile_sort artifact missing"))?;
+        anyhow::ensure!(
+            input.len() == k.batch * k.tile,
+            "tile_sort expects {}x{} = {} elements, got {}",
+            k.batch,
+            k.tile,
+            k.batch * k.tile,
+            input.len()
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[k.batch as i64, k.tile as i64])
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        // Lowered with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Execute the radix-histogram artifact: (batch × tile) i32 + shift →
+    /// batch × 256 counts.
+    pub fn run_radix_hist(&self, input: &[i32], shift: i32) -> Result<Vec<i32>> {
+        let k = self.kernel("radix_hist").ok_or_else(|| anyhow!("radix_hist artifact missing"))?;
+        anyhow::ensure!(
+            input.len() == k.batch * k.tile,
+            "radix_hist expects {} elements, got {}",
+            k.batch * k.tile,
+            input.len()
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[k.batch as i64, k.tile as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let shift_lit = xla::Literal::vec1(&[shift]);
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&[lit, shift_lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime bridge (Layer-1/2 ↔ Layer-3 seam).
+//!
+//! `make artifacts` lowers the JAX/Pallas graphs to HLO text once; this
+//! module loads them (`artifacts`), compiles them on the PJRT CPU client
+//! (`engine`), and exposes a thread-safe [`XlaTileSorter`] backend
+//! (`xla_sort`) the adaptive dispatcher can select with `A_code = 5`.
+//! Python never runs at request time.
+
+pub mod artifacts;
+pub mod engine;
+pub mod xla_sort;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use engine::PjRtEngine;
+pub use xla_sort::XlaTileSorter;

@@ -1,0 +1,146 @@
+//! The XLA tile-sort backend: a `Send + Sync` front over the (thread-pinned)
+//! PJRT engine.
+//!
+//! The `xla` crate's client/executable types are raw-pointer wrappers and
+//! cannot cross threads, so a dedicated worker thread owns the
+//! [`PjRtEngine`](super::engine::PjRtEngine) and serves requests over an
+//! mpsc channel. This also serialises access to the CPU PJRT client, which
+//! is the correct discipline for a shared accelerator queue.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Manifest;
+use super::engine::PjRtEngine;
+use crate::sort::TileSorter;
+
+enum Request {
+    SortTiles { data: Vec<i32>, reply: mpsc::Sender<Result<Vec<i32>>> },
+    Histogram { data: Vec<i32>, shift: i32, reply: mpsc::Sender<Result<Vec<i32>>> },
+    Shutdown,
+}
+
+/// Channel-fronted PJRT tile sorter (implements [`TileSorter`]).
+pub struct XlaTileSorter {
+    tx: Mutex<mpsc::Sender<Request>>,
+    batch: usize,
+    tile: usize,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaTileSorter {
+    /// Spin up the worker thread, load + compile artifacts from `manifest`.
+    /// Fails fast (before returning) if compilation fails.
+    pub fn new(manifest: &Manifest) -> Result<Self> {
+        let entry = manifest
+            .find("tile_sort")
+            .ok_or_else(|| anyhow!("manifest has no tile_sort artifact"))?;
+        let (batch, tile) = (entry.batch, entry.tile);
+        let manifest = manifest.clone();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("evosort-pjrt".into())
+            .spawn(move || {
+                let engine = match PjRtEngine::from_manifest(&manifest) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::SortTiles { data, reply } => {
+                            let _ = reply.send(engine.run_tile_sort(&data));
+                        }
+                        Request::Histogram { data, shift, reply } => {
+                            let _ = reply.send(engine.run_radix_hist(&data, shift));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt worker");
+        ready_rx.recv().map_err(|_| anyhow!("pjrt worker died during init"))??;
+        Ok(XlaTileSorter { tx: Mutex::new(tx), batch, tile, worker: Some(worker) })
+    }
+
+    /// Convenience: discover artifacts in the default directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        let dir = Manifest::default_dir();
+        let manifest = Manifest::load(&dir)?;
+        Self::new(&manifest)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn call(&self, req_of: impl FnOnce(mpsc::Sender<Result<Vec<i32>>>) -> Request) -> Result<Vec<i32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req_of(reply_tx))
+            .map_err(|_| anyhow!("pjrt worker gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt worker dropped reply"))?
+    }
+
+    /// Run one full (batch × tile) buffer through the tile-sort executable.
+    pub fn sort_batch(&self, data: Vec<i32>) -> Result<Vec<i32>> {
+        self.call(|reply| Request::SortTiles { data, reply })
+    }
+
+    /// Per-block histograms via the radix_hist executable.
+    pub fn histogram_batch(&self, data: Vec<i32>, shift: i32) -> Result<Vec<i32>> {
+        self.call(|reply| Request::Histogram { data, shift, reply })
+    }
+}
+
+impl Drop for XlaTileSorter {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl TileSorter for XlaTileSorter {
+    fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    /// Sort every `tile`-wide chunk of `data` (len must be a multiple of the
+    /// tile size). Full batches go through the executable directly; a final
+    /// partial batch is padded with i32::MAX rows, executed, and truncated.
+    fn sort_tiles_i32(&self, data: &mut [i32]) -> Result<()> {
+        anyhow::ensure!(
+            data.len() % self.tile == 0,
+            "data length {} not a multiple of tile {}",
+            data.len(),
+            self.tile
+        );
+        let batch_elems = self.batch * self.tile;
+        let mut offset = 0;
+        while offset < data.len() {
+            let remaining = data.len() - offset;
+            let take = remaining.min(batch_elems);
+            let mut buf = Vec::with_capacity(batch_elems);
+            buf.extend_from_slice(&data[offset..offset + take]);
+            buf.resize(batch_elems, i32::MAX); // pad rows sort to all-MAX
+            let sorted = self.sort_batch(buf)?;
+            data[offset..offset + take].copy_from_slice(&sorted[..take]);
+            offset += take;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,187 @@
+//! Radix sorting for floating-point keys.
+//!
+//! NumPy's `np.sort` handles floats; EvoSort's radix path extends to them
+//! through the classic monotone bit transform: for an IEEE-754 value with
+//! bit pattern `b`,
+//!
+//! ```text
+//! key(b) = !b          if sign bit set   (negatives reverse order)
+//!        = b | SIGN    otherwise         (positives above negatives)
+//! ```
+//!
+//! `key` is a strictly increasing map from the `total_cmp` order onto
+//! unsigned integers (NaNs land at the extremes exactly as `total_cmp`
+//! places them: -NaN first, +NaN last). The float slice is reinterpreted as
+//! its integer bit patterns in place, transformed, sorted with the
+//! block-based LSD radix sort, and transformed back — zero extra copies.
+
+use super::radix::radix_sort_with_scratch;
+
+#[inline]
+fn f32_to_key(b: u32) -> u32 {
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000
+    }
+}
+
+#[inline]
+fn f32_from_key(k: u32) -> u32 {
+    if k & 0x8000_0000 != 0 {
+        k & !0x8000_0000
+    } else {
+        !k
+    }
+}
+
+#[inline]
+fn f64_to_key(b: u64) -> u64 {
+    if b & 0x8000_0000_0000_0000 != 0 {
+        !b
+    } else {
+        b | 0x8000_0000_0000_0000
+    }
+}
+
+#[inline]
+fn f64_from_key(k: u64) -> u64 {
+    if k & 0x8000_0000_0000_0000 != 0 {
+        k & !0x8000_0000_0000_0000
+    } else {
+        !k
+    }
+}
+
+/// Sort f32s into `total_cmp` order with the parallel LSD radix sort.
+pub fn radix_sort_f32(data: &mut [f32], threads: usize) {
+    // SAFETY: f32 and u32 have identical size/alignment; every u32 bit
+    // pattern is a valid f32 and vice versa. The transforms below are
+    // inverse bijections, so the slice always holds valid patterns.
+    let bits: &mut [u32] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u32, data.len()) };
+    crate::exec::parallel_for_chunks(bits, threads, |_, chunk| {
+        for b in chunk.iter_mut() {
+            *b = f32_to_key(*b);
+        }
+    });
+    radix_sort_with_scratch(bits, threads, &mut Vec::new());
+    crate::exec::parallel_for_chunks(bits, threads, |_, chunk| {
+        for b in chunk.iter_mut() {
+            *b = f32_from_key(*b);
+        }
+    });
+}
+
+/// Sort f64s into `total_cmp` order with the parallel LSD radix sort.
+pub fn radix_sort_f64(data: &mut [f64], threads: usize) {
+    // SAFETY: as above, for f64/u64.
+    let bits: &mut [u64] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u64, data.len()) };
+    crate::exec::parallel_for_chunks(bits, threads, |_, chunk| {
+        for b in chunk.iter_mut() {
+            *b = f64_to_key(*b);
+        }
+    });
+    radix_sort_with_scratch(bits, threads, &mut Vec::new());
+    crate::exec::parallel_for_chunks(bits, threads, |_, chunk| {
+        for b in chunk.iter_mut() {
+            *b = f64_from_key(*b);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn check_f64(data: &[f64]) {
+        let mut got = data.to_vec();
+        radix_sort_f64(&mut got, 3);
+        let mut expect = data.to_vec();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        // Bit-exact comparison (total_cmp distinguishes -0.0/0.0 and NaN payloads).
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let eb: Vec<u64> = expect.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, eb);
+    }
+
+    fn check_f32(data: &[f32]) {
+        let mut got = data.to_vec();
+        radix_sort_f32(&mut got, 3);
+        let mut expect = data.to_vec();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+        let eb: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, eb);
+    }
+
+    #[test]
+    fn key_transform_is_monotone_f64() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-300,
+            2.5,
+            1e300,
+            f64::INFINITY,
+        ];
+        let keys: Vec<u64> = vals.iter().map(|v| f64_to_key(v.to_bits())).collect();
+        for w in keys.windows(2) {
+            assert!(w[0] < w[1], "keys must be strictly increasing");
+        }
+        // Round trip.
+        for v in vals {
+            assert_eq!(f64_from_key(f64_to_key(v.to_bits())), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn sorts_specials() {
+        check_f64(&[
+            3.5,
+            f64::NAN,
+            -f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -0.0,
+            0.0,
+            -1.5,
+        ]);
+        check_f32(&[1.0, -1.0, f32::NAN, 0.0, -0.0, f32::MIN, f32::MAX]);
+    }
+
+    #[test]
+    fn sorts_random_f64() {
+        let mut rng = Xoshiro256pp::seeded(404);
+        let data: Vec<f64> = (0..50_000)
+            .map(|_| (rng.next_f64() - 0.5) * 1e12)
+            .collect();
+        check_f64(&data);
+    }
+
+    #[test]
+    fn sorts_random_f32() {
+        let mut rng = Xoshiro256pp::seeded(405);
+        let data: Vec<f32> = (0..50_000)
+            .map(|_| ((rng.next_f64() - 0.5) * 1e6) as f32)
+            .collect();
+        check_f32(&data);
+    }
+
+    #[test]
+    fn subnormals_and_edges() {
+        check_f64(&[f64::MIN_POSITIVE / 2.0, -f64::MIN_POSITIVE / 2.0, f64::EPSILON, 0.0]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        check_f64(&[]);
+        check_f64(&[42.0]);
+        check_f32(&[]);
+    }
+}

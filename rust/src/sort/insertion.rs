@@ -1,0 +1,118 @@
+//! Insertion sort for small subarrays — the base case of the refined parallel
+//! mergesort (paper §3.1: "switching to simpler algorithms, such as insertion
+//! sort, for small subarrays ... enhances cache performance and reduces
+//! constant factors").
+
+/// Classic in-place insertion sort. O(n²) worst case, O(n) on nearly-sorted
+/// input; fastest choice below a few thousand elements for plain integers.
+pub fn insertion_sort<T: Copy + Ord>(a: &mut [T]) {
+    for i in 1..a.len() {
+        let key = a[i];
+        let mut j = i;
+        while j > 0 && a[j - 1] > key {
+            a[j] = a[j - 1];
+            j -= 1;
+        }
+        a[j] = key;
+    }
+}
+
+/// Binary insertion sort: finds the insertion point with binary search, then
+/// shifts with a (memmove-friendly) rotate. Fewer comparisons than the linear
+/// scan — useful when comparisons are the dominant cost.
+pub fn binary_insertion_sort<T: Copy + Ord>(a: &mut [T]) {
+    for i in 1..a.len() {
+        let key = a[i];
+        // partition_point gives the first index whose element is > key among
+        // a[..i] (upper bound — keeps the sort stable).
+        let pos = a[..i].partition_point(|x| *x <= key);
+        if pos < i {
+            a.copy_within(pos..i, pos + 1);
+            a[pos] = key;
+        }
+    }
+}
+
+/// Guarded insertion sort used by introsort's tail pass: assumes `a[0]` is a
+/// sentinel lower bound (no `j > 0` check needed). Falls back to the guarded
+/// version when that precondition can't be promised.
+pub(crate) fn insertion_sort_tail<T: Copy + Ord>(a: &mut [T], from: usize) {
+    for i in from.max(1)..a.len() {
+        let key = a[i];
+        let mut j = i;
+        while j > 0 && a[j - 1] > key {
+            a[j] = a[j - 1];
+            j -= 1;
+        }
+        a[j] = key;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn check_sorts(xs: &[i64]) {
+        let mut expect = xs.to_vec();
+        expect.sort();
+        let mut a = xs.to_vec();
+        insertion_sort(&mut a);
+        assert_eq!(a, expect, "insertion_sort");
+        let mut b = xs.to_vec();
+        binary_insertion_sort(&mut b);
+        assert_eq!(b, expect, "binary_insertion_sort");
+        let mut c = xs.to_vec();
+        insertion_sort_tail(&mut c, 1);
+        assert_eq!(c, expect, "insertion_sort_tail");
+    }
+
+    #[test]
+    fn edge_cases() {
+        check_sorts(&[]);
+        check_sorts(&[1]);
+        check_sorts(&[2, 1]);
+        check_sorts(&[1, 2]);
+        check_sorts(&[3, 3, 3]);
+        check_sorts(&[i64::MAX, i64::MIN, 0, -1, 1]);
+    }
+
+    #[test]
+    fn random_arrays() {
+        let mut rng = Xoshiro256pp::seeded(77);
+        for len in [3usize, 10, 33, 100, 257] {
+            let xs: Vec<i64> =
+                (0..len).map(|_| rng.range_i64(-1000, 1000)).collect();
+            check_sorts(&xs);
+        }
+    }
+
+    #[test]
+    fn already_sorted_and_reverse() {
+        let asc: Vec<i64> = (0..200).collect();
+        check_sorts(&asc);
+        let desc: Vec<i64> = (0..200).rev().collect();
+        check_sorts(&desc);
+    }
+
+    #[test]
+    fn stability_of_binary_insertion() {
+        // With (key, tag) pairs ordered by key only, equal keys must keep
+        // their input order. Use a key-only Ord wrapper.
+        #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+        struct KV(i32, i32);
+        impl PartialOrd for KV {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for KV {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.cmp(&o.0)
+            }
+        }
+        let mut xs = vec![KV(2, 0), KV(1, 0), KV(2, 1), KV(1, 1), KV(2, 2)];
+        binary_insertion_sort(&mut xs);
+        assert_eq!(xs, vec![KV(1, 0), KV(1, 1), KV(2, 0), KV(2, 1), KV(2, 2)]);
+    }
+}

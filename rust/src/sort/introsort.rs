@@ -1,0 +1,185 @@
+//! Sequential introsort — the NumPy `np.sort(kind='quicksort')` baseline.
+//!
+//! NumPy's "quicksort" is in fact introsort: median-of-3 quicksort with a
+//! depth limit of 2·log2(n) falling back to heapsort, and insertion sort
+//! below a small cutoff — exactly what we implement here, from scratch, so
+//! the paper's baseline comparison is against the same algorithm class it
+//! used. Deliberately single-threaded, like `np.sort`.
+
+use super::insertion::insertion_sort;
+
+const SMALL: usize = 16;
+
+/// Sort in place with introsort (single-threaded baseline).
+pub fn introsort<T: Copy + Ord>(a: &mut [T]) {
+    let n = a.len();
+    if n <= 1 {
+        return;
+    }
+    let depth_limit = 2 * (usize::BITS - n.leading_zeros()) as usize;
+    introsort_rec(a, depth_limit);
+    insertion_sort(a); // final pass over nearly-sorted blocks
+}
+
+fn introsort_rec<T: Copy + Ord>(a: &mut [T], depth: usize) {
+    let mut slice = a;
+    let mut depth = depth;
+    // Tail-recursion elimination on the larger side.
+    while slice.len() > SMALL {
+        if depth == 0 {
+            heapsort(slice);
+            return;
+        }
+        depth -= 1;
+        let p = partition(slice);
+        let (lo, hi) = slice.split_at_mut(p);
+        let hi = &mut hi[1..]; // pivot in final place
+        if lo.len() < hi.len() {
+            introsort_rec(lo, depth);
+            slice = hi;
+        } else {
+            introsort_rec(hi, depth);
+            slice = lo;
+        }
+    }
+    // Leave blocks <= SMALL for the final insertion pass.
+}
+
+/// Hoare-style partition with median-of-3 pivot; returns the pivot's final
+/// index. The pivot element ends at that index.
+fn partition<T: Copy + Ord>(a: &mut [T]) -> usize {
+    let n = a.len();
+    let mid = n / 2;
+    // Median-of-3: order a[0], a[mid], a[n-1].
+    if a[mid] < a[0] {
+        a.swap(mid, 0);
+    }
+    if a[n - 1] < a[0] {
+        a.swap(n - 1, 0);
+    }
+    if a[n - 1] < a[mid] {
+        a.swap(n - 1, mid);
+    }
+    // Median now at mid; park it at n-2 (Lomuto-ish guarded Hoare).
+    a.swap(mid, n - 2);
+    let pivot = a[n - 2];
+    let (mut i, mut j) = (0usize, n - 2);
+    loop {
+        i += 1;
+        while a[i] < pivot {
+            i += 1;
+        }
+        j -= 1;
+        while a[j] > pivot {
+            j -= 1;
+        }
+        if i >= j {
+            break;
+        }
+        a.swap(i, j);
+    }
+    a.swap(i, n - 2);
+    i
+}
+
+/// Bottom-up binary heapsort (introsort's depth-limit fallback).
+pub fn heapsort<T: Copy + Ord>(a: &mut [T]) {
+    let n = a.len();
+    if n <= 1 {
+        return;
+    }
+    // Heapify.
+    for i in (0..n / 2).rev() {
+        sift_down(a, i, n);
+    }
+    // Extract.
+    for end in (1..n).rev() {
+        a.swap(0, end);
+        sift_down(a, 0, end);
+    }
+}
+
+fn sift_down<T: Copy + Ord>(a: &mut [T], mut root: usize, end: usize) {
+    loop {
+        let mut child = 2 * root + 1;
+        if child >= end {
+            return;
+        }
+        if child + 1 < end && a[child] < a[child + 1] {
+            child += 1;
+        }
+        if a[root] >= a[child] {
+            return;
+        }
+        a.swap(root, child);
+        root = child;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    fn check(data: &[i64]) {
+        let mut got = data.to_vec();
+        introsort(&mut got);
+        let mut expect = data.to_vec();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn edge_cases() {
+        check(&[]);
+        check(&[1]);
+        check(&[2, 1]);
+        check(&[1, 1, 1, 1, 1]);
+        check(&[i64::MIN, i64::MAX, 0]);
+    }
+
+    #[test]
+    fn random_and_adversarial() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::FewUnique,
+            Distribution::OrganPipe,
+            Distribution::Constant,
+            Distribution::Zipf,
+        ] {
+            let data = generate_i64(25_000, dist, 61, 2);
+            check(&data);
+        }
+    }
+
+    #[test]
+    fn odd_sizes() {
+        for n in [2usize, 3, 15, 16, 17, 1000, 4099] {
+            check(&generate_i64(n, Distribution::Uniform, 63, 1));
+        }
+    }
+
+    #[test]
+    fn heapsort_standalone() {
+        let data = generate_i64(10_000, Distribution::Uniform, 65, 1);
+        let mut got = data.clone();
+        heapsort(&mut got);
+        let mut expect = data;
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn heapsort_edges() {
+        let mut a: Vec<i64> = vec![];
+        heapsort(&mut a);
+        let mut b = vec![5i64];
+        heapsort(&mut b);
+        assert_eq!(b, vec![5]);
+        let mut c = vec![2i64, 1];
+        heapsort(&mut c);
+        assert_eq!(c, vec![1, 2]);
+    }
+}

@@ -1,0 +1,293 @@
+//! Merge kernels: the `MergeStandardOpt` routine of Algorithm 3 and its
+//! building blocks.
+//!
+//! * [`merge_into`] — branch-light sequential two-way merge.
+//! * [`merge_tiled_into`] — the paper's *block-based* merge: the output is
+//!   produced in tiles of `T_tile` elements so the working set of each step
+//!   stays cache-resident (§6.2 "the tile size ... optimizes cache usage in
+//!   merges").
+//! * [`gallop_right`] / [`gallop_left`] — exponential search used both by the
+//!   merge fast path (long runs from one side) and by [`merge_path_split`].
+//! * [`merge_path_split`] — splits one big merge into `k` independent
+//!   sub-merges of near-equal output size (the parallel merge used once runs
+//!   outgrow `T_merge`).
+
+/// Sequential stable merge of two sorted runs into `dst`.
+/// `dst.len()` must equal `a.len() + b.len()`.
+pub fn merge_into<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T]) {
+    debug_assert_eq!(a.len() + b.len(), dst.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut k = 0usize;
+    // Main loop: both runs non-empty.
+    while i < a.len() && j < b.len() {
+        // `<=` keeps stability (a wins ties).
+        let take_a = a[i] <= b[j];
+        dst[k] = if take_a { a[i] } else { b[j] };
+        i += usize::from(take_a);
+        j += usize::from(!take_a);
+        k += 1;
+    }
+    if i < a.len() {
+        dst[k..].copy_from_slice(&a[i..]);
+    } else {
+        dst[k..].copy_from_slice(&b[j..]);
+    }
+}
+
+/// Find the number of elements in sorted `run` that are `< key`
+/// (lower bound) via exponential (galloping) search from the left.
+pub fn gallop_left<T: Copy + Ord>(run: &[T], key: T) -> usize {
+    // Exponential probe.
+    let mut hi = 1usize;
+    while hi < run.len() && run[hi - 1] < key {
+        hi = (hi * 2).min(run.len() + 1);
+    }
+    let lo = hi / 2;
+    let hi = hi.min(run.len());
+    lo + run[lo..hi].partition_point(|x| *x < key)
+}
+
+/// Number of elements in sorted `run` that are `<= key` (upper bound).
+pub fn gallop_right<T: Copy + Ord>(run: &[T], key: T) -> usize {
+    let mut hi = 1usize;
+    while hi < run.len() && run[hi - 1] <= key {
+        hi = (hi * 2).min(run.len() + 1);
+    }
+    let lo = hi / 2;
+    let hi = hi.min(run.len());
+    lo + run[lo..hi].partition_point(|x| *x <= key)
+}
+
+/// Galloping merge: like [`merge_into`] but when one side wins repeatedly it
+/// switches to exponential search + bulk copy. Big win on runs with little
+/// interleaving (nearly-sorted data, concatenated sorted blocks).
+pub fn merge_gallop_into<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T]) {
+    const MIN_GALLOP: usize = 7;
+    debug_assert_eq!(a.len() + b.len(), dst.len());
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    let (mut wins_a, mut wins_b) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            dst[k] = a[i];
+            i += 1;
+            k += 1;
+            wins_a += 1;
+            wins_b = 0;
+            if wins_a >= MIN_GALLOP && i < a.len() {
+                // Copy the whole prefix of `a` that precedes b[j].
+                let take = gallop_right(&a[i..], b[j]);
+                dst[k..k + take].copy_from_slice(&a[i..i + take]);
+                i += take;
+                k += take;
+                wins_a = 0;
+            }
+        } else {
+            dst[k] = b[j];
+            j += 1;
+            k += 1;
+            wins_b += 1;
+            wins_a = 0;
+            if wins_b >= MIN_GALLOP && j < b.len() {
+                let take = gallop_left(&b[j..], a[i]);
+                dst[k..k + take].copy_from_slice(&b[j..j + take]);
+                j += take;
+                k += take;
+                wins_b = 0;
+            }
+        }
+    }
+    if i < a.len() {
+        dst[k..].copy_from_slice(&a[i..]);
+    } else {
+        dst[k..].copy_from_slice(&b[j..]);
+    }
+}
+
+/// Block-based merge: emits the output in tiles of at most `tile` elements.
+/// Each tile's sources are located with one merge-path split, then produced
+/// with the branch-light kernel — bounding the live working set to ~3 tiles,
+/// which is the cache-blocking effect the paper tunes `T_tile` for.
+pub fn merge_tiled_into<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T], tile: usize) {
+    debug_assert_eq!(a.len() + b.len(), dst.len());
+    let tile = tile.max(16);
+    if dst.len() <= tile {
+        merge_into(a, b, dst);
+        return;
+    }
+    let mut ai = 0usize;
+    let mut bi = 0usize;
+    let mut out = 0usize;
+    while out < dst.len() {
+        let want = tile.min(dst.len() - out);
+        // Split point: how many of the next `want` outputs come from `a`.
+        let (da, db) = merge_path(&a[ai..], &b[bi..], want);
+        merge_into(
+            &a[ai..ai + da],
+            &b[bi..bi + db],
+            &mut dst[out..out + want],
+        );
+        ai += da;
+        bi += db;
+        out += want;
+    }
+}
+
+/// Merge-path search: given sorted `a`, `b` and a diagonal `k`, return
+/// `(i, j)` with `i + j = k` such that merging `a[..i]` and `b[..j]` yields
+/// exactly the first `k` elements of the merged output (stable convention:
+/// ties prefer `a`).
+pub fn merge_path<T: Copy + Ord>(a: &[T], b: &[T], k: usize) -> (usize, usize) {
+    debug_assert!(k <= a.len() + b.len());
+    let mut lo = k.saturating_sub(b.len());
+    let mut hi = k.min(a.len());
+    while lo < hi {
+        let i = (lo + hi) / 2;
+        let j = k - i;
+        // Feasible iff a[..i], b[..j] are exactly the k smallest:
+        //   a[i-1] <= b[j]  (taking one more from b wouldn't be forced)
+        //   b[j-1] <  a[i]  (ties go to a, so b[j-1] == a[i] means take a first)
+        if i < a.len() && j > 0 && b[j - 1] > a[i] {
+            lo = i + 1;
+        } else {
+            hi = i;
+        }
+    }
+    let i = lo;
+    let j = k - i;
+    (i, j)
+}
+
+/// Split the merge of `a` and `b` into `parts` independent (src-range,
+/// src-range, out-range) jobs of near-equal output size.
+pub fn merge_path_split<T: Copy + Ord>(
+    a: &[T],
+    b: &[T],
+    parts: usize,
+) -> Vec<(std::ops::Range<usize>, std::ops::Range<usize>, std::ops::Range<usize>)> {
+    let total = a.len() + b.len();
+    let bounds = crate::exec::partition_even(total, parts.max(1));
+    let mut out = Vec::with_capacity(bounds.len());
+    let (mut pi, mut pj) = (0usize, 0usize);
+    for r in bounds {
+        let (i, j) = merge_path(a, b, r.end);
+        out.push((pi..i, pj..j, r.clone()));
+        pi = i;
+        pj = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn sorted_rand(rng: &mut Xoshiro256pp, len: usize, span: i64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..len).map(|_| rng.range_i64(-span, span)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn check_all_merges(a: &[i64], b: &[i64]) {
+        let mut expect: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        expect.sort();
+        let mut d1 = vec![0i64; expect.len()];
+        merge_into(a, b, &mut d1);
+        assert_eq!(d1, expect, "merge_into");
+        let mut d2 = vec![0i64; expect.len()];
+        merge_gallop_into(a, b, &mut d2);
+        assert_eq!(d2, expect, "merge_gallop_into");
+        for tile in [16usize, 37, 128] {
+            let mut d3 = vec![0i64; expect.len()];
+            merge_tiled_into(a, b, &mut d3, tile);
+            assert_eq!(d3, expect, "merge_tiled_into tile={tile}");
+        }
+    }
+
+    #[test]
+    fn merge_edges() {
+        check_all_merges(&[], &[]);
+        check_all_merges(&[1], &[]);
+        check_all_merges(&[], &[1]);
+        check_all_merges(&[1, 3, 5], &[2, 4, 6]);
+        check_all_merges(&[1, 2, 3], &[4, 5, 6]);
+        check_all_merges(&[4, 5, 6], &[1, 2, 3]);
+        check_all_merges(&[2, 2, 2], &[2, 2]);
+    }
+
+    #[test]
+    fn merge_random() {
+        let mut rng = Xoshiro256pp::seeded(101);
+        for _ in 0..50 {
+            let la = rng.below(200);
+            let lb = rng.below(200);
+            let a = sorted_rand(&mut rng, la, 50);
+            let b = sorted_rand(&mut rng, lb, 50);
+            check_all_merges(&a, &b);
+        }
+    }
+
+    #[test]
+    fn gallop_bounds() {
+        let run = [1i64, 3, 3, 3, 7, 9];
+        assert_eq!(gallop_left(&run, 3), 1); // elements < 3
+        assert_eq!(gallop_right(&run, 3), 4); // elements <= 3
+        assert_eq!(gallop_left(&run, 0), 0);
+        assert_eq!(gallop_right(&run, 100), 6);
+        assert_eq!(gallop_left(&[], 5), 0);
+    }
+
+    #[test]
+    fn merge_path_invariants() {
+        let mut rng = Xoshiro256pp::seeded(303);
+        for _ in 0..30 {
+            let la = rng.below(100);
+            let lb = rng.below(100);
+            let a = sorted_rand(&mut rng, la, 20);
+            let b = sorted_rand(&mut rng, lb, 20);
+            for k in [0, 1, (a.len() + b.len()) / 2, a.len() + b.len()] {
+                let (i, j) = merge_path(&a, &b, k);
+                assert_eq!(i + j, k);
+                // Elements taken must not exceed any element left behind.
+                if i > 0 && j < b.len() {
+                    assert!(a[i - 1] <= b[j], "a tail vs b head");
+                }
+                if j > 0 && i < a.len() {
+                    assert!(b[j - 1] >= a[i] || b[j - 1] < a[i] || true);
+                    assert!(b[j - 1] <= a[i] || a[i] >= b[j - 1] || true);
+                    // The strict correctness claim: b[j-1] cannot be > a[i]
+                    // under the tie-to-a convention... b[j-1] <= a[i] is not
+                    // required; what is required is b[j-1] < a[i] OR equal
+                    // handled by preferring a. Check the merged prefix is the
+                    // k smallest instead:
+                }
+                let mut prefix: Vec<i64> =
+                    a[..i].iter().chain(b[..j].iter()).copied().collect();
+                prefix.sort_unstable();
+                let mut all: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+                all.sort_unstable();
+                assert_eq!(prefix, all[..k].to_vec(), "prefix is k smallest");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_path_split_reassembles() {
+        let mut rng = Xoshiro256pp::seeded(404);
+        let a = sorted_rand(&mut rng, 333, 100);
+        let b = sorted_rand(&mut rng, 278, 100);
+        let mut expect: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        expect.sort();
+        for parts in [1usize, 2, 5, 16] {
+            let jobs = merge_path_split(&a, &b, parts);
+            let mut dst = vec![0i64; expect.len()];
+            for (ra, rb, rd) in jobs {
+                let len = rd.len();
+                let mut tmp = vec![0i64; len];
+                merge_into(&a[ra], &b[rb], &mut tmp);
+                dst[rd].copy_from_slice(&tmp);
+            }
+            assert_eq!(dst, expect, "parts={parts}");
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! The EvoSort sorting library: every algorithm the paper describes plus the
+//! baselines it compares against.
+//!
+//! | Paper | Here |
+//! |---|---|
+//! | Refined parallel mergesort (Alg. 3) | [`parallel_merge::parallel_merge_sort`] |
+//! | Block-based LSD radix sort (Alg. 4/5) | [`radix::radix_sort`] |
+//! | Adaptive Partition Sort (Alg. 6) | [`adaptive::AdaptiveSorter`] |
+//! | NumPy quicksort baseline | [`introsort::introsort`] |
+//! | NumPy mergesort baseline | [`stable_merge::stable_merge_sort`] |
+//! | Library fallback below `T_numpy` | `slice::sort_unstable` via Alg. 6 |
+
+pub mod adaptive;
+pub mod floats;
+pub mod insertion;
+pub mod introsort;
+pub mod merge;
+pub mod parallel_merge;
+pub mod radix;
+pub mod samplesort;
+pub mod stable_merge;
+
+pub use adaptive::{AdaptiveSorter, TileSorter};
+pub use floats::{radix_sort_f32, radix_sort_f64};
+pub use parallel_merge::{parallel_merge_sort, MergeTuning};
+pub use radix::{radix_sort, RadixKey};
+pub use samplesort::{sample_sort, SampleSortTuning};
+
+/// Baseline selector used by benches and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// Sequential introsort — `np.sort(kind='quicksort')` analog.
+    Quicksort,
+    /// Sequential stable mergesort — `np.sort(kind='mergesort')` analog.
+    Mergesort,
+    /// Rust std `sort_unstable` (pdqsort) — the strongest library routine.
+    Std,
+}
+
+impl Baseline {
+    pub fn name(self) -> &'static str {
+        match self {
+            Baseline::Quicksort => "baseline-quicksort",
+            Baseline::Mergesort => "baseline-mergesort",
+            Baseline::Std => "baseline-std",
+        }
+    }
+
+    pub fn all() -> &'static [Baseline] {
+        &[Baseline::Quicksort, Baseline::Mergesort, Baseline::Std]
+    }
+
+    /// Run the baseline on i64 data.
+    pub fn sort_i64(self, data: &mut [i64]) {
+        match self {
+            Baseline::Quicksort => introsort::introsort(data),
+            Baseline::Mergesort => stable_merge::stable_merge_sort(data),
+            Baseline::Std => data.sort_unstable(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    #[test]
+    fn baselines_agree() {
+        let data = generate_i64(10_000, Distribution::Uniform, 95, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        for b in Baseline::all() {
+            let mut got = data.clone();
+            b.sort_i64(&mut got);
+            assert_eq!(got, expect, "{}", b.name());
+        }
+    }
+}

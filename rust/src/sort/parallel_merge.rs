@@ -1,0 +1,354 @@
+//! Refined parallel mergesort — Algorithm 3 of the paper.
+//!
+//! Bottom-up: partition into base chunks of `T_insertion` elements, insertion
+//! sort each chunk in parallel, then repeatedly merge adjacent runs of width
+//! `w` into runs of width `2w`, in parallel, ping-ponging between the input
+//! buffer and one scratch buffer. Two parallelism levels:
+//!
+//! * across run pairs — every pair merge at a given width is independent;
+//! * within a pair — once a single merge's output exceeds `T_merge`, it is
+//!   split with merge-path partitioning into near-equal sub-merges (this is
+//!   what keeps all cores busy in the last passes when only a few giant runs
+//!   remain).
+//!
+//! The inner merge kernel is the tiled/galloping `MergeStandardOpt`
+//! (see [`super::merge`]), with `T_tile` bounding the live working set.
+
+use super::insertion::insertion_sort;
+use super::merge::{merge_gallop_into, merge_path_split, merge_tiled_into};
+use crate::exec;
+
+/// Tuning knobs for the refined parallel mergesort (a projection of the full
+/// [`crate::params::SortParams`] genome).
+#[derive(Debug, Clone, Copy)]
+pub struct MergeTuning {
+    /// Base chunk size sorted with insertion sort (`T_insertion`).
+    pub insertion_threshold: usize,
+    /// Output size above which a single merge is split across threads
+    /// (`T_merge`).
+    pub parallel_merge_threshold: usize,
+    /// Cache tile for the blocked merge kernel (`T_tile`).
+    pub tile: usize,
+    /// Worker thread budget.
+    pub threads: usize,
+}
+
+impl Default for MergeTuning {
+    fn default() -> Self {
+        MergeTuning {
+            insertion_threshold: 2048,
+            parallel_merge_threshold: 1 << 16,
+            tile: 4096,
+            threads: crate::util::default_threads(),
+        }
+    }
+}
+
+/// Sort `data` in place with the refined parallel mergesort.
+pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    tuning: &MergeTuning,
+) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    let chunk = tuning.insertion_threshold.clamp(8, n.max(8));
+    if n <= chunk {
+        insertion_sort(data);
+        return;
+    }
+
+    // Phase 1 — parallel insertion sort of base chunks.
+    // Chunk geometry: fixed size `chunk` (last chunk may be short). We hand
+    // groups of chunks to threads.
+    let nchunks = n.div_ceil(chunk);
+    let workers = tuning.threads.max(1);
+    {
+        let mut views: Vec<&mut [T]> = Vec::with_capacity(nchunks);
+        let mut rest = &mut *data;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            views.push(head);
+            rest = tail;
+        }
+        if workers == 1 || nchunks == 1 {
+            for v in views {
+                insertion_sort(v);
+            }
+        } else {
+            let mut per_worker: Vec<Vec<&mut [T]>> = (0..workers.min(nchunks)).map(|_| Vec::new()).collect();
+            let nw = per_worker.len();
+            for (i, v) in views.into_iter().enumerate() {
+                per_worker[i % nw].push(v);
+            }
+            std::thread::scope(|scope| {
+                for work in per_worker {
+                    scope.spawn(move || {
+                        for v in work {
+                            insertion_sort(v);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    // Phase 2 — bottom-up parallel merging, ping-pong between buffers.
+    merge_runs_bottom_up(data, chunk, tuning);
+}
+
+/// Bottom-up parallel merge of an array already composed of sorted runs of
+/// `run_width` elements (the last run may be shorter). Shared by the refined
+/// parallel mergesort (runs from insertion sort) and the XLA tile backend
+/// (runs from the Pallas bitonic kernel).
+pub fn merge_runs_bottom_up<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    run_width: usize,
+    tuning: &MergeTuning,
+) {
+    let n = data.len();
+    if run_width >= n || n <= 1 {
+        return;
+    }
+    let mut scratch: Vec<T> = vec![T::default(); n];
+    let mut src_is_data = true;
+    let mut width = run_width.max(1);
+    while width < n {
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_data {
+                (&*data, &mut scratch[..])
+            } else {
+                (&scratch[..], &mut *data)
+            };
+            merge_pass(src, dst, width, tuning);
+        }
+        src_is_data = !src_is_data;
+        width *= 2;
+    }
+    if !src_is_data {
+        data.copy_from_slice(&scratch);
+    }
+}
+
+/// One width-doubling pass: merge every adjacent pair of `width`-sized runs
+/// from `src` into `dst`.
+fn merge_pass<T: Copy + Ord + Send + Sync>(
+    src: &[T],
+    dst: &mut [T],
+    width: usize,
+    tuning: &MergeTuning,
+) {
+    let n = src.len();
+    // Collect (pair range) jobs. A pair is [lo, mid) + [mid, hi).
+    struct Pair {
+        lo: usize,
+        mid: usize,
+        hi: usize,
+    }
+    let mut pairs = Vec::new();
+    let mut lo = 0usize;
+    while lo < n {
+        let mid = (lo + width).min(n);
+        let hi = (lo + 2 * width).min(n);
+        pairs.push(Pair { lo, mid, hi });
+        lo = hi;
+    }
+
+    // Carve dst into per-pair output slices.
+    let mut outs: Vec<&mut [T]> = Vec::with_capacity(pairs.len());
+    let mut rest = dst;
+    for p in &pairs {
+        let (head, tail) = rest.split_at_mut(p.hi - p.lo);
+        outs.push(head);
+        rest = tail;
+    }
+
+    let threads = tuning.threads.max(1);
+    let big = tuning.parallel_merge_threshold.max(1024);
+
+    // Small pass (many pairs): one thread per group of pairs.
+    // Large pass (few pairs): split each merge with merge-path.
+    if pairs.len() >= threads * 2 || threads == 1 {
+        let nw = threads.min(pairs.len());
+        let mut per_worker: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
+        for (i, o) in outs.into_iter().enumerate() {
+            per_worker[i % nw].push((i, o));
+        }
+        std::thread::scope(|scope| {
+            for work in per_worker {
+                let pairs = &pairs;
+                scope.spawn(move || {
+                    for (i, out) in work {
+                        let p = &pairs[i];
+                        merge_one(&src[p.lo..p.mid], &src[p.mid..p.hi], out, tuning);
+                    }
+                });
+            }
+        });
+    } else {
+        // Few big pairs: give each pair a share of the thread budget and use
+        // merge-path splitting inside pairs whose output exceeds `T_merge`.
+        let share = (threads / pairs.len()).max(1);
+        std::thread::scope(|scope| {
+            for (i, out) in outs.into_iter().enumerate() {
+                let p = &pairs[i];
+                let a = &src[p.lo..p.mid];
+                let b = &src[p.mid..p.hi];
+                scope.spawn(move || {
+                    if out.len() > big && share > 1 {
+                        parallel_merge_into(a, b, out, share, tuning.tile);
+                    } else {
+                        merge_one(a, b, out, tuning);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Merge a single pair with the optimized sequential kernel: tiled when the
+/// output is large (cache blocking), galloping otherwise.
+fn merge_one<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T], tuning: &MergeTuning) {
+    if b.is_empty() {
+        dst.copy_from_slice(a);
+    } else if a.is_empty() {
+        dst.copy_from_slice(b);
+    } else if dst.len() >= tuning.tile.max(16) * 4 {
+        merge_tiled_into(a, b, dst, tuning.tile);
+    } else {
+        merge_gallop_into(a, b, dst);
+    }
+}
+
+/// Split one merge into `parts` independent sub-merges (merge-path) and run
+/// them on scoped threads.
+pub fn parallel_merge_into<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    dst: &mut [T],
+    parts: usize,
+    tile: usize,
+) {
+    debug_assert_eq!(a.len() + b.len(), dst.len());
+    let jobs = merge_path_split(a, b, parts);
+    // Carve dst according to job output ranges (contiguous, in order).
+    let mut outs: Vec<&mut [T]> = Vec::with_capacity(jobs.len());
+    let mut rest = dst;
+    for (_, _, rd) in &jobs {
+        let (head, tail) = rest.split_at_mut(rd.len());
+        outs.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for ((ra, rb, _), out) in jobs.into_iter().zip(outs) {
+            let sa = &a[ra];
+            let sb = &b[rb];
+            scope.spawn(move || {
+                merge_tiled_into(sa, sb, out, tile.max(16));
+            });
+        }
+    });
+}
+
+/// Convenience: sort with default tuning and an explicit thread count.
+pub fn parallel_merge_sort_default<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    threads: usize,
+) {
+    let tuning = MergeTuning { threads, ..MergeTuning::default() };
+    parallel_merge_sort(data, &tuning);
+}
+
+/// Because exec helpers are shared, re-export partition for tests.
+#[allow(unused_imports)]
+pub(crate) use exec::partition_even as _partition_even_for_tests;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    fn check(data: &[i64], tuning: &MergeTuning) {
+        let mut got = data.to_vec();
+        parallel_merge_sort(&mut got, tuning);
+        let mut expect = data.to_vec();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sorts_small_and_edge() {
+        let t = MergeTuning { threads: 4, ..Default::default() };
+        check(&[], &t);
+        check(&[1], &t);
+        check(&[2, 1], &t);
+        check(&[5, 5, 5, 5], &t);
+        check(&[3, 1, 4, 1, 5, 9, 2, 6], &t);
+    }
+
+    #[test]
+    fn sorts_various_distributions() {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::FewUnique,
+            Distribution::OrganPipe,
+        ] {
+            let data = generate_i64(20_000, dist, 11, 4);
+            check(&data, &MergeTuning { threads: 4, ..Default::default() });
+        }
+    }
+
+    #[test]
+    fn sorts_across_tunings() {
+        let data = generate_i64(30_000, Distribution::Uniform, 13, 4);
+        for ins in [8usize, 100, 1000, 50_000] {
+            for tile in [16usize, 1000, 100_000] {
+                for pmt in [1024usize, 4096, 1 << 20] {
+                    let t = MergeTuning {
+                        insertion_threshold: ins,
+                        parallel_merge_threshold: pmt,
+                        tile,
+                        threads: 4,
+                    };
+                    check(&data, &t);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_odd_sizes() {
+        // Non-power-of-two sizes exercise short final runs at every pass.
+        for n in [3usize, 1000, 1023, 1025, 12_345] {
+            let data = generate_i64(n, Distribution::Uniform, 17, 2);
+            check(
+                &data,
+                &MergeTuning { insertion_threshold: 64, threads: 3, ..Default::default() },
+            );
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let data = generate_i64(5000, Distribution::Uniform, 19, 1);
+        check(&data, &MergeTuning { threads: 1, ..Default::default() });
+    }
+
+    #[test]
+    fn parallel_merge_into_direct() {
+        let mut a = generate_i64(4096, Distribution::Uniform, 23, 2);
+        let mut b = generate_i64(2048, Distribution::Uniform, 29, 2);
+        a.sort_unstable();
+        b.sort_unstable();
+        let mut dst = vec![0i64; a.len() + b.len()];
+        parallel_merge_into(&a, &b, &mut dst, 5, 256);
+        let mut expect: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+        expect.sort_unstable();
+        assert_eq!(dst, expect);
+    }
+}

@@ -1,0 +1,225 @@
+//! Parallel samplesort — the related-work comparison algorithm (Sanders &
+//! Winkel, "Super Scalar Sample Sort", the paper's reference [3]) and an
+//! optional extra strategy for the adaptive dispatcher.
+//!
+//! Structure:
+//! 1. draw an oversampled random sample, sort it, pick `buckets − 1`
+//!    splitters;
+//! 2. each thread classifies its contiguous block against the splitters
+//!    (branch-free binary search) and counts per-bucket occupancy;
+//! 3. exclusive prefix sums assign disjoint output ranges per
+//!    (thread, bucket) — the same scheme as the radix scatter;
+//! 4. threads scatter their blocks; each bucket is then sorted in parallel
+//!    with introsort (buckets are independent and cache-sized).
+//!
+//! Comparison-based (works for any `Ord` key, unlike radix) and one-pass
+//! (unlike mergesort's log n passes) — the classic trade-off the ablation
+//! bench quantifies.
+
+use super::introsort::introsort;
+use crate::exec;
+use crate::rng::Xoshiro256pp;
+
+/// Tuning for samplesort.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleSortTuning {
+    /// Number of buckets (≈ parallel grain; default 4× threads, min 2).
+    pub buckets: usize,
+    /// Sample size per bucket (oversampling factor).
+    pub oversample: usize,
+    /// Below this size, fall back to sequential introsort.
+    pub sequential_threshold: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl SampleSortTuning {
+    pub fn for_threads(threads: usize) -> Self {
+        SampleSortTuning {
+            buckets: (threads * 4).clamp(2, 512),
+            oversample: 16,
+            sequential_threshold: 8192,
+            threads: threads.max(1),
+            seed: 0x5A3B1E50,
+        }
+    }
+}
+
+/// Sort in place with parallel samplesort.
+pub fn sample_sort<T: Copy + Ord + Send + Sync + Default>(data: &mut [T], tuning: &SampleSortTuning) {
+    let n = data.len();
+    if n <= tuning.sequential_threshold.max(64) {
+        introsort(data);
+        return;
+    }
+    let buckets = tuning.buckets.clamp(2, n / 16);
+
+    // 1. Splitters from an oversampled random sample.
+    let mut rng = Xoshiro256pp::seeded(tuning.seed);
+    let sample_n = (buckets * tuning.oversample.max(1)).min(n);
+    let mut sample: Vec<T> = (0..sample_n).map(|_| data[rng.below(n)]).collect();
+    sample.sort_unstable();
+    let splitters: Vec<T> =
+        (1..buckets).map(|i| sample[i * sample_n / buckets]).collect();
+
+    // 2. Per-thread classification + bucket counts.
+    let bounds = exec::partition_even(n, tuning.threads);
+    let nth = bounds.len();
+    let data_ro: &[T] = data;
+    let classify = |x: &T| -> usize { splitters.partition_point(|s| s <= x) };
+    let counts: Vec<Vec<usize>> = exec::parallel_map(nth, tuning.threads, |t| {
+        let mut c = vec![0usize; buckets];
+        for x in &data_ro[bounds[t].clone()] {
+            c[classify(x)] += 1;
+        }
+        c
+    });
+
+    // 3. Offsets: global bucket starts, then per-(bucket, thread) cursors.
+    let mut bucket_sizes = vec![0usize; buckets];
+    for c in &counts {
+        for (b, &v) in c.iter().enumerate() {
+            bucket_sizes[b] += v;
+        }
+    }
+    let mut bucket_start = vec![0usize; buckets + 1];
+    for b in 0..buckets {
+        bucket_start[b + 1] = bucket_start[b] + bucket_sizes[b];
+    }
+    let mut cursors: Vec<Vec<usize>> = counts;
+    for b in 0..buckets {
+        let mut cur = bucket_start[b];
+        for c in cursors.iter_mut() {
+            let cnt = c[b];
+            c[b] = cur;
+            cur += cnt;
+        }
+    }
+
+    // 4. Scatter into a temp buffer (disjoint (thread, bucket) ranges — same
+    //    safety argument as the radix scatter).
+    let mut temp: Vec<T> = vec![T::default(); n];
+    {
+        struct Buf<T>(*mut T);
+        unsafe impl<T: Send> Send for Buf<T> {}
+        unsafe impl<T: Send> Sync for Buf<T> {}
+        let dst = Buf(temp.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for t in 0..nth {
+                let src = &data_ro[bounds[t].clone()];
+                let mut cur = cursors[t].clone();
+                let dst = &dst;
+                let classify = &classify;
+                scope.spawn(move || {
+                    let p = dst.0;
+                    for &x in src {
+                        let b = classify(&x);
+                        // SAFETY: cur[b] stays within this thread's private
+                        // (thread, bucket) output range by construction.
+                        unsafe { p.add(cur[b]).write(x) };
+                        cur[b] += 1;
+                    }
+                });
+            }
+        });
+    }
+
+    // 5. Sort each bucket in parallel, writing back into `data`.
+    {
+        let mut out_views: Vec<&mut [T]> = Vec::with_capacity(buckets);
+        let mut rest = &mut *data;
+        for b in 0..buckets {
+            let (head, tail) = rest.split_at_mut(bucket_sizes[b]);
+            out_views.push(head);
+            rest = tail;
+        }
+        let mut jobs: Vec<(usize, &mut [T])> = out_views.into_iter().enumerate().collect();
+        let nw = tuning.threads.min(jobs.len().max(1));
+        let mut per_worker: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
+        for (i, job) in jobs.drain(..).enumerate() {
+            per_worker[i % nw].push(job);
+        }
+        let temp_ro: &[T] = &temp;
+        std::thread::scope(|scope| {
+            for work in per_worker {
+                let bucket_start = &bucket_start;
+                scope.spawn(move || {
+                    for (b, out) in work {
+                        out.copy_from_slice(&temp_ro[bucket_start[b]..bucket_start[b + 1]]);
+                        introsort(out);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    fn check(data: &[i64], tuning: &SampleSortTuning) {
+        let mut got = data.to_vec();
+        sample_sort(&mut got, tuning);
+        let mut expect = data.to_vec();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn edge_cases() {
+        let t = SampleSortTuning::for_threads(3);
+        check(&[], &t);
+        check(&[1], &t);
+        check(&[2, 1], &t);
+        check(&[7; 100], &t);
+    }
+
+    #[test]
+    fn random_inputs_cross_tunings() {
+        let data = generate_i64(60_000, Distribution::Uniform, 71, 3);
+        for buckets in [2usize, 8, 64] {
+            for threads in [1usize, 3] {
+                let t = SampleSortTuning {
+                    buckets,
+                    sequential_threshold: 1000,
+                    threads,
+                    ..SampleSortTuning::for_threads(threads)
+                };
+                check(&data, &t);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_and_adversarial() {
+        let t = SampleSortTuning {
+            sequential_threshold: 500,
+            ..SampleSortTuning::for_threads(4)
+        };
+        for dist in [
+            Distribution::Zipf,       // heavy splitter duplication
+            Distribution::Constant,   // all one bucket
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::FewUnique,
+        ] {
+            check(&generate_i64(30_000, dist, 73, 2), &t);
+        }
+    }
+
+    #[test]
+    fn odd_sizes() {
+        let t = SampleSortTuning { sequential_threshold: 100, ..SampleSortTuning::for_threads(2) };
+        for n in [101usize, 1009, 9999] {
+            check(&generate_i64(n, Distribution::Uniform, 75, 2), &t);
+        }
+    }
+
+    #[test]
+    fn sequential_fallback_small() {
+        let t = SampleSortTuning::for_threads(4);
+        check(&generate_i64(5000, Distribution::Uniform, 77, 2), &t); // below threshold
+    }
+}

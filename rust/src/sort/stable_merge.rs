@@ -1,0 +1,115 @@
+//! Sequential stable bottom-up mergesort — the NumPy `np.sort(kind='mergesort')`
+//! baseline: single-threaded, O(n) scratch, stable, insertion-sorted base
+//! runs of 32 elements (matching the classic library implementation shape).
+
+use super::insertion::insertion_sort;
+use super::merge::merge_into;
+
+const RUN: usize = 32;
+
+/// Sort in place with a sequential stable mergesort (baseline).
+pub fn stable_merge_sort<T: Copy + Ord + Default>(a: &mut [T]) {
+    let n = a.len();
+    if n <= 1 {
+        return;
+    }
+    if n <= RUN {
+        insertion_sort(a);
+        return;
+    }
+    // Base runs.
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + RUN).min(n);
+        insertion_sort(&mut a[lo..hi]);
+        lo = hi;
+    }
+    // Bottom-up merging, ping-pong with one scratch buffer.
+    let mut scratch: Vec<T> = vec![T::default(); n];
+    let mut in_a = true;
+    let mut width = RUN;
+    while width < n {
+        {
+            let (src, dst): (&[T], &mut [T]) =
+                if in_a { (&*a, &mut scratch[..]) } else { (&scratch[..], &mut *a) };
+            let mut lo = 0;
+            while lo < n {
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                merge_into(&src[lo..mid], &src[mid..hi], &mut dst[lo..hi]);
+                lo = hi;
+            }
+        }
+        in_a = !in_a;
+        width *= 2;
+    }
+    if !in_a {
+        a.copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    fn check(data: &[i64]) {
+        let mut got = data.to_vec();
+        stable_merge_sort(&mut got);
+        let mut expect = data.to_vec();
+        expect.sort(); // std stable sort as oracle
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn edge_cases() {
+        check(&[]);
+        check(&[7]);
+        check(&[2, 1]);
+        check(&[3, 3, 3]);
+    }
+
+    #[test]
+    fn random_inputs() {
+        for n in [31usize, 32, 33, 1000, 10_000, 65_537] {
+            check(&generate_i64(n, Distribution::Uniform, 71, 1));
+        }
+    }
+
+    #[test]
+    fn adversarial_inputs() {
+        for dist in [
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::OrganPipe,
+            Distribution::FewUnique,
+        ] {
+            check(&generate_i64(5000, dist, 73, 1));
+        }
+    }
+
+    #[test]
+    fn stability() {
+        #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+        struct KV(i32, i32);
+        impl PartialOrd for KV {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for KV {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.cmp(&o.0) // key only
+            }
+        }
+        // 200 elements, 4 distinct keys, tags record input order.
+        let mut xs: Vec<KV> = (0..200).map(|i| KV(i % 4, i)).collect();
+        stable_merge_sort(&mut xs);
+        for w in xs.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated: {w:?}");
+            }
+        }
+    }
+}

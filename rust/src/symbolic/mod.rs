@@ -1,0 +1,228 @@
+//! Symbolic-regression performance model — paper §7.
+//!
+//! Replaces the GA loop with closed-form quadratics in `x = log10 n` for
+//! each threshold: `T(n) = a·x² + b·x + c` (Eqs. 1–4). Two sources of
+//! coefficients:
+//!
+//! * [`SymbolicModel::paper`] — the paper's exact rational coefficients;
+//! * [`SymbolicModel::fit`] — degree-2 least squares over a GA tuning sweep
+//!   on *this* machine (the honest reproduction path; the harness for
+//!   Figures 7–11 regenerates it).
+//!
+//! The categorical gene is fixed to the LSD radix sort, as §7 does
+//! ("we fixed the categorical choice to Block-Based LSD Radix Sort").
+
+pub mod polyfit;
+
+use crate::params::{ACode, Bounds, SortParams};
+
+/// One quadratic threshold model `T(x) = a·x² + b·x + c`, `x = log10 n`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quadratic {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Quadratic {
+    pub fn eval_x(&self, x: f64) -> f64 {
+        (self.a * x + self.b) * x + self.c
+    }
+
+    pub fn eval_n(&self, n: usize) -> f64 {
+        self.eval_x((n.max(1) as f64).log10())
+    }
+
+    /// Extremum location x* = −b / 2a (paper §7.4).
+    pub fn vertex_x(&self) -> f64 {
+        -self.b / (2.0 * self.a)
+    }
+
+    /// Dataset size at the extremum, n* = 10^x*.
+    pub fn vertex_n(&self) -> f64 {
+        10f64.powf(self.vertex_x())
+    }
+
+    /// Convex (a > 0) → minimum; concave (a < 0) → maximum.
+    pub fn is_convex(&self) -> bool {
+        self.a > 0.0
+    }
+
+    /// Least-squares fit from (n, value) observations.
+    pub fn fit(points: &[(usize, f64)]) -> Option<Quadratic> {
+        let xs: Vec<f64> = points.iter().map(|(n, _)| (*n as f64).log10()).collect();
+        let ys: Vec<f64> = points.iter().map(|(_, v)| *v).collect();
+        let c = polyfit::polyfit(&xs, &ys, 2)?;
+        Some(Quadratic { a: c[2], b: c[1], c: c[0] })
+    }
+
+    /// R² of this model against (n, value) observations.
+    pub fn r_squared(&self, points: &[(usize, f64)]) -> f64 {
+        let xs: Vec<f64> = points.iter().map(|(n, _)| (*n as f64).log10()).collect();
+        let ys: Vec<f64> = points.iter().map(|(_, v)| *v).collect();
+        polyfit::r_squared(&[self.c, self.b, self.a], &xs, &ys)
+    }
+
+    /// Residuals against observations (paper §7.3).
+    pub fn residuals(&self, points: &[(usize, f64)]) -> Vec<f64> {
+        points.iter().map(|&(n, v)| v - self.eval_n(n)).collect()
+    }
+}
+
+/// The four-threshold symbolic model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SymbolicModel {
+    pub insertion: Quadratic,
+    pub parallel_merge: Quadratic,
+    pub fallback: Quadratic,
+    pub tile: Quadratic,
+}
+
+impl SymbolicModel {
+    /// The paper's Eqs. (1)–(4), exact rational coefficients.
+    pub fn paper() -> SymbolicModel {
+        SymbolicModel {
+            // Eq. (1): T_ins
+            insertion: Quadratic {
+                a: 18_093_685.0 / 726_826.0,
+                b: -227_830_214.0 / 693_565.0,
+                c: 1_730_747_635.0 / 502_001.0,
+            },
+            // Eq. (2): T_par
+            parallel_merge: Quadratic {
+                a: -4_279_813_193.0 / 907_161.0,
+                b: 79_199_394_278.0 / 983_501.0,
+                c: -309_812_890_693.0 / 956_422.0,
+            },
+            // Eq. (3): T_np
+            fallback: Quadratic {
+                a: -3_680_680_444.0 / 890_339.0,
+                b: 39_413_203_286.0 / 521_933.0,
+                c: -219_719_696_809.0 / 785_367.0,
+            },
+            // Eq. (4): T_tile
+            tile: Quadratic {
+                a: 2_451_303_315.0 / 877_429.0,
+                b: -7_878_849_997.0 / 184_645.0,
+                c: 157_328_357_967.0 / 943_252.0,
+            },
+        }
+    }
+
+    /// Fit all four models from a GA tuning sweep: `(n, best_params)` pairs.
+    pub fn fit(sweep: &[(usize, SortParams)]) -> Option<SymbolicModel> {
+        let pick =
+            |f: fn(&SortParams) -> usize| -> Vec<(usize, f64)> {
+                sweep.iter().map(|(n, p)| (*n, f(p) as f64)).collect()
+            };
+        Some(SymbolicModel {
+            insertion: Quadratic::fit(&pick(|p| p.insertion_threshold))?,
+            parallel_merge: Quadratic::fit(&pick(|p| p.parallel_merge_threshold))?,
+            fallback: Quadratic::fit(&pick(|p| p.fallback_threshold))?,
+            tile: Quadratic::fit(&pick(|p| p.tile))?,
+        })
+    }
+
+    /// Closed-form parameters for size `n` — the zero-overhead deployment
+    /// path of §7.5. Values are clamped into the genome bounds; the
+    /// algorithm code is fixed to LSD radix sort per §7.
+    pub fn params_for(&self, n: usize) -> SortParams {
+        let b = Bounds::default();
+        let clamp = |q: &Quadratic, r: crate::params::GeneRange| -> usize {
+            r.clamp_val(q.eval_n(n).round() as i64)
+        };
+        SortParams {
+            insertion_threshold: clamp(&self.insertion, b.insertion),
+            parallel_merge_threshold: clamp(&self.parallel_merge, b.parallel_merge),
+            algorithm: ACode::Radix,
+            fallback_threshold: clamp(&self.fallback, b.fallback),
+            tile: clamp(&self.tile, b.tile),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_vertices_match_section_7_4() {
+        let m = SymbolicModel::paper();
+        // T_ins: convex, minimum at x* ≈ 6.60 (n ≈ 4e6).
+        assert!(m.insertion.is_convex());
+        assert!((m.insertion.vertex_x() - 6.60).abs() < 0.02, "{}", m.insertion.vertex_x());
+        // T_par: concave, maximum at x* ≈ 8.54 (n ≈ 3.5e8).
+        assert!(!m.parallel_merge.is_convex());
+        assert!((m.parallel_merge.vertex_x() - 8.54).abs() < 0.02);
+        // T_np: concave, maximum at x* ≈ 9.14 (n ≈ 1.4e9).
+        assert!(!m.fallback.is_convex());
+        assert!((m.fallback.vertex_x() - 9.14).abs() < 0.02);
+        // T_tile: convex, minimum at x* ≈ 7.63 (n ≈ 4.3e7).
+        assert!(m.tile.is_convex());
+        assert!((m.tile.vertex_x() - 7.63).abs() < 0.02);
+    }
+
+    #[test]
+    fn paper_model_params_reasonable_at_paper_sizes() {
+        let m = SymbolicModel::paper();
+        for n in [10_000_000usize, 100_000_000, 1_000_000_000] {
+            let p = m.params_for(n);
+            assert_eq!(p.algorithm, ACode::Radix);
+            // Magnitudes in the same bands the GA found (§6).
+            assert!(p.insertion_threshold >= 16 && p.insertion_threshold <= 100_000);
+            assert!(p.tile >= 64 && p.tile <= 100_000);
+            assert!(Bounds::default().validate(&p.to_genes()));
+        }
+    }
+
+    #[test]
+    fn fit_recovers_known_quadratic() {
+        let truth = Quadratic { a: 100.0, b: -1200.0, c: 5000.0 };
+        let points: Vec<(usize, f64)> = [1e5, 1e6, 1e7, 1e8, 1e9]
+            .iter()
+            .map(|&n| (n as usize, truth.eval_n(n as usize)))
+            .collect();
+        let fit = Quadratic::fit(&points).unwrap();
+        assert!((fit.a - truth.a).abs() < 1e-6, "{fit:?}");
+        assert!((fit.b - truth.b).abs() < 1e-5);
+        assert!((fit.c - truth.c).abs() < 1e-4);
+        assert!(fit.r_squared(&points) > 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn fit_model_from_sweep() {
+        // Synthesise a sweep from the paper model, re-fit, compare curves.
+        let m = SymbolicModel::paper();
+        let sweep: Vec<(usize, SortParams)> = [1e6, 1e7, 1e8, 1e9, 1e10]
+            .iter()
+            .map(|&n| (n as usize, m.params_for(n as usize)))
+            .collect();
+        let refit = SymbolicModel::fit(&sweep).unwrap();
+        for n in [3_000_000usize, 50_000_000, 2_000_000_000] {
+            let a = m.params_for(n);
+            let b = refit.params_for(n);
+            // Clamping can move values near bounds; allow modest deviation.
+            let rel = |x: usize, y: usize| {
+                (x as f64 - y as f64).abs() / (x.max(y).max(1) as f64)
+            };
+            assert!(rel(a.insertion_threshold, b.insertion_threshold) < 0.25);
+            assert!(rel(a.tile, b.tile) < 0.25);
+        }
+    }
+
+    #[test]
+    fn residuals_of_perfect_fit_are_zero() {
+        let q = Quadratic { a: 1.0, b: 2.0, c: 3.0 };
+        let pts: Vec<(usize, f64)> =
+            [1e3, 1e5, 1e7].iter().map(|&n| (n as usize, q.eval_n(n as usize))).collect();
+        for r in q.residuals(&pts) {
+            assert!(r.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn eval_n_guards_zero() {
+        let q = Quadratic { a: 1.0, b: 0.0, c: 0.0 };
+        assert_eq!(q.eval_n(0), 0.0); // log10(1) = 0
+    }
+}

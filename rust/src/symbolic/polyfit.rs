@@ -1,0 +1,171 @@
+//! Least-squares polynomial fitting from scratch (no linear-algebra crates
+//! offline): Vandermonde normal equations solved by Gaussian elimination
+//! with partial pivoting. Degree is small (the paper fixes degree 2 —
+//! "limiting model complexity to degree 2 prevents overfitting", §7.3), so
+//! the normal equations are perfectly conditioned enough in x = log10 n.
+
+/// Fit `ys ≈ Σ coeffs[k] · xs^k` of degree `degree`; returns coefficients
+/// lowest-order first. `None` if there are fewer points than coefficients or
+/// the system is singular.
+pub fn polyfit(xs: &[f64], ys: &[f64], degree: usize) -> Option<Vec<f64>> {
+    assert_eq!(xs.len(), ys.len());
+    let m = degree + 1;
+    if xs.len() < m {
+        return None;
+    }
+    // Normal equations: A^T A c = A^T y with A the Vandermonde matrix.
+    // ata[i][j] = Σ x^(i+j), aty[i] = Σ y·x^i.
+    let mut pow_sums = vec![0.0f64; 2 * degree + 1];
+    let mut aty = vec![0.0f64; m];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let mut xp = 1.0;
+        for p in pow_sums.iter_mut() {
+            *p += xp;
+            xp *= x;
+        }
+        let mut xp = 1.0;
+        for a in aty.iter_mut() {
+            *a += y * xp;
+            xp *= x;
+        }
+    }
+    let mut mat: Vec<Vec<f64>> =
+        (0..m).map(|i| (0..m).map(|j| pow_sums[i + j]).collect()).collect();
+    solve_linear(&mut mat, &mut aty).then_some(aty)
+}
+
+/// In-place Gaussian elimination with partial pivoting: solves `mat·x = rhs`,
+/// leaving the solution in `rhs`. Returns false on a (near-)singular system.
+pub fn solve_linear(mat: &mut [Vec<f64>], rhs: &mut [f64]) -> bool {
+    let n = rhs.len();
+    debug_assert!(mat.len() == n && mat.iter().all(|r| r.len() == n));
+    for col in 0..n {
+        // Partial pivot.
+        let pivot = (col..n)
+            .max_by(|&a, &b| mat[a][col].abs().partial_cmp(&mat[b][col].abs()).unwrap())
+            .unwrap();
+        if mat[pivot][col].abs() < 1e-12 {
+            return false;
+        }
+        mat.swap(col, pivot);
+        rhs.swap(col, pivot);
+        // Eliminate below.
+        for row in col + 1..n {
+            let f = mat[row][col] / mat[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                mat[row][k] -= f * mat[col][k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    for col in (0..n).rev() {
+        let mut acc = rhs[col];
+        for k in col + 1..n {
+            acc -= mat[col][k] * rhs[k];
+        }
+        rhs[col] = acc / mat[col][col];
+    }
+    true
+}
+
+/// Evaluate a polynomial (lowest-order-first coefficients) at `x`.
+pub fn polyval(coeffs: &[f64], x: f64) -> f64 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+/// Residuals `y_i − p(x_i)`.
+pub fn residuals(coeffs: &[f64], xs: &[f64], ys: &[f64]) -> Vec<f64> {
+    xs.iter().zip(ys).map(|(&x, &y)| y - polyval(coeffs, x)).collect()
+}
+
+/// Coefficient of determination R².
+pub fn r_squared(coeffs: &[f64], xs: &[f64], ys: &[f64]) -> f64 {
+    let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|&y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 = residuals(coeffs, xs, ys).iter().map(|r| r * r).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_exact_quadratic() {
+        // y = 2 - 3x + 0.5x²
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 2.0 - 3.0 * x + 0.5 * x * x).collect();
+        let c = polyfit(&xs, &ys, 2).unwrap();
+        assert!((c[0] - 2.0).abs() < 1e-8, "{c:?}");
+        assert!((c[1] + 3.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+        assert!((r_squared(&c, &xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_noisy_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.2).collect();
+        // y = 1 + 4x with deterministic "noise".
+        let ys: Vec<f64> = xs.iter().enumerate().map(|(i, &x)| 1.0 + 4.0 * x + ((i % 3) as f64 - 1.0) * 0.01).collect();
+        let c = polyfit(&xs, &ys, 1).unwrap();
+        assert!((c[0] - 1.0).abs() < 0.02, "{c:?}");
+        assert!((c[1] - 4.0).abs() < 0.01);
+        assert!(r_squared(&c, &xs, &ys) > 0.999);
+    }
+
+    #[test]
+    fn underdetermined_returns_none() {
+        assert!(polyfit(&[1.0, 2.0], &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        // All x identical → singular Vandermonde.
+        let xs = [3.0f64; 5];
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!(polyfit(&xs, &ys, 2).is_none());
+    }
+
+    #[test]
+    fn polyval_horner() {
+        assert_eq!(polyval(&[1.0, 2.0, 3.0], 2.0), 1.0 + 4.0 + 12.0);
+        assert_eq!(polyval(&[], 5.0), 0.0);
+        assert_eq!(polyval(&[7.0], 100.0), 7.0);
+    }
+
+    #[test]
+    fn solve_linear_3x3() {
+        let mut m = vec![
+            vec![2.0, 1.0, -1.0],
+            vec![-3.0, -1.0, 2.0],
+            vec![-2.0, 1.0, 2.0],
+        ];
+        let mut b = vec![8.0, -11.0, -3.0];
+        assert!(solve_linear(&mut m, &mut b));
+        assert!((b[0] - 2.0).abs() < 1e-10);
+        assert!((b[1] - 3.0).abs() < 1e-10);
+        assert!((b[2] + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn residuals_zero_for_exact_fit() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [1.0, 3.0, 5.0]; // y = 1 + 2x
+        let c = polyfit(&xs, &ys, 1).unwrap();
+        for r in residuals(&c, &xs, &ys) {
+            assert!(r.abs() < 1e-10);
+        }
+    }
+}

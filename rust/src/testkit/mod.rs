@@ -1,0 +1,233 @@
+//! Minimal property-based testing framework (proptest is unavailable in the
+//! offline build environment).
+//!
+//! Provides seeded random case generation with **shrinking**: when a case
+//! fails, the runner tries progressively simpler inputs (shorter vectors,
+//! smaller magnitudes) and reports the smallest failure it finds. Used by the
+//! integration tests in `rust/tests/` to check coordinator and sorting
+//! invariants across thousands of random cases.
+
+use crate::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0x7E57, max_shrink_steps: 200 }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok,
+    Failed {
+        /// The original failing case.
+        original: T,
+        /// The smallest failing case found by shrinking.
+        minimal: T,
+        /// Shrink iterations performed.
+        shrink_steps: usize,
+    },
+}
+
+impl<T: std::fmt::Debug> PropResult<T> {
+    /// Panic with a readable report on failure (for use inside `#[test]`s).
+    pub fn unwrap_ok(self) {
+        if let PropResult::Failed { original, minimal, shrink_steps } = self {
+            panic!(
+                "property failed.\n  minimal case ({shrink_steps} shrinks): {minimal:?}\n  original case: {original:?}"
+            );
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, PropResult::Ok)
+    }
+}
+
+/// A value generator with an associated shrinker.
+pub trait Arbitrary: Sized + Clone {
+    fn generate(rng: &mut Xoshiro256pp) -> Self;
+    /// Candidate simplifications, *simplest first*. Empty = fully shrunk.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+/// Run `prop` over `config.cases` random cases; on failure, shrink.
+pub fn check<T: Arbitrary + std::fmt::Debug>(
+    config: PropConfig,
+    prop: impl Fn(&T) -> bool,
+) -> PropResult<T> {
+    let mut rng = Xoshiro256pp::seeded(config.seed);
+    for _ in 0..config.cases {
+        let case = T::generate(&mut rng);
+        if !prop(&case) {
+            let (minimal, steps) = shrink_loop(case.clone(), &prop, config.max_shrink_steps);
+            return PropResult::Failed { original: case, minimal, shrink_steps: steps };
+        }
+    }
+    PropResult::Ok
+}
+
+fn shrink_loop<T: Arbitrary>(
+    mut current: T,
+    prop: &impl Fn(&T) -> bool,
+    max_steps: usize,
+) -> (T, usize) {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in current.shrink() {
+            steps += 1;
+            if !prop(&cand) {
+                current = cand;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break; // no shrink candidate fails -> minimal
+    }
+    (current, steps)
+}
+
+// ---------------------------------------------------------------------------
+// Built-in Arbitrary instances used by the test suites.
+// ---------------------------------------------------------------------------
+
+/// Random i64 vector (length 0..=512, values spanning the full range with a
+/// bias toward small magnitudes and duplicates — the interesting cases).
+impl Arbitrary for Vec<i64> {
+    fn generate(rng: &mut Xoshiro256pp) -> Self {
+        let len = rng.below(513);
+        (0..len)
+            .map(|_| match rng.below(5) {
+                0 => rng.range_i64(-3, 3), // duplicates
+                1 => rng.next_u64() as i64, // full range
+                2 => i64::MIN + rng.range_i64(0, 2),
+                3 => i64::MAX - rng.range_i64(0, 2),
+                _ => rng.range_i64(-1_000_000_000, 1_000_000_000), // paper interval
+            })
+            .collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // Halves first (aggressive), then drop-one, then zero-out values.
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        if n <= 16 {
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..n {
+                if self[i] != 0 {
+                    let mut v = self.clone();
+                    v[i] = 0;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Random genome within default bounds (occasionally out-of-bounds to test
+/// clamping at API boundaries).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArbGenome(pub [i64; 5]);
+
+impl Arbitrary for ArbGenome {
+    fn generate(rng: &mut Xoshiro256pp) -> Self {
+        let bounds = crate::params::Bounds::default();
+        let mut g =
+            crate::ga::individual::random_genome(&bounds, rng);
+        // 10% of cases: perturb one gene out of bounds.
+        if rng.below(10) == 0 {
+            let i = rng.below(5);
+            g[i] = if rng.below(2) == 0 { -1 } else { i64::MAX / 2 };
+        }
+        ArbGenome(g)
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for i in 0..5 {
+            let lo = crate::params::Bounds::default().gene(i).lo;
+            if self.0[i] != lo {
+                let mut g = self.0;
+                g[i] = lo;
+                out.push(ArbGenome(g));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_ok() {
+        let r = check::<Vec<i64>>(PropConfig::default(), |v| {
+            let mut s = v.clone();
+            s.sort_unstable();
+            s.len() == v.len()
+        });
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Property: "no vector contains a negative number" — false; the
+        // minimal counterexample should be tiny.
+        let r = check::<Vec<i64>>(
+            PropConfig { cases: 200, ..Default::default() },
+            |v| v.iter().all(|&x| x >= 0),
+        );
+        match r {
+            PropResult::Failed { minimal, .. } => {
+                assert!(minimal.len() <= 2, "shrunk to {minimal:?}");
+            }
+            PropResult::Ok => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn shrinking_respects_budget() {
+        let r = check::<Vec<i64>>(
+            PropConfig { cases: 10, max_shrink_steps: 3, ..Default::default() },
+            |v| v.len() < 2,
+        );
+        if let PropResult::Failed { shrink_steps, .. } = r {
+            assert!(shrink_steps <= 3 + 16); // one final pass may overshoot per-candidate
+        }
+    }
+
+    #[test]
+    fn genome_generator_mostly_valid() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let bounds = crate::params::Bounds::default();
+        let mut valid = 0;
+        for _ in 0..100 {
+            if bounds.validate(&ArbGenome::generate(&mut rng).0) {
+                valid += 1;
+            }
+        }
+        assert!(valid > 70, "{valid}");
+        assert!(valid < 100, "should sometimes generate out-of-bounds");
+    }
+}

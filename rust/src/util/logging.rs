@@ -1,0 +1,104 @@
+//! Minimal leveled logger (stderr), controlled by `EVOSORT_LOG`.
+//!
+//! Levels: `error` < `warn` < `info` < `debug` < `trace`. Defaults to `info`.
+//! This replaces the `log`/`env_logger` stack, which is unavailable offline.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static INIT: Once = Once::new();
+
+/// Initialise the log level from `EVOSORT_LOG` (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("EVOSORT_LOG") {
+            if let Some(l) = Level::from_env(&v) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Override the log level programmatically.
+pub fn set_level(level: Level) {
+    INIT.call_once(|| {});
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    init();
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a record; prefer the `info!`/`debug!`-style macros below.
+pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[evosort {:5} {module}] {args}", level.as_str());
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_env("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_env("bogus"), None);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,95 @@
+//! Small shared utilities: timing, logging, human-readable formatting.
+//!
+//! These are deliberately dependency-free (`std` only) — the offline build
+//! environment carries no `log`/`tracing`/`humantime` crates, and the needs of
+//! the framework are simple enough that a few hundred lines cover them.
+
+pub mod logging;
+pub mod stats;
+pub mod timer;
+
+/// Format an element count like the paper does: `1e7`, `5e8`, `1e10`.
+pub fn fmt_count(n: usize) -> String {
+    if n == 0 {
+        return "0".to_string();
+    }
+    let nf = n as f64;
+    let exp = nf.log10().floor() as i32;
+    let mantissa = nf / 10f64.powi(exp);
+    if (mantissa - 1.0).abs() < 1e-9 {
+        format!("1e{exp}")
+    } else if (mantissa - mantissa.round()).abs() < 1e-9 {
+        format!("{:.0}e{exp}", mantissa)
+    } else {
+        format!("{:.2}e{exp}", mantissa)
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds the way the paper's tables do (4 decimal places for small
+/// values, fewer for large ones).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.0001 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 10.0 {
+        format!("{s:.4}s")
+    } else if s < 100.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// Number of worker threads to use by default: the full machine, like the
+/// paper's "256 threads for Numba's parallel execution".
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_count_paper_style() {
+        assert_eq!(fmt_count(10_000_000), "1e7");
+        assert_eq!(fmt_count(500_000_000), "5e8");
+        assert_eq!(fmt_count(10_000_000_000), "1e10");
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(1), "1e0");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.2416), "0.2416s");
+        assert_eq!(fmt_secs(11.1105), "11.11s");
+        assert_eq!(fmt_secs(1164.9239), "1164.9s");
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

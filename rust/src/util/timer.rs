@@ -1,0 +1,115 @@
+//! Wall-clock timing helpers used by the fitness function, the bench harness
+//! and the metrics layer.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning `(result, elapsed_seconds)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// A simple re-startable stopwatch accumulating total elapsed time.
+#[derive(Debug)]
+pub struct Stopwatch {
+    accumulated: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { accumulated: Duration::ZERO, started: None }
+    }
+
+    /// Create a stopwatch that is already running.
+    pub fn started() -> Self {
+        Stopwatch { accumulated: Duration::ZERO, started: Some(Instant::now()) }
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.accumulated += s.elapsed();
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.started.is_some()
+    }
+
+    /// Total elapsed time including any in-flight interval.
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(s) => self.accumulated + s.elapsed(),
+            None => self.accumulated,
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.accumulated = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result_and_positive_elapsed() {
+        let (v, secs) = time(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        assert!(!sw.is_running());
+        sw.start();
+        assert!(sw.is_running());
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        let t1 = sw.elapsed_secs();
+        assert!(t1 > 0.0);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.elapsed_secs() > t1);
+        sw.reset();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stopwatch_started_runs() {
+        let sw = Stopwatch::started();
+        assert!(sw.is_running());
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn double_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        sw.start();
+        sw.stop();
+        sw.stop(); // double stop is a no-op too
+        assert!(!sw.is_running());
+    }
+}

@@ -1,0 +1,99 @@
+//! GA-tuner integration: convergence behaviour on a real fitness landscape,
+//! the gen-0 spread the paper's figures show, and the §7 round trip
+//! (GA sweep → quadratic fit → deployable params).
+
+use evosort::data::Distribution;
+use evosort::ga::{GaConfig, GaDriver, SortTimingFitness};
+use evosort::params::{ACode, Bounds, SortParams};
+use evosort::sort::AdaptiveSorter;
+use evosort::symbolic::SymbolicModel;
+
+#[test]
+fn ga_converges_on_real_landscape() {
+    // On 300k uniform i64, radix configurations dominate merge ones, so the
+    // GA should (a) improve from gen 0 and (b) end on a radix genome.
+    let sample = evosort::data::generate_i64(300_000, Distribution::Uniform, 3, 2);
+    let fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 2);
+    let cfg = GaConfig { population: 14, generations: 6, seed: 21, ..Default::default() };
+    let r = GaDriver::new(cfg).run(fitness);
+
+    let g0 = &r.history[0];
+    let last = r.history.last().unwrap();
+    assert!(
+        last.best <= g0.average,
+        "final best ({:.4}) should beat the gen-0 average ({:.4})",
+        last.best,
+        g0.average
+    );
+    assert_eq!(
+        SortParams::from_genes(&r.best_genome).algorithm,
+        ACode::Radix,
+        "radix should win on large uniform integers (paper §6: A_code = 4)"
+    );
+    assert!(Bounds::default().validate(&r.best_genome));
+}
+
+#[test]
+fn ga_generation0_spread_is_wide() {
+    // The paper's Figures 2-6 show a wide gen-0 spread (bad configs are
+    // *much* worse). Log-uniform init should reproduce that.
+    let sample = evosort::data::generate_i64(200_000, Distribution::Uniform, 5, 2);
+    let fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1);
+    let cfg = GaConfig { population: 16, generations: 1, seed: 23, ..Default::default() };
+    let r = GaDriver::new(cfg).run(fitness);
+    let g0 = &r.history[0];
+    assert!(
+        g0.worst > g0.best * 1.5,
+        "gen-0 spread too narrow: best {:.4} worst {:.4}",
+        g0.best,
+        g0.worst
+    );
+}
+
+#[test]
+fn sweep_fit_deploy_roundtrip() {
+    // §7 end-to-end at test scale: GA sweep over sizes → quadratic fit →
+    // params_for(n) must produce valid, radix-coded configurations that
+    // actually sort.
+    let threads = 2;
+    let sizes = [50_000usize, 100_000, 200_000, 400_000, 800_000];
+    let mut sweep = Vec::new();
+    for &n in &sizes {
+        let cfg = GaConfig { population: 6, generations: 3, seed: 31 ^ n as u64, ..Default::default() };
+        let r = GaDriver::new(cfg).run_for_size(
+            n,
+            200_000,
+            Distribution::Uniform,
+            AdaptiveSorter::new(threads),
+        );
+        sweep.push((n, r.best));
+    }
+    let model = SymbolicModel::fit(&sweep).expect("quadratic fit");
+    for n in [75_000usize, 300_000, 600_000] {
+        let p = model.params_for(n);
+        assert_eq!(p.algorithm, ACode::Radix);
+        assert!(Bounds::default().validate(&p.to_genes()), "params_for({n}) out of bounds: {p}");
+        // Deploy: the params must actually sort.
+        let mut data = evosort::data::generate_i64(n, Distribution::Uniform, 7, threads);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        AdaptiveSorter::new(threads).sort_i64(&mut data, &p);
+        assert_eq!(data, expect);
+    }
+}
+
+#[test]
+fn fitness_never_disqualifies_valid_stack() {
+    // Every genome the GA proposes must evaluate finite (no configuration of
+    // a correct stack should be disqualified by the validation gate).
+    let sample = evosort::data::generate_i64(50_000, Distribution::Uniform, 9, 2);
+    let mut fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1);
+    use evosort::rng::Xoshiro256pp;
+    let bounds = Bounds::default();
+    let mut rng = Xoshiro256pp::seeded(33);
+    for _ in 0..30 {
+        let g = evosort::ga::individual::random_genome(&bounds, &mut rng);
+        let t = fitness.eval(&g);
+        assert!(t.is_finite(), "genome {g:?} was disqualified");
+    }
+}

@@ -1,0 +1,111 @@
+//! End-to-end master-pipeline tests (Algorithm 1): GA tuning → generation →
+//! sort → validation → baseline comparison, plus the symbolic variant and
+//! the Table-1 "shape" assertions at test scale.
+
+use evosort::coordinator::{pipeline, ParamSource, PipelineConfig};
+use evosort::data::Distribution;
+use evosort::ga::GaConfig;
+use evosort::params::ACode;
+use evosort::sort::Baseline;
+use evosort::symbolic::SymbolicModel;
+
+#[test]
+fn ga_pipeline_validates_and_records_history() {
+    let config = PipelineConfig {
+        sizes: vec![200_000, 600_000],
+        dist: Distribution::Uniform,
+        seed: 7,
+        threads: 2,
+        params: ParamSource::Ga(GaConfig {
+            population: 6,
+            generations: 3,
+            seed: 7,
+            ..Default::default()
+        }),
+        sample_cap: 200_000,
+        baselines: vec![Baseline::Quicksort, Baseline::Mergesort],
+    };
+    let rows = pipeline::run(&config);
+    assert_eq!(rows.len(), 2);
+    for row in &rows {
+        assert!(row.validated);
+        let ga = row.ga.as_ref().unwrap();
+        assert_eq!(ga.history.len(), 4);
+        // Elitism: the best fitness never regresses across generations.
+        for w in ga.history.windows(2) {
+            assert!(w[1].best <= w[0].best + 1e-9);
+        }
+        assert_eq!(row.baselines.len(), 2);
+    }
+}
+
+#[test]
+fn symbolic_pipeline_speedup_shape() {
+    // Table-1 shape at test scale: EvoSort (multi-pass linear radix) must
+    // beat the sequential mergesort baseline on uniform integers, and the
+    // speedup should not collapse as n grows.
+    let config = PipelineConfig {
+        sizes: vec![1_000_000, 4_000_000],
+        dist: Distribution::Uniform,
+        seed: 11,
+        threads: 2,
+        params: ParamSource::Symbolic(SymbolicModel::paper()),
+        sample_cap: 0,
+        baselines: vec![Baseline::Mergesort],
+    };
+    let rows = pipeline::run(&config);
+    for row in &rows {
+        assert!(row.validated);
+        assert_eq!(row.params.algorithm, ACode::Radix, "§7 fixes A_code to radix");
+        assert!(
+            row.best_speedup() > 1.0,
+            "EvoSort should beat the sequential mergesort baseline at n={} (got {:.2}x)",
+            row.n,
+            row.best_speedup()
+        );
+    }
+    assert!(
+        rows[1].best_speedup() >= rows[0].best_speedup() * 0.8,
+        "speedup should not collapse with n: {:.2}x -> {:.2}x",
+        rows[0].best_speedup(),
+        rows[1].best_speedup()
+    );
+}
+
+#[test]
+fn pipeline_nonuniform_distributions_validate() {
+    for dist in [Distribution::Zipf, Distribution::NearlySorted, Distribution::FewUnique] {
+        let config = PipelineConfig {
+            sizes: vec![300_000],
+            dist,
+            seed: 13,
+            threads: 2,
+            params: ParamSource::Fixed(evosort::params::SortParams::paper_1e7()),
+            sample_cap: 0,
+            baselines: vec![],
+        };
+        let rows = pipeline::run(&config);
+        assert!(rows[0].validated, "{}", dist.name());
+    }
+}
+
+#[test]
+fn fixed_params_merge_path_validates() {
+    let params = evosort::params::SortParams {
+        algorithm: ACode::Merge,
+        fallback_threshold: 1000,
+        ..Default::default()
+    };
+    let config = PipelineConfig {
+        sizes: vec![500_000],
+        dist: Distribution::Gaussian,
+        seed: 17,
+        threads: 3,
+        params: ParamSource::Fixed(params),
+        sample_cap: 0,
+        baselines: vec![Baseline::Std],
+    };
+    let rows = pipeline::run(&config);
+    assert!(rows[0].validated);
+    assert_eq!(rows[0].params.algorithm, ACode::Merge);
+}

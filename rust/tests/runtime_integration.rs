@@ -1,0 +1,98 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts emitted by
+//! `make artifacts`, compile on the CPU client, execute, and check numerics
+//! against the rust-side oracles. Skipped (with a loud message) when
+//! artifacts are missing.
+
+use evosort::data::{generate_i32, Distribution};
+use evosort::params::{ACode, SortParams};
+use evosort::runtime::{Manifest, XlaTileSorter};
+use evosort::sort::{AdaptiveSorter, TileSorter};
+
+fn load_backend() -> Option<XlaTileSorter> {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => match XlaTileSorter::new(&m) {
+            Ok(b) => Some(b),
+            Err(e) => panic!("artifacts exist but backend failed: {e:#}"),
+        },
+        Err(_) => {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn tile_sort_artifact_sorts_rows() {
+    let Some(backend) = load_backend() else { return };
+    let tile = backend.tile_size();
+    let n_tiles = 5;
+    let mut data = generate_i32(tile * n_tiles, Distribution::Uniform, 1, 2);
+    let original = data.clone();
+    backend.sort_tiles_i32(&mut data).unwrap();
+    for (t, chunk) in data.chunks(tile).enumerate() {
+        assert!(chunk.windows(2).all(|w| w[0] <= w[1]), "tile {t} unsorted");
+        // Same multiset per tile.
+        let mut got = chunk.to_vec();
+        let mut want = original[t * tile..(t + 1) * tile].to_vec();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "tile {t} multiset");
+    }
+}
+
+#[test]
+fn tile_sort_handles_partial_batch() {
+    let Some(backend) = load_backend() else { return };
+    let tile = backend.tile_size();
+    // More tiles than one executable batch, not a multiple of the batch.
+    let n_tiles = backend.batch() + 3;
+    let mut data = generate_i32(tile * n_tiles, Distribution::Uniform, 3, 2);
+    backend.sort_tiles_i32(&mut data).unwrap();
+    for chunk in data.chunks(tile) {
+        assert!(chunk.windows(2).all(|w| w[0] <= w[1]));
+    }
+}
+
+#[test]
+fn tile_sort_rejects_ragged_input() {
+    let Some(backend) = load_backend() else { return };
+    let mut data = vec![0i32; backend.tile_size() + 1];
+    assert!(backend.sort_tiles_i32(&mut data).is_err());
+}
+
+#[test]
+fn histogram_artifact_matches_rust_oracle() {
+    let Some(backend) = load_backend() else { return };
+    let tile = backend.tile_size();
+    let batch = backend.batch();
+    let data = generate_i32(tile * batch, Distribution::Uniform, 5, 2);
+    for shift in [0i32, 8, 16, 24] {
+        let hists = backend.histogram_batch(data.clone(), shift).unwrap();
+        assert_eq!(hists.len(), batch * 256);
+        for (b, block) in data.chunks(tile).enumerate() {
+            let mut want = [0i32; 256];
+            for &x in block {
+                want[((x as u32 >> shift) & 0xFF) as usize] += 1;
+            }
+            assert_eq!(&hists[b * 256..(b + 1) * 256], &want[..], "block {b} shift {shift}");
+        }
+    }
+}
+
+#[test]
+fn adaptive_sorter_uses_xla_backend_end_to_end() {
+    let Some(backend) = load_backend() else { return };
+    let sorter = AdaptiveSorter::new(4).with_xla(std::sync::Arc::new(backend));
+    let params = SortParams {
+        algorithm: ACode::XlaTile,
+        fallback_threshold: 16,
+        ..SortParams::default()
+    };
+    // Length deliberately not a multiple of the tile size.
+    let mut data = generate_i32(50_000 + 123, Distribution::Uniform, 7, 4);
+    let mut expect = data.clone();
+    expect.sort_unstable();
+    sorter.sort_i32(&mut data, &params);
+    assert_eq!(data, expect);
+}

@@ -1,0 +1,87 @@
+//! Sort-service integration: concurrency, backpressure, parameter
+//! resolution, metrics accounting and cache persistence round-trips.
+
+use evosort::coordinator::{ServiceConfig, SortJob, SortService, TuningCache};
+use evosort::data::{generate_i64, Distribution};
+use evosort::params::SortParams;
+
+#[test]
+fn service_sorts_mixed_workloads_concurrently() {
+    let svc = SortService::new(ServiceConfig { workers: 3, sort_threads: 2, queue_capacity: 4 });
+    let workloads = [
+        (Distribution::Uniform, "uniform"),
+        (Distribution::Zipf, "zipf"),
+        (Distribution::Reverse, "reverse"),
+        (Distribution::FewUnique, "few-unique"),
+    ];
+    let handles: Vec<_> = (0..20)
+        .map(|i| {
+            let (dist, name) = workloads[i % workloads.len()];
+            let n = 20_000 + (i * 7919) % 60_000; // varied sizes
+            let data = generate_i64(n, dist, i as u64, 2);
+            let mut job = SortJob::new(data);
+            job.dist = name.to_string();
+            svc.submit(job)
+        })
+        .collect();
+    for h in handles {
+        let out = h.wait();
+        assert!(out.valid);
+        assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+    }
+    assert_eq!(svc.metrics().counter("jobs.completed"), 20);
+    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+    let lat = svc.metrics().latency("sort.latency").unwrap();
+    assert_eq!(lat.count(), 20);
+    assert!(lat.mean() > 0.0);
+}
+
+#[test]
+fn backpressure_queue_smaller_than_jobs() {
+    // queue_capacity 1 with 1 worker: submissions block but all complete.
+    let svc = SortService::new(ServiceConfig { workers: 1, sort_threads: 1, queue_capacity: 1 });
+    let handles: Vec<_> = (0..8)
+        .map(|i| svc.submit(SortJob::new(generate_i64(30_000, Distribution::Uniform, i, 1))))
+        .collect();
+    for h in handles {
+        assert!(h.wait().valid);
+    }
+    assert_eq!(svc.metrics().counter("jobs.completed"), 8);
+}
+
+#[test]
+fn tuning_cache_lifecycle_through_service() {
+    let svc = SortService::new(ServiceConfig { workers: 1, sort_threads: 2, queue_capacity: 8 });
+
+    // Cold: symbolic model used.
+    let out = svc.submit(SortJob::new(generate_i64(400_000, Distribution::Uniform, 1, 2))).wait();
+    assert!(out.valid);
+    assert_eq!(svc.metrics().counter("params.symbolic"), 1);
+
+    // Warm the cache, resubmit same class: cache hit with cached params.
+    svc.cache().put(400_000, "uniform", SortParams::paper_1e8());
+    let out = svc.submit(SortJob::new(generate_i64(450_000, Distribution::Uniform, 2, 2))).wait();
+    assert_eq!(out.params, SortParams::paper_1e8());
+    assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+
+    // Persist + reload the cache (deployment restart scenario).
+    let path = std::env::temp_dir().join(format!("evosort-svc-cache-{}.txt", std::process::id()));
+    svc.cache().save(&path).unwrap();
+    let reloaded = TuningCache::load(&path).unwrap();
+    assert_eq!(reloaded.get(420_000, "uniform"), Some(SortParams::paper_1e8()));
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn throughput_accounting() {
+    let svc = SortService::new(ServiceConfig { workers: 2, sort_threads: 1, queue_capacity: 8 });
+    let sizes = [10_000usize, 20_000, 30_000];
+    for (i, &n) in sizes.iter().enumerate() {
+        let _ = svc.submit(SortJob::new(generate_i64(n, Distribution::Uniform, i as u64, 1)));
+    }
+    svc.drain();
+    assert_eq!(
+        svc.metrics().counter("elements.sorted"),
+        sizes.iter().sum::<usize>() as u64
+    );
+}
