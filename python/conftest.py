@@ -1,0 +1,11 @@
+"""Pytest bootstrap for the Pallas/AOT layer.
+
+Makes the ``compile`` package importable when the suite is launched from the
+repository root (``python -m pytest python/tests -q``), regardless of
+pytest's rootdir heuristics.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

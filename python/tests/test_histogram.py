@@ -2,6 +2,10 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", exc_type=ImportError, reason="jax unavailable: Pallas kernel tests skipped")
+pytest.importorskip("hypothesis", exc_type=ImportError, reason="hypothesis unavailable: property tests skipped")
+
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -277,7 +277,9 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `evosort serve` — run the sort service demo.
+/// `evosort serve` — run the sort service demo. With `--batch`, jobs go
+/// through the batched submission path (shared work queue, per-shard scratch
+/// reuse) and the p50/p99/jobs-per-sec report is printed.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.usize_or("jobs", 16)?;
     let n = args.usize_or("n", 1_000_000)?;
@@ -288,6 +290,23 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         sort_threads: (threads / workers.max(1)).max(1),
         queue_capacity: 64,
     });
+    if args.has("batch") {
+        let workload = crate::coordinator::BatchWorkload {
+            jobs,
+            sizes: vec![n, n / 4, n / 16, 1.max(n / 64), 0, 1],
+            seed: args.u64_or("seed", 42)?,
+            ..Default::default()
+        };
+        println!(
+            "batched service: {workers} workers, one batch of {jobs} mixed jobs (max {} elements)",
+            fmt_count(n)
+        );
+        let report = workload.run(&svc, threads);
+        println!("{}", crate::coordinator::pipeline::batch_summary_line(&report));
+        println!("\nmetrics:\n{}", svc.metrics().report());
+        anyhow::ensure!(report.stats.invalid == 0, "{} jobs failed validation", report.stats.invalid);
+        return Ok(());
+    }
     println!("service: {workers} workers, {jobs} jobs of {} elements", fmt_count(n));
     let dists = ["uniform", "zipf", "gaussian", "nearly-sorted"];
     let handles: Vec<_> = (0..jobs)

@@ -124,7 +124,9 @@ COMMANDS
   symbolic  [--paper] [--sweep 1e5,1e6,1e7] [--n 1e8] (prints params; with
             --sweep, fits quadratics to a fresh GA sweep — Figures 7–11)
   repro     --table 1|2 [--scale-div 100] (regenerate a paper table, scaled)
-  serve     [--jobs 16] [--workers 2] [--n 1e6] (service demo + metrics)
+  serve     [--jobs 16] [--workers 2] [--n 1e6] [--batch] (service demo +
+            metrics; --batch submits one mixed batch and reports p50/p99
+            latency and jobs/sec)
   info      (platform, threads, artifact status)
 
 FLAGS common: --threads N (default: all cores), --seed S, --dist DIST

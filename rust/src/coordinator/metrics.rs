@@ -1,5 +1,6 @@
-//! Metrics registry for the sort service: lock-free counters plus
-//! Welford-backed latency series, all `Send + Sync`.
+//! Metrics registry for the sort service: lock-free counters, Welford-backed
+//! latency series, gauges, and bounded sample windows for percentile queries
+//! (p50/p99 batch latency), all `Send + Sync`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -7,11 +8,66 @@ use std::sync::Mutex;
 
 use crate::util::stats::Welford;
 
+/// How many recent samples a percentile window retains per series.
+const SAMPLE_WINDOW: usize = 8192;
+
+/// A sliding window of recent f64 observations (ring buffer) supporting
+/// percentile queries. Welford summaries cannot answer p99; a bounded window
+/// keeps memory O(1) under service-lifetime traffic.
+#[derive(Debug, Clone, Default)]
+pub struct SampleWindow {
+    values: Vec<f64>,
+    next: usize,
+    total: u64,
+}
+
+impl SampleWindow {
+    pub fn push(&mut self, x: f64) {
+        if self.values.len() < SAMPLE_WINDOW {
+            self.values.push(x);
+        } else {
+            self.values[self.next] = x;
+            self.next = (self.next + 1) % SAMPLE_WINDOW;
+        }
+        self.total += 1;
+    }
+
+    /// Observations ever pushed (window holds min(total, capacity)).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Nearest-rank percentile over the retained window; `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        percentile_of_unsorted(&self.values, q)
+    }
+}
+
+/// Nearest-rank percentile of an unsorted sample set (`q` in [0, 100]).
+pub fn percentile_of_unsorted(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    Some(percentile_of_sorted(&sorted, q))
+}
+
+/// Nearest-rank percentile of an already-sorted, non-empty sample set.
+pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = ((q / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Registry shared across service workers.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, AtomicU64>>,
     latencies: Mutex<HashMap<String, Welford>>,
+    gauges: Mutex<HashMap<String, f64>>,
+    samples: Mutex<HashMap<String, SampleWindow>>,
 }
 
 impl Metrics {
@@ -50,6 +106,25 @@ impl Metrics {
         self.latencies.lock().unwrap().get(name).copied()
     }
 
+    /// Set a gauge (latest-value metric, e.g. `batch.jobs_per_sec`).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Record an observation into a bounded percentile window.
+    pub fn observe_sample(&self, name: &str, value: f64) {
+        self.samples.lock().unwrap().entry(name.to_string()).or_default().push(value);
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 100]) over a sample window.
+    pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
+        self.samples.lock().unwrap().get(name).and_then(|w| w.percentile(q))
+    }
+
     /// Render a human-readable report (CLI `info`/`serve` output).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -74,6 +149,23 @@ impl Metrics {
                 w.min(),
                 w.max(),
                 w.stddev()
+            ));
+        }
+        let gauges = self.gauges.lock().unwrap();
+        let mut names: Vec<&String> = gauges.keys().collect();
+        names.sort();
+        for name in names {
+            out.push_str(&format!("gauge {name} = {:.6}\n", gauges[name]));
+        }
+        let samples = self.samples.lock().unwrap();
+        let mut names: Vec<&String> = samples.keys().collect();
+        names.sort();
+        for name in names {
+            let w = &samples[name];
+            let (p50, p99) = (w.percentile(50.0).unwrap_or(0.0), w.percentile(99.0).unwrap_or(0.0));
+            out.push_str(&format!(
+                "samples {name}: n={} p50={p50:.6} p99={p99:.6}\n",
+                w.total()
             ));
         }
         out
@@ -128,8 +220,63 @@ mod tests {
         let m = Metrics::new();
         m.incr("a");
         m.observe("b", 2.0);
+        m.set_gauge("g", 1.25);
+        m.observe_sample("s", 0.5);
         let r = m.report();
         assert!(r.contains("counter a = 1"));
         assert!(r.contains("latency b:"));
+        assert!(r.contains("gauge g = 1.250000"));
+        assert!(r.contains("samples s: n=1"));
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        assert!(m.gauge("x").is_none());
+        m.set_gauge("x", 1.0);
+        m.set_gauge("x", 2.5);
+        assert_eq!(m.gauge("x"), Some(2.5));
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // 1..=100: p50 = 50, p99 = 99, p100 = 100, p1 = 1.
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_sample("lat", i as f64);
+        }
+        assert_eq!(m.percentile("lat", 50.0), Some(50.0));
+        assert_eq!(m.percentile("lat", 99.0), Some(99.0));
+        assert_eq!(m.percentile("lat", 100.0), Some(100.0));
+        assert_eq!(m.percentile("lat", 1.0), Some(1.0));
+        assert_eq!(m.percentile("lat", 0.0), Some(1.0));
+        assert!(m.percentile("missing", 50.0).is_none());
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let m = Metrics::new();
+        m.observe_sample("one", 7.5);
+        assert_eq!(m.percentile("one", 50.0), Some(7.5));
+        assert_eq!(m.percentile("one", 99.0), Some(7.5));
+    }
+
+    #[test]
+    fn sample_window_slides() {
+        let mut w = SampleWindow::default();
+        for i in 0..(SAMPLE_WINDOW + 100) {
+            w.push(i as f64);
+        }
+        assert_eq!(w.total(), (SAMPLE_WINDOW + 100) as u64);
+        // Oldest 100 samples evicted: the minimum retained value is >= 100.
+        assert!(w.percentile(0.0).unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn percentile_helpers() {
+        assert_eq!(percentile_of_unsorted(&[], 50.0), None);
+        assert_eq!(percentile_of_unsorted(&[3.0, 1.0, 2.0], 50.0), Some(2.0));
+        assert_eq!(percentile_of_sorted(&[1.0, 2.0, 3.0], 100.0), 3.0);
+        assert_eq!(percentile_of_sorted(&[42.0], 99.0), 42.0);
     }
 }

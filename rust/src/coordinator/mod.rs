@@ -7,6 +7,9 @@ pub mod service;
 pub mod tuning_cache;
 
 pub use metrics::Metrics;
-pub use pipeline::{ParamSource, PipelineConfig, PipelineRow};
-pub use service::{JobHandle, ServiceConfig, SortJob, SortOutcome, SortService};
+pub use pipeline::{BatchWorkload, ParamSource, PipelineConfig, PipelineRow};
+pub use service::{
+    BatchHandle, BatchReport, BatchStats, JobHandle, ServiceConfig, SortJob, SortOutcome,
+    SortService,
+};
 pub use tuning_cache::TuningCache;

@@ -1,10 +1,17 @@
-//! The EvoSort master pipeline — Algorithm 1 of the paper.
+//! The EvoSort master pipeline — Algorithm 1 of the paper — plus the batched
+//! service workload driver.
 //!
 //! For each requested dataset size: run GA tuning, generate the data array,
 //! compute the reference sort, run Adaptive Partition Sort with the tuned
 //! parameters, assert the output matches the reference, and compare runtime
 //! against the baselines (the paper's `np.sort` quicksort/mergesort).
+//!
+//! [`BatchWorkload`] models the service-traffic shape (many independent jobs
+//! of mixed sizes and distributions) and drives it through
+//! [`SortService::submit_batch`](crate::coordinator::SortService::submit_batch),
+//! reporting jobs/sec and p50/p99 latency.
 
+use crate::coordinator::service::{BatchReport, SortJob, SortService};
 use crate::data::{self, validate, Distribution};
 use crate::ga::{GaConfig, GaDriver, GaResult};
 use crate::params::SortParams;
@@ -154,6 +161,78 @@ pub fn run_with_sorter(config: &PipelineConfig, sorter: AdaptiveSorter) -> Vec<P
     rows
 }
 
+/// A deterministic mixed workload for the batched service path: `jobs` jobs
+/// whose sizes and distributions cycle through the given lists (coprime-ish
+/// list lengths give good mixing), with per-job seeds derived from `seed`.
+#[derive(Debug, Clone)]
+pub struct BatchWorkload {
+    pub jobs: usize,
+    pub sizes: Vec<usize>,
+    pub dists: Vec<Distribution>,
+    pub seed: u64,
+    /// Validate each job's output inside the service (one extra pass).
+    pub validate: bool,
+}
+
+impl Default for BatchWorkload {
+    fn default() -> Self {
+        BatchWorkload {
+            jobs: 1000,
+            sizes: vec![1_000, 4_000, 16_000, 64_000, 0, 1, 250_000],
+            dists: vec![
+                Distribution::Uniform,
+                Distribution::Zipf,
+                Distribution::NearlySorted,
+                Distribution::FewUnique,
+            ],
+            seed: 42,
+            validate: true,
+        }
+    }
+}
+
+impl BatchWorkload {
+    /// Materialise the job list (deterministic for a fixed config).
+    pub fn generate(&self, threads: usize) -> Vec<SortJob> {
+        assert!(!self.sizes.is_empty() && !self.dists.is_empty(), "workload lists must be non-empty");
+        (0..self.jobs)
+            .map(|i| {
+                let n = self.sizes[i % self.sizes.len()];
+                let dist = self.dists[i % self.dists.len()];
+                let seed = self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut job = SortJob::new(data::generate_i64(n, dist, seed, threads));
+                job.dist = dist.name().to_string();
+                job.validate = self.validate;
+                job
+            })
+            .collect()
+    }
+
+    /// Generate the workload and push it through the batched service path.
+    /// Callers print [`batch_summary_line`] themselves; this only logs at
+    /// debug level to avoid duplicating CLI output.
+    pub fn run(&self, svc: &SortService, threads: usize) -> BatchReport {
+        let jobs = self.generate(threads);
+        let report = svc.submit_batch(jobs).wait();
+        crate::log_debug!("{}", batch_summary_line(&report));
+        report
+    }
+}
+
+/// One-line human-readable summary of a [`BatchReport`].
+pub fn batch_summary_line(report: &BatchReport) -> String {
+    format!(
+        "batch: {} jobs ({} elems) in {}  {:.1} jobs/s  p50={} p99={} invalid={}",
+        report.stats.jobs,
+        fmt_count(report.stats.elements as usize),
+        fmt_secs(report.wall_secs),
+        report.stats.jobs_per_sec,
+        fmt_secs(report.stats.p50_secs),
+        fmt_secs(report.stats.p99_secs),
+        report.stats.invalid
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +301,58 @@ mod tests {
         assert!(line.contains("1e7"), "{line}");
         assert!(line.contains("0.2886s"));
         assert!(line.contains("2.8x"));
+    }
+
+    #[test]
+    fn batch_workload_generation_is_deterministic_and_mixed() {
+        let wl = BatchWorkload {
+            jobs: 12,
+            sizes: vec![100, 0, 2_000],
+            dists: vec![Distribution::Uniform, Distribution::Zipf],
+            seed: 9,
+            validate: true,
+        };
+        let a = wl.generate(2);
+        let b = wl.generate(4);
+        assert_eq!(a.len(), 12);
+        for (ja, jb) in a.iter().zip(&b) {
+            assert_eq!(ja.data, jb.data, "generation must be thread-count independent");
+            assert_eq!(ja.dist, jb.dist);
+        }
+        // Sizes cycle 100, 0, 2000, ...
+        assert_eq!(a[0].data.len(), 100);
+        assert_eq!(a[1].data.len(), 0);
+        assert_eq!(a[2].data.len(), 2_000);
+        assert_eq!(a[3].data.len(), 100);
+        // Distributions cycle uniform, zipf, ...
+        assert_eq!(a[0].dist, "uniform");
+        assert_eq!(a[1].dist, "zipf");
+        // Different seeds give different data.
+        let c = BatchWorkload { seed: 10, ..wl }.generate(2);
+        assert_ne!(a[0].data, c[0].data);
+    }
+
+    #[test]
+    fn batch_workload_runs_through_service() {
+        let wl = BatchWorkload {
+            jobs: 40,
+            sizes: vec![1_000, 0, 1, 8_000],
+            dists: vec![Distribution::Uniform, Distribution::FewUnique],
+            seed: 3,
+            validate: true,
+        };
+        let svc = SortService::new(crate::coordinator::ServiceConfig {
+            workers: 2,
+            sort_threads: 2,
+            queue_capacity: 8,
+        });
+        let report = wl.run(&svc, 2);
+        assert_eq!(report.stats.jobs, 40);
+        assert_eq!(report.stats.invalid, 0);
+        for out in &report.outcomes {
+            assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+        }
+        let line = batch_summary_line(&report);
+        assert!(line.contains("40 jobs"), "{line}");
     }
 }

@@ -5,11 +5,24 @@
 //! parameters from — in priority order — the explicit override, the tuning
 //! cache, or the symbolic model, then running Adaptive Partition Sort and
 //! validating the output. Results come back over a per-job channel.
+//!
+//! Two submission paths share one execution helper:
+//!
+//! * [`SortService::submit`] — one job, one pool task, one reply channel
+//!   (lowest latency for sparse traffic);
+//! * [`SortService::submit_batch`] — many jobs in one call: the batch is
+//!   sharded across the pool via a shared work queue (dynamic balancing —
+//!   a shard that drew small jobs keeps pulling), each worker reuses one
+//!   radix scratch buffer across all the jobs it executes, and the returned
+//!   [`BatchReport`] carries p50/p99 latency and jobs/sec, which are also
+//!   published through [`Metrics`] (`batch.*` gauges and sample windows).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{self, Metrics};
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::data::validate::{self, Verdict};
 use crate::params::SortParams;
@@ -55,6 +68,117 @@ impl JobHandle {
     pub fn wait(self) -> SortOutcome {
         self.rx.recv().expect("service dropped job reply")
     }
+}
+
+/// Aggregate statistics for one completed batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchStats {
+    pub jobs: usize,
+    pub invalid: usize,
+    /// Total elements sorted across the batch.
+    pub elements: u64,
+    /// Batch throughput: jobs / wall-clock seconds.
+    pub jobs_per_sec: f64,
+    /// Median per-job sort latency (nearest rank).
+    pub p50_secs: f64,
+    /// 99th-percentile per-job sort latency (nearest rank).
+    pub p99_secs: f64,
+    pub mean_secs: f64,
+}
+
+impl BatchStats {
+    fn compute(outcomes: &[SortOutcome], wall_secs: f64) -> BatchStats {
+        let jobs = outcomes.len();
+        let invalid = outcomes.iter().filter(|o| !o.valid).count();
+        let elements = outcomes.iter().map(|o| o.data.len() as u64).sum();
+        let mut lats: Vec<f64> = outcomes.iter().map(|o| o.secs).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let (p50_secs, p99_secs, mean_secs) = if lats.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                metrics::percentile_of_sorted(&lats, 50.0),
+                metrics::percentile_of_sorted(&lats, 99.0),
+                lats.iter().sum::<f64>() / jobs as f64,
+            )
+        };
+        let jobs_per_sec = if wall_secs > 0.0 { jobs as f64 / wall_secs } else { 0.0 };
+        BatchStats { jobs, invalid, elements, jobs_per_sec, p50_secs, p99_secs, mean_secs }
+    }
+}
+
+/// The result of one batch: outcomes in submission order plus throughput and
+/// latency-percentile statistics.
+#[derive(Debug)]
+pub struct BatchReport {
+    pub outcomes: Vec<SortOutcome>,
+    pub wall_secs: f64,
+    pub stats: BatchStats,
+}
+
+/// Handle to an in-flight batch.
+pub struct BatchHandle {
+    total: usize,
+    started: Instant,
+    rx: mpsc::Receiver<(usize, SortOutcome)>,
+    metrics: Arc<Metrics>,
+}
+
+impl BatchHandle {
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Block until every job in the batch completes; outcomes are returned in
+    /// submission order and the batch gauges are published to the metrics
+    /// registry (`batch.last.*`).
+    pub fn wait(self) -> BatchReport {
+        let mut slots: Vec<Option<SortOutcome>> = (0..self.total).map(|_| None).collect();
+        for _ in 0..self.total {
+            let (idx, outcome) = self.rx.recv().expect("service dropped batch reply");
+            slots[idx] = Some(outcome);
+        }
+        let wall_secs = self.started.elapsed().as_secs_f64();
+        let outcomes: Vec<SortOutcome> =
+            slots.into_iter().map(|s| s.expect("every job reports exactly once")).collect();
+        let stats = BatchStats::compute(&outcomes, wall_secs);
+        self.metrics.incr("batch.completed");
+        self.metrics.set_gauge("batch.last.jobs_per_sec", stats.jobs_per_sec);
+        self.metrics.set_gauge("batch.last.p50_secs", stats.p50_secs);
+        self.metrics.set_gauge("batch.last.p99_secs", stats.p99_secs);
+        BatchReport { outcomes, wall_secs, stats }
+    }
+}
+
+/// Run one resolved job to completion: optional fingerprint, timed sort with
+/// caller-provided scratch, validation, metrics accounting. Shared by the
+/// single-job and batched submission paths.
+fn execute_job(
+    sorter: &AdaptiveSorter,
+    metrics: &Metrics,
+    id: u64,
+    mut job: SortJob,
+    params: SortParams,
+    scratch: &mut Vec<i64>,
+) -> SortOutcome {
+    let threads = sorter.threads();
+    let fp = job.validate.then(|| validate::fingerprint_i64(&job.data, threads));
+    let (_, secs) = timer::time(|| sorter.sort_i64_with_scratch(&mut job.data, &params, scratch));
+    let valid = match fp {
+        Some(fp) => validate::validate_i64(fp, &job.data, threads) == Verdict::Valid,
+        None => true,
+    };
+    metrics.incr("jobs.completed");
+    metrics.observe("sort.latency", secs);
+    metrics.add("elements.sorted", job.data.len() as u64);
+    if !valid {
+        metrics.incr("jobs.invalid");
+    }
+    SortOutcome { id, data: job.data, params, secs, valid }
 }
 
 /// Service configuration.
@@ -134,7 +258,7 @@ impl SortService {
     }
 
     /// Submit a job; blocks only when the queue is full (backpressure).
-    pub fn submit(&self, mut job: SortJob) -> JobHandle {
+    pub fn submit(&self, job: SortJob) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let sorter = Arc::clone(&self.sorter);
@@ -142,23 +266,62 @@ impl SortService {
         let params = self.resolve_params(&job);
         self.metrics.incr("jobs.submitted");
         let submitted = self.pool.submit(move || {
-            let threads = sorter.threads();
-            let fp = job.validate.then(|| validate::fingerprint_i64(&job.data, threads));
-            let (_, secs) = timer::time(|| sorter.sort_i64(&mut job.data, &params));
-            let valid = match fp {
-                Some(fp) => validate::validate_i64(fp, &job.data, threads) == Verdict::Valid,
-                None => true,
-            };
-            metrics.incr("jobs.completed");
-            metrics.observe("sort.latency", secs);
-            metrics.add("elements.sorted", job.data.len() as u64);
-            if !valid {
-                metrics.incr("jobs.invalid");
-            }
-            let _ = tx.send(SortOutcome { id, data: job.data, params, secs, valid });
+            let outcome = execute_job(&sorter, &metrics, id, job, params, &mut Vec::new());
+            let _ = tx.send(outcome);
         });
         assert!(submitted, "service is shutting down");
         JobHandle { id, rx }
+    }
+
+    /// Submit a whole batch of jobs in one call.
+    ///
+    /// Parameters are resolved up front on the caller thread (cache/model
+    /// lookups are cheap); the jobs then flow through a shared work queue
+    /// drained by up to `pool.threads()` pool tasks, so shards balance
+    /// dynamically under mixed job sizes and every shard reuses a single
+    /// radix scratch buffer across all the jobs it executes — the
+    /// `sort_i64_with_scratch` hot path allocates nothing after the first
+    /// large job. Per-job latencies stream into the `batch.job.latency`
+    /// sample window; [`BatchHandle::wait`] publishes p50/p99/jobs-per-sec.
+    pub fn submit_batch(&self, jobs: Vec<SortJob>) -> BatchHandle {
+        let started = Instant::now();
+        let total = jobs.len();
+        let (tx, rx) = mpsc::channel();
+        // Keep the shared counters consistent with the single-job path
+        // (jobs.submitted >= jobs.completed must hold across mixed traffic).
+        self.metrics.add("jobs.submitted", total as u64);
+        self.metrics.add("batch.jobs.submitted", total as u64);
+        self.metrics.incr("batch.submitted");
+        let queue: VecDeque<(usize, u64, SortJob, SortParams)> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(idx, job)| {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let params = self.resolve_params(&job);
+                (idx, id, job, params)
+            })
+            .collect();
+        let queue = Arc::new(Mutex::new(queue));
+        let shards = self.pool.threads().min(total.max(1));
+        for _ in 0..shards {
+            let queue = Arc::clone(&queue);
+            let sorter = Arc::clone(&self.sorter);
+            let metrics = Arc::clone(&self.metrics);
+            let tx = tx.clone();
+            let submitted = self.pool.submit(move || {
+                // Per-shard scratch, reused across every job this shard pulls.
+                let mut scratch: Vec<i64> = Vec::new();
+                loop {
+                    let item = queue.lock().unwrap().pop_front();
+                    let Some((idx, id, job, params)) = item else { break };
+                    let outcome = execute_job(&sorter, &metrics, id, job, params, &mut scratch);
+                    metrics.observe_sample("batch.job.latency", outcome.secs);
+                    let _ = tx.send((idx, outcome));
+                }
+            });
+            assert!(submitted, "service is shutting down");
+        }
+        BatchHandle { total, started, rx, metrics: Arc::clone(&self.metrics) }
     }
 
     /// Block until every submitted job has completed.
@@ -250,5 +413,80 @@ mod tests {
         let out = svc.submit(job).wait();
         assert!(out.valid, "unvalidated jobs report valid=true");
         assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn batch_sorts_everything_in_order() {
+        let svc = service();
+        let jobs: Vec<SortJob> = (0..24u64)
+            .map(|seed| SortJob::new(generate_i64(5_000 + (seed as usize * 379) % 20_000, Distribution::Uniform, seed, 2)))
+            .collect();
+        let expected: Vec<Vec<i64>> = jobs
+            .iter()
+            .map(|j| {
+                let mut v = j.data.clone();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let report = svc.submit_batch(jobs).wait();
+        assert_eq!(report.outcomes.len(), 24);
+        assert_eq!(report.stats.jobs, 24);
+        assert_eq!(report.stats.invalid, 0);
+        for (out, want) in report.outcomes.iter().zip(&expected) {
+            assert!(out.valid);
+            assert_eq!(&out.data, want, "batch outcomes must keep submission order");
+        }
+        // Unique ids across the batch.
+        let ids: std::collections::HashSet<u64> = report.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids.len(), 24);
+        // Stats are consistent.
+        assert!(report.stats.p50_secs <= report.stats.p99_secs);
+        assert!(report.stats.jobs_per_sec > 0.0);
+        assert_eq!(
+            report.stats.elements,
+            expected.iter().map(|v| v.len() as u64).sum::<u64>()
+        );
+        // Metrics published.
+        assert_eq!(svc.metrics().counter("batch.jobs.submitted"), 24);
+        assert_eq!(svc.metrics().counter("batch.completed"), 1);
+        assert_eq!(svc.metrics().counter("jobs.completed"), 24);
+        assert!(svc.metrics().gauge("batch.last.jobs_per_sec").unwrap() > 0.0);
+        assert!(svc.metrics().percentile("batch.job.latency", 99.0).is_some());
+    }
+
+    #[test]
+    fn batch_edge_cases_empty_and_tiny() {
+        let svc = service();
+        // Empty batch.
+        let report = svc.submit_batch(Vec::new()).wait();
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.stats.jobs_per_sec, 0.0);
+        assert_eq!(report.stats.p99_secs, 0.0);
+        // Batch containing empty-slice and single-element jobs.
+        let jobs = vec![
+            SortJob::new(vec![]),
+            SortJob::new(vec![7]),
+            SortJob::new(vec![3, -1]),
+        ];
+        let report = svc.submit_batch(jobs).wait();
+        assert_eq!(report.outcomes[0].data, Vec::<i64>::new());
+        assert_eq!(report.outcomes[1].data, vec![7]);
+        assert_eq!(report.outcomes[2].data, vec![-1, 3]);
+        assert!(report.outcomes.iter().all(|o| o.valid));
+    }
+
+    #[test]
+    fn batch_respects_param_override_and_cache() {
+        let svc = service();
+        svc.cache().put(120_000, "uniform", SortParams::paper_1e8());
+        let mut override_job = SortJob::new(generate_i64(120_000, Distribution::Uniform, 1, 2));
+        override_job.params = Some(SortParams { tile: 333, ..SortParams::paper_1e7() });
+        let cached_job = SortJob::new(generate_i64(120_000, Distribution::Uniform, 2, 2));
+        let report = svc.submit_batch(vec![override_job, cached_job]).wait();
+        assert_eq!(report.outcomes[0].params.tile, 333);
+        assert_eq!(report.outcomes[1].params, SortParams::paper_1e8());
+        assert_eq!(svc.metrics().counter("params.override"), 1);
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
     }
 }

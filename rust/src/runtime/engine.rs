@@ -11,6 +11,10 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::Manifest;
+// Offline builds have no PJRT bindings; the shim mirrors the `xla` crate's
+// API and fails at runtime, keeping the optional-backend fallbacks intact.
+// Swap this import for `use xla;` when the real bindings are linked.
+use super::xla_shim as xla;
 
 /// A compiled artifact plus its shape metadata.
 pub struct CompiledKernel {

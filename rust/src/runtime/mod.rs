@@ -8,6 +8,7 @@
 
 pub mod artifacts;
 pub mod engine;
+pub(crate) mod xla_shim;
 pub mod xla_sort;
 
 pub use artifacts::{ArtifactEntry, Manifest};

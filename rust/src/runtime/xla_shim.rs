@@ -1,0 +1,118 @@
+//! Offline stand-in for the external `xla` crate (PJRT C-API bindings).
+//!
+//! The build environment carries no PJRT plugin or `xla` bindings, so this
+//! module mirrors the exact API surface [`super::engine`] consumes and fails
+//! at *runtime* (client construction / HLO parsing return `Err`), never at
+//! compile time. Every caller already treats the backend as optional — the
+//! adaptive dispatcher falls back to the refined parallel mergesort when
+//! `A_code = 5` has no backend, the CLI warns-and-continues, and the runtime
+//! integration tests skip — so the whole crate stays buildable and testable
+//! with zero native dependencies. Linking the real `xla` crate back in is a
+//! one-line import swap in `engine.rs`.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (only `Display` is consumed).
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla_shim::Error({})", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime not linked into this build (offline xla shim); \
+         the tile backend is unavailable and callers fall back to the rust sorts"
+            .to_string(),
+    )
+}
+
+/// Mirrors `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-shim".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Mirrors `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Mirrors `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Mirrors `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Mirrors `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Mirrors `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}

@@ -33,9 +33,10 @@ pub fn binary_insertion_sort<T: Copy + Ord>(a: &mut [T]) {
     }
 }
 
-/// Guarded insertion sort used by introsort's tail pass: assumes `a[0]` is a
-/// sentinel lower bound (no `j > 0` check needed). Falls back to the guarded
-/// version when that precondition can't be promised.
+/// Insertion sort starting at `from` (elements before it are assumed
+/// sorted) — a tail pass after block-sorting a prefix. Currently exercised
+/// only by tests; kept crate-private until a sort path adopts it.
+#[allow(dead_code)]
 pub(crate) fn insertion_sort_tail<T: Copy + Ord>(a: &mut [T], from: usize) {
     for i in from.max(1)..a.len() {
         let key = a[i];

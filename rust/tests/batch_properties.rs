@@ -1,0 +1,148 @@
+//! Batched-submission integration tests: a 1k-job mixed batch must return
+//! every job sorted, in submission order, bit-identical to the sequential
+//! path — including empty-slice and single-element jobs — and the batched
+//! path must not be slower than submitting the same jobs one at a time on
+//! the same pool.
+
+use evosort::coordinator::{BatchWorkload, ServiceConfig, SortJob, SortService};
+use evosort::data::Distribution;
+use evosort::testkit::{check, Arbitrary, PropConfig};
+use evosort::util::timer;
+
+fn service(workers: usize) -> SortService {
+    SortService::new(ServiceConfig { workers, sort_threads: 2, queue_capacity: 32 })
+}
+
+#[test]
+fn thousand_job_mixed_batch_matches_sequential_path() {
+    let workload = BatchWorkload {
+        jobs: 1000,
+        sizes: vec![0, 1, 17, 256, 1_000, 4_096, 9_999],
+        dists: vec![
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::Reverse,
+            Distribution::FewUnique,
+            Distribution::NearlySorted,
+        ],
+        seed: 7,
+        validate: true,
+    };
+    let jobs = workload.generate(2);
+    // The sequential path: same inputs through the plain std-sort oracle.
+    let oracle: Vec<Vec<i64>> = jobs
+        .iter()
+        .map(|j| {
+            let mut v = j.data.clone();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+
+    let svc = service(3);
+    let report = svc.submit_batch(jobs).wait();
+
+    assert_eq!(report.outcomes.len(), 1000);
+    assert_eq!(report.stats.jobs, 1000);
+    assert_eq!(report.stats.invalid, 0, "every job must validate");
+    for (i, (out, want)) in report.outcomes.iter().zip(&oracle).enumerate() {
+        assert!(out.valid, "job {i} invalid");
+        assert_eq!(&out.data, want, "job {i} must match the sequential oracle");
+    }
+    // Percentile stats are well-formed for a big batch.
+    assert!(report.stats.p50_secs <= report.stats.p99_secs);
+    assert!(report.stats.jobs_per_sec > 0.0);
+    assert_eq!(svc.metrics().counter("jobs.completed"), 1000);
+    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+}
+
+/// A small batch of random vectors (lengths 0..=512 with duplicate-heavy and
+/// extreme-value regimes from the testkit generator).
+#[derive(Debug, Clone)]
+struct ArbBatch(Vec<Vec<i64>>);
+
+impl Arbitrary for ArbBatch {
+    fn generate(rng: &mut evosort::rng::Xoshiro256pp) -> Self {
+        let jobs = 1 + rng.below(8);
+        ArbBatch((0..jobs).map(|_| Vec::<i64>::generate(rng)).collect())
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.0.len();
+        if n > 1 {
+            out.push(ArbBatch(self.0[..n / 2].to_vec()));
+            out.push(ArbBatch(self.0[n / 2..].to_vec()));
+        }
+        for (i, v) in self.0.iter().enumerate() {
+            for sv in v.shrink() {
+                let mut next = self.0.clone();
+                next[i] = sv;
+                out.push(ArbBatch(next));
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_random_batches_sort_correctly() {
+    let svc = service(2);
+    check::<ArbBatch>(PropConfig { cases: 60, seed: 11, ..Default::default() }, |batch| {
+        let jobs: Vec<SortJob> = batch.0.iter().map(|v| SortJob::new(v.clone())).collect();
+        let report = svc.submit_batch(jobs).wait();
+        report.outcomes.len() == batch.0.len()
+            && report.outcomes.iter().zip(&batch.0).all(|(out, input)| {
+                let mut want = input.clone();
+                want.sort_unstable();
+                out.valid && out.data == want
+            })
+    })
+    .unwrap_ok();
+}
+
+#[test]
+fn batch_not_slower_than_one_at_a_time_loop() {
+    // Same pool, same jobs: the batched path (parallel shards + scratch
+    // reuse) must beat — or at minimum match — submitting one job and
+    // waiting for it before submitting the next. The expectation is ~1/workers
+    // of the sequential wall; the assertion leaves generous headroom for CI
+    // noise.
+    let jobs_n = 200;
+    let make_jobs = || -> Vec<SortJob> {
+        (0..jobs_n as u64)
+            .map(|seed| {
+                SortJob::new(evosort::data::generate_i64(
+                    8_000,
+                    Distribution::Uniform,
+                    seed,
+                    1,
+                ))
+            })
+            .collect()
+    };
+
+    let svc = service(3);
+    // Warm both paths once (thread spawn, allocator).
+    svc.submit(SortJob::new(evosort::data::generate_i64(8_000, Distribution::Uniform, 999, 1)))
+        .wait();
+
+    let seq_jobs = make_jobs();
+    let (_, seq_secs) = timer::time(|| {
+        for job in seq_jobs {
+            let out = svc.submit(job).wait();
+            assert!(out.valid);
+        }
+    });
+
+    let batch_jobs = make_jobs();
+    let report = svc.submit_batch(batch_jobs).wait();
+    assert_eq!(report.stats.invalid, 0);
+
+    assert!(
+        report.wall_secs <= seq_secs * 1.5,
+        "batched path too slow: batch {:.4}s vs sequential {:.4}s",
+        report.wall_secs,
+        seq_secs
+    );
+}
