@@ -17,11 +17,16 @@ fn main() {
         workers: 2,
         sort_threads: threads.div_ceil(2),
         queue_capacity: 8, // small queue => visible backpressure
+        autotune: None,    // see `serve --autotune` for the online tuner
     });
 
     // Pre-warm the tuning cache for one workload class, as a tuned
     // deployment would (other classes fall back to the symbolic model).
-    svc.cache().put(1_000_000, "uniform", SortParams::paper_1e7());
+    // The cache keys on a fingerprint of the data itself, so derive the
+    // label from a representative array rather than a distribution name.
+    let representative = generate_i64(1_000_000, Distribution::Uniform, 0, threads);
+    let label = SortService::fingerprint_label(&representative);
+    svc.cache().put(representative.len(), &label, SortParams::paper_1e7());
 
     let workloads = [
         ("uniform", Distribution::Uniform, 1_000_000usize),

@@ -1,0 +1,283 @@
+//! Workload fingerprinting: a cheap sampled sketch of a job's *actual* data.
+//!
+//! PR 1 keyed the tuning cache on a caller-declared distribution label, which
+//! the service trusted blindly — one mislabeled job could poison the cache
+//! for every future job in that size band. The fingerprint replaces the label
+//! as the cache key: it is computed from the data itself (size band,
+//! sortedness, duplicate ratio, value-range width, sign mix), so two jobs
+//! share a cache slot only when they actually look alike. The declared
+//! `dist` string is kept on [`SortJob`](crate::coordinator::SortJob) purely
+//! as a human-readable hint.
+//!
+//! The sketch is deliberately coarse (a handful of buckets per feature):
+//! tuned thresholds vary smoothly with workload shape (paper §7, and the
+//! Fugaku study arXiv:2305.05245 shows thresholds shifting with data shape),
+//! so fine-grained classes would only fragment the cache. Everything is
+//! computed from a strided probe of at most [`PROBE_CAP`] elements — O(1)
+//! per job regardless of n, cheap enough for the submit hot path.
+
+use std::fmt;
+
+/// Elements examined per probe. Arrays no longer than this are scanned in
+/// full, which makes the value features (duplicates, width, signs) exactly
+/// permutation-invariant for small inputs; larger arrays are strided.
+pub const PROBE_CAP: usize = 1024;
+
+/// Sortedness class, estimated from adjacent-pair comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunShape {
+    /// >= 95% of probed adjacent pairs are non-decreasing (sorted,
+    /// nearly-sorted, constant).
+    Ascending,
+    /// <= 5% of probed adjacent pairs are non-decreasing (reverse-sorted).
+    Descending,
+    /// 65–95% non-decreasing: long ascending runs with disorder mixed in.
+    MostlyAscending,
+    /// No dominant direction (random-looking data, organ-pipe, ...).
+    Mixed,
+}
+
+impl RunShape {
+    fn tag(self) -> &'static str {
+        match self {
+            RunShape::Ascending => "asc",
+            RunShape::Descending => "desc",
+            RunShape::MostlyAscending => "masc",
+            RunShape::Mixed => "mix",
+        }
+    }
+}
+
+/// Duplicate-density class from the distinct ratio of the probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DupLevel {
+    /// < 10% of probed values are distinct (constant, few-unique).
+    Heavy,
+    /// 10–90% distinct (skewed data such as Zipf).
+    Some,
+    /// >= 90% distinct (uniform/Gaussian over wide ranges).
+    Distinct,
+}
+
+impl DupLevel {
+    fn tag(self) -> &'static str {
+        match self {
+            DupLevel::Heavy => "dupH",
+            DupLevel::Some => "dupS",
+            DupLevel::Distinct => "uniq",
+        }
+    }
+}
+
+/// Sign composition of the probed values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SignMix {
+    NonNegative,
+    Negative,
+    Mixed,
+}
+
+impl SignMix {
+    fn tag(self) -> &'static str {
+        match self {
+            SignMix::NonNegative => "pos",
+            SignMix::Negative => "neg",
+            SignMix::Mixed => "pm",
+        }
+    }
+}
+
+/// The workload sketch. Hashable/comparable — this *is* the tuning-cache key
+/// (via [`Fingerprint::label`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Half-decade size band, identical to
+    /// [`CacheKey::band_of`](crate::coordinator::tuning_cache::CacheKey::band_of).
+    pub size_band: u32,
+    pub runs: RunShape,
+    pub dups: DupLevel,
+    /// Bytes needed to span the probed value range (`ceil(bits / 8)`,
+    /// 0..=8) — the radix-width estimate an LSD radix sort cares about.
+    pub width_bytes: u8,
+    pub signs: SignMix,
+}
+
+impl Fingerprint {
+    /// Sketch `data` with a strided probe of at most [`PROBE_CAP`] elements.
+    pub fn of(data: &[i64]) -> Fingerprint {
+        let size_band = crate::coordinator::tuning_cache::CacheKey::band_of(data.len());
+        if data.is_empty() {
+            return Fingerprint {
+                size_band,
+                runs: RunShape::Ascending,
+                dups: DupLevel::Distinct,
+                width_bytes: 0,
+                signs: SignMix::NonNegative,
+            };
+        }
+        let probe = sample(data, PROBE_CAP);
+
+        // Value features from the probe multiset.
+        let (mut min, mut max) = (i64::MAX, i64::MIN);
+        let (mut any_neg, mut any_nonneg) = (false, false);
+        for &x in &probe {
+            min = min.min(x);
+            max = max.max(x);
+            if x < 0 {
+                any_neg = true;
+            } else {
+                any_nonneg = true;
+            }
+        }
+        let signs = match (any_neg, any_nonneg) {
+            (true, false) => SignMix::Negative,
+            (true, true) => SignMix::Mixed,
+            _ => SignMix::NonNegative,
+        };
+        let span = (max as i128 - min as i128) as u64;
+        let bits = 64 - span.leading_zeros();
+        let width_bytes = bits.div_ceil(8) as u8;
+
+        // The probe is not needed again: sort it in place for the dedup.
+        let probe_len = probe.len();
+        let mut sorted = probe;
+        sorted.sort_unstable();
+        sorted.dedup();
+        let distinct_ratio = sorted.len() as f64 / probe_len as f64;
+        let dups = if distinct_ratio < 0.10 {
+            DupLevel::Heavy
+        } else if distinct_ratio < 0.90 {
+            DupLevel::Some
+        } else {
+            DupLevel::Distinct
+        };
+
+        // Sortedness from strided *adjacent* pairs of the original layout
+        // (the probe above loses adjacency).
+        let runs = run_shape(data);
+
+        Fingerprint { size_band, runs, dups, width_bytes, signs }
+    }
+
+    /// Canonical cache-key string, e.g. `b10:asc:uniq:w4:pm`. Whitespace-free
+    /// so it survives the tuning cache's text persistence.
+    pub fn label(&self) -> String {
+        format!(
+            "b{}:{}:{}:w{}:{}",
+            self.size_band,
+            self.runs.tag(),
+            self.dups.tag(),
+            self.width_bytes,
+            self.signs.tag()
+        )
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Classify sortedness from at most [`PROBE_CAP`] strided adjacent pairs.
+fn run_shape(data: &[i64]) -> RunShape {
+    if data.len() < 2 {
+        return RunShape::Ascending;
+    }
+    let pairs = (data.len() - 1).min(PROBE_CAP);
+    let mut ascending = 0usize;
+    for i in 0..pairs {
+        // Spread probes evenly: j in [0, len - 2], so j + 1 is in bounds.
+        let j = i * (data.len() - 1) / pairs;
+        if data[j] <= data[j + 1] {
+            ascending += 1;
+        }
+    }
+    let frac = ascending as f64 / pairs as f64;
+    if frac >= 0.95 {
+        RunShape::Ascending
+    } else if frac <= 0.05 {
+        RunShape::Descending
+    } else if frac >= 0.65 {
+        RunShape::MostlyAscending
+    } else {
+        RunShape::Mixed
+    }
+}
+
+/// Strided value sample of at most `cap` elements (the whole slice when it
+/// fits). Used for the probe and for the representative samples the online
+/// tuner retains per fingerprint class.
+pub fn sample(data: &[i64], cap: usize) -> Vec<i64> {
+    let cap = cap.max(1);
+    if data.len() <= cap {
+        return data.to_vec();
+    }
+    // Evenly spread indices over the whole slice: i * len / cap < len.
+    (0..cap).map(|i| data[i * data.len() / cap]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_i64, Distribution};
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let fp = Fingerprint::of(&[]);
+        assert_eq!(fp.width_bytes, 0);
+        assert_eq!(fp.runs, RunShape::Ascending);
+        let fp1 = Fingerprint::of(&[42]);
+        assert_eq!(fp1.dups, DupLevel::Distinct);
+        assert_eq!(fp1.signs, SignMix::NonNegative);
+        let fpn = Fingerprint::of(&[-42]);
+        assert_eq!(fpn.signs, SignMix::Negative);
+    }
+
+    #[test]
+    fn sorted_reverse_and_dups_distinguished() {
+        let n = 50_000;
+        let sorted = Fingerprint::of(&generate_i64(n, Distribution::Sorted, 1, 2));
+        let reverse = Fingerprint::of(&generate_i64(n, Distribution::Reverse, 1, 2));
+        let few = Fingerprint::of(&generate_i64(n, Distribution::FewUnique, 1, 2));
+        let uniform = Fingerprint::of(&generate_i64(n, Distribution::Uniform, 1, 2));
+        assert_eq!(sorted.runs, RunShape::Ascending);
+        assert_eq!(reverse.runs, RunShape::Descending);
+        assert_eq!(few.dups, DupLevel::Heavy);
+        assert_eq!(uniform.dups, DupLevel::Distinct);
+        let labels = [sorted.label(), reverse.label(), few.label(), uniform.label()];
+        for i in 0..labels.len() {
+            for j in (i + 1)..labels.len() {
+                assert_ne!(labels[i], labels[j], "classes must be distinct");
+            }
+        }
+    }
+
+    #[test]
+    fn size_band_matches_cache_banding() {
+        for n in [1usize, 100, 31_623, 1_000_000] {
+            let data = vec![1i64; n];
+            assert_eq!(
+                Fingerprint::of(&data).size_band,
+                crate::coordinator::tuning_cache::CacheKey::band_of(n)
+            );
+        }
+    }
+
+    #[test]
+    fn sample_strided_and_full() {
+        let data: Vec<i64> = (0..10_000).collect();
+        let s = sample(&data, 100);
+        assert_eq!(s.len(), 100);
+        assert_eq!(s[0], 0);
+        let full = sample(&data, 20_000);
+        assert_eq!(full, data);
+    }
+
+    #[test]
+    fn label_is_whitespace_free() {
+        let fp = Fingerprint::of(&generate_i64(10_000, Distribution::Zipf, 3, 2));
+        assert!(!fp.label().contains(char::is_whitespace), "{}", fp.label());
+        assert_eq!(format!("{fp}"), fp.label());
+    }
+}

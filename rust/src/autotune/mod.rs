@@ -1,0 +1,33 @@
+//! Online autotuning: workload fingerprinting + background GA refinement.
+//!
+//! The paper's central claim is that EvoSort "adapts continuously to input
+//! data and system architecture". This subsystem makes adaptation a runtime
+//! property of the sort service instead of an offline CLI step:
+//!
+//! * [`fingerprint`] — a cheap sampled sketch of each job's *actual* data
+//!   (size band, sortedness, duplicate ratio, radix width, sign mix) that
+//!   keys the tuning cache, replacing the caller-declared distribution label
+//!   the service previously trusted blindly;
+//! * [`tuner`] — a background thread fed observed fingerprints + measured
+//!   latencies through a bounded non-blocking queue; it prioritises the
+//!   hottest/worst classes and runs incremental
+//!   [`GaDriver::refine`](crate::ga::GaDriver::refine) generations on
+//!   retained data samples, publishing improved parameters into the shared
+//!   [`TuningCache`](crate::coordinator::TuningCache);
+//! * [`policy`] — exploration-budget control (CPU duty cycle, observation
+//!   thresholds, p99 regression detection) and versioned persistence of the
+//!   fingerprint-keyed parameters.
+//!
+//! Wired into the service via
+//! [`ServiceConfig::autotune`](crate::coordinator::ServiceConfig) and the
+//! `evosort serve --autotune` CLI flag. This is the seam later scaling PRs
+//! (async interface, cross-process sharding) plug into: anything that can
+//! emit [`Observation`](tuner::Observation)s can drive adaptation.
+
+pub mod fingerprint;
+pub mod policy;
+pub mod tuner;
+
+pub use fingerprint::{DupLevel, Fingerprint, RunShape, SignMix};
+pub use policy::{AutotunePolicy, ClassState};
+pub use tuner::{Observation, OnlineTuner};

@@ -1,0 +1,289 @@
+//! Autotuner policy: exploration-budget control, per-class bookkeeping, and
+//! versioned persistence of fingerprint-keyed parameters.
+//!
+//! The policy answers three questions for the background tuner:
+//!
+//! 1. **When may a class be tuned?** Never before `min_observations` jobs
+//!    have been seen; after the first tuning cycle, only while the
+//!    incremental-refinement budget (`max_generations_per_class`) lasts or
+//!    when a latency regression is detected (recent p99 drifting past
+//!    `regression_ratio` × the p99 snapshot taken when the class was last
+//!    tuned — the same windows `metrics.rs` uses for batch percentiles).
+//! 2. **Which class first?** The hottest/worst one: accumulated sort-seconds
+//!    since the last tuning cycle, doubled for regressed classes.
+//! 3. **How much CPU?** `max_cpu_share` duty-cycles the tuner thread: after
+//!    a cycle that took `t` seconds it sleeps `t · (1 − s) / s`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::SampleWindow;
+use crate::coordinator::tuning_cache::TuningCache;
+
+/// Knobs for the online tuner. All bounds are per-class unless noted.
+#[derive(Debug, Clone)]
+pub struct AutotunePolicy {
+    /// Observations required before a class is first eligible for tuning.
+    pub min_observations: u64,
+    /// Fresh observations required between tuning cycles of the same class.
+    pub cooldown_observations: u64,
+    /// Elements retained per class as the GA fitness sample (strided from
+    /// real job data; bounds hot-path copy cost and tuner memory).
+    ///
+    /// Trade-off: classes whose jobs are much larger than the cap are tuned
+    /// on a subsample, so genes whose thresholds exceed the sample size are
+    /// not exercised by fitness — the same subsample methodology as the
+    /// paper's offline GA (`GaDriver::run_for_size` caps at `sample_cap`).
+    /// The p99 regression window watches *real* job latencies, so a
+    /// published genome that is pessimal at full size keeps the class
+    /// re-eligible until refinement repairs it; raise the cap when tuning
+    /// fidelity for very large bands matters more than memcpy cost.
+    pub retained_sample_cap: usize,
+    /// GA generations run per tuning cycle (kept small so the tuner remains
+    /// responsive to shutdown and new observations).
+    pub generations_per_cycle: usize,
+    /// Refinement budget: once a class has consumed this many generations,
+    /// it is re-tuned only on regression.
+    pub max_generations_per_class: usize,
+    /// GA population per cycle.
+    pub population: usize,
+    /// Timed repeats per GA fitness evaluation.
+    pub repeats: usize,
+    /// Publish only when the GA's best beats the seed genome by at least
+    /// this percentage. Timed evaluations are noisy (sub-millisecond sorts,
+    /// `repeats` often 1): without a margin, the minimum of ~a-dozen noisy
+    /// candidate timings beats the seed's single timing almost every cycle
+    /// and the cache churns on noise.
+    pub min_improvement_pct: f64,
+    /// Copy a retained data sample on only every k-th observed job (the
+    /// tuner keeps the latest sample per class, so most copies are wasted;
+    /// this bounds hot-path memcpy cost under sustained traffic).
+    pub sample_every: u64,
+    /// Most classes tracked at once; least-recently-observed is evicted.
+    pub max_classes: usize,
+    /// Background CPU duty cycle in (0, 1]: the tuner sleeps
+    /// `t · (1 − share) / share` after a cycle that took `t` seconds.
+    pub max_cpu_share: f64,
+    /// Recent p99 above `ratio ×` the post-tune p99 counts as a regression.
+    pub regression_ratio: f64,
+    /// Bounded observation queue (hot path drops, never blocks, when full).
+    pub queue_capacity: usize,
+    /// Base seed for the per-cycle GA runs.
+    pub ga_seed: u64,
+    /// When set, the tuning cache is restored from this file at startup and
+    /// re-persisted (versioned format) after every published improvement.
+    pub persist_path: Option<PathBuf>,
+}
+
+impl Default for AutotunePolicy {
+    fn default() -> Self {
+        AutotunePolicy {
+            min_observations: 32,
+            cooldown_observations: 16,
+            retained_sample_cap: 16_384,
+            generations_per_cycle: 2,
+            max_generations_per_class: 12,
+            population: 10,
+            repeats: 1,
+            min_improvement_pct: 2.0,
+            sample_every: 4,
+            max_classes: 64,
+            max_cpu_share: 0.25,
+            regression_ratio: 1.5,
+            queue_capacity: 1024,
+            ga_seed: 0xA070_7E4E,
+            persist_path: None,
+        }
+    }
+}
+
+impl AutotunePolicy {
+    /// An eager configuration for tests and smoke runs: tiny observation
+    /// thresholds, small samples, full CPU share.
+    pub fn quick() -> Self {
+        AutotunePolicy {
+            min_observations: 4,
+            cooldown_observations: 2,
+            retained_sample_cap: 4096,
+            population: 6,
+            max_cpu_share: 1.0,
+            // Tests want deterministic adaptation, not noise filtering.
+            min_improvement_pct: 0.0,
+            sample_every: 1,
+            ..AutotunePolicy::default()
+        }
+    }
+}
+
+/// Per-fingerprint-class state the tuner accumulates between cycles.
+#[derive(Debug, Default)]
+pub struct ClassState {
+    /// Jobs observed for this class, ever.
+    pub observations: u64,
+    /// `observations` snapshot at the end of the last tuning cycle.
+    pub observations_at_last_tune: u64,
+    /// Recent per-job sort latencies (bounded window, p99-queryable).
+    pub latency: SampleWindow,
+    /// Sort-seconds accumulated since the last tuning cycle (priority).
+    pub secs_since_tune: f64,
+    /// p99 snapshot taken when the class was last tuned.
+    pub tuned_p99: Option<f64>,
+    /// GA generations consumed by this class so far.
+    pub generations_run: usize,
+    /// Latest retained data sample (pre-sort, strided from a real job).
+    pub sample: Vec<i64>,
+    /// Bumped whenever `sample` is replaced — lets the tuner invalidate its
+    /// per-class memoised fitness only when the sample actually changed.
+    pub sample_gen: u64,
+    /// Representative job size (largest seen — cache banding input).
+    pub n_hint: usize,
+    /// Monotone tick of the most recent observation (LRU eviction).
+    pub last_seen: u64,
+}
+
+impl ClassState {
+    /// Fold one observation into the class.
+    pub fn observe(&mut self, n: usize, secs: f64, sample: Option<Vec<i64>>, tick: u64) {
+        self.observations += 1;
+        self.latency.push(secs);
+        self.secs_since_tune += secs;
+        self.n_hint = self.n_hint.max(n);
+        self.last_seen = tick;
+        if let Some(s) = sample {
+            if !s.is_empty() {
+                self.sample = s;
+                self.sample_gen += 1;
+            }
+        }
+    }
+
+    /// Recent p99 drifted past the post-tune snapshot by the policy ratio.
+    pub fn regressed(&self, policy: &AutotunePolicy) -> bool {
+        match (self.tuned_p99, self.latency.percentile(99.0)) {
+            (Some(base), Some(now)) => now > base * policy.regression_ratio.max(1.0),
+            _ => false,
+        }
+    }
+
+    /// May the tuner spend a cycle on this class now?
+    pub fn eligible(&self, policy: &AutotunePolicy) -> bool {
+        if self.sample.is_empty() || self.observations < policy.min_observations {
+            return false;
+        }
+        if self.generations_run == 0 {
+            return true;
+        }
+        let fresh = self.observations - self.observations_at_last_tune;
+        if fresh < policy.cooldown_observations {
+            return false;
+        }
+        self.generations_run < policy.max_generations_per_class || self.regressed(policy)
+    }
+
+    /// Scheduling priority: hottest (most accumulated sort time since the
+    /// last cycle) and worst (regressed) classes first.
+    pub fn priority(&self, policy: &AutotunePolicy) -> f64 {
+        let boost = if self.regressed(policy) { 2.0 } else { 1.0 };
+        self.secs_since_tune * boost
+    }
+
+    /// Close out a tuning cycle: snapshot p99, reset the priority clock.
+    pub fn mark_tuned(&mut self, generations: usize) {
+        self.generations_run += generations;
+        self.observations_at_last_tune = self.observations;
+        self.secs_since_tune = 0.0;
+        self.tuned_p99 = self.latency.percentile(99.0);
+    }
+}
+
+/// Persist fingerprint-keyed parameters in the versioned text format (the
+/// tuning cache writes a `# evosort-tuning-cache v2` header; loading accepts
+/// both the headered format and legacy v1 files).
+pub fn persist_params(cache: &TuningCache, path: &Path) -> Result<()> {
+    cache.save(path)
+}
+
+/// Restore fingerprint-keyed parameters persisted by [`persist_params`].
+pub fn restore_params(path: &Path) -> Result<TuningCache> {
+    TuningCache::load(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutotunePolicy {
+        AutotunePolicy { min_observations: 3, cooldown_observations: 2, ..AutotunePolicy::quick() }
+    }
+
+    fn observed(state: &mut ClassState, count: usize, secs: f64) {
+        for i in 0..count {
+            state.observe(10_000, secs, Some(vec![1, 2, 3]), i as u64);
+        }
+    }
+
+    #[test]
+    fn not_eligible_before_min_observations() {
+        let p = policy();
+        let mut s = ClassState::default();
+        observed(&mut s, 2, 0.01);
+        assert!(!s.eligible(&p));
+        observed(&mut s, 1, 0.01);
+        assert!(s.eligible(&p));
+    }
+
+    #[test]
+    fn not_eligible_without_sample() {
+        let p = policy();
+        let mut s = ClassState::default();
+        for i in 0..10 {
+            s.observe(10_000, 0.01, None, i);
+        }
+        assert!(!s.eligible(&p), "a class with no retained data cannot be tuned");
+    }
+
+    #[test]
+    fn cooldown_and_budget_gate_retuning() {
+        let p = policy();
+        let mut s = ClassState::default();
+        observed(&mut s, 5, 0.01);
+        assert!(s.eligible(&p));
+        s.mark_tuned(p.generations_per_cycle);
+        assert!(!s.eligible(&p), "cooldown: no fresh observations yet");
+        observed(&mut s, p.cooldown_observations as usize, 0.01);
+        assert!(s.eligible(&p), "within refinement budget");
+        // Exhaust the budget: only a regression re-qualifies the class.
+        s.generations_run = p.max_generations_per_class;
+        assert!(!s.eligible(&p));
+        observed(&mut s, 4, 0.01 * p.regression_ratio * 20.0);
+        assert!(s.regressed(&p));
+        assert!(s.eligible(&p), "regressed classes bypass the budget");
+    }
+
+    #[test]
+    fn priority_prefers_hot_and_regressed() {
+        let p = policy();
+        let mut cold = ClassState::default();
+        observed(&mut cold, 5, 0.001);
+        let mut hot = ClassState::default();
+        observed(&mut hot, 5, 0.1);
+        assert!(hot.priority(&p) > cold.priority(&p));
+        // Regression doubles priority.
+        let base = hot.priority(&p);
+        hot.tuned_p99 = Some(1e-6);
+        assert!(hot.regressed(&p));
+        assert!((hot.priority(&p) - base * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mark_tuned_resets_clock() {
+        let mut s = ClassState::default();
+        observed(&mut s, 5, 0.02);
+        assert!(s.secs_since_tune > 0.0);
+        s.mark_tuned(2);
+        assert_eq!(s.secs_since_tune, 0.0);
+        assert_eq!(s.generations_run, 2);
+        assert!(s.tuned_p99.is_some());
+    }
+}

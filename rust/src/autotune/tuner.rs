@@ -1,0 +1,465 @@
+//! The online tuner: a background thread that turns live traffic into better
+//! sort parameters.
+//!
+//! The sort service feeds it [`Observation`]s (fingerprint class, job size,
+//! measured latency, and a small pre-sort data sample) through a **bounded**
+//! queue — `observe` uses `try_send` and drops on overflow, so the hot path
+//! never blocks on the tuner. The tuner thread accumulates per-class state,
+//! picks the hottest/worst eligible class (see
+//! [`AutotunePolicy`](super::policy::AutotunePolicy)), and runs a few
+//! incremental [`GaDriver::refine`](crate::ga::GaDriver::refine) generations
+//! on the retained sample, seeded from the currently cached genome. Improved
+//! parameters are published straight into the shared
+//! [`TuningCache`](crate::coordinator::TuningCache), where the next submit
+//! picks them up — adaptation is continuous, not a preprocessing step
+//! (the asynchronous-evolution pattern of EvoX, arXiv:2301.12457).
+//!
+//! Metrics published (via the shared registry):
+//! counters `tuner.observations/dropped/cycles/generations/publishes/no_change`,
+//! gauges `tuner.classes`, `tuner.cache_hit_rate`, `tuner.last_improvement_pct`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::tuning_cache::TuningCache;
+use crate::ga::{GaConfig, GaDriver, SortTimingFitness};
+use crate::sort::AdaptiveSorter;
+use crate::symbolic::SymbolicModel;
+
+use super::policy::{self, AutotunePolicy, ClassState};
+
+/// One observed job: everything the tuner needs, nothing it doesn't.
+#[derive(Debug)]
+pub struct Observation {
+    /// Fingerprint label ([`Fingerprint::label`](super::Fingerprint::label))
+    /// — the tuning-cache key this job resolved through.
+    pub label: String,
+    /// Job size (cache banding input).
+    pub n: usize,
+    /// Measured sort latency in seconds.
+    pub secs: f64,
+    /// Strided pre-sort sample of the job's data, retained as GA fitness
+    /// input. `None` when the submitter skipped sampling.
+    pub sample: Option<Vec<i64>>,
+}
+
+/// Handle to the background tuning thread. Dropping it requests a stop,
+/// disconnects the queue, and joins the thread — shutdown is clean and
+/// bounded by one tuning cycle.
+pub struct OnlineTuner {
+    tx: Option<mpsc::SyncSender<Observation>>,
+    stop: Arc<AtomicBool>,
+    policy: AutotunePolicy,
+    metrics: Arc<Metrics>,
+    /// Sequence number backing the [`wants_sample`](Self::wants_sample)
+    /// every-k-th gate.
+    seq: AtomicU64,
+    /// Labels whose class currently holds a retained sample (maintained by
+    /// the worker thread). Lets `wants_sample` always say yes for classes
+    /// that have none — a bare global modulo would starve classes whose
+    /// observations happen to interleave out of phase with the gate.
+    sampled: Arc<RwLock<HashSet<String>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl OnlineTuner {
+    /// Spawn the tuner thread. `cache` and `metrics` are shared with the
+    /// sort service; `model` seeds cold classes; `threads` bounds the
+    /// background sorter's parallelism (use the service's per-job budget).
+    pub fn spawn(
+        policy: AutotunePolicy,
+        cache: Arc<TuningCache>,
+        metrics: Arc<Metrics>,
+        model: SymbolicModel,
+        threads: usize,
+    ) -> OnlineTuner {
+        if let Some(path) = &policy.persist_path {
+            if path.exists() {
+                match policy::restore_params(path) {
+                    Ok(persisted) => {
+                        let restored = cache.absorb(&persisted);
+                        crate::log_info!(
+                            "autotune: restored {restored} tuned classes from {}",
+                            path.display()
+                        );
+                    }
+                    Err(e) => crate::log_warn!("autotune: could not restore cache: {e:#}"),
+                }
+            }
+        }
+        let (tx, rx) = mpsc::sync_channel(policy.queue_capacity.max(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sampled = Arc::new(RwLock::new(HashSet::new()));
+        let worker = TunerWorker {
+            rx,
+            cache,
+            metrics: Arc::clone(&metrics),
+            model,
+            policy: policy.clone(),
+            stop: Arc::clone(&stop),
+            sampled: Arc::clone(&sampled),
+            threads: threads.max(1),
+        };
+        let handle = std::thread::Builder::new()
+            .name("evosort-tuner".into())
+            .spawn(move || worker.run())
+            .expect("spawn tuner thread");
+        OnlineTuner {
+            tx: Some(tx),
+            stop,
+            policy,
+            metrics,
+            seq: AtomicU64::new(0),
+            sampled,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn policy(&self) -> &AutotunePolicy {
+        &self.policy
+    }
+
+    /// Sampling gate for submitters: always `true` while the class has no
+    /// retained sample (a class without one can never become eligible for
+    /// tuning), then every
+    /// [`sample_every`](AutotunePolicy::sample_every)-th call. The tuner
+    /// keeps one retained sample per class, so copying one from every job
+    /// would be pure hot-path waste.
+    pub fn wants_sample(&self, label: &str) -> bool {
+        if !self.sampled.read().unwrap().contains(label) {
+            return true;
+        }
+        self.seq.fetch_add(1, Ordering::Relaxed) % self.policy.sample_every.max(1) == 0
+    }
+
+    /// Feed one observation. Never blocks: a full queue drops the
+    /// observation and bumps `tuner.dropped`.
+    pub fn observe(&self, obs: Observation) {
+        self.metrics.incr("tuner.observations");
+        if let Some(tx) = &self.tx {
+            match tx.try_send(obs) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                    self.metrics.incr("tuner.dropped");
+                }
+            }
+        }
+    }
+}
+
+impl Drop for OnlineTuner {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Disconnect the queue so a blocked recv wakes immediately.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-class memoised GA fitness, keyed by class label and tagged with the
+/// [`ClassState::sample_gen`] it was built from: incremental refinement
+/// cycles re-use prior timed evaluations (the memoisation
+/// [`GaDriver::refine`] documents) until the retained sample is refreshed.
+/// Bounded by `max_classes` — eviction removes the entry too.
+type FitnessCache = HashMap<String, (u64, SortTimingFitness)>;
+
+/// State owned by the background thread.
+struct TunerWorker {
+    rx: mpsc::Receiver<Observation>,
+    cache: Arc<TuningCache>,
+    metrics: Arc<Metrics>,
+    model: SymbolicModel,
+    policy: AutotunePolicy,
+    stop: Arc<AtomicBool>,
+    /// Shared with [`OnlineTuner::wants_sample`]: labels holding a sample.
+    sampled: Arc<RwLock<HashSet<String>>>,
+    threads: usize,
+}
+
+impl TunerWorker {
+    fn run(self) {
+        let mut classes: HashMap<String, ClassState> = HashMap::new();
+        let mut fitness_cache: FitnessCache = HashMap::new();
+        let mut tick: u64 = 0;
+        let mut cycles: u64 = 0;
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            // Ingest whatever arrived; wake at least every 50ms to re-check
+            // the stop flag and eligibility.
+            match self.rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(obs) => {
+                    tick += 1;
+                    self.ingest(&mut classes, &mut fitness_cache, obs, tick);
+                    while let Ok(obs) = self.rx.try_recv() {
+                        tick += 1;
+                        self.ingest(&mut classes, &mut fitness_cache, obs, tick);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            self.publish_gauges(&classes);
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let eligible = classes
+                .iter()
+                .filter(|(_, s)| s.eligible(&self.policy))
+                .max_by(|(_, a), (_, b)| {
+                    a.priority(&self.policy).total_cmp(&b.priority(&self.policy))
+                })
+                .map(|(k, _)| k.clone());
+            if let Some(label) = eligible {
+                cycles += 1;
+                let state = classes.get_mut(&label).expect("picked class exists");
+                let spent = self.cycle(&label, state, &mut fitness_cache, cycles);
+                self.throttle(spent);
+            }
+        }
+    }
+
+    fn ingest(
+        &self,
+        classes: &mut HashMap<String, ClassState>,
+        fitness_cache: &mut FitnessCache,
+        obs: Observation,
+        tick: u64,
+    ) {
+        let Observation { label, n, secs, sample } = obs;
+        if classes.len() >= self.policy.max_classes && !classes.contains_key(&label) {
+            // Evict the least-recently-observed class to stay bounded.
+            if let Some(coldest) =
+                classes.iter().min_by_key(|(_, s)| s.last_seen).map(|(k, _)| k.clone())
+            {
+                classes.remove(&coldest);
+                fitness_cache.remove(&coldest);
+                self.sampled.write().unwrap().remove(&coldest);
+                self.metrics.incr("tuner.evicted");
+            }
+        }
+        let state = classes.entry(label.clone()).or_default();
+        state.observe(n, secs, sample, tick);
+        if !state.sample.is_empty() && !self.sampled.read().unwrap().contains(&label) {
+            self.sampled.write().unwrap().insert(label);
+        }
+    }
+
+    /// One incremental tuning cycle for `label`; returns the time it took.
+    fn cycle(
+        &self,
+        label: &str,
+        state: &mut ClassState,
+        fitness_cache: &mut FitnessCache,
+        cycle_no: u64,
+    ) -> Duration {
+        let started = Instant::now();
+        let seed_params = self
+            .cache
+            .get(state.n_hint, label)
+            .unwrap_or_else(|| self.model.params_for(state.n_hint));
+        let seed_genome = seed_params.to_genes();
+        // Re-use the memoised fitness across cycles (incremental
+        // refinement); rebuild only when the retained sample was refreshed.
+        let fresh = matches!(fitness_cache.get(label), Some((g, _)) if *g == state.sample_gen);
+        if !fresh {
+            let built = SortTimingFitness::new(
+                state.sample.clone(),
+                AdaptiveSorter::new(self.threads),
+                self.policy.repeats,
+            );
+            fitness_cache.insert(label.to_string(), (state.sample_gen, built));
+        }
+        let fitness = &mut fitness_cache.get_mut(label).expect("fitness just ensured").1;
+        let seed_fit = fitness.eval(&seed_genome);
+        // Fresh GA seed per cycle so repeated refinements of the same class
+        // explore different neighbourhoods.
+        let cfg = GaConfig {
+            population: self.policy.population.max(2),
+            generations: self.policy.generations_per_cycle,
+            repeats: self.policy.repeats,
+            seed: self.policy.ga_seed ^ cycle_no.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..GaConfig::default()
+        };
+        let gens = self.policy.generations_per_cycle.max(1);
+        let result = GaDriver::new(cfg).refine(fitness, &seed_genome, gens);
+        self.metrics.incr("tuner.cycles");
+        self.metrics.add("tuner.generations", gens as u64);
+
+        // Publish only past the noise margin: a dozen single-shot timings
+        // beat one seed timing by luck alone, so a raw `<` would churn the
+        // cache every cycle (min_improvement_pct = 0 restores raw compare).
+        let required = seed_fit * (1.0 - self.policy.min_improvement_pct.max(0.0) / 100.0);
+        if result.best_genome != seed_genome && result.best_fitness < required {
+            let improvement_pct = (seed_fit - result.best_fitness) / seed_fit * 100.0;
+            self.cache.put(state.n_hint, label, result.best);
+            self.metrics.incr("tuner.publishes");
+            self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
+            crate::log_info!(
+                "autotune: class {label} improved {improvement_pct:.1}% \
+                 ({seed_fit:.6}s -> {:.6}s) with {}",
+                result.best_fitness,
+                result.best
+            );
+            if let Some(path) = &self.policy.persist_path {
+                if let Err(e) = policy::persist_params(&self.cache, path) {
+                    crate::log_warn!("autotune: persist failed: {e:#}");
+                }
+            }
+        } else {
+            self.metrics.incr("tuner.no_change");
+        }
+        state.mark_tuned(gens);
+        started.elapsed()
+    }
+
+    fn publish_gauges(&self, classes: &HashMap<String, ClassState>) {
+        self.metrics.set_gauge("tuner.classes", classes.len() as f64);
+        if let Some(rate) = self.metrics.counter_ratio("params.cache_hit", "params.cache_miss") {
+            self.metrics.set_gauge("tuner.cache_hit_rate", rate);
+        }
+    }
+
+    /// Duty-cycle the thread: after a cycle that took `spent`, sleep
+    /// `spent · (1 − share) / share`, in short slices so stop stays snappy.
+    fn throttle(&self, spent: Duration) {
+        let share = self.policy.max_cpu_share.clamp(0.01, 1.0);
+        let mut idle = spent.mul_f64((1.0 - share) / share);
+        while !idle.is_zero() && !self.stop.load(Ordering::SeqCst) {
+            let slice = idle.min(Duration::from_millis(25));
+            std::thread::sleep(slice);
+            idle -= slice;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::fingerprint::{self, Fingerprint};
+    use crate::data::{generate_i64, Distribution};
+
+    fn tuner_fixture(policy: AutotunePolicy) -> (OnlineTuner, Arc<TuningCache>, Arc<Metrics>) {
+        let cache = Arc::new(TuningCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let tuner = OnlineTuner::spawn(
+            policy,
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+            SymbolicModel::paper(),
+            2,
+        );
+        (tuner, cache, metrics)
+    }
+
+    fn wait_until(deadline_secs: f64, mut cond: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + Duration::from_secs_f64(deadline_secs);
+        while Instant::now() < deadline {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        cond()
+    }
+
+    #[test]
+    fn tunes_a_hot_class_and_publishes_params() {
+        let (tuner, cache, metrics) = tuner_fixture(AutotunePolicy::quick());
+        let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
+        let label = Fingerprint::of(&data).label();
+        let sample = fingerprint::sample(&data, 4096);
+        for _ in 0..8 {
+            tuner.observe(Observation {
+                label: label.clone(),
+                n: data.len(),
+                secs: 0.004,
+                sample: Some(sample.clone()),
+            });
+        }
+        assert!(
+            wait_until(30.0, || metrics.counter("tuner.cycles") > 0),
+            "tuner never ran a cycle"
+        );
+        // A cycle ran; the cache gains the class params once the GA finds an
+        // improvement over the symbolic seed (usually the first cycle on a
+        // 4k-element sample). Feed observations until it does.
+        let published = wait_until(30.0, || {
+            tuner.observe(Observation {
+                label: label.clone(),
+                n: data.len(),
+                secs: 0.004,
+                sample: Some(sample.clone()),
+            });
+            cache.get(data.len(), &label).is_some()
+        });
+        assert!(published, "no parameters published for the hot class");
+        assert!(metrics.counter("tuner.generations") > 0);
+        drop(tuner); // must join cleanly
+    }
+
+    #[test]
+    fn drop_shuts_down_promptly_without_traffic() {
+        let (tuner, _cache, _metrics) = tuner_fixture(AutotunePolicy::quick());
+        let started = Instant::now();
+        drop(tuner);
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "idle tuner must shut down quickly"
+        );
+    }
+
+    #[test]
+    fn queue_overflow_drops_instead_of_blocking() {
+        let policy = AutotunePolicy {
+            queue_capacity: 2,
+            min_observations: u64::MAX, // never tune: queue fills up
+            ..AutotunePolicy::quick()
+        };
+        let (tuner, _cache, metrics) = tuner_fixture(policy);
+        let started = Instant::now();
+        for i in 0..500 {
+            tuner.observe(Observation {
+                label: "b9:mix:uniq:w4:pm".into(),
+                n: 10_000,
+                secs: 0.001,
+                sample: if i == 0 { Some(vec![3, 1, 2]) } else { None },
+            });
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "observe must never block the caller"
+        );
+        assert_eq!(metrics.counter("tuner.observations"), 500);
+        drop(tuner);
+    }
+
+    #[test]
+    fn class_eviction_stays_bounded() {
+        let policy = AutotunePolicy {
+            max_classes: 4,
+            min_observations: u64::MAX,
+            ..AutotunePolicy::quick()
+        };
+        let (tuner, _cache, metrics) = tuner_fixture(policy);
+        for i in 0..32 {
+            tuner.observe(Observation {
+                label: format!("b9:mix:uniq:w{i}:pm"),
+                n: 10_000,
+                secs: 0.001,
+                sample: None,
+            });
+        }
+        assert!(wait_until(10.0, || metrics.counter("tuner.evicted") >= 28));
+        assert!(wait_until(10.0, || metrics.gauge("tuner.classes") == Some(4.0)));
+        drop(tuner);
+    }
+}

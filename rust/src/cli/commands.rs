@@ -279,16 +279,23 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
 
 /// `evosort serve` — run the sort service demo. With `--batch`, jobs go
 /// through the batched submission path (shared work queue, per-shard scratch
-/// reuse) and the p50/p99/jobs-per-sec report is printed.
+/// reuse) and the p50/p99/jobs-per-sec report is printed. With `--autotune`,
+/// the service owns an online tuner: repeated batches of one workload shape
+/// are submitted and the background GA refines the fingerprint-keyed cache
+/// while traffic flows.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.usize_or("jobs", 16)?;
     let n = args.usize_or("n", 1_000_000)?;
     let workers = args.usize_or("workers", 2)?;
     let threads = threads_of(args)?;
+    if args.has("autotune") {
+        return serve_autotune(args, jobs, n, workers, threads);
+    }
     let svc = SortService::new(ServiceConfig {
         workers,
         sort_threads: (threads / workers.max(1)).max(1),
         queue_capacity: 64,
+        autotune: None,
     });
     if args.has("batch") {
         let workload = crate::coordinator::BatchWorkload {
@@ -332,6 +339,99 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         anyhow::ensure!(out.valid, "job {} failed validation", out.id);
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
+    Ok(())
+}
+
+/// `evosort serve --autotune` — the online-adaptation demo/smoke: feed the
+/// service repeated batches of one workload shape until the background tuner
+/// publishes fingerprint-keyed parameters into the cache (bounded by
+/// `--rounds`), then report what it learned. Exits non-zero if the cache
+/// gained no entries — CI uses this as the autotune smoke test.
+fn serve_autotune(
+    args: &Args,
+    jobs: usize,
+    n: usize,
+    workers: usize,
+    threads: usize,
+) -> Result<()> {
+    use crate::autotune::AutotunePolicy;
+
+    // Demo-eager observation thresholds, but production defaults for the
+    // noise margin (`..Default::default()`, min_improvement_pct 2%): the
+    // CLI must not silently inherit the test-only 0% margin of `quick()`,
+    // which would let timing noise churn (and persist) the cache. The CI
+    // smoke passes `--min-improvement 0` explicitly.
+    let policy = AutotunePolicy {
+        min_observations: args.usize_or("min-obs", 8)? as u64,
+        cooldown_observations: 2,
+        retained_sample_cap: args.usize_or("sample-cap", 16_384)?,
+        generations_per_cycle: args.usize_or("tuner-generations", 2)?,
+        population: args.usize_or("tuner-population", 8)?,
+        max_cpu_share: args.f64_or("cpu-share", 0.5)?,
+        min_improvement_pct: args.f64_or("min-improvement", 2.0)?,
+        persist_path: args.get("cache-file").map(std::path::PathBuf::from),
+        ..AutotunePolicy::default()
+    };
+    let rounds = args.usize_or("rounds", 12)?;
+    let dist = dist_of(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let svc = SortService::new(ServiceConfig {
+        workers,
+        sort_threads: (threads / workers.max(1)).max(1),
+        queue_capacity: 64,
+        autotune: Some(policy),
+    });
+    println!(
+        "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} jobs of {} elements",
+        dist.name(),
+        fmt_count(n)
+    );
+    for round in 0..rounds {
+        let batch: Vec<SortJob> = (0..jobs)
+            .map(|i| {
+                let data =
+                    data::generate_i64(n, dist, seed ^ (round * jobs + i) as u64, threads);
+                let mut job = SortJob::new(data);
+                job.dist = dist.name().to_string();
+                job
+            })
+            .collect();
+        let report = svc.submit_batch(batch).wait();
+        anyhow::ensure!(report.stats.invalid == 0, "{} jobs invalid", report.stats.invalid);
+        println!(
+            "round {:>2}: {:>7.0} jobs/s  p50 {}  p99 {}  cache {}/{}  tuner: {} cycles, {} published",
+            round + 1,
+            report.stats.jobs_per_sec,
+            fmt_secs(report.stats.p50_secs),
+            fmt_secs(report.stats.p99_secs),
+            report.stats.cache_hits,
+            report.stats.cache_hits + report.stats.cache_misses,
+            svc.metrics().counter("tuner.cycles"),
+            svc.metrics().counter("tuner.publishes"),
+        );
+        // Adapted this run (a restored --cache-file alone doesn't count) and
+        // observed serving cached params.
+        if svc.metrics().counter("tuner.publishes") > 0
+            && svc.metrics().counter("params.cache_hit") > 0
+        {
+            break;
+        }
+    }
+    // Grace period: let in-flight tuning cycles land.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while svc.metrics().counter("tuner.publishes") == 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("\nmetrics:\n{}", svc.metrics().report());
+    let classes = svc.cache().entries();
+    println!("autotuned classes: {}", classes.len());
+    for (key, params) in &classes {
+        println!("  band {:>2}  {}  ->  {params}", key.size_band, key.dist);
+    }
+    anyhow::ensure!(
+        svc.metrics().counter("tuner.publishes") > 0,
+        "autotune smoke failed: the tuner published no parameters this run"
+    );
     Ok(())
 }
 

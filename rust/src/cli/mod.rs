@@ -127,6 +127,12 @@ COMMANDS
   serve     [--jobs 16] [--workers 2] [--n 1e6] [--batch] (service demo +
             metrics; --batch submits one mixed batch and reports p50/p99
             latency and jobs/sec)
+            [--autotune] [--rounds 12] [--min-obs 8] [--tuner-generations 2]
+            [--tuner-population 8] [--cpu-share 0.5] [--min-improvement 2.0]
+            [--cache-file f.txt]
+            (online tuner: repeated batches of one shape; the background GA
+            refines fingerprint-keyed params in the tuning cache while
+            traffic flows, and the run fails if nothing was learned)
   info      (platform, threads, artifact status)
 
 FLAGS common: --threads N (default: all cores), --seed S, --dist DIST

@@ -23,6 +23,7 @@
 //! workers        = 2
 //! sort_threads   = 4
 //! queue_capacity = 64
+//! autotune       = false   # online fingerprint-keyed GA refinement
 //! ```
 
 use anyhow::{bail, Result};
@@ -48,6 +49,9 @@ pub struct ServiceSettings {
     pub workers: usize,
     pub sort_threads: usize,
     pub queue_capacity: usize,
+    /// Attach the online autotuner (fingerprint observations + background
+    /// GA refinement) with default policy knobs.
+    pub autotune: bool,
 }
 
 impl ServiceSettings {
@@ -56,6 +60,7 @@ impl ServiceSettings {
             workers: self.workers,
             sort_threads: self.sort_threads,
             queue_capacity: self.queue_capacity,
+            autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
         }
     }
 }
@@ -117,6 +122,7 @@ impl RunConfig {
             workers: doc.count("service", "workers", 2)?.max(1),
             sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
             queue_capacity: doc.count("service", "queue_capacity", 64)?.max(1),
+            autotune: doc.bool("service", "autotune", false)?,
         };
 
         Ok(RunConfig { threads, pipeline, service })
@@ -159,8 +165,13 @@ queue_capacity = 16
         assert!(rc.pipeline.baselines.is_empty());
         assert_eq!(rc.service.workers, 4);
         assert_eq!(rc.service.queue_capacity, 16);
+        assert!(!rc.service.autotune, "autotune defaults off");
         let sc = rc.service.to_config();
         assert_eq!(sc.workers, 4);
+        assert!(sc.autotune.is_none());
+        // Opting in yields a default policy.
+        let rc = parse("[service]\nautotune = true").unwrap();
+        assert!(rc.service.to_config().autotune.is_some());
     }
 
     #[test]

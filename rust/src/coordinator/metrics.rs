@@ -95,6 +95,19 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// `a / (a + b)` over two counters, `None` before any observation —
+    /// e.g. the tuning-cache hit rate from `params.cache_hit` /
+    /// `params.cache_miss` (the online tuner publishes it as the
+    /// `tuner.cache_hit_rate` gauge).
+    pub fn counter_ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let (a, b) = (self.counter(a), self.counter(b));
+        if a + b == 0 {
+            None
+        } else {
+            Some(a as f64 / (a + b) as f64)
+        }
+    }
+
     /// Record a latency observation (seconds).
     pub fn observe(&self, name: &str, secs: f64) {
         let mut map = self.latencies.lock().unwrap();
@@ -184,6 +197,16 @@ mod tests {
         m.add("jobs", 4);
         assert_eq!(m.counter("jobs"), 5);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn counter_ratio_hit_rate() {
+        let m = Metrics::new();
+        assert_eq!(m.counter_ratio("hit", "miss"), None);
+        m.add("hit", 3);
+        m.add("miss", 1);
+        assert_eq!(m.counter_ratio("hit", "miss"), Some(0.75));
+        assert_eq!(m.counter_ratio("miss", "hit"), Some(0.25));
     }
 
     #[test]

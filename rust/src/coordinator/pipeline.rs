@@ -222,14 +222,16 @@ impl BatchWorkload {
 /// One-line human-readable summary of a [`BatchReport`].
 pub fn batch_summary_line(report: &BatchReport) -> String {
     format!(
-        "batch: {} jobs ({} elems) in {}  {:.1} jobs/s  p50={} p99={} invalid={}",
+        "batch: {} jobs ({} elems) in {}  {:.1} jobs/s  p50={} p99={} invalid={} cache={}h/{}m",
         report.stats.jobs,
         fmt_count(report.stats.elements as usize),
         fmt_secs(report.wall_secs),
         report.stats.jobs_per_sec,
         fmt_secs(report.stats.p50_secs),
         fmt_secs(report.stats.p99_secs),
-        report.stats.invalid
+        report.stats.invalid,
+        report.stats.cache_hits,
+        report.stats.cache_misses
     )
 }
 
@@ -345,6 +347,7 @@ mod tests {
             workers: 2,
             sort_threads: 2,
             queue_capacity: 8,
+            autotune: None,
         });
         let report = wl.run(&svc, 2);
         assert_eq!(report.stats.jobs, 40);

@@ -22,6 +22,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
+use crate::autotune::policy::AutotunePolicy;
+use crate::autotune::tuner::{Observation, OnlineTuner};
+use crate::autotune::{fingerprint, Fingerprint};
 use crate::coordinator::metrics::{self, Metrics};
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::data::validate::{self, Verdict};
@@ -33,7 +36,10 @@ use crate::util::timer;
 /// A sorting request.
 pub struct SortJob {
     pub data: Vec<i64>,
-    /// Workload tag used for cache lookup ("uniform", "zipf", ...).
+    /// Caller-declared workload tag ("uniform", "zipf", ...). A **hint**
+    /// only: parameter resolution keys the tuning cache on a fingerprint of
+    /// the actual data (see [`crate::autotune::Fingerprint`]), so a
+    /// mislabeled job can no longer poison the cache for its size band.
     pub dist: String,
     /// Explicit parameter override (skips cache + model).
     pub params: Option<SortParams>,
@@ -84,10 +90,20 @@ pub struct BatchStats {
     /// 99th-percentile per-job sort latency (nearest rank).
     pub p99_secs: f64,
     pub mean_secs: f64,
+    /// Jobs in this batch whose parameters came from the tuning cache.
+    pub cache_hits: u64,
+    /// Jobs that fell through to the symbolic model (overrides count as
+    /// neither hit nor miss).
+    pub cache_misses: u64,
 }
 
 impl BatchStats {
-    fn compute(outcomes: &[SortOutcome], wall_secs: f64) -> BatchStats {
+    fn compute(
+        outcomes: &[SortOutcome],
+        wall_secs: f64,
+        cache_hits: u64,
+        cache_misses: u64,
+    ) -> BatchStats {
         let jobs = outcomes.len();
         let invalid = outcomes.iter().filter(|o| !o.valid).count();
         let elements = outcomes.iter().map(|o| o.data.len() as u64).sum();
@@ -103,7 +119,17 @@ impl BatchStats {
             )
         };
         let jobs_per_sec = if wall_secs > 0.0 { jobs as f64 / wall_secs } else { 0.0 };
-        BatchStats { jobs, invalid, elements, jobs_per_sec, p50_secs, p99_secs, mean_secs }
+        BatchStats {
+            jobs,
+            invalid,
+            elements,
+            jobs_per_sec,
+            p50_secs,
+            p99_secs,
+            mean_secs,
+            cache_hits,
+            cache_misses,
+        }
     }
 }
 
@@ -122,6 +148,10 @@ pub struct BatchHandle {
     started: Instant,
     rx: mpsc::Receiver<(usize, SortOutcome)>,
     metrics: Arc<Metrics>,
+    // Shards resolve params concurrently; each job's increment
+    // happens-before its outcome lands on `rx`, so `wait` reads totals.
+    cache_hits: Arc<AtomicU64>,
+    cache_misses: Arc<AtomicU64>,
 }
 
 impl BatchHandle {
@@ -145,7 +175,12 @@ impl BatchHandle {
         let wall_secs = self.started.elapsed().as_secs_f64();
         let outcomes: Vec<SortOutcome> =
             slots.into_iter().map(|s| s.expect("every job reports exactly once")).collect();
-        let stats = BatchStats::compute(&outcomes, wall_secs);
+        let stats = BatchStats::compute(
+            &outcomes,
+            wall_secs,
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+        );
         self.metrics.incr("batch.completed");
         self.metrics.set_gauge("batch.last.jobs_per_sec", stats.jobs_per_sec);
         self.metrics.set_gauge("batch.last.p50_secs", stats.p50_secs);
@@ -189,23 +224,92 @@ pub struct ServiceConfig {
     pub sort_threads: usize,
     /// Pending-job queue bound (backpressure).
     pub queue_capacity: usize,
+    /// When set, the service owns an [`OnlineTuner`]: jobs feed fingerprint
+    /// + latency observations to a background thread that refines cached
+    /// parameters with incremental GA generations.
+    pub autotune: Option<AutotunePolicy>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
         let hw = crate::util::default_threads();
-        ServiceConfig { workers: 2, sort_threads: hw.div_ceil(2), queue_capacity: 64 }
+        ServiceConfig {
+            workers: 2,
+            sort_threads: hw.div_ceil(2),
+            queue_capacity: 64,
+            autotune: None,
+        }
     }
+}
+
+/// A job's resolved parameters plus the observation the tuner wants back.
+struct Resolution {
+    params: SortParams,
+    /// True when the parameters came from the tuning cache (false for
+    /// overrides and symbolic fallbacks).
+    cache_hit: bool,
+    /// `(fingerprint label, retained pre-sort sample)` — `None` for
+    /// explicit-override jobs or when autotuning is off.
+    observe: Option<(String, Vec<i64>)>,
 }
 
 /// The coordinator service.
 pub struct SortService {
+    // Field order is drop order: the pool joins its workers (which hold
+    // transient `Arc<OnlineTuner>` clones) before the tuner itself is
+    // dropped and joined.
     pool: crate::exec::pool::ThreadPool,
     sorter: Arc<AdaptiveSorter>,
     cache: Arc<TuningCache>,
     model: SymbolicModel,
     metrics: Arc<Metrics>,
+    tuner: Option<Arc<OnlineTuner>>,
     next_id: AtomicU64,
+}
+
+/// Resolve parameters for one job against shared service state: override →
+/// fingerprint-keyed cache → symbolic model. The declared `job.dist` label
+/// is NOT consulted — the cache key comes from the data itself, so
+/// mislabeled jobs cannot poison the cache (they land in their own class).
+///
+/// A free function over the shared (`Arc`ed) state so the batched path can
+/// run it *inside* worker shards: the fingerprint probe then parallelises
+/// with the sorting instead of serialising on the submitting thread.
+fn resolve_job(
+    cache: &TuningCache,
+    model: &SymbolicModel,
+    metrics: &Metrics,
+    tuner: Option<&OnlineTuner>,
+    job: &SortJob,
+) -> Resolution {
+    if let Some(p) = job.params {
+        metrics.incr("params.override");
+        return Resolution { params: p, cache_hit: false, observe: None };
+    }
+    let label = Fingerprint::of(&job.data).label();
+    let (params, cache_hit) = if let Some(p) = cache.get(job.data.len(), &label) {
+        metrics.incr("params.cache_hit");
+        (p, true)
+    } else {
+        metrics.incr("params.cache_miss");
+        metrics.incr("params.symbolic");
+        (model.params_for(job.data.len()), false)
+    };
+    // Retain a strided pre-sort sample for the tuner's GA fitness (the
+    // post-sort data is sorted, which would bias tuning toward the
+    // sorted-input special case). The copy is taken on only every k-th
+    // job — the tuner keeps one sample per class, so paying the memcpy
+    // for every job would be pure waste. An empty sample means "latency
+    // observation only"; the tuner ignores it for fitness.
+    let observe = tuner.map(|t| {
+        let sample = if t.wants_sample(&label) {
+            fingerprint::sample(&job.data, t.policy().retained_sample_cap)
+        } else {
+            Vec::new()
+        };
+        (label, sample)
+    });
+    Resolution { params, cache_hit, observe }
 }
 
 impl SortService {
@@ -217,15 +321,28 @@ impl SortService {
     /// thread budget is replaced by `config.sort_threads`.
     pub fn with_sorter(config: ServiceConfig, sorter: AdaptiveSorter) -> Self {
         let sorter = sorter.rebudget(config.sort_threads);
+        let cache = Arc::new(TuningCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let model = SymbolicModel::paper();
+        let tuner = config.autotune.map(|policy| {
+            Arc::new(OnlineTuner::spawn(
+                policy,
+                Arc::clone(&cache),
+                Arc::clone(&metrics),
+                model,
+                config.sort_threads,
+            ))
+        });
         SortService {
             pool: crate::exec::pool::ThreadPool::with_capacity(
                 config.workers,
                 config.queue_capacity,
             ),
             sorter: Arc::new(sorter),
-            cache: Arc::new(TuningCache::new()),
-            model: SymbolicModel::paper(),
-            metrics: Arc::new(Metrics::new()),
+            cache,
+            model,
+            metrics,
+            tuner,
             next_id: AtomicU64::new(1),
         }
     }
@@ -243,18 +360,16 @@ impl SortService {
         &self.metrics
     }
 
-    /// Resolve parameters for a job: override → cache → symbolic model.
-    fn resolve_params(&self, job: &SortJob) -> SortParams {
-        if let Some(p) = job.params {
-            self.metrics.incr("params.override");
-            return p;
-        }
-        if let Some(p) = self.cache.get(job.data.len(), &job.dist) {
-            self.metrics.incr("params.cache_hit");
-            return p;
-        }
-        self.metrics.incr("params.symbolic");
-        self.model.params_for(job.data.len())
+    /// Whether a background tuner is attached.
+    pub fn autotuning(&self) -> bool {
+        self.tuner.is_some()
+    }
+
+    /// The fingerprint label `data` would resolve through — the tuning-cache
+    /// key. Use this (not the declared distribution name) to pre-warm the
+    /// cache: `svc.cache().put(data.len(), &SortService::fingerprint_label(&data), params)`.
+    pub fn fingerprint_label(data: &[i64]) -> String {
+        Fingerprint::of(data).label()
     }
 
     /// Submit a job; blocks only when the queue is full (backpressure).
@@ -263,10 +378,20 @@ impl SortService {
         let (tx, rx) = mpsc::channel();
         let sorter = Arc::clone(&self.sorter);
         let metrics = Arc::clone(&self.metrics);
-        let params = self.resolve_params(&job);
+        let Resolution { params, observe, .. } =
+            resolve_job(&self.cache, &self.model, &self.metrics, self.tuner.as_deref(), &job);
+        let tuner = self.tuner.clone();
         self.metrics.incr("jobs.submitted");
         let submitted = self.pool.submit(move || {
             let outcome = execute_job(&sorter, &metrics, id, job, params, &mut Vec::new());
+            if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
+                tuner.observe(Observation {
+                    label,
+                    n: outcome.data.len(),
+                    secs: outcome.secs,
+                    sample: Some(sample),
+                });
+            }
             let _ = tx.send(outcome);
         });
         assert!(submitted, "service is shutting down");
@@ -275,14 +400,17 @@ impl SortService {
 
     /// Submit a whole batch of jobs in one call.
     ///
-    /// Parameters are resolved up front on the caller thread (cache/model
-    /// lookups are cheap); the jobs then flow through a shared work queue
+    /// The submit call itself only assigns ids and enqueues: parameter
+    /// resolution (fingerprint probe + cache/model lookup) runs *inside*
+    /// the worker shards, so probing parallelises with sorting and the
+    /// caller returns immediately. Jobs flow through a shared work queue
     /// drained by up to `pool.threads()` pool tasks, so shards balance
     /// dynamically under mixed job sizes and every shard reuses a single
     /// radix scratch buffer across all the jobs it executes — the
     /// `sort_i64_with_scratch` hot path allocates nothing after the first
     /// large job. Per-job latencies stream into the `batch.job.latency`
-    /// sample window; [`BatchHandle::wait`] publishes p50/p99/jobs-per-sec.
+    /// sample window; [`BatchHandle::wait`] publishes p50/p99/jobs-per-sec
+    /// plus the batch's tuning-cache hit/miss counts.
     pub fn submit_batch(&self, jobs: Vec<SortJob>) -> BatchHandle {
         let started = Instant::now();
         let total = jobs.len();
@@ -292,36 +420,63 @@ impl SortService {
         self.metrics.add("jobs.submitted", total as u64);
         self.metrics.add("batch.jobs.submitted", total as u64);
         self.metrics.incr("batch.submitted");
-        let queue: VecDeque<(usize, u64, SortJob, SortParams)> = jobs
+        let cache_hits = Arc::new(AtomicU64::new(0));
+        let cache_misses = Arc::new(AtomicU64::new(0));
+        let queue: VecDeque<(usize, u64, SortJob)> = jobs
             .into_iter()
             .enumerate()
-            .map(|(idx, job)| {
-                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                let params = self.resolve_params(&job);
-                (idx, id, job, params)
-            })
+            .map(|(idx, job)| (idx, self.next_id.fetch_add(1, Ordering::Relaxed), job))
             .collect();
         let queue = Arc::new(Mutex::new(queue));
         let shards = self.pool.threads().min(total.max(1));
         for _ in 0..shards {
             let queue = Arc::clone(&queue);
             let sorter = Arc::clone(&self.sorter);
+            let cache = Arc::clone(&self.cache);
+            let model = self.model;
             let metrics = Arc::clone(&self.metrics);
+            let tuner = self.tuner.clone();
+            let hits = Arc::clone(&cache_hits);
+            let misses = Arc::clone(&cache_misses);
             let tx = tx.clone();
             let submitted = self.pool.submit(move || {
                 // Per-shard scratch, reused across every job this shard pulls.
                 let mut scratch: Vec<i64> = Vec::new();
                 loop {
                     let item = queue.lock().unwrap().pop_front();
-                    let Some((idx, id, job, params)) = item else { break };
+                    let Some((idx, id, job)) = item else { break };
+                    let Resolution { params, cache_hit, observe } =
+                        resolve_job(&cache, &model, &metrics, tuner.as_deref(), &job);
+                    if job.params.is_none() {
+                        if cache_hit {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                     let outcome = execute_job(&sorter, &metrics, id, job, params, &mut scratch);
                     metrics.observe_sample("batch.job.latency", outcome.secs);
+                    if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
+                        tuner.observe(Observation {
+                            label,
+                            n: outcome.data.len(),
+                            secs: outcome.secs,
+                            sample: Some(sample),
+                        });
+                    }
                     let _ = tx.send((idx, outcome));
                 }
             });
             assert!(submitted, "service is shutting down");
         }
-        BatchHandle { total, started, rx, metrics: Arc::clone(&self.metrics) }
+        BatchHandle {
+            total,
+            started,
+            rx,
+            metrics: Arc::clone(&self.metrics),
+            cache_hits,
+            cache_misses,
+        }
     }
 
     /// Block until every submitted job has completed.
@@ -336,7 +491,12 @@ mod tests {
     use crate::data::{generate_i64, Distribution};
 
     fn service() -> SortService {
-        SortService::new(ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 8 })
+        SortService::new(ServiceConfig {
+            workers: 2,
+            sort_threads: 2,
+            queue_capacity: 8,
+            autotune: None,
+        })
     }
 
     #[test]
@@ -380,9 +540,12 @@ mod tests {
         let out = svc.submit(SortJob::new(generate_i64(200_000, Distribution::Uniform, 3, 2))).wait();
         assert!(out.valid);
         assert_eq!(svc.metrics().counter("params.symbolic"), 1);
-        // 2. cache hit after put.
-        svc.cache().put(200_000, "uniform", SortParams::paper_1e7());
-        let out = svc.submit(SortJob::new(generate_i64(200_000, Distribution::Uniform, 4, 2))).wait();
+        assert_eq!(svc.metrics().counter("params.cache_miss"), 1);
+        // 2. cache hit after put under the data's fingerprint label.
+        let data = generate_i64(200_000, Distribution::Uniform, 4, 2);
+        let label = SortService::fingerprint_label(&data);
+        svc.cache().put(data.len(), &label, SortParams::paper_1e7());
+        let out = svc.submit(SortJob::new(data)).wait();
         assert_eq!(out.params, SortParams::paper_1e7());
         assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
         // 3. explicit override wins.
@@ -392,6 +555,38 @@ mod tests {
         let out = svc.submit(job).wait();
         assert_eq!(out.params.tile, 777);
         assert_eq!(svc.metrics().counter("params.override"), 1);
+    }
+
+    #[test]
+    fn mislabeled_dist_cannot_poison_the_cache() {
+        // Regression test for the PR-1 label-trust bug: the cache used to be
+        // keyed on the caller-declared `dist` string, so parameters tuned
+        // for one workload were served to *any* job claiming that label in
+        // the same size band. Fingerprint keying puts mislabeled jobs in
+        // their own class.
+        let svc = service();
+        let uniform = generate_i64(150_000, Distribution::Uniform, 7, 2);
+        let sorted = generate_i64(150_000, Distribution::Sorted, 7, 2);
+        let uniform_label = SortService::fingerprint_label(&uniform);
+        let sorted_label = SortService::fingerprint_label(&sorted);
+        assert_ne!(uniform_label, sorted_label, "shapes must land in different classes");
+
+        // "Poison" the uniform class with pathological parameters.
+        let poison = SortParams { tile: 64, insertion_threshold: 16, ..SortParams::paper_1e7() };
+        svc.cache().put(uniform.len(), &uniform_label, poison);
+
+        // A sorted-data job *claiming* to be uniform does not see them…
+        let mut mislabeled = SortJob::new(sorted);
+        mislabeled.dist = "uniform".to_string();
+        let out = svc.submit(mislabeled).wait();
+        assert!(out.valid);
+        assert_ne!(out.params, poison, "mislabeled job must not resolve through the uniform class");
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 0);
+
+        // …while genuinely uniform data still hits its class.
+        let out = svc.submit(SortJob::new(uniform)).wait();
+        assert_eq!(out.params, poison);
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
     }
 
     #[test]
@@ -479,14 +674,23 @@ mod tests {
     #[test]
     fn batch_respects_param_override_and_cache() {
         let svc = service();
-        svc.cache().put(120_000, "uniform", SortParams::paper_1e8());
+        let cached_data = generate_i64(120_000, Distribution::Uniform, 2, 2);
+        svc.cache().put(
+            cached_data.len(),
+            &SortService::fingerprint_label(&cached_data),
+            SortParams::paper_1e8(),
+        );
         let mut override_job = SortJob::new(generate_i64(120_000, Distribution::Uniform, 1, 2));
         override_job.params = Some(SortParams { tile: 333, ..SortParams::paper_1e7() });
-        let cached_job = SortJob::new(generate_i64(120_000, Distribution::Uniform, 2, 2));
+        let cached_job = SortJob::new(cached_data);
         let report = svc.submit_batch(vec![override_job, cached_job]).wait();
         assert_eq!(report.outcomes[0].params.tile, 333);
         assert_eq!(report.outcomes[1].params, SortParams::paper_1e8());
         assert_eq!(svc.metrics().counter("params.override"), 1);
         assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        // The batch report carries its own hit/miss accounting (overrides
+        // count as neither).
+        assert_eq!(report.stats.cache_hits, 1);
+        assert_eq!(report.stats.cache_misses, 0);
     }
 }

@@ -2,10 +2,18 @@
 //! zero tuning overhead (the gap §7 of the paper addresses with symbolic
 //! models; the cache is the service-side complement).
 //!
-//! Keys are `(size_band, distribution)` — the size band is the integer part
-//! of log10(n) · 2 (half-decade bands), since tuned thresholds vary smoothly
-//! in log10 n (paper §7). Persistence is a plain text file (no serde crate
-//! offline): `band dist genes...` per line.
+//! Keys are `(size_band, class)` — the size band is the integer part of
+//! log10(n) · 2 (half-decade bands), since tuned thresholds vary smoothly in
+//! log10 n (paper §7). The class string is a workload **fingerprint** label
+//! ([`Fingerprint::label`](crate::autotune::Fingerprint::label)) computed
+//! from the job's actual data — *not* the caller-declared distribution name,
+//! which the service previously trusted and which let one mislabeled job
+//! poison the cache for its whole size band.
+//!
+//! Persistence is a versioned plain text file (no serde crate offline): a
+//! `# evosort-tuning-cache v2` header followed by `band class genes...`
+//! lines. Loading is forgiving: corrupt, truncated, or out-of-bounds lines
+//! are skipped with a warning, never propagated as `Err` or bad genes.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -13,7 +21,12 @@ use std::sync::RwLock;
 
 use anyhow::{Context, Result};
 
-use crate::params::SortParams;
+use crate::params::{Bounds, SortParams};
+
+/// Current on-disk format version (see [`TuningCache::save`]).
+pub const FORMAT_VERSION: u32 = 2;
+
+const HEADER_PREFIX: &str = "# evosort-tuning-cache v";
 
 /// Workload class key.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -60,7 +73,24 @@ impl TuningCache {
         self.len() == 0
     }
 
-    /// Persist as `band dist g0 g1 g2 g3 g4` lines.
+    /// Snapshot of every entry (for reports and tests).
+    pub fn entries(&self) -> Vec<(CacheKey, SortParams)> {
+        self.map.read().unwrap().iter().map(|(k, p)| (k.clone(), *p)).collect()
+    }
+
+    /// Copy every entry of `other` into this cache (used to restore
+    /// persisted parameters into a live service's shared cache). Returns the
+    /// number of entries absorbed.
+    pub fn absorb(&self, other: &TuningCache) -> usize {
+        let theirs = other.map.read().unwrap();
+        let mut ours = self.map.write().unwrap();
+        for (k, p) in theirs.iter() {
+            ours.insert(k.clone(), *p);
+        }
+        theirs.len()
+    }
+
+    /// Persist as a versioned header plus `band class g0 g1 g2 g3 g4` lines.
     pub fn save(&self, path: &Path) -> Result<()> {
         let map = self.map.read().unwrap();
         let mut lines: Vec<String> = map
@@ -74,19 +104,40 @@ impl TuningCache {
             })
             .collect();
         lines.sort();
-        std::fs::write(path, lines.join("\n") + "\n")
-            .with_context(|| format!("writing {}", path.display()))
+        let body = format!("{HEADER_PREFIX}{FORMAT_VERSION}\n{}\n", lines.join("\n"));
+        std::fs::write(path, body).with_context(|| format!("writing {}", path.display()))
     }
 
-    /// Load from the text format; unknown/corrupt lines are skipped with a
-    /// warning rather than failing the whole cache.
+    /// Load from the text format (headered v2 or legacy headerless v1).
+    /// Corrupt, truncated, or out-of-bounds lines are skipped with a warning
+    /// rather than failing the whole cache or clamping garbage genes into
+    /// plausible-looking parameters.
     pub fn load(path: &Path) -> Result<TuningCache> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let cache = TuningCache::new();
+        // The widest bounds any writer could have used: a persisted genome
+        // outside them is corruption, not tuning.
+        let bounds = Bounds::with_all_strategies();
+        let mut legacy_keys = 0usize;
         {
             let mut map = cache.map.write().unwrap();
             for line in text.lines() {
+                if let Some(rest) = line.strip_prefix(HEADER_PREFIX) {
+                    if let Ok(v) = rest.trim().parse::<u32>() {
+                        if v > FORMAT_VERSION {
+                            crate::log_warn!(
+                                "cache file {} is format v{v} (this build writes \
+                                 v{FORMAT_VERSION}); loading best-effort",
+                                path.display()
+                            );
+                        }
+                    }
+                    continue;
+                }
+                if line.trim_start().starts_with('#') {
+                    continue; // comments
+                }
                 let parts: Vec<&str> = line.split_whitespace().collect();
                 if parts.len() != 7 {
                     if !line.trim().is_empty() {
@@ -100,6 +151,9 @@ impl TuningCache {
                     for (i, g) in genes.iter_mut().enumerate() {
                         *g = parts[2 + i].parse().ok()?;
                     }
+                    if !bounds.validate(&genes) {
+                        return None;
+                    }
                     Some((
                         CacheKey { size_band: band, dist: parts[1].to_string() },
                         SortParams::from_genes(&genes),
@@ -107,14 +161,36 @@ impl TuningCache {
                 };
                 match parse() {
                     Some((k, p)) => {
+                        if !looks_like_fingerprint_label(&k.dist) {
+                            legacy_keys += 1;
+                        }
                         map.insert(k, p);
                     }
                     None => crate::log_warn!("skipping unparseable cache line: {line:?}"),
                 }
             }
         }
+        if legacy_keys > 0 {
+            // v1 files keyed on declared distribution names still load (the
+            // string-keyed get/put API serves them), but the service resolves
+            // through fingerprint labels, so such entries are never served.
+            crate::log_warn!(
+                "{legacy_keys} cache entries in {} use legacy (non-fingerprint) keys; \
+                 fingerprint-based resolution will not serve them",
+                path.display()
+            );
+        }
         Ok(cache)
     }
+}
+
+/// Does a cache key string look like a [`Fingerprint::label`]
+/// (`b<band>:<runs>:<dups>:w<bytes>:<signs>`) rather than a legacy v1
+/// distribution name?
+///
+/// [`Fingerprint::label`]: crate::autotune::Fingerprint::label
+fn looks_like_fingerprint_label(key: &str) -> bool {
+    key.starts_with('b') && key.split(':').count() == 5
 }
 
 #[cfg(test)]
@@ -163,5 +239,67 @@ mod tests {
         let loaded = TuningCache::load(&path).unwrap();
         assert_eq!(loaded.len(), 1);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_writes_versioned_header_and_legacy_v1_loads() {
+        let c = TuningCache::new();
+        c.put(10_000_000, "b14:mix:uniq:w4:pm", SortParams::paper_1e7());
+        let path =
+            std::env::temp_dir().join(format!("evosort-cache-v2-{}.txt", std::process::id()));
+        c.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.starts_with(&format!("{HEADER_PREFIX}{FORMAT_VERSION}\n")),
+            "missing version header: {text:?}"
+        );
+        // Headerless v1 content (the PR-1 format) still loads.
+        std::fs::write(&path, "14 uniform 3075 31291 4 99574 1418\n").unwrap();
+        let v1 = TuningCache::load(&path).unwrap();
+        assert_eq!(v1.get(10_000_000, "uniform"), Some(SortParams::paper_1e7()));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_skips_out_of_bounds_and_truncated_genes() {
+        let path =
+            std::env::temp_dir().join(format!("evosort-cache-oob-{}.txt", std::process::id()));
+        // Line 1: insertion threshold far outside any writer's bounds (bit
+        // flip / truncation damage) — must be skipped, NOT clamped into a
+        // plausible-looking value. Line 2: truncated final line. Line 3: ok.
+        std::fs::write(
+            &path,
+            "14 uniform 999999999 31291 4 99574 1418\n14 zipf 3075 31291 4 995\n12 ok 3075 31291 4 99574 1418",
+        )
+        .unwrap();
+        let loaded = TuningCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.get(1_000_000, "ok"), Some(SortParams::paper_1e7()));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn future_version_header_loads_best_effort() {
+        let path =
+            std::env::temp_dir().join(format!("evosort-cache-v9-{}.txt", std::process::id()));
+        std::fs::write(&path, "# evosort-tuning-cache v9\n14 x 3075 31291 4 99574 1418\n")
+            .unwrap();
+        let loaded = TuningCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn absorb_merges_entries() {
+        let live = TuningCache::new();
+        live.put(1_000_000, "a", SortParams::paper_1e7());
+        let persisted = TuningCache::new();
+        persisted.put(1_000_000, "b", SortParams::paper_1e8());
+        persisted.put(1_000_000, "a", SortParams::paper_1e9()); // overwrite
+        assert_eq!(live.absorb(&persisted), 2);
+        assert_eq!(live.len(), 2);
+        assert_eq!(live.get(1_000_000, "a"), Some(SortParams::paper_1e9()));
+        assert_eq!(live.get(1_000_000, "b"), Some(SortParams::paper_1e8()));
+        assert_eq!(live.entries().len(), 2);
     }
 }

@@ -105,13 +105,53 @@ impl GaDriver {
     /// Evolve against a prepared fitness function.
     pub fn run(&self, mut fitness: SortTimingFitness) -> GaResult {
         let cfg = &self.config;
-        assert!(cfg.population >= 2, "population must be at least 2");
         let mut rng = Xoshiro256pp::seeded(cfg.seed);
-
         // Generation 0: random initialisation (log-uniform thresholds).
-        let mut pop: Vec<Individual> = (0..cfg.population)
+        let pop: Vec<Individual> = (0..cfg.population)
             .map(|_| Individual::unevaluated(individual::random_genome(&cfg.bounds, &mut rng)))
             .collect();
+        self.evolve(&mut fitness, pop, cfg.generations, &mut rng)
+    }
+
+    /// Incremental refinement (the online autotuner's entry point): instead
+    /// of cold-starting from a random population, generation 0 is seeded
+    /// with a known-good genome (the cached best for a workload class), a
+    /// cloud of its mutations (exploitation), and a random remainder
+    /// (exploration). Runs `generations` generations against `fitness`,
+    /// which is borrowed so its memoisation cache survives across cycles.
+    pub fn refine(
+        &self,
+        fitness: &mut SortTimingFitness,
+        seed_genome: &Genome,
+        generations: usize,
+    ) -> GaResult {
+        let cfg = &self.config;
+        let mut rng = Xoshiro256pp::seeded(cfg.seed);
+        let mut pop = Vec::with_capacity(cfg.population);
+        pop.push(Individual::unevaluated(*seed_genome));
+        // Half the population explores the seed's neighbourhood.
+        while pop.len() < cfg.population.div_ceil(2) {
+            let mut g = *seed_genome;
+            operators::uniform_mutation(&mut g, &cfg.bounds, cfg.mutation_prob.max(0.5), &mut rng);
+            pop.push(Individual::unevaluated(g));
+        }
+        while pop.len() < cfg.population {
+            pop.push(Individual::unevaluated(individual::random_genome(&cfg.bounds, &mut rng)));
+        }
+        self.evolve(fitness, pop, generations, &mut rng)
+    }
+
+    /// The shared evolution loop: evaluate generation 0, then select, cross
+    /// over, mutate and re-evaluate for `generations` generations.
+    fn evolve(
+        &self,
+        fitness: &mut SortTimingFitness,
+        mut pop: Vec<Individual>,
+        generations: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> GaResult {
+        let cfg = &self.config;
+        assert!(cfg.population >= 2, "population must be at least 2");
         for ind in &mut pop {
             ind.fitness = fitness.eval(&ind.genome);
         }
@@ -121,7 +161,7 @@ impl GaDriver {
         let mut convergence = cfg.early_stop_patience.map(|p| Convergence::new(p, 0.01));
         let mut converged_early = false;
 
-        for g in 1..=cfg.generations {
+        for g in 1..=generations {
             // Elitism: carry the best through unchanged.
             let elite: Vec<Individual> = operators::elite_indices(&pop, cfg.elitism)
                 .into_iter()
@@ -132,12 +172,12 @@ impl GaDriver {
             // uniform mutation.
             let mut next: Vec<Individual> = elite.clone();
             while next.len() < cfg.population {
-                let pa = operators::tournament(&pop, cfg.tournament_k, &mut rng).genome;
-                let pb = operators::tournament(&pop, cfg.tournament_k, &mut rng).genome;
+                let pa = operators::tournament(&pop, cfg.tournament_k, rng).genome;
+                let pb = operators::tournament(&pop, cfg.tournament_k, rng).genome;
                 let (mut ca, mut cb) =
-                    operators::uniform_crossover(&pa, &pb, cfg.crossover_prob, &mut rng);
-                operators::uniform_mutation(&mut ca, &cfg.bounds, cfg.mutation_prob, &mut rng);
-                operators::uniform_mutation(&mut cb, &cfg.bounds, cfg.mutation_prob, &mut rng);
+                    operators::uniform_crossover(&pa, &pb, cfg.crossover_prob, rng);
+                operators::uniform_mutation(&mut ca, &cfg.bounds, cfg.mutation_prob, rng);
+                operators::uniform_mutation(&mut cb, &cfg.bounds, cfg.mutation_prob, rng);
                 next.push(Individual::unevaluated(ca));
                 if next.len() < cfg.population {
                     next.push(Individual::unevaluated(cb));
@@ -231,6 +271,26 @@ mod tests {
         let r = GaDriver::new(cfg).run(fitness);
         assert!(r.history.len() <= 31);
         assert!(r.converged_early || r.history.len() == 31);
+    }
+
+    #[test]
+    fn refine_never_loses_to_its_seed_and_keeps_memoisation() {
+        let sample = generate_i64(20_000, Distribution::Uniform, 7, 2);
+        let mut fitness = SortTimingFitness::new(sample, AdaptiveSorter::new(2), 1);
+        let driver = GaDriver::new(GaConfig { population: 6, seed: 23, ..GaConfig::quick() });
+        let seed = crate::params::SortParams::paper_1e7().to_genes();
+        let seed_t = fitness.eval(&seed);
+        let r = driver.refine(&mut fitness, &seed, 2);
+        assert_eq!(r.history.len(), 3); // gen 0 + 2
+        assert!(
+            r.best_fitness <= seed_t,
+            "the seed genome sits in generation 0 (memoised), so best can never be worse"
+        );
+        // The fitness cache survives across cycles — incremental refinement
+        // re-uses prior evaluations instead of re-timing them.
+        let r2 = driver.refine(&mut fitness, &r.best_genome, 1);
+        assert!(r2.best_fitness <= r.best_fitness);
+        assert!(fitness.cache_hits() > 0, "second cycle must hit the memo cache");
     }
 
     #[test]

@@ -35,6 +35,7 @@
     clippy::type_complexity
 )]
 
+pub mod autotune;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
@@ -52,6 +53,7 @@ pub mod util;
 
 /// Common imports for library users.
 pub mod prelude {
+    pub use crate::autotune::{AutotunePolicy, Fingerprint};
     pub use crate::data::Distribution;
     pub use crate::params::{ACode, Bounds, SortParams};
     pub use crate::sort::{AdaptiveSorter, Baseline, MergeTuning};

@@ -1,0 +1,123 @@
+//! Property tests for workload fingerprinting (the tuning-cache key).
+//!
+//! Two families of guarantees:
+//!
+//! 1. **Stability** — for each of the nine paper distributions, different
+//!    seeds (different realisations of the same workload) and nearby sizes
+//!    in the same half-decade band map to the same fingerprint class; the
+//!    cache would otherwise fragment and never warm up.
+//! 2. **Discrimination + invariance** (via the `testkit` property runner) —
+//!    sorted / reversed / duplicate-heavy inputs land in different classes,
+//!    and for small inputs (fully scanned by the probe) the value features
+//!    are exactly permutation-invariant.
+
+use evosort::autotune::{DupLevel, Fingerprint, RunShape, SignMix};
+use evosort::data::{generate_i64, Distribution};
+use evosort::rng::Xoshiro256pp;
+use evosort::testkit::{check, PropConfig};
+
+#[test]
+fn nine_paper_distributions_have_stable_classes() {
+    // 1e5 and 1.25e5 share a half-decade band, and every distribution's
+    // value span stays inside one radix-width byte bucket across the pair
+    // (ramp-shaped workloads span ~n, so sizes straddling a power of 256
+    // would legitimately change class).
+    let n = 100_000;
+    for &dist in Distribution::all() {
+        let a = Fingerprint::of(&generate_i64(n, dist, 1, 2));
+        let b = Fingerprint::of(&generate_i64(n, dist, 99, 2));
+        assert_eq!(
+            a.label(),
+            b.label(),
+            "{}: different seeds must land in the same class",
+            dist.name()
+        );
+        // Nearby size in the same half-decade band: same class.
+        let c = Fingerprint::of(&generate_i64(n + n / 4, dist, 1, 2));
+        assert_eq!(
+            a.label(),
+            c.label(),
+            "{}: sizes within one band must share a class",
+            dist.name()
+        );
+    }
+}
+
+#[test]
+fn shape_features_discriminate_the_interesting_workloads() {
+    let n = 60_000;
+    let fp = |d: Distribution| Fingerprint::of(&generate_i64(n, d, 5, 2));
+    assert_eq!(fp(Distribution::Sorted).runs, RunShape::Ascending);
+    assert_eq!(fp(Distribution::NearlySorted).runs, RunShape::Ascending);
+    assert_eq!(fp(Distribution::Reverse).runs, RunShape::Descending);
+    assert_eq!(fp(Distribution::Uniform).runs, RunShape::Mixed);
+    assert_eq!(fp(Distribution::FewUnique).dups, DupLevel::Heavy);
+    assert_eq!(fp(Distribution::Constant).dups, DupLevel::Heavy);
+    assert_eq!(fp(Distribution::Uniform).dups, DupLevel::Distinct);
+    assert_eq!(fp(Distribution::Uniform).signs, SignMix::Mixed);
+    assert_eq!(fp(Distribution::Zipf).signs, SignMix::NonNegative);
+    // The three workloads the dispatcher most needs to tell apart.
+    let (s, r, f) = (
+        fp(Distribution::Sorted).label(),
+        fp(Distribution::Reverse).label(),
+        fp(Distribution::FewUnique).label(),
+    );
+    assert_ne!(s, r);
+    assert_ne!(s, f);
+    assert_ne!(r, f);
+}
+
+#[test]
+fn fingerprint_is_deterministic() {
+    let r = check::<Vec<i64>>(PropConfig { cases: 200, ..Default::default() }, |v| {
+        Fingerprint::of(v) == Fingerprint::of(v)
+    });
+    r.unwrap_ok();
+}
+
+#[test]
+fn value_features_permutation_invariant_for_fully_probed_inputs() {
+    // testkit vectors are <= 512 elements, below the probe cap, so the
+    // probe sees the full multiset: duplicates, width and sign classes must
+    // survive an arbitrary shuffle (run shape intentionally does not).
+    let r = check::<Vec<i64>>(PropConfig { cases: 300, ..Default::default() }, |v| {
+        let a = Fingerprint::of(v);
+        let mut shuffled = v.clone();
+        let mut rng = Xoshiro256pp::seeded(v.len() as u64 ^ 0xC0FFEE);
+        rng.shuffle(&mut shuffled);
+        let b = Fingerprint::of(&shuffled);
+        a.size_band == b.size_band
+            && a.dups == b.dups
+            && a.width_bytes == b.width_bytes
+            && a.signs == b.signs
+    });
+    r.unwrap_ok();
+}
+
+#[test]
+fn sign_class_is_sound_for_fully_probed_inputs() {
+    let r = check::<Vec<i64>>(PropConfig { cases: 300, ..Default::default() }, |v| {
+        let fp = Fingerprint::of(v);
+        let any_neg = v.iter().any(|&x| x < 0);
+        let any_nonneg = v.iter().any(|&x| x >= 0);
+        match fp.signs {
+            SignMix::Mixed => any_neg && any_nonneg,
+            SignMix::Negative => any_neg && !any_nonneg,
+            SignMix::NonNegative => !any_neg,
+        }
+    });
+    r.unwrap_ok();
+}
+
+#[test]
+fn width_class_never_exceeds_eight_bytes_and_is_monotone_in_range() {
+    let r = check::<Vec<i64>>(PropConfig { cases: 300, ..Default::default() }, |v| {
+        Fingerprint::of(v).width_bytes <= 8
+    });
+    r.unwrap_ok();
+    // Widening the value range can only widen (or keep) the width class.
+    let narrow = Fingerprint::of(&[5, 6, 7, 8]);
+    let wide = Fingerprint::of(&[5, 6, 7, i64::MAX]);
+    assert!(wide.width_bytes >= narrow.width_bytes);
+    assert_eq!(wide.width_bytes, 8);
+}

@@ -7,7 +7,12 @@ use evosort::params::SortParams;
 
 #[test]
 fn service_sorts_mixed_workloads_concurrently() {
-    let svc = SortService::new(ServiceConfig { workers: 3, sort_threads: 2, queue_capacity: 4 });
+    let svc = SortService::new(ServiceConfig {
+        workers: 3,
+        sort_threads: 2,
+        queue_capacity: 4,
+        autotune: None,
+    });
     let workloads = [
         (Distribution::Uniform, "uniform"),
         (Distribution::Zipf, "zipf"),
@@ -39,7 +44,12 @@ fn service_sorts_mixed_workloads_concurrently() {
 #[test]
 fn backpressure_queue_smaller_than_jobs() {
     // queue_capacity 1 with 1 worker: submissions block but all complete.
-    let svc = SortService::new(ServiceConfig { workers: 1, sort_threads: 1, queue_capacity: 1 });
+    let svc = SortService::new(ServiceConfig {
+        workers: 1,
+        sort_threads: 1,
+        queue_capacity: 1,
+        autotune: None,
+    });
     let handles: Vec<_> = (0..8)
         .map(|i| svc.submit(SortJob::new(generate_i64(30_000, Distribution::Uniform, i, 1))))
         .collect();
@@ -51,30 +61,45 @@ fn backpressure_queue_smaller_than_jobs() {
 
 #[test]
 fn tuning_cache_lifecycle_through_service() {
-    let svc = SortService::new(ServiceConfig { workers: 1, sort_threads: 2, queue_capacity: 8 });
+    let svc = SortService::new(ServiceConfig {
+        workers: 1,
+        sort_threads: 2,
+        queue_capacity: 8,
+        autotune: None,
+    });
 
     // Cold: symbolic model used.
     let out = svc.submit(SortJob::new(generate_i64(400_000, Distribution::Uniform, 1, 2))).wait();
     assert!(out.valid);
     assert_eq!(svc.metrics().counter("params.symbolic"), 1);
 
-    // Warm the cache, resubmit same class: cache hit with cached params.
-    svc.cache().put(400_000, "uniform", SortParams::paper_1e8());
-    let out = svc.submit(SortJob::new(generate_i64(450_000, Distribution::Uniform, 2, 2))).wait();
+    // Warm the cache under the data's fingerprint label (the declared dist
+    // string is only a hint since the autotune PR), resubmit same class:
+    // cache hit with cached params.
+    let warm = generate_i64(450_000, Distribution::Uniform, 2, 2);
+    let label = SortService::fingerprint_label(&warm);
+    svc.cache().put(warm.len(), &label, SortParams::paper_1e8());
+    let out = svc.submit(SortJob::new(warm)).wait();
     assert_eq!(out.params, SortParams::paper_1e8());
     assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
 
-    // Persist + reload the cache (deployment restart scenario).
+    // Persist + reload the cache (deployment restart scenario). 420_000 sits
+    // in the same half-decade band as 450_000, so the entry still resolves.
     let path = std::env::temp_dir().join(format!("evosort-svc-cache-{}.txt", std::process::id()));
     svc.cache().save(&path).unwrap();
     let reloaded = TuningCache::load(&path).unwrap();
-    assert_eq!(reloaded.get(420_000, "uniform"), Some(SortParams::paper_1e8()));
+    assert_eq!(reloaded.get(420_000, &label), Some(SortParams::paper_1e8()));
     std::fs::remove_file(&path).unwrap();
 }
 
 #[test]
 fn throughput_accounting() {
-    let svc = SortService::new(ServiceConfig { workers: 2, sort_threads: 1, queue_capacity: 8 });
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 1,
+        queue_capacity: 8,
+        autotune: None,
+    });
     let sizes = [10_000usize, 20_000, 30_000];
     for (i, &n) in sizes.iter().enumerate() {
         let _ = svc.submit(SortJob::new(generate_i64(n, Distribution::Uniform, i as u64, 1)));
