@@ -1,12 +1,13 @@
-//! The coordinator as a long-running service: concurrent job submission with
-//! backpressure, parameter resolution (override → tuning cache → symbolic
-//! model), validation, and a metrics report.
+//! The coordinator as a long-running service: the typed async job API —
+//! mixed-dtype requests (i64 + f64), non-blocking tickets, parameter
+//! resolution (override → dtype-tagged fingerprint cache → symbolic model),
+//! result streaming over a batch, and a metrics report.
 //!
 //! ```sh
 //! cargo run --release --offline --example sort_service
 //! ```
 
-use evosort::coordinator::{ServiceConfig, SortJob, SortService};
+use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
 use evosort::data::{generate_i64, Distribution};
 use evosort::prelude::*;
 use evosort::util::{default_threads, fmt_count, fmt_secs};
@@ -22,8 +23,8 @@ fn main() {
 
     // Pre-warm the tuning cache for one workload class, as a tuned
     // deployment would (other classes fall back to the symbolic model).
-    // The cache keys on a fingerprint of the data itself, so derive the
-    // label from a representative array rather than a distribution name.
+    // The cache keys on a dtype-tagged fingerprint of the data itself, so
+    // derive the label from a representative array, not a distribution name.
     let representative = generate_i64(1_000_000, Distribution::Uniform, 0, threads);
     let label = SortService::fingerprint_label(&representative);
     svc.cache().put(representative.len(), &label, SortParams::paper_1e7());
@@ -35,27 +36,50 @@ fn main() {
         ("nearly-sorted", Distribution::NearlySorted, 1_000_000),
     ];
 
+    // Mixed-dtype traffic through one service: even jobs as i64, odd as f64
+    // (floats sort in IEEE-754 total_cmp order — NaNs are keys, not errors).
     println!("submitting 12 jobs across {} workload classes...", workloads.len());
-    let handles: Vec<_> = (0..12)
+    let tickets: Vec<Ticket> = (0..12)
         .map(|i| {
             let (name, dist, n) = workloads[i % workloads.len()];
-            let data = generate_i64(n, dist, i as u64, threads);
-            let mut job = SortJob::new(data);
-            job.dist = name.to_string();
-            svc.submit(job)
+            let ints = generate_i64(n, dist, i as u64, threads);
+            let req = if i % 2 == 0 {
+                SortRequest::new(ints)
+            } else {
+                let floats: Vec<f64> = ints.into_iter().map(|x| x as f64).collect();
+                SortRequest::new(floats)
+            };
+            svc.submit_request(req.with_dist(name))
         })
         .collect();
 
-    for h in handles {
-        let out = h.wait();
+    for t in tickets {
+        let out = t.wait().expect("job completed");
         assert!(out.valid, "job {} invalid", out.id);
         println!(
-            "job {:>2}: {:>6} elems in {:>9}  params={}",
+            "job {:>2}: {:>6} {} elems in {:>9}  params={}",
             out.id,
-            fmt_count(out.data.len()),
+            fmt_count(out.len()),
+            out.dtype(),
             fmt_secs(out.secs),
             out.params
         );
+    }
+
+    // Result streaming: consume a batch in submission order as jobs finish,
+    // no whole-batch barrier.
+    let batch: Vec<SortRequest> = (0..8)
+        .map(|i| {
+            let data = generate_i64(200_000, Distribution::Uniform, 100 + i, threads);
+            SortRequest::new(data)
+        })
+        .collect();
+    let mut streamed = 0usize;
+    for result in svc.submit_batch_requests(batch).stream() {
+        let out = result.expect("batch job completed");
+        assert!(out.valid);
+        streamed += 1;
+        println!("streamed result {streamed}/8 (job {} done)", out.id);
     }
 
     svc.drain();
@@ -63,6 +87,7 @@ fn main() {
     let hits = svc.metrics().counter("params.cache_hit");
     let sym = svc.metrics().counter("params.symbolic");
     println!("cache hits: {hits}, symbolic fallbacks: {sym}");
-    assert_eq!(svc.metrics().counter("jobs.completed"), 12);
+    assert_eq!(svc.metrics().counter("jobs.completed"), 20);
     assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+    assert_eq!(svc.metrics().counter("jobs.dtype.f64"), 6);
 }

@@ -4,10 +4,11 @@
 //! the service trusted blindly — one mislabeled job could poison the cache
 //! for every future job in that size band. The fingerprint replaces the label
 //! as the cache key: it is computed from the data itself (size band,
-//! sortedness, duplicate ratio, value-range width, sign mix), so two jobs
-//! share a cache slot only when they actually look alike. The declared
-//! `dist` string is kept on [`SortJob`](crate::coordinator::SortJob) purely
-//! as a human-readable hint.
+//! sortedness, duplicate ratio, value-range width, sign mix — plus a dtype
+//! tag for non-i64 keys), so two jobs share a cache slot only when they
+//! actually look alike. The declared `dist` string is kept on
+//! [`SortRequest`](crate::coordinator::SortRequest) purely as a
+//! human-readable hint.
 //!
 //! The sketch is deliberately coarse (a handful of buckets per feature):
 //! tuned thresholds vary smoothly with workload shape (paper §7, and the
@@ -17,6 +18,8 @@
 //! per job regardless of n, cheap enough for the submit hot path.
 
 use std::fmt;
+
+use crate::sort::key::{Dtype, SortKey};
 
 /// Elements examined per probe. Arrays no longer than this are scanned in
 /// full, which makes the value features (duplicates, width, signs) exactly
@@ -100,11 +103,27 @@ pub struct Fingerprint {
     /// 0..=8) — the radix-width estimate an LSD radix sort cares about.
     pub width_bytes: u8,
     pub signs: SignMix,
+    /// Key dtype the sketch was taken over. Labels for non-`i64` dtypes
+    /// carry the tag as a suffix segment, so an f64 workload can never
+    /// collide with an i64 workload of the same shape in the shared
+    /// [`TuningCache`](crate::coordinator::TuningCache); `i64` stays
+    /// untagged so pre-dtype persisted caches and labels keep resolving.
+    pub dtype: Dtype,
 }
 
 impl Fingerprint {
-    /// Sketch `data` with a strided probe of at most [`PROBE_CAP`] elements.
+    /// Sketch i64 `data` with a strided probe of at most [`PROBE_CAP`]
+    /// elements (the historical entry point — identical to
+    /// `of_keys::<i64>`).
     pub fn of(data: &[i64]) -> Fingerprint {
+        Self::of_keys(data)
+    }
+
+    /// Sketch a slice of any [`SortKey`] dtype. Value features are computed
+    /// over the monotone `i64` projection
+    /// ([`SortKey::to_order_i64`]), so shape classes are consistent within a
+    /// dtype; the dtype tag keeps classes separate *across* dtypes.
+    pub fn of_keys<K: SortKey>(data: &[K]) -> Fingerprint {
         let size_band = crate::coordinator::tuning_cache::CacheKey::band_of(data.len());
         if data.is_empty() {
             return Fingerprint {
@@ -113,9 +132,10 @@ impl Fingerprint {
                 dups: DupLevel::Distinct,
                 width_bytes: 0,
                 signs: SignMix::NonNegative,
+                dtype: K::DTYPE,
             };
         }
-        let probe = sample(data, PROBE_CAP);
+        let probe = sample_keys(data, PROBE_CAP);
 
         // Value features from the probe multiset.
         let (mut min, mut max) = (i64::MAX, i64::MIN);
@@ -154,22 +174,27 @@ impl Fingerprint {
 
         // Sortedness from strided *adjacent* pairs of the original layout
         // (the probe above loses adjacency).
-        let runs = run_shape(data);
+        let runs = run_shape_keys(data);
 
-        Fingerprint { size_band, runs, dups, width_bytes, signs }
+        Fingerprint { size_band, runs, dups, width_bytes, signs, dtype: K::DTYPE }
     }
 
-    /// Canonical cache-key string, e.g. `b10:asc:uniq:w4:pm`. Whitespace-free
-    /// so it survives the tuning cache's text persistence.
+    /// Canonical cache-key string, e.g. `b10:asc:uniq:w4:pm` for i64 and
+    /// `b10:asc:uniq:w8:pm:f64` for tagged dtypes. Whitespace-free so it
+    /// survives the tuning cache's text persistence.
     pub fn label(&self) -> String {
-        format!(
+        let base = format!(
             "b{}:{}:{}:w{}:{}",
             self.size_band,
             self.runs.tag(),
             self.dups.tag(),
             self.width_bytes,
             self.signs.tag()
-        )
+        );
+        match self.dtype {
+            Dtype::I64 => base,
+            tagged => format!("{base}:{}", tagged.name()),
+        }
     }
 }
 
@@ -179,8 +204,9 @@ impl fmt::Display for Fingerprint {
     }
 }
 
-/// Classify sortedness from at most [`PROBE_CAP`] strided adjacent pairs.
-fn run_shape(data: &[i64]) -> RunShape {
+/// Classify sortedness from at most [`PROBE_CAP`] strided adjacent pairs
+/// (total order via the monotone `i64` projection).
+fn run_shape_keys<K: SortKey>(data: &[K]) -> RunShape {
     if data.len() < 2 {
         return RunShape::Ascending;
     }
@@ -189,7 +215,7 @@ fn run_shape(data: &[i64]) -> RunShape {
     for i in 0..pairs {
         // Spread probes evenly: j in [0, len - 2], so j + 1 is in bounds.
         let j = i * (data.len() - 1) / pairs;
-        if data[j] <= data[j + 1] {
+        if data[j].to_order_i64() <= data[j + 1].to_order_i64() {
             ascending += 1;
         }
     }
@@ -209,12 +235,20 @@ fn run_shape(data: &[i64]) -> RunShape {
 /// fits). Used for the probe and for the representative samples the online
 /// tuner retains per fingerprint class.
 pub fn sample(data: &[i64], cap: usize) -> Vec<i64> {
+    sample_keys(data, cap)
+}
+
+/// Generic strided sample: at most `cap` elements projected onto `i64`
+/// through [`SortKey::to_order_i64`] (identity for i64). The tuner's GA
+/// fitness sorts these proxies, so every dtype shares one tuning pipeline —
+/// order structure is preserved exactly, magnitudes are not.
+pub fn sample_keys<K: SortKey>(data: &[K], cap: usize) -> Vec<i64> {
     let cap = cap.max(1);
     if data.len() <= cap {
-        return data.to_vec();
+        return data.iter().map(|x| x.to_order_i64()).collect();
     }
     // Evenly spread indices over the whole slice: i * len / cap < len.
-    (0..cap).map(|i| data[i * data.len() / cap]).collect()
+    (0..cap).map(|i| data[i * data.len() / cap].to_order_i64()).collect()
 }
 
 #[cfg(test)]
@@ -272,6 +306,36 @@ mod tests {
         assert_eq!(s[0], 0);
         let full = sample(&data, 20_000);
         assert_eq!(full, data);
+    }
+
+    #[test]
+    fn dtype_tags_separate_classes() {
+        let ints = generate_i64(50_000, Distribution::Uniform, 11, 2);
+        let floats: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+        let unsigneds: Vec<u64> = ints.iter().map(|&x| x.wrapping_sub(i64::MIN) as u64).collect();
+        let li = Fingerprint::of(&ints).label();
+        let lf = Fingerprint::of_keys(&floats).label();
+        let lu = Fingerprint::of_keys(&unsigneds).label();
+        assert_eq!(li.split(':').count(), 5, "i64 labels stay untagged: {li}");
+        assert!(lf.ends_with(":f64"), "{lf}");
+        assert!(lu.ends_with(":u64"), "{lu}");
+        assert_ne!(li, lf);
+        assert_ne!(li, lu);
+        assert_ne!(lf, lu);
+        // Same shape, same dtype, different realisation: same class.
+        let floats2: Vec<f64> = generate_i64(50_000, Distribution::Uniform, 77, 2)
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        assert_eq!(lf, Fingerprint::of_keys(&floats2).label());
+        assert!(!lf.contains(char::is_whitespace));
+    }
+
+    #[test]
+    fn of_keys_i64_matches_of() {
+        let data = generate_i64(30_000, Distribution::Zipf, 5, 2);
+        assert_eq!(Fingerprint::of(&data), Fingerprint::of_keys(&data));
+        assert_eq!(Fingerprint::of(&data).dtype, crate::sort::Dtype::I64);
     }
 
     #[test]

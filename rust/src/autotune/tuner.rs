@@ -37,7 +37,9 @@ use super::policy::{self, AutotunePolicy, ClassState};
 #[derive(Debug)]
 pub struct Observation {
     /// Fingerprint label ([`Fingerprint::label`](super::Fingerprint::label))
-    /// — the tuning-cache key this job resolved through.
+    /// — the tuning-cache key this job resolved through. Non-i64 dtypes
+    /// carry their tag in the label (e.g. `…:f64`), so per-dtype classes
+    /// are tuned — and cached — independently.
     pub label: String,
     /// Job size (cache banding input).
     pub n: usize,
@@ -59,10 +61,12 @@ pub struct OnlineTuner {
     /// Sequence number backing the [`wants_sample`](Self::wants_sample)
     /// every-k-th gate.
     seq: AtomicU64,
-    /// Labels whose class currently holds a retained sample (maintained by
-    /// the worker thread). Lets `wants_sample` always say yes for classes
-    /// that have none — a bare global modulo would starve classes whose
-    /// observations happen to interleave out of phase with the gate.
+    /// Labels that have (or have been promised) a retained sample: inserted
+    /// optimistically by `wants_sample`'s first-yes path and by the worker
+    /// thread on ingest, removed on class eviction. Lets `wants_sample` say
+    /// yes for classes that have none — a bare global modulo would starve
+    /// classes whose observations interleave out of phase with the gate —
+    /// without letting a same-class burst pay the sample memcpy per job.
     sampled: Arc<RwLock<HashSet<String>>>,
     handle: Option<JoinHandle<()>>,
 }
@@ -124,14 +128,22 @@ impl OnlineTuner {
         &self.policy
     }
 
-    /// Sampling gate for submitters: always `true` while the class has no
-    /// retained sample (a class without one can never become eligible for
-    /// tuning), then every
+    /// Sampling gate for submitters: `true` for the first job of a class
+    /// with no retained sample (a class without one can never become
+    /// eligible for tuning), then every
     /// [`sample_every`](AutotunePolicy::sample_every)-th call. The tuner
     /// keeps one retained sample per class, so copying one from every job
     /// would be pure hot-path waste.
+    ///
+    /// The label is marked **optimistically** on that first `true`: a burst
+    /// of same-class jobs arriving while the tuner thread is mid-cycle (or
+    /// duty-cycle sleeping) must not each pay the retained-sample memcpy
+    /// and flood the observation queue. If the burst's first observation is
+    /// dropped on overflow, the class's sample simply arrives with a later
+    /// `sample_every`-th job.
     pub fn wants_sample(&self, label: &str) -> bool {
         if !self.sampled.read().unwrap().contains(label) {
+            self.sampled.write().unwrap().insert(label.to_string());
             return true;
         }
         self.seq.fetch_add(1, Ordering::Relaxed) % self.policy.sample_every.max(1) == 0

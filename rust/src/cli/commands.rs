@@ -3,12 +3,12 @@
 use anyhow::{bail, Result};
 
 use crate::bench_harness::Table;
-use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortJob, SortService};
+use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortRequest, SortService};
 use crate::data::{self, Distribution};
 use crate::ga::{GaConfig, GaDriver};
 use crate::params::{ACode, SortParams};
 use crate::runtime::{Manifest, XlaTileSorter};
-use crate::sort::{AdaptiveSorter, Baseline};
+use crate::sort::{AdaptiveSorter, Baseline, Dtype, SortPayload};
 use crate::symbolic::SymbolicModel;
 use crate::util::{default_threads, fmt_count, fmt_secs, timer};
 
@@ -17,6 +17,11 @@ use super::Args;
 fn dist_of(args: &Args) -> Result<Distribution> {
     let name = args.str_or("dist", "uniform");
     Distribution::parse(name).ok_or_else(|| anyhow::anyhow!("unknown distribution {name:?}"))
+}
+
+fn dtype_of(args: &Args) -> Result<Dtype> {
+    let name = args.str_or("dtype", "i64");
+    Dtype::parse(name).ok_or_else(|| anyhow::anyhow!("unknown dtype {name:?} (i64|i32|u64|f64)"))
 }
 
 fn threads_of(args: &Args) -> Result<usize> {
@@ -277,19 +282,21 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `evosort serve` — run the sort service demo. With `--batch`, jobs go
-/// through the batched submission path (shared work queue, per-shard scratch
-/// reuse) and the p50/p99/jobs-per-sec report is printed. With `--autotune`,
-/// the service owns an online tuner: repeated batches of one workload shape
-/// are submitted and the background GA refines the fingerprint-keyed cache
-/// while traffic flows.
+/// `evosort serve` — run the sort service demo. `--dtype i64|i32|u64|f64`
+/// selects the key dtype (floats sort in `total_cmp` order). With `--batch`,
+/// jobs go through the batched submission path (shared work queue, per-shard
+/// scratch reuse) and the p50/p99/jobs-per-sec report is printed. With
+/// `--autotune`, the service owns an online tuner: repeated batches of one
+/// workload shape are submitted and the background GA refines the
+/// dtype-tagged fingerprint-keyed cache while traffic flows.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.usize_or("jobs", 16)?;
     let n = args.usize_or("n", 1_000_000)?;
     let workers = args.usize_or("workers", 2)?;
     let threads = threads_of(args)?;
+    let dtype = dtype_of(args)?;
     if args.has("autotune") {
-        return serve_autotune(args, jobs, n, workers, threads);
+        return serve_autotune(args, jobs, n, workers, threads, dtype);
     }
     let svc = SortService::new(ServiceConfig {
         workers,
@@ -302,36 +309,39 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             jobs,
             sizes: vec![n, n / 4, n / 16, 1.max(n / 64), 0, 1],
             seed: args.u64_or("seed", 42)?,
+            dtype,
             ..Default::default()
         };
         println!(
-            "batched service: {workers} workers, one batch of {jobs} mixed jobs (max {} elements)",
+            "batched service: {workers} workers, one batch of {jobs} mixed {dtype} jobs \
+             (max {} elements)",
             fmt_count(n)
         );
         let report = workload.run(&svc, threads);
         println!("{}", crate::coordinator::pipeline::batch_summary_line(&report));
         println!("\nmetrics:\n{}", svc.metrics().report());
         anyhow::ensure!(report.stats.invalid == 0, "{} jobs failed validation", report.stats.invalid);
+        anyhow::ensure!(report.stats.failed == 0, "{} jobs failed to execute", report.stats.failed);
         return Ok(());
     }
-    println!("service: {workers} workers, {jobs} jobs of {} elements", fmt_count(n));
+    println!("service: {workers} workers, {jobs} {dtype} jobs of {} elements", fmt_count(n));
     let dists = ["uniform", "zipf", "gaussian", "nearly-sorted"];
-    let handles: Vec<_> = (0..jobs)
+    let tickets: Vec<_> = (0..jobs)
         .map(|i| {
             let dist_name = dists[i % dists.len()];
             let dist = Distribution::parse(dist_name).unwrap();
             let data = data::generate_i64(n, dist, i as u64, threads);
-            let mut job = SortJob::new(data);
-            job.dist = dist_name.to_string();
-            svc.submit(job)
+            let payload = SortPayload::from_i64_values(data, dtype);
+            svc.submit_request(SortRequest::from_payload(payload).with_dist(dist_name))
         })
         .collect();
-    for h in handles {
-        let out = h.wait();
+    for t in tickets {
+        let out = t.wait().map_err(|e| anyhow::anyhow!("job lost: {e}"))?;
         println!(
-            "job {:>3}: {} in {}  valid={}  params={}",
+            "job {:>3}: {} {} in {}  valid={}  params={}",
             out.id,
-            fmt_count(out.data.len()),
+            fmt_count(out.len()),
+            out.dtype(),
             fmt_secs(out.secs),
             out.valid,
             out.params
@@ -353,6 +363,7 @@ fn serve_autotune(
     n: usize,
     workers: usize,
     threads: usize,
+    dtype: Dtype,
 ) -> Result<()> {
     use crate::autotune::AutotunePolicy;
 
@@ -382,22 +393,23 @@ fn serve_autotune(
         autotune: Some(policy),
     });
     println!(
-        "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} jobs of {} elements",
+        "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} {dtype} jobs \
+         of {} elements",
         dist.name(),
         fmt_count(n)
     );
     for round in 0..rounds {
-        let batch: Vec<SortJob> = (0..jobs)
+        let batch: Vec<SortRequest> = (0..jobs)
             .map(|i| {
                 let data =
                     data::generate_i64(n, dist, seed ^ (round * jobs + i) as u64, threads);
-                let mut job = SortJob::new(data);
-                job.dist = dist.name().to_string();
-                job
+                let payload = SortPayload::from_i64_values(data, dtype);
+                SortRequest::from_payload(payload).with_dist(dist.name())
             })
             .collect();
-        let report = svc.submit_batch(batch).wait();
+        let report = svc.submit_batch_requests(batch).wait();
         anyhow::ensure!(report.stats.invalid == 0, "{} jobs invalid", report.stats.invalid);
+        anyhow::ensure!(report.stats.failed == 0, "{} jobs failed", report.stats.failed);
         println!(
             "round {:>2}: {:>7.0} jobs/s  p50 {}  p99 {}  cache {}/{}  tuner: {} cycles, {} published",
             round + 1,

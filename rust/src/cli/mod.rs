@@ -124,9 +124,10 @@ COMMANDS
   symbolic  [--paper] [--sweep 1e5,1e6,1e7] [--n 1e8] (prints params; with
             --sweep, fits quadratics to a fresh GA sweep — Figures 7–11)
   repro     --table 1|2 [--scale-div 100] (regenerate a paper table, scaled)
-  serve     [--jobs 16] [--workers 2] [--n 1e6] [--batch] (service demo +
-            metrics; --batch submits one mixed batch and reports p50/p99
-            latency and jobs/sec)
+  serve     [--jobs 16] [--workers 2] [--n 1e6] [--dtype i64|i32|u64|f64]
+            [--batch] (service demo + metrics; --dtype picks the key dtype —
+            floats sort in IEEE total_cmp order; --batch submits one mixed
+            batch and reports p50/p99 latency and jobs/sec)
             [--autotune] [--rounds 12] [--min-obs 8] [--tuner-generations 2]
             [--tuner-population 8] [--cpu-share 0.5] [--min-improvement 2.0]
             [--cache-file f.txt]

@@ -1,15 +1,25 @@
 //! Layer-3 coordination: the master pipeline (Algorithm 1), the long-running
-//! sort service (job queue + backpressure + metrics), and the tuning cache.
+//! sort service (typed async job API: dtype-generic requests, non-blocking
+//! tickets, result streaming, backpressure + metrics), and the tuning cache.
 
 pub mod metrics;
 pub mod pipeline;
+pub mod request;
 pub mod service;
+pub mod ticket;
 pub mod tuning_cache;
 
 pub use metrics::Metrics;
 pub use pipeline::{BatchWorkload, ParamSource, PipelineConfig, PipelineRow};
+pub use request::SortRequest;
 pub use service::{
-    BatchHandle, BatchReport, BatchStats, JobHandle, ServiceConfig, SortJob, SortOutcome,
-    SortService,
+    BatchReport, BatchStats, BatchTicket, DtypeStats, ResultStream, ServiceConfig, SortService,
 };
+pub use ticket::{JobError, JobResult, SortOutput, Ticket};
 pub use tuning_cache::TuningCache;
+
+// Deprecated pre-dtype surface — kept re-exported for one release so
+// existing `use evosort::coordinator::{SortJob, JobHandle, ...}` call sites
+// keep compiling (each use still warns at the caller).
+#[allow(deprecated)]
+pub use service::{BatchHandle, JobHandle, SortJob, SortOutcome};

@@ -11,11 +11,12 @@
 //! [`SortService::submit_batch`](crate::coordinator::SortService::submit_batch),
 //! reporting jobs/sec and p50/p99 latency.
 
-use crate::coordinator::service::{BatchReport, SortJob, SortService};
+use crate::coordinator::request::SortRequest;
+use crate::coordinator::service::{BatchReport, SortService};
 use crate::data::{self, validate, Distribution};
 use crate::ga::{GaConfig, GaDriver, GaResult};
 use crate::params::SortParams;
-use crate::sort::{AdaptiveSorter, Baseline};
+use crate::sort::{AdaptiveSorter, Baseline, Dtype, SortPayload};
 use crate::util::{fmt_count, fmt_secs, timer};
 
 /// How the pipeline obtains parameters for the final sort.
@@ -164,6 +165,9 @@ pub fn run_with_sorter(config: &PipelineConfig, sorter: AdaptiveSorter) -> Vec<P
 /// A deterministic mixed workload for the batched service path: `jobs` jobs
 /// whose sizes and distributions cycle through the given lists (coprime-ish
 /// list lengths give good mixing), with per-job seeds derived from `seed`.
+/// Data is generated i64-native and projected onto `dtype` with an
+/// order-preserving map, so the same workload shape can exercise any key
+/// dtype the service supports (`serve --dtype f64`).
 #[derive(Debug, Clone)]
 pub struct BatchWorkload {
     pub jobs: usize,
@@ -172,6 +176,8 @@ pub struct BatchWorkload {
     pub seed: u64,
     /// Validate each job's output inside the service (one extra pass).
     pub validate: bool,
+    /// Key dtype every job is generated as.
+    pub dtype: Dtype,
 }
 
 impl Default for BatchWorkload {
@@ -187,23 +193,25 @@ impl Default for BatchWorkload {
             ],
             seed: 42,
             validate: true,
+            dtype: Dtype::I64,
         }
     }
 }
 
 impl BatchWorkload {
-    /// Materialise the job list (deterministic for a fixed config).
-    pub fn generate(&self, threads: usize) -> Vec<SortJob> {
+    /// Materialise the request list (deterministic for a fixed config).
+    pub fn generate(&self, threads: usize) -> Vec<SortRequest> {
         assert!(!self.sizes.is_empty() && !self.dists.is_empty(), "workload lists must be non-empty");
         (0..self.jobs)
             .map(|i| {
                 let n = self.sizes[i % self.sizes.len()];
                 let dist = self.dists[i % self.dists.len()];
                 let seed = self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-                let mut job = SortJob::new(data::generate_i64(n, dist, seed, threads));
-                job.dist = dist.name().to_string();
-                job.validate = self.validate;
-                job
+                let data = data::generate_i64(n, dist, seed, threads);
+                let payload = SortPayload::from_i64_values(data, self.dtype);
+                let mut req = SortRequest::from_payload(payload).with_dist(dist.name());
+                req.validate = self.validate;
+                req
             })
             .collect()
     }
@@ -212,8 +220,8 @@ impl BatchWorkload {
     /// Callers print [`batch_summary_line`] themselves; this only logs at
     /// debug level to avoid duplicating CLI output.
     pub fn run(&self, svc: &SortService, threads: usize) -> BatchReport {
-        let jobs = self.generate(threads);
-        let report = svc.submit_batch(jobs).wait();
+        let requests = self.generate(threads);
+        let report = svc.submit_batch_requests(requests).wait();
         crate::log_debug!("{}", batch_summary_line(&report));
         report
     }
@@ -221,8 +229,8 @@ impl BatchWorkload {
 
 /// One-line human-readable summary of a [`BatchReport`].
 pub fn batch_summary_line(report: &BatchReport) -> String {
-    format!(
-        "batch: {} jobs ({} elems) in {}  {:.1} jobs/s  p50={} p99={} invalid={} cache={}h/{}m",
+    let mut line = format!(
+        "batch: {} jobs ({} elems) in {}  {:.1} jobs/s  p50={} p99={} invalid={} failed={} cache={}h/{}m",
         report.stats.jobs,
         fmt_count(report.stats.elements as usize),
         fmt_secs(report.wall_secs),
@@ -230,9 +238,16 @@ pub fn batch_summary_line(report: &BatchReport) -> String {
         fmt_secs(report.stats.p50_secs),
         fmt_secs(report.stats.p99_secs),
         report.stats.invalid,
+        report.stats.failed,
         report.stats.cache_hits,
         report.stats.cache_misses
-    )
+    );
+    if report.stats.per_dtype.len() > 1 {
+        let parts: Vec<String> =
+            report.stats.per_dtype.iter().map(|d| format!("{}:{}", d.dtype, d.jobs)).collect();
+        line.push_str(&format!("  dtypes=[{}]", parts.join(" ")));
+    }
+    line
 }
 
 #[cfg(test)]
@@ -312,26 +327,54 @@ mod tests {
             sizes: vec![100, 0, 2_000],
             dists: vec![Distribution::Uniform, Distribution::Zipf],
             seed: 9,
-            validate: true,
+            ..Default::default()
         };
         let a = wl.generate(2);
         let b = wl.generate(4);
         assert_eq!(a.len(), 12);
         for (ja, jb) in a.iter().zip(&b) {
-            assert_eq!(ja.data, jb.data, "generation must be thread-count independent");
+            assert_eq!(ja.payload(), jb.payload(), "generation must be thread-count independent");
             assert_eq!(ja.dist, jb.dist);
         }
         // Sizes cycle 100, 0, 2000, ...
-        assert_eq!(a[0].data.len(), 100);
-        assert_eq!(a[1].data.len(), 0);
-        assert_eq!(a[2].data.len(), 2_000);
-        assert_eq!(a[3].data.len(), 100);
+        assert_eq!(a[0].len(), 100);
+        assert_eq!(a[1].len(), 0);
+        assert_eq!(a[2].len(), 2_000);
+        assert_eq!(a[3].len(), 100);
         // Distributions cycle uniform, zipf, ...
         assert_eq!(a[0].dist, "uniform");
         assert_eq!(a[1].dist, "zipf");
         // Different seeds give different data.
         let c = BatchWorkload { seed: 10, ..wl }.generate(2);
-        assert_ne!(a[0].data, c[0].data);
+        assert_ne!(a[0].payload(), c[0].payload());
+    }
+
+    #[test]
+    fn batch_workload_typed_dtypes_round_trip() {
+        for &dtype in crate::sort::Dtype::all() {
+            let wl = BatchWorkload {
+                jobs: 8,
+                sizes: vec![0, 1, 3_000],
+                dists: vec![Distribution::Uniform, Distribution::FewUnique],
+                seed: 5,
+                dtype,
+                ..Default::default()
+            };
+            let reqs = wl.generate(2);
+            assert!(reqs.iter().all(|r| r.dtype() == dtype), "{dtype}");
+            let svc = SortService::new(crate::coordinator::ServiceConfig {
+                workers: 2,
+                sort_threads: 2,
+                queue_capacity: 8,
+                autotune: None,
+            });
+            let report = svc.submit_batch_requests(reqs).wait();
+            assert_eq!(report.stats.jobs, 8, "{dtype}");
+            assert_eq!(report.stats.invalid, 0, "{dtype}");
+            assert_eq!(report.stats.failed, 0, "{dtype}");
+            assert_eq!(report.stats.per_dtype.len(), 1);
+            assert_eq!(report.stats.per_dtype[0].dtype, dtype);
+        }
     }
 
     #[test]
@@ -341,7 +384,7 @@ mod tests {
             sizes: vec![1_000, 0, 1, 8_000],
             dists: vec![Distribution::Uniform, Distribution::FewUnique],
             seed: 3,
-            validate: true,
+            ..Default::default()
         };
         let svc = SortService::new(crate::coordinator::ServiceConfig {
             workers: 2,
@@ -352,10 +395,12 @@ mod tests {
         let report = wl.run(&svc, 2);
         assert_eq!(report.stats.jobs, 40);
         assert_eq!(report.stats.invalid, 0);
-        for out in &report.outcomes {
-            assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+        for out in report.outputs() {
+            let data = out.data::<i64>().expect("i64 workload");
+            assert!(data.windows(2).all(|w| w[0] <= w[1]));
         }
         let line = batch_summary_line(&report);
         assert!(line.contains("40 jobs"), "{line}");
+        assert!(line.contains("failed=0"), "{line}");
     }
 }

@@ -1,0 +1,117 @@
+//! [`SortRequest`]: the dtype-erased job description the typed service API
+//! accepts.
+//!
+//! A request wraps a [`SortPayload`] (any supported [`SortKey`] dtype) plus
+//! the job knobs the old `SortJob` carried: a human-readable distribution
+//! hint, an optional explicit parameter override, and the validation switch.
+//! Construction is typed ([`SortRequest::new`]); everything downstream —
+//! queueing, parameter resolution, execution — is dtype-erased, so one
+//! service instance serves mixed i64/i32/u64/f64 traffic.
+
+use crate::params::SortParams;
+use crate::sort::{Dtype, SortKey, SortPayload};
+
+/// A sorting request for any supported key dtype.
+///
+/// ```
+/// use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
+///
+/// let svc = SortService::new(ServiceConfig::default());
+/// // Typed construction; floats sort in IEEE-754 total_cmp order.
+/// let ticket = svc.submit_request(SortRequest::new(vec![2.5f64, f64::NAN, -0.0, 0.0, -7.0]));
+/// let out = ticket.wait().expect("job completed");
+/// assert!(out.valid);
+/// let sorted = out.data::<f64>().unwrap();
+/// assert_eq!(sorted[0], -7.0);
+/// assert!(sorted[4].is_nan()); // NaN is a key with a defined position, not an error
+/// ```
+#[derive(Debug)]
+pub struct SortRequest {
+    pub(crate) payload: SortPayload,
+    /// Caller-declared workload tag ("uniform", "zipf", ...). A **hint**
+    /// only: parameter resolution keys the tuning cache on a dtype-tagged
+    /// fingerprint of the actual data (see
+    /// [`crate::autotune::Fingerprint`]), so a mislabeled request cannot
+    /// poison the cache for its class.
+    pub dist: String,
+    /// Explicit parameter override (skips cache + model).
+    pub params: Option<SortParams>,
+    /// Validate the output before returning (adds one parallel pass).
+    pub validate: bool,
+}
+
+impl SortRequest {
+    /// A request over typed data with default knobs (validation on).
+    pub fn new<K: SortKey>(data: Vec<K>) -> SortRequest {
+        Self::from_payload(K::into_payload(data))
+    }
+
+    /// A request over an already-erased payload.
+    pub fn from_payload(payload: SortPayload) -> SortRequest {
+        SortRequest { payload, dist: "uniform".into(), params: None, validate: true }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.payload.dtype()
+    }
+
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    pub fn payload(&self) -> &SortPayload {
+        &self.payload
+    }
+
+    /// Set the workload hint (builder style).
+    pub fn with_dist(mut self, dist: &str) -> SortRequest {
+        self.dist = dist.to_string();
+        self
+    }
+
+    /// Set an explicit parameter override (builder style).
+    pub fn with_params(mut self, params: SortParams) -> SortRequest {
+        self.params = Some(params);
+        self
+    }
+
+    /// Skip output validation (builder style).
+    pub fn without_validation(mut self) -> SortRequest {
+        self.validate = false;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_construction_and_builders() {
+        let req = SortRequest::new(vec![3u64, 1, 2])
+            .with_dist("zipf")
+            .with_params(SortParams::paper_1e7())
+            .without_validation();
+        assert_eq!(req.dtype(), Dtype::U64);
+        assert_eq!(req.len(), 3);
+        assert!(!req.is_empty());
+        assert_eq!(req.dist, "zipf");
+        assert_eq!(req.params, Some(SortParams::paper_1e7()));
+        assert!(!req.validate);
+        assert_eq!(req.payload().as_slice::<u64>(), Some(&[3u64, 1, 2][..]));
+    }
+
+    #[test]
+    fn defaults_match_the_old_sortjob_contract() {
+        let req = SortRequest::new(Vec::<i64>::new());
+        assert_eq!(req.dtype(), Dtype::I64);
+        assert!(req.is_empty());
+        assert_eq!(req.dist, "uniform");
+        assert!(req.params.is_none());
+        assert!(req.validate);
+    }
+}

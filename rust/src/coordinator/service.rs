@@ -1,86 +1,68 @@
 //! The sort service: EvoSort as a long-running coordinator.
 //!
-//! Clients submit [`SortJob`]s; a bounded [`ThreadPool`](crate::exec::pool::ThreadPool)
-//! executes them (backpressure when the queue fills), each job resolving its
-//! parameters from — in priority order — the explicit override, the tuning
-//! cache, or the symbolic model, then running Adaptive Partition Sort and
-//! validating the output. Results come back over a per-job channel.
+//! Clients submit typed [`SortRequest`]s (`i64`/`i32`/`u64`/`f64` — any
+//! [`SortKey`](crate::sort::SortKey) dtype); a bounded
+//! [`ThreadPool`](crate::exec::pool::ThreadPool) executes them (backpressure
+//! when the queue fills), each job resolving its parameters from — in
+//! priority order — the explicit override, the dtype-tagged
+//! fingerprint-keyed tuning cache, or the symbolic model, then running
+//! Adaptive Partition Sort and validating the output.
 //!
-//! Two submission paths share one execution helper:
+//! Two submission paths, both non-blocking on the result side:
 //!
-//! * [`SortService::submit`] — one job, one pool task, one reply channel
-//!   (lowest latency for sparse traffic);
-//! * [`SortService::submit_batch`] — many jobs in one call: the batch is
-//!   sharded across the pool via a shared work queue (dynamic balancing —
-//!   a shard that drew small jobs keeps pulling), each worker reuses one
-//!   radix scratch buffer across all the jobs it executes, and the returned
-//!   [`BatchReport`] carries p50/p99 latency and jobs/sec, which are also
-//!   published through [`Metrics`] (`batch.*` gauges and sample windows).
+//! * [`SortService::submit_request`] — one job, one [`Ticket`]: poll with
+//!   `try_result`, park with `wait`/`wait_timeout` (condvar, zero CPU), or
+//!   `cancel`. A worker lost to a panic or shutdown resolves the ticket to
+//!   [`JobError::WorkerLost`](crate::coordinator::JobError::WorkerLost)
+//!   instead of hanging.
+//! * [`SortService::submit_batch_requests`] — many jobs in one call: the
+//!   batch is sharded across the pool via a shared work queue (dynamic
+//!   balancing), each worker reuses one [`SortScratch`] across all the jobs
+//!   it executes, and the returned [`BatchTicket`] either barriers
+//!   ([`BatchTicket::wait`] → [`BatchReport`] with p50/p99, jobs/sec and
+//!   per-dtype stats) or streams ([`BatchTicket::stream`] →
+//!   [`ResultStream`], yielding completed jobs in submission order as
+//!   workers finish them — no whole-batch barrier).
+//!
+//! The pre-dtype `SortJob`/`JobHandle`/`BatchHandle` surface survives one
+//! release as a thin deprecated shim over the typed API.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::autotune::policy::AutotunePolicy;
 use crate::autotune::tuner::{Observation, OnlineTuner};
 use crate::autotune::{fingerprint, Fingerprint};
 use crate::coordinator::metrics::{self, Metrics};
+use crate::coordinator::request::SortRequest;
+use crate::coordinator::ticket::{CompletionGuard, JobError, JobResult, JobSlot, SortOutput, Ticket};
 use crate::coordinator::tuning_cache::TuningCache;
-use crate::data::validate::{self, Verdict};
+use crate::data::validate::Verdict;
 use crate::params::SortParams;
+use crate::sort::key::{self, Dtype, SortKey, SortPayload, SortScratch};
 use crate::sort::AdaptiveSorter;
 use crate::symbolic::SymbolicModel;
 use crate::util::timer;
 
-/// A sorting request.
-pub struct SortJob {
-    pub data: Vec<i64>,
-    /// Caller-declared workload tag ("uniform", "zipf", ...). A **hint**
-    /// only: parameter resolution keys the tuning cache on a fingerprint of
-    /// the actual data (see [`crate::autotune::Fingerprint`]), so a
-    /// mislabeled job can no longer poison the cache for its size band.
-    pub dist: String,
-    /// Explicit parameter override (skips cache + model).
-    pub params: Option<SortParams>,
-    /// Validate the output before returning (adds one parallel pass).
-    pub validate: bool,
-}
-
-impl SortJob {
-    pub fn new(data: Vec<i64>) -> Self {
-        SortJob { data, dist: "uniform".into(), params: None, validate: true }
-    }
-}
-
-/// A completed job.
-#[derive(Debug)]
-pub struct SortOutcome {
-    pub id: u64,
-    pub data: Vec<i64>,
-    pub params: SortParams,
-    pub secs: f64,
-    pub valid: bool,
-}
-
-/// Handle to an in-flight job.
-pub struct JobHandle {
-    pub id: u64,
-    rx: mpsc::Receiver<SortOutcome>,
-}
-
-impl JobHandle {
-    /// Block until the job completes.
-    pub fn wait(self) -> SortOutcome {
-        self.rx.recv().expect("service dropped job reply")
-    }
+/// Per-dtype slice of a batch (only dtypes that appeared are listed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DtypeStats {
+    pub dtype: Dtype,
+    pub jobs: usize,
+    pub elements: u64,
+    pub mean_secs: f64,
 }
 
 /// Aggregate statistics for one completed batch.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BatchStats {
     pub jobs: usize,
     pub invalid: usize,
+    /// Jobs that resolved to an error (cancelled / worker lost) instead of
+    /// an output.
+    pub failed: usize,
     /// Total elements sorted across the batch.
     pub elements: u64,
     /// Batch throughput: jobs / wall-clock seconds.
@@ -95,19 +77,23 @@ pub struct BatchStats {
     /// Jobs that fell through to the symbolic model (overrides count as
     /// neither hit nor miss).
     pub cache_misses: u64,
+    /// Breakdown by key dtype, in [`Dtype::all`] order.
+    pub per_dtype: Vec<DtypeStats>,
 }
 
 impl BatchStats {
     fn compute(
-        outcomes: &[SortOutcome],
+        outcomes: &[JobResult],
         wall_secs: f64,
         cache_hits: u64,
         cache_misses: u64,
     ) -> BatchStats {
         let jobs = outcomes.len();
-        let invalid = outcomes.iter().filter(|o| !o.valid).count();
-        let elements = outcomes.iter().map(|o| o.data.len() as u64).sum();
-        let mut lats: Vec<f64> = outcomes.iter().map(|o| o.secs).collect();
+        let failed = outcomes.iter().filter(|r| r.is_err()).count();
+        let ok = || outcomes.iter().filter_map(|r| r.as_ref().ok());
+        let invalid = ok().filter(|o| !o.valid).count();
+        let elements = ok().map(|o| o.len() as u64).sum();
+        let mut lats: Vec<f64> = ok().map(|o| o.secs).collect();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let (p50_secs, p99_secs, mean_secs) = if lats.is_empty() {
             (0.0, 0.0, 0.0)
@@ -115,13 +101,31 @@ impl BatchStats {
             (
                 metrics::percentile_of_sorted(&lats, 50.0),
                 metrics::percentile_of_sorted(&lats, 99.0),
-                lats.iter().sum::<f64>() / jobs as f64,
+                lats.iter().sum::<f64>() / lats.len() as f64,
             )
         };
         let jobs_per_sec = if wall_secs > 0.0 { jobs as f64 / wall_secs } else { 0.0 };
+        let mut per_dtype = Vec::new();
+        for &d in Dtype::all() {
+            let (mut n, mut elems, mut secs_sum) = (0usize, 0u64, 0.0f64);
+            for o in ok().filter(|o| o.dtype() == d) {
+                n += 1;
+                elems += o.len() as u64;
+                secs_sum += o.secs;
+            }
+            if n > 0 {
+                per_dtype.push(DtypeStats {
+                    dtype: d,
+                    jobs: n,
+                    elements: elems,
+                    mean_secs: secs_sum / n as f64,
+                });
+            }
+        }
         BatchStats {
             jobs,
             invalid,
+            failed,
             elements,
             jobs_per_sec,
             p50_secs,
@@ -129,32 +133,75 @@ impl BatchStats {
             mean_secs,
             cache_hits,
             cache_misses,
+            per_dtype,
         }
     }
 }
 
-/// The result of one batch: outcomes in submission order plus throughput and
-/// latency-percentile statistics.
+/// The result of one batch: per-job results in submission order plus
+/// throughput, latency-percentile and per-dtype statistics.
+#[must_use = "a BatchReport carries the sorted payloads and the batch statistics"]
 #[derive(Debug)]
 pub struct BatchReport {
-    pub outcomes: Vec<SortOutcome>,
+    pub outcomes: Vec<JobResult>,
     pub wall_secs: f64,
     pub stats: BatchStats,
 }
 
-/// Handle to an in-flight batch.
-pub struct BatchHandle {
+impl BatchReport {
+    /// Successful outputs only, in submission order.
+    pub fn outputs(&self) -> impl Iterator<Item = &SortOutput> {
+        self.outcomes.iter().filter_map(|r| r.as_ref().ok())
+    }
+
+    /// The `idx`-th job's output; panics if that job failed.
+    pub fn output(&self, idx: usize) -> &SortOutput {
+        self.outcomes[idx].as_ref().expect("job failed")
+    }
+}
+
+/// Publishes `batch.completed` exactly once per batch — on wait, on full
+/// stream drain, or (via `Drop`) when the handle/stream is abandoned — so
+/// the `batch.submitted`/`batch.completed` counter pair always converges
+/// even for fire-and-forget batches. The jobs themselves run to completion
+/// on the pool regardless.
+struct BatchCompletion {
+    metrics: Arc<Metrics>,
+    published: bool,
+}
+
+impl BatchCompletion {
+    fn publish(&mut self) {
+        if !self.published {
+            self.published = true;
+            self.metrics.incr("batch.completed");
+        }
+    }
+}
+
+impl Drop for BatchCompletion {
+    fn drop(&mut self) {
+        self.publish();
+    }
+}
+
+/// Handle to an in-flight batch: barrier with [`wait`](BatchTicket::wait) or
+/// consume incrementally with [`stream`](BatchTicket::stream). Dropping the
+/// handle is fire-and-forget: the jobs still run to completion and the
+/// batch still counts as completed in the metrics.
+#[must_use = "wait() or stream() the BatchTicket to receive the batch results"]
+pub struct BatchTicket {
     total: usize,
     started: Instant,
-    rx: mpsc::Receiver<(usize, SortOutcome)>,
-    metrics: Arc<Metrics>,
+    rx: mpsc::Receiver<(usize, JobResult)>,
+    completion: BatchCompletion,
     // Shards resolve params concurrently; each job's increment
-    // happens-before its outcome lands on `rx`, so `wait` reads totals.
+    // happens-before its result lands on `rx`, so `wait` reads totals.
     cache_hits: Arc<AtomicU64>,
     cache_misses: Arc<AtomicU64>,
 }
 
-impl BatchHandle {
+impl BatchTicket {
     pub fn len(&self) -> usize {
         self.total
     }
@@ -163,57 +210,197 @@ impl BatchHandle {
         self.total == 0
     }
 
-    /// Block until every job in the batch completes; outcomes are returned in
+    /// Block until every job in the batch resolves; results are returned in
     /// submission order and the batch gauges are published to the metrics
-    /// registry (`batch.last.*`).
-    pub fn wait(self) -> BatchReport {
-        let mut slots: Vec<Option<SortOutcome>> = (0..self.total).map(|_| None).collect();
-        for _ in 0..self.total {
-            let (idx, outcome) = self.rx.recv().expect("service dropped batch reply");
-            slots[idx] = Some(outcome);
+    /// registry (`batch.last.*`). Jobs lost to a dead worker resolve to
+    /// `Err(WorkerLost)` instead of hanging the wait.
+    pub fn wait(mut self) -> BatchReport {
+        let mut slots: Vec<Option<JobResult>> = (0..self.total).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < self.total {
+            match self.rx.recv() {
+                Ok((idx, result)) => {
+                    if slots[idx].is_none() {
+                        received += 1;
+                    }
+                    slots[idx] = Some(result);
+                }
+                // Every sender is gone: the unfilled slots can never arrive.
+                Err(_) => break,
+            }
         }
         let wall_secs = self.started.elapsed().as_secs_f64();
-        let outcomes: Vec<SortOutcome> =
-            slots.into_iter().map(|s| s.expect("every job reports exactly once")).collect();
+        let outcomes: Vec<JobResult> =
+            slots.into_iter().map(|s| s.unwrap_or(Err(JobError::WorkerLost))).collect();
         let stats = BatchStats::compute(
             &outcomes,
             wall_secs,
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
         );
-        self.metrics.incr("batch.completed");
-        self.metrics.set_gauge("batch.last.jobs_per_sec", stats.jobs_per_sec);
-        self.metrics.set_gauge("batch.last.p50_secs", stats.p50_secs);
-        self.metrics.set_gauge("batch.last.p99_secs", stats.p99_secs);
+        self.completion.publish();
+        let metrics = &self.completion.metrics;
+        metrics.set_gauge("batch.last.jobs_per_sec", stats.jobs_per_sec);
+        metrics.set_gauge("batch.last.p50_secs", stats.p50_secs);
+        metrics.set_gauge("batch.last.p99_secs", stats.p99_secs);
         BatchReport { outcomes, wall_secs, stats }
+    }
+
+    /// Consume the batch incrementally: an iterator that yields each job's
+    /// result **in submission order, as workers finish them** — result `k`
+    /// is delivered as soon as jobs `0..=k` are done, while later jobs are
+    /// still sorting. No whole-batch barrier.
+    pub fn stream(self) -> ResultStream {
+        ResultStream {
+            rx: self.rx,
+            buffered: HashMap::new(),
+            next_idx: 0,
+            total: self.total,
+            completion: self.completion,
+        }
     }
 }
 
-/// Run one resolved job to completion: optional fingerprint, timed sort with
-/// caller-provided scratch, validation, metrics accounting. Shared by the
-/// single-job and batched submission paths.
-fn execute_job(
+/// Incremental batch consumption (see [`BatchTicket::stream`]). Blocking
+/// waits park on the underlying channel — no polling. Dropping the stream
+/// early is safe: remaining jobs still run to completion (their results are
+/// discarded).
+#[must_use = "iterate the ResultStream to receive batch results as they complete"]
+pub struct ResultStream {
+    rx: mpsc::Receiver<(usize, JobResult)>,
+    /// Out-of-order arrivals parked until their turn.
+    buffered: HashMap<usize, JobResult>,
+    next_idx: usize,
+    total: usize,
+    /// Publishes `batch.completed` on full drain — or on drop for abandoned
+    /// streams, keeping the counter in lockstep with `batch.submitted`.
+    completion: BatchCompletion,
+}
+
+impl ResultStream {
+    /// Results not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.total - self.next_idx
+    }
+}
+
+impl Iterator for ResultStream {
+    type Item = JobResult;
+
+    fn next(&mut self) -> Option<JobResult> {
+        if self.next_idx >= self.total {
+            return None;
+        }
+        loop {
+            if let Some(result) = self.buffered.remove(&self.next_idx) {
+                self.advance();
+                return Some(result);
+            }
+            match self.rx.recv() {
+                Ok((idx, result)) => {
+                    self.buffered.insert(idx, result);
+                }
+                Err(_) => {
+                    // Every sender is gone and the next-in-order result
+                    // never arrived: the job is lost, not late.
+                    self.advance();
+                    return Some(Err(JobError::WorkerLost));
+                }
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining(), Some(self.remaining()))
+    }
+}
+
+impl ExactSizeIterator for ResultStream {}
+
+impl ResultStream {
+    fn advance(&mut self) {
+        self.next_idx += 1;
+        if self.next_idx == self.total {
+            self.completion.publish();
+        }
+    }
+}
+
+fn dtype_counter(d: Dtype) -> &'static str {
+    match d {
+        Dtype::I64 => "jobs.dtype.i64",
+        Dtype::I32 => "jobs.dtype.i32",
+        Dtype::U64 => "jobs.dtype.u64",
+        Dtype::F64 => "jobs.dtype.f64",
+    }
+}
+
+/// Run one resolved job to completion for a concrete key dtype: optional
+/// multiset fingerprint, timed sort with shard-owned scratch, total-order
+/// validation, metrics accounting.
+fn run_typed<K: SortKey>(
     sorter: &AdaptiveSorter,
     metrics: &Metrics,
     id: u64,
-    mut job: SortJob,
+    mut data: Vec<K>,
+    validate: bool,
     params: SortParams,
-    scratch: &mut Vec<i64>,
-) -> SortOutcome {
+    scratch: &mut SortScratch,
+) -> SortOutput {
     let threads = sorter.threads();
-    let fp = job.validate.then(|| validate::fingerprint_i64(&job.data, threads));
-    let (_, secs) = timer::time(|| sorter.sort_i64_with_scratch(&mut job.data, &params, scratch));
+    let fp = validate.then(|| key::fingerprint_keys(&data, threads));
+    let (_, secs) = timer::time(|| K::sort_with(sorter, &mut data, &params, scratch));
     let valid = match fp {
-        Some(fp) => validate::validate_i64(fp, &job.data, threads) == Verdict::Valid,
+        Some(fp) => key::validate_keys(fp, &data, threads) == Verdict::Valid,
         None => true,
     };
     metrics.incr("jobs.completed");
+    metrics.incr(dtype_counter(K::DTYPE));
     metrics.observe("sort.latency", secs);
-    metrics.add("elements.sorted", job.data.len() as u64);
+    metrics.add("elements.sorted", data.len() as u64);
     if !valid {
         metrics.incr("jobs.invalid");
     }
-    SortOutcome { id, data: job.data, params, secs, valid }
+    SortOutput { id, payload: K::into_payload(data), params, secs, valid }
+}
+
+/// Dtype dispatch over the erased payload — shared by the single-job and
+/// batched submission paths.
+fn execute_request(
+    sorter: &AdaptiveSorter,
+    metrics: &Metrics,
+    id: u64,
+    req: SortRequest,
+    params: SortParams,
+    scratch: &mut SortScratch,
+) -> SortOutput {
+    let SortRequest { payload, validate, .. } = req;
+    match payload {
+        SortPayload::I64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
+        SortPayload::I32(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
+        SortPayload::U64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
+        SortPayload::F64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
+    }
+}
+
+/// Dtype-tagged fingerprint label of a payload (the tuning-cache key).
+fn payload_label(payload: &SortPayload) -> String {
+    match payload {
+        SortPayload::I64(v) => Fingerprint::of_keys(v.as_slice()).label(),
+        SortPayload::I32(v) => Fingerprint::of_keys(v.as_slice()).label(),
+        SortPayload::U64(v) => Fingerprint::of_keys(v.as_slice()).label(),
+        SortPayload::F64(v) => Fingerprint::of_keys(v.as_slice()).label(),
+    }
+}
+
+/// Strided i64-projected sample of a payload (retained GA-fitness input).
+fn payload_sample(payload: &SortPayload, cap: usize) -> Vec<i64> {
+    match payload {
+        SortPayload::I64(v) => fingerprint::sample_keys(v.as_slice(), cap),
+        SortPayload::I32(v) => fingerprint::sample_keys(v.as_slice(), cap),
+        SortPayload::U64(v) => fingerprint::sample_keys(v.as_slice(), cap),
+        SortPayload::F64(v) => fingerprint::sample_keys(v.as_slice(), cap),
+    }
 }
 
 /// Service configuration.
@@ -267,33 +454,34 @@ pub struct SortService {
     next_id: AtomicU64,
 }
 
-/// Resolve parameters for one job against shared service state: override →
-/// fingerprint-keyed cache → symbolic model. The declared `job.dist` label
-/// is NOT consulted — the cache key comes from the data itself, so
-/// mislabeled jobs cannot poison the cache (they land in their own class).
+/// Resolve parameters for one request against shared service state:
+/// override → dtype-tagged fingerprint-keyed cache → symbolic model. The
+/// declared `req.dist` label is NOT consulted — the cache key comes from the
+/// data itself, so mislabeled jobs cannot poison the cache, and the dtype
+/// tag keeps (say) f64 classes from ever colliding with i64 ones.
 ///
 /// A free function over the shared (`Arc`ed) state so the batched path can
 /// run it *inside* worker shards: the fingerprint probe then parallelises
 /// with the sorting instead of serialising on the submitting thread.
-fn resolve_job(
+fn resolve_request(
     cache: &TuningCache,
     model: &SymbolicModel,
     metrics: &Metrics,
     tuner: Option<&OnlineTuner>,
-    job: &SortJob,
+    req: &SortRequest,
 ) -> Resolution {
-    if let Some(p) = job.params {
+    if let Some(p) = req.params {
         metrics.incr("params.override");
         return Resolution { params: p, cache_hit: false, observe: None };
     }
-    let label = Fingerprint::of(&job.data).label();
-    let (params, cache_hit) = if let Some(p) = cache.get(job.data.len(), &label) {
+    let label = payload_label(&req.payload);
+    let (params, cache_hit) = if let Some(p) = cache.get(req.len(), &label) {
         metrics.incr("params.cache_hit");
         (p, true)
     } else {
         metrics.incr("params.cache_miss");
         metrics.incr("params.symbolic");
-        (model.params_for(job.data.len()), false)
+        (model.params_for(req.len()), false)
     };
     // Retain a strided pre-sort sample for the tuner's GA fitness (the
     // post-sort data is sorted, which would bias tuning toward the
@@ -303,7 +491,7 @@ fn resolve_job(
     // observation only"; the tuner ignores it for fitness.
     let observe = tuner.map(|t| {
         let sample = if t.wants_sample(&label) {
-            fingerprint::sample(&job.data, t.policy().retained_sample_cap)
+            payload_sample(&req.payload, t.policy().retained_sample_cap)
         } else {
             Vec::new()
         };
@@ -365,40 +553,58 @@ impl SortService {
         self.tuner.is_some()
     }
 
-    /// The fingerprint label `data` would resolve through — the tuning-cache
-    /// key. Use this (not the declared distribution name) to pre-warm the
-    /// cache: `svc.cache().put(data.len(), &SortService::fingerprint_label(&data), params)`.
+    /// The fingerprint label i64 `data` would resolve through — the
+    /// tuning-cache key. Use this (not the declared distribution name) to
+    /// pre-warm the cache.
     pub fn fingerprint_label(data: &[i64]) -> String {
         Fingerprint::of(data).label()
     }
 
-    /// Submit a job; blocks only when the queue is full (backpressure).
-    pub fn submit(&self, job: SortJob) -> JobHandle {
+    /// Dtype-generic [`fingerprint_label`](Self::fingerprint_label): labels
+    /// for non-i64 dtypes carry the dtype tag, e.g. `b10:mix:uniq:w8:pm:f64`.
+    pub fn fingerprint_label_for<K: SortKey>(data: &[K]) -> String {
+        Fingerprint::of_keys(data).label()
+    }
+
+    /// Submit one typed request; blocks only while the job queue is full
+    /// (backpressure), never for the result — that arrives through the
+    /// returned [`Ticket`].
+    pub fn submit_request(&self, req: SortRequest) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
+        let slot = JobSlot::pending();
+        let guard = CompletionGuard::new(Arc::clone(&slot));
         let sorter = Arc::clone(&self.sorter);
         let metrics = Arc::clone(&self.metrics);
         let Resolution { params, observe, .. } =
-            resolve_job(&self.cache, &self.model, &self.metrics, self.tuner.as_deref(), &job);
+            resolve_request(&self.cache, &self.model, &self.metrics, self.tuner.as_deref(), &req);
         let tuner = self.tuner.clone();
         self.metrics.incr("jobs.submitted");
-        let submitted = self.pool.submit(move || {
-            let outcome = execute_job(&sorter, &metrics, id, job, params, &mut Vec::new());
+        // If the pool refuses (shutdown) the closure is dropped unexecuted
+        // and the guard resolves the ticket to WorkerLost — same for a
+        // worker panic mid-sort. `wait` can always return.
+        let _ = self.pool.submit(move || {
+            // Marks the slot Running (refusing later cancels) or honours a
+            // cancel that landed while the job was queued.
+            if guard.start() {
+                guard.complete(Err(JobError::Cancelled));
+                return;
+            }
+            let outcome =
+                execute_request(&sorter, &metrics, id, req, params, &mut SortScratch::new());
             if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                 tuner.observe(Observation {
                     label,
-                    n: outcome.data.len(),
+                    n: outcome.len(),
                     secs: outcome.secs,
                     sample: Some(sample),
                 });
             }
-            let _ = tx.send(outcome);
+            guard.complete(Ok(outcome));
         });
-        assert!(submitted, "service is shutting down");
-        JobHandle { id, rx }
+        Ticket::new(id, slot)
     }
 
-    /// Submit a whole batch of jobs in one call.
+    /// Submit a whole batch of typed requests in one call.
     ///
     /// The submit call itself only assigns ids and enqueues: parameter
     /// resolution (fingerprint probe + cache/model lookup) runs *inside*
@@ -406,14 +612,14 @@ impl SortService {
     /// caller returns immediately. Jobs flow through a shared work queue
     /// drained by up to `pool.threads()` pool tasks, so shards balance
     /// dynamically under mixed job sizes and every shard reuses a single
-    /// radix scratch buffer across all the jobs it executes — the
-    /// `sort_i64_with_scratch` hot path allocates nothing after the first
-    /// large job. Per-job latencies stream into the `batch.job.latency`
-    /// sample window; [`BatchHandle::wait`] publishes p50/p99/jobs-per-sec
-    /// plus the batch's tuning-cache hit/miss counts.
-    pub fn submit_batch(&self, jobs: Vec<SortJob>) -> BatchHandle {
+    /// [`SortScratch`] across all the jobs it executes. A job that panics
+    /// resolves to `Err(WorkerLost)` without taking the rest of the batch
+    /// down. Per-job latencies stream into the `batch.job.latency` sample
+    /// window; [`BatchTicket::wait`] publishes p50/p99/jobs-per-sec plus the
+    /// batch's tuning-cache hit/miss counts and per-dtype stats.
+    pub fn submit_batch_requests(&self, requests: Vec<SortRequest>) -> BatchTicket {
         let started = Instant::now();
-        let total = jobs.len();
+        let total = requests.len();
         let (tx, rx) = mpsc::channel();
         // Keep the shared counters consistent with the single-job path
         // (jobs.submitted >= jobs.completed must hold across mixed traffic).
@@ -422,10 +628,10 @@ impl SortService {
         self.metrics.incr("batch.submitted");
         let cache_hits = Arc::new(AtomicU64::new(0));
         let cache_misses = Arc::new(AtomicU64::new(0));
-        let queue: VecDeque<(usize, u64, SortJob)> = jobs
+        let queue: VecDeque<(usize, u64, SortRequest)> = requests
             .into_iter()
             .enumerate()
-            .map(|(idx, job)| (idx, self.next_id.fetch_add(1, Ordering::Relaxed), job))
+            .map(|(idx, req)| (idx, self.next_id.fetch_add(1, Ordering::Relaxed), req))
             .collect();
         let queue = Arc::new(Mutex::new(queue));
         let shards = self.pool.threads().min(total.max(1));
@@ -440,48 +646,179 @@ impl SortService {
             let misses = Arc::clone(&cache_misses);
             let tx = tx.clone();
             let submitted = self.pool.submit(move || {
-                // Per-shard scratch, reused across every job this shard pulls.
-                let mut scratch: Vec<i64> = Vec::new();
+                // Per-shard scratch, reused across every job this shard
+                // pulls, whatever its dtype.
+                let mut scratch = SortScratch::new();
                 loop {
                     let item = queue.lock().unwrap().pop_front();
-                    let Some((idx, id, job)) = item else { break };
-                    let Resolution { params, cache_hit, observe } =
-                        resolve_job(&cache, &model, &metrics, tuner.as_deref(), &job);
-                    if job.params.is_none() {
-                        if cache_hit {
-                            hits.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            misses.fetch_add(1, Ordering::Relaxed);
+                    let Some((idx, id, req)) = item else { break };
+                    let has_override = req.params.is_some();
+                    // Per-job panic isolation: a poisonous job resolves to
+                    // an error; the shard keeps draining the queue.
+                    let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let Resolution { params, cache_hit, observe } =
+                            resolve_request(&cache, &model, &metrics, tuner.as_deref(), &req);
+                        if !has_override {
+                            if cache_hit {
+                                hits.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                misses.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
-                    }
-                    let outcome = execute_job(&sorter, &metrics, id, job, params, &mut scratch);
-                    metrics.observe_sample("batch.job.latency", outcome.secs);
-                    if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
-                        tuner.observe(Observation {
-                            label,
-                            n: outcome.data.len(),
-                            secs: outcome.secs,
-                            sample: Some(sample),
-                        });
-                    }
-                    let _ = tx.send((idx, outcome));
+                        let outcome =
+                            execute_request(&sorter, &metrics, id, req, params, &mut scratch);
+                        metrics.observe_sample("batch.job.latency", outcome.secs);
+                        if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
+                            tuner.observe(Observation {
+                                label,
+                                n: outcome.len(),
+                                secs: outcome.secs,
+                                sample: Some(sample),
+                            });
+                        }
+                        outcome
+                    }));
+                    let result: JobResult = match ran {
+                        Ok(outcome) => Ok(outcome),
+                        Err(_) => {
+                            metrics.incr("jobs.panicked");
+                            Err(JobError::WorkerLost)
+                        }
+                    };
+                    let _ = tx.send((idx, result));
                 }
             });
-            assert!(submitted, "service is shutting down");
+            if !submitted {
+                // Pool shutting down: the dropped closure sent nothing; the
+                // remaining queue items resolve as WorkerLost in wait().
+                break;
+            }
         }
-        BatchHandle {
+        BatchTicket {
             total,
             started,
             rx,
-            metrics: Arc::clone(&self.metrics),
+            completion: BatchCompletion { metrics: Arc::clone(&self.metrics), published: false },
             cache_hits,
             cache_misses,
         }
     }
 
-    /// Block until every submitted job has completed.
+    /// Block until every submitted job has completed. Parks on the worker
+    /// pool's idle condvar — an idle drain costs zero CPU (no polling loop).
     pub fn drain(&self) {
         self.pool.wait_idle();
+    }
+
+    /// Bounded [`drain`](Self::drain): parks for at most `timeout`,
+    /// returning `true` if the service went idle in time.
+    pub fn drain_timeout(&self, timeout: Duration) -> bool {
+        self.pool.wait_idle_timeout(timeout)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated pre-dtype shim (one release of compile compatibility).
+// ---------------------------------------------------------------------------
+
+/// Pre-dtype i64 job description.
+#[deprecated(since = "0.2.0", note = "use `SortRequest::new` (typed, any SortKey dtype)")]
+pub struct SortJob {
+    pub data: Vec<i64>,
+    /// Caller-declared workload tag — a hint only (see [`SortRequest::dist`]).
+    pub dist: String,
+    /// Explicit parameter override (skips cache + model).
+    pub params: Option<SortParams>,
+    /// Validate the output before returning.
+    pub validate: bool,
+}
+
+#[allow(deprecated)]
+impl SortJob {
+    pub fn new(data: Vec<i64>) -> Self {
+        SortJob { data, dist: "uniform".into(), params: None, validate: true }
+    }
+
+    fn into_request(self) -> SortRequest {
+        let SortJob { data, dist, params, validate } = self;
+        SortRequest { payload: SortPayload::I64(data), dist, params, validate }
+    }
+}
+
+/// Pre-dtype completed-job shape.
+#[deprecated(since = "0.2.0", note = "use `SortOutput` (dtype-erased payload)")]
+#[derive(Debug)]
+pub struct SortOutcome {
+    pub id: u64,
+    pub data: Vec<i64>,
+    pub params: SortParams,
+    pub secs: f64,
+    pub valid: bool,
+}
+
+/// Pre-dtype blocking job handle.
+#[deprecated(since = "0.2.0", note = "use `Ticket` (non-blocking: try_result/wait_timeout/cancel)")]
+pub struct JobHandle {
+    pub id: u64,
+    ticket: Ticket,
+}
+
+#[allow(deprecated)]
+impl JobHandle {
+    /// Block until the job completes. Panics if the worker was lost — the
+    /// historical behaviour; [`Ticket::wait`] returns an error instead.
+    pub fn wait(self) -> SortOutcome {
+        match self.ticket.wait() {
+            Ok(out) => SortOutcome {
+                id: out.id,
+                params: out.params,
+                secs: out.secs,
+                valid: out.valid,
+                data: out.payload.into_vec::<i64>().expect("legacy submissions are i64"),
+            },
+            Err(e) => panic!("service dropped job reply: {e}"),
+        }
+    }
+}
+
+/// Pre-dtype batch handle.
+#[deprecated(since = "0.2.0", note = "use `BatchTicket` (wait() or stream())")]
+pub struct BatchHandle {
+    inner: BatchTicket,
+}
+
+#[allow(deprecated)]
+impl BatchHandle {
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Block until every job in the batch completes.
+    pub fn wait(self) -> BatchReport {
+        self.inner.wait()
+    }
+}
+
+#[allow(deprecated)]
+impl SortService {
+    /// Submit an i64 job (pre-dtype API).
+    #[deprecated(since = "0.2.0", note = "use `submit_request` with a `SortRequest`")]
+    pub fn submit(&self, job: SortJob) -> JobHandle {
+        let ticket = self.submit_request(job.into_request());
+        JobHandle { id: ticket.id(), ticket }
+    }
+
+    /// Submit a batch of i64 jobs (pre-dtype API).
+    #[deprecated(since = "0.2.0", note = "use `submit_batch_requests` with `SortRequest`s")]
+    pub fn submit_batch(&self, jobs: Vec<SortJob>) -> BatchHandle {
+        BatchHandle {
+            inner: self
+                .submit_batch_requests(jobs.into_iter().map(SortJob::into_request).collect()),
+        }
     }
 }
 
@@ -499,33 +836,39 @@ mod tests {
         })
     }
 
+    fn sorted_i64(out: &SortOutput) -> Vec<i64> {
+        out.data::<i64>().expect("i64 payload").to_vec()
+    }
+
     #[test]
     fn submit_and_wait_sorted() {
         let svc = service();
         let data = generate_i64(150_000, Distribution::Uniform, 1, 2);
         let mut expect = data.clone();
         expect.sort_unstable();
-        let out = svc.submit(SortJob::new(data)).wait();
+        let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
         assert!(out.valid);
-        assert_eq!(out.data, expect);
+        assert_eq!(out.dtype(), Dtype::I64);
+        assert_eq!(sorted_i64(&out), expect);
         assert!(out.secs > 0.0);
         assert_eq!(svc.metrics().counter("jobs.completed"), 1);
+        assert_eq!(svc.metrics().counter("jobs.dtype.i64"), 1);
     }
 
     #[test]
     fn many_concurrent_jobs() {
         let svc = service();
-        let handles: Vec<JobHandle> = (0..10u64)
+        let tickets: Vec<Ticket> = (0..10u64)
             .map(|seed| {
                 let data = generate_i64(30_000, Distribution::Uniform, seed, 2);
-                svc.submit(SortJob::new(data))
+                svc.submit_request(SortRequest::new(data))
             })
             .collect();
         let mut ids = std::collections::HashSet::new();
-        for h in handles {
-            let out = h.wait();
+        for t in tickets {
+            let out = t.wait().expect("job ok");
             assert!(out.valid);
-            assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+            assert!(sorted_i64(&out).windows(2).all(|w| w[0] <= w[1]));
             ids.insert(out.id);
         }
         assert_eq!(ids.len(), 10, "unique job ids");
@@ -537,7 +880,10 @@ mod tests {
     fn params_resolution_order() {
         let svc = service();
         // 1. symbolic (cold cache).
-        let out = svc.submit(SortJob::new(generate_i64(200_000, Distribution::Uniform, 3, 2))).wait();
+        let out = svc
+            .submit_request(SortRequest::new(generate_i64(200_000, Distribution::Uniform, 3, 2)))
+            .wait()
+            .unwrap();
         assert!(out.valid);
         assert_eq!(svc.metrics().counter("params.symbolic"), 1);
         assert_eq!(svc.metrics().counter("params.cache_miss"), 1);
@@ -545,14 +891,14 @@ mod tests {
         let data = generate_i64(200_000, Distribution::Uniform, 4, 2);
         let label = SortService::fingerprint_label(&data);
         svc.cache().put(data.len(), &label, SortParams::paper_1e7());
-        let out = svc.submit(SortJob::new(data)).wait();
+        let out = svc.submit_request(SortRequest::new(data)).wait().unwrap();
         assert_eq!(out.params, SortParams::paper_1e7());
         assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
         // 3. explicit override wins.
-        let mut job = SortJob::new(generate_i64(200_000, Distribution::Uniform, 5, 2));
         let custom = SortParams { tile: 777, ..SortParams::paper_1e7() };
-        job.params = Some(custom);
-        let out = svc.submit(job).wait();
+        let req = SortRequest::new(generate_i64(200_000, Distribution::Uniform, 5, 2))
+            .with_params(custom);
+        let out = svc.submit_request(req).wait().unwrap();
         assert_eq!(out.params.tile, 777);
         assert_eq!(svc.metrics().counter("params.override"), 1);
     }
@@ -576,72 +922,152 @@ mod tests {
         svc.cache().put(uniform.len(), &uniform_label, poison);
 
         // A sorted-data job *claiming* to be uniform does not see them…
-        let mut mislabeled = SortJob::new(sorted);
-        mislabeled.dist = "uniform".to_string();
-        let out = svc.submit(mislabeled).wait();
+        let mislabeled = SortRequest::new(sorted).with_dist("uniform");
+        let out = svc.submit_request(mislabeled).wait().unwrap();
         assert!(out.valid);
         assert_ne!(out.params, poison, "mislabeled job must not resolve through the uniform class");
         assert_eq!(svc.metrics().counter("params.cache_hit"), 0);
 
         // …while genuinely uniform data still hits its class.
-        let out = svc.submit(SortJob::new(uniform)).wait();
+        let out = svc.submit_request(SortRequest::new(uniform)).wait().unwrap();
         assert_eq!(out.params, poison);
         assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+    }
+
+    #[test]
+    fn dtype_classes_do_not_collide_in_the_cache() {
+        // The same shape as i64 and as f64 resolves through different
+        // dtype-tagged classes: poisoning one leaves the other cold.
+        let svc = service();
+        let ints = generate_i64(150_000, Distribution::Uniform, 8, 2);
+        let floats: Vec<f64> = ints.iter().map(|&x| x as f64).collect();
+        let int_label = SortService::fingerprint_label(&ints);
+        let float_label = SortService::fingerprint_label_for(&floats);
+        assert_ne!(int_label, float_label);
+        assert!(float_label.ends_with(":f64"), "{float_label}");
+
+        let poison = SortParams { tile: 64, ..SortParams::paper_1e7() };
+        svc.cache().put(ints.len(), &int_label, poison);
+        let out = svc.submit_request(SortRequest::new(floats)).wait().unwrap();
+        assert!(out.valid);
+        assert_ne!(out.params, poison, "f64 must not resolve through the i64 class");
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 0);
+        let out = svc.submit_request(SortRequest::new(ints)).wait().unwrap();
+        assert_eq!(out.params, poison);
     }
 
     #[test]
     fn drain_waits_for_all() {
         let svc = service();
         for seed in 0..5u64 {
-            // Fire-and-forget: drop the handles.
-            let _ = svc.submit(SortJob::new(generate_i64(20_000, Distribution::Uniform, seed, 2)));
+            // Fire-and-forget: drop the tickets.
+            let data = generate_i64(20_000, Distribution::Uniform, seed, 2);
+            let _ = svc.submit_request(SortRequest::new(data));
         }
         svc.drain();
         assert_eq!(svc.metrics().counter("jobs.completed"), 5);
+        assert!(svc.drain_timeout(Duration::from_millis(50)), "idle drain returns immediately");
     }
 
     #[test]
     fn skip_validation_path() {
         let svc = service();
-        let mut job = SortJob::new(generate_i64(50_000, Distribution::Uniform, 9, 2));
-        job.validate = false;
-        let out = svc.submit(job).wait();
+        let data = generate_i64(50_000, Distribution::Uniform, 9, 2);
+        let req = SortRequest::new(data).without_validation();
+        let out = svc.submit_request(req).wait().unwrap();
         assert!(out.valid, "unvalidated jobs report valid=true");
-        assert!(out.data.windows(2).all(|w| w[0] <= w[1]));
+        assert!(sorted_i64(&out).windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn ticket_try_result_and_wait_timeout() {
+        let svc = service();
+        let data = generate_i64(80_000, Distribution::Uniform, 10, 2);
+        // Poll until done, then extract exactly once.
+        let mut ticket = svc.submit_request(SortRequest::new(data));
+        let out = loop {
+            match ticket.try_result() {
+                Ok(result) => break result.expect("job ok"),
+                Err(pending) => {
+                    ticket = match pending.wait_timeout(Duration::from_millis(20)) {
+                        Ok(result) => break result.expect("job ok"),
+                        Err(t) => t,
+                    };
+                }
+            }
+        };
+        assert!(out.valid);
+    }
+
+    #[test]
+    fn cancel_queued_job_resolves_cancelled() {
+        // One worker, deep queue: occupy the worker with slow jobs so a
+        // later job is still queued when we cancel it.
+        let svc = SortService::new(ServiceConfig {
+            workers: 1,
+            sort_threads: 1,
+            queue_capacity: 16,
+            autotune: None,
+        });
+        let blockers: Vec<Ticket> = (0..3)
+            .map(|s| {
+                let data = generate_i64(400_000, Distribution::Uniform, s, 1);
+                svc.submit_request(SortRequest::new(data))
+            })
+            .collect();
+        let victim_data = generate_i64(400_000, Distribution::Uniform, 99, 1);
+        let victim = svc.submit_request(SortRequest::new(victim_data));
+        let requested = victim.cancel();
+        let result = victim.wait();
+        if requested {
+            // `cancel() == true` is a hard guarantee: the job was still
+            // queued, so it must resolve cancelled without sorting.
+            assert_eq!(result.unwrap_err(), JobError::Cancelled);
+        } else {
+            assert!(result.is_ok(), "a job that already started completes normally");
+        }
+        for b in blockers {
+            assert!(b.wait().is_ok());
+        }
     }
 
     #[test]
     fn batch_sorts_everything_in_order() {
         let svc = service();
-        let jobs: Vec<SortJob> = (0..24u64)
-            .map(|seed| SortJob::new(generate_i64(5_000 + (seed as usize * 379) % 20_000, Distribution::Uniform, seed, 2)))
+        let requests: Vec<SortRequest> = (0..24u64)
+            .map(|seed| {
+                let n = 5_000 + (seed as usize * 379) % 20_000;
+                SortRequest::new(generate_i64(n, Distribution::Uniform, seed, 2))
+            })
             .collect();
-        let expected: Vec<Vec<i64>> = jobs
+        let expected: Vec<Vec<i64>> = requests
             .iter()
-            .map(|j| {
-                let mut v = j.data.clone();
+            .map(|r| {
+                let mut v = r.payload().as_slice::<i64>().unwrap().to_vec();
                 v.sort_unstable();
                 v
             })
             .collect();
-        let report = svc.submit_batch(jobs).wait();
+        let report = svc.submit_batch_requests(requests).wait();
         assert_eq!(report.outcomes.len(), 24);
         assert_eq!(report.stats.jobs, 24);
         assert_eq!(report.stats.invalid, 0);
-        for (out, want) in report.outcomes.iter().zip(&expected) {
+        assert_eq!(report.stats.failed, 0);
+        for (i, want) in expected.iter().enumerate() {
+            let out = report.output(i);
             assert!(out.valid);
-            assert_eq!(&out.data, want, "batch outcomes must keep submission order");
+            assert_eq!(out.data::<i64>().unwrap(), &want[..], "submission order");
         }
         // Unique ids across the batch.
-        let ids: std::collections::HashSet<u64> = report.outcomes.iter().map(|o| o.id).collect();
+        let ids: std::collections::HashSet<u64> = report.outputs().map(|o| o.id).collect();
         assert_eq!(ids.len(), 24);
         // Stats are consistent.
         assert!(report.stats.p50_secs <= report.stats.p99_secs);
         assert!(report.stats.jobs_per_sec > 0.0);
-        assert_eq!(
-            report.stats.elements,
-            expected.iter().map(|v| v.len() as u64).sum::<u64>()
-        );
+        assert_eq!(report.stats.elements, expected.iter().map(|v| v.len() as u64).sum::<u64>());
+        assert_eq!(report.stats.per_dtype.len(), 1);
+        assert_eq!(report.stats.per_dtype[0].dtype, Dtype::I64);
+        assert_eq!(report.stats.per_dtype[0].jobs, 24);
         // Metrics published.
         assert_eq!(svc.metrics().counter("batch.jobs.submitted"), 24);
         assert_eq!(svc.metrics().counter("batch.completed"), 1);
@@ -654,21 +1080,27 @@ mod tests {
     fn batch_edge_cases_empty_and_tiny() {
         let svc = service();
         // Empty batch.
-        let report = svc.submit_batch(Vec::new()).wait();
+        let report = svc.submit_batch_requests(Vec::new()).wait();
         assert!(report.outcomes.is_empty());
         assert_eq!(report.stats.jobs_per_sec, 0.0);
         assert_eq!(report.stats.p99_secs, 0.0);
-        // Batch containing empty-slice and single-element jobs.
-        let jobs = vec![
-            SortJob::new(vec![]),
-            SortJob::new(vec![7]),
-            SortJob::new(vec![3, -1]),
+        assert!(report.stats.per_dtype.is_empty());
+        // Batch containing empty-slice and single-element jobs, mixed dtypes.
+        let requests = vec![
+            SortRequest::new(Vec::<i64>::new()),
+            SortRequest::new(vec![7i64]),
+            SortRequest::new(vec![3i64, -1]),
+            SortRequest::new(vec![2.5f64, -0.5]),
+            SortRequest::new(vec![9u64, 4]),
         ];
-        let report = svc.submit_batch(jobs).wait();
-        assert_eq!(report.outcomes[0].data, Vec::<i64>::new());
-        assert_eq!(report.outcomes[1].data, vec![7]);
-        assert_eq!(report.outcomes[2].data, vec![-1, 3]);
-        assert!(report.outcomes.iter().all(|o| o.valid));
+        let report = svc.submit_batch_requests(requests).wait();
+        assert_eq!(report.output(0).data::<i64>().unwrap(), &[] as &[i64]);
+        assert_eq!(report.output(1).data::<i64>().unwrap(), &[7]);
+        assert_eq!(report.output(2).data::<i64>().unwrap(), &[-1, 3]);
+        assert_eq!(report.output(3).data::<f64>().unwrap(), &[-0.5, 2.5]);
+        assert_eq!(report.output(4).data::<u64>().unwrap(), &[4, 9]);
+        assert!(report.outputs().all(|o| o.valid));
+        assert_eq!(report.stats.per_dtype.len(), 3);
     }
 
     #[test]
@@ -680,17 +1112,154 @@ mod tests {
             &SortService::fingerprint_label(&cached_data),
             SortParams::paper_1e8(),
         );
-        let mut override_job = SortJob::new(generate_i64(120_000, Distribution::Uniform, 1, 2));
-        override_job.params = Some(SortParams { tile: 333, ..SortParams::paper_1e7() });
-        let cached_job = SortJob::new(cached_data);
-        let report = svc.submit_batch(vec![override_job, cached_job]).wait();
-        assert_eq!(report.outcomes[0].params.tile, 333);
-        assert_eq!(report.outcomes[1].params, SortParams::paper_1e8());
+        let override_req = SortRequest::new(generate_i64(120_000, Distribution::Uniform, 1, 2))
+            .with_params(SortParams { tile: 333, ..SortParams::paper_1e7() });
+        let cached_req = SortRequest::new(cached_data);
+        let report = svc.submit_batch_requests(vec![override_req, cached_req]).wait();
+        assert_eq!(report.output(0).params.tile, 333);
+        assert_eq!(report.output(1).params, SortParams::paper_1e8());
         assert_eq!(svc.metrics().counter("params.override"), 1);
         assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
         // The batch report carries its own hit/miss accounting (overrides
         // count as neither).
         assert_eq!(report.stats.cache_hits, 1);
         assert_eq!(report.stats.cache_misses, 0);
+    }
+
+    #[test]
+    fn stream_yields_in_submission_order_without_barrier() {
+        // One worker: jobs execute in submission order, so the first (tiny)
+        // job finishes while the remaining (large) jobs are still queued —
+        // the stream must hand it over before the batch completes.
+        let svc = SortService::new(ServiceConfig {
+            workers: 1,
+            sort_threads: 2,
+            queue_capacity: 16,
+            autotune: None,
+        });
+        let tiny = generate_i64(1_000, Distribution::Uniform, 0, 2);
+        let mut requests = vec![SortRequest::new(tiny)];
+        for seed in 1..6u64 {
+            let large = generate_i64(400_000, Distribution::Uniform, seed, 2);
+            requests.push(SortRequest::new(large));
+        }
+        let total = requests.len() as u64;
+        let mut stream = svc.submit_batch_requests(requests).stream();
+        assert_eq!(stream.remaining(), total as usize);
+        let first = stream.next().expect("stream has items").expect("job ok");
+        assert_eq!(first.len(), 1_000, "first yield is the first-submitted job");
+        let completed_at_first_yield = svc.metrics().counter("jobs.completed");
+        assert!(
+            completed_at_first_yield < total,
+            "first result must arrive before the whole batch completes \
+             (completed {completed_at_first_yield}/{total})"
+        );
+        let rest: Vec<JobResult> = stream.collect();
+        assert_eq!(rest.len(), total as usize - 1);
+        for (i, r) in rest.iter().enumerate() {
+            let out = r.as_ref().expect("job ok");
+            assert_eq!(out.len(), 400_000, "order: item {i}");
+            assert!(out.valid);
+        }
+        assert_eq!(svc.metrics().counter("batch.completed"), 1);
+    }
+
+    #[test]
+    fn result_stream_survives_lost_senders() {
+        // Synthesize a batch whose workers vanished mid-way: the stream must
+        // resolve the missing tail as WorkerLost instead of hanging.
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        let out = |id: u64| SortOutput {
+            id,
+            payload: SortPayload::I64(vec![1]),
+            params: SortParams::default(),
+            secs: 0.0,
+            valid: true,
+        };
+        tx.send((1usize, Ok(out(11)))).unwrap(); // out of order
+        tx.send((0usize, Ok(out(10)))).unwrap();
+        drop(tx); // jobs 2 and 3 never report
+        let stream = ResultStream {
+            rx,
+            buffered: HashMap::new(),
+            next_idx: 0,
+            total: 4,
+            completion: BatchCompletion { metrics, published: false },
+        };
+        let got: Vec<JobResult> = stream.collect();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].as_ref().unwrap().id, 10);
+        assert_eq!(got[1].as_ref().unwrap().id, 11);
+        assert_eq!(*got[2].as_ref().unwrap_err(), JobError::WorkerLost);
+        assert_eq!(*got[3].as_ref().unwrap_err(), JobError::WorkerLost);
+    }
+
+    #[test]
+    fn dropped_batch_ticket_still_closes_the_counter_pair() {
+        let svc = service();
+        let requests: Vec<SortRequest> = (0..3u64)
+            .map(|s| SortRequest::new(generate_i64(10_000, Distribution::Uniform, s, 2)))
+            .collect();
+        let ticket = svc.submit_batch_requests(requests);
+        drop(ticket); // fire-and-forget
+        svc.drain();
+        assert_eq!(svc.metrics().counter("jobs.completed"), 3);
+        assert_eq!(svc.metrics().counter("batch.submitted"), 1);
+        assert_eq!(svc.metrics().counter("batch.completed"), 1);
+    }
+
+    #[test]
+    fn batch_wait_survives_lost_senders() {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::new());
+        tx.send((
+            0usize,
+            Ok(SortOutput {
+                id: 1,
+                payload: SortPayload::F64(vec![1.0]),
+                params: SortParams::default(),
+                secs: 0.001,
+                valid: true,
+            }),
+        ))
+        .unwrap();
+        drop(tx);
+        let ticket = BatchTicket {
+            total: 3,
+            started: Instant::now(),
+            rx,
+            completion: BatchCompletion { metrics, published: false },
+            cache_hits: Arc::new(AtomicU64::new(0)),
+            cache_misses: Arc::new(AtomicU64::new(0)),
+        };
+        let report = ticket.wait();
+        assert_eq!(report.stats.jobs, 3);
+        assert_eq!(report.stats.failed, 2);
+        assert_eq!(report.stats.per_dtype.len(), 1);
+        assert_eq!(report.stats.per_dtype[0].dtype, Dtype::F64);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shim_still_compiles_and_sorts() {
+        // One release of compile compatibility for pre-dtype callers.
+        let svc = service();
+        let data = generate_i64(60_000, Distribution::Uniform, 21, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let mut job = SortJob::new(data);
+        job.dist = "uniform".to_string();
+        let out = svc.submit(job).wait();
+        assert!(out.valid);
+        assert_eq!(out.data, expect);
+        let jobs: Vec<SortJob> = (0..4u64)
+            .map(|s| SortJob::new(generate_i64(10_000, Distribution::Uniform, s, 2)))
+            .collect();
+        let handle = svc.submit_batch(jobs);
+        assert_eq!(handle.len(), 4);
+        let report = handle.wait();
+        assert_eq!(report.stats.jobs, 4);
+        assert_eq!(report.stats.invalid, 0);
     }
 }

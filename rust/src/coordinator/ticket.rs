@@ -1,0 +1,440 @@
+//! Non-blocking job tickets: the async half of the typed service API.
+//!
+//! A [`Ticket`] is the service's IOU for one submitted
+//! [`SortRequest`](crate::coordinator::SortRequest): the caller can poll it
+//! ([`Ticket::try_result`]), park on it with a bound
+//! ([`Ticket::wait_timeout`]), block ([`Ticket::wait`]), or abandon the job
+//! ([`Ticket::cancel`]). All waiting is condvar-parked — no polling loops,
+//! no spun cores.
+//!
+//! Delivery is a single mutex+condvar slot shared between the ticket and the
+//! executing worker. The worker side holds a [`CompletionGuard`]: if the job
+//! closure is dropped without completing — worker panic mid-sort, or a pool
+//! that shut down before the job ran — the guard's `Drop` resolves the slot
+//! with [`JobError::WorkerLost`], so a `wait` can never hang on a dead
+//! worker and never panics on a disconnected channel (the failure mode of
+//! the old `JobHandle`).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::params::SortParams;
+use crate::sort::{Dtype, SortKey, SortPayload};
+
+/// A completed job: the sorted payload plus execution metadata.
+#[derive(Debug)]
+pub struct SortOutput {
+    pub id: u64,
+    /// The sorted data, still carrying its dtype.
+    pub payload: SortPayload,
+    /// Parameters the job resolved to (override → cache → symbolic model).
+    pub params: SortParams,
+    /// Sort wall time in seconds (excludes queueing).
+    pub secs: f64,
+    /// Output passed validation (always `true` when validation was skipped).
+    pub valid: bool,
+}
+
+impl SortOutput {
+    pub fn dtype(&self) -> Dtype {
+        self.payload.dtype()
+    }
+
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// Borrow the sorted data as a typed slice (`None` on dtype mismatch).
+    pub fn data<K: SortKey>(&self) -> Option<&[K]> {
+        self.payload.as_slice::<K>()
+    }
+
+    /// Take the sorted data as a typed vector (`None` on dtype mismatch —
+    /// the payload is dropped in that case; use [`SortOutput::payload`]
+    /// directly to keep it).
+    pub fn into_data<K: SortKey>(self) -> Option<Vec<K>> {
+        self.payload.into_vec::<K>().ok()
+    }
+}
+
+/// Why a job produced no [`SortOutput`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobError {
+    /// [`Ticket::cancel`] won the race: the job was dequeued already
+    /// cancelled and was never sorted (its payload is dropped).
+    Cancelled,
+    /// The executing worker died (panicking job) or the service shut down
+    /// before the job could run.
+    WorkerLost,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Cancelled => f.write_str("job cancelled before execution"),
+            JobError::WorkerLost => f.write_str("worker lost before the job completed"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// What a finished job resolves to.
+pub type JobResult = Result<SortOutput, JobError>;
+
+enum SlotState {
+    /// Queued, not yet picked up by a worker.
+    Pending,
+    /// `cancel` was requested while still queued; the worker resolves to
+    /// `Err(Cancelled)` at dequeue without sorting.
+    CancelRequested,
+    /// A worker has started executing — too late to cancel.
+    Running,
+    Done(JobResult),
+    /// Result extracted by the ticket (terminal).
+    Taken,
+}
+
+/// The shared single-job delivery slot.
+pub(crate) struct JobSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl JobSlot {
+    /// A fresh shared slot in the `Pending` state.
+    pub(crate) fn pending() -> Arc<JobSlot> {
+        Arc::new(JobSlot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() })
+    }
+
+    /// Resolve the job. First resolution wins; later calls (e.g. the guard's
+    /// `Drop` after an explicit completion raced with nothing — defensive)
+    /// are ignored.
+    pub(crate) fn complete(&self, result: JobResult) {
+        let mut state = self.state.lock().unwrap();
+        if matches!(
+            *state,
+            SlotState::Pending | SlotState::CancelRequested | SlotState::Running
+        ) {
+            *state = SlotState::Done(result);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Worker-side transition at dequeue time: marks the job `Running` so a
+    /// later `cancel` is refused, and reports whether a cancel had already
+    /// landed (in which case the worker must not sort).
+    pub(crate) fn start(&self) -> bool {
+        let mut state = self.state.lock().unwrap();
+        match *state {
+            SlotState::CancelRequested => true,
+            SlotState::Pending => {
+                *state = SlotState::Running;
+                false
+            }
+            _ => false,
+        }
+    }
+
+    fn request_cancel(&self) -> bool {
+        let mut state = self.state.lock().unwrap();
+        match *state {
+            SlotState::Pending => {
+                *state = SlotState::CancelRequested;
+                true
+            }
+            SlotState::CancelRequested => true,
+            _ => false,
+        }
+    }
+
+    fn is_finished(&self) -> bool {
+        matches!(*self.state.lock().unwrap(), SlotState::Done(_) | SlotState::Taken)
+    }
+
+    fn try_take(&self) -> Option<JobResult> {
+        let mut state = self.state.lock().unwrap();
+        if matches!(*state, SlotState::Done(_)) {
+            match std::mem::replace(&mut *state, SlotState::Taken) {
+                SlotState::Done(r) => Some(r),
+                _ => unreachable!("checked Done above"),
+            }
+        } else {
+            None
+        }
+    }
+
+    fn wait_take(&self) -> JobResult {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if matches!(*state, SlotState::Done(_)) {
+                match std::mem::replace(&mut *state, SlotState::Taken) {
+                    SlotState::Done(r) => return r,
+                    _ => unreachable!("checked Done above"),
+                }
+            }
+            if matches!(*state, SlotState::Taken) {
+                // Unreachable through the public API (taking consumes the
+                // ticket) — resolve rather than hang if it ever happens.
+                return Err(JobError::WorkerLost);
+            }
+            state = self.cv.wait(state).unwrap();
+        }
+    }
+
+    fn wait_timeout_take(&self, timeout: Duration) -> Option<JobResult> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if matches!(*state, SlotState::Done(_)) {
+                match std::mem::replace(&mut *state, SlotState::Taken) {
+                    SlotState::Done(r) => return Some(r),
+                    _ => unreachable!("checked Done above"),
+                }
+            }
+            if matches!(*state, SlotState::Taken) {
+                return Some(Err(JobError::WorkerLost));
+            }
+            let remaining = deadline.checked_duration_since(std::time::Instant::now())?;
+            let (next, timed_out) = self.cv.wait_timeout(state, remaining).unwrap();
+            state = next;
+            if timed_out.timed_out() && !matches!(*state, SlotState::Done(_)) {
+                return None;
+            }
+        }
+    }
+}
+
+/// Worker-side completion obligation: resolves the slot with
+/// [`JobError::WorkerLost`] if dropped before an explicit
+/// [`complete`](CompletionGuard::complete) — including a drop *during panic
+/// unwind* or a drop of a never-run closure on a shut-down pool.
+pub(crate) struct CompletionGuard {
+    slot: Arc<JobSlot>,
+    done: bool,
+}
+
+impl CompletionGuard {
+    pub(crate) fn new(slot: Arc<JobSlot>) -> CompletionGuard {
+        CompletionGuard { slot, done: false }
+    }
+
+    /// See [`JobSlot::start`]: call at dequeue; `true` means the job was
+    /// cancelled and must not run (the guard should complete `Cancelled`).
+    pub(crate) fn start(&self) -> bool {
+        self.slot.start()
+    }
+
+    pub(crate) fn complete(mut self, result: JobResult) {
+        self.slot.complete(result);
+        self.done = true;
+    }
+}
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            self.slot.complete(Err(JobError::WorkerLost));
+        }
+    }
+}
+
+/// Handle to one in-flight job. Obtained from
+/// [`SortService::submit_request`](crate::coordinator::SortService::submit_request).
+///
+/// A result can be extracted exactly once, enforced by move semantics: the
+/// non-blocking accessors hand the ticket back when the job is still
+/// pending.
+///
+/// ```
+/// use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
+///
+/// let svc = SortService::new(ServiceConfig::default());
+/// let mut ticket = svc.submit_request(SortRequest::new(vec![3.5f64, -1.0, 2.25]));
+/// // Poll without blocking…
+/// let output = loop {
+///     match ticket.try_result() {
+///         Ok(result) => break result.expect("job failed"),
+///         Err(pending) => ticket = pending, // not done yet — keep the ticket
+///     }
+/// };
+/// assert_eq!(output.data::<f64>().unwrap(), &[-1.0, 2.25, 3.5]);
+/// ```
+#[must_use = "a Ticket is the only way to retrieve the job's result — drop it only to fire-and-forget"]
+pub struct Ticket {
+    id: u64,
+    slot: Arc<JobSlot>,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: u64, slot: Arc<JobSlot>) -> Ticket {
+        Ticket { id, slot }
+    }
+
+    /// The job id (matches [`SortOutput::id`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Has the job resolved (completed, failed, or cancelled)?
+    pub fn is_finished(&self) -> bool {
+        self.slot.is_finished()
+    }
+
+    /// Non-blocking poll: the result if the job has resolved, the ticket
+    /// itself otherwise.
+    pub fn try_result(self) -> Result<JobResult, Ticket> {
+        match self.slot.try_take() {
+            Some(r) => Ok(r),
+            None => Err(self),
+        }
+    }
+
+    /// Park (condvar, zero CPU) until the job resolves. Never hangs on a
+    /// dead worker: a job lost to a panic or shutdown resolves to
+    /// [`JobError::WorkerLost`].
+    pub fn wait(self) -> JobResult {
+        self.slot.wait_take()
+    }
+
+    /// Park for at most `timeout`. `Ok` with the result if the job resolved
+    /// in time, `Err` with the ticket on timeout.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<JobResult, Ticket> {
+        match self.slot.wait_timeout_take(timeout) {
+            Some(r) => Ok(r),
+            None => Err(self),
+        }
+    }
+
+    /// Request cancellation. Returns `true` only when the request landed
+    /// while the job was still **queued** (no worker had started it): the
+    /// job is then guaranteed to resolve to [`JobError::Cancelled`] without
+    /// sorting. Returns `false` when a worker already started — or finished
+    /// — the job; its result stays retrievable as normal.
+    pub fn cancel(&self) -> bool {
+        self.slot.request_cancel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn output(id: u64) -> SortOutput {
+        SortOutput {
+            id,
+            payload: SortPayload::I64(vec![1, 2, 3]),
+            params: SortParams::default(),
+            secs: 0.001,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn try_result_polls_then_takes() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(7, Arc::clone(&slot));
+        assert!(!ticket.is_finished());
+        let ticket = ticket.try_result().expect_err("pending: ticket comes back");
+        slot.complete(Ok(output(7)));
+        assert!(ticket.is_finished());
+        let out = ticket.try_result().expect("done").expect("ok");
+        assert_eq!(out.id, 7);
+        assert_eq!(out.data::<i64>().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn wait_parks_until_completion() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(1, Arc::clone(&slot));
+        let completer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            slot.complete(Ok(output(1)));
+        });
+        let out = ticket.wait().expect("ok");
+        assert_eq!(out.id, 1);
+        completer.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_returns_ticket_then_result() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(2, Arc::clone(&slot));
+        let ticket = ticket
+            .wait_timeout(Duration::from_millis(20))
+            .expect_err("pending job must time out");
+        slot.complete(Err(JobError::WorkerLost));
+        let res = ticket.wait_timeout(Duration::from_secs(5)).expect("resolved");
+        assert_eq!(res.unwrap_err(), JobError::WorkerLost);
+    }
+
+    #[test]
+    fn guard_drop_resolves_worker_lost() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(3, Arc::clone(&slot));
+        drop(CompletionGuard::new(slot));
+        assert_eq!(ticket.wait().unwrap_err(), JobError::WorkerLost);
+    }
+
+    #[test]
+    fn guard_drop_during_panic_unwind_resolves() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(4, Arc::clone(&slot));
+        let guard = CompletionGuard::new(slot);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = guard;
+            panic!("worker died mid-job");
+        }));
+        assert!(panicked.is_err());
+        assert_eq!(ticket.wait().unwrap_err(), JobError::WorkerLost);
+    }
+
+    #[test]
+    fn cancel_before_execution_wins() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(5, Arc::clone(&slot));
+        assert!(ticket.cancel());
+        assert!(ticket.cancel(), "idempotent while pending");
+        // Worker dequeues, sees the request, resolves without sorting.
+        let guard = CompletionGuard::new(Arc::clone(&slot));
+        assert!(guard.start(), "start() reports the pending cancel");
+        guard.complete(Err(JobError::Cancelled));
+        assert_eq!(ticket.wait().unwrap_err(), JobError::Cancelled);
+    }
+
+    #[test]
+    fn cancel_after_start_is_refused() {
+        // Once a worker marked the job Running, cancel() must return false
+        // and the job completes normally — `cancel() == true` is a hard
+        // guarantee of Err(Cancelled).
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(9, Arc::clone(&slot));
+        let guard = CompletionGuard::new(Arc::clone(&slot));
+        assert!(!guard.start(), "no cancel pending: job starts");
+        assert!(!ticket.cancel(), "running jobs cannot be cancelled");
+        guard.complete(Ok(output(9)));
+        assert!(ticket.wait().is_ok());
+    }
+
+    #[test]
+    fn cancel_after_completion_is_refused() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(6, Arc::clone(&slot));
+        slot.complete(Ok(output(6)));
+        assert!(!ticket.cancel(), "completed jobs cannot be cancelled");
+        assert!(ticket.wait().is_ok(), "result stays retrievable");
+    }
+
+    #[test]
+    fn explicit_complete_beats_guard_drop() {
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(8, Arc::clone(&slot));
+        let guard = CompletionGuard::new(slot);
+        guard.complete(Ok(output(8)));
+        assert!(ticket.wait().is_ok());
+    }
+}

@@ -185,12 +185,13 @@ impl TuningCache {
 }
 
 /// Does a cache key string look like a [`Fingerprint::label`]
-/// (`b<band>:<runs>:<dups>:w<bytes>:<signs>`) rather than a legacy v1
-/// distribution name?
+/// (`b<band>:<runs>:<dups>:w<bytes>:<signs>`, optionally suffixed with a
+/// dtype tag segment such as `:f64`) rather than a legacy v1 distribution
+/// name?
 ///
 /// [`Fingerprint::label`]: crate::autotune::Fingerprint::label
 fn looks_like_fingerprint_label(key: &str) -> bool {
-    key.starts_with('b') && key.split(':').count() == 5
+    key.starts_with('b') && matches!(key.split(':').count(), 5 | 6)
 }
 
 #[cfg(test)]

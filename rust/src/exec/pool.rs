@@ -94,13 +94,34 @@ impl ThreadPool {
         true
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished. Parks on the `idle`
+    /// condvar — zero CPU while waiting (workers notify when the in-flight
+    /// count returns to zero).
     pub fn wait_idle(&self) {
         let mut state = self.queue.jobs.lock().unwrap();
         while self.queue.in_flight.load(Ordering::SeqCst) > 0 {
             state = self.queue.idle.wait(state).unwrap();
         }
         drop(state);
+    }
+
+    /// Bounded [`wait_idle`](Self::wait_idle): parks for at most `timeout`,
+    /// returning `true` if the pool went idle in time.
+    pub fn wait_idle_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut state = self.queue.jobs.lock().unwrap();
+        while self.queue.in_flight.load(Ordering::SeqCst) > 0 {
+            let Some(remaining) = deadline.checked_duration_since(std::time::Instant::now())
+            else {
+                return false;
+            };
+            let (next, timed_out) = self.queue.idle.wait_timeout(state, remaining).unwrap();
+            state = next;
+            if timed_out.timed_out() && self.queue.in_flight.load(Ordering::SeqCst) > 0 {
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -214,5 +235,18 @@ mod tests {
     fn wait_idle_on_empty_pool_returns() {
         let pool = ThreadPool::new(3);
         pool.wait_idle(); // must not deadlock
+    }
+
+    #[test]
+    fn wait_idle_timeout_bounds_the_park() {
+        let pool = ThreadPool::new(1);
+        assert!(pool.wait_idle_timeout(std::time::Duration::from_millis(5)), "idle pool");
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(120)));
+        assert!(
+            !pool.wait_idle_timeout(std::time::Duration::from_millis(5)),
+            "busy pool must time out"
+        );
+        assert!(pool.wait_idle_timeout(std::time::Duration::from_secs(30)), "then drains");
+        assert_eq!(pool.in_flight(), 0);
     }
 }

@@ -54,7 +54,8 @@ pub mod util;
 /// Common imports for library users.
 pub mod prelude {
     pub use crate::autotune::{AutotunePolicy, Fingerprint};
+    pub use crate::coordinator::{ServiceConfig, SortRequest, SortService, Ticket};
     pub use crate::data::Distribution;
     pub use crate::params::{ACode, Bounds, SortParams};
-    pub use crate::sort::{AdaptiveSorter, Baseline, MergeTuning};
+    pub use crate::sort::{AdaptiveSorter, Baseline, Dtype, MergeTuning, SortKey, SortPayload};
 }

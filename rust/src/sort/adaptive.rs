@@ -148,6 +148,65 @@ impl AdaptiveSorter {
         Ok(())
     }
 
+    /// Algorithm 6 for u64 keys (same dispatch shape as i64: the radix sort
+    /// runs with a zero sign mask, merge/sample compare in unsigned order).
+    pub fn sort_u64_with_scratch(
+        &self,
+        data: &mut [u64],
+        p: &SortParams,
+        scratch: &mut Vec<u64>,
+    ) {
+        if data.len() < p.fallback_threshold {
+            data.sort_unstable();
+            return;
+        }
+        match p.algorithm {
+            ACode::Radix => radix_sort_with_scratch(data, self.threads, scratch),
+            ACode::Sample => {
+                let tuning = super::samplesort::SampleSortTuning::for_threads(self.threads);
+                super::samplesort::sample_sort(data, &tuning)
+            }
+            // No 64-bit bitonic artifact is compiled; "other cases" branch.
+            ACode::Merge | ACode::XlaTile => parallel_merge_sort(data, &self.merge_tuning(p)),
+        }
+    }
+
+    pub fn sort_u64(&self, data: &mut [u64], p: &SortParams) {
+        self.sort_u64_with_scratch(data, p, &mut Vec::new());
+    }
+
+    /// Algorithm 6 for f64 keys in IEEE-754 `total_cmp` order: the slice is
+    /// reinterpreted as bits, transformed with the monotone total-order map
+    /// (`sort::floats`), dispatched through the u64 path — every branch of
+    /// which respects unsigned order — and transformed back in place.
+    pub fn sort_f64_with_scratch(
+        &self,
+        data: &mut [f64],
+        p: &SortParams,
+        scratch: &mut Vec<u64>,
+    ) {
+        // SAFETY: f64 and u64 have identical size/alignment; every u64 bit
+        // pattern is a valid f64 and vice versa. The transforms are inverse
+        // bijections, so the slice always holds valid patterns.
+        let bits: &mut [u64] =
+            unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u64, data.len()) };
+        crate::exec::parallel_for_chunks(bits, self.threads, |_, chunk| {
+            for b in chunk.iter_mut() {
+                *b = super::floats::f64_to_key(*b);
+            }
+        });
+        self.sort_u64_with_scratch(bits, p, scratch);
+        crate::exec::parallel_for_chunks(bits, self.threads, |_, chunk| {
+            for b in chunk.iter_mut() {
+                *b = super::floats::f64_from_key(*b);
+            }
+        });
+    }
+
+    pub fn sort_f64(&self, data: &mut [f64], p: &SortParams) {
+        self.sort_f64_with_scratch(data, p, &mut Vec::new());
+    }
+
     /// Generic radix entry for other key widths (u32/u64) — not part of
     /// Algorithm 6 but exposed for library users.
     pub fn sort_radix<T: RadixKey>(&self, data: &mut [T]) {
@@ -239,6 +298,51 @@ mod tests {
     fn paper_configs_sort_correctly() {
         for p in [SortParams::paper_1e7(), SortParams::paper_5e8()] {
             check_i64(&generate_i64(50_000, Distribution::Uniform, 91, 4), &p);
+        }
+    }
+
+    #[test]
+    fn u64_dispatch_all_branches() {
+        let base: Vec<u64> = generate_i64(20_000, Distribution::Uniform, 94, 2)
+            .iter()
+            .map(|&x| x.wrapping_sub(i64::MIN) as u64)
+            .collect();
+        let mut expect = base.clone();
+        expect.sort_unstable();
+        for algo in [ACode::Radix, ACode::Merge, ACode::Sample, ACode::XlaTile] {
+            let p = SortParams { algorithm: algo, fallback_threshold: 100, ..Default::default() };
+            let mut got = base.clone();
+            sorter().sort_u64(&mut got, &p);
+            assert_eq!(got, expect, "{algo:?}");
+        }
+        // Fallback branch.
+        let p = SortParams { fallback_threshold: usize::MAX, ..Default::default() };
+        let mut got = base.clone();
+        sorter().sort_u64(&mut got, &p);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn f64_dispatch_total_order_with_specials() {
+        let mut base: Vec<f64> = generate_i64(20_000, Distribution::Gaussian, 96, 2)
+            .iter()
+            .map(|&x| x as f64 / 3.0)
+            .collect();
+        base[7] = f64::NAN;
+        base[19] = -f64::NAN;
+        base[101] = f64::INFINITY;
+        base[202] = f64::NEG_INFINITY;
+        base[303] = -0.0;
+        base[404] = 0.0;
+        let mut expect = base.clone();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        let expect_bits: Vec<u64> = expect.iter().map(|x| x.to_bits()).collect();
+        for algo in [ACode::Radix, ACode::Merge, ACode::Sample] {
+            let p = SortParams { algorithm: algo, fallback_threshold: 100, ..Default::default() };
+            let mut got = base.clone();
+            sorter().sort_f64(&mut got, &p);
+            let got_bits: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, expect_bits, "{algo:?}");
         }
     }
 

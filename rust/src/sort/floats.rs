@@ -35,8 +35,11 @@ fn f32_from_key(k: u32) -> u32 {
     }
 }
 
+/// Monotone map from `total_cmp` order onto unsigned order (see module
+/// docs). Shared with the generic [`SortKey`](super::key::SortKey) layer:
+/// the adaptive f64 path and the fingerprint projection both ride on it.
 #[inline]
-fn f64_to_key(b: u64) -> u64 {
+pub(crate) fn f64_to_key(b: u64) -> u64 {
     if b & 0x8000_0000_0000_0000 != 0 {
         !b
     } else {
@@ -44,8 +47,9 @@ fn f64_to_key(b: u64) -> u64 {
     }
 }
 
+/// Inverse of [`f64_to_key`].
 #[inline]
-fn f64_from_key(k: u64) -> u64 {
+pub(crate) fn f64_from_key(k: u64) -> u64 {
     if k & 0x8000_0000_0000_0000 != 0 {
         k & !0x8000_0000_0000_0000
     } else {

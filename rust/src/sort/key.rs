@@ -1,0 +1,525 @@
+//! Generic sort keys: the dtype layer under the typed service API.
+//!
+//! The paper positions EvoSort as a drop-in replacement for NumPy sort
+//! routines across many dtypes; this module is the seam that opens the
+//! framework beyond `i64`. A [`SortKey`] is any fixed-width key the adaptive
+//! dispatcher (Algorithm 6) can serve: it knows its total order, its
+//! canonical bit pattern (for multiset validation), a monotone projection
+//! onto `i64` (for workload fingerprinting and retained tuning samples), and
+//! how to route itself through [`AdaptiveSorter`] with a reusable scratch
+//! buffer.
+//!
+//! Floats sort in IEEE-754 `total_cmp` order via the monotone bit transform
+//! in [`super::floats`] — NaNs are real keys with defined positions, not
+//! errors, exactly as `np.sort` treats them.
+//!
+//! [`SortPayload`] is the dtype-erased carrier the service moves through its
+//! queues: one concrete enum rather than trait objects, so job routing stays
+//! allocation-free and exhaustively matched.
+
+use std::cmp::Ordering;
+
+use super::adaptive::AdaptiveSorter;
+use crate::data::validate::{mix64, Fingerprint, Verdict};
+use crate::exec;
+use crate::params::SortParams;
+
+/// Key dtype the service can sort. `name()` is the tag carried by
+/// dtype-qualified fingerprint labels (`i64` stays untagged for cache
+/// back-compat with pre-dtype persisted files).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    I64,
+    I32,
+    U64,
+    F64,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::I64 => "i64",
+            Dtype::I32 => "i32",
+            Dtype::U64 => "u64",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        Some(match s {
+            "i64" => Dtype::I64,
+            "i32" => Dtype::I32,
+            "u64" => Dtype::U64,
+            "f64" => Dtype::F64,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [Dtype] {
+        &[Dtype::I64, Dtype::I32, Dtype::U64, Dtype::F64]
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-shard scratch buffers, one per radix element width, reused across
+/// every job a worker executes regardless of dtype mix (`f64` shares the
+/// `u64` buffer — it sorts as transformed bits).
+#[derive(Default)]
+pub struct SortScratch {
+    pub w_i64: Vec<i64>,
+    pub w_i32: Vec<i32>,
+    pub w_u64: Vec<u64>,
+}
+
+impl SortScratch {
+    pub fn new() -> SortScratch {
+        SortScratch::default()
+    }
+}
+
+/// A fixed-width key the adaptive dispatcher can sort, validate and
+/// fingerprint. Implemented for `i64`, `i32`, `u64` and `f64`.
+pub trait SortKey: Copy + Send + Sync + Default + 'static {
+    /// This key's dtype tag.
+    const DTYPE: Dtype;
+
+    /// Total-order comparison (IEEE-754 `total_cmp` for floats: -NaN first,
+    /// -0.0 before +0.0, +NaN last).
+    fn key_cmp(a: &Self, b: &Self) -> Ordering;
+
+    /// Canonical bit pattern for the order-independent multiset fingerprint
+    /// (distinct NaN payloads are distinct patterns — sorting must preserve
+    /// them bit-exactly).
+    fn canonical_bits(self) -> u64;
+
+    /// Monotone projection onto `i64`: `a <= b` (total order) iff
+    /// `a.to_order_i64() <= b.to_order_i64()`. Feeds workload fingerprinting
+    /// and the retained tuning samples, so every dtype reuses the one
+    /// GA-fitness pipeline. Magnitudes are *not* preserved (only order), so
+    /// fingerprint value-features describe the projected shape.
+    fn to_order_i64(self) -> i64;
+
+    /// Algorithm 6 dispatch for this key width, reusing `scratch`.
+    fn sort_with(
+        sorter: &AdaptiveSorter,
+        data: &mut [Self],
+        params: &SortParams,
+        scratch: &mut SortScratch,
+    );
+
+    /// Wrap a typed vector into the dtype-erased payload.
+    fn into_payload(data: Vec<Self>) -> SortPayload;
+
+    /// Recover the typed vector; returns the payload unchanged on a dtype
+    /// mismatch.
+    fn from_payload(payload: SortPayload) -> Result<Vec<Self>, SortPayload>;
+
+    /// Borrow the typed slice when the payload holds this dtype.
+    fn slice_of(payload: &SortPayload) -> Option<&[Self]>;
+}
+
+impl SortKey for i64 {
+    const DTYPE: Dtype = Dtype::I64;
+
+    #[inline]
+    fn key_cmp(a: &Self, b: &Self) -> Ordering {
+        a.cmp(b)
+    }
+
+    #[inline]
+    fn canonical_bits(self) -> u64 {
+        self as u64
+    }
+
+    #[inline]
+    fn to_order_i64(self) -> i64 {
+        self
+    }
+
+    fn sort_with(
+        sorter: &AdaptiveSorter,
+        data: &mut [Self],
+        params: &SortParams,
+        scratch: &mut SortScratch,
+    ) {
+        sorter.sort_i64_with_scratch(data, params, &mut scratch.w_i64);
+    }
+
+    fn into_payload(data: Vec<Self>) -> SortPayload {
+        SortPayload::I64(data)
+    }
+
+    fn from_payload(payload: SortPayload) -> Result<Vec<Self>, SortPayload> {
+        match payload {
+            SortPayload::I64(v) => Ok(v),
+            other => Err(other),
+        }
+    }
+
+    fn slice_of(payload: &SortPayload) -> Option<&[Self]> {
+        match payload {
+            SortPayload::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl SortKey for i32 {
+    const DTYPE: Dtype = Dtype::I32;
+
+    #[inline]
+    fn key_cmp(a: &Self, b: &Self) -> Ordering {
+        a.cmp(b)
+    }
+
+    #[inline]
+    fn canonical_bits(self) -> u64 {
+        self as u32 as u64
+    }
+
+    #[inline]
+    fn to_order_i64(self) -> i64 {
+        self as i64
+    }
+
+    fn sort_with(
+        sorter: &AdaptiveSorter,
+        data: &mut [Self],
+        params: &SortParams,
+        scratch: &mut SortScratch,
+    ) {
+        sorter.sort_i32_with_scratch(data, params, &mut scratch.w_i32);
+    }
+
+    fn into_payload(data: Vec<Self>) -> SortPayload {
+        SortPayload::I32(data)
+    }
+
+    fn from_payload(payload: SortPayload) -> Result<Vec<Self>, SortPayload> {
+        match payload {
+            SortPayload::I32(v) => Ok(v),
+            other => Err(other),
+        }
+    }
+
+    fn slice_of(payload: &SortPayload) -> Option<&[Self]> {
+        match payload {
+            SortPayload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl SortKey for u64 {
+    const DTYPE: Dtype = Dtype::U64;
+
+    #[inline]
+    fn key_cmp(a: &Self, b: &Self) -> Ordering {
+        a.cmp(b)
+    }
+
+    #[inline]
+    fn canonical_bits(self) -> u64 {
+        self
+    }
+
+    #[inline]
+    fn to_order_i64(self) -> i64 {
+        // Flip the top bit: monotone map from unsigned order onto i64 order.
+        (self ^ (1 << 63)) as i64
+    }
+
+    fn sort_with(
+        sorter: &AdaptiveSorter,
+        data: &mut [Self],
+        params: &SortParams,
+        scratch: &mut SortScratch,
+    ) {
+        sorter.sort_u64_with_scratch(data, params, &mut scratch.w_u64);
+    }
+
+    fn into_payload(data: Vec<Self>) -> SortPayload {
+        SortPayload::U64(data)
+    }
+
+    fn from_payload(payload: SortPayload) -> Result<Vec<Self>, SortPayload> {
+        match payload {
+            SortPayload::U64(v) => Ok(v),
+            other => Err(other),
+        }
+    }
+
+    fn slice_of(payload: &SortPayload) -> Option<&[Self]> {
+        match payload {
+            SortPayload::U64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl SortKey for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+
+    #[inline]
+    fn key_cmp(a: &Self, b: &Self) -> Ordering {
+        a.total_cmp(b)
+    }
+
+    #[inline]
+    fn canonical_bits(self) -> u64 {
+        self.to_bits()
+    }
+
+    #[inline]
+    fn to_order_i64(self) -> i64 {
+        // total-order bits (unsigned order == total_cmp order), then the
+        // monotone u64 -> i64 top-bit flip.
+        (super::floats::f64_to_key(self.to_bits()) ^ (1 << 63)) as i64
+    }
+
+    fn sort_with(
+        sorter: &AdaptiveSorter,
+        data: &mut [Self],
+        params: &SortParams,
+        scratch: &mut SortScratch,
+    ) {
+        sorter.sort_f64_with_scratch(data, params, &mut scratch.w_u64);
+    }
+
+    fn into_payload(data: Vec<Self>) -> SortPayload {
+        SortPayload::F64(data)
+    }
+
+    fn from_payload(payload: SortPayload) -> Result<Vec<Self>, SortPayload> {
+        match payload {
+            SortPayload::F64(v) => Ok(v),
+            other => Err(other),
+        }
+    }
+
+    fn slice_of(payload: &SortPayload) -> Option<&[Self]> {
+        match payload {
+            SortPayload::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Dtype-erased job data: the one concrete type the service moves through
+/// its queues and hands back in outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SortPayload {
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+    U64(Vec<u64>),
+    F64(Vec<f64>),
+}
+
+impl SortPayload {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            SortPayload::I64(_) => Dtype::I64,
+            SortPayload::I32(_) => Dtype::I32,
+            SortPayload::U64(_) => Dtype::U64,
+            SortPayload::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SortPayload::I64(v) => v.len(),
+            SortPayload::I32(v) => v.len(),
+            SortPayload::U64(v) => v.len(),
+            SortPayload::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow the typed slice (`None` on a dtype mismatch).
+    pub fn as_slice<K: SortKey>(&self) -> Option<&[K]> {
+        K::slice_of(self)
+    }
+
+    /// Unwrap into the typed vector (`Err(self)` on a dtype mismatch).
+    pub fn into_vec<K: SortKey>(self) -> Result<Vec<K>, SortPayload> {
+        K::from_payload(self)
+    }
+
+    /// Map generated `i64` test data into any dtype with an order-preserving
+    /// transform (the workload generators are i64-native; this is how the
+    /// CLI/bench layers open the f64/u64 scenario space).
+    pub fn from_i64_values(data: Vec<i64>, dtype: Dtype) -> SortPayload {
+        match dtype {
+            Dtype::I64 => SortPayload::I64(data),
+            Dtype::I32 => SortPayload::I32(
+                data.into_iter()
+                    .map(|x| x.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+                    .collect(),
+            ),
+            // Shift by i64::MIN: monotone bijection onto u64.
+            Dtype::U64 => {
+                SortPayload::U64(data.into_iter().map(|x| x.wrapping_sub(i64::MIN) as u64).collect())
+            }
+            // Exact for |x| < 2^53 — the generators stay within ±1e9.
+            Dtype::F64 => SortPayload::F64(data.into_iter().map(|x| x as f64).collect()),
+        }
+    }
+}
+
+/// Order-independent multiset fingerprint over canonical key bits — the
+/// generic analog of [`validate::fingerprint_i64`]; identical results for
+/// `i64` input.
+///
+/// [`validate::fingerprint_i64`]: crate::data::validate::fingerprint_i64
+pub fn fingerprint_keys<K: SortKey>(data: &[K], threads: usize) -> Fingerprint {
+    let bounds = exec::partition_even(data.len(), threads.max(1));
+    let parts = exec::parallel_map(bounds.len(), threads, |i| {
+        let chunk = &data[bounds[i].clone()];
+        let mut sum = 0u64;
+        let mut xor = 0u64;
+        let mut mix = 0u64;
+        for &x in chunk {
+            let u = x.canonical_bits();
+            sum = sum.wrapping_add(u);
+            xor ^= u;
+            mix = mix.wrapping_add(mix64(u));
+        }
+        (sum, xor, mix)
+    });
+    let mut fp = Fingerprint { len: data.len(), sum: 0, xor: 0, mix: 0 };
+    for (s, x, m) in parts {
+        fp.sum = fp.sum.wrapping_add(s);
+        fp.xor ^= x;
+        fp.mix = fp.mix.wrapping_add(m);
+    }
+    fp
+}
+
+/// Parallel total-order sortedness check over any key dtype.
+pub fn is_sorted_keys<K: SortKey>(data: &[K], threads: usize) -> bool {
+    if data.len() < 2 {
+        return true;
+    }
+    let bounds = exec::partition_even(data.len(), threads.max(1));
+    let oks = exec::parallel_map(bounds.len(), threads, |i| {
+        let r = bounds[i].clone();
+        // Include the seam with the previous chunk.
+        let start = r.start.saturating_sub(1);
+        data[start..r.end].windows(2).all(|w| K::key_cmp(&w[0], &w[1]) != Ordering::Greater)
+    });
+    oks.into_iter().all(|ok| ok)
+}
+
+/// Full generic validation: `output` must be totally-ordered and a bit-exact
+/// permutation of whatever produced `input_fp` (fingerprint taken pre-sort).
+/// The sortedness pass is the parallel [`is_sorted_keys`]; the violation
+/// position is located sequentially only on the (rare) failure path.
+pub fn validate_keys<K: SortKey>(input_fp: Fingerprint, output: &[K], threads: usize) -> Verdict {
+    if !is_sorted_keys(output, threads) {
+        let pos = output
+            .windows(2)
+            .position(|w| K::key_cmp(&w[0], &w[1]) == Ordering::Greater)
+            .unwrap_or(0);
+        return Verdict::NotSorted { first_violation: pos };
+    }
+    if fingerprint_keys(output, threads) != input_fp {
+        return Verdict::MultisetMismatch;
+    }
+    Verdict::Valid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::validate;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for &d in Dtype::all() {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+            assert_eq!(format!("{d}"), d.name());
+        }
+        assert_eq!(Dtype::parse("f32"), None);
+    }
+
+    #[test]
+    fn to_order_i64_is_monotone_per_dtype() {
+        let i64s = [i64::MIN, -5, 0, 5, i64::MAX];
+        let u64s = [0u64, 1, 1 << 62, 1 << 63, u64::MAX];
+        let f64s = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            f64::MIN_POSITIVE,
+            2.5,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        assert!(i64s.windows(2).all(|w| w[0].to_order_i64() < w[1].to_order_i64()));
+        assert!(u64s.windows(2).all(|w| w[0].to_order_i64() < w[1].to_order_i64()));
+        assert!(f64s.windows(2).all(|w| w[0].to_order_i64() < w[1].to_order_i64()));
+        // -NaN sits below everything in total order.
+        assert!((-f64::NAN).to_order_i64() < f64::NEG_INFINITY.to_order_i64());
+    }
+
+    #[test]
+    fn payload_roundtrip_and_mismatch() {
+        let p = SortPayload::from_i64_values(vec![3, -1, 2], Dtype::F64);
+        assert_eq!(p.dtype(), Dtype::F64);
+        assert_eq!(p.len(), 3);
+        assert!(p.as_slice::<i64>().is_none());
+        assert_eq!(p.as_slice::<f64>(), Some(&[3.0, -1.0, 2.0][..]));
+        let back = p.into_vec::<i64>();
+        assert!(back.is_err());
+        let v = back.unwrap_err().into_vec::<f64>().unwrap();
+        assert_eq!(v, vec![3.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn from_i64_values_preserves_order_u64() {
+        let src = vec![i64::MIN, -7, 0, 7, i64::MAX];
+        let SortPayload::U64(u) = SortPayload::from_i64_values(src, Dtype::U64) else {
+            panic!("expected u64 payload");
+        };
+        assert!(u.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(u[0], 0);
+        assert_eq!(*u.last().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn generic_fingerprint_matches_i64_fingerprint() {
+        let data = vec![5i64, -2, 9, 0, 5];
+        assert_eq!(fingerprint_keys(&data, 2), validate::fingerprint_i64(&data, 2));
+    }
+
+    #[test]
+    fn validate_keys_f64_with_specials() {
+        let input =
+            vec![3.5f64, f64::NAN, -f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 0.0, -1.5];
+        let fp = fingerprint_keys(&input, 2);
+        let mut out = input.clone();
+        out.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(validate_keys(fp, &out, 2), Verdict::Valid);
+        assert!(is_sorted_keys(&out, 2));
+        // NaN-first is NOT sorted under total order (only -NaN is first).
+        let mut bad = out.clone();
+        bad.swap(0, 7);
+        assert!(matches!(validate_keys(fp, &bad, 2), Verdict::NotSorted { .. }));
+        // Dropping a NaN payload is a multiset mismatch even though the
+        // remaining order is fine.
+        let mut lost = out.clone();
+        lost[7] = 3.5; // replace +NaN with a duplicate ordinary value
+        lost.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(validate_keys(fp, &lost, 2), Verdict::MultisetMismatch);
+    }
+}

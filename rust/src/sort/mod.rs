@@ -14,6 +14,7 @@ pub mod adaptive;
 pub mod floats;
 pub mod insertion;
 pub mod introsort;
+pub mod key;
 pub mod merge;
 pub mod parallel_merge;
 pub mod radix;
@@ -22,6 +23,7 @@ pub mod stable_merge;
 
 pub use adaptive::{AdaptiveSorter, TileSorter};
 pub use floats::{radix_sort_f32, radix_sort_f64};
+pub use key::{Dtype, SortKey, SortPayload, SortScratch};
 pub use parallel_merge::{parallel_merge_sort, MergeTuning};
 pub use radix::{radix_sort, RadixKey};
 pub use samplesort::{sample_sort, SampleSortTuning};

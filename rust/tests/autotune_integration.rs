@@ -9,7 +9,7 @@
 use std::time::{Duration, Instant};
 
 use evosort::autotune::AutotunePolicy;
-use evosort::coordinator::{ServiceConfig, SortJob, SortService};
+use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
 use evosort::data::{generate_i64, Distribution};
 use evosort::symbolic::SymbolicModel;
 
@@ -44,15 +44,15 @@ fn service_adapts_to_repeated_workload_shape() {
     let mut batches = 0u64;
     let mut max_submit_call = Duration::ZERO;
     while svc.cache().get(n, &label).is_none() && Instant::now() < deadline {
-        let jobs: Vec<SortJob> = (0..8)
-            .map(|i| SortJob::new(generate_i64(n, dist, batches * 8 + i, 2)))
+        let requests: Vec<SortRequest> = (0..8)
+            .map(|i| SortRequest::new(generate_i64(n, dist, batches * 8 + i, 2)))
             .collect();
         // The submit call itself only fingerprints + enqueues: it must stay
         // fast even while the tuner thread is busy refining.
         let t0 = Instant::now();
-        let handle = svc.submit_batch(jobs);
+        let ticket = svc.submit_batch_requests(requests);
         max_submit_call = max_submit_call.max(t0.elapsed());
-        let report = handle.wait();
+        let report = ticket.wait();
         assert_eq!(report.stats.invalid, 0);
         batches += 1;
     }
@@ -85,7 +85,8 @@ fn service_adapts_to_repeated_workload_shape() {
     // assert resolution went through the cache rather than exact equality
     // with the snapshot above.)
     let hits_before = svc.metrics().counter("params.cache_hit");
-    let out = svc.submit(SortJob::new(generate_i64(n, dist, 9999, 2))).wait();
+    let data = generate_i64(n, dist, 9999, 2);
+    let out = svc.submit_request(SortRequest::new(data)).wait().expect("job completed");
     assert!(out.valid);
     assert!(
         svc.metrics().counter("params.cache_hit") > hits_before,
@@ -111,7 +112,8 @@ fn autotune_off_means_no_tuner_metrics() {
         autotune: None,
     });
     assert!(!svc.autotuning());
-    let out = svc.submit(SortJob::new(generate_i64(20_000, Distribution::Uniform, 1, 2))).wait();
+    let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
+    let out = svc.submit_request(SortRequest::new(data)).wait().expect("job completed");
     assert!(out.valid);
     svc.drain();
     assert_eq!(svc.metrics().counter("tuner.observations"), 0);
@@ -139,10 +141,12 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut round = 0u64;
         while svc.cache().is_empty() && Instant::now() < deadline {
-            let jobs: Vec<SortJob> = (0..8)
-                .map(|i| SortJob::new(generate_i64(n, Distribution::Uniform, round * 8 + i, 2)))
+            let requests: Vec<SortRequest> = (0..8)
+                .map(|i| {
+                    SortRequest::new(generate_i64(n, Distribution::Uniform, round * 8 + i, 2))
+                })
                 .collect();
-            svc.submit_batch(jobs).wait();
+            let _ = svc.submit_batch_requests(requests).wait();
             round += 1;
         }
         assert!(!svc.cache().is_empty(), "first lifetime never adapted");

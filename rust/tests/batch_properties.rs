@@ -4,7 +4,7 @@
 //! path must not be slower than submitting the same jobs one at a time on
 //! the same pool.
 
-use evosort::coordinator::{BatchWorkload, ServiceConfig, SortJob, SortService};
+use evosort::coordinator::{BatchWorkload, ServiceConfig, SortRequest, SortService};
 use evosort::data::Distribution;
 use evosort::testkit::{check, Arbitrary, PropConfig};
 use evosort::util::timer;
@@ -26,28 +26,30 @@ fn thousand_job_mixed_batch_matches_sequential_path() {
             Distribution::NearlySorted,
         ],
         seed: 7,
-        validate: true,
+        ..Default::default()
     };
-    let jobs = workload.generate(2);
+    let requests = workload.generate(2);
     // The sequential path: same inputs through the plain std-sort oracle.
-    let oracle: Vec<Vec<i64>> = jobs
+    let oracle: Vec<Vec<i64>> = requests
         .iter()
-        .map(|j| {
-            let mut v = j.data.clone();
+        .map(|r| {
+            let mut v = r.payload().as_slice::<i64>().expect("i64 workload").to_vec();
             v.sort_unstable();
             v
         })
         .collect();
 
     let svc = service(3);
-    let report = svc.submit_batch(jobs).wait();
+    let report = svc.submit_batch_requests(requests).wait();
 
     assert_eq!(report.outcomes.len(), 1000);
     assert_eq!(report.stats.jobs, 1000);
     assert_eq!(report.stats.invalid, 0, "every job must validate");
-    for (i, (out, want)) in report.outcomes.iter().zip(&oracle).enumerate() {
+    assert_eq!(report.stats.failed, 0);
+    for (i, want) in oracle.iter().enumerate() {
+        let out = report.output(i);
         assert!(out.valid, "job {i} invalid");
-        assert_eq!(&out.data, want, "job {i} must match the sequential oracle");
+        assert_eq!(out.data::<i64>().unwrap(), &want[..], "job {i} must match the oracle");
     }
     // Percentile stats are well-formed for a big batch.
     assert!(report.stats.p50_secs <= report.stats.p99_secs);
@@ -89,13 +91,17 @@ impl Arbitrary for ArbBatch {
 fn prop_random_batches_sort_correctly() {
     let svc = service(2);
     check::<ArbBatch>(PropConfig { cases: 60, seed: 11, ..Default::default() }, |batch| {
-        let jobs: Vec<SortJob> = batch.0.iter().map(|v| SortJob::new(v.clone())).collect();
-        let report = svc.submit_batch(jobs).wait();
+        let requests: Vec<SortRequest> =
+            batch.0.iter().map(|v| SortRequest::new(v.clone())).collect();
+        let report = svc.submit_batch_requests(requests).wait();
         report.outcomes.len() == batch.0.len()
-            && report.outcomes.iter().zip(&batch.0).all(|(out, input)| {
+            && report.outcomes.iter().zip(&batch.0).all(|(result, input)| {
                 let mut want = input.clone();
                 want.sort_unstable();
-                out.valid && out.data == want
+                match result {
+                    Ok(out) => out.valid && out.data::<i64>() == Some(&want[..]),
+                    Err(_) => false,
+                }
             })
     })
     .unwrap_ok();
@@ -109,35 +115,32 @@ fn batch_not_slower_than_one_at_a_time_loop() {
     // of the sequential wall; the assertion leaves generous headroom for CI
     // noise.
     let jobs_n = 200;
-    let make_jobs = || -> Vec<SortJob> {
+    let make_requests = || -> Vec<SortRequest> {
         (0..jobs_n as u64)
             .map(|seed| {
-                SortJob::new(evosort::data::generate_i64(
-                    8_000,
-                    Distribution::Uniform,
-                    seed,
-                    1,
-                ))
+                let data = evosort::data::generate_i64(8_000, Distribution::Uniform, seed, 1);
+                SortRequest::new(data)
             })
             .collect()
     };
 
     let svc = service(3);
     // Warm both paths once (thread spawn, allocator).
-    svc.submit(SortJob::new(evosort::data::generate_i64(8_000, Distribution::Uniform, 999, 1)))
-        .wait();
+    let warm = evosort::data::generate_i64(8_000, Distribution::Uniform, 999, 1);
+    let _ = svc.submit_request(SortRequest::new(warm)).wait().expect("warmup job");
 
-    let seq_jobs = make_jobs();
+    let seq_requests = make_requests();
     let (_, seq_secs) = timer::time(|| {
-        for job in seq_jobs {
-            let out = svc.submit(job).wait();
+        for req in seq_requests {
+            let out = svc.submit_request(req).wait().expect("sequential job");
             assert!(out.valid);
         }
     });
 
-    let batch_jobs = make_jobs();
-    let report = svc.submit_batch(batch_jobs).wait();
+    let batch_requests = make_requests();
+    let report = svc.submit_batch_requests(batch_requests).wait();
     assert_eq!(report.stats.invalid, 0);
+    assert_eq!(report.stats.failed, 0);
 
     assert!(
         report.wall_secs <= seq_secs * 1.5,

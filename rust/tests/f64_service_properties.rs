@@ -1,0 +1,137 @@
+//! f64 total-order edge cases through the service path (companion to
+//! `fingerprint_properties.rs`): NaN placement (−NaN first, +NaN last,
+//! payloads preserved bit-exactly), `-0.0` vs `+0.0` ordering, and ±inf —
+//! across the nine paper distributions and across arbitrary bit patterns
+//! from the property runner.
+
+use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
+use evosort::data::{generate_i64, Distribution};
+use evosort::testkit::{check, PropConfig};
+
+fn service() -> SortService {
+    SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 2,
+        queue_capacity: 16,
+        autotune: None,
+    })
+}
+
+/// Sort `data` through the service (validation on) and compare bit-exactly
+/// against the `total_cmp` oracle.
+fn assert_service_total_order(svc: &SortService, data: Vec<f64>) {
+    let mut expect = data.clone();
+    expect.sort_by(|a, b| a.total_cmp(b));
+    let expect_bits: Vec<u64> = expect.iter().map(|x| x.to_bits()).collect();
+    let out = svc.submit_request(SortRequest::new(data)).wait().expect("job completed");
+    assert!(out.valid, "service-side validation must accept a correct f64 sort");
+    let got_bits: Vec<u64> = out.data::<f64>().unwrap().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got_bits, expect_bits, "bit-exact total_cmp order");
+}
+
+/// The specials every distribution gets seeded with: signed NaNs (distinct
+/// payloads), both infinities, both zeros, and subnormals.
+fn specials() -> Vec<f64> {
+    vec![
+        f64::NAN,
+        -f64::NAN,
+        f64::from_bits(0x7FF8_0000_0000_0001), // +NaN, different payload
+        f64::from_bits(0xFFF8_0000_0000_0001), // -NaN, different payload
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE / 2.0,
+        -f64::MIN_POSITIVE / 2.0,
+    ]
+}
+
+#[test]
+fn nine_distributions_with_specials_sort_in_total_order() {
+    let svc = service();
+    for &dist in Distribution::all() {
+        let mut data: Vec<f64> = generate_i64(20_000, dist, 9, 2)
+            .into_iter()
+            .map(|x| x as f64 / 7.0)
+            .collect();
+        // Scatter the specials through the body, not just the ends.
+        for (i, s) in specials().into_iter().enumerate() {
+            data[i * 1_777 % 20_000] = s;
+        }
+        assert_service_total_order(&svc, data);
+    }
+    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+    assert_eq!(svc.metrics().counter("jobs.dtype.f64"), Distribution::all().len() as u64);
+}
+
+#[test]
+fn nan_placement_and_zero_ordering() {
+    let svc = service();
+    let data = vec![1.0, -f64::NAN, 0.0, f64::NAN, -0.0, f64::NEG_INFINITY, f64::INFINITY, -1.0];
+    let out = svc.submit_request(SortRequest::new(data)).wait().unwrap();
+    assert!(out.valid);
+    let got = out.data::<f64>().unwrap();
+    // total order: -NaN < -inf < -1 < -0.0 < +0.0 < 1 < +inf < +NaN.
+    assert!(got[0].is_nan() && got[0].is_sign_negative(), "-NaN first");
+    assert_eq!(got[1], f64::NEG_INFINITY);
+    assert_eq!(got[2], -1.0);
+    assert!(got[3] == 0.0 && got[3].is_sign_negative(), "-0.0 before +0.0");
+    assert!(got[4] == 0.0 && got[4].is_sign_positive());
+    assert_eq!(got[5], 1.0);
+    assert_eq!(got[6], f64::INFINITY);
+    assert!(got[7].is_nan() && got[7].is_sign_positive(), "+NaN last");
+}
+
+#[test]
+fn all_nan_and_all_same_zero_payloads() {
+    let svc = service();
+    // An array of nothing but NaNs (mixed signs/payloads) must validate:
+    // the multiset fingerprint is over raw bits, so payloads count.
+    let mut nans = Vec::new();
+    for i in 0..4_000u64 {
+        let payload = 0x7FF8_0000_0000_0000u64 | (i % 97);
+        let sign = if i % 3 == 0 { 0x8000_0000_0000_0000 } else { 0 };
+        nans.push(f64::from_bits(payload | sign));
+    }
+    assert_service_total_order(&svc, nans);
+    // Mixed zeros only.
+    let zeros: Vec<f64> = (0..2_000).map(|i| if i % 2 == 0 { 0.0 } else { -0.0 }).collect();
+    assert_service_total_order(&svc, zeros);
+}
+
+#[test]
+fn prop_arbitrary_bit_patterns_round_trip_the_service() {
+    // Reinterpret arbitrary i64 bit patterns as f64: NaN payloads,
+    // subnormals, infinities and ordinary values all appear. The service
+    // must return exactly the same multiset in total_cmp order.
+    let svc = service();
+    let result = check::<Vec<i64>>(PropConfig { cases: 120, seed: 33, ..Default::default() }, |v| {
+        let data: Vec<f64> = v.iter().map(|&x| f64::from_bits(x as u64)).collect();
+        let mut expect = data.clone();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        let expect_bits: Vec<u64> = expect.iter().map(|x| x.to_bits()).collect();
+        let out = match svc.submit_request(SortRequest::new(data)).wait() {
+            Ok(out) => out,
+            Err(_) => return false,
+        };
+        let got_bits: Vec<u64> = out.data::<f64>().unwrap().iter().map(|x| x.to_bits()).collect();
+        out.valid && got_bits == expect_bits
+    });
+    result.unwrap_ok();
+}
+
+#[test]
+fn f64_fingerprint_classes_stay_stable_across_realisations() {
+    // Same guarantee `fingerprint_properties.rs` gives for i64, at the f64
+    // dtype: different seeds of one distribution share a (tagged) class.
+    for &dist in Distribution::all() {
+        let a: Vec<f64> =
+            generate_i64(100_000, dist, 1, 2).into_iter().map(|x| x as f64).collect();
+        let b: Vec<f64> =
+            generate_i64(100_000, dist, 99, 2).into_iter().map(|x| x as f64).collect();
+        let la = SortService::fingerprint_label_for(&a);
+        let lb = SortService::fingerprint_label_for(&b);
+        assert_eq!(la, lb, "{}: different seeds must land in the same f64 class", dist.name());
+        assert!(la.ends_with(":f64"), "{la}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Acceptance tests for the typed async job API (the api_redesign PR):
+//!
+//! 1. An f64 and a u64 batch each round-trip through `SortService` with
+//!    autotuning enabled, producing **distinct dtype-tagged fingerprint
+//!    classes** in the tuning cache.
+//! 2. A streamed batch yields its first result **before the last job
+//!    completes** — no whole-batch barrier.
+//! 3. Mixed-dtype traffic through one service instance stays correct and
+//!    fully accounted.
+
+use std::time::{Duration, Instant};
+
+use evosort::autotune::AutotunePolicy;
+use evosort::coordinator::{JobResult, ServiceConfig, SortRequest, SortService};
+use evosort::data::{generate_i64, Distribution};
+use evosort::sort::Dtype;
+
+fn floats_of(n: usize, seed: u64) -> Vec<f64> {
+    generate_i64(n, Distribution::Uniform, seed, 2).into_iter().map(|x| x as f64).collect()
+}
+
+fn u64s_of(n: usize, seed: u64) -> Vec<u64> {
+    generate_i64(n, Distribution::Uniform, seed, 2)
+        .into_iter()
+        .map(|x| x.wrapping_sub(i64::MIN) as u64)
+        .collect()
+}
+
+#[test]
+fn f64_and_u64_batches_autotune_into_distinct_dtype_classes() {
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 2,
+        queue_capacity: 32,
+        // quick() = eager test policy: tiny observation thresholds, full CPU
+        // share, no noise margin (deterministic adaptation is under test).
+        autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
+    });
+    let n = 30_000;
+    let f64_label = SortService::fingerprint_label_for(&floats_of(n, 0));
+    let u64_label = SortService::fingerprint_label_for(&u64s_of(n, 0));
+    assert!(f64_label.ends_with(":f64"), "{f64_label}");
+    assert!(u64_label.ends_with(":u64"), "{u64_label}");
+    assert_ne!(f64_label, u64_label);
+    assert!(svc.cache().get(n, &f64_label).is_none(), "f64 class starts cold");
+    assert!(svc.cache().get(n, &u64_label).is_none(), "u64 class starts cold");
+
+    // Alternate f64 and u64 batches of one shape each until the background
+    // tuner publishes parameters for both dtype-tagged classes.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut round = 0u64;
+    while (svc.cache().get(n, &f64_label).is_none() || svc.cache().get(n, &u64_label).is_none())
+        && Instant::now() < deadline
+    {
+        let mut requests: Vec<SortRequest> = Vec::new();
+        for i in 0..4 {
+            requests.push(SortRequest::new(floats_of(n, round * 8 + i)));
+            requests.push(SortRequest::new(u64s_of(n, round * 8 + i)));
+        }
+        let report = svc.submit_batch_requests(requests).wait();
+        assert_eq!(report.stats.invalid, 0);
+        assert_eq!(report.stats.failed, 0);
+        assert_eq!(report.stats.per_dtype.len(), 2, "both dtypes in every batch");
+        round += 1;
+    }
+
+    assert!(svc.cache().get(n, &f64_label).is_some(), "tuner published the f64 class");
+    assert!(svc.cache().get(n, &u64_label).is_some(), "tuner published the u64 class");
+    // Both classes are live in the cache under their tagged keys.
+    let tagged: Vec<String> = svc
+        .cache()
+        .entries()
+        .into_iter()
+        .map(|(k, _)| k.dist)
+        .filter(|d| d.ends_with(":f64") || d.ends_with(":u64"))
+        .collect();
+    assert!(tagged.len() >= 2, "expected both dtype-tagged classes, got {tagged:?}");
+    assert!(svc.metrics().counter("tuner.publishes") >= 2);
+
+    // The tuned classes now serve cache hits to fresh same-shape traffic.
+    let hits_before = svc.metrics().counter("params.cache_hit");
+    let out = svc.submit_request(SortRequest::new(floats_of(n, 9999))).wait().unwrap();
+    assert!(out.valid);
+    let out = svc.submit_request(SortRequest::new(u64s_of(n, 9999))).wait().unwrap();
+    assert!(out.valid);
+    assert!(svc.metrics().counter("params.cache_hit") >= hits_before + 2);
+}
+
+#[test]
+fn streamed_batch_yields_first_result_before_last_job_completes() {
+    // One worker: jobs run in submission order, so the tiny first job is
+    // done while the big tail is still sorting. The stream must hand the
+    // first result over at that point — the whole point of streaming.
+    let svc = SortService::new(ServiceConfig {
+        workers: 1,
+        sort_threads: 2,
+        queue_capacity: 16,
+        autotune: None,
+    });
+    let total = 7u64;
+    let mut requests = vec![SortRequest::new(generate_i64(500, Distribution::Uniform, 0, 2))];
+    for seed in 1..total {
+        let data = generate_i64(500_000, Distribution::Uniform, seed, 2);
+        requests.push(SortRequest::new(data));
+    }
+    let mut stream = svc.submit_batch_requests(requests).stream();
+    let first = stream.next().expect("stream yields").expect("first job ok");
+    assert_eq!(first.len(), 500, "first yield is the first-submitted job");
+    let completed = svc.metrics().counter("jobs.completed");
+    assert!(
+        completed < total,
+        "first result must arrive before the batch finishes ({completed}/{total} done)"
+    );
+    // Draining the stream delivers the rest, in submission order.
+    let rest: Vec<JobResult> = stream.collect();
+    assert_eq!(rest.len(), (total - 1) as usize);
+    assert!(rest.iter().all(|r| r.as_ref().map(|o| o.valid).unwrap_or(false)));
+    assert_eq!(svc.metrics().counter("jobs.completed"), total);
+}
+
+#[test]
+fn mixed_dtype_batch_round_trips_with_per_dtype_stats() {
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 2,
+        queue_capacity: 16,
+        autotune: None,
+    });
+    let ints = generate_i64(40_000, Distribution::Zipf, 1, 2);
+    let mut requests = vec![
+        SortRequest::new(ints.clone()),
+        SortRequest::new(floats_of(30_000, 2)),
+        SortRequest::new(u64s_of(20_000, 3)),
+    ];
+    let i32s: Vec<i32> = ints.iter().map(|&x| x as i32).collect();
+    requests.push(SortRequest::new(i32s.clone()));
+    let report = svc.submit_batch_requests(requests).wait();
+    assert_eq!(report.stats.jobs, 4);
+    assert_eq!(report.stats.invalid, 0);
+    assert_eq!(report.stats.failed, 0);
+    assert_eq!(report.stats.per_dtype.len(), 4, "one stats row per dtype");
+    let dtypes: Vec<Dtype> = report.stats.per_dtype.iter().map(|d| d.dtype).collect();
+    assert_eq!(dtypes, vec![Dtype::I64, Dtype::I32, Dtype::U64, Dtype::F64]);
+
+    // Spot-check each payload against its std-sort oracle.
+    let mut want_i64 = ints;
+    want_i64.sort_unstable();
+    assert_eq!(report.output(0).data::<i64>().unwrap(), &want_i64[..]);
+    let mut want_i32 = i32s;
+    want_i32.sort_unstable();
+    assert_eq!(report.output(3).data::<i32>().unwrap(), &want_i32[..]);
+    let mut want_u64 = u64s_of(20_000, 3);
+    want_u64.sort_unstable();
+    assert_eq!(report.output(2).data::<u64>().unwrap(), &want_u64[..]);
+    let mut want_f64 = floats_of(30_000, 2);
+    want_f64.sort_by(|a, b| a.total_cmp(b));
+    assert_eq!(report.output(1).data::<f64>().unwrap(), &want_f64[..]);
+    // Per-dtype element accounting adds up.
+    let total: u64 = report.stats.per_dtype.iter().map(|d| d.elements).sum();
+    assert_eq!(total, report.stats.elements);
+}
+
+#[test]
+fn dropping_a_result_stream_does_not_lose_the_jobs() {
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 1,
+        queue_capacity: 16,
+        autotune: None,
+    });
+    let requests: Vec<SortRequest> = (0..6u64)
+        .map(|s| SortRequest::new(generate_i64(20_000, Distribution::Uniform, s, 1)))
+        .collect();
+    let mut stream = svc.submit_batch_requests(requests).stream();
+    let _first = stream.next().expect("one result").expect("job ok");
+    drop(stream); // abandon the rest mid-flight
+    svc.drain();
+    assert_eq!(svc.metrics().counter("jobs.completed"), 6, "abandoned jobs still run");
+    // The submitted/completed batch counter pair stays in lockstep even for
+    // abandoned streams.
+    assert_eq!(svc.metrics().counter("batch.submitted"), 1);
+    assert_eq!(svc.metrics().counter("batch.completed"), 1);
+}
