@@ -312,7 +312,10 @@ impl TunerWorker {
         let required = seed_fit * (1.0 - self.policy.min_improvement_pct.max(0.0) / 100.0);
         if result.best_genome != seed_genome && result.best_fitness < required {
             let improvement_pct = (seed_fit - result.best_fitness) / seed_fit * 100.0;
-            self.cache.put(state.n_hint, label, result.best);
+            // Record the measured fitness with the entry: it is what makes
+            // cross-cache merges (router ↔ shard broadcast, persisted
+            // restore) improvement-aware instead of last-writer-wins.
+            self.cache.put_with_fitness(state.n_hint, label, result.best, result.best_fitness);
             self.metrics.incr("tuner.publishes");
             self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
             crate::log_info!(

@@ -19,9 +19,57 @@ fn dist_of(args: &Args) -> Result<Distribution> {
     Distribution::parse(name).ok_or_else(|| anyhow::anyhow!("unknown distribution {name:?}"))
 }
 
-fn dtype_of(args: &Args) -> Result<Dtype> {
-    let name = args.str_or("dtype", "i64");
+fn dtype_of_name(name: &str) -> Result<Dtype> {
     Dtype::parse(name).ok_or_else(|| anyhow::anyhow!("unknown dtype {name:?} (i64|i32|u64|f64)"))
+}
+
+/// Override an [`AutotunePolicy`](crate::autotune::AutotunePolicy)'s knobs
+/// from CLI flags, falling back to
+/// `base` for anything not given. Every path that builds a policy from
+/// flags goes through here — single-process `serve --autotune`, the
+/// sharded router, and the `shard-worker` child — so a knob added to one
+/// path cannot silently diverge from the others (only the `base` defaults
+/// intentionally differ per path).
+fn autotune_policy_from(
+    args: &Args,
+    base: crate::autotune::AutotunePolicy,
+) -> Result<crate::autotune::AutotunePolicy> {
+    let persist_path = args
+        .get("cache-file")
+        .map(std::path::PathBuf::from)
+        .or_else(|| base.persist_path.clone());
+    Ok(crate::autotune::AutotunePolicy {
+        min_observations: args.u64_or("min-obs", base.min_observations)?,
+        cooldown_observations: args.u64_or("cooldown", base.cooldown_observations)?,
+        retained_sample_cap: args.usize_or("sample-cap", base.retained_sample_cap)?,
+        generations_per_cycle: args.usize_or("tuner-generations", base.generations_per_cycle)?,
+        population: args.usize_or("tuner-population", base.population)?,
+        max_cpu_share: args.f64_or("cpu-share", base.max_cpu_share)?,
+        min_improvement_pct: args.f64_or("min-improvement", base.min_improvement_pct)?,
+        sample_every: args.u64_or("sample-every", base.sample_every)?,
+        persist_path,
+        ..base
+    })
+}
+
+/// The observation-eager base the `serve` demo/smoke paths start from.
+/// Production defaults stay for the noise margin (`min_improvement_pct`)
+/// and the sampling/budget knobs — the CLI must not silently inherit the
+/// test-only 0% margin of `AutotunePolicy::quick()`, which would let
+/// timing noise churn (and persist) the cache; the CI smokes pass
+/// `--min-improvement 0` explicitly.
+fn demo_autotune_base() -> crate::autotune::AutotunePolicy {
+    crate::autotune::AutotunePolicy {
+        min_observations: 8,
+        cooldown_observations: 2,
+        population: 8,
+        max_cpu_share: 0.5,
+        ..crate::autotune::AutotunePolicy::default()
+    }
+}
+
+fn dtype_of(args: &Args) -> Result<Dtype> {
+    dtype_of_name(args.str_or("dtype", "i64"))
 }
 
 fn threads_of(args: &Args) -> Result<usize> {
@@ -288,13 +336,22 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
 /// scratch reuse) and the p50/p99/jobs-per-sec report is printed. With
 /// `--autotune`, the service owns an online tuner: repeated batches of one
 /// workload shape are submitted and the background GA refines the
-/// dtype-tagged fingerprint-keyed cache while traffic flows.
+/// dtype-tagged fingerprint-keyed cache while traffic flows. With
+/// `--shards N` (N ≥ 2), the service runs cross-process: a router spawns N
+/// `shard-worker` child processes and routes mixed-dtype batches across
+/// them; combined with `--autotune`, each shard tunes locally and the run
+/// fails unless every shard served jobs and at least one cross-shard cache
+/// broadcast occurred (the CI sharded smoke).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.usize_or("jobs", 16)?;
     let n = args.usize_or("n", 1_000_000)?;
     let workers = args.usize_or("workers", 2)?;
     let threads = threads_of(args)?;
     let dtype = dtype_of(args)?;
+    let shards = args.usize_or("shards", 1)?;
+    if shards > 1 {
+        return serve_sharded(args, jobs, n, workers, threads, shards);
+    }
     if args.has("autotune") {
         return serve_autotune(args, jobs, n, workers, threads, dtype);
     }
@@ -352,6 +409,160 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `evosort serve --shards N` — the cross-process deployment demo/smoke.
+///
+/// Spawns a [`ShardedService`](crate::coordinator::ShardedService) (router +
+/// N `shard-worker` child processes) and pushes rounds of mixed-dtype
+/// batches through it. Exits non-zero unless every shard completed jobs;
+/// with `--autotune`, additionally requires at least one cross-shard tuning
+/// cache broadcast (a class tuned on one shard reached the others) — CI
+/// uses that combination as the sharded smoke test.
+#[cfg(unix)]
+fn serve_sharded(
+    args: &Args,
+    jobs: usize,
+    n: usize,
+    workers: usize,
+    threads: usize,
+    shards: usize,
+) -> Result<()> {
+    use crate::autotune::AutotunePolicy;
+    use crate::coordinator::{ShardSpec, ShardedService};
+
+    // Same flag set as `serve --autotune`, forwarded to every shard. The
+    // persist path is intentionally stripped (shards sharing one file would
+    // race; the router's merged cache is the service-level view).
+    let autotune = if args.has("autotune") {
+        let policy = autotune_policy_from(args, demo_autotune_base())?;
+        Some(AutotunePolicy { persist_path: None, ..policy })
+    } else {
+        None
+    };
+    let autotuned = autotune.is_some();
+    let spec = ShardSpec {
+        shards,
+        workers_per_shard: workers,
+        sort_threads: (threads / (workers * shards).max(1)).max(1),
+        autotune,
+        ..ShardSpec::default()
+    };
+    let svc = ShardedService::spawn(spec)?;
+    let rounds = args.usize_or("rounds", if autotuned { 40 } else { 1 })?;
+    let seed = args.u64_or("seed", 42)?;
+    // An explicit --dtype pins every job to that dtype (matching the
+    // single-process serve paths); the default is a mixed-dtype cycle.
+    let forced_dtype = args.get("dtype").map(dtype_of_name).transpose()?;
+    let dtype_label =
+        forced_dtype.map(|d| d.name().to_string()).unwrap_or_else(|| "mixed-dtype".into());
+    println!(
+        "sharded service: {shards} shard processes x {workers} workers, up to {rounds} \
+         rounds of {jobs} {dtype_label} jobs of {} elements",
+        fmt_count(n)
+    );
+    let dtypes = Dtype::all();
+    for round in 0..rounds {
+        let requests: Vec<SortRequest> = (0..jobs)
+            .map(|i| {
+                let dtype = forced_dtype.unwrap_or(dtypes[i % dtypes.len()]);
+                let job_seed = seed ^ (round * jobs + i) as u64;
+                let data = data::generate_i64(n, Distribution::Uniform, job_seed, threads);
+                SortRequest::from_payload(SortPayload::from_i64_values(data, dtype))
+            })
+            .collect();
+        let report = svc.submit_batch_requests(requests).wait();
+        anyhow::ensure!(report.stats.invalid == 0, "{} jobs invalid", report.stats.invalid);
+        anyhow::ensure!(report.stats.failed == 0, "{} jobs failed", report.stats.failed);
+        println!(
+            "round {:>2}: {}",
+            round + 1,
+            crate::coordinator::pipeline::batch_summary_line(&report)
+        );
+        let metrics = svc.metrics();
+        let all_active =
+            (0..shards).all(|s| metrics.counter(&format!("shard.{s}.jobs.completed")) > 0);
+        if all_active && (!autotuned || metrics.counter("shard.cache.broadcasts") > 0) {
+            break;
+        }
+    }
+    if autotuned {
+        // Grace period: in-flight tuner cycles publish asynchronously; the
+        // first publication triggers the first broadcast.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while svc.metrics().counter("shard.cache.broadcasts") == 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+    }
+    println!("\nmetrics:\n{}", svc.metrics().report());
+    for s in 0..shards {
+        let completed = svc.metrics().counter(&format!("shard.{s}.jobs.completed"));
+        println!("shard {s}: {completed} jobs completed");
+        anyhow::ensure!(completed > 0, "sharded smoke failed: shard {s} served no jobs");
+    }
+    if autotuned {
+        let broadcasts = svc.metrics().counter("shard.cache.broadcasts");
+        println!("cross-shard cache broadcasts: {broadcasts}");
+        anyhow::ensure!(
+            broadcasts > 0,
+            "sharded smoke failed: no cross-shard cache broadcast occurred"
+        );
+        println!("merged tuned classes at the router: {}", svc.cache().len());
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn serve_sharded(
+    _args: &Args,
+    _jobs: usize,
+    _n: usize,
+    _workers: usize,
+    _threads: usize,
+    _shards: usize,
+) -> Result<()> {
+    bail!("serve --shards requires Unix-domain sockets (unix-only)")
+}
+
+/// `evosort shard-worker` — internal: the child-process side of
+/// `serve --shards N`. Connects back to the router's Unix socket and serves
+/// routed jobs with a local `SortService` until told to shut down. Spawned
+/// by [`ShardRouter`](crate::coordinator::ShardRouter); not meant for direct
+/// use.
+pub fn cmd_shard_worker(args: &Args) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use crate::coordinator::shard::worker::{self, ShardWorkerConfig};
+
+        let Some(socket) = args.get("socket") else {
+            bail!("shard-worker requires --socket (it is spawned by `serve --shards N`)");
+        };
+        // Production-default base: the router forwards every knob it wants
+        // explicitly, so unforwarded knobs get library defaults here.
+        let autotune = if args.has("autotune") {
+            Some(autotune_policy_from(args, crate::autotune::AutotunePolicy::default())?)
+        } else {
+            None
+        };
+        let config = ShardWorkerConfig {
+            shard_id: args.usize_or("shard-id", 0)?,
+            service: ServiceConfig {
+                workers: args.usize_or("workers", 2)?,
+                sort_threads: args.usize_or("sort-threads", 2)?,
+                queue_capacity: args.usize_or("queue-capacity", 64)?,
+                autotune,
+            },
+            publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
+        };
+        worker::run(std::path::Path::new(socket), config)
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = args;
+        bail!("shard-worker requires Unix-domain sockets (unix-only)")
+    }
+}
+
 /// `evosort serve --autotune` — the online-adaptation demo/smoke: feed the
 /// service repeated batches of one workload shape until the background tuner
 /// publishes fingerprint-keyed parameters into the cache (bounded by
@@ -365,24 +576,13 @@ fn serve_autotune(
     threads: usize,
     dtype: Dtype,
 ) -> Result<()> {
-    use crate::autotune::AutotunePolicy;
-
-    // Demo-eager observation thresholds, but production defaults for the
-    // noise margin (`..Default::default()`, min_improvement_pct 2%): the
-    // CLI must not silently inherit the test-only 0% margin of `quick()`,
-    // which would let timing noise churn (and persist) the cache. The CI
-    // smoke passes `--min-improvement 0` explicitly.
-    let policy = AutotunePolicy {
-        min_observations: args.usize_or("min-obs", 8)? as u64,
-        cooldown_observations: 2,
-        retained_sample_cap: args.usize_or("sample-cap", 16_384)?,
-        generations_per_cycle: args.usize_or("tuner-generations", 2)?,
-        population: args.usize_or("tuner-population", 8)?,
-        max_cpu_share: args.f64_or("cpu-share", 0.5)?,
-        min_improvement_pct: args.f64_or("min-improvement", 2.0)?,
-        persist_path: args.get("cache-file").map(std::path::PathBuf::from),
-        ..AutotunePolicy::default()
-    };
+    // Demo-eager observation thresholds (see `demo_autotune_base`), but
+    // production defaults for the noise margin (min_improvement_pct 2%):
+    // the CLI must not silently inherit the test-only 0% margin of
+    // `AutotunePolicy::quick()`, which would let timing noise churn (and
+    // persist) the cache. The CI smoke passes `--min-improvement 0`
+    // explicitly.
+    let policy = autotune_policy_from(args, demo_autotune_base())?;
     let rounds = args.usize_or("rounds", 12)?;
     let dist = dist_of(args)?;
     let seed = args.u64_or("seed", 42)?;

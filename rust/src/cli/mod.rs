@@ -9,9 +9,13 @@
 //!   pipeline  the paper's master pipeline (Algorithm 1) over several sizes
 //!   symbolic  symbolic-model parameters / fit from a GA sweep (§7)
 //!   repro     regenerate a paper table (--table 1|2)
-//!   serve     run the sort service demo (concurrent jobs + metrics)
+//!   serve     run the sort service demo (concurrent jobs + metrics;
+//!             --shards N runs it cross-process)
 //!   info      platform, artifact and configuration report
 //! ```
+//!
+//! (`shard-worker` also exists as a hidden subcommand: the child-process
+//! side of `serve --shards N`, spawned by the shard router.)
 
 pub mod commands;
 
@@ -134,6 +138,11 @@ COMMANDS
             (online tuner: repeated batches of one shape; the background GA
             refines fingerprint-keyed params in the tuning cache while
             traffic flows, and the run fails if nothing was learned)
+            [--shards N] (N >= 2: cross-process service — a router spawns N
+            shard-worker processes over Unix sockets and routes mixed-dtype
+            batches across them; with --autotune each shard tunes locally
+            and caches sync through the router, and the run fails unless
+            every shard served jobs and a cross-shard broadcast occurred)
   info      (platform, threads, artifact status)
 
 FLAGS common: --threads N (default: all cores), --seed S, --dist DIST

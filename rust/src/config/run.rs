@@ -24,6 +24,7 @@
 //! sort_threads   = 4
 //! queue_capacity = 64
 //! autotune       = false   # online fingerprint-keyed GA refinement
+//! shards         = 1       # >= 2: cross-process (router + worker processes)
 //! ```
 
 use anyhow::{bail, Result};
@@ -52,15 +53,36 @@ pub struct ServiceSettings {
     /// Attach the online autotuner (fingerprint observations + background
     /// GA refinement) with default policy knobs.
     pub autotune: bool,
+    /// Worker **processes**: `1` serves in-process, `>= 2` spawns a shard
+    /// router with that many `shard-worker` children (each of which gets
+    /// `workers` pool threads).
+    pub shards: usize,
 }
 
 impl ServiceSettings {
+    /// Per-process service configuration (one shard's worth).
     pub fn to_config(&self) -> ServiceConfig {
         ServiceConfig {
             workers: self.workers,
             sort_threads: self.sort_threads,
             queue_capacity: self.queue_capacity,
             autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
+        }
+    }
+
+    /// Deployment-level spec for [`ShardedService::spawn`] — routes
+    /// in-process when `shards <= 1`, cross-process otherwise.
+    ///
+    /// [`ShardedService::spawn`]: crate::coordinator::ShardedService::spawn
+    #[cfg(unix)]
+    pub fn to_shard_spec(&self) -> crate::coordinator::ShardSpec {
+        crate::coordinator::ShardSpec {
+            shards: self.shards.max(1),
+            workers_per_shard: self.workers,
+            sort_threads: self.sort_threads,
+            queue_capacity: self.queue_capacity,
+            autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
+            ..crate::coordinator::ShardSpec::default()
         }
     }
 }
@@ -123,6 +145,7 @@ impl RunConfig {
             sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
             queue_capacity: doc.count("service", "queue_capacity", 64)?.max(1),
             autotune: doc.bool("service", "autotune", false)?,
+            shards: doc.count("service", "shards", 1)?.max(1),
         };
 
         Ok(RunConfig { threads, pipeline, service })
@@ -166,12 +189,27 @@ queue_capacity = 16
         assert_eq!(rc.service.workers, 4);
         assert_eq!(rc.service.queue_capacity, 16);
         assert!(!rc.service.autotune, "autotune defaults off");
+        assert_eq!(rc.service.shards, 1, "sharding defaults off");
         let sc = rc.service.to_config();
         assert_eq!(sc.workers, 4);
         assert!(sc.autotune.is_none());
         // Opting in yields a default policy.
         let rc = parse("[service]\nautotune = true").unwrap();
         assert!(rc.service.to_config().autotune.is_some());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn shards_flow_into_the_shard_spec() {
+        let rc = parse("[service]\nshards = 3\nworkers = 2\nautotune = true").unwrap();
+        assert_eq!(rc.service.shards, 3);
+        let spec = rc.service.to_shard_spec();
+        assert_eq!(spec.shards, 3);
+        assert_eq!(spec.workers_per_shard, 2);
+        assert!(spec.autotune.is_some());
+        // shards = 0 clamps to the in-process path.
+        let rc = parse("[service]\nshards = 0").unwrap();
+        assert_eq!(rc.service.shards, 1);
     }
 
     #[test]

@@ -1,12 +1,26 @@
 //! Metrics registry for the sort service: lock-free counters, Welford-backed
 //! latency series, gauges, and bounded sample windows for percentile queries
 //! (p50/p99 batch latency), all `Send + Sync`.
+//!
+//! Every registry lock is **poison-tolerant**: a worker thread that panics
+//! while holding one (or while the registry is mid-update anywhere on its
+//! stack) must not take reporting down with it — the maps hold counters and
+//! sample windows, every update of which is valid at any intermediate
+//! state, so recovering the guard from a [`PoisonError`] is always safe.
+//! Before this, one panicking job could cascade `PoisonError` unwraps
+//! through every later `incr`/`report` call in the process.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::util::stats::Welford;
+
+/// Lock a registry mutex, recovering the guard if a previous holder
+/// panicked (see the module docs for why this is safe here).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// How many recent samples a percentile window retains per series.
 const SAMPLE_WINDOW: usize = 8192;
@@ -80,19 +94,25 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, delta: u64) {
-        let mut map = self.counters.lock().unwrap();
+        let mut map = locked(&self.counters);
         map.entry(name.to_string())
             .or_insert_with(|| AtomicU64::new(0))
             .fetch_add(delta, Ordering::Relaxed);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        locked(&self.counters).get(name).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Snapshot of every counter, sorted by name — the shard workers'
+    /// telemetry frames ship this to the router for per-shard aggregation.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let map = locked(&self.counters);
+        let mut out: Vec<(String, u64)> =
+            map.iter().map(|(k, c)| (k.clone(), c.load(Ordering::Relaxed))).collect();
+        drop(map);
+        out.sort();
+        out
     }
 
     /// `a / (a + b)` over two counters, `None` before any observation —
@@ -110,38 +130,38 @@ impl Metrics {
 
     /// Record a latency observation (seconds).
     pub fn observe(&self, name: &str, secs: f64) {
-        let mut map = self.latencies.lock().unwrap();
+        let mut map = locked(&self.latencies);
         map.entry(name.to_string()).or_insert_with(Welford::new).push(secs);
     }
 
     /// Snapshot of one latency series.
     pub fn latency(&self, name: &str) -> Option<Welford> {
-        self.latencies.lock().unwrap().get(name).copied()
+        locked(&self.latencies).get(name).copied()
     }
 
     /// Set a gauge (latest-value metric, e.g. `batch.jobs_per_sec`).
     pub fn set_gauge(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        locked(&self.gauges).insert(name.to_string(), value);
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.gauges.lock().unwrap().get(name).copied()
+        locked(&self.gauges).get(name).copied()
     }
 
     /// Record an observation into a bounded percentile window.
     pub fn observe_sample(&self, name: &str, value: f64) {
-        self.samples.lock().unwrap().entry(name.to_string()).or_default().push(value);
+        locked(&self.samples).entry(name.to_string()).or_default().push(value);
     }
 
     /// Nearest-rank percentile (`q` in [0, 100]) over a sample window.
     pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
-        self.samples.lock().unwrap().get(name).and_then(|w| w.percentile(q))
+        locked(&self.samples).get(name).and_then(|w| w.percentile(q))
     }
 
     /// Render a human-readable report (CLI `info`/`serve` output).
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let counters = self.counters.lock().unwrap();
+        let counters = locked(&self.counters);
         let mut names: Vec<&String> = counters.keys().collect();
         names.sort();
         for name in names {
@@ -150,7 +170,8 @@ impl Metrics {
                 counters[name].load(Ordering::Relaxed)
             ));
         }
-        let lats = self.latencies.lock().unwrap();
+        drop(counters);
+        let lats = locked(&self.latencies);
         let mut names: Vec<&String> = lats.keys().collect();
         names.sort();
         for name in names {
@@ -164,13 +185,15 @@ impl Metrics {
                 w.stddev()
             ));
         }
-        let gauges = self.gauges.lock().unwrap();
+        drop(lats);
+        let gauges = locked(&self.gauges);
         let mut names: Vec<&String> = gauges.keys().collect();
         names.sort();
         for name in names {
             out.push_str(&format!("gauge {name} = {:.6}\n", gauges[name]));
         }
-        let samples = self.samples.lock().unwrap();
+        drop(gauges);
+        let samples = locked(&self.samples);
         let mut names: Vec<&String> = samples.keys().collect();
         names.sort();
         for name in names {
@@ -293,6 +316,53 @@ mod tests {
         assert_eq!(w.total(), (SAMPLE_WINDOW + 100) as u64);
         // Oldest 100 samples evicted: the minimum retained value is >= 100.
         assert!(w.percentile(0.0).unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn poisoned_locks_do_not_sink_the_registry() {
+        // Regression test: a worker panicking while holding a registry lock
+        // used to poison it, cascading PoisonError panics through every
+        // later incr/observe/report in the process. Deliberately poison
+        // every inner mutex, then verify the registry still works.
+        let m = Metrics::new();
+        m.incr("jobs");
+        m.observe("lat", 0.5);
+        m.set_gauge("g", 1.0);
+        m.observe_sample("s", 1.0);
+        fn poison<T>(mutex: &Mutex<T>) {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = locked(mutex);
+                panic!("worker dies holding the metrics lock");
+            }));
+            assert!(caught.is_err());
+            assert!(mutex.lock().is_err(), "the mutex must actually be poisoned");
+        }
+        poison(&m.counters);
+        poison(&m.latencies);
+        poison(&m.gauges);
+        poison(&m.samples);
+        // Writes and reads still land after the poisoning.
+        m.incr("jobs");
+        assert_eq!(m.counter("jobs"), 2);
+        m.observe("lat", 1.5);
+        assert_eq!(m.latency("lat").unwrap().count(), 2);
+        m.set_gauge("g", 2.0);
+        assert_eq!(m.gauge("g"), Some(2.0));
+        m.observe_sample("s", 3.0);
+        assert_eq!(m.percentile("s", 100.0), Some(3.0));
+        assert_eq!(m.counters_snapshot(), vec![("jobs".to_string(), 2)]);
+        assert!(m.report().contains("counter jobs = 2"));
+    }
+
+    #[test]
+    fn counters_snapshot_sorted() {
+        let m = Metrics::new();
+        m.incr("b.two");
+        m.add("a.one", 3);
+        assert_eq!(
+            m.counters_snapshot(),
+            vec![("a.one".to_string(), 3), ("b.two".to_string(), 1)]
+        );
     }
 
     #[test]

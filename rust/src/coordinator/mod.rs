@@ -1,11 +1,16 @@
 //! Layer-3 coordination: the master pipeline (Algorithm 1), the long-running
 //! sort service (typed async job API: dtype-generic requests, non-blocking
-//! tickets, result streaming, backpressure + metrics), and the tuning cache.
+//! tickets, result streaming, backpressure + metrics), the tuning cache, and
+//! the cross-process sharded deployment layer ([`shard`]: a router that
+//! spreads the same typed API over N `evosort shard-worker` OS processes on
+//! a Unix-socket frame transport).
 
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
 pub mod service;
+#[cfg(unix)]
+pub mod shard;
 pub mod ticket;
 pub mod tuning_cache;
 
@@ -15,11 +20,7 @@ pub use request::SortRequest;
 pub use service::{
     BatchReport, BatchStats, BatchTicket, DtypeStats, ResultStream, ServiceConfig, SortService,
 };
+#[cfg(unix)]
+pub use shard::{ShardRouter, ShardSpec, ShardedService};
 pub use ticket::{JobError, JobResult, SortOutput, Ticket};
-pub use tuning_cache::TuningCache;
-
-// Deprecated pre-dtype surface — kept re-exported for one release so
-// existing `use evosort::coordinator::{SortJob, JobHandle, ...}` call sites
-// keep compiling (each use still warns at the caller).
-#[allow(deprecated)]
-pub use service::{BatchHandle, JobHandle, SortJob, SortOutcome};
+pub use tuning_cache::{CacheEntry, TuningCache};

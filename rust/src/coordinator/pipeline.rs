@@ -8,7 +8,7 @@
 //!
 //! [`BatchWorkload`] models the service-traffic shape (many independent jobs
 //! of mixed sizes and distributions) and drives it through
-//! [`SortService::submit_batch`](crate::coordinator::SortService::submit_batch),
+//! [`SortService::submit_batch_requests`](crate::coordinator::SortService::submit_batch_requests),
 //! reporting jobs/sec and p50/p99 latency.
 
 use crate::coordinator::request::SortRequest;

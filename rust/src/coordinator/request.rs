@@ -2,8 +2,8 @@
 //! accepts.
 //!
 //! A request wraps a [`SortPayload`] (any supported [`SortKey`] dtype) plus
-//! the job knobs the old `SortJob` carried: a human-readable distribution
-//! hint, an optional explicit parameter override, and the validation switch.
+//! the per-job knobs: a human-readable distribution hint, an optional
+//! explicit parameter override, and the validation switch.
 //! Construction is typed ([`SortRequest::new`]); everything downstream —
 //! queueing, parameter resolution, execution — is dtype-erased, so one
 //! service instance serves mixed i64/i32/u64/f64 traffic.

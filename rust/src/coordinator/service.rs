@@ -24,8 +24,10 @@
 //!   [`ResultStream`], yielding completed jobs in submission order as
 //!   workers finish them — no whole-batch barrier).
 //!
-//! The pre-dtype `SortJob`/`JobHandle`/`BatchHandle` surface survives one
-//! release as a thin deprecated shim over the typed API.
+//! With `shards > 1` the same `Ticket`/`BatchTicket` surface is served by
+//! the cross-process [`shard`](crate::coordinator::shard) layer instead of
+//! the in-process pool; the channel/slot contracts here are the seam it
+//! plugs into.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -246,6 +248,28 @@ impl BatchTicket {
         BatchReport { outcomes, wall_secs, stats }
     }
 
+    /// Cross-process constructor: the shard router feeds the same
+    /// `(index, result)` channel contract the in-process pool uses, so
+    /// `wait`/`stream` semantics are identical whichever side produced the
+    /// results.
+    pub(crate) fn from_parts(
+        total: usize,
+        started: Instant,
+        rx: mpsc::Receiver<(usize, JobResult)>,
+        metrics: Arc<Metrics>,
+        cache_hits: Arc<AtomicU64>,
+        cache_misses: Arc<AtomicU64>,
+    ) -> BatchTicket {
+        BatchTicket {
+            total,
+            started,
+            rx,
+            completion: BatchCompletion { metrics, published: false },
+            cache_hits,
+            cache_misses,
+        }
+    }
+
     /// Consume the batch incrementally: an iterator that yields each job's
     /// result **in submission order, as workers finish them** — result `k`
     /// is delivered as soon as jobs `0..=k` are done, while later jobs are
@@ -326,7 +350,9 @@ impl ResultStream {
     }
 }
 
-fn dtype_counter(d: Dtype) -> &'static str {
+/// Per-dtype completion counter name (shared with the shard router, which
+/// mirrors the in-process accounting for cross-process jobs).
+pub(crate) fn dtype_counter(d: Dtype) -> &'static str {
     match d {
         Dtype::I64 => "jobs.dtype.i64",
         Dtype::I32 => "jobs.dtype.i32",
@@ -384,7 +410,7 @@ fn execute_request(
 }
 
 /// Dtype-tagged fingerprint label of a payload (the tuning-cache key).
-fn payload_label(payload: &SortPayload) -> String {
+pub(crate) fn payload_label(payload: &SortPayload) -> String {
     match payload {
         SortPayload::I64(v) => Fingerprint::of_keys(v.as_slice()).label(),
         SortPayload::I32(v) => Fingerprint::of_keys(v.as_slice()).label(),
@@ -714,111 +740,6 @@ impl SortService {
     /// returning `true` if the service went idle in time.
     pub fn drain_timeout(&self, timeout: Duration) -> bool {
         self.pool.wait_idle_timeout(timeout)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Deprecated pre-dtype shim (one release of compile compatibility).
-// ---------------------------------------------------------------------------
-
-/// Pre-dtype i64 job description.
-#[deprecated(since = "0.2.0", note = "use `SortRequest::new` (typed, any SortKey dtype)")]
-pub struct SortJob {
-    pub data: Vec<i64>,
-    /// Caller-declared workload tag — a hint only (see [`SortRequest::dist`]).
-    pub dist: String,
-    /// Explicit parameter override (skips cache + model).
-    pub params: Option<SortParams>,
-    /// Validate the output before returning.
-    pub validate: bool,
-}
-
-#[allow(deprecated)]
-impl SortJob {
-    pub fn new(data: Vec<i64>) -> Self {
-        SortJob { data, dist: "uniform".into(), params: None, validate: true }
-    }
-
-    fn into_request(self) -> SortRequest {
-        let SortJob { data, dist, params, validate } = self;
-        SortRequest { payload: SortPayload::I64(data), dist, params, validate }
-    }
-}
-
-/// Pre-dtype completed-job shape.
-#[deprecated(since = "0.2.0", note = "use `SortOutput` (dtype-erased payload)")]
-#[derive(Debug)]
-pub struct SortOutcome {
-    pub id: u64,
-    pub data: Vec<i64>,
-    pub params: SortParams,
-    pub secs: f64,
-    pub valid: bool,
-}
-
-/// Pre-dtype blocking job handle.
-#[deprecated(since = "0.2.0", note = "use `Ticket` (non-blocking: try_result/wait_timeout/cancel)")]
-pub struct JobHandle {
-    pub id: u64,
-    ticket: Ticket,
-}
-
-#[allow(deprecated)]
-impl JobHandle {
-    /// Block until the job completes. Panics if the worker was lost — the
-    /// historical behaviour; [`Ticket::wait`] returns an error instead.
-    pub fn wait(self) -> SortOutcome {
-        match self.ticket.wait() {
-            Ok(out) => SortOutcome {
-                id: out.id,
-                params: out.params,
-                secs: out.secs,
-                valid: out.valid,
-                data: out.payload.into_vec::<i64>().expect("legacy submissions are i64"),
-            },
-            Err(e) => panic!("service dropped job reply: {e}"),
-        }
-    }
-}
-
-/// Pre-dtype batch handle.
-#[deprecated(since = "0.2.0", note = "use `BatchTicket` (wait() or stream())")]
-pub struct BatchHandle {
-    inner: BatchTicket,
-}
-
-#[allow(deprecated)]
-impl BatchHandle {
-    pub fn len(&self) -> usize {
-        self.inner.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.inner.is_empty()
-    }
-
-    /// Block until every job in the batch completes.
-    pub fn wait(self) -> BatchReport {
-        self.inner.wait()
-    }
-}
-
-#[allow(deprecated)]
-impl SortService {
-    /// Submit an i64 job (pre-dtype API).
-    #[deprecated(since = "0.2.0", note = "use `submit_request` with a `SortRequest`")]
-    pub fn submit(&self, job: SortJob) -> JobHandle {
-        let ticket = self.submit_request(job.into_request());
-        JobHandle { id: ticket.id(), ticket }
-    }
-
-    /// Submit a batch of i64 jobs (pre-dtype API).
-    #[deprecated(since = "0.2.0", note = "use `submit_batch_requests` with `SortRequest`s")]
-    pub fn submit_batch(&self, jobs: Vec<SortJob>) -> BatchHandle {
-        BatchHandle {
-            inner: self
-                .submit_batch_requests(jobs.into_iter().map(SortJob::into_request).collect()),
-        }
     }
 }
 
@@ -1240,26 +1161,4 @@ mod tests {
         assert_eq!(report.stats.per_dtype[0].dtype, Dtype::F64);
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_shim_still_compiles_and_sorts() {
-        // One release of compile compatibility for pre-dtype callers.
-        let svc = service();
-        let data = generate_i64(60_000, Distribution::Uniform, 21, 2);
-        let mut expect = data.clone();
-        expect.sort_unstable();
-        let mut job = SortJob::new(data);
-        job.dist = "uniform".to_string();
-        let out = svc.submit(job).wait();
-        assert!(out.valid);
-        assert_eq!(out.data, expect);
-        let jobs: Vec<SortJob> = (0..4u64)
-            .map(|s| SortJob::new(generate_i64(10_000, Distribution::Uniform, s, 2)))
-            .collect();
-        let handle = svc.submit_batch(jobs);
-        assert_eq!(handle.len(), 4);
-        let report = handle.wait();
-        assert_eq!(report.stats.jobs, 4);
-        assert_eq!(report.stats.invalid, 0);
-    }
 }

@@ -1,0 +1,123 @@
+//! Cross-process sharding: the same typed async service API
+//! ([`SortRequest`] → [`Ticket`] / [`BatchTicket`]) served by N `evosort
+//! shard-worker` OS processes behind a [`ShardRouter`], over a
+//! length-prefixed frame protocol on Unix-domain sockets.
+//!
+//! Layering:
+//!
+//! * [`protocol`] — the wire format (hand-rolled little-endian frames; the
+//!   tuning cache travels as its versioned v2 text interchange);
+//! * [`worker`] — the child-process side: one [`SortService`] per shard,
+//!   autotuner included, publishing its cache and counter telemetry back;
+//! * [`router`] — the parent side: least-loaded dispatch with a bounded
+//!   per-shard in-flight window (queued jobs reroute on shard death,
+//!   in-flight ones resolve `Err(WorkerLost)`, the shard respawns),
+//!   improvement-aware cache merging with re-broadcast, and per-shard →
+//!   service-level metrics aggregation;
+//! * [`ShardedService`] — the front door: routes in-process when
+//!   `shards <= 1` so the single-process path keeps zero sharding overhead.
+//!
+//! [`SortRequest`]: crate::coordinator::SortRequest
+//! [`Ticket`]: crate::coordinator::Ticket
+//! [`BatchTicket`]: crate::coordinator::BatchTicket
+//! [`SortService`]: crate::coordinator::SortService
+
+pub mod protocol;
+pub mod router;
+pub mod worker;
+
+pub use router::{ShardRouter, ShardSpec};
+pub use worker::ShardWorkerConfig;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::SortRequest;
+use crate::coordinator::service::{BatchTicket, ServiceConfig, SortService};
+use crate::coordinator::ticket::Ticket;
+use crate::coordinator::tuning_cache::TuningCache;
+
+/// A service that is either in-process ([`SortService`]) or sharded across
+/// worker processes ([`ShardRouter`]) behind one submission surface.
+/// `Ticket`/`BatchTicket`/`ResultStream` semantics are identical either way.
+pub enum ShardedService {
+    /// `shards <= 1`: the plain in-process service, zero sharding overhead.
+    Local(SortService),
+    /// `shards >= 2`: router + child processes.
+    Sharded(ShardRouter),
+}
+
+impl ShardedService {
+    /// Build from a spec: in-process when `spec.shards <= 1`, cross-process
+    /// otherwise.
+    pub fn spawn(spec: ShardSpec) -> Result<ShardedService> {
+        if spec.shards <= 1 {
+            Ok(ShardedService::Local(SortService::new(ServiceConfig {
+                workers: spec.workers_per_shard,
+                sort_threads: spec.sort_threads,
+                queue_capacity: spec.queue_capacity,
+                autotune: spec.autotune,
+            })))
+        } else {
+            Ok(ShardedService::Sharded(ShardRouter::spawn(spec)?))
+        }
+    }
+
+    /// Worker processes serving traffic (1 for the in-process path).
+    pub fn shards(&self) -> usize {
+        match self {
+            ShardedService::Local(_) => 1,
+            ShardedService::Sharded(router) => router.shards(),
+        }
+    }
+
+    pub fn submit_request(&self, req: SortRequest) -> Ticket {
+        match self {
+            ShardedService::Local(svc) => svc.submit_request(req),
+            ShardedService::Sharded(router) => router.submit_request(req),
+        }
+    }
+
+    pub fn submit_batch_requests(&self, requests: Vec<SortRequest>) -> BatchTicket {
+        match self {
+            ShardedService::Local(svc) => svc.submit_batch_requests(requests),
+            ShardedService::Sharded(router) => router.submit_batch_requests(requests),
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        match self {
+            ShardedService::Local(svc) => svc.metrics(),
+            ShardedService::Sharded(router) => router.metrics(),
+        }
+    }
+
+    /// The service-level tuning cache (the router's merged view when
+    /// sharded).
+    pub fn cache(&self) -> &Arc<TuningCache> {
+        match self {
+            ShardedService::Local(svc) => svc.cache(),
+            ShardedService::Sharded(router) => router.cache(),
+        }
+    }
+
+    /// Bounded drain: `true` once nothing is queued or in flight.
+    pub fn drain_timeout(&self, timeout: Duration) -> bool {
+        match self {
+            ShardedService::Local(svc) => svc.drain_timeout(timeout),
+            ShardedService::Sharded(router) => router.drain_timeout(timeout),
+        }
+    }
+
+    /// The router, when sharded (failover tests reach `kill_shard` etc.
+    /// through this).
+    pub fn router(&self) -> Option<&ShardRouter> {
+        match self {
+            ShardedService::Local(_) => None,
+            ShardedService::Sharded(router) => Some(router),
+        }
+    }
+}

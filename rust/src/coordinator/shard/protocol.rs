@@ -1,0 +1,515 @@
+//! The shard wire protocol: length-prefixed binary frames over Unix-domain
+//! sockets.
+//!
+//! The encoding is hand-rolled little-endian (no serde/bincode in the
+//! offline build): every frame is `[tag: u8][len: u64 LE][payload]`, with
+//! the payload layouts below. Writers use the `encode_*` helpers (each
+//! returns one complete frame, so a single `write_all` under the
+//! connection's writer mutex keeps frames from interleaving); readers use
+//! [`read_frame`], which treats any I/O error — including EOF from a dead
+//! peer — as a broken connection.
+//!
+//! Frames router → shard: [`Frame::Job`], [`Frame::CacheSync`],
+//! [`Frame::Shutdown`]. Frames shard → router: [`Frame::JobDone`],
+//! [`Frame::CachePublish`], [`Frame::Telemetry`]. Cache frames carry the
+//! versioned `# evosort-tuning-cache v2` text interchange format
+//! ([`TuningCache::to_text`](crate::coordinator::TuningCache::to_text)), so
+//! the wire and the disk speak the same dialect.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::request::SortRequest;
+use crate::coordinator::ticket::{JobError, JobResult, SortOutput};
+use crate::params::SortParams;
+use crate::sort::{Dtype, SortPayload};
+
+/// Upper bound on one frame's payload. A corrupt or hostile length prefix
+/// must not drive a giant allocation; 4 GiB still fits any realistic job
+/// this transport is asked to carry.
+pub const MAX_FRAME_BYTES: u64 = 1 << 32;
+
+/// Send-side bound for a *job* frame: stricter than [`MAX_FRAME_BYTES`] by a
+/// headroom margin so the shard's JobDone reply (same payload plus a few
+/// dozen bytes of metadata) can never trip the receive-side limit. The
+/// router checks this before dispatch — an oversized job must fail its own
+/// ticket, not poison-pill every shard it gets routed to.
+pub const MAX_JOB_FRAME_BYTES: u64 = MAX_FRAME_BYTES - 4096;
+
+const TAG_JOB: u8 = 1;
+const TAG_JOB_DONE: u8 = 2;
+const TAG_CACHE_PUBLISH: u8 = 3;
+const TAG_CACHE_SYNC: u8 = 4;
+const TAG_TELEMETRY: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+/// Cache accounting carried per completed job (the router mirrors the
+/// in-process `params.*` counters from these).
+pub const CACHE_FLAG_NONE: u8 = 0;
+pub const CACHE_FLAG_HIT: u8 = 1;
+pub const CACHE_FLAG_MISS: u8 = 2;
+
+/// A decoded frame (the read side; the write side uses `encode_*`).
+#[derive(Debug)]
+pub enum Frame {
+    /// Router → shard: execute one job. `id` is the router-level job id; the
+    /// decoded [`SortOutput`] in the matching [`Frame::JobDone`] carries it.
+    Job { id: u64, req: SortRequest },
+    /// Shard → router: one job resolved.
+    JobDone { id: u64, cache_flag: u8, result: JobResult },
+    /// Shard → router: the shard's tuning cache changed; here is all of it.
+    CachePublish { text: String },
+    /// Router → shard: the merged service-level cache; absorb it.
+    CacheSync { text: String },
+    /// Shard → router: counter snapshot for per-shard aggregation.
+    Telemetry { counters: Vec<(String, u64)> },
+    /// Router → shard: drain and exit.
+    Shutdown,
+}
+
+// --- primitive writers -----------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, x: u8) {
+    buf.push(x);
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_genes(buf: &mut Vec<u8>, p: &SortParams) {
+    for g in p.to_genes() {
+        buf.extend_from_slice(&g.to_le_bytes());
+    }
+}
+
+fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::I64 => 0,
+        Dtype::I32 => 1,
+        Dtype::U64 => 2,
+        Dtype::F64 => 3,
+    }
+}
+
+fn put_payload(buf: &mut Vec<u8>, p: &SortPayload) {
+    put_u8(buf, dtype_code(p.dtype()));
+    put_u64(buf, p.len() as u64);
+    match p {
+        SortPayload::I64(v) => {
+            buf.reserve(v.len() * 8);
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        SortPayload::I32(v) => {
+            buf.reserve(v.len() * 4);
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        SortPayload::U64(v) => {
+            buf.reserve(v.len() * 8);
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        SortPayload::F64(v) => {
+            buf.reserve(v.len() * 8);
+            for &x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+// --- primitive reader ------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else { bail!("truncated frame (wanted {n} bytes at {})", self.pos) };
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("non-utf8 string in frame")
+    }
+
+    fn genes(&mut self) -> Result<SortParams> {
+        let mut genes = [0i64; 5];
+        for g in genes.iter_mut() {
+            *g = i64::from_le_bytes(self.take(8)?.try_into().unwrap());
+        }
+        Ok(SortParams::from_genes(&genes))
+    }
+
+    fn payload(&mut self) -> Result<SortPayload> {
+        let code = self.u8()?;
+        let n = self.u64()? as usize;
+        let width = if code == 1 { 4 } else { 8 };
+        // Validate against the remaining bytes before allocating n elements.
+        let raw = self.take(n.checked_mul(width).context("payload length overflow")?)?;
+        Ok(match code {
+            0 => SortPayload::I64(
+                raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            1 => SortPayload::I32(
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            2 => SortPayload::U64(
+                raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            3 => SortPayload::F64(
+                raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            other => bail!("unknown payload dtype code {other}"),
+        })
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// --- frame encoders --------------------------------------------------------
+
+fn frame(tag: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + payload.len());
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode a [`Frame::Job`].
+pub fn encode_job(id: u64, req: &SortRequest) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + req.len() * 8);
+    put_u64(&mut buf, id);
+    put_str(&mut buf, &req.dist);
+    match &req.params {
+        Some(p) => {
+            put_u8(&mut buf, 1);
+            put_genes(&mut buf, p);
+        }
+        None => put_u8(&mut buf, 0),
+    }
+    put_u8(&mut buf, req.validate as u8);
+    put_payload(&mut buf, req.payload());
+    frame(TAG_JOB, buf)
+}
+
+/// Encode a [`Frame::JobDone`].
+pub fn encode_job_done(id: u64, cache_flag: u8, result: &JobResult) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    put_u64(&mut buf, id);
+    put_u8(&mut buf, cache_flag);
+    match result {
+        Ok(out) => {
+            put_u8(&mut buf, 0);
+            put_f64(&mut buf, out.secs);
+            put_u8(&mut buf, out.valid as u8);
+            put_genes(&mut buf, &out.params);
+            put_payload(&mut buf, &out.payload);
+        }
+        Err(JobError::Cancelled) => put_u8(&mut buf, 1),
+        Err(JobError::WorkerLost) => put_u8(&mut buf, 2),
+    }
+    frame(TAG_JOB_DONE, buf)
+}
+
+/// Encode a [`Frame::CachePublish`] (shard → router).
+pub fn encode_cache_publish(text: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + text.len());
+    put_str(&mut buf, text);
+    frame(TAG_CACHE_PUBLISH, buf)
+}
+
+/// Encode a [`Frame::CacheSync`] (router → shard).
+pub fn encode_cache_sync(text: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + text.len());
+    put_str(&mut buf, text);
+    frame(TAG_CACHE_SYNC, buf)
+}
+
+/// Encode a [`Frame::Telemetry`].
+pub fn encode_telemetry(counters: &[(String, u64)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, counters.len() as u64);
+    for (name, value) in counters {
+        put_str(&mut buf, name);
+        put_u64(&mut buf, *value);
+    }
+    frame(TAG_TELEMETRY, buf)
+}
+
+/// Encode a [`Frame::Shutdown`].
+pub fn encode_shutdown() -> Vec<u8> {
+    frame(TAG_SHUTDOWN, Vec::new())
+}
+
+/// Write one pre-encoded frame. Callers serialize writes per connection
+/// (frames from concurrent writers must not interleave mid-frame).
+pub fn write_frame<W: Write>(w: &mut W, bytes: &[u8]) -> std::io::Result<()> {
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+// --- frame decoder ---------------------------------------------------------
+
+/// Read and decode one frame. Any error — I/O (including EOF from a dead
+/// peer), a hostile length prefix, or a malformed payload — means the
+/// connection is unusable and the caller should treat the peer as lost.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let tag = head[0];
+    let len = u64::from_le_bytes(head[1..9].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        bail!("frame payload of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte bound");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    decode(tag, &payload)
+}
+
+fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
+    let mut d = Dec::new(payload);
+    let frame = match tag {
+        TAG_JOB => {
+            let id = d.u64()?;
+            let dist = d.str()?;
+            let params = match d.u8()? {
+                0 => None,
+                _ => Some(d.genes()?),
+            };
+            let validate = d.u8()? != 0;
+            let payload = d.payload()?;
+            Frame::Job { id, req: SortRequest { payload, dist, params, validate } }
+        }
+        TAG_JOB_DONE => {
+            let id = d.u64()?;
+            let cache_flag = d.u8()?;
+            let result = match d.u8()? {
+                0 => {
+                    let secs = d.f64()?;
+                    let valid = d.u8()? != 0;
+                    let params = d.genes()?;
+                    let payload = d.payload()?;
+                    Ok(SortOutput { id, payload, params, secs, valid })
+                }
+                1 => Err(JobError::Cancelled),
+                2 => Err(JobError::WorkerLost),
+                other => bail!("unknown job status code {other}"),
+            };
+            Frame::JobDone { id, cache_flag, result }
+        }
+        TAG_CACHE_PUBLISH => Frame::CachePublish { text: d.str()? },
+        TAG_CACHE_SYNC => Frame::CacheSync { text: d.str()? },
+        TAG_TELEMETRY => {
+            let n = d.u64()? as usize;
+            // Every entry takes at least 16 bytes (name length + value), so
+            // a count beyond payload/16 is corruption — and the bound keeps
+            // the Vec::with_capacity below proportional to the actual frame
+            // instead of a hostile 32-bytes-per-claimed-entry reserve.
+            if n > payload.len() / 16 {
+                bail!("telemetry count {n} exceeds frame size");
+            }
+            let mut counters = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = d.str()?;
+                let value = d.u64()?;
+                counters.push((name, value));
+            }
+            Frame::Telemetry { counters }
+        }
+        TAG_SHUTDOWN => Frame::Shutdown,
+        other => bail!("unknown frame tag {other}"),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(bytes: Vec<u8>) -> Frame {
+        let mut cursor = std::io::Cursor::new(bytes);
+        let frame = read_frame(&mut cursor).expect("decode");
+        assert_eq!(cursor.position() as usize, cursor.get_ref().len(), "frame fully consumed");
+        frame
+    }
+
+    #[test]
+    fn job_roundtrip_all_dtypes_and_knobs() {
+        let payloads = [
+            SortPayload::I64(vec![3, -1, i64::MAX, i64::MIN]),
+            SortPayload::I32(vec![7, -9, i32::MAX]),
+            SortPayload::U64(vec![0, u64::MAX]),
+            SortPayload::F64(vec![2.5, -0.0, f64::NAN, f64::NEG_INFINITY]),
+        ];
+        for payload in payloads {
+            let req = SortRequest::from_payload(payload.clone())
+                .with_dist("zipf")
+                .with_params(SortParams::paper_1e7())
+                .without_validation();
+            let Frame::Job { id, req: back } = roundtrip(encode_job(42, &req)) else {
+                panic!("expected Job frame");
+            };
+            assert_eq!(id, 42);
+            assert_eq!(back.dist, "zipf");
+            assert_eq!(back.params, Some(SortParams::paper_1e7()));
+            assert!(!back.validate);
+            // NaN payloads compare bit-exact through the canonical-bit check
+            // below, not PartialEq.
+            assert_eq!(back.payload().dtype(), payload.dtype());
+            assert_eq!(back.payload().len(), payload.len());
+            if let (SortPayload::F64(a), SortPayload::F64(b)) = (back.payload(), &payload) {
+                assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            } else {
+                assert_eq!(back.payload(), &payload);
+            }
+        }
+    }
+
+    #[test]
+    fn job_roundtrip_default_knobs() {
+        let req = SortRequest::new(vec![5i64, 1]);
+        let Frame::Job { req: back, .. } = roundtrip(encode_job(1, &req)) else {
+            panic!("expected Job frame");
+        };
+        assert_eq!(back.dist, "uniform");
+        assert_eq!(back.params, None);
+        assert!(back.validate);
+        assert_eq!(back.payload().as_slice::<i64>(), Some(&[5i64, 1][..]));
+    }
+
+    #[test]
+    fn job_done_roundtrip_rewrites_router_id() {
+        let out = SortOutput {
+            id: 999, // the shard's local id — the wire carries the router's
+            payload: SortPayload::U64(vec![1, 2, 3]),
+            params: SortParams::paper_1e8(),
+            secs: 0.0125,
+            valid: true,
+        };
+        let bytes = encode_job_done(7, CACHE_FLAG_HIT, &Ok(out));
+        let Frame::JobDone { id, cache_flag, result } = roundtrip(bytes) else {
+            panic!("expected JobDone");
+        };
+        assert_eq!(id, 7);
+        assert_eq!(cache_flag, CACHE_FLAG_HIT);
+        let out = result.expect("ok result");
+        assert_eq!(out.id, 7, "decoded output carries the router-level id");
+        assert_eq!(out.params, SortParams::paper_1e8());
+        assert!((out.secs - 0.0125).abs() < 1e-12);
+        assert!(out.valid);
+        assert_eq!(out.data::<u64>().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn job_done_error_roundtrip() {
+        for (err, _) in [(JobError::Cancelled, 1u8), (JobError::WorkerLost, 2u8)] {
+            let bytes = encode_job_done(3, CACHE_FLAG_NONE, &Err(err));
+            let Frame::JobDone { id, result, .. } = roundtrip(bytes) else {
+                panic!("expected JobDone");
+            };
+            assert_eq!(id, 3);
+            assert_eq!(result.unwrap_err(), err);
+        }
+    }
+
+    #[test]
+    fn cache_and_telemetry_and_shutdown_roundtrip() {
+        let Frame::CachePublish { text } = roundtrip(encode_cache_publish("v2 body\n")) else {
+            panic!("expected CachePublish");
+        };
+        assert_eq!(text, "v2 body\n");
+        let Frame::CacheSync { text } = roundtrip(encode_cache_sync("merged\n")) else {
+            panic!("expected CacheSync");
+        };
+        assert_eq!(text, "merged\n");
+        let counters = vec![("tuner.publishes".to_string(), 3u64), ("jobs".to_string(), 17)];
+        let Frame::Telemetry { counters: back } = roundtrip(encode_telemetry(&counters)) else {
+            panic!("expected Telemetry");
+        };
+        assert_eq!(back, counters);
+        assert!(matches!(roundtrip(encode_shutdown()), Frame::Shutdown));
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_allocating() {
+        // Hostile length prefix.
+        let mut bytes = vec![TAG_SHUTDOWN];
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame(&mut std::io::Cursor::new(bytes)).is_err());
+        // Unknown tag.
+        let mut bytes = vec![250u8];
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        assert!(read_frame(&mut std::io::Cursor::new(bytes)).is_err());
+        // Truncated payload.
+        let good = encode_job(1, &SortRequest::new(vec![1i64, 2, 3]));
+        let clipped = good[..good.len() - 4].to_vec();
+        assert!(read_frame(&mut std::io::Cursor::new(clipped)).is_err());
+        // Trailing garbage inside a frame payload.
+        let mut inner = Vec::new();
+        put_u64(&mut inner, 0); // telemetry count 0
+        put_u8(&mut inner, 99); // trailing byte
+        let framed = frame(TAG_TELEMETRY, inner);
+        assert!(read_frame(&mut std::io::Cursor::new(framed)).is_err());
+        // EOF mid-header.
+        assert!(read_frame(&mut std::io::Cursor::new(vec![TAG_JOB])).is_err());
+    }
+
+    #[test]
+    fn frames_decode_sequentially_from_one_stream() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_job(1, &SortRequest::new(vec![9i64])));
+        stream.extend_from_slice(&encode_telemetry(&[("a".into(), 1)]));
+        stream.extend_from_slice(&encode_shutdown());
+        let mut cursor = std::io::Cursor::new(stream);
+        assert!(matches!(read_frame(&mut cursor).unwrap(), Frame::Job { id: 1, .. }));
+        assert!(matches!(read_frame(&mut cursor).unwrap(), Frame::Telemetry { .. }));
+        assert!(matches!(read_frame(&mut cursor).unwrap(), Frame::Shutdown));
+        assert!(read_frame(&mut cursor).is_err(), "EOF after the last frame");
+    }
+}

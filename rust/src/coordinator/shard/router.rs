@@ -1,0 +1,829 @@
+//! The shard router: the parent-process half of the cross-process service.
+//!
+//! A [`ShardRouter`] owns N child `evosort shard-worker` processes (spawned
+//! from the running binary), each reached over its own Unix-domain socket
+//! speaking the [`protocol`] frame format. Submission mirrors
+//! [`SortService`](crate::coordinator::SortService) exactly —
+//! [`submit_request`](ShardRouter::submit_request) → `Ticket`,
+//! [`submit_batch_requests`](ShardRouter::submit_batch_requests) →
+//! `BatchTicket` with unchanged `wait`/`stream` semantics — because the
+//! router completes the same `JobSlot`s and feeds the same batch channel
+//! the in-process pool does.
+//!
+//! Routing is least-loaded with a bounded per-shard in-flight window: jobs
+//! beyond the window wait in a router-side queue, which is what makes them
+//! **reroutable** — when a shard dies, only the jobs already on its socket
+//! resolve `Err(WorkerLost)`; everything still queued flows to the
+//! surviving shards while the dead shard respawns (and is re-seeded with
+//! the merged tuning cache). Shard cache publications are merged
+//! improvement-aware into the router's service-level [`TuningCache`] and
+//! re-broadcast, so a fingerprint class tuned on one shard speeds up all
+//! shards; telemetry frames aggregate per-shard counters (`tuner.*`,
+//! `jobs.*`) into `shard.<i>.*` and `shards.*` gauges.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::autotune::AutotunePolicy;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::SortRequest;
+use crate::coordinator::service::{self, BatchTicket};
+use crate::coordinator::shard::protocol::{self, Frame};
+use crate::coordinator::ticket::{JobError, JobResult, JobSlot, Ticket};
+use crate::coordinator::tuning_cache::TuningCache;
+
+/// Configuration for a sharded deployment.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Worker processes. `<= 1` means "don't shard" — use
+    /// [`ShardedService::spawn`](super::ShardedService::spawn), which routes
+    /// in-process in that case so the single-process path stays
+    /// zero-overhead.
+    pub shards: usize,
+    /// Pool workers inside each shard process.
+    pub workers_per_shard: usize,
+    /// Threads each sort uses (per shard).
+    pub sort_threads: usize,
+    /// Each shard's pending-job queue bound.
+    pub queue_capacity: usize,
+    /// Attach an online autotuner to every shard (the policy is forwarded
+    /// on the worker command line; caches sync through the router).
+    pub autotune: Option<AutotunePolicy>,
+    /// Jobs allowed on a shard's socket at once; `0` derives
+    /// `2 × workers_per_shard`. Everything beyond waits in the router queue,
+    /// reroutable on shard death.
+    pub max_inflight_per_shard: usize,
+    /// Respawn budget per shard: beyond this many deaths the shard stays
+    /// down (a crash-looping worker must not respawn forever).
+    pub max_respawns_per_shard: usize,
+    /// Shard-side cadence for cache publication / telemetry frames.
+    pub publish_interval: Duration,
+    /// The `evosort` binary to spawn; defaults to the running executable.
+    /// Integration tests pass `env!("CARGO_BIN_EXE_evosort")` (the test
+    /// harness binary is not the CLI).
+    pub binary: Option<PathBuf>,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec {
+            shards: 2,
+            workers_per_shard: 2,
+            sort_threads: crate::util::default_threads().div_ceil(2).max(1),
+            queue_capacity: 64,
+            autotune: None,
+            max_inflight_per_shard: 0,
+            max_respawns_per_shard: 5,
+            publish_interval: Duration::from_millis(200),
+            binary: None,
+        }
+    }
+}
+
+/// How a resolved job reaches its caller — the same two delivery contracts
+/// the in-process service uses.
+enum Completer {
+    Slot(Arc<JobSlot>),
+    Batch {
+        tx: mpsc::Sender<(usize, JobResult)>,
+        idx: usize,
+        hits: Arc<AtomicU64>,
+        misses: Arc<AtomicU64>,
+    },
+}
+
+/// A job waiting in the router queue (reroutable until dispatched).
+struct RoutedJob {
+    id: u64,
+    req: SortRequest,
+    completer: Completer,
+}
+
+struct ShardConn {
+    child: Child,
+    writer: Arc<Mutex<UnixStream>>,
+}
+
+struct ShardState {
+    alive: bool,
+    /// Incarnation counter: readers of a dead incarnation must not touch
+    /// the state its respawn installed.
+    generation: u64,
+    respawns: usize,
+    /// Router job ids currently on this shard's socket.
+    inflight: HashSet<u64>,
+    conn: Option<ShardConn>,
+}
+
+struct RouterState {
+    queue: VecDeque<RoutedJob>,
+    /// Dispatched-but-unresolved jobs (completion routes through here).
+    pending: HashMap<u64, Completer>,
+    shards: Vec<ShardState>,
+    /// Latest telemetry snapshot per shard.
+    telemetry: Vec<HashMap<String, u64>>,
+}
+
+struct RouterInner {
+    spec: ShardSpec,
+    max_inflight: usize,
+    socket_dir: PathBuf,
+    state: Mutex<RouterState>,
+    /// Dispatcher wake-ups: new work, freed capacity, shard (re)spawned.
+    work_ready: Condvar,
+    /// Drain wake-ups: queue + pending went empty.
+    idle: Condvar,
+    metrics: Arc<Metrics>,
+    cache: Arc<TuningCache>,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+    reader_handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Handle to the sharded deployment; dropping it shuts the children down.
+pub struct ShardRouter {
+    inner: Arc<RouterInner>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl ShardRouter {
+    /// Spawn `spec.shards` worker processes and start routing. Fails if any
+    /// worker cannot be spawned or does not connect back within 10 seconds.
+    pub fn spawn(spec: ShardSpec) -> Result<ShardRouter> {
+        anyhow::ensure!(spec.shards >= 1, "a sharded service needs at least one shard");
+        let socket_dir = std::env::temp_dir().join(format!(
+            "evosort-shards-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&socket_dir)
+            .with_context(|| format!("creating {}", socket_dir.display()))?;
+        let max_inflight = if spec.max_inflight_per_shard == 0 {
+            (spec.workers_per_shard * 2).max(1)
+        } else {
+            spec.max_inflight_per_shard
+        };
+        let shards = spec.shards;
+        let inner = Arc::new(RouterInner {
+            spec,
+            max_inflight,
+            socket_dir,
+            state: Mutex::new(RouterState {
+                queue: VecDeque::new(),
+                pending: HashMap::new(),
+                shards: (0..shards)
+                    .map(|_| ShardState {
+                        alive: false,
+                        generation: 0,
+                        respawns: 0,
+                        inflight: HashSet::new(),
+                        conn: None,
+                    })
+                    .collect(),
+                telemetry: vec![HashMap::new(); shards],
+            }),
+            work_ready: Condvar::new(),
+            idle: Condvar::new(),
+            metrics: Arc::new(Metrics::new()),
+            cache: Arc::new(TuningCache::new()),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            reader_handles: Mutex::new(Vec::new()),
+        });
+        for idx in 0..shards {
+            if let Err(e) = RouterInner::spawn_shard(&inner, idx) {
+                // Partial start-up: kill and reap the shards that did spawn
+                // (no Drop will run — the router was never constructed), so
+                // a caller retrying spawn cannot accumulate orphans.
+                inner.shutdown.store(true, Ordering::SeqCst);
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    for sh in st.shards.iter_mut() {
+                        if let Some(conn) = sh.conn.as_mut() {
+                            let _ = conn.child.kill();
+                        }
+                    }
+                }
+                let readers = std::mem::take(&mut *inner.reader_handles.lock().unwrap());
+                for r in readers {
+                    let _ = r.join(); // EOF after the kill; on_shard_down reaps
+                }
+                let _ = std::fs::remove_dir_all(&inner.socket_dir);
+                return Err(e).with_context(|| format!("spawning shard {idx}"));
+            }
+        }
+        let dispatcher = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("evosort-shard-router".into())
+                .spawn(move || RouterInner::dispatcher_loop(&inner))
+                .expect("spawn router dispatcher")
+        };
+        Ok(ShardRouter { inner, dispatcher: Some(dispatcher) })
+    }
+
+    /// Worker processes this router was configured with.
+    pub fn shards(&self) -> usize {
+        self.inner.spec.shards
+    }
+
+    /// Service-level metrics: per-job accounting mirrored from shard
+    /// replies, `shard.<i>.*` / `shards.*` telemetry aggregation, routing
+    /// and cache-broadcast counters.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.inner.metrics
+    }
+
+    /// The merged service-level tuning cache (improvement-aware union of
+    /// every shard's publications).
+    pub fn cache(&self) -> &Arc<TuningCache> {
+        &self.inner.cache
+    }
+
+    /// Submit one request; the returned [`Ticket`] behaves exactly as the
+    /// in-process service's (poll / park / cancel-before-dispatch; a dead
+    /// shard resolves it to `Err(WorkerLost)` instead of hanging).
+    pub fn submit_request(&self, req: SortRequest) -> Ticket {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.metrics.incr("jobs.submitted");
+        let slot = JobSlot::pending();
+        self.inner.enqueue(RoutedJob { id, req, completer: Completer::Slot(Arc::clone(&slot)) });
+        Ticket::new(id, slot)
+    }
+
+    /// Submit a batch; the returned [`BatchTicket`] barriers or streams in
+    /// submission order exactly as the in-process path does.
+    pub fn submit_batch_requests(&self, requests: Vec<SortRequest>) -> BatchTicket {
+        let started = Instant::now();
+        let total = requests.len();
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::clone(&self.inner.metrics);
+        metrics.add("jobs.submitted", total as u64);
+        metrics.add("batch.jobs.submitted", total as u64);
+        metrics.incr("batch.submitted");
+        let hits = Arc::new(AtomicU64::new(0));
+        let misses = Arc::new(AtomicU64::new(0));
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            for (idx, req) in requests.into_iter().enumerate() {
+                let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+                let completer = Completer::Batch {
+                    tx: tx.clone(),
+                    idx,
+                    hits: Arc::clone(&hits),
+                    misses: Arc::clone(&misses),
+                };
+                st.queue.push_back(RoutedJob { id, req, completer });
+            }
+        }
+        self.inner.work_ready.notify_all();
+        BatchTicket::from_parts(total, started, rx, metrics, hits, misses)
+    }
+
+    /// Park until nothing is queued or in flight (bounded): the sharded
+    /// analog of [`SortService::drain_timeout`].
+    ///
+    /// [`SortService::drain_timeout`]: crate::coordinator::SortService::drain_timeout
+    pub fn drain_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        while !(st.queue.is_empty() && st.pending.is_empty()) {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            let (next, _) = self.inner.idle.wait_timeout(st, remaining).unwrap();
+            st = next;
+        }
+        true
+    }
+
+    /// Jobs currently on shard `idx`'s socket (diagnostics / tests).
+    pub fn inflight(&self, idx: usize) -> usize {
+        let st = self.inner.state.lock().unwrap();
+        st.shards.get(idx).map(|s| s.inflight.len()).unwrap_or(0)
+    }
+
+    /// OS pid of each live shard worker (`None` while a shard is down).
+    pub fn shard_pids(&self) -> Vec<Option<u32>> {
+        let st = self.inner.state.lock().unwrap();
+        st.shards.iter().map(|s| s.conn.as_ref().map(|c| c.child.id())).collect()
+    }
+
+    /// Chaos helper: SIGKILL shard `idx`'s worker process. In-flight jobs on
+    /// it resolve `Err(WorkerLost)`; the router respawns it (budget
+    /// permitting) and reroutes queued work meanwhile. Failover tests use
+    /// this; production deaths take the same path.
+    pub fn kill_shard(&self, idx: usize) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
+        match st.shards.get_mut(idx).and_then(|s| s.conn.as_mut()) {
+            Some(conn) => conn.child.kill().is_ok(),
+            None => false,
+        }
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        let inner = &self.inner;
+        inner.shutdown.store(true, Ordering::SeqCst);
+        inner.work_ready.notify_all();
+        // Resolve everything unfinished so no caller can hang on a ticket.
+        let (queued, pending) = {
+            let mut st = inner.state.lock().unwrap();
+            let queued: Vec<RoutedJob> = st.queue.drain(..).collect();
+            let pending: Vec<Completer> = st.pending.drain().map(|(_, c)| c).collect();
+            (queued, pending)
+        };
+        for job in queued {
+            inner.fail_job(job.completer);
+        }
+        for completer in pending {
+            inner.fail_job(completer);
+        }
+        inner.idle.notify_all();
+        // Ask every live shard to exit…
+        let writers: Vec<Arc<Mutex<UnixStream>>> = {
+            let st = inner.state.lock().unwrap();
+            st.shards
+                .iter()
+                .filter_map(|s| s.conn.as_ref().map(|c| Arc::clone(&c.writer)))
+                .collect()
+        };
+        let shutdown_frame = protocol::encode_shutdown();
+        for w in writers {
+            let mut w = w.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = protocol::write_frame(&mut *w, &shutdown_frame);
+        }
+        // …give them a bounded grace period, then hard-kill stragglers. The
+        // reader threads reap each child as its connection closes.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let all_down =
+                { inner.state.lock().unwrap().shards.iter().all(|s| s.conn.is_none()) };
+            if all_down || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        {
+            let mut st = inner.state.lock().unwrap();
+            for sh in st.shards.iter_mut() {
+                if let Some(conn) = sh.conn.as_mut() {
+                    let _ = conn.child.kill();
+                }
+            }
+        }
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        let readers = std::mem::take(&mut *inner.reader_handles.lock().unwrap());
+        for r in readers {
+            let _ = r.join();
+        }
+        let _ = std::fs::remove_dir_all(&inner.socket_dir);
+    }
+}
+
+impl RouterInner {
+    /// Spawn (or respawn) shard `idx`: bind a fresh socket, launch the
+    /// worker process, wait for it to connect, seed it with the merged
+    /// cache, and start its reader thread.
+    fn spawn_shard(inner: &Arc<RouterInner>, idx: usize) -> Result<()> {
+        let generation = inner.state.lock().unwrap().shards[idx].generation + 1;
+        let socket = inner.socket_dir.join(format!("shard-{idx}-{generation}.sock"));
+        let _ = std::fs::remove_file(&socket);
+        let listener = UnixListener::bind(&socket)
+            .with_context(|| format!("binding {}", socket.display()))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let binary = match &inner.spec.binary {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().context("locating the evosort binary")?,
+        };
+        let mut cmd = Command::new(&binary);
+        cmd.arg("shard-worker")
+            .arg("--socket")
+            .arg(&socket)
+            .arg("--shard-id")
+            .arg(idx.to_string())
+            .arg("--workers")
+            .arg(inner.spec.workers_per_shard.to_string())
+            .arg("--sort-threads")
+            .arg(inner.spec.sort_threads.to_string())
+            .arg("--queue-capacity")
+            .arg(inner.spec.queue_capacity.to_string())
+            .arg("--publish-ms")
+            .arg(inner.spec.publish_interval.as_millis().to_string())
+            .stdin(Stdio::null());
+        if let Some(policy) = &inner.spec.autotune {
+            cmd.arg("--min-obs")
+                .arg(policy.min_observations.to_string())
+                .arg("--cooldown")
+                .arg(policy.cooldown_observations.to_string())
+                .arg("--sample-cap")
+                .arg(policy.retained_sample_cap.to_string())
+                .arg("--tuner-generations")
+                .arg(policy.generations_per_cycle.to_string())
+                .arg("--tuner-population")
+                .arg(policy.population.to_string())
+                .arg("--cpu-share")
+                .arg(policy.max_cpu_share.to_string())
+                .arg("--min-improvement")
+                .arg(policy.min_improvement_pct.to_string())
+                .arg("--sample-every")
+                .arg(policy.sample_every.to_string())
+                .arg("--autotune");
+        }
+        let mut child =
+            cmd.spawn().with_context(|| format!("spawning {}", binary.display()))?;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let stream = loop {
+            match listener.accept() {
+                Ok((stream, _)) => break stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        bail!("shard {idx} worker exited before connecting: {status}");
+                    }
+                    if Instant::now() > deadline {
+                        let _ = child.kill();
+                        bail!("shard {idx} worker did not connect within 10s");
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    let _ = child.kill();
+                    return Err(e).context("accepting shard connection");
+                }
+            }
+        };
+        stream.set_nonblocking(false).context("blocking shard stream")?;
+        let _ = std::fs::remove_file(&socket);
+        let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning shard stream")?));
+        // Re-seed a (re)spawned shard with everything the fleet has learned.
+        if !inner.cache.is_empty() {
+            let bytes = protocol::encode_cache_sync(&inner.cache.to_text());
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = protocol::write_frame(&mut *w, &bytes);
+        }
+        {
+            let mut st = inner.state.lock().unwrap();
+            let sh = &mut st.shards[idx];
+            sh.alive = true;
+            sh.generation = generation;
+            sh.inflight.clear();
+            sh.conn = Some(ShardConn { child, writer });
+        }
+        let reader_inner = Arc::clone(inner);
+        let handle = std::thread::Builder::new()
+            .name(format!("evosort-router-read{idx}"))
+            .spawn(move || {
+                let mut stream = stream;
+                loop {
+                    match protocol::read_frame(&mut stream) {
+                        Ok(frame) => reader_inner.on_frame(idx, frame),
+                        Err(_) => break,
+                    }
+                }
+                RouterInner::on_shard_down(&reader_inner, idx, generation);
+            })
+            .expect("spawn router reader");
+        inner.reader_handles.lock().unwrap().push(handle);
+        // A shutdown that raced with this (re)spawn: tell the fresh worker
+        // to exit immediately so the Drop-side reader join cannot hang on a
+        // shard that never got the broadcast Shutdown frame.
+        if inner.shutdown.load(Ordering::SeqCst) {
+            let st = inner.state.lock().unwrap();
+            if let Some(conn) = st.shards[idx].conn.as_ref() {
+                let mut w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
+                let _ = protocol::write_frame(&mut *w, &protocol::encode_shutdown());
+            }
+        }
+        inner.work_ready.notify_all();
+        Ok(())
+    }
+
+    fn enqueue(&self, job: RoutedJob) {
+        if self.shutdown.load(Ordering::SeqCst) {
+            self.fail_job(job.completer);
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(job);
+        drop(st);
+        self.work_ready.notify_all();
+    }
+
+    /// The routing loop: pick the least-loaded live shard with window
+    /// capacity, move the job from the queue to `pending`, write the frame.
+    fn dispatcher_loop(inner: &Arc<RouterInner>) {
+        loop {
+            let (id, req, idx, writer) = {
+                let mut st = inner.state.lock().unwrap();
+                loop {
+                    if inner.shutdown.load(Ordering::SeqCst) {
+                        return; // Drop resolves whatever is left
+                    }
+                    if !st.queue.is_empty() {
+                        if let Some(idx) = pick_shard(&st, inner.max_inflight) {
+                            let RoutedJob { id, req, completer } = st.queue.pop_front().unwrap();
+                            // Honour a cancel that landed while the job was
+                            // queued — the same dequeue-time check the
+                            // in-process worker makes, preserving the
+                            // `cancel() == true ⇒ Err(Cancelled)` guarantee.
+                            if let Completer::Slot(slot) = &completer {
+                                if slot.start() {
+                                    slot.complete(Err(JobError::Cancelled));
+                                    if st.queue.is_empty() && st.pending.is_empty() {
+                                        inner.idle.notify_all();
+                                    }
+                                    continue;
+                                }
+                            }
+                            st.pending.insert(id, completer);
+                            st.shards[idx].inflight.insert(id);
+                            let conn = st.shards[idx].conn.as_ref().expect("picked shard is live");
+                            break (id, req, idx, Arc::clone(&conn.writer));
+                        }
+                        // Fail the queue only when every shard is down for
+                        // good (budget spent or permanently unspawnable).
+                        // Transiently-dead shards respawn within seconds —
+                        // queued jobs must survive that window: rerouting
+                        // them is the whole point of the router queue.
+                        let all_permanently_down = st.shards.iter().all(|s| {
+                            !s.alive && s.respawns >= inner.spec.max_respawns_per_shard
+                        });
+                        if all_permanently_down {
+                            let dead: Vec<RoutedJob> = st.queue.drain(..).collect();
+                            let idle_now = st.pending.is_empty();
+                            drop(st);
+                            for job in dead {
+                                inner.fail_job(job.completer);
+                            }
+                            if idle_now {
+                                inner.idle.notify_all();
+                            }
+                            st = inner.state.lock().unwrap();
+                            continue;
+                        }
+                    }
+                    st = inner.work_ready.wait(st).unwrap();
+                }
+            };
+            let bytes = protocol::encode_job(id, &req);
+            if bytes.len() as u64 > protocol::MAX_JOB_FRAME_BYTES {
+                // An oversized job would be rejected by every shard's
+                // receive-side frame bound and, routed job-at-a-time, would
+                // serially exhaust the whole fleet's respawn budget. Fail
+                // its own ticket instead.
+                let (completer, idle_now) = {
+                    let mut st = inner.state.lock().unwrap();
+                    st.shards[idx].inflight.remove(&id);
+                    let completer = st.pending.remove(&id);
+                    (completer, st.pending.is_empty() && st.queue.is_empty())
+                };
+                inner.metrics.incr("shard.jobs.oversized");
+                crate::log_error!(
+                    "job {id} ({} bytes) exceeds the shard frame bound; failing it",
+                    bytes.len()
+                );
+                if let Some(completer) = completer {
+                    inner.fail_job(completer);
+                }
+                if idle_now {
+                    inner.idle.notify_all();
+                }
+                continue;
+            }
+            let sent = {
+                let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                protocol::write_frame(&mut *w, &bytes).is_ok()
+            };
+            if sent {
+                inner.metrics.incr(&format!("shard.{idx}.jobs.routed"));
+            } else {
+                // The shard died between pick and write. Its reader thread
+                // handles the death; reclaim the job for rerouting unless
+                // that handler already failed it.
+                let mut st = inner.state.lock().unwrap();
+                if let Some(completer) = st.pending.remove(&id) {
+                    st.shards[idx].inflight.remove(&id);
+                    st.queue.push_front(RoutedJob { id, req, completer });
+                }
+            }
+        }
+    }
+
+    fn on_frame(&self, idx: usize, frame: Frame) {
+        match frame {
+            Frame::JobDone { id, cache_flag, result } => {
+                self.on_job_done(idx, id, cache_flag, result)
+            }
+            Frame::CachePublish { text } => self.on_cache_publish(idx, &text),
+            Frame::Telemetry { counters } => self.on_telemetry(idx, counters),
+            _ => {} // frames for the other direction: ignore
+        }
+    }
+
+    fn on_job_done(&self, idx: usize, id: u64, cache_flag: u8, result: JobResult) {
+        let completer = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(sh) = st.shards.get_mut(idx) {
+                sh.inflight.remove(&id);
+            }
+            let completer = st.pending.remove(&id);
+            if completer.is_some() && st.pending.is_empty() && st.queue.is_empty() {
+                self.idle.notify_all();
+            }
+            completer
+        };
+        // Capacity freed: wake the dispatcher.
+        self.work_ready.notify_all();
+        let Some(completer) = completer else {
+            return; // late reply for a job the death handler already failed
+        };
+        // Mirror the in-process service's per-job accounting at the
+        // service level (each shard also keeps its own local metrics).
+        match &result {
+            Ok(out) => {
+                self.metrics.incr("jobs.completed");
+                self.metrics.incr(service::dtype_counter(out.dtype()));
+                self.metrics.observe("sort.latency", out.secs);
+                self.metrics.add("elements.sorted", out.len() as u64);
+                if !out.valid {
+                    self.metrics.incr("jobs.invalid");
+                }
+                self.metrics.incr(&format!("shard.{idx}.jobs.completed"));
+                match cache_flag {
+                    protocol::CACHE_FLAG_HIT => self.metrics.incr("params.cache_hit"),
+                    protocol::CACHE_FLAG_MISS => self.metrics.incr("params.cache_miss"),
+                    _ => self.metrics.incr("params.override"),
+                }
+            }
+            Err(_) => self.metrics.incr("shard.jobs.lost"),
+        }
+        self.complete(completer, result, cache_flag);
+    }
+
+    /// A shard's cache changed: merge it (improvement-aware — a worse
+    /// incoming entry cannot clobber a better one) and, if the merge
+    /// actually changed the service-level cache, broadcast the union back
+    /// to every live shard.
+    fn on_cache_publish(&self, idx: usize, text: &str) {
+        self.metrics.incr("shard.cache.publishes");
+        let absorbed = self.cache.absorb(&TuningCache::from_text(text));
+        if absorbed == 0 {
+            return;
+        }
+        self.metrics.add("shard.cache.entries_absorbed", absorbed as u64);
+        self.metrics.set_gauge("shard.cache.entries", self.cache.len() as f64);
+        crate::log_debug!("router: absorbed {absorbed} cache entries from shard {idx}");
+        let bytes = protocol::encode_cache_sync(&self.cache.to_text());
+        let writers: Vec<Arc<Mutex<UnixStream>>> = {
+            let st = self.state.lock().unwrap();
+            st.shards
+                .iter()
+                .filter(|s| s.alive)
+                .filter_map(|s| s.conn.as_ref().map(|c| Arc::clone(&c.writer)))
+                .collect()
+        };
+        for w in writers {
+            let mut w = w.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = protocol::write_frame(&mut *w, &bytes);
+        }
+        self.metrics.incr("shard.cache.broadcasts");
+    }
+
+    /// Fold one shard's counter snapshot into per-shard and fleet gauges.
+    fn on_telemetry(&self, idx: usize, counters: Vec<(String, u64)>) {
+        let (this, totals) = {
+            let mut st = self.state.lock().unwrap();
+            st.telemetry[idx] = counters.into_iter().collect();
+            let mut totals: HashMap<String, u64> = HashMap::new();
+            for shard in &st.telemetry {
+                for (name, value) in shard {
+                    *totals.entry(name.clone()).or_default() += value;
+                }
+            }
+            let this: Vec<(String, u64)> =
+                st.telemetry[idx].iter().map(|(k, v)| (k.clone(), *v)).collect();
+            (this, totals)
+        };
+        // The `local` segment separates these process-local mirrors (which
+        // reset when a shard respawns) from the router's own lifetime
+        // counters — `shard.0.jobs.completed` (counter, router-lifetime)
+        // and `shard.0.local.jobs.completed` (gauge, child-process view)
+        // must not share a name.
+        for (name, value) in this {
+            self.metrics.set_gauge(&format!("shard.{idx}.local.{name}"), value as f64);
+        }
+        for (name, value) in totals {
+            self.metrics.set_gauge(&format!("shards.{name}"), value as f64);
+        }
+    }
+
+    /// A shard's connection closed. Fail its in-flight jobs (`WorkerLost` —
+    /// the payloads left with the frames, so they cannot be rerouted),
+    /// reap the child, and respawn within budget. Queued jobs are untouched:
+    /// the dispatcher reroutes them to the survivors.
+    fn on_shard_down(inner: &Arc<RouterInner>, idx: usize, generation: u64) {
+        let shutting_down = inner.shutdown.load(Ordering::SeqCst);
+        let mut lost: Vec<Completer> = Vec::new();
+        let mut respawn = false;
+        {
+            let mut st = inner.state.lock().unwrap();
+            if st.shards[idx].generation != generation {
+                return; // a reader from a previous incarnation
+            }
+            let sh = &mut st.shards[idx];
+            sh.alive = false;
+            if let Some(mut conn) = sh.conn.take() {
+                let _ = conn.child.kill();
+                let _ = conn.child.wait(); // reap — no zombies
+            }
+            let ids: Vec<u64> = sh.inflight.drain().collect();
+            for id in &ids {
+                if let Some(completer) = st.pending.remove(id) {
+                    lost.push(completer);
+                }
+            }
+            if !shutting_down && st.shards[idx].respawns < inner.spec.max_respawns_per_shard {
+                st.shards[idx].respawns += 1;
+                respawn = true;
+            }
+            if st.pending.is_empty() && st.queue.is_empty() {
+                inner.idle.notify_all();
+            }
+        }
+        for completer in lost {
+            inner.fail_job(completer);
+        }
+        if !shutting_down {
+            inner.metrics.incr("shard.deaths");
+            if respawn {
+                match RouterInner::spawn_shard(inner, idx) {
+                    Ok(()) => inner.metrics.incr("shard.respawns"),
+                    Err(e) => {
+                        crate::log_error!("shard {idx} respawn failed: {e:#}");
+                        // Mark the shard permanently down: there is no retry
+                        // loop for failed spawns, so leaving budget on a
+                        // shard that cannot come back would strand queued
+                        // jobs behind the all-permanently-down check.
+                        let mut st = inner.state.lock().unwrap();
+                        st.shards[idx].respawns = inner.spec.max_respawns_per_shard;
+                    }
+                }
+            } else {
+                crate::log_error!(
+                    "shard {idx} exceeded its respawn budget and stays down"
+                );
+            }
+        }
+        inner.work_ready.notify_all();
+    }
+
+    /// Resolve a job the transport lost: `Err(WorkerLost)`, never a hang.
+    fn fail_job(&self, completer: Completer) {
+        self.metrics.incr("shard.jobs.lost");
+        self.complete(completer, Err(JobError::WorkerLost), protocol::CACHE_FLAG_NONE);
+    }
+
+    fn complete(&self, completer: Completer, result: JobResult, cache_flag: u8) {
+        match completer {
+            Completer::Slot(slot) => slot.complete(result),
+            Completer::Batch { tx, idx, hits, misses } => {
+                if let Ok(out) = &result {
+                    self.metrics.observe_sample("batch.job.latency", out.secs);
+                    match cache_flag {
+                        protocol::CACHE_FLAG_HIT => {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        protocol::CACHE_FLAG_MISS => {
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {}
+                    }
+                }
+                let _ = tx.send((idx, result));
+            }
+        }
+    }
+}
+
+/// Least-loaded live shard with in-flight window capacity.
+fn pick_shard(st: &RouterState, max_inflight: usize) -> Option<usize> {
+    st.shards
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.alive && s.conn.is_some() && s.inflight.len() < max_inflight)
+        .min_by_key(|(_, s)| s.inflight.len())
+        .map(|(idx, _)| idx)
+}

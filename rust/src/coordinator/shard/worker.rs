@@ -1,0 +1,285 @@
+//! The shard-worker side of the cross-process service: one OS process, one
+//! [`SortService`] (autotuner included), one Unix-socket connection back to
+//! the router.
+//!
+//! The main thread reads frames off the socket: each [`Frame::Job`] is
+//! submitted to the local service (blocking only on the pool's backpressure,
+//! which propagates to the router through the socket buffer) and its
+//! [`Ticket`] handed to a small pool of collector threads that park on the
+//! tickets and write [`Frame::JobDone`] replies back — so a slow job never
+//! blocks the read loop and results flow out as they finish. A ticker
+//! thread watches the local [`TuningCache`]'s version counter and, whenever
+//! it changed from *local* tuning (router-sync absorbs are discounted, so
+//! broadcasts are not echoed back), publishes the whole cache (v2 text
+//! interchange) to the router, alongside a counter-snapshot telemetry frame
+//! each tick; incoming
+//! [`Frame::CacheSync`] broadcasts are absorbed improvement-aware, so a
+//! class tuned on any shard speeds this one up without ever clobbering a
+//! better locally-tuned entry.
+//!
+//! Entry points: [`run`] (connect by socket path — the hidden
+//! `evosort shard-worker` subcommand) and [`run_on_stream`] (an already
+//! connected stream — in-process tests use a socketpair).
+
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::service::{self, ServiceConfig, SortService};
+use crate::coordinator::shard::protocol::{self, Frame};
+use crate::coordinator::ticket::Ticket;
+use crate::coordinator::tuning_cache::TuningCache;
+
+/// Everything a shard-worker process needs besides its socket.
+pub struct ShardWorkerConfig {
+    /// This shard's index (diagnostics only — routing is the router's job).
+    pub shard_id: usize,
+    /// The local service: workers, sort threads, queue bound, autotuner.
+    pub service: ServiceConfig,
+    /// How often the ticker checks for cache changes and ships telemetry.
+    pub publish_interval: Duration,
+}
+
+/// Connect to the router's listener socket and serve until it says stop.
+pub fn run(socket: &Path, config: ShardWorkerConfig) -> Result<()> {
+    let id = config.shard_id;
+    let stream = UnixStream::connect(socket)
+        .with_context(|| format!("shard {id} connecting to {}", socket.display()))?;
+    run_on_stream(stream, config)
+}
+
+/// Serve an already-connected router stream (see the module docs).
+pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()> {
+    let ShardWorkerConfig { shard_id, service: svc_config, publish_interval } = config;
+    let collector_count = svc_config.workers.max(1);
+    let svc = SortService::new(svc_config);
+    let cache = Arc::clone(svc.cache());
+    let metrics = Arc::clone(svc.metrics());
+    let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning shard socket")?));
+    let mut reader = stream;
+
+    // Collectors: park on tickets, forward JobDone frames. Handing tickets
+    // through a channel (instead of waiting inline in the read loop) keeps
+    // job intake flowing while sorts run, and `collector_count == workers`
+    // bounds head-of-line blocking at the service's own concurrency.
+    let (ticket_tx, ticket_rx) = mpsc::channel::<(u64, u8, Ticket)>();
+    let ticket_rx = Arc::new(Mutex::new(ticket_rx));
+    let collectors: Vec<_> = (0..collector_count)
+        .map(|i| {
+            let ticket_rx = Arc::clone(&ticket_rx);
+            let writer = Arc::clone(&writer);
+            std::thread::Builder::new()
+                .name(format!("evosort-shard{shard_id}-collect{i}"))
+                .spawn(move || loop {
+                    // The guard is held across recv: collectors hand off
+                    // jobs one at a time but wait on their tickets (the slow
+                    // part) concurrently.
+                    let next = ticket_rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                    let Ok((id, cache_flag, ticket)) = next else { break };
+                    let result = ticket.wait();
+                    let bytes = protocol::encode_job_done(id, cache_flag, &result);
+                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    if protocol::write_frame(&mut *w, &bytes).is_err() {
+                        break; // router gone: nothing left to report to
+                    }
+                })
+                .expect("spawn shard collector")
+        })
+        .collect();
+
+    // Ticker: cache publication (on local change) + telemetry (every tick).
+    // Version bumps caused by absorbing a router CacheSync are discounted
+    // (`sync_bumps` — each changing absorb bumps the version by exactly 1),
+    // so a broadcast does not make every shard echo the merged cache
+    // straight back to the router as a no-op publish.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sync_bumps = Arc::new(AtomicU64::new(0));
+    let ticker = {
+        let stop = Arc::clone(&stop);
+        let sync_bumps = Arc::clone(&sync_bumps);
+        let cache = Arc::clone(&cache);
+        let metrics = Arc::clone(&metrics);
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name(format!("evosort-shard{shard_id}-ticker"))
+            .spawn(move || {
+                let mut last_local = cache.version();
+                'ticks: loop {
+                    // Sleep in slices so shutdown stays snappy.
+                    let mut slept = Duration::ZERO;
+                    while slept < publish_interval {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'ticks;
+                        }
+                        let slice = (publish_interval - slept).min(Duration::from_millis(25));
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    let local =
+                        cache.version().wrapping_sub(sync_bumps.load(Ordering::Relaxed));
+                    if local != last_local {
+                        last_local = local;
+                        let bytes = protocol::encode_cache_publish(&cache.to_text());
+                        let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                        if protocol::write_frame(&mut *w, &bytes).is_err() {
+                            break;
+                        }
+                    }
+                    let mut counters = metrics.counters_snapshot();
+                    counters.push(("cache.entries".to_string(), cache.len() as u64));
+                    let bytes = protocol::encode_telemetry(&counters);
+                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    if protocol::write_frame(&mut *w, &bytes).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn shard ticker")
+    };
+
+    // Main loop: intake.
+    loop {
+        match protocol::read_frame(&mut reader) {
+            Ok(Frame::Job { id, req }) => {
+                // Peek the cache outcome before submission so the reply can
+                // carry service-level hit/miss accounting. The authoritative
+                // resolve happens inside the service on the same label, so
+                // the fingerprint sketch runs twice per job — a deliberate
+                // trade-off: the sketch samples ≤ 1024 elements (noise next
+                // to the sort itself), and the alternative is threading a
+                // resolve-outcome field through the public SortOutput. A
+                // tuner publish landing between peek and resolve can skew
+                // one job's flag; the counters are accounting, not control.
+                let cache_flag = if req.params.is_some() {
+                    protocol::CACHE_FLAG_NONE
+                } else {
+                    let label = service::payload_label(req.payload());
+                    if cache.get(req.len(), &label).is_some() {
+                        protocol::CACHE_FLAG_HIT
+                    } else {
+                        protocol::CACHE_FLAG_MISS
+                    }
+                };
+                let ticket = svc.submit_request(req);
+                if ticket_tx.send((id, cache_flag, ticket)).is_err() {
+                    break; // every collector died (router gone)
+                }
+            }
+            Ok(Frame::CacheSync { text }) => {
+                let absorbed = cache.absorb(&TuningCache::from_text(&text));
+                if absorbed > 0 {
+                    sync_bumps.fetch_add(1, Ordering::Relaxed);
+                    metrics.add("shard.cache.absorbed", absorbed as u64);
+                    crate::log_debug!(
+                        "shard {shard_id}: absorbed {absorbed} broadcast cache entries"
+                    );
+                }
+            }
+            Ok(Frame::Shutdown) => break,
+            Ok(_) => {} // frames for the other direction: ignore
+            Err(_) => break, // router disconnected
+        }
+    }
+
+    // Drain: collectors finish the tickets already handed out, then exit on
+    // the closed channel; the service drop joins pool + tuner.
+    drop(ticket_tx);
+    for c in collectors {
+        let _ = c.join();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = ticker.join();
+    drop(svc);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SortRequest;
+    use crate::coordinator::shard::protocol::{
+        encode_cache_sync, encode_job, encode_shutdown, read_frame, write_frame,
+    };
+    use crate::data::{generate_i64, Distribution};
+    use crate::params::SortParams;
+    use std::collections::HashMap;
+
+    fn quick_config() -> ShardWorkerConfig {
+        ShardWorkerConfig {
+            shard_id: 0,
+            service: ServiceConfig {
+                workers: 2,
+                sort_threads: 2,
+                queue_capacity: 8,
+                autotune: None,
+            },
+            publish_interval: Duration::from_millis(30),
+        }
+    }
+
+    #[test]
+    fn worker_sorts_jobs_and_absorbs_cache_over_a_socketpair() {
+        let (router_side, worker_side) = UnixStream::pair().expect("socketpair");
+        let worker = std::thread::spawn(move || run_on_stream(worker_side, quick_config()));
+        let mut reader = router_side.try_clone().expect("clone");
+        let mut writer = router_side;
+
+        // Two jobs, ids chosen by the "router".
+        let data = generate_i64(40_000, Distribution::Uniform, 7, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        write_frame(&mut writer, &encode_job(10, &SortRequest::new(data))).unwrap();
+        write_frame(&mut writer, &encode_job(11, &SortRequest::new(vec![3.5f64, -1.0]))).unwrap();
+
+        let mut done = HashMap::new();
+        while done.len() < 2 {
+            match read_frame(&mut reader).expect("frame") {
+                Frame::JobDone { id, cache_flag, result } => {
+                    done.insert(id, (cache_flag, result));
+                }
+                _ => {} // telemetry ticks interleave freely
+            }
+        }
+        let (flag, result) = done.remove(&10).expect("job 10 reported");
+        assert_eq!(flag, protocol::CACHE_FLAG_MISS, "cold cache");
+        let out = result.expect("job ok");
+        assert_eq!(out.id, 10);
+        assert!(out.valid);
+        assert_eq!(out.data::<i64>().unwrap(), &expect[..]);
+        let (_, result) = done.remove(&11).expect("job 11 reported");
+        assert_eq!(result.expect("job ok").data::<f64>().unwrap(), &[-1.0, 3.5]);
+
+        // A CacheSync lands in the worker's live cache, observable through
+        // the cache.entries telemetry counter.
+        let broadcast = TuningCache::new();
+        broadcast.put(40_000, "b9:mix:uniq:w4:pm", SortParams::paper_1e7());
+        write_frame(&mut writer, &encode_cache_sync(&broadcast.to_text())).unwrap();
+        let mut entries_seen = 0u64;
+        for _ in 0..400 {
+            if let Frame::Telemetry { counters } = read_frame(&mut reader).expect("frame") {
+                if let Some((_, v)) = counters.iter().find(|(k, _)| k == "cache.entries") {
+                    entries_seen = *v;
+                    if entries_seen >= 1 {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(entries_seen, 1, "broadcast entry must land in the shard cache");
+
+        write_frame(&mut writer, &encode_shutdown()).unwrap();
+        worker.join().expect("worker thread").expect("worker run");
+    }
+
+    #[test]
+    fn worker_exits_cleanly_when_the_router_vanishes() {
+        let (router_side, worker_side) = UnixStream::pair().expect("socketpair");
+        let worker = std::thread::spawn(move || run_on_stream(worker_side, quick_config()));
+        drop(router_side); // router dies without a Shutdown frame
+        worker.join().expect("worker thread").expect("worker run");
+    }
+}

@@ -10,13 +10,25 @@
 //! which the service previously trusted and which let one mislabeled job
 //! poison the cache for its whole size band.
 //!
+//! Entries optionally carry the **fitness** (seconds on the class's retained
+//! sample) they were published with. Fitness is what makes
+//! [`TuningCache::absorb`] *improvement-aware*: when two caches hold the same
+//! key — a router merging shard publications, a restart restoring a persisted
+//! file over live state — the better-measured entry wins instead of the
+//! last writer, so a well-tuned class can never be clobbered by a worse one.
+//!
 //! Persistence is a versioned plain text file (no serde crate offline): a
-//! `# evosort-tuning-cache v2` header followed by `band class genes...`
-//! lines. Loading is forgiving: corrupt, truncated, or out-of-bounds lines
-//! are skipped with a warning, never propagated as `Err` or bad genes.
+//! `# evosort-tuning-cache v2` header followed by
+//! `band class g0 g1 g2 g3 g4 [fitness]` lines (the fitness column is
+//! optional for back-compat). The same text form is the cross-process
+//! interchange format the sharded service broadcasts over its control
+//! channel ([`TuningCache::to_text`] / [`TuningCache::from_text`]). Loading
+//! is forgiving: corrupt, truncated, or out-of-bounds lines are skipped with
+//! a warning, never propagated as `Err` or bad genes.
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use anyhow::{Context, Result};
@@ -46,10 +58,23 @@ impl CacheKey {
     }
 }
 
+/// One cached tuning result: parameters plus, when known, the fitness
+/// (seconds on the class's retained sample) they were published with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheEntry {
+    pub params: SortParams,
+    /// Measured fitness recorded at publish time; `None` for explicit
+    /// [`TuningCache::put`]s and legacy persisted files. Lower is better.
+    pub fitness: Option<f64>,
+}
+
 /// Thread-safe tuned-parameter cache with text persistence.
 #[derive(Default)]
 pub struct TuningCache {
-    map: RwLock<HashMap<CacheKey, SortParams>>,
+    map: RwLock<HashMap<CacheKey, CacheEntry>>,
+    /// Bumped on every mutation that changed the map — cheap change
+    /// detection for the shard workers' periodic cache publication.
+    version: AtomicU64,
 }
 
 impl TuningCache {
@@ -58,11 +83,29 @@ impl TuningCache {
     }
 
     pub fn get(&self, n: usize, dist: &str) -> Option<SortParams> {
+        self.map.read().unwrap().get(&CacheKey::new(n, dist)).map(|e| e.params)
+    }
+
+    /// The full entry (parameters + recorded fitness) for a key.
+    pub fn entry(&self, n: usize, dist: &str) -> Option<CacheEntry> {
         self.map.read().unwrap().get(&CacheKey::new(n, dist)).copied()
     }
 
+    /// Insert with no recorded fitness (explicit pre-warm / override path).
+    /// Unconditional: an explicit put expresses operator intent.
     pub fn put(&self, n: usize, dist: &str, params: SortParams) {
-        self.map.write().unwrap().insert(CacheKey::new(n, dist), params);
+        let entry = CacheEntry { params, fitness: None };
+        self.map.write().unwrap().insert(CacheKey::new(n, dist), entry);
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Insert with the measured fitness the parameters were published with
+    /// (the online tuner's path). Non-finite fitness is stored as unknown.
+    pub fn put_with_fitness(&self, n: usize, dist: &str, params: SortParams, fitness: f64) {
+        let fitness = (fitness.is_finite() && fitness >= 0.0).then_some(fitness);
+        let entry = CacheEntry { params, fitness };
+        self.map.write().unwrap().insert(CacheKey::new(n, dist), entry);
+        self.version.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn len(&self) -> usize {
@@ -73,48 +116,81 @@ impl TuningCache {
         self.len() == 0
     }
 
-    /// Snapshot of every entry (for reports and tests).
-    pub fn entries(&self) -> Vec<(CacheKey, SortParams)> {
-        self.map.read().unwrap().iter().map(|(k, p)| (k.clone(), *p)).collect()
+    /// Monotone change counter (bumped whenever the map changed).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
     }
 
-    /// Copy every entry of `other` into this cache (used to restore
-    /// persisted parameters into a live service's shared cache). Returns the
-    /// number of entries absorbed.
+    /// Snapshot of every entry (for reports and tests).
+    pub fn entries(&self) -> Vec<(CacheKey, SortParams)> {
+        self.map.read().unwrap().iter().map(|(k, e)| (k.clone(), e.params)).collect()
+    }
+
+    /// Merge `other` into this cache, **improvement-aware**: when both
+    /// caches hold a key, the entry with the better (lower) recorded fitness
+    /// wins; a measured entry beats an unmeasured one; an unmeasured
+    /// incoming entry never clobbers a measured local one. Two unmeasured
+    /// entries keep the historical last-writer-wins behaviour (the restore
+    /// path absorbs persisted parameters over an empty live cache).
+    ///
+    /// Returns the number of entries actually inserted or replaced — the
+    /// sharded router uses "absorbed > 0" as its re-broadcast trigger.
     pub fn absorb(&self, other: &TuningCache) -> usize {
         let theirs = other.map.read().unwrap();
         let mut ours = self.map.write().unwrap();
-        for (k, p) in theirs.iter() {
-            ours.insert(k.clone(), *p);
+        let mut changed = 0usize;
+        for (k, incoming) in theirs.iter() {
+            let replace = match ours.get(k) {
+                None => true,
+                Some(local) => match (incoming.fitness, local.fitness) {
+                    (Some(fi), Some(fl)) => fi < fl,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => local.params != incoming.params,
+                },
+            };
+            if replace {
+                ours.insert(k.clone(), *incoming);
+                changed += 1;
+            }
         }
-        theirs.len()
+        drop(ours);
+        if changed > 0 {
+            self.version.fetch_add(1, Ordering::Relaxed);
+        }
+        changed
     }
 
-    /// Persist as a versioned header plus `band class g0 g1 g2 g3 g4` lines.
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the versioned text format: a header plus
+    /// `band class g0 g1 g2 g3 g4 [fitness]` lines. This is both the on-disk
+    /// format ([`TuningCache::save`]) and the cross-process interchange the
+    /// sharded service ships over its control channel.
+    pub fn to_text(&self) -> String {
         let map = self.map.read().unwrap();
         let mut lines: Vec<String> = map
             .iter()
-            .map(|(k, p)| {
-                let g = p.to_genes();
-                format!(
+            .map(|(k, e)| {
+                let g = e.params.to_genes();
+                let mut line = format!(
                     "{} {} {} {} {} {} {}",
                     k.size_band, k.dist, g[0], g[1], g[2], g[3], g[4]
-                )
+                );
+                if let Some(f) = e.fitness {
+                    line.push_str(&format!(" {f:.9e}"));
+                }
+                line
             })
             .collect();
         lines.sort();
-        let body = format!("{HEADER_PREFIX}{FORMAT_VERSION}\n{}\n", lines.join("\n"));
-        std::fs::write(path, body).with_context(|| format!("writing {}", path.display()))
+        format!("{HEADER_PREFIX}{FORMAT_VERSION}\n{}\n", lines.join("\n"))
     }
 
-    /// Load from the text format (headered v2 or legacy headerless v1).
-    /// Corrupt, truncated, or out-of-bounds lines are skipped with a warning
-    /// rather than failing the whole cache or clamping garbage genes into
-    /// plausible-looking parameters.
-    pub fn load(path: &Path) -> Result<TuningCache> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+    /// Parse the text format (headered v2 or legacy headerless v1; 7-column
+    /// lines load with unknown fitness). Corrupt, truncated, or
+    /// out-of-bounds lines are skipped with a warning rather than failing
+    /// the whole cache or clamping garbage genes into plausible-looking
+    /// parameters.
+    pub fn from_text(text: &str) -> TuningCache {
         let cache = TuningCache::new();
         // The widest bounds any writer could have used: a persisted genome
         // outside them is corruption, not tuning.
@@ -127,9 +203,8 @@ impl TuningCache {
                     if let Ok(v) = rest.trim().parse::<u32>() {
                         if v > FORMAT_VERSION {
                             crate::log_warn!(
-                                "cache file {} is format v{v} (this build writes \
-                                 v{FORMAT_VERSION}); loading best-effort",
-                                path.display()
+                                "cache data is format v{v} (this build writes \
+                                 v{FORMAT_VERSION}); loading best-effort"
                             );
                         }
                     }
@@ -139,13 +214,13 @@ impl TuningCache {
                     continue; // comments
                 }
                 let parts: Vec<&str> = line.split_whitespace().collect();
-                if parts.len() != 7 {
+                if parts.len() != 7 && parts.len() != 8 {
                     if !line.trim().is_empty() {
                         crate::log_warn!("skipping malformed cache line: {line:?}");
                     }
                     continue;
                 }
-                let parse = || -> Option<(CacheKey, SortParams)> {
+                let parse = || -> Option<(CacheKey, CacheEntry)> {
                     let band: u32 = parts[0].parse().ok()?;
                     let mut genes = [0i64; 5];
                     for (i, g) in genes.iter_mut().enumerate() {
@@ -154,17 +229,27 @@ impl TuningCache {
                     if !bounds.validate(&genes) {
                         return None;
                     }
+                    let fitness = match parts.get(7) {
+                        Some(tok) => {
+                            let f: f64 = tok.parse().ok()?;
+                            if !(f.is_finite() && f >= 0.0) {
+                                return None;
+                            }
+                            Some(f)
+                        }
+                        None => None,
+                    };
                     Some((
                         CacheKey { size_band: band, dist: parts[1].to_string() },
-                        SortParams::from_genes(&genes),
+                        CacheEntry { params: SortParams::from_genes(&genes), fitness },
                     ))
                 };
                 match parse() {
-                    Some((k, p)) => {
+                    Some((k, e)) => {
                         if !looks_like_fingerprint_label(&k.dist) {
                             legacy_keys += 1;
                         }
-                        map.insert(k, p);
+                        map.insert(k, e);
                     }
                     None => crate::log_warn!("skipping unparseable cache line: {line:?}"),
                 }
@@ -175,12 +260,25 @@ impl TuningCache {
             // string-keyed get/put API serves them), but the service resolves
             // through fingerprint labels, so such entries are never served.
             crate::log_warn!(
-                "{legacy_keys} cache entries in {} use legacy (non-fingerprint) keys; \
-                 fingerprint-based resolution will not serve them",
-                path.display()
+                "{legacy_keys} cache entries use legacy (non-fingerprint) keys; \
+                 fingerprint-based resolution will not serve them"
             );
         }
-        Ok(cache)
+        cache
+    }
+
+    /// Persist as a versioned header plus entry lines (see
+    /// [`TuningCache::to_text`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load from the text format (see [`TuningCache::from_text`]).
+    pub fn load(path: &Path) -> Result<TuningCache> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(TuningCache::from_text(&text))
     }
 }
 
@@ -220,16 +318,33 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip() {
+    fn version_tracks_changes() {
+        let c = TuningCache::new();
+        let v0 = c.version();
+        c.put(1_000_000, "a", SortParams::paper_1e7());
+        assert!(c.version() > v0);
+        let v1 = c.version();
+        // An absorb that changes nothing does not bump the version.
+        let same = TuningCache::new();
+        same.put(1_000_000, "a", SortParams::paper_1e7());
+        assert_eq!(c.absorb(&same), 0);
+        assert_eq!(c.version(), v1);
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_fitness() {
         let c = TuningCache::new();
         c.put(10_000_000, "uniform", SortParams::paper_1e7());
-        c.put(100_000_000, "zipf", SortParams::paper_1e8());
+        c.put_with_fitness(100_000_000, "zipf", SortParams::paper_1e8(), 0.0421);
         let path = std::env::temp_dir().join(format!("evosort-cache-{}.txt", std::process::id()));
         c.save(&path).unwrap();
         let loaded = TuningCache::load(&path).unwrap();
         assert_eq!(loaded.len(), 2);
         assert_eq!(loaded.get(10_000_000, "uniform"), Some(SortParams::paper_1e7()));
-        assert_eq!(loaded.get(100_000_000, "zipf"), Some(SortParams::paper_1e8()));
+        assert_eq!(loaded.entry(10_000_000, "uniform").unwrap().fitness, None);
+        let zipf = loaded.entry(100_000_000, "zipf").unwrap();
+        assert_eq!(zipf.params, SortParams::paper_1e8());
+        assert!((zipf.fitness.unwrap() - 0.0421).abs() < 1e-9);
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -240,6 +355,19 @@ mod tests {
         let loaded = TuningCache::load(&path).unwrap();
         assert_eq!(loaded.len(), 1);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_skips_bad_fitness_column() {
+        // A non-numeric or negative fitness column is corruption: skip the
+        // line entirely rather than inventing an unmeasured entry.
+        let c = TuningCache::from_text(
+            "14 a 3075 31291 4 99574 1418 nonsense\n\
+             14 b 3075 31291 4 99574 1418 -1.0\n\
+             14 c 3075 31291 4 99574 1418 4.2e-3\n",
+        );
+        assert_eq!(c.len(), 1);
+        assert!((c.entry(10_000_000, "c").unwrap().fitness.unwrap() - 4.2e-3).abs() < 1e-12);
     }
 
     #[test]
@@ -281,13 +409,9 @@ mod tests {
 
     #[test]
     fn future_version_header_loads_best_effort() {
-        let path =
-            std::env::temp_dir().join(format!("evosort-cache-v9-{}.txt", std::process::id()));
-        std::fs::write(&path, "# evosort-tuning-cache v9\n14 x 3075 31291 4 99574 1418\n")
-            .unwrap();
-        let loaded = TuningCache::load(&path).unwrap();
+        let loaded =
+            TuningCache::from_text("# evosort-tuning-cache v9\n14 x 3075 31291 4 99574 1418\n");
         assert_eq!(loaded.len(), 1);
-        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
@@ -296,11 +420,62 @@ mod tests {
         live.put(1_000_000, "a", SortParams::paper_1e7());
         let persisted = TuningCache::new();
         persisted.put(1_000_000, "b", SortParams::paper_1e8());
-        persisted.put(1_000_000, "a", SortParams::paper_1e9()); // overwrite
+        persisted.put(1_000_000, "a", SortParams::paper_1e9()); // overwrite (both unmeasured)
         assert_eq!(live.absorb(&persisted), 2);
         assert_eq!(live.len(), 2);
         assert_eq!(live.get(1_000_000, "a"), Some(SortParams::paper_1e9()));
         assert_eq!(live.get(1_000_000, "b"), Some(SortParams::paper_1e8()));
         assert_eq!(live.entries().len(), 2);
+    }
+
+    #[test]
+    fn absorb_is_improvement_aware() {
+        // Regression test for the last-writer-wins merge bug: a worse
+        // incoming entry must not clobber a better-tuned local one.
+        let live = TuningCache::new();
+        live.put_with_fitness(1_000_000, "a", SortParams::paper_1e7(), 0.010);
+        let incoming = TuningCache::new();
+        incoming.put_with_fitness(1_000_000, "a", SortParams::paper_1e9(), 0.050);
+        assert_eq!(live.absorb(&incoming), 0, "worse fitness must not be absorbed");
+        assert_eq!(live.get(1_000_000, "a"), Some(SortParams::paper_1e7()));
+        assert!((live.entry(1_000_000, "a").unwrap().fitness.unwrap() - 0.010).abs() < 1e-12);
+
+        // A better incoming entry replaces.
+        let better = TuningCache::new();
+        better.put_with_fitness(1_000_000, "a", SortParams::paper_1e8(), 0.004);
+        assert_eq!(live.absorb(&better), 1);
+        assert_eq!(live.get(1_000_000, "a"), Some(SortParams::paper_1e8()));
+
+        // An unmeasured incoming entry never clobbers a measured local one…
+        let unmeasured = TuningCache::new();
+        unmeasured.put(1_000_000, "a", SortParams::paper_1e9());
+        assert_eq!(live.absorb(&unmeasured), 0);
+        assert_eq!(live.get(1_000_000, "a"), Some(SortParams::paper_1e8()));
+
+        // …while a measured incoming entry beats an unmeasured local one.
+        let live2 = TuningCache::new();
+        live2.put(1_000_000, "a", SortParams::paper_1e9());
+        let measured = TuningCache::new();
+        measured.put_with_fitness(1_000_000, "a", SortParams::paper_1e7(), 0.02);
+        assert_eq!(live2.absorb(&measured), 1);
+        assert_eq!(live2.get(1_000_000, "a"), Some(SortParams::paper_1e7()));
+    }
+
+    #[test]
+    fn text_roundtrip_is_lossless_for_the_wire() {
+        let c = TuningCache::new();
+        c.put_with_fitness(50_000, "b9:mix:uniq:w4:pm", SortParams::paper_1e7(), 1.25e-4);
+        c.put(5_000_000, "b13:mix:uniq:w8:pm:f64", SortParams::paper_1e8());
+        let text = c.to_text();
+        let back = TuningCache::from_text(&text);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(50_000, "b9:mix:uniq:w4:pm"), Some(SortParams::paper_1e7()));
+        assert!(
+            (back.entry(50_000, "b9:mix:uniq:w4:pm").unwrap().fitness.unwrap() - 1.25e-4).abs()
+                < 1e-12
+        );
+        assert_eq!(back.entry(5_000_000, "b13:mix:uniq:w8:pm:f64").unwrap().fitness, None);
+        // Round-tripping again is a fixed point.
+        assert_eq!(back.to_text(), text);
     }
 }

@@ -19,6 +19,9 @@ fn main() {
         "symbolic" => commands::cmd_symbolic(&args),
         "repro" => commands::cmd_repro(&args),
         "serve" => commands::cmd_serve(&args),
+        // Internal: the child-process side of `serve --shards N` (spawned by
+        // the shard router, not meant for direct use).
+        "shard-worker" => commands::cmd_shard_worker(&args),
         "info" => commands::cmd_info(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");

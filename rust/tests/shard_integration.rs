@@ -1,0 +1,234 @@
+//! Cross-process sharding integration tests: real `evosort shard-worker`
+//! child processes behind a [`ShardRouter`], driven through the same
+//! `Ticket`/`BatchTicket`/`ResultStream` surface the in-process service
+//! exposes.
+//!
+//! The worker binary is the crate's own CLI (`CARGO_BIN_EXE_evosort` — the
+//! test harness binary is not it, so the spec overrides the spawn path).
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use evosort::autotune::AutotunePolicy;
+use evosort::coordinator::{JobResult, ShardRouter, ShardSpec, SortRequest};
+use evosort::data::{generate_i64, Distribution};
+use evosort::sort::{Dtype, SortPayload};
+
+fn spec(shards: usize, workers_per_shard: usize) -> ShardSpec {
+    ShardSpec {
+        shards,
+        workers_per_shard,
+        sort_threads: 2,
+        binary: Some(PathBuf::from(env!("CARGO_BIN_EXE_evosort"))),
+        ..ShardSpec::default()
+    }
+}
+
+fn wait_until(limit: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + limit;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[test]
+fn sharded_batch_sorts_mixed_dtypes_across_processes() {
+    let router = ShardRouter::spawn(spec(2, 1)).expect("router up");
+
+    // Really two separate OS processes serving us.
+    let pids = router.shard_pids();
+    assert_eq!(pids.len(), 2);
+    let (a, b) = (pids[0].expect("shard 0 live"), pids[1].expect("shard 1 live"));
+    assert_ne!(a, b, "distinct worker processes");
+    assert_ne!(a, std::process::id());
+    assert_ne!(b, std::process::id());
+
+    // One mixed-dtype batch; expected outputs computed locally.
+    let dtypes = Dtype::all();
+    let requests: Vec<SortRequest> = (0..16u64)
+        .map(|i| {
+            let n = 10_000 + (i as usize * 911) % 15_000;
+            let data = generate_i64(n, Distribution::Uniform, i, 2);
+            let payload = SortPayload::from_i64_values(data, dtypes[i as usize % dtypes.len()]);
+            SortRequest::from_payload(payload)
+        })
+        .collect();
+    let report = router.submit_batch_requests(requests).wait();
+    assert_eq!(report.stats.jobs, 16);
+    assert_eq!(report.stats.failed, 0, "no job may fail");
+    assert_eq!(report.stats.invalid, 0, "every output validates");
+    assert_eq!(report.stats.per_dtype.len(), 4, "all four dtypes served");
+    let ids: std::collections::HashSet<u64> = report.outputs().map(|o| o.id).collect();
+    assert_eq!(ids.len(), 16, "router-level ids are unique");
+    for out in report.outputs() {
+        match out.dtype() {
+            Dtype::I64 => {
+                let v = out.data::<i64>().unwrap();
+                assert!(v.windows(2).all(|w| w[0] <= w[1]));
+            }
+            Dtype::F64 => {
+                let v = out.data::<f64>().unwrap();
+                assert!(v.windows(2).all(|w| w[0] <= w[1]));
+            }
+            _ => {}
+        }
+    }
+
+    // Both shards took part, and the metric pairs closed.
+    let metrics = router.metrics();
+    let shard0 = metrics.counter("shard.0.jobs.completed");
+    let shard1 = metrics.counter("shard.1.jobs.completed");
+    assert!(shard0 > 0, "shard 0 served no jobs");
+    assert!(shard1 > 0, "shard 1 served no jobs");
+    assert_eq!(shard0 + shard1, 16);
+    assert_eq!(metrics.counter("jobs.submitted"), 16);
+    assert_eq!(metrics.counter("jobs.completed"), 16);
+    assert_eq!(metrics.counter("batch.submitted"), 1);
+    assert_eq!(metrics.counter("batch.completed"), 1);
+
+    // The single-request path rides the same transport.
+    let data = generate_i64(5_000, Distribution::Zipf, 99, 2);
+    let mut expect = data.clone();
+    expect.sort_unstable();
+    let out = router.submit_request(SortRequest::new(data)).wait().expect("single job ok");
+    assert!(out.valid);
+    assert_eq!(out.data::<i64>().unwrap(), &expect[..]);
+}
+
+#[test]
+fn shard_failover_worker_lost_and_respawn() {
+    // Kill a shard mid-batch: its in-flight jobs must resolve
+    // Err(WorkerLost) (not hang), queued jobs must reroute to the survivor,
+    // the batch counters must stay in lockstep, and after the respawn the
+    // next batch must fully complete. The kill window is the duration of an
+    // in-flight sort, so the scenario retries a few times rather than
+    // relying on one race.
+    let router = ShardRouter::spawn(spec(2, 1)).expect("router up");
+    let metrics = std::sync::Arc::clone(router.metrics());
+    let mut batches = 0u64;
+    let mut observed_loss = false;
+
+    for attempt in 0..3u64 {
+        let requests: Vec<SortRequest> = (0..12u64)
+            .map(|i| {
+                let data = generate_i64(800_000, Distribution::Uniform, i ^ (attempt * 101), 2);
+                SortRequest::new(data)
+            })
+            .collect();
+        let stream = router.submit_batch_requests(requests).stream();
+        batches += 1;
+
+        // Wait for shard 0 to have work on its socket, then kill it.
+        assert!(
+            wait_until(Duration::from_secs(30), || router.inflight(0) > 0),
+            "shard 0 never received work"
+        );
+        assert!(router.kill_shard(0), "kill must reach a live child");
+
+        let results: Vec<JobResult> = stream.collect();
+        assert_eq!(results.len(), 12, "the stream always yields every slot");
+        let lost = results.iter().filter(|r| r.is_err()).count();
+        let completed = results.len() - lost;
+        assert!(completed >= 1, "the surviving shard completes the rest of the batch");
+        for result in &results {
+            if let Ok(out) = result {
+                assert!(out.valid);
+            }
+        }
+        assert!(
+            lost <= 3,
+            "only the in-flight window may be lost (window 2 + dispatch race), got {lost}"
+        );
+        if lost >= 1 {
+            observed_loss = true;
+            break;
+        }
+    }
+    assert!(observed_loss, "killing a busy shard must surface Err(WorkerLost)");
+
+    // The batch counter pair stays in lockstep across the failure.
+    assert_eq!(metrics.counter("batch.submitted"), batches);
+    assert_eq!(metrics.counter("batch.completed"), batches);
+    assert!(metrics.counter("shard.jobs.lost") >= 1);
+    assert!(metrics.counter("shard.deaths") >= 1);
+
+    // The dead shard respawns and the next batch completes fully.
+    assert!(
+        wait_until(Duration::from_secs(30), || metrics.counter("shard.respawns") >= 1),
+        "the killed shard must respawn"
+    );
+    let requests: Vec<SortRequest> = (0..8u64)
+        .map(|i| SortRequest::new(generate_i64(20_000, Distribution::Uniform, 500 + i, 2)))
+        .collect();
+    let report = router.submit_batch_requests(requests).wait();
+    assert_eq!(report.stats.failed, 0, "post-respawn batch completes fully");
+    assert_eq!(report.stats.invalid, 0);
+    assert_eq!(metrics.counter("batch.submitted"), batches + 1);
+    assert_eq!(metrics.counter("batch.completed"), batches + 1);
+}
+
+#[test]
+fn cross_shard_cache_broadcast_shares_tuned_classes() {
+    // Every job in every round has the same workload shape, so both shards
+    // accumulate observations of one fingerprint class. Whichever shard's
+    // tuner publishes first, the router must merge the entry and broadcast
+    // it — after which *both* shards' caches hold the class (observable
+    // through the cache.entries telemetry gauge).
+    let policy = AutotunePolicy {
+        min_observations: 4,
+        cooldown_observations: 2,
+        retained_sample_cap: 4096,
+        generations_per_cycle: 2,
+        population: 6,
+        max_cpu_share: 1.0,
+        min_improvement_pct: 0.0,
+        sample_every: 1,
+        ..AutotunePolicy::default()
+    };
+    let spec = ShardSpec {
+        autotune: Some(policy),
+        publish_interval: Duration::from_millis(100),
+        ..spec(2, 1)
+    };
+    let router = ShardRouter::spawn(spec).expect("router up");
+    let metrics = std::sync::Arc::clone(router.metrics());
+
+    let deadline = Instant::now() + Duration::from_secs(90);
+    let mut round = 0u64;
+    let synced = loop {
+        let requests: Vec<SortRequest> = (0..8u64)
+            .map(|i| {
+                let data = generate_i64(20_000, Distribution::Uniform, round * 8 + i, 2);
+                SortRequest::new(data)
+            })
+            .collect();
+        let report = router.submit_batch_requests(requests).wait();
+        assert_eq!(report.stats.failed, 0);
+        round += 1;
+        let broadcast = metrics.counter("shard.cache.broadcasts") >= 1;
+        let shard0 = metrics.gauge("shard.0.local.cache.entries").unwrap_or(0.0) >= 1.0;
+        let shard1 = metrics.gauge("shard.1.local.cache.entries").unwrap_or(0.0) >= 1.0;
+        if broadcast && shard0 && shard1 {
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    assert!(
+        synced,
+        "no cross-shard cache sync after {round} rounds: broadcasts={} s0={:?} s1={:?}",
+        metrics.counter("shard.cache.broadcasts"),
+        metrics.gauge("shard.0.local.cache.entries"),
+        metrics.gauge("shard.1.local.cache.entries"),
+    );
+    assert!(metrics.counter("shard.cache.publishes") >= 1);
+    assert!(!router.cache().is_empty(), "the router holds the merged view");
+}
