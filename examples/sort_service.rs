@@ -19,6 +19,7 @@ fn main() {
         sort_threads: threads.div_ceil(2),
         queue_capacity: 8, // small queue => visible backpressure
         autotune: None,    // see `serve --autotune` for the online tuner
+        exec: Default::default(), // persistent parked executor (see README "Performance")
     });
 
     // Pre-warm the tuning cache for one workload class, as a tuned

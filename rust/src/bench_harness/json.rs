@@ -1,0 +1,489 @@
+//! The machine-readable bench report (`evosort bench --json`) and the
+//! regression gate that diffs two reports (`--compare`).
+//!
+//! No serde is available offline, so the format is hand-rolled: a writer
+//! emitting a fixed `evosort-bench-v1` schema and a minimal recursive-
+//! descent JSON reader that understands exactly that schema (it parses any
+//! well-formed JSON value, then maps the known fields).
+//!
+//! ## Hardware portability
+//!
+//! Raw medians do not transfer between machines, so the regression gate
+//! compares each entry's **score** — a dimensionless, hardware-normalised
+//! figure of merit (higher is better):
+//!
+//! * kernel entries: speedup over the same run's `std` baseline at the same
+//!   `(dist, n)` point;
+//! * the service entry: parked-executor throughput over the spawn-per-call
+//!   baseline measured in the same run.
+//!
+//! Entries with `score <= 0` are unmeasured placeholders (the committed
+//! seed baseline starts that way — `provenance` says so) and are skipped by
+//! the comparison, so the gate arms itself automatically once a measured
+//! baseline is committed.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One benchmarked point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// Stable identity used to pair entries across reports,
+    /// e.g. `kernel/radix/uniform/n100000` or `service/parked/j32xn100000`.
+    pub id: String,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    /// Elements per second implied by the median (0 when not applicable).
+    pub throughput: f64,
+    /// Hardware-normalised figure of merit; `<= 0` means unmeasured.
+    pub score: f64,
+}
+
+/// A full bench report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDoc {
+    /// Format tag, always `evosort-bench-v1`.
+    pub schema: String,
+    /// `measured` or `seed-unmeasured` (the committed bootstrap baseline).
+    pub provenance: String,
+    pub threads: usize,
+    pub scale_div: usize,
+    pub entries: Vec<BenchEntry>,
+}
+
+pub const SCHEMA: &str = "evosort-bench-v1";
+pub const PROVENANCE_MEASURED: &str = "measured";
+pub const PROVENANCE_SEED: &str = "seed-unmeasured";
+
+impl BenchDoc {
+    pub fn entry(&self, id: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    /// Serialise to pretty-printed JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", quote(&self.schema)));
+        out.push_str(&format!("  \"provenance\": {},\n", quote(&self.provenance)));
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str(&format!("  \"scale_div\": {},\n", self.scale_div));
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"id\": {}, ", quote(&e.id)));
+            out.push_str(&format!("\"median_secs\": {}, ", num(e.median_secs)));
+            out.push_str(&format!("\"mean_secs\": {}, ", num(e.mean_secs)));
+            out.push_str(&format!("\"stddev_secs\": {}, ", num(e.stddev_secs)));
+            out.push_str(&format!("\"throughput\": {}, ", num(e.throughput)));
+            out.push_str(&format!("\"score\": {}", num(e.score)));
+            out.push_str(if i + 1 < self.entries.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a report previously written by [`to_json`](Self::to_json).
+    pub fn from_json(text: &str) -> Result<BenchDoc> {
+        let value = Json::parse(text)?;
+        let obj = value.as_object().context("bench report: top level must be an object")?;
+        let schema = get_str(obj, "schema")?;
+        if schema != SCHEMA {
+            bail!("bench report: unsupported schema {schema:?} (expected {SCHEMA:?})");
+        }
+        let entries_val =
+            find(obj, "entries").context("bench report: missing entries")?;
+        let Json::Array(items) = entries_val else {
+            bail!("bench report: entries must be an array");
+        };
+        let mut entries = Vec::with_capacity(items.len());
+        for item in items {
+            let e = item.as_object().context("bench entry must be an object")?;
+            entries.push(BenchEntry {
+                id: get_str(e, "id")?,
+                median_secs: get_num(e, "median_secs")?,
+                mean_secs: get_num(e, "mean_secs")?,
+                stddev_secs: get_num(e, "stddev_secs")?,
+                throughput: get_num(e, "throughput")?,
+                score: get_num(e, "score")?,
+            });
+        }
+        Ok(BenchDoc {
+            schema,
+            provenance: get_str(obj, "provenance")?,
+            threads: get_num(obj, "threads")? as usize,
+            scale_div: get_num(obj, "scale_div")? as usize,
+            entries,
+        })
+    }
+}
+
+/// Outcome of comparing a fresh report against a committed baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comparison {
+    /// Entries whose normalised score dropped by more than the allowed
+    /// factor: `(id, baseline score, new score)`.
+    pub regressions: Vec<(String, f64, f64)>,
+    /// Entry ids compared (score > 0 on both sides).
+    pub compared: usize,
+    /// Entry ids present in both reports but unmeasured on at least one
+    /// side (skipped).
+    pub skipped: usize,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare `new` against `base`: an entry regresses when its score drops by
+/// more than `max_regression` (e.g. `2.0` = score halved). Unmeasured
+/// entries (score <= 0, as in the seed baseline) are skipped.
+pub fn compare(base: &BenchDoc, new: &BenchDoc, max_regression: f64) -> Comparison {
+    let max_regression = max_regression.max(1.0);
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    let mut skipped = 0usize;
+    for b in &base.entries {
+        let Some(n) = new.entry(&b.id) else { continue };
+        if b.score <= 0.0 || n.score <= 0.0 {
+            skipped += 1;
+            continue;
+        }
+        compared += 1;
+        if n.score * max_regression < b.score {
+            regressions.push((b.id.clone(), b.score, n.score));
+        }
+    }
+    Comparison { regressions, compared, skipped }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        // Enough digits to round-trip bench timings; trailing-zero noise is
+        // irrelevant for a machine format.
+        format!("{x:.9}")
+    } else {
+        "0.0".into()
+    }
+}
+
+fn find<'a>(obj: &'a [(String, Json)], key: &str) -> Option<&'a Json> {
+    obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn get_str(obj: &[(String, Json)], key: &str) -> Result<String> {
+    match find(obj, key) {
+        Some(Json::String(s)) => Ok(s.clone()),
+        _ => Err(anyhow!("bench report: missing string field {key:?}")),
+    }
+}
+
+fn get_num(obj: &[(String, Json)], key: &str) -> Result<f64> {
+    match find(obj, key) {
+        Some(Json::Number(x)) => Ok(*x),
+        _ => Err(anyhow!("bench report: missing numeric field {key:?}")),
+    }
+}
+
+/// Minimal JSON value + recursive-descent parser (objects as ordered pairs;
+/// good enough for the bench schema, not a general-purpose library).
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Object(Vec<(String, Json)>),
+    Array(Vec<Json>),
+    String(String),
+    Number(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn as_object(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Object(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("json: trailing data at byte {pos}");
+        }
+        Ok(value)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("json: expected {:?} at byte {}", c as char, *pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else { bail!("json: unexpected end of input") };
+    match c {
+        b'{' => parse_object(b, pos),
+        b'[' => parse_array(b, pos),
+        b'"' => Ok(Json::String(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("json: invalid literal at byte {}", *pos)
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'{')?;
+    let mut pairs = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Object(pairs));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let value = parse_value(b, pos)?;
+        pairs.push((key, value));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Object(pairs));
+            }
+            _ => bail!("json: expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Array(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            _ => bail!("json: expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else { bail!("json: unterminated string") };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&e) = b.get(*pos) else { bail!("json: unterminated escape") };
+                *pos += 1;
+                match e {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos..*pos + 4)
+                            .context("json: truncated \\u escape")?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)
+                            .context("json: invalid \\u escape")?;
+                        *pos += 4;
+                        // Surrogate pairs are not emitted by our writer;
+                        // map lone surrogates to the replacement character.
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    _ => bail!("json: unknown escape at byte {}", *pos),
+                }
+            }
+            c => {
+                // Multi-byte UTF-8: copy the full sequence.
+                let start = *pos - 1;
+                let len = utf8_len(c);
+                *pos = start + len;
+                let chunk = b.get(start..start + len).context("json: truncated utf-8")?;
+                out.push_str(std::str::from_utf8(chunk)?);
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    let x: f64 = text.parse().with_context(|| format!("json: bad number {text:?}"))?;
+    Ok(Json::Number(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> BenchDoc {
+        BenchDoc {
+            schema: SCHEMA.into(),
+            provenance: PROVENANCE_MEASURED.into(),
+            threads: 8,
+            scale_div: 100,
+            entries: vec![
+                BenchEntry {
+                    id: "kernel/radix/uniform/n100000".into(),
+                    median_secs: 0.00123,
+                    mean_secs: 0.00125,
+                    stddev_secs: 0.00002,
+                    throughput: 81_300_000.0,
+                    score: 3.4,
+                },
+                BenchEntry {
+                    id: "service/parked/j32xn100000".into(),
+                    median_secs: 0.5,
+                    mean_secs: 0.5,
+                    stddev_secs: 0.01,
+                    throughput: 64.0,
+                    score: 1.8,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = doc();
+        let text = d.to_json();
+        let back = BenchDoc::from_json(&text).expect("parse own output");
+        assert_eq!(back.schema, d.schema);
+        assert_eq!(back.threads, 8);
+        assert_eq!(back.scale_div, 100);
+        assert_eq!(back.entries.len(), 2);
+        for (a, b) in back.entries.iter().zip(&d.entries) {
+            assert_eq!(a.id, b.id);
+            assert!((a.median_secs - b.median_secs).abs() < 1e-12);
+            assert!((a.score - b.score).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parser_handles_whitespace_escapes_and_rejects_garbage() {
+        let v = Json::parse(" { \"a\\n\" : [ 1.5e-3 , true , null , \"x\" ] } ").unwrap();
+        let obj = v.as_object().unwrap();
+        assert_eq!(obj[0].0, "a\n");
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse("{\"a\": nope}").is_err());
+        assert!(BenchDoc::from_json("{\"schema\": \"other-v9\"}").is_err());
+    }
+
+    #[test]
+    fn compare_flags_score_collapse_and_skips_unmeasured() {
+        let base = doc();
+        let mut fresh = doc();
+        // Score halved exactly: 2.0x tolerance keeps it (not strictly more).
+        fresh.entries[0].score = base.entries[0].score / 2.0;
+        let c = compare(&base, &fresh, 2.0);
+        assert!(c.passed(), "exactly-2x drop is within a 2x gate");
+        assert_eq!(c.compared, 2);
+
+        fresh.entries[0].score = base.entries[0].score / 2.1;
+        let c = compare(&base, &fresh, 2.0);
+        assert!(!c.passed());
+        assert_eq!(c.regressions.len(), 1);
+        assert_eq!(c.regressions[0].0, base.entries[0].id);
+
+        // Unmeasured seed entries are skipped, not compared.
+        let mut seed = doc();
+        seed.provenance = PROVENANCE_SEED.into();
+        for e in &mut seed.entries {
+            e.score = 0.0;
+            e.median_secs = 0.0;
+        }
+        let c = compare(&seed, &fresh, 2.0);
+        assert!(c.passed());
+        assert_eq!(c.compared, 0);
+        assert_eq!(c.skipped, 2);
+    }
+
+    #[test]
+    fn compare_ignores_ids_missing_from_the_new_report() {
+        let base = doc();
+        let mut fresh = doc();
+        fresh.entries.remove(1);
+        let c = compare(&base, &fresh, 2.0);
+        assert!(c.passed());
+        assert_eq!(c.compared, 1);
+    }
+}

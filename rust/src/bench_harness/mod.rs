@@ -6,6 +6,7 @@
 //! this module; each regenerates one of the paper's tables/figures and
 //! prints the paper's reference values alongside the measured ones.
 
+pub mod json;
 pub mod tables;
 
 use crate::util::stats::Summary;
@@ -149,14 +150,21 @@ pub const PAPER_TABLE2: &[(usize, f64, f64, f64)] = &[
     (5_000_000_000, 3.7241, 615.2936, 165.3),
 ];
 
-/// Scale a paper-sized n down for this testbed: divide by
-/// `EVOSORT_BENCH_SCALE_DIV` (default 100), floored at 1e5.
-pub fn scaled_size(paper_n: usize) -> usize {
-    let denom: usize = std::env::var("EVOSORT_BENCH_SCALE_DIV")
+/// The effective `EVOSORT_BENCH_SCALE_DIV` divisor (default 100) — the one
+/// source of truth [`scaled_size`] and the bench report's provenance field
+/// share.
+pub fn scale_div() -> usize {
+    std::env::var("EVOSORT_BENCH_SCALE_DIV")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(100);
-    (paper_n / denom.max(1)).max(100_000)
+        .unwrap_or(100usize)
+        .max(1)
+}
+
+/// Scale a paper-sized n down for this testbed: divide by
+/// [`scale_div`], floored at 1e5.
+pub fn scaled_size(paper_n: usize) -> usize {
+    (paper_n / scale_div()).max(100_000)
 }
 
 /// Format a paper-vs-measured pair.

@@ -2,7 +2,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::bench_harness::Table;
+use crate::bench_harness::json::{self as bench_json, BenchDoc, BenchEntry};
+use crate::bench_harness::{measure, scale_div, scaled_size, BenchConfig, Table};
 use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortRequest, SortService};
 use crate::data::{self, Distribution};
 use crate::ga::{GaConfig, GaDriver};
@@ -74,6 +75,14 @@ fn dtype_of(args: &Args) -> Result<Dtype> {
 
 fn threads_of(args: &Args) -> Result<usize> {
     args.usize_or("threads", default_threads())
+}
+
+/// Parse `--exec parked|spawn` (the kernel execution backend; defaults to
+/// the persistent parked executor).
+fn exec_mode_of(args: &Args) -> Result<crate::exec::ExecMode> {
+    let name = args.str_or("exec", "parked");
+    crate::exec::ExecMode::parse(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown exec mode {name:?} (parked|spawn)"))
 }
 
 /// Try to attach the XLA tile backend; warn-and-continue when artifacts are
@@ -360,6 +369,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         sort_threads: (threads / workers.max(1)).max(1),
         queue_capacity: 64,
         autotune: None,
+        exec: exec_mode_of(args)?,
     });
     if args.has("batch") {
         let workload = crate::coordinator::BatchWorkload {
@@ -444,6 +454,7 @@ fn serve_sharded(
         workers_per_shard: workers,
         sort_threads: (threads / (workers * shards).max(1)).max(1),
         autotune,
+        exec: exec_mode_of(args)?,
         ..ShardSpec::default()
     };
     let svc = ShardedService::spawn(spec)?;
@@ -551,6 +562,7 @@ pub fn cmd_shard_worker(args: &Args) -> Result<()> {
                 sort_threads: args.usize_or("sort-threads", 2)?,
                 queue_capacity: args.usize_or("queue-capacity", 64)?,
                 autotune,
+                exec: exec_mode_of(args)?,
             },
             publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
         };
@@ -591,6 +603,7 @@ fn serve_autotune(
         sort_threads: (threads / workers.max(1)).max(1),
         queue_capacity: 64,
         autotune: Some(policy),
+        exec: exec_mode_of(args)?,
     });
     println!(
         "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} {dtype} jobs \
@@ -645,6 +658,241 @@ fn serve_autotune(
         "autotune smoke failed: the tuner published no parameters this run"
     );
     Ok(())
+}
+
+/// `evosort bench` — the perf-regression surface: per-kernel ×
+/// per-distribution medians at service-relevant (spawn-overhead-sensitive)
+/// sizes, plus the many-mid-sized-jobs service workload run in **both**
+/// executor modes — the persistent parked executor against the
+/// spawn-per-call baseline it replaced.
+///
+/// * `--json FILE` writes the `evosort-bench-v1` report (the `BENCH_*.json`
+///   trajectory).
+/// * `--compare BASE` diffs hardware-normalised scores against a committed
+///   baseline and exits non-zero on a > `--max-regression` (default 2x)
+///   collapse. Unmeasured seed baselines are skipped (bootstrap mode).
+/// * `--min-service-speedup R` exits non-zero unless parked-executor service
+///   throughput is at least `R` times the spawn-per-call baseline (CI uses
+///   1.3).
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    if args.get("scale-div").is_some() {
+        // Validate before exporting: an unparsable value silently falling
+        // back to the default would bench (and record) the wrong sizes.
+        let div = args.usize_or("scale-div", 100)?;
+        anyhow::ensure!(div >= 1, "--scale-div must be >= 1");
+        std::env::set_var("EVOSORT_BENCH_SCALE_DIV", div.to_string());
+    }
+    let threads = threads_of(args)?;
+    let workers = args.usize_or("workers", 2)?;
+    let jobs = args.usize_or("jobs", 32)?;
+    let mut cfg = BenchConfig::from_env();
+    cfg.repeats = args.usize_or("repeats", cfg.repeats)?;
+    cfg.warmup = args.usize_or("warmup", cfg.warmup)?;
+    let min_service_speedup = args.f64_or("min-service-speedup", 0.0)?;
+    let max_regression = args.f64_or("max-regression", 2.0)?;
+    // The spawn-overhead-sensitive point the issue targets: mid-sized
+    // arrays, where per-call thread spawns used to rival the sort itself.
+    let n = scaled_size(10_000_000);
+
+    crate::bench_harness::banner(
+        "bench",
+        "per-kernel medians + parked-vs-spawn service throughput (the BENCH_*.json surface)",
+    );
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    let mut table = Table::new(&["point", "median", "throughput", "score"]);
+
+    // Kernel matrix: every Algorithm-6 branch plus the std baseline, across
+    // the distributions the service fingerprinter separates.
+    let dists =
+        [Distribution::Uniform, Distribution::Zipf, Distribution::Sorted, Distribution::FewUnique];
+    let sorter = AdaptiveSorter::new(threads);
+    let base_params = SymbolicModel::paper().params_for(n);
+    let mut scratch: Vec<i64> = Vec::new();
+    for dist in dists {
+        let data = data::generate_i64(n, dist, 42, threads);
+        let m_std = measure(&cfg, "std", || data.clone(), |mut d| d.sort_unstable());
+        let std_median = m_std.median();
+        push_entry(
+            &mut entries,
+            &mut table,
+            format!("kernel/std/{}/n{n}", dist.name()),
+            &m_std,
+            n as f64 / std_median.max(1e-12),
+            1.0,
+        );
+        // `base_params.algorithm` is what adaptive dispatch would pick here
+        // (Radix, per the symbolic model), so a separate "adaptive" row
+        // would just re-measure the radix row — every Algorithm-6 branch is
+        // already covered by these three.
+        let kernels = [("radix", ACode::Radix), ("merge", ACode::Merge), ("sample", ACode::Sample)];
+        for (name, algo) in kernels {
+            let p = SortParams { algorithm: algo, ..base_params };
+            let m = measure(
+                &cfg,
+                name,
+                || data.clone(),
+                |mut d| sorter.sort_i64_with_scratch(&mut d, &p, &mut scratch),
+            );
+            let score = std_median / m.median().max(1e-12);
+            push_entry(
+                &mut entries,
+                &mut table,
+                format!("kernel/{name}/{}/n{n}", dist.name()),
+                &m,
+                n as f64 / m.median().max(1e-12),
+                score,
+            );
+        }
+    }
+
+    // Service workload: many mid-sized jobs through the batched path, once
+    // per executor mode. The parked entry's score is its throughput edge
+    // over the spawn-per-call baseline — the headline this PR gates on.
+    let spawn_wall =
+        bench_service_batch(&cfg, crate::exec::ExecMode::SpawnPerCall, jobs, n, workers, threads)?;
+    let parked_wall =
+        bench_service_batch(&cfg, crate::exec::ExecMode::Parked, jobs, n, workers, threads)?;
+    let spawn_jps = jobs as f64 / spawn_wall.median().max(1e-12);
+    let parked_jps = jobs as f64 / parked_wall.median().max(1e-12);
+    let ratio = parked_jps / spawn_jps.max(1e-12);
+    push_entry(
+        &mut entries,
+        &mut table,
+        format!("service/spawn/j{jobs}xn{n}"),
+        &spawn_wall,
+        (jobs * n) as f64 / spawn_wall.median().max(1e-12),
+        1.0,
+    );
+    push_entry(
+        &mut entries,
+        &mut table,
+        format!("service/parked/j{jobs}xn{n}"),
+        &parked_wall,
+        (jobs * n) as f64 / parked_wall.median().max(1e-12),
+        ratio,
+    );
+    table.print();
+    println!(
+        "service throughput ({jobs} x {} jobs): parked {parked_jps:.1} jobs/s vs \
+         spawn-per-call {spawn_jps:.1} jobs/s -> {ratio:.2}x",
+        fmt_count(n)
+    );
+
+    let doc = BenchDoc {
+        schema: bench_json::SCHEMA.into(),
+        provenance: bench_json::PROVENANCE_MEASURED.into(),
+        threads,
+        scale_div: scale_div(),
+        entries,
+    };
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, doc.to_json())?;
+        println!("wrote {path}");
+    }
+    if let Some(base_path) = args.get("compare") {
+        let base = BenchDoc::from_json(&std::fs::read_to_string(base_path)?)?;
+        let cmp = bench_json::compare(&base, &doc, max_regression);
+        if base.provenance == bench_json::PROVENANCE_SEED {
+            println!(
+                "baseline {base_path} is an unmeasured seed — bootstrap mode \
+                 ({} entries skipped); commit a measured report to arm the gate",
+                cmp.skipped
+            );
+        } else {
+            println!(
+                "compared {} scores against {base_path} ({} skipped): {}",
+                cmp.compared,
+                cmp.skipped,
+                if cmp.passed() { "ok" } else { "REGRESSED" }
+            );
+            // A measured baseline whose entry ids no longer pair with this
+            // run (e.g. the bench matrix or default sizes changed) would
+            // pass vacuously forever — that is a disarmed gate, not a pass.
+            anyhow::ensure!(
+                cmp.compared > 0,
+                "bench gate: no entry of the measured baseline {base_path} matches this run's \
+                 ids — re-seed the baseline from this run's report"
+            );
+        }
+        for (id, was, now) in &cmp.regressions {
+            println!("  regression: {id} score {was:.3} -> {now:.3}");
+        }
+        anyhow::ensure!(
+            cmp.passed(),
+            "bench gate: {} entries regressed more than {max_regression}x",
+            cmp.regressions.len()
+        );
+    }
+    if min_service_speedup > 0.0 {
+        anyhow::ensure!(
+            ratio >= min_service_speedup,
+            "bench gate: parked executor is only {ratio:.2}x the spawn-per-call baseline \
+             (required {min_service_speedup:.2}x)"
+        );
+    }
+    Ok(())
+}
+
+/// Record one bench point: a table row plus a report entry.
+fn push_entry(
+    entries: &mut Vec<BenchEntry>,
+    table: &mut Table,
+    id: String,
+    m: &crate::bench_harness::Measurement,
+    throughput: f64,
+    score: f64,
+) {
+    table.row(&[
+        id.clone(),
+        fmt_secs(m.median()),
+        if throughput > 0.0 { format!("{:.1} Melem/s", throughput / 1e6) } else { "-".into() },
+        format!("{score:.3}"),
+    ]);
+    entries.push(BenchEntry {
+        id,
+        median_secs: m.median(),
+        mean_secs: m.summary.mean,
+        stddev_secs: m.summary.stddev,
+        throughput,
+        score,
+    });
+}
+
+/// One service-workload measurement: a batch of `jobs` mid-sized mixed
+/// distribution i64 jobs through `submit_batch_requests`, on a service whose
+/// kernels run in the given executor mode. Returns the wall-clock
+/// measurement for the whole batch.
+fn bench_service_batch(
+    cfg: &BenchConfig,
+    mode: crate::exec::ExecMode,
+    jobs: usize,
+    n: usize,
+    workers: usize,
+    threads: usize,
+) -> Result<crate::bench_harness::Measurement> {
+    let svc = SortService::new(ServiceConfig {
+        workers,
+        sort_threads: (threads / workers.max(1)).max(1),
+        queue_capacity: jobs.max(64),
+        autotune: None,
+        exec: mode,
+    });
+    let dists = [Distribution::Uniform, Distribution::Zipf, Distribution::NearlySorted];
+    let payloads: Vec<Vec<i64>> = (0..jobs)
+        .map(|i| data::generate_i64(n, dists[i % dists.len()], i as u64, threads))
+        .collect();
+    let mut failed = 0usize;
+    let m = measure(
+        cfg,
+        mode.name(),
+        || payloads.iter().map(|p| SortRequest::new(p.clone())).collect::<Vec<_>>(),
+        |reqs| {
+            let report = svc.submit_batch_requests(reqs).wait();
+            failed += report.stats.failed + report.stats.invalid;
+        },
+    );
+    anyhow::ensure!(failed == 0, "service bench: {failed} failed/invalid jobs");
+    Ok(m)
 }
 
 /// `evosort info` — environment report.

@@ -9,6 +9,8 @@
 //!   pipeline  the paper's master pipeline (Algorithm 1) over several sizes
 //!   symbolic  symbolic-model parameters / fit from a GA sweep (§7)
 //!   repro     regenerate a paper table (--table 1|2)
+//!   bench     per-kernel medians + parked-vs-spawn service throughput,
+//!             with a JSON report and regression gate (--json / --compare)
 //!   serve     run the sort service demo (concurrent jobs + metrics;
 //!             --shards N runs it cross-process)
 //!   info      platform, artifact and configuration report
@@ -128,7 +130,15 @@ COMMANDS
   symbolic  [--paper] [--sweep 1e5,1e6,1e7] [--n 1e8] (prints params; with
             --sweep, fits quadratics to a fresh GA sweep — Figures 7–11)
   repro     --table 1|2 [--scale-div 100] (regenerate a paper table, scaled)
+  bench     [--json out.json] [--compare base.json] [--max-regression 2.0]
+            [--min-service-speedup 1.3] [--jobs 32] [--workers 2]
+            [--repeats N] [--warmup N] [--scale-div 100]
+            (per-kernel x per-distribution medians at spawn-sensitive sizes,
+            plus the many-mid-sized-jobs service workload on the persistent
+            parked executor vs the spawn-per-call baseline; --json emits the
+            BENCH_*.json report, --compare gates on score regressions)
   serve     [--jobs 16] [--workers 2] [--n 1e6] [--dtype i64|i32|u64|f64]
+            [--exec parked|spawn] (kernel execution backend; default parked)
             [--batch] (service demo + metrics; --dtype picks the key dtype —
             floats sort in IEEE total_cmp order; --batch submits one mixed
             batch and reports p50/p99 latency and jobs/sec)

@@ -25,6 +25,9 @@
 //! queue_capacity = 64
 //! autotune       = false   # online fingerprint-keyed GA refinement
 //! shards         = 1       # >= 2: cross-process (router + worker processes)
+//! exec           = parked  # kernel execution backend: parked (persistent
+//!                          # executor, default) | spawn (per-call scoped
+//!                          # threads — the A/B baseline)
 //! ```
 
 use anyhow::{bail, Result};
@@ -57,6 +60,9 @@ pub struct ServiceSettings {
     /// router with that many `shard-worker` children (each of which gets
     /// `workers` pool threads).
     pub shards: usize,
+    /// Kernel execution backend: the persistent parked executor (default)
+    /// or the spawn-per-call baseline.
+    pub exec: crate::exec::ExecMode,
 }
 
 impl ServiceSettings {
@@ -67,6 +73,7 @@ impl ServiceSettings {
             sort_threads: self.sort_threads,
             queue_capacity: self.queue_capacity,
             autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
+            exec: self.exec,
         }
     }
 
@@ -82,6 +89,7 @@ impl ServiceSettings {
             sort_threads: self.sort_threads,
             queue_capacity: self.queue_capacity,
             autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
+            exec: self.exec,
             ..crate::coordinator::ShardSpec::default()
         }
     }
@@ -140,12 +148,17 @@ impl RunConfig {
         }
 
         // [service]
+        let exec_name = doc.str("service", "exec", "parked")?;
+        let Some(exec) = crate::exec::ExecMode::parse(&exec_name) else {
+            bail!("[service] exec must be parked|spawn, got {exec_name:?}");
+        };
         let service = ServiceSettings {
             workers: doc.count("service", "workers", 2)?.max(1),
             sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
             queue_capacity: doc.count("service", "queue_capacity", 64)?.max(1),
             autotune: doc.bool("service", "autotune", false)?,
             shards: doc.count("service", "shards", 1)?.max(1),
+            exec,
         };
 
         Ok(RunConfig { threads, pipeline, service })
@@ -190,9 +203,13 @@ queue_capacity = 16
         assert_eq!(rc.service.queue_capacity, 16);
         assert!(!rc.service.autotune, "autotune defaults off");
         assert_eq!(rc.service.shards, 1, "sharding defaults off");
+        assert_eq!(rc.service.exec, crate::exec::ExecMode::Parked, "parked executor by default");
         let sc = rc.service.to_config();
         assert_eq!(sc.workers, 4);
         assert!(sc.autotune.is_none());
+        // The spawn-per-call baseline is opt-in.
+        let rc = parse("[service]\nexec = spawn").unwrap();
+        assert_eq!(rc.service.to_config().exec, crate::exec::ExecMode::SpawnPerCall);
         // Opting in yields a default policy.
         let rc = parse("[service]\nautotune = true").unwrap();
         assert!(rc.service.to_config().autotune.is_some());
@@ -201,12 +218,13 @@ queue_capacity = 16
     #[test]
     #[cfg(unix)]
     fn shards_flow_into_the_shard_spec() {
-        let rc = parse("[service]\nshards = 3\nworkers = 2\nautotune = true").unwrap();
+        let rc = parse("[service]\nshards = 3\nworkers = 2\nautotune = true\nexec = spawn").unwrap();
         assert_eq!(rc.service.shards, 3);
         let spec = rc.service.to_shard_spec();
         assert_eq!(spec.shards, 3);
         assert_eq!(spec.workers_per_shard, 2);
         assert!(spec.autotune.is_some());
+        assert_eq!(spec.exec, crate::exec::ExecMode::SpawnPerCall, "exec knob reaches the spec");
         // shards = 0 clamps to the in-process path.
         let rc = parse("[service]\nshards = 0").unwrap();
         assert_eq!(rc.service.shards, 1);
@@ -251,5 +269,6 @@ crossover = 0.9
         assert!(parse("[pipeline]\nsizes = []").is_err());
         assert!(parse("[ga]\ncrossover = 1.5").is_err());
         assert!(parse("[ga]\npopulation = 1").is_err());
+        assert!(parse("[service]\nexec = turbo").is_err());
     }
 }

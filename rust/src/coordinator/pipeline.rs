@@ -367,6 +367,7 @@ mod tests {
                 sort_threads: 2,
                 queue_capacity: 8,
                 autotune: None,
+                exec: Default::default(),
             });
             let report = svc.submit_batch_requests(reqs).wait();
             assert_eq!(report.stats.jobs, 8, "{dtype}");
@@ -391,6 +392,7 @@ mod tests {
             sort_threads: 2,
             queue_capacity: 8,
             autotune: None,
+            exec: Default::default(),
         });
         let report = wl.run(&svc, 2);
         assert_eq!(report.stats.jobs, 40);

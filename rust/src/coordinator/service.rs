@@ -42,6 +42,7 @@ use crate::coordinator::request::SortRequest;
 use crate::coordinator::ticket::{CompletionGuard, JobError, JobResult, JobSlot, SortOutput, Ticket};
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::data::validate::Verdict;
+use crate::exec::{ExecMode, Executor};
 use crate::params::SortParams;
 use crate::sort::key::{self, Dtype, SortKey, SortPayload, SortScratch};
 use crate::sort::AdaptiveSorter;
@@ -361,8 +362,22 @@ pub(crate) fn dtype_counter(d: Dtype) -> &'static str {
     }
 }
 
+/// Per-pool-worker scratch arena, reused across every job (and every batch)
+/// a worker thread ever executes: pool workers are persistent, so
+/// steady-state traffic re-sorts into warm buffers with zero allocation in
+/// the sort path. [`with_worker_scratch`] is the only access path.
+thread_local! {
+    static WORKER_SCRATCH: std::cell::RefCell<SortScratch> =
+        std::cell::RefCell::new(SortScratch::new());
+}
+
+/// Run `f` with the calling worker thread's persistent scratch arena.
+fn with_worker_scratch<R>(f: impl FnOnce(&mut SortScratch) -> R) -> R {
+    WORKER_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
 /// Run one resolved job to completion for a concrete key dtype: optional
-/// multiset fingerprint, timed sort with shard-owned scratch, total-order
+/// multiset fingerprint, timed sort with worker-owned scratch, total-order
 /// validation, metrics accounting.
 fn run_typed<K: SortKey>(
     sorter: &AdaptiveSorter,
@@ -374,16 +389,27 @@ fn run_typed<K: SortKey>(
     scratch: &mut SortScratch,
 ) -> SortOutput {
     let threads = sorter.threads();
-    let fp = validate.then(|| key::fingerprint_keys(&data, threads));
+    // Fingerprint/validation sweeps run on the service-owned executor too —
+    // a deployment never lazily constructs (or leaks work onto) the global
+    // pool.
+    let exec = sorter.executor();
+    let fp = validate.then(|| key::fingerprint_keys_on(exec, &data, threads));
+    let grows_before = scratch.grows();
     let (_, secs) = timer::time(|| K::sort_with(sorter, &mut data, &params, scratch));
+    let grew = scratch.grows() - grows_before;
     let valid = match fp {
-        Some(fp) => key::validate_keys(fp, &data, threads) == Verdict::Valid,
+        Some(fp) => key::validate_keys_on(exec, fp, &data, threads) == Verdict::Valid,
         None => true,
     };
     metrics.incr("jobs.completed");
     metrics.incr(dtype_counter(K::DTYPE));
     metrics.observe("sort.latency", secs);
     metrics.add("elements.sorted", data.len() as u64);
+    if grew > 0 {
+        // Arena growth events — flat once the service is warm; the
+        // steady-state test gates on this counter.
+        metrics.add("scratch.grows", grew);
+    }
     if !valid {
         metrics.incr("jobs.invalid");
     }
@@ -441,6 +467,12 @@ pub struct ServiceConfig {
     /// + latency observations to a background thread that refines cached
     /// parameters with incremental GA generations.
     pub autotune: Option<AutotunePolicy>,
+    /// Execution backend for the data-parallel sort kernels. `Parked`
+    /// (default) builds one persistent parked [`Executor`] per service,
+    /// sized `workers x sort_threads`, shared by every pool worker's jobs;
+    /// `SpawnPerCall` restores the historical scoped-spawn behaviour (A/B
+    /// benchmarking, debugging).
+    pub exec: ExecMode,
 }
 
 impl Default for ServiceConfig {
@@ -451,6 +483,7 @@ impl Default for ServiceConfig {
             sort_threads: hw.div_ceil(2),
             queue_capacity: 64,
             autotune: None,
+            exec: ExecMode::Parked,
         }
     }
 }
@@ -532,9 +565,16 @@ impl SortService {
     }
 
     /// Build with a prepared sorter (e.g. XLA backend attached). The sorter's
-    /// thread budget is replaced by `config.sort_threads`.
+    /// thread budget is replaced by `config.sort_threads`, and its executor
+    /// by a service-owned pool sized to the deployment
+    /// (`workers x sort_threads`) in the configured [`ExecMode`].
     pub fn with_sorter(config: ServiceConfig, sorter: AdaptiveSorter) -> Self {
-        let sorter = sorter.rebudget(config.sort_threads);
+        let width = (config.workers.max(1) * config.sort_threads.max(1)).max(1);
+        let executor = Arc::new(match config.exec {
+            ExecMode::Parked => Executor::new(width),
+            ExecMode::SpawnPerCall => Executor::spawn_per_call(width),
+        });
+        let sorter = sorter.rebudget(config.sort_threads).with_executor(executor);
         let cache = Arc::new(TuningCache::new());
         let metrics = Arc::new(Metrics::new());
         let model = SymbolicModel::paper();
@@ -615,8 +655,9 @@ impl SortService {
                 guard.complete(Err(JobError::Cancelled));
                 return;
             }
-            let outcome =
-                execute_request(&sorter, &metrics, id, req, params, &mut SortScratch::new());
+            let outcome = with_worker_scratch(|scratch| {
+                execute_request(&sorter, &metrics, id, req, params, scratch)
+            });
             if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                 tuner.observe(Observation {
                     label,
@@ -672,10 +713,11 @@ impl SortService {
             let misses = Arc::clone(&cache_misses);
             let tx = tx.clone();
             let submitted = self.pool.submit(move || {
-                // Per-shard scratch, reused across every job this shard
-                // pulls, whatever its dtype.
-                let mut scratch = SortScratch::new();
-                loop {
+                // The worker thread's persistent scratch arena, reused
+                // across every job this shard pulls (whatever its dtype)
+                // and across batches — steady-state traffic allocates
+                // nothing here.
+                with_worker_scratch(|scratch| loop {
                     let item = queue.lock().unwrap().pop_front();
                     let Some((idx, id, req)) = item else { break };
                     let has_override = req.params.is_some();
@@ -692,7 +734,7 @@ impl SortService {
                             }
                         }
                         let outcome =
-                            execute_request(&sorter, &metrics, id, req, params, &mut scratch);
+                            execute_request(&sorter, &metrics, id, req, params, &mut *scratch);
                         metrics.observe_sample("batch.job.latency", outcome.secs);
                         if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                             tuner.observe(Observation {
@@ -712,7 +754,7 @@ impl SortService {
                         }
                     };
                     let _ = tx.send((idx, result));
-                }
+                })
             });
             if !submitted {
                 // Pool shutting down: the dropped closure sent nothing; the
@@ -754,6 +796,7 @@ mod tests {
             sort_threads: 2,
             queue_capacity: 8,
             autotune: None,
+            exec: Default::default(),
         })
     }
 
@@ -929,6 +972,7 @@ mod tests {
             sort_threads: 1,
             queue_capacity: 16,
             autotune: None,
+            exec: Default::default(),
         });
         let blockers: Vec<Ticket> = (0..3)
             .map(|s| {
@@ -1057,6 +1101,7 @@ mod tests {
             sort_threads: 2,
             queue_capacity: 16,
             autotune: None,
+            exec: Default::default(),
         });
         let tiny = generate_i64(1_000, Distribution::Uniform, 0, 2);
         let mut requests = vec![SortRequest::new(tiny)];

@@ -60,6 +60,7 @@ impl ShardedService {
                 sort_threads: spec.sort_threads,
                 queue_capacity: spec.queue_capacity,
                 autotune: spec.autotune,
+                exec: spec.exec,
             })))
         } else {
             Ok(ShardedService::Sharded(ShardRouter::spawn(spec)?))

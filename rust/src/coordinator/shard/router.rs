@@ -66,6 +66,11 @@ pub struct ShardSpec {
     pub max_respawns_per_shard: usize,
     /// Shard-side cadence for cache publication / telemetry frames.
     pub publish_interval: Duration,
+    /// Kernel execution backend inside every shard (and on the in-process
+    /// `shards <= 1` path): the persistent parked executor by default, the
+    /// spawn-per-call baseline for A/B runs. Forwarded to worker processes
+    /// as `--exec`.
+    pub exec: crate::exec::ExecMode,
     /// The `evosort` binary to spawn; defaults to the running executable.
     /// Integration tests pass `env!("CARGO_BIN_EXE_evosort")` (the test
     /// harness binary is not the CLI).
@@ -83,6 +88,7 @@ impl Default for ShardSpec {
             max_inflight_per_shard: 0,
             max_respawns_per_shard: 5,
             publish_interval: Duration::from_millis(200),
+            exec: crate::exec::ExecMode::Parked,
             binary: None,
         }
     }
@@ -423,6 +429,8 @@ impl RouterInner {
             .arg(inner.spec.queue_capacity.to_string())
             .arg("--publish-ms")
             .arg(inner.spec.publish_interval.as_millis().to_string())
+            .arg("--exec")
+            .arg(inner.spec.exec.name())
             .stdin(Stdio::null());
         if let Some(policy) = &inner.spec.autotune {
             cmd.arg("--min-obs")

@@ -216,6 +216,7 @@ mod tests {
                 sort_threads: 2,
                 queue_capacity: 8,
                 autotune: None,
+                exec: Default::default(),
             },
             publish_interval: Duration::from_millis(30),
         }

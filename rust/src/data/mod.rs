@@ -195,26 +195,24 @@ pub fn fill_i64(data: &mut [i64], dist: Distribution, seed: u64, threads: usize)
                     _ => unreachable!("handled above"),
                 }
             };
-            // Parallel over blocks using scoped threads; stride assignment.
+            // Parallel over blocks on the shared parked executor, grouped
+            // into at most `nworkers` tasks so the caller's `threads`
+            // budget still bounds generation concurrency (the executor is
+            // process-wide and usually wider).
             let nworkers = threads.max(1).min(nblocks);
             if nworkers <= 1 {
                 for (bi, v) in views.into_iter().enumerate() {
                     fill_block(bi, v);
                 }
             } else {
-                let mut per_worker: Vec<Vec<(usize, &mut [i64])>> =
+                let mut groups: Vec<Vec<(usize, &mut [i64])>> =
                     (0..nworkers).map(|_| Vec::new()).collect();
                 for (bi, v) in views.into_iter().enumerate() {
-                    per_worker[bi % nworkers].push((bi, v));
+                    groups[bi % nworkers].push((bi, v));
                 }
-                std::thread::scope(|scope| {
-                    for work in per_worker {
-                        let fill_block = &fill_block;
-                        scope.spawn(move || {
-                            for (bi, v) in work {
-                                fill_block(bi, v);
-                            }
-                        });
+                exec::global().run_consume(groups, |_, work| {
+                    for (bi, v) in work {
+                        fill_block(bi, v);
                     }
                 });
             }

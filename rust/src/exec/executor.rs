@@ -1,0 +1,716 @@
+//! The persistent parked executor: fork-join data parallelism without
+//! per-call thread spawns.
+//!
+//! Every sort kernel in this crate is built from short scoped fork-join
+//! sections (histogram per block, scatter per block, merge per run pair, …).
+//! Spawning OS threads for each section costs ~10–20 µs per thread on Linux,
+//! and one i64 radix sort crosses such a section up to ~20 times — under
+//! service traffic of many mid-sized jobs the spawn overhead rivals the
+//! sorting itself. An [`Executor`] replaces the spawns with a fixed set of
+//! workers parked on a condvar:
+//!
+//! * [`Executor::new`] spawns `width - 1` parked workers once; every batch
+//!   after that is queue-push + condvar-notify + claim. The **submitting
+//!   thread always participates** in its own batch, which gives two
+//!   properties for free: an executor of width 1 runs everything inline, and
+//!   nested fork-join can never deadlock (the inner submitter makes progress
+//!   on its own tasks even when every parked worker is busy).
+//! * Batches are scoped: the submitter blocks until every task of its batch
+//!   has finished, so tasks may borrow from the submitting stack frame
+//!   (the lifetime is erased internally; see the safety notes on
+//!   [`Batch`]).
+//! * A panicking task does not poison the pool: the panic payload is
+//!   captured, the rest of the batch still runs, and the payload is
+//!   re-raised on the **submitting** thread once the batch is over. Sibling
+//!   batches and later batches are unaffected.
+//! * [`Executor::spawn_per_call`] is the measurement baseline: same API,
+//!   but every batch spawns scoped OS threads exactly like the pre-executor
+//!   code did. `evosort bench` runs the service workload in both modes and
+//!   reports the ratio; [`thread_spawn_count`] lets tests assert that the
+//!   steady-state sort path stops spawning entirely.
+
+use std::ops::Range;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+
+/// Process-wide count of OS threads ever spawned by this module: parked
+/// workers at executor construction plus every scoped thread in
+/// spawn-per-call mode. Steady-state tests assert this stays flat across
+/// sort traffic.
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// See [`THREAD_SPAWNS`].
+pub fn thread_spawn_count() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// Execution backend selector (the `[service] exec` knob): `Parked` is the
+/// persistent executor, `SpawnPerCall` the scoped-spawn baseline it replaced
+/// (kept for A/B benchmarking and as a debugging escape hatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    #[default]
+    Parked,
+    SpawnPerCall,
+}
+
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Parked => "parked",
+            ExecMode::SpawnPerCall => "spawn",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "parked" => Some(ExecMode::Parked),
+            "spawn" | "spawn-per-call" => Some(ExecMode::SpawnPerCall),
+            _ => None,
+        }
+    }
+}
+
+/// One fork-join batch: `total` independent tasks drained by index-claiming.
+///
+/// # Safety
+///
+/// `task` is a borrow of the submitter's closure with its lifetime erased to
+/// `'static`. Soundness rests on two invariants:
+///
+/// 1. the submitter does not return from [`Executor::run_indexed`] until
+///    `finished == total` (it parks on `done` even when the batch panicked),
+///    so the closure outlives every dereference;
+/// 2. a worker only dereferences `task` after claiming an index `< total`,
+///    and an unfinished claimed index keeps the submitter parked.
+///
+/// Workers may hold the `Arc<Batch>` itself after completion (the struct
+/// stays alive), but a post-completion [`Batch::claim`] returns `None` and
+/// never touches `task`.
+struct Batch {
+    task: &'static (dyn Fn(usize) + Sync),
+    total: usize,
+    next: AtomicUsize,
+    finished: AtomicUsize,
+    /// First panic payload of the batch (re-raised on the submitter).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done_flag: Mutex<bool>,
+    done: Condvar,
+}
+
+impl Batch {
+    fn claim(&self) -> Option<usize> {
+        // `fetch_add` hands every index out exactly once; indexes past the
+        // end are harmless (usize wraparound would need 2^64 claims).
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        (i < self.total).then_some(i)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+
+    fn run_one(&self, i: usize) {
+        // SAFETY: `i < total` (claimed), so the submitter is still parked
+        // and the borrowed closure is alive (see the struct docs).
+        if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| (self.task)(i))) {
+            let mut slot = self.panic.lock().unwrap_or_else(PoisonError::into_inner);
+            slot.get_or_insert(payload);
+        }
+        // AcqRel: the final increment acquires every earlier finisher's
+        // writes (release sequence on `finished`), and the mutex hand-off
+        // below publishes them to the parked submitter.
+        if self.finished.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            let mut flag = self.done_flag.lock().unwrap_or_else(PoisonError::into_inner);
+            *flag = true;
+            self.done.notify_all();
+        }
+    }
+}
+
+struct ExecQueue {
+    batches: std::collections::VecDeque<Arc<Batch>>,
+    shutdown: bool,
+}
+
+struct Inner {
+    queue: Mutex<ExecQueue>,
+    work_ready: Condvar,
+}
+
+enum Mode {
+    Parked { inner: Arc<Inner>, workers: Vec<JoinHandle<()>> },
+    SpawnPerCall,
+}
+
+/// A fixed-width fork-join executor (see the module docs).
+pub struct Executor {
+    width: usize,
+    /// OS threads this executor has spawned: fixed at construction in parked
+    /// mode, growing per batch in spawn-per-call mode. The per-instance twin
+    /// of [`thread_spawn_count`] (which is process-global and therefore only
+    /// meaningful when nothing else is constructing executors concurrently).
+    spawns: AtomicU64,
+    mode: Mode,
+}
+
+impl Executor {
+    /// Persistent executor of the given width: `width - 1` workers are
+    /// spawned now and parked on a condvar; the submitting thread is the
+    /// width'th lane of every batch it submits.
+    pub fn new(width: usize) -> Executor {
+        let width = width.max(1);
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(ExecQueue {
+                batches: std::collections::VecDeque::new(),
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+        });
+        let workers = (0..width - 1)
+            .map(|i| {
+                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("evosort-exec-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor {
+            width,
+            spawns: AtomicU64::new(width as u64 - 1),
+            mode: Mode::Parked { inner, workers },
+        }
+    }
+
+    /// The pre-executor baseline: identical API, but every batch spawns
+    /// scoped OS threads. Kept so `evosort bench` can measure the executor
+    /// against the exact behaviour it replaced.
+    pub fn spawn_per_call(width: usize) -> Executor {
+        Executor { width: width.max(1), spawns: AtomicU64::new(0), mode: Mode::SpawnPerCall }
+    }
+
+    /// The executor's thread budget (parked workers + the submitting lane).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// OS threads spawned by this executor so far (see the field docs).
+    pub fn spawn_count(&self) -> u64 {
+        self.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Run `total` independent tasks `f(0..total)` and return once all have
+    /// finished. Panics in tasks are re-raised here after the batch drains.
+    pub fn run_indexed<F>(&self, total: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_batch_dyn(total, &f);
+    }
+
+    fn run_batch_dyn(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if total == 1 || self.width == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        match &self.mode {
+            Mode::SpawnPerCall => {
+                let lanes = self.width.min(total);
+                THREAD_SPAWNS.fetch_add(lanes as u64, Ordering::Relaxed);
+                self.spawns.fetch_add(lanes as u64, Ordering::Relaxed);
+                // Same panic semantics as parked mode: every task runs, the
+                // first payload is re-raised on the submitter — so an A/B
+                // run sees identical side effects from a panicking batch.
+                let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+                std::thread::scope(|scope| {
+                    for lane in 0..lanes {
+                        let panic_slot = &panic_slot;
+                        scope.spawn(move || {
+                            let mut i = lane;
+                            while i < total {
+                                let r = panic::catch_unwind(AssertUnwindSafe(|| f(i)));
+                                if let Err(payload) = r {
+                                    let mut slot = panic_slot
+                                        .lock()
+                                        .unwrap_or_else(PoisonError::into_inner);
+                                    slot.get_or_insert(payload);
+                                }
+                                i += lanes;
+                            }
+                        });
+                    }
+                });
+                let payload = panic_slot.into_inner().unwrap_or_else(PoisonError::into_inner);
+                if let Some(payload) = payload {
+                    panic::resume_unwind(payload);
+                }
+            }
+            Mode::Parked { inner, workers } => {
+                // SAFETY: lifetime erasure only — `run_batch_dyn` does not
+                // return until every task has finished (the park below), so
+                // the borrow outlives all uses. See `Batch` docs.
+                let task = unsafe { erase_task_lifetime(f) };
+                let batch = Arc::new(Batch {
+                    task,
+                    total,
+                    next: AtomicUsize::new(0),
+                    finished: AtomicUsize::new(0),
+                    panic: Mutex::new(None),
+                    done_flag: Mutex::new(false),
+                    done: Condvar::new(),
+                });
+                {
+                    let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                    q.batches.push_back(Arc::clone(&batch));
+                }
+                // Wake at most as many workers as there are tasks beyond the
+                // submitter's own lane (a woken worker with nothing to claim
+                // just re-parks, but not waking it at all is cheaper).
+                for _ in 0..(total - 1).min(workers.len()) {
+                    inner.work_ready.notify_one();
+                }
+                // The submitter is a full participant in its own batch.
+                while let Some(i) = batch.claim() {
+                    batch.run_one(i);
+                }
+                let mut flag = batch.done_flag.lock().unwrap_or_else(PoisonError::into_inner);
+                while !*flag {
+                    flag = batch.done.wait(flag).unwrap_or_else(PoisonError::into_inner);
+                }
+                drop(flag);
+                let payload = batch.panic.lock().unwrap_or_else(PoisonError::into_inner).take();
+                if let Some(payload) = payload {
+                    panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+
+    /// Run `f(index, item)` once per item, moving each item into its task.
+    /// The workhorse behind the chunk/zip/view helpers: items are typically
+    /// `&mut` sub-slices carved by the caller, so every task owns disjoint
+    /// data.
+    pub fn run_consume<I, F>(&self, items: Vec<I>, f: F)
+    where
+        I: Send,
+        F: Fn(usize, I) + Sync,
+    {
+        let total = items.len();
+        if total == 0 {
+            return;
+        }
+        let mut slots: Vec<Option<I>> = items.into_iter().map(Some).collect();
+        let list = SlotList::new(&mut slots);
+        self.run_batch_dyn(total, &|i| {
+            // SAFETY: index `i` is claimed exactly once per batch, so this
+            // element is taken by exactly one task.
+            let item = unsafe { list.take(i) }.expect("item taken once");
+            f(i, item);
+        });
+    }
+
+    /// [`run_consume`](Self::run_consume) that also collects one result per
+    /// item, returned in item order.
+    pub fn run_consume_map<I, R, F>(&self, items: Vec<I>, f: F) -> Vec<R>
+    where
+        I: Send,
+        R: Send,
+        F: Fn(usize, I) -> R + Sync,
+    {
+        let total = items.len();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut slots: Vec<Option<I>> = items.into_iter().map(Some).collect();
+        let mut results: Vec<Option<R>> = (0..total).map(|_| None).collect();
+        {
+            let in_list = SlotList::new(&mut slots);
+            let out_list = SlotList::new(&mut results);
+            self.run_batch_dyn(total, &|i| {
+                // SAFETY: as in `run_consume` — one claimant per index, for
+                // both the input take and the output put.
+                let item = unsafe { in_list.take(i) }.expect("item taken once");
+                let r = f(i, item);
+                unsafe { out_list.put(i, r) };
+            });
+        }
+        results.into_iter().map(|r| r.expect("task completed")).collect()
+    }
+
+    /// Run `tasks` indexed jobs and return their results in task order —
+    /// the executor-backed form of [`super::parallel_map`].
+    pub fn run_map<R, F>(&self, tasks: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if tasks == 0 {
+            return Vec::new();
+        }
+        let mut results: Vec<Option<R>> = (0..tasks).map(|_| None).collect();
+        {
+            let out_list = SlotList::new(&mut results);
+            self.run_batch_dyn(tasks, &|i| {
+                let r = f(i);
+                // SAFETY: one claimant per index.
+                unsafe { out_list.put(i, r) };
+            });
+        }
+        results.into_iter().map(|r| r.expect("task completed")).collect()
+    }
+
+    /// Process near-equal contiguous chunks of `data` (at most `parts`) in
+    /// parallel — the executor-backed form of [`super::parallel_for_chunks`].
+    pub fn run_chunks<T, F>(&self, data: &mut [T], parts: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let ranges = super::partition_even(data.len(), parts.max(1));
+        if ranges.len() <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        let chunks = carve_mut(data, &ranges);
+        self.run_consume(chunks, f);
+    }
+
+    /// Process pairs of equally-partitioned mutable slices in parallel — the
+    /// executor-backed form of [`super::parallel_for_zip`].
+    pub fn run_zip<T, U, F>(&self, a: &mut [T], b: &mut [U], bounds: &[Range<usize>], f: F)
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T], &mut [U]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "zip slices must match");
+        if bounds.is_empty() {
+            return;
+        }
+        if bounds.len() == 1 {
+            f(0, a, b);
+            return;
+        }
+        let pairs: Vec<(&mut [T], &mut [U])> =
+            carve_mut(a, bounds).into_iter().zip(carve_mut(b, bounds)).collect();
+        self.run_consume(pairs, |i, (ca, cb)| f(i, ca, cb));
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mode = match &self.mode {
+            Mode::Parked { .. } => "parked",
+            Mode::SpawnPerCall => "spawn-per-call",
+        };
+        f.debug_struct("Executor")
+            .field("width", &self.width)
+            .field("mode", &mode)
+            .field("spawns", &self.spawn_count())
+            .finish()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        if let Mode::Parked { inner, workers } = &mut self.mode {
+            {
+                let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                q.shutdown = true;
+            }
+            inner.work_ready.notify_all();
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let batch = {
+            let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                // Retire batches whose every index has been claimed; their
+                // completion is tracked by the batch latch, not the queue.
+                while q.batches.front().is_some_and(|b| b.exhausted()) {
+                    q.batches.pop_front();
+                }
+                if let Some(b) = q.batches.front() {
+                    break Arc::clone(b);
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = inner.work_ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        while let Some(i) = batch.claim() {
+            batch.run_one(i);
+        }
+    }
+}
+
+/// Raw indexed access into a `Vec<Option<T>>` for one batch: each index is
+/// touched by exactly one claimant (the batch's `fetch_add` hands indices
+/// out uniquely), so element accesses never alias. Pointer-based so no
+/// `&mut Vec` is ever formed concurrently.
+struct SlotList<T> {
+    ptr: *mut Option<T>,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SlotList<T> {}
+unsafe impl<T: Send> Sync for SlotList<T> {}
+
+impl<T> SlotList<T> {
+    fn new(slots: &mut Vec<Option<T>>) -> SlotList<T> {
+        SlotList { ptr: slots.as_mut_ptr(), len: slots.len() }
+    }
+
+    /// # Safety
+    /// `i` must be accessed by exactly one task of the batch, and the backing
+    /// vector must outlive the batch (guaranteed: the submitter owns it and
+    /// parks until the batch completes).
+    unsafe fn take(&self, i: usize) -> Option<T> {
+        assert!(i < self.len);
+        (*self.ptr.add(i)).take()
+    }
+
+    /// # Safety
+    /// As [`take`](Self::take).
+    unsafe fn put(&self, i: usize, value: T) {
+        assert!(i < self.len);
+        *self.ptr.add(i) = Some(value);
+    }
+}
+
+/// Erase the lifetime of a batch closure borrow.
+///
+/// # Safety
+/// The caller must not return (or otherwise invalidate `f`) until the batch
+/// built on the result has fully completed — see the [`Batch`] safety notes.
+unsafe fn erase_task_lifetime(f: &(dyn Fn(usize) + Sync)) -> &'static (dyn Fn(usize) + Sync) {
+    let erased: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(f);
+    erased
+}
+
+/// Carve a mutable slice into the given contiguous, in-order ranges (the
+/// alignment-sensitive split_at_mut walk every kernel shares).
+pub(crate) fn carve_mut<'a, T>(data: &'a mut [T], ranges: &[Range<usize>]) -> Vec<&'a mut [T]> {
+    let mut out: Vec<&mut [T]> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut consumed = 0usize;
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.end - consumed);
+        consumed = r.end;
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+/// The process-wide default executor, sized to the hardware. Library entry
+/// points that are not handed an explicit executor (the free functions in
+/// [`super`], `AdaptiveSorter::new`, direct kernel calls) share it; the sort
+/// service builds its own so a deployment's width follows its
+/// `workers × sort_threads` budget.
+pub fn global() -> &'static Arc<Executor> {
+    static GLOBAL: OnceLock<Arc<Executor>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Executor::new(crate::util::default_threads())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_map_ordered_results() {
+        let exec = Executor::new(4);
+        let out = exec.run_map(100, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn width_one_runs_inline() {
+        let exec = Executor::new(1);
+        let main_id = std::thread::current().id();
+        let ids = exec.run_map(8, |_| std::thread::current().id());
+        assert!(ids.iter().all(|id| *id == main_id), "width-1 executor must run inline");
+    }
+
+    #[test]
+    fn nested_fork_join_completes() {
+        // Inner batches submitted from worker threads must make progress
+        // even when every parked worker is already busy on the outer batch.
+        let exec = Executor::new(2);
+        let outer = exec.run_map(4, |i| {
+            let inner: usize = exec.run_map(4, |j| i * 10 + j).into_iter().sum();
+            inner
+        });
+        for (i, v) in outer.iter().enumerate() {
+            assert_eq!(*v, i * 40 + 6, "outer task {i}");
+        }
+    }
+
+    #[test]
+    fn panic_propagates_without_poisoning_the_pool() {
+        let exec = Executor::new(3);
+        let survivors = AtomicUsize::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run_indexed(8, |i| {
+                if i == 3 {
+                    panic!("task 3 boom");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err(), "the batch panic must reach the submitter");
+        // Sibling tasks of the panicking batch still ran.
+        assert_eq!(survivors.load(Ordering::Relaxed), 7);
+        // The pool is not poisoned: later batches run normally.
+        let out = exec.run_map(16, |i| i + 1);
+        assert_eq!(out.iter().sum::<usize>(), (1..=16).sum::<usize>());
+    }
+
+    #[test]
+    fn panicking_batch_does_not_sink_a_sibling_batch() {
+        let exec = Arc::new(Executor::new(4));
+        let exec2 = Arc::clone(&exec);
+        let sibling =
+            std::thread::spawn(move || exec2.run_map(64, |i| i).into_iter().sum::<usize>());
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run_indexed(16, |i| {
+                if i % 2 == 0 {
+                    panic!("even tasks panic");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        assert_eq!(sibling.join().expect("sibling batch unaffected"), (0..64).sum::<usize>());
+    }
+
+    #[test]
+    fn oversubscription_more_tasks_than_workers() {
+        let exec = Executor::new(3);
+        let counter = AtomicUsize::new(0);
+        exec.run_indexed(500, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn drop_while_parked_shuts_down() {
+        let exec = Executor::new(8);
+        // Workers are parked (nothing submitted); drop must join them all
+        // without hanging.
+        drop(exec);
+        // And after serving work, too.
+        let exec = Executor::new(4);
+        exec.run_indexed(16, |_| {});
+        drop(exec);
+    }
+
+    #[test]
+    fn parked_mode_never_spawns_after_construction() {
+        // The per-executor counter is used (the process-global one is bumped
+        // by other tests constructing executors concurrently).
+        let exec = Executor::new(4);
+        exec.run_indexed(8, |_| {}); // warm
+        assert_eq!(exec.spawn_count(), 3, "width 4 = 3 parked workers + the submitter");
+        for _ in 0..50 {
+            exec.run_indexed(32, |_| {});
+            let _ = exec.run_map(16, |i| i);
+        }
+        assert_eq!(exec.spawn_count(), 3, "parked batches must not spawn");
+    }
+
+    #[test]
+    fn spawn_mode_panic_parity_with_parked() {
+        // Both modes run every task and re-raise the first panic on the
+        // submitter, so A/B runs see identical batch side effects.
+        let exec = Executor::spawn_per_call(3);
+        let survivors = AtomicUsize::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.run_indexed(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err());
+        assert_eq!(survivors.load(Ordering::Relaxed), 7, "all sibling tasks still ran");
+    }
+
+    #[test]
+    fn spawn_per_call_mode_counts_spawns() {
+        let exec = Executor::spawn_per_call(4);
+        assert_eq!(exec.spawn_count(), 0, "no parked workers in baseline mode");
+        exec.run_indexed(8, |_| {});
+        exec.run_indexed(8, |_| {});
+        assert_eq!(exec.spawn_count(), 8, "baseline mode spawns per batch (4 lanes x 2)");
+    }
+
+    #[test]
+    fn run_chunks_and_zip_parity() {
+        let exec = Executor::new(4);
+        let mut data = vec![0u64; 10_000];
+        exec.run_chunks(&mut data, 8, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx as u64 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x >= 1));
+
+        let mut a: Vec<u32> = (0..1000).collect();
+        let mut b = vec![0u32; 1000];
+        let bounds = super::super::partition_even(1000, 4);
+        exec.run_zip(&mut a, &mut b, &bounds, |_, ca, cb| {
+            for (x, y) in ca.iter().zip(cb.iter_mut()) {
+                *y = *x * 2;
+            }
+        });
+        for i in 0..1000u32 {
+            assert_eq!(b[i as usize], i * 2);
+        }
+    }
+
+    #[test]
+    fn run_consume_map_moves_items_and_orders_results() {
+        let exec = Executor::new(3);
+        let items: Vec<String> = (0..40).map(|i| format!("item-{i}")).collect();
+        let out = exec.run_consume_map(items, |i, s| (i, s.len()));
+        for (i, (idx, len)) in out.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*len, format!("item-{i}").len());
+        }
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        assert_eq!(ExecMode::parse("parked"), Some(ExecMode::Parked));
+        assert_eq!(ExecMode::parse("spawn"), Some(ExecMode::SpawnPerCall));
+        assert_eq!(ExecMode::parse("spawn-per-call"), Some(ExecMode::SpawnPerCall));
+        assert_eq!(ExecMode::parse("nope"), None);
+        assert_eq!(ExecMode::default(), ExecMode::Parked);
+        assert_eq!(ExecMode::Parked.name(), "parked");
+    }
+}

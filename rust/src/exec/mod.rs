@@ -5,19 +5,30 @@
 //! available in the offline build environment, so this module provides the
 //! equivalent primitives from scratch:
 //!
-//! * [`parallel_for_chunks`] — split a mutable slice into contiguous chunks
-//!   and process each on its own OS thread (scoped; zero `unsafe`).
-//! * [`parallel_map`] — run an indexed task set across a bounded number of
-//!   threads and collect per-task results (used for thread-local histograms).
+//! * [`executor::Executor`] — the **persistent parked executor**: a fixed
+//!   set of workers parked on a condvar running scoped fork-join batches
+//!   (`run_chunks`, `run_map`, `run_zip`, `run_indexed`). Since PR 5 this is
+//!   how every data-parallel section in the crate executes — batches cost a
+//!   queue push and a condvar notify instead of OS thread spawns.
+//! * [`parallel_for_chunks`] / [`parallel_map`] / [`parallel_for_zip`] —
+//!   the historical free-function API, now thin wrappers over the
+//!   process-wide [`executor::global`] executor. Existing callers keep their
+//!   signatures and stop spawning.
 //! * [`partition_even`] — the chunk geometry helper shared by the sorts.
 //! * [`pool::ThreadPool`] — a persistent worker pool with a job queue, used
 //!   by the coordinator's sort service (long-lived jobs, backpressure).
+//!   The pool is *task* parallelism (whole sort jobs); the executor is
+//!   *data* parallelism inside one job.
 //!
-//! Scoped spawning costs ~10–20 µs per thread on Linux; the sorting hot paths
-//! only cross into these helpers for chunks of ≥10⁴ elements, so the spawn
-//! cost is noise relative to the work (measured in benches/micro_kernels.rs).
+//! The `threads` parameter on the free functions still controls the chunk
+//! geometry (how many tasks a slice is cut into, `<= 1` forcing the
+//! sequential path); actual concurrency is bounded by the executor width.
 
+pub mod executor;
 pub mod pool;
+
+pub use executor::{global, thread_spawn_count, ExecMode, Executor};
+pub(crate) use executor::carve_mut;
 
 use std::ops::Range;
 
@@ -42,43 +53,22 @@ pub fn partition_even(len: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `f(chunk_index, chunk)` over near-equal contiguous chunks of `data`,
-/// one OS thread per chunk (bounded by `threads`). Sequential fallback when
-/// `threads <= 1` or there is only one chunk.
+/// Run `f(chunk_index, chunk)` over near-equal contiguous chunks of `data`
+/// (at most `threads` chunks) on the process-wide parked executor.
+/// Sequential fallback when `threads <= 1` or there is only one chunk.
 pub fn parallel_for_chunks<T, F>(data: &mut [T], threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
-    let ranges = partition_even(data.len(), threads.max(1));
-    if ranges.len() <= 1 {
-        if !data.is_empty() {
-            f(0, data);
-        }
-        return;
-    }
-    // Carve the slice into disjoint &mut chunks up front, then hand one to
-    // each scoped thread. split_at_mut keeps this safe.
-    let mut chunks: Vec<&mut [T]> = Vec::with_capacity(ranges.len());
-    let mut rest = data;
-    let mut consumed = 0usize;
-    for r in &ranges {
-        let (head, tail) = rest.split_at_mut(r.end - consumed);
-        consumed = r.end;
-        chunks.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|scope| {
-        for (idx, chunk) in chunks.into_iter().enumerate() {
-            let f = &f;
-            scope.spawn(move || f(idx, chunk));
-        }
-    });
+    global().run_chunks(data, threads, f)
 }
 
-/// Run `tasks` independent indexed jobs on up to `threads` worker threads and
-/// return their results in task order. Each worker owns a strided subset of
-/// task indices, so no queue synchronisation is needed.
+/// Run `tasks` independent indexed jobs on the process-wide parked executor
+/// and return their results in task order. `threads` still bounds
+/// concurrency (parity with the historical spawning implementation): tasks
+/// are distributed over at most `threads` strided lanes, each one executor
+/// task, so at most `threads` run at once whatever the executor's width.
 pub fn parallel_map<R, F>(tasks: usize, threads: usize, f: F) -> Vec<R>
 where
     R: Send,
@@ -87,28 +77,24 @@ where
     if tasks == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(tasks);
-    if threads == 1 {
+    let lanes = threads.max(1).min(tasks);
+    if lanes == 1 {
         return (0..tasks).map(f).collect();
     }
     let mut slots: Vec<Option<R>> = (0..tasks).map(|_| None).collect();
     {
-        // Distribute result slots to workers in the same strided pattern as
-        // the task indices, so each worker writes only its own slots.
+        // Distribute result slots to lanes in the same strided pattern as
+        // the task indices, so each lane writes only its own slots.
         let mut slot_refs: Vec<(usize, &mut Option<R>)> = slots.iter_mut().enumerate().collect();
-        let mut per_worker: Vec<Vec<(usize, &mut Option<R>)>> =
-            (0..threads).map(|_| Vec::new()).collect();
+        let mut per_lane: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..lanes).map(|_| Vec::new()).collect();
         for (i, slot) in slot_refs.drain(..) {
-            per_worker[i % threads].push((i, slot));
+            per_lane[i % lanes].push((i, slot));
         }
-        std::thread::scope(|scope| {
-            for worker_slots in per_worker {
-                let f = &f;
-                scope.spawn(move || {
-                    for (i, slot) in worker_slots {
-                        *slot = Some(f(i));
-                    }
-                });
+        let f = &f;
+        global().run_consume(per_lane, |_, lane| {
+            for (i, slot) in lane {
+                *slot = Some(f(i));
             }
         });
     }
@@ -124,31 +110,7 @@ where
     U: Send,
     F: Fn(usize, &mut [T], &mut [U]) + Sync,
 {
-    assert_eq!(a.len(), b.len(), "zip slices must match");
-    if bounds.is_empty() {
-        return;
-    }
-    if bounds.len() == 1 {
-        f(0, a, b);
-        return;
-    }
-    let mut pairs: Vec<(&mut [T], &mut [U])> = Vec::with_capacity(bounds.len());
-    let (mut ra, mut rb) = (a, b);
-    let mut consumed = 0usize;
-    for r in bounds {
-        let (ha, ta) = ra.split_at_mut(r.end - consumed);
-        let (hb, tb) = rb.split_at_mut(r.end - consumed);
-        consumed = r.end;
-        pairs.push((ha, hb));
-        ra = ta;
-        rb = tb;
-    }
-    std::thread::scope(|scope| {
-        for (idx, (ca, cb)) in pairs.into_iter().enumerate() {
-            let f = &f;
-            scope.spawn(move || f(idx, ca, cb));
-        }
-    });
+    global().run_zip(a, b, bounds, f)
 }
 
 #[cfg(test)]
@@ -217,6 +179,13 @@ mod tests {
     fn parallel_map_zero_tasks() {
         let out: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_is_sequential() {
+        let main_id = std::thread::current().id();
+        let ids = parallel_map(6, 1, |_| std::thread::current().id());
+        assert!(ids.iter().all(|id| *id == main_id));
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod prelude {
     pub use crate::autotune::{AutotunePolicy, Fingerprint};
     pub use crate::coordinator::{ServiceConfig, SortRequest, SortService, Ticket};
     pub use crate::data::Distribution;
+    pub use crate::exec::{ExecMode, Executor};
     pub use crate::params::{ACode, Bounds, SortParams};
     pub use crate::sort::{AdaptiveSorter, Baseline, Dtype, MergeTuning, SortKey, SortPayload};
 }

@@ -18,6 +18,7 @@ fn main() {
         "pipeline" => commands::cmd_pipeline(&args),
         "symbolic" => commands::cmd_symbolic(&args),
         "repro" => commands::cmd_repro(&args),
+        "bench" => commands::cmd_bench(&args),
         "serve" => commands::cmd_serve(&args),
         // Internal: the child-process side of `serve --shards N` (spawned by
         // the shard router, not meant for direct use).

@@ -8,8 +8,12 @@
 //!   via PJRT, runs merged in rust (this reproduction's L1/L2 integration);
 //! * otherwise → refined parallel mergesort.
 
-use super::parallel_merge::{merge_runs_bottom_up, parallel_merge_sort, MergeTuning};
-use super::radix::{radix_sort_with_scratch, RadixKey};
+use std::sync::Arc;
+
+use super::parallel_merge::{merge_runs_bottom_up, parallel_merge_sort_with_scratch, MergeTuning};
+use super::radix::{radix_sort_with_executor, RadixKey};
+use super::samplesort::{sample_sort_with_scratch, SampleSortTuning};
+use crate::exec::{self, Executor};
 use crate::params::{ACode, SortParams};
 
 /// Sort backend exporting "sort each fixed-size tile" — implemented by the
@@ -22,16 +26,22 @@ pub trait TileSorter: Send + Sync {
     fn sort_tiles_i32(&self, data: &mut [i32]) -> anyhow::Result<()>;
 }
 
-/// The adaptive sorter: owns thread budget, scratch reuse and the optional
-/// XLA tile backend.
+/// The adaptive sorter: owns thread budget, executor, scratch reuse and the
+/// optional XLA tile backend. Every kernel it dispatches runs its fork-join
+/// sections on the sorter's [`Executor`] — the process-wide parked pool by
+/// default, a deployment-owned pool when the sort service builds one.
 pub struct AdaptiveSorter {
     threads: usize,
+    /// `None` means "the process-wide executor", resolved lazily at
+    /// dispatch so merely constructing a sorter (e.g. as a builder input
+    /// that gets `with_executor`'d) never spins up the global pool.
+    exec: Option<Arc<Executor>>,
     xla: Option<std::sync::Arc<dyn TileSorter>>,
 }
 
 impl AdaptiveSorter {
     pub fn new(threads: usize) -> Self {
-        AdaptiveSorter { threads: threads.max(1), xla: None }
+        AdaptiveSorter { threads: threads.max(1), exec: None, xla: None }
     }
 
     pub fn with_xla(mut self, backend: std::sync::Arc<dyn TileSorter>) -> Self {
@@ -39,13 +49,26 @@ impl AdaptiveSorter {
         self
     }
 
+    /// Replace the fork-join executor all dispatched kernels run on.
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Rebuild with a new thread budget, preserving any attached XLA backend.
+    /// The executor the kernels run on (the process-wide one unless
+    /// [`with_executor`](Self::with_executor) replaced it).
+    pub fn executor(&self) -> &Arc<Executor> {
+        self.exec.as_ref().unwrap_or_else(|| exec::global())
+    }
+
+    /// Rebuild with a new thread budget, preserving the executor and any
+    /// attached XLA backend.
     pub fn rebudget(self, threads: usize) -> AdaptiveSorter {
-        AdaptiveSorter { threads: threads.max(1), xla: self.xla }
+        AdaptiveSorter { threads: threads.max(1), exec: self.exec, xla: self.xla }
     }
 
     pub fn has_xla(&self) -> bool {
@@ -58,6 +81,7 @@ impl AdaptiveSorter {
             parallel_merge_threshold: p.parallel_merge_threshold,
             tile: p.tile,
             threads: self.threads,
+            exec: Arc::clone(self.executor()),
         }
     }
 
@@ -78,15 +102,15 @@ impl AdaptiveSorter {
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_scratch(data, self.threads, scratch),
+            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
             ACode::Sample => {
-                let tuning = super::samplesort::SampleSortTuning::for_threads(self.threads);
-                super::samplesort::sample_sort(data, &tuning)
+                let tuning = SampleSortTuning::for_threads(self.threads);
+                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
             }
             // No 64-bit bitonic artifact is compiled; Algorithm 6's
             // "other cases" branch applies.
             ACode::Merge | ACode::XlaTile => {
-                parallel_merge_sort(data, &self.merge_tuning(p))
+                parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch)
             }
         }
     }
@@ -107,32 +131,40 @@ impl AdaptiveSorter {
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_scratch(data, self.threads, scratch),
+            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
             ACode::Sample => {
-                let tuning = super::samplesort::SampleSortTuning::for_threads(self.threads);
-                super::samplesort::sample_sort(data, &tuning)
+                let tuning = SampleSortTuning::for_threads(self.threads);
+                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
             }
             ACode::XlaTile => match &self.xla {
                 Some(backend) => {
-                    if let Err(e) = self.sort_i32_via_xla(data, p, backend.as_ref()) {
+                    if let Err(e) = self.sort_i32_via_xla(data, p, backend.as_ref(), scratch) {
                         crate::log_warn!("xla tile sort failed ({e}); merge fallback");
-                        parallel_merge_sort(data, &self.merge_tuning(p));
+                        parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch);
                     }
                 }
-                None => parallel_merge_sort(data, &self.merge_tuning(p)),
+                None => parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch),
             },
-            ACode::Merge => parallel_merge_sort(data, &self.merge_tuning(p)),
+            ACode::Merge => parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch),
         }
     }
 
     /// XLA path: pad to a whole number of tiles with i32::MAX sentinels, let
     /// the PJRT executable (Pallas bitonic kernel) sort every tile, then
-    /// merge the sorted runs bottom-up in rust and drop the padding.
+    /// merge the sorted runs bottom-up in rust (through the caller's
+    /// scratch) and drop the padding.
+    ///
+    /// Note: sentinel padding inherently allocates an O(n) `padded` copy per
+    /// call (and grows `scratch` to `padded_len` outside the arena's counted
+    /// checkout), so the zero-alloc steady-state guarantee does not extend
+    /// to this branch — arena-izing the padding buffer is deferred until the
+    /// real PJRT runtime is linked (see ROADMAP).
     fn sort_i32_via_xla(
         &self,
         data: &mut [i32],
         p: &SortParams,
         backend: &dyn TileSorter,
+        scratch: &mut Vec<i32>,
     ) -> anyhow::Result<()> {
         let tile = backend.tile_size();
         let n = data.len();
@@ -141,7 +173,7 @@ impl AdaptiveSorter {
         padded.extend_from_slice(data);
         padded.resize(padded_len, i32::MAX);
         backend.sort_tiles_i32(&mut padded)?;
-        merge_runs_bottom_up(&mut padded, tile, &self.merge_tuning(p));
+        merge_runs_bottom_up(&mut padded, tile, &self.merge_tuning(p), scratch);
         // Sentinels are MAX; originals containing MAX sort equal to the
         // sentinels, so the first n elements are exactly the sorted input.
         data.copy_from_slice(&padded[..n]);
@@ -161,13 +193,15 @@ impl AdaptiveSorter {
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_scratch(data, self.threads, scratch),
+            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
             ACode::Sample => {
-                let tuning = super::samplesort::SampleSortTuning::for_threads(self.threads);
-                super::samplesort::sample_sort(data, &tuning)
+                let tuning = SampleSortTuning::for_threads(self.threads);
+                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
             }
             // No 64-bit bitonic artifact is compiled; "other cases" branch.
-            ACode::Merge | ACode::XlaTile => parallel_merge_sort(data, &self.merge_tuning(p)),
+            ACode::Merge | ACode::XlaTile => {
+                parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch)
+            }
         }
     }
 
@@ -190,13 +224,13 @@ impl AdaptiveSorter {
         // bijections, so the slice always holds valid patterns.
         let bits: &mut [u64] =
             unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u64, data.len()) };
-        crate::exec::parallel_for_chunks(bits, self.threads, |_, chunk| {
+        self.executor().run_chunks(bits, self.threads, |_, chunk| {
             for b in chunk.iter_mut() {
                 *b = super::floats::f64_to_key(*b);
             }
         });
         self.sort_u64_with_scratch(bits, p, scratch);
-        crate::exec::parallel_for_chunks(bits, self.threads, |_, chunk| {
+        self.executor().run_chunks(bits, self.threads, |_, chunk| {
             for b in chunk.iter_mut() {
                 *b = super::floats::f64_from_key(*b);
             }
@@ -210,7 +244,7 @@ impl AdaptiveSorter {
     /// Generic radix entry for other key widths (u32/u64) — not part of
     /// Algorithm 6 but exposed for library users.
     pub fn sort_radix<T: RadixKey>(&self, data: &mut [T]) {
-        radix_sort_with_scratch(data, self.threads, &mut Vec::new());
+        radix_sort_with_executor(data, self.threads, &mut Vec::new(), self.executor());
     }
 }
 
@@ -292,6 +326,24 @@ mod tests {
         expect.sort_unstable();
         s.sort_i32(&mut data, &p);
         assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn explicit_executor_preserved_across_rebudget() {
+        let exec = Arc::new(Executor::new(3));
+        let s = AdaptiveSorter::new(2).with_executor(Arc::clone(&exec)).rebudget(4);
+        assert_eq!(s.threads(), 4);
+        assert!(Arc::ptr_eq(s.executor(), &exec), "rebudget must keep the executor");
+        let mut scratch = Vec::new();
+        for algo in [ACode::Radix, ACode::Merge, ACode::Sample] {
+            let p = SortParams { algorithm: algo, fallback_threshold: 100, ..Default::default() };
+            let mut data = generate_i64(20_000, Distribution::Zipf, 90, 2);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            s.sort_i64_with_scratch(&mut data, &p, &mut scratch);
+            assert_eq!(data, expect, "{algo:?}");
+        }
+        assert_eq!(exec.spawn_count(), 2, "all three kernels ran on the parked pool");
     }
 
     #[test]

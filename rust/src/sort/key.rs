@@ -21,7 +21,7 @@ use std::cmp::Ordering;
 
 use super::adaptive::AdaptiveSorter;
 use crate::data::validate::{mix64, Fingerprint, Verdict};
-use crate::exec;
+use crate::exec::{self, Executor};
 use crate::params::SortParams;
 
 /// Key dtype the service can sort. `name()` is the tag carried by
@@ -67,19 +67,102 @@ impl std::fmt::Display for Dtype {
     }
 }
 
-/// Per-shard scratch buffers, one per radix element width, reused across
+/// Per-worker scratch arena: one buffer per element width, reused across
 /// every job a worker executes regardless of dtype mix (`f64` shares the
-/// `u64` buffer — it sorts as transformed bits).
+/// `u64` buffer — it sorts as transformed bits). Whichever kernel Algorithm
+/// 6 dispatches uses the same buffer — radix scatter target, mergesort
+/// ping-pong, samplesort bucket scatter — so one arena covers the whole
+/// dispatch surface.
+///
+/// Buffers are checked out through the `*_for(n)` accessors, which ensure
+/// capacity **before** the kernel runs and count every capacity growth in
+/// [`grows`](Self::grows). Steady-state traffic (same job shape, warm
+/// arena) therefore performs zero heap allocation in the sort path, and the
+/// counter makes that testable: it must stay flat after the first job of a
+/// shape.
+///
+/// Retention is bounded: every [`TRIM_INTERVAL`](Self::TRIM_INTERVAL)
+/// checkouts the arena compares its capacity against the window's peak
+/// request and releases buffers holding more than twice that, so one
+/// outlier job cannot pin its high-water allocation in a long-lived worker
+/// forever. Steady same-shape traffic never trips the trim (capacity ==
+/// peak), keeping the hot path churn-free.
 #[derive(Default)]
 pub struct SortScratch {
-    pub w_i64: Vec<i64>,
-    pub w_i32: Vec<i32>,
-    pub w_u64: Vec<u64>,
+    w_i64: Vec<i64>,
+    w_i32: Vec<i32>,
+    w_u64: Vec<u64>,
+    grows: u64,
+    /// Largest element count requested in the current retention window.
+    peak_recent: usize,
+    /// Checkouts since the last retention check.
+    checkouts: u32,
 }
 
 impl SortScratch {
+    /// Checkouts between retention checks (see the struct docs).
+    pub const TRIM_INTERVAL: u32 = 64;
+
     pub fn new() -> SortScratch {
         SortScratch::default()
+    }
+
+    /// How many times any buffer has had to grow (allocation events). Flat
+    /// across jobs once the arena is warm.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// The i64 buffer, grown (and counted) to hold at least `n` elements.
+    pub fn i64_for(&mut self, n: usize) -> &mut Vec<i64> {
+        self.note(n);
+        Self::ensure(&mut self.w_i64, n, &mut self.grows)
+    }
+
+    /// The i32 buffer, grown (and counted) to hold at least `n` elements.
+    pub fn i32_for(&mut self, n: usize) -> &mut Vec<i32> {
+        self.note(n);
+        Self::ensure(&mut self.w_i32, n, &mut self.grows)
+    }
+
+    /// The u64 buffer (shared by u64 and f64 jobs), grown (and counted) to
+    /// hold at least `n` elements.
+    pub fn u64_for(&mut self, n: usize) -> &mut Vec<u64> {
+        self.note(n);
+        Self::ensure(&mut self.w_u64, n, &mut self.grows)
+    }
+
+    /// Record this checkout in the retention window; on the window
+    /// boundary, release any buffer holding more than twice the window's
+    /// peak request.
+    fn note(&mut self, n: usize) {
+        self.peak_recent = self.peak_recent.max(n);
+        self.checkouts += 1;
+        if self.checkouts >= Self::TRIM_INTERVAL {
+            let keep = self.peak_recent;
+            Self::trim(&mut self.w_i64, keep);
+            Self::trim(&mut self.w_i32, keep);
+            Self::trim(&mut self.w_u64, keep);
+            self.checkouts = 0;
+            self.peak_recent = 0;
+        }
+    }
+
+    fn trim<T>(buf: &mut Vec<T>, keep: usize) {
+        if buf.capacity() > keep.saturating_mul(2) {
+            buf.truncate(keep);
+            buf.shrink_to(keep);
+        }
+    }
+
+    fn ensure<T>(buf: &mut Vec<T>, n: usize, grows: &mut u64) -> &mut Vec<T> {
+        if buf.capacity() < n {
+            *grows += 1;
+            // `reserve` (not `_exact`) so repeated slightly-growing jobs
+            // amortise instead of reallocating every time.
+            buf.reserve(n - buf.len());
+        }
+        buf
     }
 }
 
@@ -148,7 +231,7 @@ impl SortKey for i64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_i64_with_scratch(data, params, &mut scratch.w_i64);
+        sorter.sort_i64_with_scratch(data, params, scratch.i64_for(data.len()));
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -194,7 +277,7 @@ impl SortKey for i32 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_i32_with_scratch(data, params, &mut scratch.w_i32);
+        sorter.sort_i32_with_scratch(data, params, scratch.i32_for(data.len()));
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -241,7 +324,7 @@ impl SortKey for u64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_u64_with_scratch(data, params, &mut scratch.w_u64);
+        sorter.sort_u64_with_scratch(data, params, scratch.u64_for(data.len()));
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -289,7 +372,7 @@ impl SortKey for f64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_f64_with_scratch(data, params, &mut scratch.w_u64);
+        sorter.sort_f64_with_scratch(data, params, scratch.u64_for(data.len()));
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -381,8 +464,15 @@ impl SortPayload {
 ///
 /// [`validate::fingerprint_i64`]: crate::data::validate::fingerprint_i64
 pub fn fingerprint_keys<K: SortKey>(data: &[K], threads: usize) -> Fingerprint {
+    fingerprint_keys_on(exec::global(), data, threads)
+}
+
+/// [`fingerprint_keys`] on an explicit executor — the service passes its own
+/// pool so validation sweeps never touch (or lazily construct) the global
+/// one.
+pub fn fingerprint_keys_on<K: SortKey>(on: &Executor, data: &[K], threads: usize) -> Fingerprint {
     let bounds = exec::partition_even(data.len(), threads.max(1));
-    let parts = exec::parallel_map(bounds.len(), threads, |i| {
+    let parts = on.run_map(bounds.len(), |i| {
         let chunk = &data[bounds[i].clone()];
         let mut sum = 0u64;
         let mut xor = 0u64;
@@ -406,11 +496,16 @@ pub fn fingerprint_keys<K: SortKey>(data: &[K], threads: usize) -> Fingerprint {
 
 /// Parallel total-order sortedness check over any key dtype.
 pub fn is_sorted_keys<K: SortKey>(data: &[K], threads: usize) -> bool {
+    is_sorted_keys_on(exec::global(), data, threads)
+}
+
+/// [`is_sorted_keys`] on an explicit executor.
+pub fn is_sorted_keys_on<K: SortKey>(on: &Executor, data: &[K], threads: usize) -> bool {
     if data.len() < 2 {
         return true;
     }
     let bounds = exec::partition_even(data.len(), threads.max(1));
-    let oks = exec::parallel_map(bounds.len(), threads, |i| {
+    let oks = on.run_map(bounds.len(), |i| {
         let r = bounds[i].clone();
         // Include the seam with the previous chunk.
         let start = r.start.saturating_sub(1);
@@ -424,14 +519,24 @@ pub fn is_sorted_keys<K: SortKey>(data: &[K], threads: usize) -> bool {
 /// The sortedness pass is the parallel [`is_sorted_keys`]; the violation
 /// position is located sequentially only on the (rare) failure path.
 pub fn validate_keys<K: SortKey>(input_fp: Fingerprint, output: &[K], threads: usize) -> Verdict {
-    if !is_sorted_keys(output, threads) {
+    validate_keys_on(exec::global(), input_fp, output, threads)
+}
+
+/// [`validate_keys`] on an explicit executor.
+pub fn validate_keys_on<K: SortKey>(
+    on: &Executor,
+    input_fp: Fingerprint,
+    output: &[K],
+    threads: usize,
+) -> Verdict {
+    if !is_sorted_keys_on(on, output, threads) {
         let pos = output
             .windows(2)
             .position(|w| K::key_cmp(&w[0], &w[1]) == Ordering::Greater)
             .unwrap_or(0);
         return Verdict::NotSorted { first_violation: pos };
     }
-    if fingerprint_keys(output, threads) != input_fp {
+    if fingerprint_keys_on(on, output, threads) != input_fp {
         return Verdict::MultisetMismatch;
     }
     Verdict::Valid
@@ -494,6 +599,43 @@ mod tests {
         assert!(u.windows(2).all(|w| w[0] < w[1]));
         assert_eq!(u[0], 0);
         assert_eq!(*u.last().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn scratch_arena_counts_grows_and_goes_flat() {
+        let mut s = SortScratch::new();
+        assert_eq!(s.grows(), 0);
+        let _ = s.i64_for(10_000);
+        assert_eq!(s.grows(), 1);
+        let _ = s.i64_for(10_000);
+        let _ = s.i64_for(5_000);
+        assert_eq!(s.grows(), 1, "warm checkouts must not grow");
+        let _ = s.u64_for(4_096);
+        assert_eq!(s.grows(), 2, "each width grows once");
+        let _ = s.i64_for(20_000);
+        assert_eq!(s.grows(), 3, "a larger request grows again");
+        assert!(s.i64_for(20_000).capacity() >= 20_000);
+    }
+
+    #[test]
+    fn scratch_arena_releases_outlier_capacity() {
+        let mut s = SortScratch::new();
+        let _ = s.i64_for(1 << 20); // outlier job pins ~8 MB
+        assert!(s.i64_for(0).capacity() >= 1 << 20);
+        // The outlier sits in the first retention window (keep includes
+        // it), so release happens at the second window boundary — two full
+        // windows of small jobs guarantee it.
+        for _ in 0..2 * SortScratch::TRIM_INTERVAL {
+            let _ = s.i64_for(1024);
+        }
+        assert!(s.i64_for(0).capacity() < 1 << 20, "outlier capacity released");
+        assert!(s.i64_for(1024).capacity() >= 1024, "window peak retained");
+        // …while steady same-shape traffic never trims (no churn).
+        let g = s.grows();
+        for _ in 0..3 * SortScratch::TRIM_INTERVAL {
+            let _ = s.i64_for(1024);
+        }
+        assert_eq!(s.grows(), g, "steady traffic stays allocation-free");
     }
 
     #[test]

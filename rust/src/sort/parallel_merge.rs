@@ -11,16 +11,27 @@
 //!   what keeps all cores busy in the last passes when only a few giant runs
 //!   remain).
 //!
+//! All parallel sections run as fork-join batches on the [`MergeTuning`]'s
+//! executor (the process-wide parked pool by default, a service-owned pool
+//! when dispatched through `AdaptiveSorter`) — no per-pass thread spawns —
+//! and the ping-pong scratch comes from the caller
+//! ([`parallel_merge_sort_with_scratch`]), so steady-state service traffic
+//! allocates nothing here.
+//!
 //! The inner merge kernel is the tiled/galloping `MergeStandardOpt`
 //! (see [`super::merge`]), with `T_tile` bounding the live working set.
 
+use std::ops::Range;
+use std::sync::Arc;
+
 use super::insertion::insertion_sort;
 use super::merge::{merge_gallop_into, merge_path_split, merge_tiled_into};
-use crate::exec;
+use crate::exec::{self, Executor};
 
 /// Tuning knobs for the refined parallel mergesort (a projection of the full
-/// [`crate::params::SortParams`] genome).
-#[derive(Debug, Clone, Copy)]
+/// [`crate::params::SortParams`] genome) plus the executor the parallel
+/// sections run on.
+#[derive(Debug, Clone)]
 pub struct MergeTuning {
     /// Base chunk size sorted with insertion sort (`T_insertion`).
     pub insertion_threshold: usize,
@@ -29,8 +40,11 @@ pub struct MergeTuning {
     pub parallel_merge_threshold: usize,
     /// Cache tile for the blocked merge kernel (`T_tile`).
     pub tile: usize,
-    /// Worker thread budget.
+    /// Worker thread budget (chunk geometry; concurrency is additionally
+    /// bounded by the executor's width).
     pub threads: usize,
+    /// The fork-join pool every parallel section of the sort runs on.
+    pub exec: Arc<Executor>,
 }
 
 impl Default for MergeTuning {
@@ -40,14 +54,28 @@ impl Default for MergeTuning {
             parallel_merge_threshold: 1 << 16,
             tile: 4096,
             threads: crate::util::default_threads(),
+            exec: Arc::clone(exec::global()),
         }
     }
 }
 
-/// Sort `data` in place with the refined parallel mergesort.
+/// Sort `data` in place with the refined parallel mergesort (internal
+/// scratch; see [`parallel_merge_sort_with_scratch`] for the zero-alloc hot
+/// path).
 pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync + Default>(
     data: &mut [T],
     tuning: &MergeTuning,
+) {
+    parallel_merge_sort_with_scratch(data, tuning, &mut Vec::new())
+}
+
+/// Sort `data` in place, ping-ponging through the caller's `scratch` buffer
+/// (grown as needed, reused across calls) so repeated sorts allocate
+/// nothing.
+pub fn parallel_merge_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    tuning: &MergeTuning,
+    scratch: &mut Vec<T>,
 ) {
     let n = data.len();
     if n <= 1 {
@@ -59,68 +87,64 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync + Default>(
         return;
     }
 
-    // Phase 1 — parallel insertion sort of base chunks.
-    // Chunk geometry: fixed size `chunk` (last chunk may be short). We hand
-    // groups of chunks to threads.
-    let nchunks = n.div_ceil(chunk);
-    let workers = tuning.threads.max(1);
+    // Phase 1 — parallel insertion sort of base chunks, grouped into at
+    // most `threads` executor tasks so the caller's budget bounds
+    // concurrency (the executor — especially the process-wide one — is
+    // usually wider).
     {
-        let mut views: Vec<&mut [T]> = Vec::with_capacity(nchunks);
-        let mut rest = &mut *data;
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            views.push(head);
-            rest = tail;
-        }
-        if workers == 1 || nchunks == 1 {
+        let nchunks = n.div_ceil(chunk);
+        let ranges: Vec<Range<usize>> =
+            (0..nchunks).map(|i| i * chunk..((i + 1) * chunk).min(n)).collect();
+        let views = exec::carve_mut(&mut *data, &ranges);
+        if tuning.threads <= 1 || views.len() == 1 {
             for v in views {
                 insertion_sort(v);
             }
         } else {
-            let mut per_worker: Vec<Vec<&mut [T]>> = (0..workers.min(nchunks)).map(|_| Vec::new()).collect();
-            let nw = per_worker.len();
+            let nw = tuning.threads.min(views.len());
+            let mut groups: Vec<Vec<&mut [T]>> = (0..nw).map(|_| Vec::new()).collect();
             for (i, v) in views.into_iter().enumerate() {
-                per_worker[i % nw].push(v);
+                groups[i % nw].push(v);
             }
-            std::thread::scope(|scope| {
-                for work in per_worker {
-                    scope.spawn(move || {
-                        for v in work {
-                            insertion_sort(v);
-                        }
-                    });
+            tuning.exec.run_consume(groups, |_, group| {
+                for v in group {
+                    insertion_sort(v);
                 }
             });
         }
     }
 
     // Phase 2 — bottom-up parallel merging, ping-pong between buffers.
-    merge_runs_bottom_up(data, chunk, tuning);
+    merge_runs_bottom_up(data, chunk, tuning, scratch);
 }
 
 /// Bottom-up parallel merge of an array already composed of sorted runs of
 /// `run_width` elements (the last run may be shorter). Shared by the refined
 /// parallel mergesort (runs from insertion sort) and the XLA tile backend
-/// (runs from the Pallas bitonic kernel).
+/// (runs from the Pallas bitonic kernel). The ping-pong buffer is the
+/// caller's `scratch`, grown to `data.len()` once and reused across calls.
 pub fn merge_runs_bottom_up<T: Copy + Ord + Send + Sync + Default>(
     data: &mut [T],
     run_width: usize,
     tuning: &MergeTuning,
+    scratch: &mut Vec<T>,
 ) {
     let n = data.len();
     if run_width >= n || n <= 1 {
         return;
     }
-    let mut scratch: Vec<T> = vec![T::default(); n];
+    if scratch.len() < n {
+        scratch.resize(n, T::default());
+    }
+    let scratch = &mut scratch[..n];
     let mut src_is_data = true;
     let mut width = run_width.max(1);
     while width < n {
         {
             let (src, dst): (&[T], &mut [T]) = if src_is_data {
-                (&*data, &mut scratch[..])
+                (&*data, &mut *scratch)
             } else {
-                (&scratch[..], &mut *data)
+                (&*scratch, &mut *data)
             };
             merge_pass(src, dst, width, tuning);
         }
@@ -128,7 +152,7 @@ pub fn merge_runs_bottom_up<T: Copy + Ord + Send + Sync + Default>(
         width *= 2;
     }
     if !src_is_data {
-        data.copy_from_slice(&scratch);
+        data.copy_from_slice(scratch);
     }
 }
 
@@ -157,52 +181,49 @@ fn merge_pass<T: Copy + Ord + Send + Sync>(
     }
 
     // Carve dst into per-pair output slices.
-    let mut outs: Vec<&mut [T]> = Vec::with_capacity(pairs.len());
-    let mut rest = dst;
-    for p in &pairs {
-        let (head, tail) = rest.split_at_mut(p.hi - p.lo);
-        outs.push(head);
-        rest = tail;
-    }
+    let ranges: Vec<Range<usize>> = pairs.iter().map(|p| p.lo..p.hi).collect();
+    let outs = exec::carve_mut(dst, &ranges);
 
     let threads = tuning.threads.max(1);
     let big = tuning.parallel_merge_threshold.max(1024);
 
-    // Small pass (many pairs): one thread per group of pairs.
-    // Large pass (few pairs): split each merge with merge-path.
+    // Small pass (many pairs): pairs grouped round-robin into at most
+    // `threads` executor tasks, so the caller's budget bounds concurrency.
+    // Large pass (few pairs): split each merge with merge-path so all
+    // budgeted lanes stay busy.
     if pairs.len() >= threads * 2 || threads == 1 {
-        let nw = threads.min(pairs.len());
-        let mut per_worker: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
-        for (i, o) in outs.into_iter().enumerate() {
-            per_worker[i % nw].push((i, o));
-        }
-        std::thread::scope(|scope| {
-            for work in per_worker {
-                let pairs = &pairs;
-                scope.spawn(move || {
-                    for (i, out) in work {
-                        let p = &pairs[i];
-                        merge_one(&src[p.lo..p.mid], &src[p.mid..p.hi], out, tuning);
-                    }
-                });
+        if threads == 1 {
+            for (i, out) in outs.into_iter().enumerate() {
+                let p = &pairs[i];
+                merge_one(&src[p.lo..p.mid], &src[p.mid..p.hi], out, tuning);
             }
-        });
+        } else {
+            let nw = threads.min(pairs.len());
+            let mut groups: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
+            for (i, out) in outs.into_iter().enumerate() {
+                groups[i % nw].push((i, out));
+            }
+            tuning.exec.run_consume(groups, |_, group| {
+                for (i, out) in group {
+                    let p = &pairs[i];
+                    merge_one(&src[p.lo..p.mid], &src[p.mid..p.hi], out, tuning);
+                }
+            });
+        }
     } else {
         // Few big pairs: give each pair a share of the thread budget and use
         // merge-path splitting inside pairs whose output exceeds `T_merge`.
+        // The inner splits are nested fork-join batches on the same
+        // executor.
         let share = (threads / pairs.len()).max(1);
-        std::thread::scope(|scope| {
-            for (i, out) in outs.into_iter().enumerate() {
-                let p = &pairs[i];
-                let a = &src[p.lo..p.mid];
-                let b = &src[p.mid..p.hi];
-                scope.spawn(move || {
-                    if out.len() > big && share > 1 {
-                        parallel_merge_into(a, b, out, share, tuning.tile);
-                    } else {
-                        merge_one(a, b, out, tuning);
-                    }
-                });
+        tuning.exec.run_consume(outs, |i, out| {
+            let p = &pairs[i];
+            let a = &src[p.lo..p.mid];
+            let b = &src[p.mid..p.hi];
+            if out.len() > big && share > 1 {
+                parallel_merge_into_on(&tuning.exec, a, b, out, share, tuning.tile);
+            } else {
+                merge_one(a, b, out, tuning);
             }
         });
     }
@@ -223,8 +244,21 @@ fn merge_one<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T], tuning: &MergeTunin
 }
 
 /// Split one merge into `parts` independent sub-merges (merge-path) and run
-/// them on scoped threads.
+/// them on the process-wide parked executor.
 pub fn parallel_merge_into<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    dst: &mut [T],
+    parts: usize,
+    tile: usize,
+) {
+    parallel_merge_into_on(exec::global(), a, b, dst, parts, tile)
+}
+
+/// [`parallel_merge_into`] on an explicit executor (nested batches from
+/// `merge_pass` reuse the tuning's pool).
+fn parallel_merge_into_on<T: Copy + Ord + Send + Sync>(
+    exec: &Executor,
     a: &[T],
     b: &[T],
     dst: &mut [T],
@@ -234,36 +268,24 @@ pub fn parallel_merge_into<T: Copy + Ord + Send + Sync>(
     debug_assert_eq!(a.len() + b.len(), dst.len());
     let jobs = merge_path_split(a, b, parts);
     // Carve dst according to job output ranges (contiguous, in order).
-    let mut outs: Vec<&mut [T]> = Vec::with_capacity(jobs.len());
-    let mut rest = dst;
-    for (_, _, rd) in &jobs {
-        let (head, tail) = rest.split_at_mut(rd.len());
-        outs.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|scope| {
-        for ((ra, rb, _), out) in jobs.into_iter().zip(outs) {
-            let sa = &a[ra];
-            let sb = &b[rb];
-            scope.spawn(move || {
-                merge_tiled_into(sa, sb, out, tile.max(16));
-            });
-        }
+    let ranges: Vec<Range<usize>> = jobs.iter().map(|(_, _, rd)| rd.clone()).collect();
+    let outs = crate::exec::carve_mut(dst, &ranges);
+    exec.run_consume(outs, |i, out| {
+        let (ra, rb, _) = &jobs[i];
+        merge_tiled_into(&a[ra.clone()], &b[rb.clone()], out, tile.max(16));
     });
 }
 
-/// Convenience: sort with default tuning and an explicit thread count.
+/// Convenience: sort with default tuning and an explicit thread count
+/// (internal scratch — use [`parallel_merge_sort_with_scratch`] on hot
+/// paths).
 pub fn parallel_merge_sort_default<T: Copy + Ord + Send + Sync + Default>(
     data: &mut [T],
     threads: usize,
 ) {
     let tuning = MergeTuning { threads, ..MergeTuning::default() };
-    parallel_merge_sort(data, &tuning);
+    parallel_merge_sort_with_scratch(data, &tuning, &mut Vec::new());
 }
-
-/// Because exec helpers are shared, re-export partition for tests.
-#[allow(unused_imports)]
-pub(crate) use exec::partition_even as _partition_even_for_tests;
 
 #[cfg(test)]
 mod tests {
@@ -314,6 +336,7 @@ mod tests {
                         parallel_merge_threshold: pmt,
                         tile,
                         threads: 4,
+                        ..MergeTuning::default()
                     };
                     check(&data, &t);
                 }
@@ -337,6 +360,46 @@ mod tests {
     fn single_thread_path() {
         let data = generate_i64(5000, Distribution::Uniform, 19, 1);
         check(&data, &MergeTuning { threads: 1, ..Default::default() });
+    }
+
+    #[test]
+    fn scratch_is_reused_across_sorts() {
+        let tuning = MergeTuning { threads: 3, insertion_threshold: 128, ..Default::default() };
+        let mut scratch = Vec::new();
+        for seed in 0..5u64 {
+            let mut data = generate_i64(20_000, Distribution::Uniform, seed, 2);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            parallel_merge_sort_with_scratch(&mut data, &tuning, &mut scratch);
+            assert_eq!(data, expect);
+        }
+        assert!(scratch.capacity() >= 20_000, "scratch kept its high-water capacity");
+        // A smaller sort reuses the same (larger) buffer untouched.
+        let cap = scratch.capacity();
+        let mut small = generate_i64(5_000, Distribution::Reverse, 9, 2);
+        let mut expect = small.clone();
+        expect.sort_unstable();
+        parallel_merge_sort_with_scratch(&mut small, &tuning, &mut scratch);
+        assert_eq!(small, expect);
+        assert_eq!(scratch.capacity(), cap, "no reallocation for smaller inputs");
+    }
+
+    #[test]
+    fn merge_runs_bottom_up_with_caller_scratch() {
+        // Pre-sorted runs of width 256 (the XLA tile shape) merge correctly
+        // through a reused scratch buffer.
+        let tuning = MergeTuning { threads: 3, ..Default::default() };
+        let mut scratch = Vec::new();
+        for seed in [31u64, 32, 33] {
+            let mut data = generate_i64(10_000 + seed as usize, Distribution::Uniform, seed, 2);
+            for run in data.chunks_mut(256) {
+                run.sort_unstable();
+            }
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            merge_runs_bottom_up(&mut data, 256, &tuning, &mut scratch);
+            assert_eq!(data, expect);
+        }
     }
 
     #[test]

@@ -105,11 +105,32 @@ pub fn radix_sort<T: RadixKey>(data: &mut [T], threads: usize) {
 }
 
 /// Variant reusing a caller-provided scratch buffer (grown as needed) so the
-/// hot path allocates nothing — used by the service and the benches.
+/// hot path allocates nothing — used by the service and the benches. Runs on
+/// the process-wide parked executor.
 pub fn radix_sort_with_scratch<T: RadixKey>(
     data: &mut [T],
     threads: usize,
     scratch: &mut Vec<T>,
+) {
+    radix_sort_with_executor(data, threads, scratch, exec::global())
+}
+
+/// The effective worker count for an `n`-element radix sort: at least one
+/// thread, and no more than one per 4096 elements (below that, per-thread
+/// histogram and offset bookkeeping outweighs the parallel gain). `n < 64`
+/// never reaches this clamp — those arrays fall back to `sort_unstable`.
+pub(crate) fn effective_threads(threads: usize, n: usize) -> usize {
+    threads.max(1).min(n.div_ceil(4096))
+}
+
+/// Fully explicit variant: caller-provided scratch *and* executor — the form
+/// the adaptive dispatcher uses so every service worker's jobs share one
+/// parked pool and one arena.
+pub fn radix_sort_with_executor<T: RadixKey>(
+    data: &mut [T],
+    threads: usize,
+    scratch: &mut Vec<T>,
+    exec: &exec::Executor,
 ) {
     let n = data.len();
     if n <= 1 {
@@ -120,7 +141,7 @@ pub fn radix_sort_with_scratch<T: RadixKey>(
         data.sort_unstable();
         return;
     }
-    let threads = threads.max(1).min(n.div_ceil(4096)).max(1);
+    let threads = effective_threads(threads, n);
     if scratch.len() < n {
         scratch.resize(n, T::default());
     }
@@ -137,46 +158,28 @@ pub fn radix_sort_with_scratch<T: RadixKey>(
     let bounds = exec::partition_even(n, threads);
     let nth = bounds.len();
     let (min_bits, max_bits) = {
-        let mut views: Vec<&mut [T]> = Vec::with_capacity(nth);
-        let mut rest = &mut *data;
-        let mut consumed = 0usize;
-        for r in &bounds {
-            let (head, tail) = rest.split_at_mut(r.end - consumed);
-            consumed = r.end;
-            views.push(head);
-            rest = tail;
-        }
-        let minmax: Vec<(u64, u64)> = {
-            let results: std::sync::Mutex<Vec<(usize, (u64, u64))>> =
-                std::sync::Mutex::new(Vec::with_capacity(nth));
-            std::thread::scope(|scope| {
-                for (t, view) in views.into_iter().enumerate() {
-                    let results = &results;
-                    scope.spawn(move || {
-                        let mut lo = u64::MAX;
-                        let mut hi = 0u64;
-                        if T::SIGN_MASK != 0 {
-                            for x in view.iter_mut() {
-                                let b = x.bits() ^ T::SIGN_MASK;
-                                *x = T::from_bits(b);
-                                lo = lo.min(b);
-                                hi = hi.max(b);
-                            }
-                        } else {
-                            for x in view.iter() {
-                                let b = x.bits();
-                                lo = lo.min(b);
-                                hi = hi.max(b);
-                            }
-                        }
-                        results.lock().unwrap().push((t, (lo, hi)));
-                    });
+        let views = exec::carve_mut(&mut *data, &bounds);
+        // Each executor task owns one view and returns its (lo, hi) into a
+        // private result slot — lock-free, results already in thread order.
+        let minmax: Vec<(u64, u64)> = exec.run_consume_map(views, |_, view| {
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            if T::SIGN_MASK != 0 {
+                for x in view.iter_mut() {
+                    let b = x.bits() ^ T::SIGN_MASK;
+                    *x = T::from_bits(b);
+                    lo = lo.min(b);
+                    hi = hi.max(b);
                 }
-            });
-            let mut r = results.into_inner().unwrap();
-            r.sort_by_key(|(t, _)| *t);
-            r.into_iter().map(|(_, mm)| mm).collect()
-        };
+            } else {
+                for x in view.iter() {
+                    let b = x.bits();
+                    lo = lo.min(b);
+                    hi = hi.max(b);
+                }
+            }
+            (lo, hi)
+        });
         minmax.iter().fold((u64::MAX, 0u64), |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)))
     };
     let delta = max_bits - min_bits;
@@ -194,7 +197,7 @@ pub fn radix_sort_with_scratch<T: RadixKey>(
         // (Algorithm 4, line 5). These must be recomputed each pass: the
         // scatter permutes data, so block contents change.
         let src_now: &[T] = if src_is_data { &*data } else { &*scratch };
-        let mut hists: Vec<[usize; BUCKETS]> = exec::parallel_map(nth, threads, |t| {
+        let mut hists: Vec<[usize; BUCKETS]> = exec.run_map(nth, |t| {
             let chunk = &src_now[bounds[t].clone()];
             let mut h = [0usize; BUCKETS];
             for &x in chunk {
@@ -242,52 +245,35 @@ pub fn radix_sort_with_scratch<T: RadixKey>(
             };
             let dst_ptr = ScatterBuf(dst.as_mut_ptr());
             let hists_ref: &Vec<[usize; BUCKETS]> = &hists;
-            std::thread::scope(|scope| {
-                for t in 0..nth {
-                    let r = bounds[t].clone();
-                    let src = &src[r];
-                    let mut cursors = hists_ref[t];
-                    let dst_ptr = &dst_ptr;
-                    scope.spawn(move || {
-                        let p = dst_ptr.0;
-                        for &x in src {
-                            let b = (((x.bits() - min_bits) >> shift) & 0xFF) as usize;
-                            // SAFETY: cursors[b] ranges over this thread's
-                            // private (thread, bucket) output interval only.
-                            unsafe { p.add(cursors[b]).write(x) };
-                            cursors[b] += 1;
-                        }
-                    });
+            exec.run_indexed(nth, |t| {
+                let src = &src[bounds[t].clone()];
+                let mut cursors = hists_ref[t];
+                let p = dst_ptr.0;
+                for &x in src {
+                    let b = (((x.bits() - min_bits) >> shift) & 0xFF) as usize;
+                    // SAFETY: cursors[b] ranges over this task's private
+                    // (thread, bucket) output interval only.
+                    unsafe { p.add(cursors[b]).write(x) };
+                    cursors[b] += 1;
                 }
             });
         }
         src_is_data = !src_is_data;
     }
 
-    // If the last scatter landed in scratch, copy back (parallel).
+    // If the last scatter landed in scratch, copy back (parallel). Views
+    // are carved from the same `bounds2` the source is indexed with, so the
+    // geometry coupling is structural.
     if !src_is_data {
         let bounds2 = exec::partition_even(n, threads);
         let src: &[T] = scratch;
-        let mut views: Vec<&mut [T]> = Vec::with_capacity(bounds2.len());
-        let mut rest = &mut *data;
-        let mut consumed = 0;
-        for r in &bounds2 {
-            let (head, tail) = rest.split_at_mut(r.end - consumed);
-            consumed = r.end;
-            views.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|scope| {
-            for (r, view) in bounds2.iter().zip(views) {
-                let chunk = &src[r.clone()];
-                scope.spawn(move || view.copy_from_slice(chunk));
-            }
-        });
+        let views = exec::carve_mut(&mut *data, &bounds2);
+        exec.run_consume(views, |i, view| view.copy_from_slice(&src[bounds2[i].clone()]));
     }
 
     // Phase 3 — undo the sign flip.
     if T::SIGN_MASK != 0 {
-        exec::parallel_for_chunks(data, threads, |_, chunk| {
+        exec.run_chunks(data, threads, |_, chunk| {
             for x in chunk.iter_mut() {
                 *x = T::from_bits(x.bits() ^ T::SIGN_MASK);
             }
@@ -383,6 +369,31 @@ mod tests {
             let data = generate_i64(n, Distribution::Uniform, 51, 2);
             check_i64(&data, 3);
         }
+    }
+
+    #[test]
+    fn thread_clamp_at_the_64_and_4096_boundaries() {
+        // One thread per 4096 elements, never zero. n < 64 never reaches the
+        // clamp (sort_unstable fallback), so 64 is the smallest clamped n.
+        assert_eq!(effective_threads(8, 64), 1, "smallest clamped n uses one thread");
+        assert_eq!(effective_threads(8, 4096), 1, "exactly one grain is still one thread");
+        assert_eq!(effective_threads(8, 4097), 2, "one element past the grain adds a thread");
+        assert_eq!(effective_threads(8, 8 * 4096), 8, "thread budget is the ceiling");
+        assert_eq!(effective_threads(8, 8 * 4096 + 1), 8, "never exceeds the budget");
+        assert_eq!(effective_threads(2, 1 << 20), 2, "large n still respects the budget");
+        assert_eq!(effective_threads(0, 10_000), 1, "a zero budget clamps up to one");
+    }
+
+    #[test]
+    fn executor_variant_matches_std_sort() {
+        let exec = crate::exec::Executor::new(3);
+        let mut scratch = Vec::new();
+        let data = generate_i64(30_000, Distribution::Zipf, 53, 2);
+        let mut got = data.clone();
+        radix_sort_with_executor(&mut got, 4, &mut scratch, &exec);
+        let mut expect = data;
+        expect.sort_unstable();
+        assert_eq!(got, expect);
     }
 
     #[test]

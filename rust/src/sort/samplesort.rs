@@ -17,7 +17,7 @@
 //! bench quantifies.
 
 use super::introsort::introsort;
-use crate::exec;
+use crate::exec::{self, Executor};
 use crate::rng::Xoshiro256pp;
 
 /// Tuning for samplesort.
@@ -45,8 +45,21 @@ impl SampleSortTuning {
     }
 }
 
-/// Sort in place with parallel samplesort.
+/// Sort in place with parallel samplesort (process-wide executor, internal
+/// scratch — see [`sample_sort_with_scratch`] for the zero-alloc hot path).
 pub fn sample_sort<T: Copy + Ord + Send + Sync + Default>(data: &mut [T], tuning: &SampleSortTuning) {
+    sample_sort_with_scratch(data, tuning, exec::global(), &mut Vec::new())
+}
+
+/// Sort in place with parallel samplesort on an explicit executor, using the
+/// caller's `scratch` as the bucket scatter buffer (grown once, reused
+/// across calls).
+pub fn sample_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    tuning: &SampleSortTuning,
+    exec: &Executor,
+    scratch: &mut Vec<T>,
+) {
     let n = data.len();
     if n <= tuning.sequential_threshold.max(64) {
         introsort(data);
@@ -67,7 +80,9 @@ pub fn sample_sort<T: Copy + Ord + Send + Sync + Default>(data: &mut [T], tuning
     let nth = bounds.len();
     let data_ro: &[T] = data;
     let classify = |x: &T| -> usize { splitters.partition_point(|s| s <= x) };
-    let counts: Vec<Vec<usize>> = exec::parallel_map(nth, tuning.threads, |t| {
+    // (`threads <= 1` yields a single range, which the executor runs
+    // inline — no special case needed.)
+    let counts: Vec<Vec<usize>> = exec.run_map(nth, |t| {
         let mut c = vec![0usize; buckets];
         for x in &data_ro[bounds[t].clone()] {
             c[classify(x)] += 1;
@@ -96,59 +111,49 @@ pub fn sample_sort<T: Copy + Ord + Send + Sync + Default>(data: &mut [T], tuning
         }
     }
 
-    // 4. Scatter into a temp buffer (disjoint (thread, bucket) ranges — same
-    //    safety argument as the radix scatter).
-    let mut temp: Vec<T> = vec![T::default(); n];
+    // 4. Scatter into the caller's scratch (disjoint (thread, bucket)
+    //    ranges — same safety argument as the radix scatter).
+    if scratch.len() < n {
+        scratch.resize(n, T::default());
+    }
+    let temp = &mut scratch[..n];
     {
         struct Buf<T>(*mut T);
         unsafe impl<T: Send> Send for Buf<T> {}
         unsafe impl<T: Send> Sync for Buf<T> {}
         let dst = Buf(temp.as_mut_ptr());
-        std::thread::scope(|scope| {
-            for t in 0..nth {
-                let src = &data_ro[bounds[t].clone()];
-                let mut cur = cursors[t].clone();
-                let dst = &dst;
-                let classify = &classify;
-                scope.spawn(move || {
-                    let p = dst.0;
-                    for &x in src {
-                        let b = classify(&x);
-                        // SAFETY: cur[b] stays within this thread's private
-                        // (thread, bucket) output range by construction.
-                        unsafe { p.add(cur[b]).write(x) };
-                        cur[b] += 1;
-                    }
-                });
+        let cursors_ref = &cursors;
+        exec.run_indexed(nth, |t| {
+            let src = &data_ro[bounds[t].clone()];
+            let mut cur = cursors_ref[t].clone();
+            let p = dst.0;
+            for &x in src {
+                let b = classify(&x);
+                // SAFETY: cur[b] stays within this task's private
+                // (thread, bucket) output range by construction.
+                unsafe { p.add(cur[b]).write(x) };
+                cur[b] += 1;
             }
         });
     }
 
-    // 5. Sort each bucket in parallel, writing back into `data`.
+    // 5. Sort each bucket in parallel, buckets grouped round-robin into at
+    //    most `threads` executor tasks (the caller's budget bounds
+    //    concurrency), writing back into `data`.
     {
-        let mut out_views: Vec<&mut [T]> = Vec::with_capacity(buckets);
-        let mut rest = &mut *data;
-        for b in 0..buckets {
-            let (head, tail) = rest.split_at_mut(bucket_sizes[b]);
-            out_views.push(head);
-            rest = tail;
+        let ranges: Vec<std::ops::Range<usize>> =
+            (0..buckets).map(|b| bucket_start[b]..bucket_start[b + 1]).collect();
+        let out_views = exec::carve_mut(data, &ranges);
+        let temp_ro: &[T] = temp;
+        let nw = tuning.threads.max(1).min(buckets);
+        let mut groups: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
+        for (b, out) in out_views.into_iter().enumerate() {
+            groups[b % nw].push((b, out));
         }
-        let mut jobs: Vec<(usize, &mut [T])> = out_views.into_iter().enumerate().collect();
-        let nw = tuning.threads.min(jobs.len().max(1));
-        let mut per_worker: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
-        for (i, job) in jobs.drain(..).enumerate() {
-            per_worker[i % nw].push(job);
-        }
-        let temp_ro: &[T] = &temp;
-        std::thread::scope(|scope| {
-            for work in per_worker {
-                let bucket_start = &bucket_start;
-                scope.spawn(move || {
-                    for (b, out) in work {
-                        out.copy_from_slice(&temp_ro[bucket_start[b]..bucket_start[b + 1]]);
-                        introsort(out);
-                    }
-                });
+        exec.run_consume(groups, |_, group| {
+            for (b, out) in group {
+                out.copy_from_slice(&temp_ro[bucket_start[b]..bucket_start[b + 1]]);
+                introsort(out);
             }
         });
     }
@@ -221,5 +226,20 @@ mod tests {
     fn sequential_fallback_small() {
         let t = SampleSortTuning::for_threads(4);
         check(&generate_i64(5000, Distribution::Uniform, 77, 2), &t); // below threshold
+    }
+
+    #[test]
+    fn explicit_executor_and_scratch_reuse() {
+        let exec = crate::exec::Executor::new(3);
+        let t = SampleSortTuning { sequential_threshold: 1000, ..SampleSortTuning::for_threads(3) };
+        let mut scratch = Vec::new();
+        for seed in 0..4u64 {
+            let mut data = generate_i64(25_000, Distribution::Uniform, seed, 2);
+            let mut expect = data.clone();
+            expect.sort_unstable();
+            sample_sort_with_scratch(&mut data, &t, &exec, &mut scratch);
+            assert_eq!(data, expect);
+        }
+        assert!(scratch.capacity() >= 25_000, "scatter buffer retained across sorts");
     }
 }

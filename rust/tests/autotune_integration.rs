@@ -21,6 +21,7 @@ fn autotuned_service() -> SortService {
         // quick() = eager test policy: tiny observation thresholds, full CPU
         // share, no noise margin (deterministic adaptation is under test).
         autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
+        exec: Default::default(),
     })
 }
 
@@ -110,6 +111,7 @@ fn autotune_off_means_no_tuner_metrics() {
         sort_threads: 2,
         queue_capacity: 8,
         autotune: None,
+        exec: Default::default(),
     });
     assert!(!svc.autotuning());
     let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
@@ -137,6 +139,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
             sort_threads: 2,
             queue_capacity: 32,
             autotune: Some(policy.clone()),
+            exec: Default::default(),
         });
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut round = 0u64;
@@ -159,6 +162,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
         sort_threads: 2,
         queue_capacity: 8,
         autotune: Some(policy),
+        exec: Default::default(),
     });
     assert!(
         !svc.cache().is_empty(),

@@ -10,7 +10,13 @@ use evosort::testkit::{check, Arbitrary, PropConfig};
 use evosort::util::timer;
 
 fn service(workers: usize) -> SortService {
-    SortService::new(ServiceConfig { workers, sort_threads: 2, queue_capacity: 32, autotune: None })
+    SortService::new(ServiceConfig {
+        workers,
+        sort_threads: 2,
+        queue_capacity: 32,
+        autotune: None,
+        exec: Default::default(),
+    })
 }
 
 #[test]

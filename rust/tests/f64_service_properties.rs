@@ -14,6 +14,7 @@ fn service() -> SortService {
         sort_threads: 2,
         queue_capacity: 16,
         autotune: None,
+        exec: Default::default(),
     })
 }
 

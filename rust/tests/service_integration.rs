@@ -15,6 +15,7 @@ fn service_sorts_mixed_workloads_concurrently() {
         sort_threads: 2,
         queue_capacity: 4,
         autotune: None,
+        exec: Default::default(),
     });
     let workloads = [
         (Distribution::Uniform, "uniform"),
@@ -51,6 +52,7 @@ fn backpressure_queue_smaller_than_jobs() {
         sort_threads: 1,
         queue_capacity: 1,
         autotune: None,
+        exec: Default::default(),
     });
     let tickets: Vec<Ticket> = (0..8)
         .map(|i| {
@@ -73,6 +75,7 @@ fn ticket_wait_timeout_on_queued_job() {
         sort_threads: 1,
         queue_capacity: 8,
         autotune: None,
+        exec: Default::default(),
     });
     let tickets: Vec<Ticket> = (0..4)
         .map(|i| {
@@ -108,6 +111,7 @@ fn tuning_cache_lifecycle_through_service() {
         sort_threads: 2,
         queue_capacity: 8,
         autotune: None,
+        exec: Default::default(),
     });
 
     // Cold: symbolic model used.
@@ -143,6 +147,7 @@ fn dtype_tagged_cache_entries_persist_and_restore() {
         sort_threads: 2,
         queue_capacity: 8,
         autotune: None,
+        exec: Default::default(),
     });
     let floats: Vec<f64> =
         generate_i64(300_000, Distribution::Uniform, 3, 2).iter().map(|&x| x as f64).collect();
@@ -167,6 +172,7 @@ fn throughput_accounting() {
         sort_threads: 1,
         queue_capacity: 8,
         autotune: None,
+        exec: Default::default(),
     });
     let sizes = [10_000usize, 20_000, 30_000];
     for (i, &n) in sizes.iter().enumerate() {
