@@ -346,11 +346,16 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
 /// `--autotune`, the service owns an online tuner: repeated batches of one
 /// workload shape are submitted and the background GA refines the
 /// dtype-tagged fingerprint-keyed cache while traffic flows. With
-/// `--shards N` (N ≥ 2), the service runs cross-process: a router spawns N
-/// `shard-worker` child processes and routes mixed-dtype batches across
-/// them; combined with `--autotune`, each shard tunes locally and the run
-/// fails unless every shard served jobs and at least one cross-shard cache
-/// broadcast occurred (the CI sharded smoke).
+/// `--shards N` (N ≥ 2) or `--connect <endpoints>`, the service runs
+/// cross-process: a router spawns N `shard-worker` child processes (over
+/// Unix sockets, or TCP with `--transport tcp` / `--listen tcp://…`) and/or
+/// dials externally started `shard-worker --listen` workers, then routes
+/// mixed-dtype batches across the fleet; combined with `--autotune`, each
+/// shard tunes locally and the run fails unless every shard served jobs and
+/// at least one cross-shard cache broadcast occurred (the CI sharded
+/// smoke). `--chaos-kill` additionally kills shard 0 mid-batch and fails
+/// unless the batch still completes and the shard is redialed (the CI
+/// failover smoke).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.usize_or("jobs", 16)?;
     let n = args.usize_or("n", 1_000_000)?;
@@ -358,7 +363,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let threads = threads_of(args)?;
     let dtype = dtype_of(args)?;
     let shards = args.usize_or("shards", 1)?;
-    if shards > 1 {
+    if shards > 1 || args.get("connect").is_some() {
         return serve_sharded(args, jobs, n, workers, threads, shards);
     }
     if args.has("autotune") {
@@ -437,7 +442,7 @@ fn serve_sharded(
     shards: usize,
 ) -> Result<()> {
     use crate::autotune::AutotunePolicy;
-    use crate::coordinator::{ShardSpec, ShardedService};
+    use crate::coordinator::{Endpoint, ShardedService, TransportKind};
 
     // Same flag set as `serve --autotune`, forwarded to every shard. The
     // persist path is intentionally stripped (shards sharing one file would
@@ -449,14 +454,35 @@ fn serve_sharded(
         None
     };
     let autotuned = autotune.is_some();
-    let spec = ShardSpec {
-        shards,
-        workers_per_shard: workers,
-        sort_threads: (threads / (workers * shards).max(1)).max(1),
-        autotune,
-        exec: exec_mode_of(args)?,
-        ..ShardSpec::default()
-    };
+    let mut builder = ShardedService::builder()
+        .shards(shards)
+        .workers_per_shard(workers)
+        .sort_threads((threads / (workers * shards.max(1)).max(1)).max(1))
+        .exec(exec_mode_of(args)?);
+    if let Some(policy) = autotune {
+        builder = builder.autotune(policy);
+    }
+    if let Some(name) = args.get("transport") {
+        let Some(t) = TransportKind::parse(name) else {
+            bail!("unknown --transport {name:?} (unix|tcp)");
+        };
+        builder = builder.transport(t);
+    }
+    if let Some(text) = args.get("listen") {
+        builder = builder.endpoint(text.parse::<Endpoint>()?);
+    }
+    if let Some(list) = args.get("connect") {
+        for part in list.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                builder = builder.connect(part.parse::<Endpoint>()?);
+            }
+        }
+    }
+    let spec = builder.build();
+    let transport = spec.transport;
+    let remotes = spec.remotes.len();
+    let fleet = spec.shards + remotes;
     let svc = ShardedService::spawn(spec)?;
     let rounds = args.usize_or("rounds", if autotuned { 40 } else { 1 })?;
     let seed = args.u64_or("seed", 42)?;
@@ -466,21 +492,27 @@ fn serve_sharded(
     let dtype_label =
         forced_dtype.map(|d| d.name().to_string()).unwrap_or_else(|| "mixed-dtype".into());
     println!(
-        "sharded service: {shards} shard processes x {workers} workers, up to {rounds} \
-         rounds of {jobs} {dtype_label} jobs of {} elements",
+        "sharded service: {shards} local shard processes x {workers} workers + {remotes} \
+         remote workers over {transport}, up to {rounds} rounds of {jobs} {dtype_label} \
+         jobs of {} elements",
         fmt_count(n)
     );
     let dtypes = Dtype::all();
-    for round in 0..rounds {
-        let requests: Vec<SortRequest> = (0..jobs)
+    let make_requests = |round: usize| -> Vec<SortRequest> {
+        (0..jobs)
             .map(|i| {
                 let dtype = forced_dtype.unwrap_or(dtypes[i % dtypes.len()]);
                 let job_seed = seed ^ (round * jobs + i) as u64;
                 let data = data::generate_i64(n, Distribution::Uniform, job_seed, threads);
                 SortRequest::from_payload(SortPayload::from_i64_values(data, dtype))
             })
-            .collect();
-        let report = svc.submit_batch_requests(requests).wait();
+            .collect()
+    };
+    if args.has("chaos-kill") {
+        serve_chaos_round(&svc, make_requests(usize::MAX / 2), jobs)?;
+    }
+    for round in 0..rounds {
+        let report = svc.submit_batch_requests(make_requests(round)).wait();
         anyhow::ensure!(report.stats.invalid == 0, "{} jobs invalid", report.stats.invalid);
         anyhow::ensure!(report.stats.failed == 0, "{} jobs failed", report.stats.failed);
         println!(
@@ -490,7 +522,7 @@ fn serve_sharded(
         );
         let metrics = svc.metrics();
         let all_active =
-            (0..shards).all(|s| metrics.counter(&format!("shard.{s}.jobs.completed")) > 0);
+            (0..fleet).all(|s| metrics.counter(&format!("shard.{s}.jobs.completed")) > 0);
         if all_active && (!autotuned || metrics.counter("shard.cache.broadcasts") > 0) {
             break;
         }
@@ -506,7 +538,7 @@ fn serve_sharded(
         }
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
-    for s in 0..shards {
+    for s in 0..fleet {
         let completed = svc.metrics().counter(&format!("shard.{s}.jobs.completed"));
         println!("shard {s}: {completed} jobs completed");
         anyhow::ensure!(completed > 0, "sharded smoke failed: shard {s} served no jobs");
@@ -523,6 +555,59 @@ fn serve_sharded(
     Ok(())
 }
 
+/// The `--chaos-kill` failover round: stream a batch, kill shard 0 once it
+/// has work in flight, and require that (a) the stream still completes —
+/// every job resolves, as a sort or a typed error, never a hang — and (b)
+/// the router redials the shard (`shards.redials >= 1`). CI runs this over
+/// `--transport tcp` as the multi-node failover smoke.
+#[cfg(unix)]
+fn serve_chaos_round(
+    svc: &crate::coordinator::ShardedService,
+    requests: Vec<SortRequest>,
+    jobs: usize,
+) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let router = svc
+        .router()
+        .ok_or_else(|| anyhow::anyhow!("--chaos-kill needs a sharded fleet (>= 2 slots)"))?;
+    println!("chaos round: killing shard 0 mid-batch ({jobs} jobs)");
+    let stream = svc.submit_batch_requests(requests).stream();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.inflight(0) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    anyhow::ensure!(router.inflight(0) > 0, "chaos round: shard 0 never took a job");
+    anyhow::ensure!(router.kill_shard(0), "chaos round: could not kill shard 0");
+    let (mut completed, mut failed) = (0usize, 0usize);
+    for result in stream {
+        match result {
+            Ok(out) => {
+                anyhow::ensure!(out.valid, "chaos round: job {} failed validation", out.id);
+                completed += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    anyhow::ensure!(
+        completed + failed == jobs,
+        "chaos round: {completed} completed + {failed} failed != {jobs} submitted"
+    );
+    anyhow::ensure!(completed > 0, "chaos round: no job survived the kill");
+    println!(
+        "chaos round: {completed} completed + {failed} failed = {jobs} submitted \
+         (no job hung)"
+    );
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while svc.metrics().counter("shards.redials") == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let redials = svc.metrics().counter("shards.redials");
+    anyhow::ensure!(redials >= 1, "chaos round: shard 0 was never redialed");
+    println!("chaos round: shard redials observed: {redials}");
+    Ok(())
+}
+
 #[cfg(not(unix))]
 fn serve_sharded(
     _args: &Args,
@@ -535,19 +620,27 @@ fn serve_sharded(
     bail!("serve --shards requires Unix-domain sockets (unix-only)")
 }
 
-/// `evosort shard-worker` — internal: the child-process side of
-/// `serve --shards N`. Connects back to the router's Unix socket and serves
-/// routed jobs with a local `SortService` until told to shut down. Spawned
-/// by [`ShardRouter`](crate::coordinator::ShardRouter); not meant for direct
-/// use.
+/// `evosort shard-worker` — the worker-process side of the sharded service.
+///
+/// Two modes:
+///
+/// * `--connect <endpoint>` — dial a waiting router and serve it until told
+///   to shut down. This is how [`ShardRouter`](crate::coordinator::ShardRouter)
+///   spawns its local shards (it passes the resolved listen address).
+/// * `--listen <endpoint>` — bind, announce
+///   `shard-worker listening on <endpoint>` on stdout, and serve routers
+///   one at a time, re-listening when one disconnects. This is the
+///   standalone mode for remote hosts: start it there, then point a router
+///   at it with `serve --connect tcp://host:port`. Exits only on a
+///   `Shutdown` frame.
+///
+/// `--socket <path>` is the legacy spelling of `--connect unix://<path>`.
 pub fn cmd_shard_worker(args: &Args) -> Result<()> {
     #[cfg(unix)]
     {
         use crate::coordinator::shard::worker::{self, ShardWorkerConfig};
+        use crate::coordinator::Endpoint;
 
-        let Some(socket) = args.get("socket") else {
-            bail!("shard-worker requires --socket (it is spawned by `serve --shards N`)");
-        };
         // Production-default base: the router forwards every knob it wants
         // explicitly, so unforwarded knobs get library defaults here.
         let autotune = if args.has("autotune") {
@@ -566,7 +659,18 @@ pub fn cmd_shard_worker(args: &Args) -> Result<()> {
             },
             publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
         };
-        worker::run(std::path::Path::new(socket), config)
+        match (args.get("connect"), args.get("listen"), args.get("socket")) {
+            (Some(text), None, None) => worker::run(&text.parse::<Endpoint>()?, config),
+            (None, Some(text), None) => worker::run_listening(&text.parse::<Endpoint>()?, config),
+            (None, None, Some(path)) => {
+                worker::run(&Endpoint::unix(std::path::PathBuf::from(path)), config)
+            }
+            _ => bail!(
+                "shard-worker requires exactly one of --connect <endpoint> (dial a router), \
+                 --listen <endpoint> (standalone: wait for routers), or --socket <path> \
+                 (legacy unix --connect)"
+            ),
+        }
     }
     #[cfg(not(unix))]
     {

@@ -16,8 +16,10 @@
 //!   info      platform, artifact and configuration report
 //! ```
 //!
-//! (`shard-worker` also exists as a hidden subcommand: the child-process
-//! side of `serve --shards N`, spawned by the shard router.)
+//! (`shard-worker` also exists as a subcommand: the worker-process side of
+//! the sharded service — spawned by the shard router for local shards
+//! (`--connect`), or started standalone on remote hosts (`--listen
+//! tcp://…`) for a router to dial with `serve --connect`.)
 
 pub mod commands;
 
@@ -149,10 +151,26 @@ COMMANDS
             refines fingerprint-keyed params in the tuning cache while
             traffic flows, and the run fails if nothing was learned)
             [--shards N] (N >= 2: cross-process service — a router spawns N
-            shard-worker processes over Unix sockets and routes mixed-dtype
-            batches across them; with --autotune each shard tunes locally
-            and caches sync through the router, and the run fails unless
-            every shard served jobs and a cross-shard broadcast occurred)
+            shard-worker processes and routes mixed-dtype batches across
+            them; with --autotune each shard tunes locally and caches sync
+            through the router, and the run fails unless every shard served
+            jobs and a cross-shard broadcast occurred)
+            [--transport unix|tcp] (local-shard link; default unix)
+            [--listen EP] (local-shard listen base, e.g. tcp://127.0.0.1:0;
+            its scheme selects the transport)
+            [--connect EP1,EP2] (dial externally started
+            `shard-worker --listen` workers into the fleet — tcp://host:port
+            reaches other hosts; they are redialed with backoff on failure)
+            [--chaos-kill] (failover smoke: kill shard 0 mid-batch, require
+            the batch to complete and the shard to be redialed)
+  shard-worker
+            --connect EP (dial a waiting router — how local shards start) |
+            --listen EP (standalone: bind, print
+            `shard-worker listening on EP`, serve routers one at a time,
+            re-listen on disconnect; exits on a Shutdown frame) |
+            --socket PATH (legacy unix --connect)
+            [--workers N] [--sort-threads N] [--queue-capacity N]
+            [--publish-ms MS] [--exec parked|spawn] [--autotune ...]
   info      (platform, threads, artifact status)
 
 FLAGS common: --threads N (default: all cores), --seed S, --dist DIST

@@ -28,12 +28,18 @@
 //! exec           = parked  # kernel execution backend: parked (persistent
 //!                          # executor, default) | spawn (per-call scoped
 //!                          # threads — the A/B baseline)
+//! transport      = unix    # local-shard link: unix (default) | tcp
+//! listen         = "tcp://127.0.0.1:0"   # local-shard listen base (quoted —
+//!                                        # endpoint syntax needs `://`)
+//! connect        = "tcp://10.0.0.7:7070,tcp://10.0.0.8:7070"
+//!                          # externally started `shard-worker --listen`
+//!                          # processes to dial (comma-separated, quoted)
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::Document;
-use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig};
+use crate::coordinator::{Endpoint, ParamSource, PipelineConfig, ServiceConfig, TransportKind};
 use crate::data::Distribution;
 use crate::ga::GaConfig;
 use crate::sort::Baseline;
@@ -47,7 +53,8 @@ pub struct RunConfig {
     pub service: ServiceSettings,
 }
 
-/// Plain-data mirror of [`ServiceConfig`] (which holds no Clone state).
+/// Plain-data mirror of [`ServiceConfig`], validated at config-parse time
+/// (endpoints are typed here, not raw strings).
 #[derive(Debug, Clone)]
 pub struct ServiceSettings {
     pub workers: usize,
@@ -56,13 +63,23 @@ pub struct ServiceSettings {
     /// Attach the online autotuner (fingerprint observations + background
     /// GA refinement) with default policy knobs.
     pub autotune: bool,
-    /// Worker **processes**: `1` serves in-process, `>= 2` spawns a shard
-    /// router with that many `shard-worker` children (each of which gets
-    /// `workers` pool threads).
+    /// Local worker **processes**: `1` (with no [`connect`](Self::connect))
+    /// serves in-process, otherwise a shard router spawns that many
+    /// `shard-worker` children (each of which gets `workers` pool threads).
     pub shards: usize,
     /// Kernel execution backend: the persistent parked executor (default)
     /// or the spawn-per-call baseline.
     pub exec: crate::exec::ExecMode,
+    /// Link transport for local shards (`unix` default; `tcp` exercises
+    /// the cross-host path on loopback).
+    pub transport: TransportKind,
+    /// Listen-address base for local shards; its scheme must match
+    /// [`transport`](Self::transport) (it *sets* the transport when the
+    /// `transport` key is absent).
+    pub listen: Option<Endpoint>,
+    /// Externally started `shard-worker --listen` endpoints to dial into
+    /// the fleet.
+    pub connect: Vec<Endpoint>,
 }
 
 impl ServiceSettings {
@@ -77,21 +94,31 @@ impl ServiceSettings {
         }
     }
 
-    /// Deployment-level spec for [`ShardedService::spawn`] — routes
-    /// in-process when `shards <= 1`, cross-process otherwise.
+    /// Deployment-level spec for [`ShardedService::spawn`] — a thin shim
+    /// over [`ShardedService::builder`]; routes in-process when the fleet
+    /// is one local shard, cross-process otherwise.
     ///
     /// [`ShardedService::spawn`]: crate::coordinator::ShardedService::spawn
+    /// [`ShardedService::builder`]: crate::coordinator::ShardedService::builder
     #[cfg(unix)]
     pub fn to_shard_spec(&self) -> crate::coordinator::ShardSpec {
-        crate::coordinator::ShardSpec {
-            shards: self.shards.max(1),
-            workers_per_shard: self.workers,
-            sort_threads: self.sort_threads,
-            queue_capacity: self.queue_capacity,
-            autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
-            exec: self.exec,
-            ..crate::coordinator::ShardSpec::default()
+        let mut b = crate::coordinator::ShardedService::builder()
+            .shards(self.shards.max(1))
+            .workers_per_shard(self.workers)
+            .sort_threads(self.sort_threads)
+            .queue_capacity(self.queue_capacity)
+            .exec(self.exec)
+            .transport(self.transport);
+        if self.autotune {
+            b = b.autotune(crate::autotune::AutotunePolicy::default());
         }
+        if let Some(listen) = &self.listen {
+            b = b.endpoint(listen.clone());
+        }
+        for remote in &self.connect {
+            b = b.connect(remote.clone());
+        }
+        b.build()
     }
 }
 
@@ -152,6 +179,43 @@ impl RunConfig {
         let Some(exec) = crate::exec::ExecMode::parse(&exec_name) else {
             bail!("[service] exec must be parked|spawn, got {exec_name:?}");
         };
+        let listen = match doc.get("service", "listen") {
+            None => None,
+            Some(v) => {
+                let text = v.as_str().context("[service] listen must be a quoted endpoint")?;
+                Some(text.parse::<Endpoint>().map_err(|e| anyhow::anyhow!("[service] {e}"))?)
+            }
+        };
+        let mut connect = Vec::new();
+        if let Some(v) = doc.get("service", "connect") {
+            let text = v
+                .as_str()
+                .context("[service] connect must be a quoted, comma-separated endpoint list")?;
+            for part in text.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                connect.push(part.parse::<Endpoint>().map_err(|e| anyhow::anyhow!("[service] {e}"))?);
+            }
+        }
+        // An explicit transport must agree with the listen endpoint; an
+        // absent one is inferred from it (default: unix).
+        let transport = match doc.get("service", "transport") {
+            Some(v) => {
+                let name = v.as_str().context("[service] transport must be unix|tcp")?;
+                let Some(t) = TransportKind::parse(name) else {
+                    bail!("[service] transport must be unix|tcp, got {name:?}");
+                };
+                if let Some(ep) = &listen {
+                    if ep.transport() != t {
+                        bail!("[service] listen endpoint {ep} does not match transport {t}");
+                    }
+                }
+                t
+            }
+            None => listen.as_ref().map(Endpoint::transport).unwrap_or_default(),
+        };
         let service = ServiceSettings {
             workers: doc.count("service", "workers", 2)?.max(1),
             sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
@@ -159,6 +223,9 @@ impl RunConfig {
             autotune: doc.bool("service", "autotune", false)?,
             shards: doc.count("service", "shards", 1)?.max(1),
             exec,
+            transport,
+            listen,
+            connect,
         };
 
         Ok(RunConfig { threads, pipeline, service })
@@ -231,6 +298,39 @@ queue_capacity = 16
     }
 
     #[test]
+    #[cfg(unix)]
+    fn endpoints_flow_into_the_shard_spec() {
+        let rc = parse(
+            r#"
+[service]
+shards = 2
+listen = "tcp://127.0.0.1:0"
+connect = "tcp://10.0.0.7:7070, tcp://10.0.0.8:7070"
+"#,
+        )
+        .unwrap();
+        // Transport inferred from the listen endpoint's scheme.
+        assert_eq!(rc.service.transport, TransportKind::Tcp);
+        let spec = rc.service.to_shard_spec();
+        assert_eq!(spec.shards, 2);
+        assert_eq!(spec.transport, TransportKind::Tcp);
+        assert_eq!(spec.listen.as_ref().unwrap().to_string(), "tcp://127.0.0.1:0");
+        let remotes: Vec<String> = spec.remotes.iter().map(|e| e.to_string()).collect();
+        assert_eq!(remotes, vec!["tcp://10.0.0.7:7070", "tcp://10.0.0.8:7070"]);
+        // Plain `shards = N` configs keep working: unix transport, no
+        // listen base, no remotes — exactly the pre-endpoint behavior.
+        let rc = parse("[service]\nshards = 3").unwrap();
+        assert_eq!(rc.service.transport, TransportKind::Unix);
+        let spec = rc.service.to_shard_spec();
+        assert_eq!(spec.transport, TransportKind::Unix);
+        assert!(spec.listen.is_none());
+        assert!(spec.remotes.is_empty());
+        // An explicit transport key works without a listen base.
+        let rc = parse("[service]\ntransport = tcp").unwrap();
+        assert_eq!(rc.service.transport, TransportKind::Tcp);
+    }
+
+    #[test]
     fn defaults_when_empty() {
         let rc = parse("").unwrap();
         assert!(matches!(rc.pipeline.params, ParamSource::Ga(_)));
@@ -270,5 +370,14 @@ crossover = 0.9
         assert!(parse("[ga]\ncrossover = 1.5").is_err());
         assert!(parse("[ga]\npopulation = 1").is_err());
         assert!(parse("[service]\nexec = turbo").is_err());
+        // Endpoint validation happens at parse time, with actionable errors.
+        let err = parse("[service]\nlisten = \"tcp://no-port\"").unwrap_err();
+        assert!(err.to_string().contains("[service]"), "namespaced: {err}");
+        assert!(parse("[service]\ntransport = carrier-pigeon").is_err());
+        assert!(
+            parse("[service]\ntransport = unix\nlisten = \"tcp://127.0.0.1:1\"").is_err(),
+            "transport/listen scheme mismatch must fail"
+        );
+        assert!(parse("[service]\nconnect = \"tcp://a:1,nonsense\"").is_err());
     }
 }

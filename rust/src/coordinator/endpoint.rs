@@ -1,0 +1,239 @@
+//! Typed service endpoints: where a shard worker listens or a router dials.
+//!
+//! The shard fleet speaks one frame protocol over two transports, and every
+//! place that used to take a bare socket path (`ShardSpec`, `[service]`
+//! config, CLI flags) now takes an [`Endpoint`]:
+//!
+//! * `unix:///run/evosort/shard.sock` — a Unix-domain socket (single host);
+//! * `tcp://10.0.0.7:7001` — a TCP socket (multi-node fleets; also
+//!   `tcp://[::1]:7001` for IPv6 literals, `tcp://127.0.0.1:0` to let the
+//!   OS pick the port).
+//!
+//! `FromStr` and `Display` round-trip, so an endpoint printed by one process
+//! (`shard-worker --listen` announces its resolved address this way) can be
+//! pasted into another's `--connect`. Parse errors say what was wrong and
+//! what the accepted forms are — they surface directly to config/CLI users.
+//!
+//! The type is plain data and compiles everywhere; the unix-only socket
+//! machinery lives in `shard::transport`.
+
+use std::fmt;
+use std::path::PathBuf;
+use std::str::FromStr;
+
+/// Which transport an [`Endpoint`] (or a whole shard fleet) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// Unix-domain sockets: single host, no network exposure (the default).
+    #[default]
+    Unix,
+    /// TCP sockets: multi-node, **no auth/encryption** — loopback or
+    /// trusted networks only.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Unix => "unix",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "unix" => Some(TransportKind::Unix),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed socket address: `unix:///path` or `tcp://host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A Unix-domain socket path.
+    Unix(PathBuf),
+    /// A TCP host + port. `port == 0` means "let the OS pick" (listen side
+    /// only — the resolved port is what gets announced/dialed).
+    Tcp { host: String, port: u16 },
+}
+
+impl Endpoint {
+    /// Shorthand for a TCP endpoint.
+    pub fn tcp(host: impl Into<String>, port: u16) -> Endpoint {
+        Endpoint::Tcp { host: host.into(), port }
+    }
+
+    /// Shorthand for a Unix-socket endpoint.
+    pub fn unix(path: impl Into<PathBuf>) -> Endpoint {
+        Endpoint::Unix(path.into())
+    }
+
+    /// The transport this address belongs to.
+    pub fn transport(&self) -> TransportKind {
+        match self {
+            Endpoint::Unix(_) => TransportKind::Unix,
+            Endpoint::Tcp { .. } => TransportKind::Tcp,
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Unix(path) => write!(f, "unix://{}", path.display()),
+            Endpoint::Tcp { host, port } => {
+                // IPv6 literals print bracketed so Display round-trips
+                // through FromStr (the last-colon split needs the brackets).
+                if host.contains(':') {
+                    write!(f, "tcp://[{host}]:{port}")
+                } else {
+                    write!(f, "tcp://{host}:{port}")
+                }
+            }
+        }
+    }
+}
+
+/// What went wrong parsing an endpoint, with the accepted forms spelled out
+/// (these errors surface verbatim to config/CLI users).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EndpointParseError {
+    input: String,
+    problem: String,
+}
+
+impl fmt::Display for EndpointParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "invalid endpoint {:?}: {} (expected `unix:///path/to.sock` or `tcp://host:port`)",
+            self.input, self.problem
+        )
+    }
+}
+
+impl std::error::Error for EndpointParseError {}
+
+fn err(input: &str, problem: impl Into<String>) -> EndpointParseError {
+    EndpointParseError { input: input.to_string(), problem: problem.into() }
+}
+
+impl FromStr for Endpoint {
+    type Err = EndpointParseError;
+
+    fn from_str(s: &str) -> Result<Endpoint, EndpointParseError> {
+        let s = s.trim();
+        if let Some(path) = s.strip_prefix("unix://") {
+            if path.is_empty() {
+                return Err(err(s, "empty socket path"));
+            }
+            return Ok(Endpoint::Unix(PathBuf::from(path)));
+        }
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            let (host, port) = if let Some(rest) = addr.strip_prefix('[') {
+                // Bracketed IPv6 literal: `[::1]:7001`.
+                let Some((host, tail)) = rest.split_once(']') else {
+                    return Err(err(s, "unterminated `[` in IPv6 host"));
+                };
+                let Some(port) = tail.strip_prefix(':') else {
+                    return Err(err(s, "missing `:port` after the IPv6 host"));
+                };
+                (host, port)
+            } else {
+                match addr.rsplit_once(':') {
+                    Some(split) => split,
+                    None => return Err(err(s, "missing `:port` after the host")),
+                }
+            };
+            if host.is_empty() {
+                return Err(err(s, "empty host"));
+            }
+            let port: u16 = port
+                .parse()
+                .map_err(|_| err(s, format!("port {port:?} is not a number in 0..=65535")))?;
+            return Ok(Endpoint::Tcp { host: host.to_string(), port });
+        }
+        match s.split_once("://") {
+            Some((scheme, _)) => Err(err(s, format!("unknown scheme {scheme:?}"))),
+            None => Err(err(s, "missing scheme")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_from_str_round_trips() {
+        let cases = [
+            Endpoint::unix("/run/evosort/shard.sock"),
+            Endpoint::tcp("127.0.0.1", 7001),
+            Endpoint::tcp("worker-3.internal", 0),
+            Endpoint::tcp("::1", 7001), // prints bracketed
+        ];
+        for ep in cases {
+            let text = ep.to_string();
+            let back: Endpoint = text.parse().unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, ep, "round-trip through {text}");
+        }
+        assert_eq!(
+            Endpoint::tcp("::1", 7001).to_string(),
+            "tcp://[::1]:7001",
+            "IPv6 literals print bracketed"
+        );
+    }
+
+    #[test]
+    fn parse_accepts_both_schemes() {
+        assert_eq!(
+            "unix:///tmp/x.sock".parse::<Endpoint>().unwrap(),
+            Endpoint::unix("/tmp/x.sock")
+        );
+        assert_eq!(
+            "tcp://10.0.0.7:7001".parse::<Endpoint>().unwrap(),
+            Endpoint::tcp("10.0.0.7", 7001)
+        );
+        assert_eq!("tcp://[::1]:80".parse::<Endpoint>().unwrap(), Endpoint::tcp("::1", 80));
+        // Whitespace from config files is tolerated.
+        assert_eq!(" tcp://h:1 ".parse::<Endpoint>().unwrap(), Endpoint::tcp("h", 1));
+    }
+
+    #[test]
+    fn parse_errors_are_actionable() {
+        for (input, needle) in [
+            ("tcp://host", "missing `:port`"),
+            ("tcp://:7001", "empty host"),
+            ("tcp://host:port", "not a number"),
+            ("tcp://host:99999", "not a number"),
+            ("tcp://[::1", "unterminated"),
+            ("tcp://[::1]7001", "missing `:port`"),
+            ("unix://", "empty socket path"),
+            ("http://x:1", "unknown scheme"),
+            ("/tmp/plain.sock", "missing scheme"),
+        ] {
+            let e = input.parse::<Endpoint>().unwrap_err().to_string();
+            assert!(e.contains(needle), "{input:?}: error {e:?} should mention {needle:?}");
+            assert!(e.contains("expected"), "{input:?}: error {e:?} should show accepted forms");
+        }
+    }
+
+    #[test]
+    fn transport_kind_parse_and_names() {
+        assert_eq!(TransportKind::parse("unix"), Some(TransportKind::Unix));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("udp"), None);
+        assert_eq!(Endpoint::tcp("h", 1).transport(), TransportKind::Tcp);
+        assert_eq!(Endpoint::unix("/x").transport(), TransportKind::Unix);
+        assert_eq!(TransportKind::default(), TransportKind::Unix);
+    }
+}

@@ -2,9 +2,11 @@
 //! sort service (typed async job API: dtype-generic requests, non-blocking
 //! tickets, result streaming, backpressure + metrics), the tuning cache, and
 //! the cross-process sharded deployment layer ([`shard`]: a router that
-//! spreads the same typed API over N `evosort shard-worker` OS processes on
-//! a Unix-socket frame transport).
+//! spreads the same typed API over a fleet of `evosort shard-worker` OS
+//! processes — locally spawned or remote — on a frame transport addressed
+//! by typed [`Endpoint`]s (`unix:///path.sock`, `tcp://host:port`)).
 
+pub mod endpoint;
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
@@ -14,6 +16,7 @@ pub mod shard;
 pub mod ticket;
 pub mod tuning_cache;
 
+pub use endpoint::{Endpoint, EndpointParseError, TransportKind};
 pub use metrics::Metrics;
 pub use pipeline::{BatchWorkload, ParamSource, PipelineConfig, PipelineRow};
 pub use request::SortRequest;
@@ -21,6 +24,6 @@ pub use service::{
     BatchReport, BatchStats, BatchTicket, DtypeStats, ResultStream, ServiceConfig, SortService,
 };
 #[cfg(unix)]
-pub use shard::{ShardRouter, ShardSpec, ShardedService};
+pub use shard::{ShardRouter, ShardSpec, ShardedService, ShardedServiceBuilder};
 pub use ticket::{JobError, JobResult, SortOutput, Ticket};
 pub use tuning_cache::{CacheEntry, TuningCache};

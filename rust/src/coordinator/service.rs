@@ -456,6 +456,7 @@ fn payload_sample(payload: &SortPayload, cap: usize) -> Vec<i64> {
 }
 
 /// Service configuration.
+#[derive(Clone)]
 pub struct ServiceConfig {
     /// Concurrent sort jobs (each job internally uses `sort_threads`).
     pub workers: usize,

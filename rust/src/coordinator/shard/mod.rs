@@ -1,29 +1,43 @@
 //! Cross-process sharding: the same typed async service API
 //! ([`SortRequest`] → [`Ticket`] / [`BatchTicket`]) served by N `evosort
 //! shard-worker` OS processes behind a [`ShardRouter`], over a
-//! length-prefixed frame protocol on Unix-domain sockets.
+//! length-prefixed frame protocol carried by either transport the
+//! [`transport`] seam offers — Unix-domain sockets on one host, TCP across
+//! hosts.
 //!
 //! Layering:
 //!
 //! * [`protocol`] — the wire format (hand-rolled little-endian frames; the
-//!   tuning cache travels as its versioned v2 text interchange);
+//!   tuning cache travels as its versioned v2 text interchange), identical
+//!   on both transports;
+//! * [`transport`] — the byte-stream seam: [`Listener`](transport::Listener)
+//!   / [`Stream`](transport::Stream) over an [`Endpoint`]
+//!   (`unix:///path.sock` or `tcp://host:port`);
 //! * [`worker`] — the child-process side: one [`SortService`] per shard,
-//!   autotuner included, publishing its cache and counter telemetry back;
-//! * [`router`] — the parent side: least-loaded dispatch with a bounded
-//!   per-shard in-flight window (queued jobs reroute on shard death,
-//!   in-flight ones resolve `Err(WorkerLost)`, the shard respawns),
-//!   improvement-aware cache merging with re-broadcast, and per-shard →
-//!   service-level metrics aggregation;
-//! * [`ShardedService`] — the front door: routes in-process when
-//!   `shards <= 1` so the single-process path keeps zero sharding overhead.
+//!   autotuner included, publishing its cache and counter telemetry back.
+//!   Local shards dial the router ([`worker::run`]); standalone remote
+//!   workers listen and serve routers one at a time
+//!   ([`worker::run_listening`]);
+//! * [`router`] — the parent side: bounded admission (`Err(Overloaded)`
+//!   past the router-queue capacity), per-client round-robin fairness,
+//!   least-loaded dispatch with a bounded per-shard in-flight window
+//!   (queued jobs reroute on shard death, in-flight ones resolve
+//!   `Err(WorkerLost)`, the shard respawns or is redialed within its
+//!   redial budget), improvement-aware cache merging with re-broadcast,
+//!   and per-shard → service-level metrics aggregation;
+//! * [`ShardedService`] — the front door: routes in-process when the fleet
+//!   is a single local shard so that path keeps zero sharding overhead.
+//!   [`ShardedService::builder`] is the ergonomic way to describe a fleet.
 //!
 //! [`SortRequest`]: crate::coordinator::SortRequest
 //! [`Ticket`]: crate::coordinator::Ticket
 //! [`BatchTicket`]: crate::coordinator::BatchTicket
 //! [`SortService`]: crate::coordinator::SortService
+//! [`Endpoint`]: crate::coordinator::Endpoint
 
 pub mod protocol;
 pub mod router;
+pub mod transport;
 pub mod worker;
 
 pub use router::{ShardRouter, ShardSpec};
@@ -34,6 +48,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::autotune::AutotunePolicy;
+use crate::coordinator::endpoint::{Endpoint, TransportKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::SortRequest;
 use crate::coordinator::service::{BatchTicket, ServiceConfig, SortService};
@@ -44,17 +60,19 @@ use crate::coordinator::tuning_cache::TuningCache;
 /// worker processes ([`ShardRouter`]) behind one submission surface.
 /// `Ticket`/`BatchTicket`/`ResultStream` semantics are identical either way.
 pub enum ShardedService {
-    /// `shards <= 1`: the plain in-process service, zero sharding overhead.
+    /// A single local shard: the plain in-process service, zero sharding
+    /// overhead.
     Local(SortService),
-    /// `shards >= 2`: router + child processes.
+    /// Two or more fleet slots (local and/or remote): router + worker
+    /// processes.
     Sharded(ShardRouter),
 }
 
 impl ShardedService {
-    /// Build from a spec: in-process when `spec.shards <= 1`, cross-process
-    /// otherwise.
+    /// Build from a spec: in-process when the fleet is at most one local
+    /// shard and no remotes, cross-process otherwise.
     pub fn spawn(spec: ShardSpec) -> Result<ShardedService> {
-        if spec.shards <= 1 {
+        if spec.shards <= 1 && spec.remotes.is_empty() {
             Ok(ShardedService::Local(SortService::new(ServiceConfig {
                 workers: spec.workers_per_shard,
                 sort_threads: spec.sort_threads,
@@ -67,7 +85,24 @@ impl ShardedService {
         }
     }
 
-    /// Worker processes serving traffic (1 for the in-process path).
+    /// Fluent fleet description:
+    ///
+    /// ```no_run
+    /// # use evosort::coordinator::shard::ShardedService;
+    /// let svc = ShardedService::builder()
+    ///     .shards(4)
+    ///     .endpoint("tcp://127.0.0.1:0".parse().unwrap())
+    ///     .connect("tcp://10.0.0.7:7070".parse().unwrap())
+    ///     .exec(evosort::exec::ExecMode::Parked)
+    ///     .spawn()
+    ///     .unwrap();
+    /// # drop(svc);
+    /// ```
+    pub fn builder() -> ShardedServiceBuilder {
+        ShardedServiceBuilder { spec: ShardSpec::default() }
+    }
+
+    /// Fleet slots serving traffic (1 for the in-process path).
     pub fn shards(&self) -> usize {
         match self {
             ShardedService::Local(_) => 1,
@@ -120,5 +155,165 @@ impl ShardedService {
             ShardedService::Local(_) => None,
             ShardedService::Sharded(router) => Some(router),
         }
+    }
+}
+
+/// Builder behind [`ShardedService::builder`]: a fluent layer over
+/// [`ShardSpec`] so call sites don't have to spell out
+/// `..ShardSpec::default()` or know which fields interact.
+/// [`ServiceSettings::to_shard_spec`](crate::config::ServiceSettings::to_shard_spec)
+/// is a thin shim over this.
+#[derive(Debug, Clone)]
+pub struct ShardedServiceBuilder {
+    spec: ShardSpec,
+}
+
+impl ShardedServiceBuilder {
+    /// Locally spawned shard processes (may be 0 when remotes carry all
+    /// the traffic).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.spec.shards = shards;
+        self
+    }
+
+    /// Pool workers inside each shard process.
+    pub fn workers_per_shard(mut self, workers: usize) -> Self {
+        self.spec.workers_per_shard = workers;
+        self
+    }
+
+    /// Threads each sort uses (per shard).
+    pub fn sort_threads(mut self, threads: usize) -> Self {
+        self.spec.sort_threads = threads;
+        self
+    }
+
+    /// Each shard's pending-job queue bound.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.spec.queue_capacity = capacity;
+        self
+    }
+
+    /// Attach an online autotuner to every shard.
+    pub fn autotune(mut self, policy: AutotunePolicy) -> Self {
+        self.spec.autotune = Some(policy);
+        self
+    }
+
+    /// Kernel execution backend inside every shard.
+    pub fn exec(mut self, exec: crate::exec::ExecMode) -> Self {
+        self.spec.exec = exec;
+        self
+    }
+
+    /// Link transport for local shards (`unix` default, `tcp` for
+    /// loopback-TCP links); [`endpoint`](Self::endpoint) sets this
+    /// implicitly from the endpoint's scheme.
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.spec.transport = transport;
+        self
+    }
+
+    /// Listen-address base for local shards; also selects the transport
+    /// from the endpoint's scheme (so `.endpoint("tcp://0.0.0.0:7100")`
+    /// is enough to switch a fleet to TCP).
+    pub fn endpoint(mut self, endpoint: Endpoint) -> Self {
+        self.spec.transport = endpoint.transport();
+        self.spec.listen = Some(endpoint);
+        self
+    }
+
+    /// Add one externally started worker (`shard-worker --listen …`) to
+    /// the fleet; call repeatedly for several.
+    pub fn connect(mut self, endpoint: Endpoint) -> Self {
+        self.spec.remotes.push(endpoint);
+        self
+    }
+
+    /// Jobs allowed on one shard's socket at once (`0` derives
+    /// `2 × workers_per_shard`).
+    pub fn max_inflight_per_shard(mut self, window: usize) -> Self {
+        self.spec.max_inflight_per_shard = window;
+        self
+    }
+
+    /// Redial budget per shard (respawns for local shards, backoff
+    /// redials for remote ones).
+    pub fn max_redials_per_shard(mut self, budget: usize) -> Self {
+        self.spec.max_redials_per_shard = budget;
+        self
+    }
+
+    /// Bounded-admission capacity for the router queue (`0` derives
+    /// `max(256, 8 × window × fleet)`).
+    pub fn router_queue_capacity(mut self, capacity: usize) -> Self {
+        self.spec.router_queue_capacity = capacity;
+        self
+    }
+
+    /// Shard-side cadence for cache publication / telemetry frames.
+    pub fn publish_interval(mut self, interval: Duration) -> Self {
+        self.spec.publish_interval = interval;
+        self
+    }
+
+    /// The `evosort` binary to spawn for local shards.
+    pub fn binary(mut self, path: std::path::PathBuf) -> Self {
+        self.spec.binary = Some(path);
+        self
+    }
+
+    /// The assembled [`ShardSpec`] (for callers that want to inspect or
+    /// tweak it before spawning).
+    pub fn build(self) -> ShardSpec {
+        self.spec
+    }
+
+    /// [`ShardedService::spawn`] on the assembled spec.
+    pub fn spawn(self) -> Result<ShardedService> {
+        ShardedService::spawn(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_assembles_a_spec() {
+        let spec = ShardedService::builder()
+            .shards(3)
+            .workers_per_shard(2)
+            .sort_threads(4)
+            .queue_capacity(32)
+            .endpoint("tcp://127.0.0.1:0".parse().unwrap())
+            .connect("tcp://10.1.2.3:7070".parse().unwrap())
+            .connect("tcp://10.1.2.4:7070".parse().unwrap())
+            .max_inflight_per_shard(6)
+            .max_redials_per_shard(2)
+            .router_queue_capacity(100)
+            .publish_interval(Duration::from_millis(50))
+            .build();
+        assert_eq!(spec.shards, 3);
+        assert_eq!(spec.workers_per_shard, 2);
+        assert_eq!(spec.sort_threads, 4);
+        assert_eq!(spec.queue_capacity, 32);
+        assert_eq!(spec.transport, TransportKind::Tcp);
+        assert_eq!(spec.listen.as_ref().unwrap().to_string(), "tcp://127.0.0.1:0");
+        assert_eq!(spec.remotes.len(), 2);
+        assert_eq!(spec.max_inflight_per_shard, 6);
+        assert_eq!(spec.max_redials_per_shard, 2);
+        assert_eq!(spec.router_queue_capacity, 100);
+        assert_eq!(spec.publish_interval, Duration::from_millis(50));
+    }
+
+    #[test]
+    fn endpoint_scheme_selects_the_transport() {
+        let spec = ShardedService::builder()
+            .transport(TransportKind::Tcp)
+            .endpoint("unix:///tmp/evosort-fleet.sock".parse().unwrap())
+            .build();
+        // The endpoint's scheme wins over an earlier explicit transport.
+        assert_eq!(spec.transport, TransportKind::Unix);
     }
 }

@@ -1,5 +1,6 @@
-//! The shard wire protocol: length-prefixed binary frames over Unix-domain
-//! sockets.
+//! The shard wire protocol: length-prefixed binary frames over any ordered
+//! byte stream (Unix-domain sockets on one host, TCP across hosts — the
+//! [`transport`](super::transport) seam picks; the frames are identical).
 //!
 //! The encoding is hand-rolled little-endian (no serde/bincode in the
 //! offline build): every frame is `[tag: u8][len: u64 LE][payload]`, with
@@ -252,6 +253,7 @@ pub fn encode_job_done(id: u64, cache_flag: u8, result: &JobResult) -> Vec<u8> {
         }
         Err(JobError::Cancelled) => put_u8(&mut buf, 1),
         Err(JobError::WorkerLost) => put_u8(&mut buf, 2),
+        Err(JobError::Overloaded) => put_u8(&mut buf, 3),
     }
     frame(TAG_JOB_DONE, buf)
 }
@@ -306,8 +308,20 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     if len > MAX_FRAME_BYTES {
         bail!("frame payload of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte bound");
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload).context("reading frame payload")?;
+    // Grow the buffer as bytes actually arrive instead of trusting the
+    // length prefix with one up-front allocation: a hostile-but-in-bounds
+    // prefix (say 3 GiB) followed by a closed connection must cost an error,
+    // not a 3 GiB allocation. `take` bounds the read; an honest peer's
+    // frame reads to exactly `len`.
+    let mut payload = Vec::with_capacity((len as usize).min(1 << 20));
+    let read = r
+        .by_ref()
+        .take(len)
+        .read_to_end(&mut payload)
+        .context("reading frame payload")?;
+    if (read as u64) < len {
+        bail!("truncated frame payload: got {read} of {len} bytes");
+    }
     decode(tag, &payload)
 }
 
@@ -338,6 +352,7 @@ fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
                 }
                 1 => Err(JobError::Cancelled),
                 2 => Err(JobError::WorkerLost),
+                3 => Err(JobError::Overloaded),
                 other => bail!("unknown job status code {other}"),
             };
             Frame::JobDone { id, cache_flag, result }
@@ -448,7 +463,11 @@ mod tests {
 
     #[test]
     fn job_done_error_roundtrip() {
-        for (err, _) in [(JobError::Cancelled, 1u8), (JobError::WorkerLost, 2u8)] {
+        for (err, _) in [
+            (JobError::Cancelled, 1u8),
+            (JobError::WorkerLost, 2u8),
+            (JobError::Overloaded, 3u8),
+        ] {
             let bytes = encode_job_done(3, CACHE_FLAG_NONE, &Err(err));
             let Frame::JobDone { id, result, .. } = roundtrip(bytes) else {
                 panic!("expected JobDone");
@@ -498,6 +517,14 @@ mod tests {
         assert!(read_frame(&mut std::io::Cursor::new(framed)).is_err());
         // EOF mid-header.
         assert!(read_frame(&mut std::io::Cursor::new(vec![TAG_JOB])).is_err());
+        // In-bounds hostile prefix (2 GiB claimed, nothing sent): the
+        // incremental read errors out having allocated only for the bytes
+        // that actually arrived, instead of reserving 2 GiB up front.
+        let mut bytes = vec![TAG_TELEMETRY];
+        bytes.extend_from_slice(&(2u64 << 30).to_le_bytes());
+        bytes.extend_from_slice(b"tiny");
+        let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(err.to_string().contains("truncated frame payload"), "{err}");
     }
 
     #[test]

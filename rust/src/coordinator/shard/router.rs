@@ -1,8 +1,11 @@
 //! The shard router: the parent-process half of the cross-process service.
 //!
-//! A [`ShardRouter`] owns N child `evosort shard-worker` processes (spawned
-//! from the running binary), each reached over its own Unix-domain socket
-//! speaking the [`protocol`] frame format. Submission mirrors
+//! A [`ShardRouter`] drives a fleet of `evosort shard-worker` processes —
+//! **local** shards it spawns itself (reached over a Unix socket or TCP
+//! loopback, the child dialing back) and **remote** shards started
+//! externally on other hosts (`shard-worker --listen tcp://…`, the router
+//! dialing out) — all speaking the [`protocol`] frame format through the
+//! [`transport`](super::transport) seam. Submission mirrors
 //! [`SortService`](crate::coordinator::SortService) exactly —
 //! [`submit_request`](ShardRouter::submit_request) → `Ticket`,
 //! [`submit_batch_requests`](ShardRouter::submit_batch_requests) →
@@ -10,19 +13,36 @@
 //! router completes the same `JobSlot`s and feeds the same batch channel
 //! the in-process pool does.
 //!
-//! Routing is least-loaded with a bounded per-shard in-flight window: jobs
-//! beyond the window wait in a router-side queue, which is what makes them
-//! **reroutable** — when a shard dies, only the jobs already on its socket
-//! resolve `Err(WorkerLost)`; everything still queued flows to the
-//! surviving shards while the dead shard respawns (and is re-seeded with
-//! the merged tuning cache). Shard cache publications are merged
-//! improvement-aware into the router's service-level [`TuningCache`] and
-//! re-broadcast, so a fingerprint class tuned on one shard speeds up all
-//! shards; telemetry frames aggregate per-shard counters (`tuner.*`,
-//! `jobs.*`) into `shard.<i>.*` and `shards.*` gauges.
+//! Traffic hardening, in dispatch order:
+//!
+//! * **Bounded admission** — the router queue has a capacity
+//!   ([`ShardSpec::router_queue_capacity`]); jobs beyond it resolve
+//!   `Err(Overloaded)` *at submission* (`shards.shed` counts them) instead
+//!   of growing the queue without bound.
+//! * **Per-client fairness** — admitted jobs are queued per submitting
+//!   client and dispatched round-robin across clients
+//!   ([`submit_request_as`](ShardRouter::submit_request_as)), so one hot
+//!   tenant's burst cannot starve everyone else; within a client, order is
+//!   FIFO. The plain submit methods share client `0`.
+//! * **Least-loaded routing** with a bounded per-shard in-flight window:
+//!   jobs beyond the window wait in the router queue, which is what makes
+//!   them **reroutable** — when a shard dies, only the jobs already on its
+//!   socket resolve `Err(WorkerLost)`; everything still queued flows to the
+//!   survivors.
+//! * **Redial budget** — a dead shard comes back within
+//!   [`ShardSpec::max_redials_per_shard`]: local shards are *respawned*
+//!   (fresh child process), remote shards are *redialed* with exponential
+//!   backoff (the standalone worker re-listens after losing a router).
+//!   Either way the shard is re-seeded with the merged tuning cache and
+//!   `shards.redials` ticks; past the budget it stays down.
+//!
+//! Shard cache publications are merged improvement-aware into the router's
+//! service-level [`TuningCache`] and re-broadcast, so a fingerprint class
+//! tuned on one shard speeds up all shards; telemetry frames aggregate
+//! per-shard counters (`tuner.*`, `jobs.*`) into `shard.<i>.*` and
+//! `shards.*` gauges.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -33,20 +53,27 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::autotune::AutotunePolicy;
+use crate::coordinator::endpoint::{Endpoint, TransportKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::SortRequest;
 use crate::coordinator::service::{self, BatchTicket};
 use crate::coordinator::shard::protocol::{self, Frame};
+use crate::coordinator::shard::transport::{Listener, Stream};
 use crate::coordinator::ticket::{JobError, JobResult, JobSlot, Ticket};
 use crate::coordinator::tuning_cache::TuningCache;
+
+/// How long a remote dial (initial or redial) keeps retrying before the
+/// shard is declared unreachable for this attempt.
+const REMOTE_DIAL_DEADLINE: Duration = Duration::from_secs(8);
 
 /// Configuration for a sharded deployment.
 #[derive(Debug, Clone)]
 pub struct ShardSpec {
-    /// Worker processes. `<= 1` means "don't shard" — use
+    /// Locally spawned worker processes. With no [`remotes`](Self::remotes),
+    /// `<= 1` means "don't shard" — use
     /// [`ShardedService::spawn`](super::ShardedService::spawn), which routes
     /// in-process in that case so the single-process path stays
-    /// zero-overhead.
+    /// zero-overhead. May be `0` when remotes carry all the traffic.
     pub shards: usize,
     /// Pool workers inside each shard process.
     pub workers_per_shard: usize,
@@ -61,9 +88,10 @@ pub struct ShardSpec {
     /// `2 × workers_per_shard`. Everything beyond waits in the router queue,
     /// reroutable on shard death.
     pub max_inflight_per_shard: usize,
-    /// Respawn budget per shard: beyond this many deaths the shard stays
-    /// down (a crash-looping worker must not respawn forever).
-    pub max_respawns_per_shard: usize,
+    /// Redial budget per shard: beyond this many deaths the shard stays
+    /// down (a crash-looping worker must not be revived forever). Local
+    /// shards are respawned, remote shards redialed — one budget.
+    pub max_redials_per_shard: usize,
     /// Shard-side cadence for cache publication / telemetry frames.
     pub publish_interval: Duration,
     /// Kernel execution backend inside every shard (and on the in-process
@@ -75,6 +103,26 @@ pub struct ShardSpec {
     /// Integration tests pass `env!("CARGO_BIN_EXE_evosort")` (the test
     /// harness binary is not the CLI).
     pub binary: Option<PathBuf>,
+    /// Link transport for **local** shards: Unix sockets (default) or TCP
+    /// loopback. Remote shards' transports come from their endpoints.
+    pub transport: TransportKind,
+    /// Listen-address base for local shards, matching `transport`. `None`
+    /// derives one: a per-router temp directory of Unix sockets, or
+    /// `tcp://127.0.0.1:0` (OS-assigned ports). A TCP base with a non-zero
+    /// port assigns `port + shard_index`; a Unix base path gets
+    /// `-<shard>-<generation>.sock` appended.
+    pub listen: Option<Endpoint>,
+    /// Externally started workers to dial (`shard-worker --listen` on other
+    /// hosts). These extend the fleet beyond [`shards`](Self::shards); on
+    /// death they are redialed (with backoff) rather than respawned.
+    pub remotes: Vec<Endpoint>,
+    /// Bounded admission: jobs admitted to the router queue at once; `0`
+    /// derives `max(256, 8 × in-flight window × fleet size)`. Beyond it,
+    /// submissions resolve `Err(Overloaded)` immediately.
+    pub router_queue_capacity: usize,
+    /// First backoff step when redialing a remote shard (doubles per
+    /// attempt, capped at 1s, within an 8s per-death deadline).
+    pub redial_backoff: Duration,
 }
 
 impl Default for ShardSpec {
@@ -86,10 +134,15 @@ impl Default for ShardSpec {
             queue_capacity: 64,
             autotune: None,
             max_inflight_per_shard: 0,
-            max_respawns_per_shard: 5,
+            max_redials_per_shard: 5,
             publish_interval: Duration::from_millis(200),
             exec: crate::exec::ExecMode::Parked,
             binary: None,
+            transport: TransportKind::Unix,
+            listen: None,
+            remotes: Vec::new(),
+            router_queue_capacity: 0,
+            redial_backoff: Duration::from_millis(50),
         }
     }
 }
@@ -109,28 +162,104 @@ enum Completer {
 /// A job waiting in the router queue (reroutable until dispatched).
 struct RoutedJob {
     id: u64,
+    client: u64,
     req: SortRequest,
     completer: Completer,
 }
 
+/// Admitted jobs, queued per client and dequeued round-robin across
+/// clients (FIFO within a client). The `rr` rotation holds exactly the
+/// clients with non-empty queues, each once.
+#[derive(Default)]
+struct ClientQueues {
+    queues: HashMap<u64, VecDeque<RoutedJob>>,
+    rr: VecDeque<u64>,
+    len: usize,
+}
+
+impl ClientQueues {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, job: RoutedJob) {
+        let q = self.queues.entry(job.client).or_default();
+        if q.is_empty() {
+            self.rr.push_back(job.client);
+        }
+        q.push_back(job);
+        self.len += 1;
+    }
+
+    /// Reclaim a job at the head of its client's queue *and* the head of
+    /// the rotation (a dispatch that failed to write must retry first, not
+    /// wait a full round).
+    fn push_front(&mut self, job: RoutedJob) {
+        let q = self.queues.entry(job.client).or_default();
+        if q.is_empty() {
+            self.rr.push_front(job.client);
+        } else {
+            // Move an already-rotated client to the front.
+            self.rr.retain(|c| *c != job.client);
+            self.rr.push_front(job.client);
+        }
+        q.push_front(job);
+        self.len += 1;
+    }
+
+    /// Next job in round-robin order; the dequeued client rotates to the
+    /// back if it still has queued work.
+    fn pop(&mut self) -> Option<RoutedJob> {
+        let client = self.rr.pop_front()?;
+        let Some(q) = self.queues.get_mut(&client) else { return None };
+        let job = q.pop_front()?;
+        if q.is_empty() {
+            self.queues.remove(&client);
+        } else {
+            self.rr.push_back(client);
+        }
+        self.len -= 1;
+        Some(job)
+    }
+
+    fn drain_all(&mut self) -> Vec<RoutedJob> {
+        self.rr.clear();
+        self.len = 0;
+        self.queues.drain().flat_map(|(_, q)| q).collect()
+    }
+}
+
+/// How shard `idx` comes (back) up: spawned locally or dialed remotely.
+#[derive(Debug, Clone)]
+enum ShardOrigin {
+    Local,
+    Remote(Endpoint),
+}
+
 struct ShardConn {
-    child: Child,
-    writer: Arc<Mutex<UnixStream>>,
+    /// The spawned child for local shards; `None` for remote shards (their
+    /// process lifecycle is external — force-drop is a socket shutdown).
+    child: Option<Child>,
+    writer: Arc<Mutex<Stream>>,
 }
 
 struct ShardState {
     alive: bool,
     /// Incarnation counter: readers of a dead incarnation must not touch
-    /// the state its respawn installed.
+    /// the state its redial installed.
     generation: u64,
-    respawns: usize,
+    redials: usize,
     /// Router job ids currently on this shard's socket.
     inflight: HashSet<u64>,
     conn: Option<ShardConn>,
 }
 
 struct RouterState {
-    queue: VecDeque<RoutedJob>,
+    queue: ClientQueues,
     /// Dispatched-but-unresolved jobs (completion routes through here).
     pending: HashMap<u64, Completer>,
     shards: Vec<ShardState>,
@@ -140,7 +269,11 @@ struct RouterState {
 
 struct RouterInner {
     spec: ShardSpec,
+    /// One entry per fleet slot: local slots first, then remotes.
+    origins: Vec<ShardOrigin>,
     max_inflight: usize,
+    /// Bounded-admission capacity (resolved from the spec).
+    admit_capacity: usize,
     socket_dir: PathBuf,
     state: Mutex<RouterState>,
     /// Dispatcher wake-ups: new work, freed capacity, shard (re)spawned.
@@ -154,7 +287,8 @@ struct RouterInner {
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
-/// Handle to the sharded deployment; dropping it shuts the children down.
+/// Handle to the sharded deployment; dropping it shuts local children down
+/// and detaches remote workers (they go back to listening).
 pub struct ShardRouter {
     inner: Arc<RouterInner>,
     dispatcher: Option<JoinHandle<()>>,
@@ -163,10 +297,28 @@ pub struct ShardRouter {
 static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl ShardRouter {
-    /// Spawn `spec.shards` worker processes and start routing. Fails if any
-    /// worker cannot be spawned or does not connect back within 10 seconds.
+    /// Spawn `spec.shards` local worker processes, dial every
+    /// `spec.remotes` endpoint, and start routing. Fails if any local
+    /// worker cannot be spawned (or does not connect back within 10
+    /// seconds), or any remote endpoint cannot be dialed within the
+    /// backoff deadline — start remote workers before the router.
     pub fn spawn(spec: ShardSpec) -> Result<ShardRouter> {
-        anyhow::ensure!(spec.shards >= 1, "a sharded service needs at least one shard");
+        let fleet = spec.shards + spec.remotes.len();
+        anyhow::ensure!(
+            fleet >= 1,
+            "a sharded service needs at least one shard (local or remote)"
+        );
+        if let Some(ep) = &spec.listen {
+            anyhow::ensure!(
+                ep.transport() == spec.transport,
+                "listen endpoint {ep} does not match transport {}",
+                spec.transport
+            );
+        }
+        let origins: Vec<ShardOrigin> = (0..spec.shards)
+            .map(|_| ShardOrigin::Local)
+            .chain(spec.remotes.iter().cloned().map(ShardOrigin::Remote))
+            .collect();
         let socket_dir = std::env::temp_dir().join(format!(
             "evosort-shards-{}-{}",
             std::process::id(),
@@ -179,24 +331,30 @@ impl ShardRouter {
         } else {
             spec.max_inflight_per_shard
         };
-        let shards = spec.shards;
+        let admit_capacity = if spec.router_queue_capacity == 0 {
+            (max_inflight * fleet * 8).max(256)
+        } else {
+            spec.router_queue_capacity
+        };
         let inner = Arc::new(RouterInner {
             spec,
+            origins,
             max_inflight,
+            admit_capacity,
             socket_dir,
             state: Mutex::new(RouterState {
-                queue: VecDeque::new(),
+                queue: ClientQueues::default(),
                 pending: HashMap::new(),
-                shards: (0..shards)
+                shards: (0..fleet)
                     .map(|_| ShardState {
                         alive: false,
                         generation: 0,
-                        respawns: 0,
+                        redials: 0,
                         inflight: HashSet::new(),
                         conn: None,
                     })
                     .collect(),
-                telemetry: vec![HashMap::new(); shards],
+                telemetry: vec![HashMap::new(); fleet],
             }),
             work_ready: Condvar::new(),
             idle: Condvar::new(),
@@ -206,9 +364,9 @@ impl ShardRouter {
             shutdown: AtomicBool::new(false),
             reader_handles: Mutex::new(Vec::new()),
         });
-        for idx in 0..shards {
-            if let Err(e) = RouterInner::spawn_shard(&inner, idx) {
-                // Partial start-up: kill and reap the shards that did spawn
+        for idx in 0..fleet {
+            if let Err(e) = RouterInner::bring_up_shard(&inner, idx) {
+                // Partial start-up: tear down the shards that did come up
                 // (no Drop will run — the router was never constructed), so
                 // a caller retrying spawn cannot accumulate orphans.
                 inner.shutdown.store(true, Ordering::SeqCst);
@@ -216,16 +374,27 @@ impl ShardRouter {
                     let mut st = inner.state.lock().unwrap();
                     for sh in st.shards.iter_mut() {
                         if let Some(conn) = sh.conn.as_mut() {
-                            let _ = conn.child.kill();
+                            match conn.child.as_mut() {
+                                Some(child) => {
+                                    let _ = child.kill();
+                                }
+                                None => {
+                                    let w = conn
+                                        .writer
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner());
+                                    let _ = w.shutdown();
+                                }
+                            }
                         }
                     }
                 }
                 let readers = std::mem::take(&mut *inner.reader_handles.lock().unwrap());
                 for r in readers {
-                    let _ = r.join(); // EOF after the kill; on_shard_down reaps
+                    let _ = r.join(); // EOF after the teardown; on_shard_down reaps
                 }
                 let _ = std::fs::remove_dir_all(&inner.socket_dir);
-                return Err(e).with_context(|| format!("spawning shard {idx}"));
+                return Err(e).with_context(|| format!("bringing up shard {idx}"));
             }
         }
         let dispatcher = {
@@ -238,14 +407,15 @@ impl ShardRouter {
         Ok(ShardRouter { inner, dispatcher: Some(dispatcher) })
     }
 
-    /// Worker processes this router was configured with.
+    /// Fleet size: local worker processes plus remote endpoints.
     pub fn shards(&self) -> usize {
-        self.inner.spec.shards
+        self.inner.origins.len()
     }
 
     /// Service-level metrics: per-job accounting mirrored from shard
-    /// replies, `shard.<i>.*` / `shards.*` telemetry aggregation, routing
-    /// and cache-broadcast counters.
+    /// replies, `shard.<i>.*` / `shards.*` telemetry aggregation, routing,
+    /// admission (`shards.shed`), recovery (`shards.redials`) and
+    /// cache-broadcast counters.
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.inner.metrics
     }
@@ -258,18 +428,44 @@ impl ShardRouter {
 
     /// Submit one request; the returned [`Ticket`] behaves exactly as the
     /// in-process service's (poll / park / cancel-before-dispatch; a dead
-    /// shard resolves it to `Err(WorkerLost)` instead of hanging).
+    /// shard resolves it to `Err(WorkerLost)` instead of hanging; a
+    /// saturated router resolves it to `Err(Overloaded)` immediately).
     pub fn submit_request(&self, req: SortRequest) -> Ticket {
+        self.submit_request_as(0, req)
+    }
+
+    /// [`submit_request`](Self::submit_request) on behalf of `client`.
+    /// Clients are fairness domains: dispatch round-robins across clients
+    /// with queued work, so one client's burst cannot starve another's
+    /// jobs. Client ids are caller-assigned (tenant id, connection id, …).
+    pub fn submit_request_as(&self, client: u64, req: SortRequest) -> Ticket {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         self.inner.metrics.incr("jobs.submitted");
         let slot = JobSlot::pending();
-        self.inner.enqueue(RoutedJob { id, req, completer: Completer::Slot(Arc::clone(&slot)) });
+        self.inner.enqueue(RoutedJob {
+            id,
+            client,
+            req,
+            completer: Completer::Slot(Arc::clone(&slot)),
+        });
         Ticket::new(id, slot)
     }
 
     /// Submit a batch; the returned [`BatchTicket`] barriers or streams in
     /// submission order exactly as the in-process path does.
     pub fn submit_batch_requests(&self, requests: Vec<SortRequest>) -> BatchTicket {
+        self.submit_batch_requests_as(0, requests)
+    }
+
+    /// [`submit_batch_requests`](Self::submit_batch_requests) on behalf of
+    /// `client` (see [`submit_request_as`](Self::submit_request_as)). Jobs
+    /// beyond the admission capacity resolve `Err(Overloaded)` in the
+    /// batch's stream/report; the rest are queued normally.
+    pub fn submit_batch_requests_as(
+        &self,
+        client: u64,
+        requests: Vec<SortRequest>,
+    ) -> BatchTicket {
         let started = Instant::now();
         let total = requests.len();
         let (tx, rx) = mpsc::channel();
@@ -279,6 +475,8 @@ impl ShardRouter {
         metrics.incr("batch.submitted");
         let hits = Arc::new(AtomicU64::new(0));
         let misses = Arc::new(AtomicU64::new(0));
+        let shutting_down = self.inner.shutdown.load(Ordering::SeqCst);
+        let mut rejected: Vec<Completer> = Vec::new();
         {
             let mut st = self.inner.state.lock().unwrap();
             for (idx, req) in requests.into_iter().enumerate() {
@@ -289,8 +487,20 @@ impl ShardRouter {
                     hits: Arc::clone(&hits),
                     misses: Arc::clone(&misses),
                 };
-                st.queue.push_back(RoutedJob { id, req, completer });
+                if shutting_down {
+                    rejected.push(completer);
+                } else if st.queue.len() >= self.inner.admit_capacity {
+                    self.inner.metrics.incr("shards.shed");
+                    rejected.push(completer);
+                } else {
+                    st.queue.push(RoutedJob { id, client, req, completer });
+                }
             }
+            self.inner.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
+        }
+        for completer in rejected {
+            let err = if shutting_down { JobError::WorkerLost } else { JobError::Overloaded };
+            self.inner.complete(completer, Err(err), protocol::CACHE_FLAG_NONE);
         }
         self.inner.work_ready.notify_all();
         BatchTicket::from_parts(total, started, rx, metrics, hits, misses)
@@ -319,20 +529,32 @@ impl ShardRouter {
         st.shards.get(idx).map(|s| s.inflight.len()).unwrap_or(0)
     }
 
-    /// OS pid of each live shard worker (`None` while a shard is down).
+    /// OS pid of each live **local** shard worker (`None` while a shard is
+    /// down, and always `None` for remote shards — their pids belong to
+    /// other hosts).
     pub fn shard_pids(&self) -> Vec<Option<u32>> {
         let st = self.inner.state.lock().unwrap();
-        st.shards.iter().map(|s| s.conn.as_ref().map(|c| c.child.id())).collect()
+        st.shards
+            .iter()
+            .map(|s| s.conn.as_ref().and_then(|c| c.child.as_ref()).map(|c| c.id()))
+            .collect()
     }
 
-    /// Chaos helper: SIGKILL shard `idx`'s worker process. In-flight jobs on
-    /// it resolve `Err(WorkerLost)`; the router respawns it (budget
-    /// permitting) and reroutes queued work meanwhile. Failover tests use
-    /// this; production deaths take the same path.
+    /// Chaos helper: force-drop shard `idx` — SIGKILL for a local worker
+    /// process, a socket shutdown for a remote one. In-flight jobs on it
+    /// resolve `Err(WorkerLost)`; the router revives it (budget permitting)
+    /// and reroutes queued work meanwhile. Failover tests use this;
+    /// production deaths take the same path.
     pub fn kill_shard(&self, idx: usize) -> bool {
         let mut st = self.inner.state.lock().unwrap();
         match st.shards.get_mut(idx).and_then(|s| s.conn.as_mut()) {
-            Some(conn) => conn.child.kill().is_ok(),
+            Some(conn) => match conn.child.as_mut() {
+                Some(child) => child.kill().is_ok(),
+                None => {
+                    let w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
+                    w.shutdown().is_ok()
+                }
+            },
             None => false,
         }
     }
@@ -346,7 +568,7 @@ impl Drop for ShardRouter {
         // Resolve everything unfinished so no caller can hang on a ticket.
         let (queued, pending) = {
             let mut st = inner.state.lock().unwrap();
-            let queued: Vec<RoutedJob> = st.queue.drain(..).collect();
+            let queued: Vec<RoutedJob> = st.queue.drain_all();
             let pending: Vec<Completer> = st.pending.drain().map(|(_, c)| c).collect();
             (queued, pending)
         };
@@ -357,18 +579,26 @@ impl Drop for ShardRouter {
             inner.fail_job(completer);
         }
         inner.idle.notify_all();
-        // Ask every live shard to exit…
-        let writers: Vec<Arc<Mutex<UnixStream>>> = {
+        // Ask every live local shard to exit; *detach* remote shards with a
+        // socket shutdown instead — their processes are externally managed
+        // and go back to listening for the next router.
+        let conns: Vec<(Arc<Mutex<Stream>>, bool)> = {
             let st = inner.state.lock().unwrap();
             st.shards
                 .iter()
-                .filter_map(|s| s.conn.as_ref().map(|c| Arc::clone(&c.writer)))
+                .filter_map(|s| {
+                    s.conn.as_ref().map(|c| (Arc::clone(&c.writer), c.child.is_some()))
+                })
                 .collect()
         };
         let shutdown_frame = protocol::encode_shutdown();
-        for w in writers {
+        for (w, is_local) in conns {
             let mut w = w.lock().unwrap_or_else(|e| e.into_inner());
-            let _ = protocol::write_frame(&mut *w, &shutdown_frame);
+            if is_local {
+                let _ = protocol::write_frame(&mut *w, &shutdown_frame);
+            } else {
+                let _ = w.shutdown();
+            }
         }
         // …give them a bounded grace period, then hard-kill stragglers. The
         // reader threads reap each child as its connection closes.
@@ -385,7 +615,15 @@ impl Drop for ShardRouter {
             let mut st = inner.state.lock().unwrap();
             for sh in st.shards.iter_mut() {
                 if let Some(conn) = sh.conn.as_mut() {
-                    let _ = conn.child.kill();
+                    match conn.child.as_mut() {
+                        Some(child) => {
+                            let _ = child.kill();
+                        }
+                        None => {
+                            let w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
+                            let _ = w.shutdown();
+                        }
+                    }
                 }
             }
         }
@@ -401,38 +639,117 @@ impl Drop for ShardRouter {
 }
 
 impl RouterInner {
-    /// Spawn (or respawn) shard `idx`: bind a fresh socket, launch the
-    /// worker process, wait for it to connect, seed it with the merged
-    /// cache, and start its reader thread.
-    fn spawn_shard(inner: &Arc<RouterInner>, idx: usize) -> Result<()> {
+    /// Bring shard `idx` (back) up — spawn-and-accept for local shards,
+    /// dial-with-backoff for remote ones — then seed it with the merged
+    /// cache and start its reader thread.
+    fn bring_up_shard(inner: &Arc<RouterInner>, idx: usize) -> Result<()> {
         let generation = inner.state.lock().unwrap().shards[idx].generation + 1;
-        let socket = inner.socket_dir.join(format!("shard-{idx}-{generation}.sock"));
-        let _ = std::fs::remove_file(&socket);
-        let listener = UnixListener::bind(&socket)
-            .with_context(|| format!("binding {}", socket.display()))?;
+        let (stream, child) = match &inner.origins[idx] {
+            ShardOrigin::Local => {
+                let (stream, child) = inner.spawn_local_worker(idx, generation)?;
+                (stream, Some(child))
+            }
+            ShardOrigin::Remote(endpoint) => (inner.dial_remote(idx, endpoint)?, None),
+        };
+        let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning shard stream")?));
+        // Re-seed a revived shard with everything the fleet has learned.
+        if !inner.cache.is_empty() {
+            let bytes = protocol::encode_cache_sync(&inner.cache.to_text());
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = protocol::write_frame(&mut *w, &bytes);
+        }
+        {
+            let mut st = inner.state.lock().unwrap();
+            let sh = &mut st.shards[idx];
+            sh.alive = true;
+            sh.generation = generation;
+            sh.inflight.clear();
+            sh.conn = Some(ShardConn { child, writer });
+        }
+        let reader_inner = Arc::clone(inner);
+        let handle = std::thread::Builder::new()
+            .name(format!("evosort-router-read{idx}"))
+            .spawn(move || {
+                let mut stream = stream;
+                while let Ok(frame) = protocol::read_frame(&mut stream) {
+                    reader_inner.on_frame(idx, frame);
+                }
+                RouterInner::on_shard_down(&reader_inner, idx, generation);
+            })
+            .expect("spawn router reader");
+        inner.reader_handles.lock().unwrap().push(handle);
+        // A shutdown that raced with this revival: stop the fresh shard
+        // immediately so the Drop-side reader join cannot hang on one that
+        // never got the broadcast Shutdown/detach.
+        if inner.shutdown.load(Ordering::SeqCst) {
+            let st = inner.state.lock().unwrap();
+            if let Some(conn) = st.shards[idx].conn.as_ref() {
+                let mut w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
+                if conn.child.is_some() {
+                    let _ = protocol::write_frame(&mut *w, &protocol::encode_shutdown());
+                } else {
+                    let _ = w.shutdown();
+                }
+            }
+        }
+        inner.work_ready.notify_all();
+        Ok(())
+    }
+
+    /// The listen address for local shard `idx`, incarnation `generation`.
+    fn local_listen_endpoint(&self, idx: usize, generation: u64) -> Result<Endpoint> {
+        match (&self.spec.listen, self.spec.transport) {
+            (None, TransportKind::Unix) => Ok(Endpoint::Unix(
+                self.socket_dir.join(format!("shard-{idx}-{generation}.sock")),
+            )),
+            (None, TransportKind::Tcp) => Ok(Endpoint::tcp("127.0.0.1", 0)),
+            (Some(Endpoint::Unix(base)), _) => Ok(Endpoint::Unix(PathBuf::from(format!(
+                "{}-{idx}-{generation}.sock",
+                base.display()
+            )))),
+            (Some(Endpoint::Tcp { host, port }), _) => {
+                let port = if *port == 0 {
+                    0
+                } else {
+                    port.checked_add(idx as u16)
+                        .with_context(|| format!("listen port {port} + shard {idx} overflows"))?
+                };
+                Ok(Endpoint::tcp(host.clone(), port))
+            }
+        }
+    }
+
+    /// Spawn local shard `idx`: bind a fresh listener, launch the worker
+    /// process pointed back at it (`--connect <resolved endpoint>`), wait
+    /// for it to connect.
+    fn spawn_local_worker(&self, idx: usize, generation: u64) -> Result<(Stream, Child)> {
+        let listen = self.local_listen_endpoint(idx, generation)?;
+        let listener = Listener::bind(&listen)?;
         listener.set_nonblocking(true).context("non-blocking listener")?;
-        let binary = match &inner.spec.binary {
+        // For tcp://…:0 the OS picked the port; the child dials this.
+        let resolved = listener.local_endpoint()?;
+        let binary = match &self.spec.binary {
             Some(p) => p.clone(),
             None => std::env::current_exe().context("locating the evosort binary")?,
         };
         let mut cmd = Command::new(&binary);
         cmd.arg("shard-worker")
-            .arg("--socket")
-            .arg(&socket)
+            .arg("--connect")
+            .arg(resolved.to_string())
             .arg("--shard-id")
             .arg(idx.to_string())
             .arg("--workers")
-            .arg(inner.spec.workers_per_shard.to_string())
+            .arg(self.spec.workers_per_shard.to_string())
             .arg("--sort-threads")
-            .arg(inner.spec.sort_threads.to_string())
+            .arg(self.spec.sort_threads.to_string())
             .arg("--queue-capacity")
-            .arg(inner.spec.queue_capacity.to_string())
+            .arg(self.spec.queue_capacity.to_string())
             .arg("--publish-ms")
-            .arg(inner.spec.publish_interval.as_millis().to_string())
+            .arg(self.spec.publish_interval.as_millis().to_string())
             .arg("--exec")
-            .arg(inner.spec.exec.name())
+            .arg(self.spec.exec.name())
             .stdin(Stdio::null());
-        if let Some(policy) = &inner.spec.autotune {
+        if let Some(policy) = &self.spec.autotune {
             cmd.arg("--min-obs")
                 .arg(policy.min_observations.to_string())
                 .arg("--cooldown")
@@ -456,7 +773,7 @@ impl RouterInner {
         let deadline = Instant::now() + Duration::from_secs(10);
         let stream = loop {
             match listener.accept() {
-                Ok((stream, _)) => break stream,
+                Ok(stream) => break stream,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if let Ok(Some(status)) = child.try_wait() {
                         bail!("shard {idx} worker exited before connecting: {status}");
@@ -474,67 +791,73 @@ impl RouterInner {
             }
         };
         stream.set_nonblocking(false).context("blocking shard stream")?;
-        let _ = std::fs::remove_file(&socket);
-        let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning shard stream")?));
-        // Re-seed a (re)spawned shard with everything the fleet has learned.
-        if !inner.cache.is_empty() {
-            let bytes = protocol::encode_cache_sync(&inner.cache.to_text());
-            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
-            let _ = protocol::write_frame(&mut *w, &bytes);
+        if let Some(path) = listener.cleanup_path() {
+            let _ = std::fs::remove_file(path);
         }
-        {
-            let mut st = inner.state.lock().unwrap();
-            let sh = &mut st.shards[idx];
-            sh.alive = true;
-            sh.generation = generation;
-            sh.inflight.clear();
-            sh.conn = Some(ShardConn { child, writer });
-        }
-        let reader_inner = Arc::clone(inner);
-        let handle = std::thread::Builder::new()
-            .name(format!("evosort-router-read{idx}"))
-            .spawn(move || {
-                let mut stream = stream;
-                loop {
-                    match protocol::read_frame(&mut stream) {
-                        Ok(frame) => reader_inner.on_frame(idx, frame),
-                        Err(_) => break,
-                    }
-                }
-                RouterInner::on_shard_down(&reader_inner, idx, generation);
-            })
-            .expect("spawn router reader");
-        inner.reader_handles.lock().unwrap().push(handle);
-        // A shutdown that raced with this (re)spawn: tell the fresh worker
-        // to exit immediately so the Drop-side reader join cannot hang on a
-        // shard that never got the broadcast Shutdown frame.
-        if inner.shutdown.load(Ordering::SeqCst) {
-            let st = inner.state.lock().unwrap();
-            if let Some(conn) = st.shards[idx].conn.as_ref() {
-                let mut w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
-                let _ = protocol::write_frame(&mut *w, &protocol::encode_shutdown());
-            }
-        }
-        inner.work_ready.notify_all();
-        Ok(())
+        Ok((stream, child))
     }
 
+    /// Dial remote shard `idx` with exponential backoff — the redial half
+    /// of the recovery contract (the standalone worker re-listens after
+    /// losing its router).
+    fn dial_remote(&self, idx: usize, endpoint: &Endpoint) -> Result<Stream> {
+        let deadline = Instant::now() + REMOTE_DIAL_DEADLINE;
+        let mut delay = self.spec.redial_backoff.max(Duration::from_millis(1));
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                bail!("router shutting down while dialing shard {idx}");
+            }
+            match Stream::connect(endpoint) {
+                Ok(stream) => return Ok(stream),
+                Err(e) => {
+                    if Instant::now() + delay > deadline {
+                        return Err(e).with_context(|| {
+                            format!("dialing remote shard {idx} at {endpoint}")
+                        });
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+    }
+
+    /// Admit one job or shed it (`Err(Overloaded)`) if the queue is full.
     fn enqueue(&self, job: RoutedJob) {
         if self.shutdown.load(Ordering::SeqCst) {
             self.fail_job(job.completer);
             return;
         }
-        let mut st = self.state.lock().unwrap();
-        st.queue.push_back(job);
-        drop(st);
-        self.work_ready.notify_all();
+        let rejected = {
+            let mut st = self.state.lock().unwrap();
+            if st.queue.len() >= self.admit_capacity {
+                Some(job)
+            } else {
+                st.queue.push(job);
+                self.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
+                None
+            }
+        };
+        match rejected {
+            Some(job) => {
+                self.metrics.incr("shards.shed");
+                crate::log_debug!(
+                    "router queue saturated ({} jobs); shedding job {}",
+                    self.admit_capacity,
+                    job.id
+                );
+                self.complete(job.completer, Err(JobError::Overloaded), protocol::CACHE_FLAG_NONE);
+            }
+            None => self.work_ready.notify_all(),
+        }
     }
 
     /// The routing loop: pick the least-loaded live shard with window
-    /// capacity, move the job from the queue to `pending`, write the frame.
+    /// capacity, take the next job in client round-robin order, move it
+    /// from the queue to `pending`, write the frame.
     fn dispatcher_loop(inner: &Arc<RouterInner>) {
         loop {
-            let (id, req, idx, writer) = {
+            let (id, client, req, idx, writer) = {
                 let mut st = inner.state.lock().unwrap();
                 loop {
                     if inner.shutdown.load(Ordering::SeqCst) {
@@ -542,7 +865,8 @@ impl RouterInner {
                     }
                     if !st.queue.is_empty() {
                         if let Some(idx) = pick_shard(&st, inner.max_inflight) {
-                            let RoutedJob { id, req, completer } = st.queue.pop_front().unwrap();
+                            let RoutedJob { id, client, req, completer } =
+                                st.queue.pop().unwrap();
                             // Honour a cancel that landed while the job was
                             // queued — the same dequeue-time check the
                             // in-process worker makes, preserving the
@@ -558,19 +882,23 @@ impl RouterInner {
                             }
                             st.pending.insert(id, completer);
                             st.shards[idx].inflight.insert(id);
+                            inner.metrics.set_gauge(
+                                "router.queue.depth",
+                                st.queue.len() as f64,
+                            );
                             let conn = st.shards[idx].conn.as_ref().expect("picked shard is live");
-                            break (id, req, idx, Arc::clone(&conn.writer));
+                            break (id, client, req, idx, Arc::clone(&conn.writer));
                         }
                         // Fail the queue only when every shard is down for
-                        // good (budget spent or permanently unspawnable).
-                        // Transiently-dead shards respawn within seconds —
+                        // good (budget spent or permanently unrevivable).
+                        // Transiently-dead shards revive within seconds —
                         // queued jobs must survive that window: rerouting
                         // them is the whole point of the router queue.
                         let all_permanently_down = st.shards.iter().all(|s| {
-                            !s.alive && s.respawns >= inner.spec.max_respawns_per_shard
+                            !s.alive && s.redials >= inner.spec.max_redials_per_shard
                         });
                         if all_permanently_down {
-                            let dead: Vec<RoutedJob> = st.queue.drain(..).collect();
+                            let dead: Vec<RoutedJob> = st.queue.drain_all();
                             let idle_now = st.pending.is_empty();
                             drop(st);
                             for job in dead {
@@ -590,7 +918,7 @@ impl RouterInner {
             if bytes.len() as u64 > protocol::MAX_JOB_FRAME_BYTES {
                 // An oversized job would be rejected by every shard's
                 // receive-side frame bound and, routed job-at-a-time, would
-                // serially exhaust the whole fleet's respawn budget. Fail
+                // serially exhaust the whole fleet's redial budget. Fail
                 // its own ticket instead.
                 let (completer, idle_now) = {
                     let mut st = inner.state.lock().unwrap();
@@ -617,6 +945,7 @@ impl RouterInner {
             };
             if sent {
                 inner.metrics.incr(&format!("shard.{idx}.jobs.routed"));
+                inner.metrics.incr(&format!("client.{client}.dispatched"));
             } else {
                 // The shard died between pick and write. Its reader thread
                 // handles the death; reclaim the job for rerouting unless
@@ -624,7 +953,7 @@ impl RouterInner {
                 let mut st = inner.state.lock().unwrap();
                 if let Some(completer) = st.pending.remove(&id) {
                     st.shards[idx].inflight.remove(&id);
-                    st.queue.push_front(RoutedJob { id, req, completer });
+                    st.queue.push_front(RoutedJob { id, client, req, completer });
                 }
             }
         }
@@ -695,7 +1024,7 @@ impl RouterInner {
         self.metrics.set_gauge("shard.cache.entries", self.cache.len() as f64);
         crate::log_debug!("router: absorbed {absorbed} cache entries from shard {idx}");
         let bytes = protocol::encode_cache_sync(&self.cache.to_text());
-        let writers: Vec<Arc<Mutex<UnixStream>>> = {
+        let writers: Vec<Arc<Mutex<Stream>>> = {
             let st = self.state.lock().unwrap();
             st.shards
                 .iter()
@@ -726,7 +1055,7 @@ impl RouterInner {
             (this, totals)
         };
         // The `local` segment separates these process-local mirrors (which
-        // reset when a shard respawns) from the router's own lifetime
+        // reset when a shard revives) from the router's own lifetime
         // counters — `shard.0.jobs.completed` (counter, router-lifetime)
         // and `shard.0.local.jobs.completed` (gauge, child-process view)
         // must not share a name.
@@ -740,12 +1069,13 @@ impl RouterInner {
 
     /// A shard's connection closed. Fail its in-flight jobs (`WorkerLost` —
     /// the payloads left with the frames, so they cannot be rerouted),
-    /// reap the child, and respawn within budget. Queued jobs are untouched:
-    /// the dispatcher reroutes them to the survivors.
+    /// reap the child (local) or drop the socket (remote), and revive
+    /// within the redial budget. Queued jobs are untouched: the dispatcher
+    /// reroutes them to the survivors.
     fn on_shard_down(inner: &Arc<RouterInner>, idx: usize, generation: u64) {
         let shutting_down = inner.shutdown.load(Ordering::SeqCst);
         let mut lost: Vec<Completer> = Vec::new();
-        let mut respawn = false;
+        let mut revive = false;
         {
             let mut st = inner.state.lock().unwrap();
             if st.shards[idx].generation != generation {
@@ -754,8 +1084,16 @@ impl RouterInner {
             let sh = &mut st.shards[idx];
             sh.alive = false;
             if let Some(mut conn) = sh.conn.take() {
-                let _ = conn.child.kill();
-                let _ = conn.child.wait(); // reap — no zombies
+                match conn.child.as_mut() {
+                    Some(child) => {
+                        let _ = child.kill();
+                        let _ = child.wait(); // reap — no zombies
+                    }
+                    None => {
+                        let w = conn.writer.lock().unwrap_or_else(|e| e.into_inner());
+                        let _ = w.shutdown();
+                    }
+                }
             }
             let ids: Vec<u64> = sh.inflight.drain().collect();
             for id in &ids {
@@ -763,9 +1101,9 @@ impl RouterInner {
                     lost.push(completer);
                 }
             }
-            if !shutting_down && st.shards[idx].respawns < inner.spec.max_respawns_per_shard {
-                st.shards[idx].respawns += 1;
-                respawn = true;
+            if !shutting_down && st.shards[idx].redials < inner.spec.max_redials_per_shard {
+                st.shards[idx].redials += 1;
+                revive = true;
             }
             if st.pending.is_empty() && st.queue.is_empty() {
                 inner.idle.notify_all();
@@ -776,23 +1114,31 @@ impl RouterInner {
         }
         if !shutting_down {
             inner.metrics.incr("shard.deaths");
-            if respawn {
-                match RouterInner::spawn_shard(inner, idx) {
-                    Ok(()) => inner.metrics.incr("shard.respawns"),
+            if revive {
+                match RouterInner::bring_up_shard(inner, idx) {
+                    Ok(()) => {
+                        // One budget, one counter, both origins; the
+                        // legacy per-origin counter keeps older dashboards
+                        // (and the PR-4 failover test) working for local
+                        // respawns.
+                        inner.metrics.incr("shards.redials");
+                        if matches!(inner.origins[idx], ShardOrigin::Local) {
+                            inner.metrics.incr("shard.respawns");
+                        }
+                    }
                     Err(e) => {
-                        crate::log_error!("shard {idx} respawn failed: {e:#}");
+                        crate::log_error!("shard {idx} revival failed: {e:#}");
                         // Mark the shard permanently down: there is no retry
-                        // loop for failed spawns, so leaving budget on a
-                        // shard that cannot come back would strand queued
-                        // jobs behind the all-permanently-down check.
+                        // loop beyond bring_up_shard's own dial backoff, so
+                        // leaving budget on a shard that cannot come back
+                        // would strand queued jobs behind the
+                        // all-permanently-down check.
                         let mut st = inner.state.lock().unwrap();
-                        st.shards[idx].respawns = inner.spec.max_respawns_per_shard;
+                        st.shards[idx].redials = inner.spec.max_redials_per_shard;
                     }
                 }
             } else {
-                crate::log_error!(
-                    "shard {idx} exceeded its respawn budget and stays down"
-                );
+                crate::log_error!("shard {idx} exceeded its redial budget and stays down");
             }
         }
         inner.work_ready.notify_all();
@@ -834,4 +1180,61 @@ fn pick_shard(st: &RouterState, max_inflight: usize) -> Option<usize> {
         .filter(|(_, s)| s.alive && s.conn.is_some() && s.inflight.len() < max_inflight)
         .min_by_key(|(_, s)| s.inflight.len())
         .map(|(idx, _)| idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, client: u64) -> RoutedJob {
+        RoutedJob {
+            id,
+            client,
+            req: SortRequest::new(vec![1i64]),
+            completer: Completer::Slot(JobSlot::pending()),
+        }
+    }
+
+    #[test]
+    fn client_queues_round_robin_across_clients_fifo_within() {
+        let mut q = ClientQueues::default();
+        // Client 1 bursts first; client 2 trickles in after.
+        for id in 0..4 {
+            q.push(job(id, 1));
+        }
+        q.push(job(100, 2));
+        q.push(job(101, 2));
+        assert_eq!(q.len(), 6);
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| q.pop())
+            .map(|j| (j.client, j.id))
+            .collect();
+        // Round-robin: 1, 2, 1, 2, then 1 drains; FIFO within each client.
+        assert_eq!(order, vec![(1, 0), (2, 100), (1, 1), (2, 101), (1, 2), (1, 3)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn client_queues_push_front_retries_first() {
+        let mut q = ClientQueues::default();
+        q.push(job(1, 7));
+        q.push(job(2, 8));
+        let head = q.pop().unwrap();
+        assert_eq!(head.id, 1);
+        q.push_front(head); // reclaim (failed write): must come back first
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn client_queues_drain_empties_everything() {
+        let mut q = ClientQueues::default();
+        for id in 0..5 {
+            q.push(job(id, id % 2));
+        }
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), 5);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
 }

@@ -1,0 +1,245 @@
+//! The transport seam beneath the shard router and worker: one [`Listener`]
+//! / [`Stream`] pair covering both Unix-domain and TCP sockets, selected by
+//! [`Endpoint`].
+//!
+//! Everything above this module (frame protocol, router, worker) is
+//! transport-agnostic: it reads and writes byte streams and never names a
+//! socket type. Enums (not trait objects) keep the seam allocation-free and
+//! `try_clone`-able — the router's writer mutex and each connection's reader
+//! thread hold independent clones of the same underlying socket, for either
+//! transport.
+//!
+//! TCP streams set `TCP_NODELAY`: frames are latency-sensitive
+//! (job-done replies unblock the router's in-flight window) and the writer
+//! already batches each frame into a single `write_all`.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::endpoint::Endpoint;
+
+/// A listening socket on either transport.
+pub enum Listener {
+    Unix { listener: UnixListener, path: PathBuf },
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Bind `endpoint`. A stale Unix socket file from a crashed previous
+    /// run is removed first; `tcp://host:0` binds an OS-assigned port
+    /// (recover it with [`local_endpoint`](Listener::local_endpoint)).
+    pub fn bind(endpoint: &Endpoint) -> Result<Listener> {
+        match endpoint {
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let listener = UnixListener::bind(path)
+                    .with_context(|| format!("binding {endpoint}"))?;
+                Ok(Listener::Unix { listener, path: path.clone() })
+            }
+            Endpoint::Tcp { host, port } => {
+                let listener = TcpListener::bind((host.as_str(), *port))
+                    .with_context(|| format!("binding {endpoint}"))?;
+                Ok(Listener::Tcp(listener))
+            }
+        }
+    }
+
+    /// The bound address — for `tcp://…:0`, the port the OS actually chose.
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match self {
+            Listener::Unix { path, .. } => Ok(Endpoint::Unix(path.clone())),
+            Listener::Tcp(listener) => {
+                let addr = listener.local_addr().context("reading the bound TCP address")?;
+                Ok(Endpoint::Tcp { host: addr.ip().to_string(), port: addr.port() })
+            }
+        }
+    }
+
+    pub fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix { listener, .. } => listener.set_nonblocking(nonblocking),
+            Listener::Tcp(listener) => listener.set_nonblocking(nonblocking),
+        }
+    }
+
+    /// Accept one connection (blocking or `WouldBlock`, per the listener's
+    /// mode). TCP streams come back with `TCP_NODELAY` set.
+    pub fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix { listener, .. } => {
+                let (stream, _) = listener.accept()?;
+                Ok(Stream::Unix(stream))
+            }
+            Listener::Tcp(listener) => {
+                let (stream, _) = listener.accept()?;
+                let _ = stream.set_nodelay(true);
+                Ok(Stream::Tcp(stream))
+            }
+        }
+    }
+
+    /// The socket file to unlink once the connection is up (Unix only).
+    pub fn cleanup_path(&self) -> Option<&std::path::Path> {
+        match self {
+            Listener::Unix { path, .. } => Some(path),
+            Listener::Tcp(_) => None,
+        }
+    }
+}
+
+/// A connected byte stream on either transport.
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    /// Dial `endpoint` once (no retries — the router's redial loop owns
+    /// backoff policy).
+    pub fn connect(endpoint: &Endpoint) -> Result<Stream> {
+        match endpoint {
+            Endpoint::Unix(path) => {
+                let stream = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to {endpoint}"))?;
+                Ok(Stream::Unix(stream))
+            }
+            Endpoint::Tcp { host, port } => {
+                let stream = TcpStream::connect((host.as_str(), *port))
+                    .with_context(|| format!("connecting to {endpoint}"))?;
+                let _ = stream.set_nodelay(true);
+                Ok(Stream::Tcp(stream))
+            }
+        }
+    }
+
+    /// An independent handle to the same socket (reader/writer split).
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    /// Shut down both directions. Every clone of the socket sees EOF — this
+    /// is how the router force-drops a remote shard (there is no child
+    /// process to kill) and how `Drop` detaches remote workers so they can
+    /// go back to listening.
+    pub fn shutdown(&self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+
+    pub fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn tcp_listener_reports_resolved_port_and_carries_bytes() {
+        let listener = Listener::bind(&Endpoint::tcp("127.0.0.1", 0)).expect("bind");
+        let bound = listener.local_endpoint().expect("local endpoint");
+        let Endpoint::Tcp { ref host, port } = bound else { panic!("tcp endpoint") };
+        assert_eq!(host, "127.0.0.1");
+        assert_ne!(port, 0, "the OS assigned a real port");
+
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            let mut buf = [0u8; 5];
+            conn.read_exact(&mut buf).expect("read");
+            conn.write_all(&buf).expect("echo");
+            buf
+        });
+        let mut client = Stream::connect(&bound).expect("dial");
+        client.write_all(b"hello").expect("send");
+        let mut echo = [0u8; 5];
+        client.read_exact(&mut echo).expect("echo back");
+        assert_eq!(&echo, b"hello");
+        assert_eq!(&server.join().unwrap(), b"hello");
+    }
+
+    #[test]
+    fn unix_listener_round_trips_and_cleans_up() {
+        let dir = std::env::temp_dir()
+            .join(format!("evosort-transport-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        let ep = Endpoint::unix(dir.join("t.sock"));
+        let listener = Listener::bind(&ep).expect("bind");
+        assert_eq!(listener.local_endpoint().unwrap(), ep);
+        assert!(listener.cleanup_path().is_some());
+
+        let server = {
+            let ep = ep.clone();
+            std::thread::spawn(move || {
+                let mut client = Stream::connect(&ep).expect("dial");
+                client.write_all(b"ok").expect("send");
+            })
+        };
+        let mut conn = listener.accept().expect("accept");
+        let mut buf = [0u8; 2];
+        conn.read_exact(&mut buf).expect("read");
+        assert_eq!(&buf, b"ok");
+        server.join().unwrap();
+        // Re-binding the same path succeeds (stale file removal).
+        let _again = Listener::bind(&ep).expect("rebind over stale socket file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shutdown_unblocks_a_cloned_reader() {
+        let listener = Listener::bind(&Endpoint::tcp("127.0.0.1", 0)).expect("bind");
+        let bound = listener.local_endpoint().expect("ep");
+        let client = std::thread::spawn(move || {
+            let stream = Stream::connect(&bound).expect("dial");
+            let mut reader = stream.try_clone().expect("clone");
+            let blocker = std::thread::spawn(move || {
+                let mut buf = [0u8; 1];
+                reader.read(&mut buf) // EOF (Ok(0)) once shutdown lands
+            });
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            stream.shutdown().expect("shutdown");
+            let read = blocker.join().unwrap().expect("read after shutdown");
+            assert_eq!(read, 0, "shutdown surfaces as EOF on the clone");
+        });
+        let _server_side = listener.accept().expect("accept");
+        client.join().unwrap();
+    }
+}

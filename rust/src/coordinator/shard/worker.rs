@@ -1,6 +1,6 @@
 //! The shard-worker side of the cross-process service: one OS process, one
-//! [`SortService`] (autotuner included), one Unix-socket connection back to
-//! the router.
+//! [`SortService`] (autotuner included), one stream connection back to the
+//! router (Unix socket or TCP — see [`transport`](super::transport)).
 //!
 //! The main thread reads frames off the socket: each [`Frame::Job`] is
 //! submitted to the local service (blocking only on the pool's backpressure,
@@ -17,24 +17,35 @@
 //! class tuned on any shard speeds this one up without ever clobbering a
 //! better locally-tuned entry.
 //!
-//! Entry points: [`run`] (connect by socket path — the hidden
-//! `evosort shard-worker` subcommand) and [`run_on_stream`] (an already
-//! connected stream — in-process tests use a socketpair).
+//! Entry points, by who owns the connection's lifecycle:
+//!
+//! * [`run`] — **dial the router** (local shards: the router listens, the
+//!   child it spawned connects back — `shard-worker --connect`);
+//! * [`run_listening`] — **be dialed** (remote shards: a standalone
+//!   `shard-worker --listen` on another host accepts a router, serves it,
+//!   and when the router disconnects goes *back to listening* so the
+//!   router's redial finds a live worker; only an explicit
+//!   [`Frame::Shutdown`] ends the process);
+//! * [`run_on_stream`] — an already-connected stream (tests use pairs),
+//!   returning [`ExitReason`] so callers can tell a deliberate stop from a
+//!   lost router.
 
-use std::os::unix::net::UnixStream;
-use std::path::Path;
+use std::io::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::endpoint::Endpoint;
 use crate::coordinator::service::{self, ServiceConfig, SortService};
 use crate::coordinator::shard::protocol::{self, Frame};
+use crate::coordinator::shard::transport::{Listener, Stream};
 use crate::coordinator::ticket::Ticket;
 use crate::coordinator::tuning_cache::TuningCache;
 
 /// Everything a shard-worker process needs besides its socket.
+#[derive(Clone)]
 pub struct ShardWorkerConfig {
     /// This shard's index (diagnostics only — routing is the router's job).
     pub shard_id: usize,
@@ -44,16 +55,55 @@ pub struct ShardWorkerConfig {
     pub publish_interval: Duration,
 }
 
-/// Connect to the router's listener socket and serve until it says stop.
-pub fn run(socket: &Path, config: ShardWorkerConfig) -> Result<()> {
+/// Why [`run_on_stream`] returned: an explicit [`Frame::Shutdown`] from the
+/// router, or a lost/poisoned connection (EOF, I/O error, hostile frame).
+/// A listening worker re-listens after `Disconnected` and exits only on
+/// `Shutdown`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    Shutdown,
+    Disconnected,
+}
+
+/// Dial the router's listener and serve until it says stop (the spawned
+/// child side of a local shard).
+pub fn run(endpoint: &Endpoint, config: ShardWorkerConfig) -> Result<()> {
     let id = config.shard_id;
-    let stream = UnixStream::connect(socket)
-        .with_context(|| format!("shard {id} connecting to {}", socket.display()))?;
-    run_on_stream(stream, config)
+    let stream =
+        Stream::connect(endpoint).with_context(|| format!("shard {id} dialing the router"))?;
+    run_on_stream(stream, config)?;
+    Ok(())
+}
+
+/// Listen on `endpoint` and serve routers one at a time (the standalone
+/// remote-worker mode: `shard-worker --listen tcp://0.0.0.0:7001`).
+///
+/// Announces the *resolved* address on stdout (`listening on tcp://…`) so
+/// `--listen tcp://127.0.0.1:0` is scriptable; after a router disconnects
+/// — crash, network drop, or router restart — the worker returns to
+/// `accept`, which is the worker half of the router's redial contract. The
+/// local [`SortService`] is rebuilt per connection; the router re-seeds a
+/// freshly accepted worker with the fleet's merged tuning cache.
+pub fn run_listening(endpoint: &Endpoint, config: ShardWorkerConfig) -> Result<()> {
+    let listener =
+        Listener::bind(endpoint).with_context(|| format!("shard-worker listening on {endpoint}"))?;
+    let bound = listener.local_endpoint()?;
+    println!("shard-worker listening on {bound}");
+    let _ = std::io::stdout().flush();
+    loop {
+        let stream = listener.accept().context("accepting a router connection")?;
+        crate::log_debug!("shard-worker: router connected on {bound}");
+        match run_on_stream(stream, config.clone())? {
+            ExitReason::Shutdown => return Ok(()),
+            ExitReason::Disconnected => {
+                crate::log_debug!("shard-worker: router disconnected; listening again");
+            }
+        }
+    }
 }
 
 /// Serve an already-connected router stream (see the module docs).
-pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()> {
+pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitReason> {
     let ShardWorkerConfig { shard_id, service: svc_config, publish_interval } = config;
     let collector_count = svc_config.workers.max(1);
     let svc = SortService::new(svc_config);
@@ -142,7 +192,7 @@ pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()
     };
 
     // Main loop: intake.
-    loop {
+    let reason = loop {
         match protocol::read_frame(&mut reader) {
             Ok(Frame::Job { id, req }) => {
                 // Peek the cache outcome before submission so the reply can
@@ -166,7 +216,7 @@ pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()
                 };
                 let ticket = svc.submit_request(req);
                 if ticket_tx.send((id, cache_flag, ticket)).is_err() {
-                    break; // every collector died (router gone)
+                    break ExitReason::Disconnected; // every collector died (router gone)
                 }
             }
             Ok(Frame::CacheSync { text }) => {
@@ -179,11 +229,11 @@ pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()
                     );
                 }
             }
-            Ok(Frame::Shutdown) => break,
+            Ok(Frame::Shutdown) => break ExitReason::Shutdown,
             Ok(_) => {} // frames for the other direction: ignore
-            Err(_) => break, // router disconnected
+            Err(_) => break ExitReason::Disconnected, // router gone or hostile frame
         }
-    }
+    };
 
     // Drain: collectors finish the tickets already handed out, then exit on
     // the closed channel; the service drop joins pool + tuner.
@@ -194,7 +244,7 @@ pub fn run_on_stream(stream: UnixStream, config: ShardWorkerConfig) -> Result<()
     stop.store(true, Ordering::Relaxed);
     let _ = ticker.join();
     drop(svc);
-    Ok(())
+    Ok(reason)
 }
 
 #[cfg(test)]
@@ -207,6 +257,7 @@ mod tests {
     use crate::data::{generate_i64, Distribution};
     use crate::params::SortParams;
     use std::collections::HashMap;
+    use std::os::unix::net::UnixStream;
 
     fn quick_config() -> ShardWorkerConfig {
         ShardWorkerConfig {
@@ -225,7 +276,8 @@ mod tests {
     #[test]
     fn worker_sorts_jobs_and_absorbs_cache_over_a_socketpair() {
         let (router_side, worker_side) = UnixStream::pair().expect("socketpair");
-        let worker = std::thread::spawn(move || run_on_stream(worker_side, quick_config()));
+        let worker =
+            std::thread::spawn(move || run_on_stream(Stream::Unix(worker_side), quick_config()));
         let mut reader = router_side.try_clone().expect("clone");
         let mut writer = router_side;
 
@@ -273,14 +325,17 @@ mod tests {
         assert_eq!(entries_seen, 1, "broadcast entry must land in the shard cache");
 
         write_frame(&mut writer, &encode_shutdown()).unwrap();
-        worker.join().expect("worker thread").expect("worker run");
+        let reason = worker.join().expect("worker thread").expect("worker run");
+        assert_eq!(reason, ExitReason::Shutdown, "an explicit Shutdown frame is deliberate");
     }
 
     #[test]
     fn worker_exits_cleanly_when_the_router_vanishes() {
         let (router_side, worker_side) = UnixStream::pair().expect("socketpair");
-        let worker = std::thread::spawn(move || run_on_stream(worker_side, quick_config()));
+        let worker =
+            std::thread::spawn(move || run_on_stream(Stream::Unix(worker_side), quick_config()));
         drop(router_side); // router dies without a Shutdown frame
-        worker.join().expect("worker thread").expect("worker run");
+        let reason = worker.join().expect("worker thread").expect("worker run");
+        assert_eq!(reason, ExitReason::Disconnected, "EOF is a lost router, not a stop order");
     }
 }

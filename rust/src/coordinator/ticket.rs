@@ -70,6 +70,10 @@ pub enum JobError {
     /// The executing worker died (panicking job) or the service shut down
     /// before the job could run.
     WorkerLost,
+    /// Bounded admission shed the job: the router's queue was saturated at
+    /// submission, so it resolved immediately instead of queueing
+    /// unboundedly. Retry later or against another router.
+    Overloaded,
 }
 
 impl std::fmt::Display for JobError {
@@ -77,6 +81,9 @@ impl std::fmt::Display for JobError {
         match self {
             JobError::Cancelled => f.write_str("job cancelled before execution"),
             JobError::WorkerLost => f.write_str("worker lost before the job completed"),
+            JobError::Overloaded => {
+                f.write_str("router queue saturated; job shed at admission")
+            }
         }
     }
 }

@@ -232,3 +232,137 @@ fn cross_shard_cache_broadcast_shares_tuned_classes() {
     assert!(metrics.counter("shard.cache.publishes") >= 1);
     assert!(!router.cache().is_empty(), "the router holds the merged view");
 }
+
+#[test]
+fn redial_budget_exhaustion_fails_jobs_instead_of_reviving_forever() {
+    // Budget 0: the first death is final. In-flight jobs resolve
+    // Err(WorkerLost), the queue drains as WorkerLost once every shard is
+    // permanently down, later submissions resolve immediately — and no
+    // revival is attempted (`shards.redials` stays 0).
+    let spec = ShardSpec { max_redials_per_shard: 0, ..spec(2, 1) };
+    let router = ShardRouter::spawn(spec).expect("router up");
+    let metrics = std::sync::Arc::clone(router.metrics());
+
+    let requests: Vec<SortRequest> = (0..12u64)
+        .map(|i| SortRequest::new(generate_i64(800_000, Distribution::Uniform, i, 2)))
+        .collect();
+    let stream = router.submit_batch_requests(requests).stream();
+    assert!(
+        wait_until(Duration::from_secs(30), || router.inflight(0) > 0 && router.inflight(1) > 0),
+        "both shards must be busy before the kills"
+    );
+    assert!(router.kill_shard(0));
+    assert!(router.kill_shard(1));
+
+    let results: Vec<JobResult> = stream.collect();
+    assert_eq!(results.len(), 12, "every slot resolves — nothing hangs");
+    assert!(
+        results.iter().any(|r| r.is_err()),
+        "a fleet with no redial budget must surface losses"
+    );
+
+    assert!(
+        wait_until(Duration::from_secs(10), || metrics.counter("shard.deaths") >= 2),
+        "both deaths observed"
+    );
+    assert_eq!(metrics.counter("shards.redials"), 0, "budget 0 means no revival");
+    assert_eq!(metrics.counter("shard.respawns"), 0);
+
+    // The router stays up and answers — with a typed loss, not a hang.
+    let late = router
+        .submit_request(SortRequest::new(generate_i64(1_000, Distribution::Uniform, 77, 2)))
+        .wait();
+    assert!(
+        matches!(late, Err(evosort::coordinator::JobError::WorkerLost)),
+        "post-exhaustion submissions resolve WorkerLost, got {late:?}"
+    );
+}
+
+#[test]
+fn saturated_router_sheds_with_typed_overloaded_error() {
+    // One shard, one worker, in-flight window 1, and room for only 2
+    // queued jobs: a burst must shed its tail as Err(Overloaded) at
+    // admission — typed, immediate, and counted — while admitted jobs
+    // still complete.
+    let spec = ShardSpec {
+        max_inflight_per_shard: 1,
+        router_queue_capacity: 2,
+        ..spec(1, 1)
+    };
+    let router = ShardRouter::spawn(spec).expect("router up");
+
+    // Generate ahead of time so the burst itself is back-to-back enqueues,
+    // not paced by data generation.
+    let datasets: Vec<Vec<i64>> =
+        (0..16u64).map(|i| generate_i64(400_000, Distribution::Uniform, i, 2)).collect();
+    let tickets: Vec<_> = datasets
+        .into_iter()
+        .map(|data| router.submit_request(SortRequest::new(data)))
+        .collect();
+    let results: Vec<JobResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    assert_eq!(results.len(), 16, "every ticket resolves");
+    let shed = results
+        .iter()
+        .filter(|r| matches!(r, Err(evosort::coordinator::JobError::Overloaded)))
+        .count();
+    let completed = results.iter().filter(|r| r.is_ok()).count();
+    assert!(shed >= 1, "a 16-job burst against capacity 2 must shed");
+    assert!(completed >= 2, "admitted jobs complete");
+    assert_eq!(shed + completed, 16, "no third outcome in this scenario");
+
+    let metrics = router.metrics();
+    assert_eq!(metrics.counter("shards.shed") as usize, shed);
+    assert_eq!(metrics.counter("jobs.completed") as usize, completed);
+    assert_eq!(metrics.counter("jobs.submitted"), 16, "shed jobs still count as submitted");
+
+    // Pressure gone, the same router admits everything again.
+    let report = router
+        .submit_batch_requests(
+            (0..2u64)
+                .map(|i| SortRequest::new(generate_i64(5_000, Distribution::Uniform, 50 + i, 2)))
+                .collect(),
+        )
+        .wait();
+    assert_eq!(report.stats.failed, 0, "admission recovers once the queue drains");
+}
+
+#[test]
+fn round_robin_keeps_a_small_client_ahead_of_a_bulk_client() {
+    // One serialized shard (1 worker, window 1). Client 1 floods the queue
+    // with slow jobs; client 2 then submits one tiny job. Round-robin must
+    // dispatch client 2's job after at most one more client-1 job — FIFO
+    // would run it last.
+    let spec = ShardSpec { max_inflight_per_shard: 1, ..spec(1, 1) };
+    let router = ShardRouter::spawn(spec).expect("router up");
+    let metrics = std::sync::Arc::clone(router.metrics());
+
+    let bulk: Vec<_> = (0..10u64)
+        .map(|i| {
+            router.submit_request_as(
+                1,
+                SortRequest::new(generate_i64(800_000, Distribution::Uniform, i, 2)),
+            )
+        })
+        .collect();
+    let small = router
+        .submit_request_as(2, SortRequest::new(generate_i64(1_000, Distribution::Uniform, 99, 2)));
+
+    let out = small.wait().expect("small job completes");
+    assert!(out.valid);
+    // At the moment the small job resolved, the bulk client cannot have
+    // finished: with round-robin it waits behind at most ~2 bulk jobs
+    // (one in flight at submission + one round), not all 10.
+    let bulk_done_then = metrics.counter("jobs.completed").saturating_sub(1);
+    assert!(
+        bulk_done_then < 10,
+        "small client finished after the whole bulk burst — starved, not round-robined"
+    );
+
+    for t in bulk {
+        let out = t.wait().expect("bulk job completes");
+        assert!(out.valid);
+    }
+    assert_eq!(metrics.counter("client.1.dispatched"), 10);
+    assert_eq!(metrics.counter("client.2.dispatched"), 1);
+    assert_eq!(metrics.counter("jobs.completed"), 11);
+}
