@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::ga::{GaConfig, GaDriver, SortTimingFitness};
+use crate::obs::{EventKind, Tracer};
 use crate::sort::AdaptiveSorter;
 use crate::symbolic::SymbolicModel;
 
@@ -75,12 +76,16 @@ impl OnlineTuner {
     /// Spawn the tuner thread. `cache` and `metrics` are shared with the
     /// sort service; `model` seeds cold classes; `threads` bounds the
     /// background sorter's parallelism (use the service's per-job budget).
+    /// An enabled `tracer` records every publish/reject decision as
+    /// `TunerPublished`/`TunerRejected` events under trace id 0 (tuner
+    /// decisions are service-scoped, not tied to one job).
     pub fn spawn(
         policy: AutotunePolicy,
         cache: Arc<TuningCache>,
         metrics: Arc<Metrics>,
         model: SymbolicModel,
         threads: usize,
+        tracer: Tracer,
     ) -> OnlineTuner {
         if let Some(path) = &policy.persist_path {
             if path.exists() {
@@ -108,6 +113,7 @@ impl OnlineTuner {
             stop: Arc::clone(&stop),
             sampled: Arc::clone(&sampled),
             threads: threads.max(1),
+            tracer,
         };
         let handle = std::thread::Builder::new()
             .name("evosort-tuner".into())
@@ -193,6 +199,7 @@ struct TunerWorker {
     /// Shared with [`OnlineTuner::wants_sample`]: labels holding a sample.
     sampled: Arc<RwLock<HashSet<String>>>,
     threads: usize,
+    tracer: Tracer,
 }
 
 impl TunerWorker {
@@ -318,6 +325,17 @@ impl TunerWorker {
             self.cache.put_with_fitness(state.n_hint, label, result.best, result.best_fitness);
             self.metrics.incr("tuner.publishes");
             self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
+            if self.tracer.is_enabled() {
+                self.tracer.emit(
+                    0,
+                    EventKind::TunerPublished {
+                        fingerprint: label.into(),
+                        params: result.best.to_string().into_boxed_str(),
+                        fitness: result.best_fitness,
+                        improvement_pct,
+                    },
+                );
+            }
             crate::log_info!(
                 "autotune: class {label} improved {improvement_pct:.1}% \
                  ({seed_fit:.6}s -> {:.6}s) with {}",
@@ -331,6 +349,14 @@ impl TunerWorker {
             }
         } else {
             self.metrics.incr("tuner.no_change");
+            if self.tracer.is_enabled() {
+                let reason =
+                    if result.best_genome == seed_genome { "no_change" } else { "below_margin" };
+                self.tracer.emit(
+                    0,
+                    EventKind::TunerRejected { fingerprint: label.into(), reason: reason.into() },
+                );
+            }
         }
         state.mark_tuned(gens);
         started.elapsed()
@@ -371,6 +397,7 @@ mod tests {
             Arc::clone(&metrics),
             SymbolicModel::paper(),
             2,
+            Tracer::disabled(),
         );
         (tuner, cache, metrics)
     }
@@ -388,7 +415,17 @@ mod tests {
 
     #[test]
     fn tunes_a_hot_class_and_publishes_params() {
-        let (tuner, cache, metrics) = tuner_fixture(AutotunePolicy::quick());
+        let cache = Arc::new(TuningCache::new());
+        let metrics = Arc::new(Metrics::new());
+        let tracer = Tracer::enabled(1024, u32::MAX);
+        let tuner = OnlineTuner::spawn(
+            AutotunePolicy::quick(),
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+            SymbolicModel::paper(),
+            2,
+            tracer.clone(),
+        );
         let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
         let label = Fingerprint::of(&data).label();
         let sample = fingerprint::sample(&data, 4096);
@@ -418,6 +455,18 @@ mod tests {
         });
         assert!(published, "no parameters published for the hot class");
         assert!(metrics.counter("tuner.generations") > 0);
+        // The publish decision was traced (trace id 0, tuner-scoped).
+        let mut events = Vec::new();
+        tracer.drain_into(&mut events);
+        let publish = events
+            .iter()
+            .find(|e| e.kind.name() == "tuner_published")
+            .expect("publish decision traced");
+        assert_eq!(publish.trace_id, 0);
+        if let EventKind::TunerPublished { fingerprint, improvement_pct, .. } = &publish.kind {
+            assert_eq!(&**fingerprint, label.as_str());
+            assert!(*improvement_pct > 0.0);
+        }
         drop(tuner); // must join cleanly
     }
 

@@ -37,12 +37,18 @@ pub struct BenchEntry {
     pub throughput: f64,
     /// Hardware-normalised figure of merit; `<= 0` means unmeasured.
     pub score: f64,
+    /// v2: per-phase kernel timings from one instrumented pass —
+    /// `(metric name, seconds)`, e.g. `("kernel.radix.scatter", 0.004)`,
+    /// sorted by name. Empty for uninstrumented points and for every entry
+    /// parsed from a v1 report.
+    pub phases: Vec<(String, f64)>,
 }
 
 /// A full bench report.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchDoc {
-    /// Format tag, always `evosort-bench-v1`.
+    /// Format tag: `evosort-bench-v2` (the writer); the reader also accepts
+    /// `evosort-bench-v1` files, whose entries simply carry no phases.
     pub schema: String,
     /// `measured` or `seed-unmeasured` (the committed bootstrap baseline).
     pub provenance: String,
@@ -51,7 +57,10 @@ pub struct BenchDoc {
     pub entries: Vec<BenchEntry>,
 }
 
-pub const SCHEMA: &str = "evosort-bench-v1";
+pub const SCHEMA: &str = "evosort-bench-v2";
+/// The previous schema tag; still readable so committed v1 baselines keep
+/// comparing against fresh v2 reports on their shared entry ids.
+pub const SCHEMA_V1: &str = "evosort-bench-v1";
 pub const PROVENANCE_MEASURED: &str = "measured";
 pub const PROVENANCE_SEED: &str = "seed-unmeasured";
 
@@ -76,6 +85,14 @@ impl BenchDoc {
             out.push_str(&format!("\"stddev_secs\": {}, ", num(e.stddev_secs)));
             out.push_str(&format!("\"throughput\": {}, ", num(e.throughput)));
             out.push_str(&format!("\"score\": {}", num(e.score)));
+            out.push_str(", \"phases\": {");
+            for (j, (name, secs)) in e.phases.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{}: {}", quote(name), num(*secs)));
+            }
+            out.push('}');
             out.push_str(if i + 1 < self.entries.len() { "},\n" } else { "}\n" });
         }
         out.push_str("  ]\n}\n");
@@ -87,8 +104,10 @@ impl BenchDoc {
         let value = Json::parse(text)?;
         let obj = value.as_object().context("bench report: top level must be an object")?;
         let schema = get_str(obj, "schema")?;
-        if schema != SCHEMA {
-            bail!("bench report: unsupported schema {schema:?} (expected {SCHEMA:?})");
+        if schema != SCHEMA && schema != SCHEMA_V1 {
+            bail!(
+                "bench report: unsupported schema {schema:?} (expected {SCHEMA:?} or {SCHEMA_V1:?})"
+            );
         }
         let entries_val =
             find(obj, "entries").context("bench report: missing entries")?;
@@ -98,6 +117,16 @@ impl BenchDoc {
         let mut entries = Vec::with_capacity(items.len());
         for item in items {
             let e = item.as_object().context("bench entry must be an object")?;
+            // v1 entries have no phases field; v2 always writes one.
+            let mut phases = Vec::new();
+            if let Some(Json::Object(pairs)) = find(e, "phases") {
+                for (name, value) in pairs {
+                    let Json::Number(secs) = value else {
+                        bail!("bench report: phase {name:?} must be a number");
+                    };
+                    phases.push((name.clone(), *secs));
+                }
+            }
             entries.push(BenchEntry {
                 id: get_str(e, "id")?,
                 median_secs: get_num(e, "median_secs")?,
@@ -105,6 +134,7 @@ impl BenchDoc {
                 stddev_secs: get_num(e, "stddev_secs")?,
                 throughput: get_num(e, "throughput")?,
                 score: get_num(e, "score")?,
+                phases,
             });
         }
         Ok(BenchDoc {
@@ -408,6 +438,10 @@ mod tests {
                     stddev_secs: 0.00002,
                     throughput: 81_300_000.0,
                     score: 3.4,
+                    phases: vec![
+                        ("kernel.radix.histogram".into(), 0.0004),
+                        ("kernel.radix.scatter".into(), 0.0007),
+                    ],
                 },
                 BenchEntry {
                     id: "service/parked/j32xn100000".into(),
@@ -416,6 +450,7 @@ mod tests {
                     stddev_secs: 0.01,
                     throughput: 64.0,
                     score: 1.8,
+                    phases: Vec::new(),
                 },
             ],
         }
@@ -434,7 +469,35 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert!((a.median_secs - b.median_secs).abs() < 1e-12);
             assert!((a.score - b.score).abs() < 1e-9);
+            assert_eq!(a.phases.len(), b.phases.len());
+            for ((an, av), (bn, bv)) in a.phases.iter().zip(&b.phases) {
+                assert_eq!(an, bn);
+                assert!((av - bv).abs() < 1e-12);
+            }
         }
+    }
+
+    #[test]
+    fn v1_reports_still_parse_and_compare() {
+        // A committed v1 baseline (no phases field) must keep working as a
+        // --compare input against fresh v2 reports.
+        let v1 = r#"{
+  "schema": "evosort-bench-v1",
+  "provenance": "measured",
+  "threads": 8,
+  "scale_div": 100,
+  "entries": [
+    {"id": "kernel/radix/uniform/n100000", "median_secs": 0.002, "mean_secs": 0.002, "stddev_secs": 0.0001, "throughput": 50000000.0, "score": 3.0}
+  ]
+}
+"#;
+        let base = BenchDoc::from_json(v1).expect("v1 parses");
+        assert_eq!(base.schema, SCHEMA_V1);
+        assert!(base.entries[0].phases.is_empty());
+        let fresh = doc();
+        let c = compare(&base, &fresh, 2.0);
+        assert_eq!(c.compared, 1, "shared ids compare across schema versions");
+        assert!(c.passed());
     }
 
     #[test]

@@ -73,6 +73,84 @@ fn dtype_of(args: &Args) -> Result<Dtype> {
     dtype_of_name(args.str_or("dtype", "i64"))
 }
 
+/// `serve` turns tracing on for `--trace` or any `--trace-log FILE`.
+fn trace_wanted(args: &Args) -> bool {
+    args.has("trace") || args.get("trace-log").is_some()
+}
+
+/// Spawn the Prometheus scrape endpoint when `--metrics-addr` was given.
+/// The returned handle keeps the listener alive for the whole run.
+fn spawn_metrics_server(
+    args: &Args,
+    metrics: &std::sync::Arc<crate::coordinator::metrics::Metrics>,
+) -> Result<Option<crate::obs::MetricsServer>> {
+    let Some(addr) = args.get("metrics-addr") else { return Ok(None) };
+    let server = crate::obs::MetricsServer::spawn(addr, std::sync::Arc::clone(metrics))?;
+    println!("metrics scrape endpoint: http://{}/metrics", server.addr());
+    Ok(Some(server))
+}
+
+/// Scrape our own `--metrics-addr` endpoint once and verify it serves
+/// `evosort_*` series — the smoke proves the whole export path (registry →
+/// Prometheus text → HTTP) without needing curl choreography in CI.
+fn self_scrape(server: &crate::obs::MetricsServer) -> Result<()> {
+    use std::io::{Read as _, Write as _};
+    let mut stream = std::net::TcpStream::connect(server.addr())?;
+    stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: evosort\r\nConnection: close\r\n\r\n")?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    anyhow::ensure!(
+        response.starts_with("HTTP/1.1 200"),
+        "metrics scrape returned {:?}",
+        response.lines().next().unwrap_or("")
+    );
+    let series = response.lines().filter(|l| l.starts_with("evosort_")).count();
+    println!("self-scrape: {series} evosort_* series served");
+    anyhow::ensure!(series > 0, "metrics scrape served no evosort_* series");
+    Ok(())
+}
+
+/// End-of-run trace report for a `serve` path that had a
+/// [`TraceHub`](crate::obs::TraceHub): wait briefly for in-flight shard
+/// batches to land, flush the JSONL sink, print a one-line summary, and —
+/// when `strict` — fail on incomplete span chains (a submitted job without
+/// exactly one terminal event is a tracing bug, not noise). A
+/// `--chaos-kill` run is not strict: a SIGKILLed worker legitimately
+/// strands its own stream's terminal (the router-side `worker_lost`
+/// terminal still closes the trace).
+fn finish_trace(hub: &crate::obs::TraceHub, trace_log: Option<&str>, strict: bool) -> Result<()> {
+    use std::time::{Duration, Instant};
+    // Worker shards stream their rings on the telemetry tick; give the last
+    // batch a moment to arrive instead of snapshotting a torn timeline.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        hub.flush();
+        let problems = crate::obs::report::check(&hub.snapshot());
+        if problems.is_empty() || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let events = hub.snapshot();
+    let problems = crate::obs::report::check(&events);
+    println!(
+        "trace: {} events across {} traces ({} dropped)",
+        events.len(),
+        hub.timeline_len(),
+        hub.dropped()
+    );
+    if let Some(path) = trace_log {
+        println!("trace log written to {path} (inspect with `evosort trace {path}`)");
+    }
+    for p in &problems {
+        println!("  trace problem: {p}");
+    }
+    if strict {
+        anyhow::ensure!(problems.is_empty(), "{} incomplete span chains", problems.len());
+    }
+    Ok(())
+}
+
 fn threads_of(args: &Args) -> Result<usize> {
     args.usize_or("threads", default_threads())
 }
@@ -369,13 +447,33 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("autotune") {
         return serve_autotune(args, jobs, n, workers, threads, dtype);
     }
-    let svc = SortService::new(ServiceConfig {
-        workers,
-        sort_threads: (threads / workers.max(1)).max(1),
-        queue_capacity: 64,
-        autotune: None,
-        exec: exec_mode_of(args)?,
-    });
+    let traced = trace_wanted(args);
+    let tracer = if traced {
+        crate::obs::Tracer::enabled(crate::obs::DEFAULT_RING_CAPACITY, 0)
+    } else {
+        crate::obs::Tracer::disabled()
+    };
+    let svc = SortService::new_traced(
+        ServiceConfig {
+            workers,
+            sort_threads: (threads / workers.max(1)).max(1),
+            queue_capacity: 64,
+            autotune: None,
+            exec: exec_mode_of(args)?,
+        },
+        tracer.clone(),
+    );
+    let hub = if traced {
+        let path = args.get("trace-log").map(std::path::PathBuf::from);
+        Some(crate::obs::TraceHub::new(
+            tracer,
+            path.as_deref(),
+            Some(std::sync::Arc::clone(svc.metrics())),
+        )?)
+    } else {
+        None
+    };
+    let scrape = spawn_metrics_server(args, svc.metrics())?;
     if args.has("batch") {
         let workload = crate::coordinator::BatchWorkload {
             jobs,
@@ -394,6 +492,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         println!("\nmetrics:\n{}", svc.metrics().report());
         anyhow::ensure!(report.stats.invalid == 0, "{} jobs failed validation", report.stats.invalid);
         anyhow::ensure!(report.stats.failed == 0, "{} jobs failed to execute", report.stats.failed);
+        if let Some(hub) = &hub {
+            finish_trace(hub, args.get("trace-log"), true)?;
+        }
+        if let Some(server) = &scrape {
+            self_scrape(server)?;
+        }
         return Ok(());
     }
     println!("service: {workers} workers, {jobs} {dtype} jobs of {} elements", fmt_count(n));
@@ -421,6 +525,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         anyhow::ensure!(out.valid, "job {} failed validation", out.id);
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
+    if let Some(hub) = &hub {
+        finish_trace(hub, args.get("trace-log"), true)?;
+    }
+    if let Some(server) = &scrape {
+        self_scrape(server)?;
+    }
     Ok(())
 }
 
@@ -479,11 +589,17 @@ fn serve_sharded(
             }
         }
     }
+    if let Some(path) = args.get("trace-log") {
+        builder = builder.trace_log(path.into());
+    } else if args.has("trace") {
+        builder = builder.trace(true);
+    }
     let spec = builder.build();
     let transport = spec.transport;
     let remotes = spec.remotes.len();
     let fleet = spec.shards + remotes;
     let svc = ShardedService::spawn(spec)?;
+    let scrape = spawn_metrics_server(args, svc.metrics())?;
     let rounds = args.usize_or("rounds", if autotuned { 40 } else { 1 })?;
     let seed = args.u64_or("seed", 42)?;
     // An explicit --dtype pins every job to that dtype (matching the
@@ -551,6 +667,12 @@ fn serve_sharded(
             "sharded smoke failed: no cross-shard cache broadcast occurred"
         );
         println!("merged tuned classes at the router: {}", svc.cache().len());
+    }
+    if let Some(hub) = svc.trace_hub() {
+        finish_trace(hub, args.get("trace-log"), !args.has("chaos-kill"))?;
+    }
+    if let Some(server) = &scrape {
+        self_scrape(server)?;
     }
     Ok(())
 }
@@ -658,6 +780,7 @@ pub fn cmd_shard_worker(args: &Args) -> Result<()> {
                 exec: exec_mode_of(args)?,
             },
             publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
+            trace: args.has("trace"),
         };
         match (args.get("connect"), args.get("listen"), args.get("socket")) {
             (Some(text), None, None) => worker::run(&text.parse::<Endpoint>()?, config),
@@ -770,8 +893,10 @@ fn serve_autotune(
 /// executor modes — the persistent parked executor against the
 /// spawn-per-call baseline it replaced.
 ///
-/// * `--json FILE` writes the `evosort-bench-v1` report (the `BENCH_*.json`
-///   trajectory).
+/// * `--json FILE` writes the `evosort-bench-v2` report (the `BENCH_*.json`
+///   trajectory): per-point medians/scores plus, for kernel points, a
+///   per-phase breakdown from one `PhaseTimer`-instrumented pass. Committed
+///   `evosort-bench-v1` baselines still parse and compare on shared ids.
 /// * `--compare BASE` diffs hardware-normalised scores against a committed
 ///   baseline and exits non-zero on a > `--max-regression` (default 2x)
 ///   collapse. Unmeasured seed baselines are skipped (bootstrap mode).
@@ -838,13 +963,14 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 |mut d| sorter.sort_i64_with_scratch(&mut d, &p, &mut scratch),
             );
             let score = std_median / m.median().max(1e-12);
-            push_entry(
+            push_entry_with_phases(
                 &mut entries,
                 &mut table,
                 format!("kernel/{name}/{}/n{n}", dist.name()),
                 &m,
                 n as f64 / m.median().max(1e-12),
                 score,
+                kernel_phases(&sorter, &data, &p),
             );
         }
     }
@@ -946,6 +1072,20 @@ fn push_entry(
     throughput: f64,
     score: f64,
 ) {
+    push_entry_with_phases(entries, table, id, m, throughput, score, Vec::new());
+}
+
+/// [`push_entry`] carrying a v2 per-phase breakdown (kernel points only;
+/// service/std points have no phase-instrumented path).
+fn push_entry_with_phases(
+    entries: &mut Vec<BenchEntry>,
+    table: &mut Table,
+    id: String,
+    m: &crate::bench_harness::Measurement,
+    throughput: f64,
+    score: f64,
+    phases: Vec<(String, f64)>,
+) {
     table.row(&[
         id.clone(),
         fmt_secs(m.median()),
@@ -959,7 +1099,25 @@ fn push_entry(
         stddev_secs: m.summary.stddev,
         throughput,
         score,
+        phases,
     });
+}
+
+/// One extra instrumented pass for a kernel bench point: run the sort with
+/// the [`PhaseTimer`](crate::obs::PhaseTimer) armed and report where the
+/// time went — the v2 `phases` map (`kernel.<name>.<phase>` → seconds).
+fn kernel_phases(sorter: &AdaptiveSorter, data: &[i64], p: &SortParams) -> Vec<(String, f64)> {
+    let mut d = data.to_vec();
+    let mut scratch = Vec::new();
+    let mut timer = crate::obs::PhaseTimer::enabled();
+    sorter.sort_i64_timed(&mut d, p, &mut scratch, &mut timer);
+    let mut phases: Vec<(String, f64)> = timer
+        .drain()
+        .into_iter()
+        .map(|(phase, secs)| (phase.metric_name().to_string(), secs))
+        .collect();
+    phases.sort_by(|a, b| a.0.cmp(&b.0));
+    phases
 }
 
 /// One service-workload measurement: a batch of `jobs` mid-sized mixed
@@ -997,6 +1155,33 @@ fn bench_service_batch(
     );
     anyhow::ensure!(failed == 0, "service bench: {failed} failed/invalid jobs");
     Ok(m)
+}
+
+/// `evosort trace FILE [--check]` — summarize a `--trace-log` JSONL file:
+/// per-phase kernel p50/p99, end-to-end slowest traces, failure breakdown,
+/// tuner decisions, and the span-chain completeness check. With `--check`,
+/// exits non-zero when any chain is incomplete — the CI traced-serve smoke
+/// gates on this.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let Some(path) = args.operand.as_deref().or_else(|| args.get("file")) else {
+        bail!("usage: evosort trace <trace.jsonl> [--check]");
+    };
+    let events = crate::obs::jsonl::read_events(std::path::Path::new(path))?;
+    let summary = crate::obs::report::summarize(&events);
+    print!("{}", crate::obs::report::render(&summary));
+    if args.has("check") {
+        anyhow::ensure!(
+            summary.problems.is_empty(),
+            "trace check failed: {} incomplete span chain(s) in {path}",
+            summary.problems.len()
+        );
+        anyhow::ensure!(
+            summary.traces > 0,
+            "trace check failed: {path} contains no job traces"
+        );
+        println!("trace check: ok ({} complete traces)", summary.traces);
+    }
+    Ok(())
 }
 
 /// `evosort info` — environment report.

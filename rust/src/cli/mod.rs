@@ -12,7 +12,10 @@
 //!   bench     per-kernel medians + parked-vs-spawn service throughput,
 //!             with a JSON report and regression gate (--json / --compare)
 //!   serve     run the sort service demo (concurrent jobs + metrics;
-//!             --shards N runs it cross-process)
+//!             --shards N runs it cross-process; --trace-log / --metrics-addr
+//!             turn on end-to-end tracing and the Prometheus scrape endpoint)
+//!   trace     summarize a trace JSONL file (per-phase p50/p99, slowest
+//!             spans; --check validates span-chain invariants)
 //!   info      platform, artifact and configuration report
 //! ```
 //!
@@ -27,11 +30,14 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-/// Parsed command line: one positional command plus `--key value` /
-/// `--switch` flags.
+/// Parsed command line: one positional command, an optional positional
+/// operand (`evosort trace out.jsonl`), plus `--key value` / `--switch`
+/// flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    /// The operand after the command, when given (`trace <file>`).
+    pub operand: Option<String>,
     flags: HashMap<String, String>,
     switches: Vec<String>,
 }
@@ -52,6 +58,8 @@ impl Args {
                 }
             } else if args.command.is_empty() {
                 args.command = tok.clone();
+            } else if args.operand.is_none() {
+                args.operand = Some(tok.clone());
             } else {
                 bail!("unexpected positional argument {tok:?}");
             }
@@ -163,6 +171,18 @@ COMMANDS
             reaches other hosts; they are redialed with backoff on failure)
             [--chaos-kill] (failover smoke: kill shard 0 mid-batch, require
             the batch to complete and the shard to be redialed)
+            [--trace] (end-to-end tracing: per-job span events on every
+            shard — submitted/queued/dispatched/kernel-phase/terminal —
+            merged into one fleet timeline at the router)
+            [--trace-log FILE] (append the merged timeline as
+            evosort-trace-v1 JSONL; implies --trace — inspect it with
+            `evosort trace FILE`)
+            [--metrics-addr HOST:PORT] (serve Prometheus text-format
+            metrics over HTTP for the run and self-scrape once at the end;
+            port 0 picks a free port)
+  trace     FILE [--check] (span-tree summary of a --trace-log file:
+            per-phase and end-to-end p50/p99, slowest traces, per-shard
+            event counts; --check exits non-zero on incomplete span chains)
   shard-worker
             --connect EP (dial a waiting router — how local shards start) |
             --listen EP (standalone: bind, print
@@ -171,6 +191,7 @@ COMMANDS
             --socket PATH (legacy unix --connect)
             [--workers N] [--sort-threads N] [--queue-capacity N]
             [--publish-ms MS] [--exec parked|spawn] [--autotune ...]
+            [--trace] (emit span events and stream them to the router)
   info      (platform, threads, artifact status)
 
 FLAGS common: --threads N (default: all cores), --seed S, --dist DIST
@@ -218,8 +239,11 @@ mod tests {
     }
 
     #[test]
-    fn rejects_extra_positional() {
-        let r = Args::parse(&["a".into(), "b".into()]);
+    fn one_operand_allowed_then_rejects() {
+        let a = parse(&["trace", "out.jsonl"]);
+        assert_eq!(a.command, "trace");
+        assert_eq!(a.operand.as_deref(), Some("out.jsonl"));
+        let r = Args::parse(&["a".into(), "b".into(), "c".into()]);
         assert!(r.is_err());
     }
 

@@ -115,12 +115,19 @@ impl Metrics {
         out
     }
 
-    /// `a / (a + b)` over two counters, `None` before any observation —
-    /// e.g. the tuning-cache hit rate from `params.cache_hit` /
-    /// `params.cache_miss` (the online tuner publishes it as the
-    /// `tuner.cache_hit_rate` gauge).
+    /// `a / (a + b)` over two counters — e.g. the tuning-cache hit rate
+    /// from `params.cache_hit` / `params.cache_miss` (the online tuner
+    /// publishes it as the `tuner.cache_hit_rate` gauge).
+    ///
+    /// Returns `None` when the denominator counter `b` has never been
+    /// registered (a ratio against a metric that does not exist is
+    /// meaningless, not 100%) and when no observation has landed yet
+    /// (`a + b == 0`).
     pub fn counter_ratio(&self, a: &str, b: &str) -> Option<f64> {
-        let (a, b) = (self.counter(a), self.counter(b));
+        let map = locked(&self.counters);
+        let b = map.get(b)?.load(Ordering::Relaxed);
+        let a = map.get(a).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0);
+        drop(map);
         if a + b == 0 {
             None
         } else {
@@ -206,6 +213,86 @@ impl Metrics {
         }
         out
     }
+
+    /// Render every series in the Prometheus text exposition format
+    /// (version 0.0.4), deterministically sorted by name.
+    ///
+    /// Naming: dotted internal names become underscore-separated with an
+    /// `evosort_` prefix (`jobs.completed` → `evosort_jobs_completed`,
+    /// `kernel.radix.scatter` → `evosort_kernel_radix_scatter`). Counters
+    /// and gauges export their value directly; latency series export
+    /// `_count`/`_sum`/`_min`/`_max`; sample windows export `quantile`
+    /// series (p50/p99 over the retained window) plus `_count`.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, value) in self.counters_snapshot() {
+            let name = prometheus_name(&name);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        let lats = locked(&self.latencies);
+        let mut series: Vec<(String, Welford)> =
+            lats.iter().map(|(k, w)| (k.clone(), *w)).collect();
+        drop(lats);
+        series.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, w) in series {
+            let name = prometheus_name(&name);
+            let _ = writeln!(out, "# TYPE {name} summary");
+            let _ = writeln!(out, "{name}_count {}", w.count());
+            let _ = writeln!(out, "{name}_sum {}", prometheus_f64(w.mean() * w.count() as f64));
+            let _ = writeln!(out, "{name}_min {}", prometheus_f64(w.min()));
+            let _ = writeln!(out, "{name}_max {}", prometheus_f64(w.max()));
+        }
+        let gauges = locked(&self.gauges);
+        let mut series: Vec<(String, f64)> = gauges.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        drop(gauges);
+        series.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, value) in series {
+            let name = prometheus_name(&name);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", prometheus_f64(value));
+        }
+        let samples = locked(&self.samples);
+        let mut series: Vec<(String, SampleWindow)> =
+            samples.iter().map(|(k, w)| (k.clone(), w.clone())).collect();
+        drop(samples);
+        series.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, w) in series {
+            let name = prometheus_name(&name);
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for (q, label) in [(50.0, "0.5"), (99.0, "0.99")] {
+                if let Some(v) = w.percentile(q) {
+                    let _ = writeln!(out, "{name}{{quantile=\"{label}\"}} {}", prometheus_f64(v));
+                }
+            }
+            let _ = writeln!(out, "{name}_count {}", w.total());
+        }
+        out
+    }
+}
+
+/// Map a dotted internal metric name onto the Prometheus charset:
+/// `evosort_` prefix, every non-`[a-zA-Z0-9_]` byte replaced with `_`.
+fn prometheus_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 8);
+    out.push_str("evosort_");
+    for ch in name.chars() {
+        out.push(if ch.is_ascii_alphanumeric() || ch == '_' { ch } else { '_' });
+    }
+    out
+}
+
+/// Prometheus float formatting: `f64` Display, except the non-finite
+/// spellings the exposition format defines.
+fn prometheus_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +317,95 @@ mod tests {
         m.add("miss", 1);
         assert_eq!(m.counter_ratio("hit", "miss"), Some(0.75));
         assert_eq!(m.counter_ratio("miss", "hit"), Some(0.25));
+    }
+
+    #[test]
+    fn counter_ratio_absent_denominator_is_none() {
+        // A ratio against a counter that was never registered is undefined,
+        // not 100%: `hit` alone must not make `hit/(hit+miss)` report 1.0.
+        let m = Metrics::new();
+        m.add("hit", 3);
+        assert_eq!(m.counter_ratio("hit", "miss"), None);
+        // The numerator may be absent as long as the denominator exists.
+        assert_eq!(m.counter_ratio("miss", "hit"), Some(0.0));
+    }
+
+    #[test]
+    fn counter_ratio_zero_denominator_is_none() {
+        // Registered-but-never-incremented counters (snapshot merges, or
+        // `add(name, 0)`) must behave like "no observations yet" too.
+        let m = Metrics::new();
+        m.add("hit", 0);
+        m.add("miss", 0);
+        assert_eq!(m.counter_ratio("hit", "miss"), None);
+        m.incr("hit");
+        assert_eq!(m.counter_ratio("hit", "miss"), Some(1.0));
+    }
+
+    #[test]
+    fn report_is_sorted_by_name() {
+        let m = Metrics::new();
+        m.incr("z.last");
+        m.incr("a.first");
+        m.incr("m.middle");
+        m.set_gauge("z.g", 1.0);
+        m.set_gauge("a.g", 2.0);
+        let r = m.report();
+        let a = r.find("counter a.first").unwrap();
+        let mid = r.find("counter m.middle").unwrap();
+        let z = r.find("counter z.last").unwrap();
+        assert!(a < mid && mid < z, "counters must render in name order:\n{r}");
+        assert!(r.find("gauge a.g").unwrap() < r.find("gauge z.g").unwrap());
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let m = Metrics::new();
+        m.incr("jobs.completed");
+        m.add("trace.dropped", 7);
+        m.set_gauge("router.queue.depth", 3.0);
+        m.observe("sort.latency", 0.25);
+        m.observe("sort.latency", 0.75);
+        for i in 1..=100 {
+            m.observe_sample("kernel.radix.scatter", i as f64);
+        }
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE evosort_jobs_completed counter"), "{text}");
+        assert!(text.contains("evosort_jobs_completed 1\n"), "{text}");
+        assert!(text.contains("evosort_trace_dropped 7\n"), "{text}");
+        assert!(text.contains("evosort_router_queue_depth 3\n"), "{text}");
+        assert!(text.contains("evosort_sort_latency_count 2\n"), "{text}");
+        assert!(text.contains("evosort_sort_latency_sum 1\n"), "{text}");
+        assert!(text.contains("evosort_sort_latency_min 0.25\n"), "{text}");
+        assert!(text.contains("evosort_sort_latency_max 0.75\n"), "{text}");
+        assert!(
+            text.contains("evosort_kernel_radix_scatter{quantile=\"0.5\"} 50\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("evosort_kernel_radix_scatter{quantile=\"0.99\"} 99\n"),
+            "{text}"
+        );
+        assert!(text.contains("evosort_kernel_radix_scatter_count 100\n"), "{text}");
+        // Deterministic: two renders of the same registry are identical.
+        assert_eq!(text, m.render_prometheus());
+        // Counters render sorted.
+        assert!(
+            text.find("evosort_jobs_completed 1").unwrap()
+                < text.find("evosort_trace_dropped 7").unwrap()
+        );
+    }
+
+    #[test]
+    fn prometheus_name_sanitization() {
+        assert_eq!(prometheus_name("jobs.completed"), "evosort_jobs_completed");
+        assert_eq!(prometheus_name("shard.0.local.jobs"), "evosort_shard_0_local_jobs");
+        assert_eq!(prometheus_name("weird-name space"), "evosort_weird_name_space");
+        assert_eq!(prometheus_f64(f64::NAN), "NaN");
+        assert_eq!(prometheus_f64(f64::INFINITY), "+Inf");
+        assert_eq!(prometheus_f64(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(prometheus_f64(0.25), "0.25");
+        assert_eq!(prometheus_f64(3.0), "3");
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub struct SortRequest {
     pub params: Option<SortParams>,
     /// Validate the output before returning (adds one parallel pass).
     pub validate: bool,
+    /// Externally assigned trace id. `None` means "trace under the id the
+    /// service assigns the job" — the shard workers set this to the router's
+    /// job id so one trace spans the whole fleet.
+    pub trace_id: Option<u64>,
 }
 
 impl SortRequest {
@@ -48,7 +52,13 @@ impl SortRequest {
 
     /// A request over an already-erased payload.
     pub fn from_payload(payload: SortPayload) -> SortRequest {
-        SortRequest { payload, dist: "uniform".into(), params: None, validate: true }
+        SortRequest {
+            payload,
+            dist: "uniform".into(),
+            params: None,
+            validate: true,
+            trace_id: None,
+        }
     }
 
     pub fn dtype(&self) -> Dtype {
@@ -84,6 +94,14 @@ impl SortRequest {
         self.validate = false;
         self
     }
+
+    /// Trace this job under an externally assigned id (builder style) —
+    /// the shard worker stamps the router's job id here so worker-side
+    /// events merge into the router's trace.
+    pub fn with_trace_id(mut self, trace_id: u64) -> SortRequest {
+        self.trace_id = Some(trace_id);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -113,5 +131,7 @@ mod tests {
         assert_eq!(req.dist, "uniform");
         assert!(req.params.is_none());
         assert!(req.validate);
+        assert!(req.trace_id.is_none());
+        assert_eq!(req.with_trace_id(9).trace_id, Some(9));
     }
 }

@@ -43,6 +43,7 @@ use crate::coordinator::ticket::{CompletionGuard, JobError, JobResult, JobSlot, 
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::data::validate::Verdict;
 use crate::exec::{ExecMode, Executor};
+use crate::obs::{EventKind, FailReason, Tracer};
 use crate::params::SortParams;
 use crate::sort::key::{self, Dtype, SortKey, SortPayload, SortScratch};
 use crate::sort::AdaptiveSorter;
@@ -376,12 +377,26 @@ fn with_worker_scratch<R>(f: impl FnOnce(&mut SortScratch) -> R) -> R {
     WORKER_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
 }
 
+/// The [`FailReason`] a trace records for a job that resolved to `err`.
+pub(crate) fn fail_reason(err: &JobError) -> FailReason {
+    match err {
+        JobError::Cancelled => FailReason::Cancelled,
+        JobError::WorkerLost => FailReason::WorkerLost,
+        JobError::Overloaded => FailReason::Overloaded,
+    }
+}
+
 /// Run one resolved job to completion for a concrete key dtype: optional
 /// multiset fingerprint, timed sort with worker-owned scratch, total-order
-/// validation, metrics accounting.
+/// validation, metrics accounting. With an enabled tracer the scratch's
+/// phase timer is armed for the sort and drained into `kernel.<k>.<phase>`
+/// samples plus per-trace `KernelPhase` events; disabled tracing leaves the
+/// timer brackets as dead branches on the hot path.
 fn run_typed<K: SortKey>(
     sorter: &AdaptiveSorter,
     metrics: &Metrics,
+    tracer: &Tracer,
+    trace_id: u64,
     id: u64,
     mut data: Vec<K>,
     validate: bool,
@@ -395,7 +410,15 @@ fn run_typed<K: SortKey>(
     let exec = sorter.executor();
     let fp = validate.then(|| key::fingerprint_keys_on(exec, &data, threads));
     let grows_before = scratch.grows();
+    let traced = tracer.is_enabled();
+    scratch.timer_mut().set_enabled(traced);
     let (_, secs) = timer::time(|| K::sort_with(sorter, &mut data, &params, scratch));
+    if traced {
+        for (phase, dur) in scratch.timer_mut().drain() {
+            tracer.emit(trace_id, EventKind::KernelPhase { phase, dur_secs: dur });
+            metrics.observe_sample(phase.metric_name(), dur);
+        }
+    }
     let grew = scratch.grows() - grows_before;
     let valid = match fp {
         Some(fp) => key::validate_keys_on(exec, fp, &data, threads) == Verdict::Valid,
@@ -421,17 +444,27 @@ fn run_typed<K: SortKey>(
 fn execute_request(
     sorter: &AdaptiveSorter,
     metrics: &Metrics,
+    tracer: &Tracer,
     id: u64,
     req: SortRequest,
     params: SortParams,
     scratch: &mut SortScratch,
 ) -> SortOutput {
+    let tid = req.trace_id.unwrap_or(id);
     let SortRequest { payload, validate, .. } = req;
     match payload {
-        SortPayload::I64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
-        SortPayload::I32(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
-        SortPayload::U64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
-        SortPayload::F64(v) => run_typed(sorter, metrics, id, v, validate, params, scratch),
+        SortPayload::I64(v) => {
+            run_typed(sorter, metrics, tracer, tid, id, v, validate, params, scratch)
+        }
+        SortPayload::I32(v) => {
+            run_typed(sorter, metrics, tracer, tid, id, v, validate, params, scratch)
+        }
+        SortPayload::U64(v) => {
+            run_typed(sorter, metrics, tracer, tid, id, v, validate, params, scratch)
+        }
+        SortPayload::F64(v) => {
+            run_typed(sorter, metrics, tracer, tid, id, v, validate, params, scratch)
+        }
     }
 }
 
@@ -511,6 +544,7 @@ pub struct SortService {
     model: SymbolicModel,
     metrics: Arc<Metrics>,
     tuner: Option<Arc<OnlineTuner>>,
+    tracer: Tracer,
     next_id: AtomicU64,
 }
 
@@ -565,11 +599,26 @@ impl SortService {
         Self::with_sorter(config, AdaptiveSorter::new(1))
     }
 
+    /// [`new`](Self::new) with end-to-end tracing attached: every job emits
+    /// `Submitted → Queued → Dispatched → KernelPhase* → Completed/Failed`
+    /// span events into the tracer's ring (non-blocking; ring-full drops are
+    /// counted, never stall a sort), and the tuner's publish/reject
+    /// decisions are traced too.
+    pub fn new_traced(config: ServiceConfig, tracer: Tracer) -> Self {
+        Self::with_sorter_traced(config, AdaptiveSorter::new(1), tracer)
+    }
+
     /// Build with a prepared sorter (e.g. XLA backend attached). The sorter's
     /// thread budget is replaced by `config.sort_threads`, and its executor
     /// by a service-owned pool sized to the deployment
     /// (`workers x sort_threads`) in the configured [`ExecMode`].
     pub fn with_sorter(config: ServiceConfig, sorter: AdaptiveSorter) -> Self {
+        Self::with_sorter_traced(config, sorter, Tracer::disabled())
+    }
+
+    /// [`with_sorter`](Self::with_sorter) plus a [`Tracer`] (see
+    /// [`new_traced`](Self::new_traced)).
+    pub fn with_sorter_traced(config: ServiceConfig, sorter: AdaptiveSorter, tracer: Tracer) -> Self {
         let width = (config.workers.max(1) * config.sort_threads.max(1)).max(1);
         let executor = Arc::new(match config.exec {
             ExecMode::Parked => Executor::new(width),
@@ -586,6 +635,7 @@ impl SortService {
                 Arc::clone(&metrics),
                 model,
                 config.sort_threads,
+                tracer.clone(),
             ))
         });
         SortService {
@@ -598,6 +648,7 @@ impl SortService {
             model,
             metrics,
             tuner,
+            tracer,
             next_id: AtomicU64::new(1),
         }
     }
@@ -613,6 +664,13 @@ impl SortService {
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
+    }
+
+    /// The service's tracer (disabled unless built via
+    /// [`new_traced`](Self::new_traced) /
+    /// [`with_sorter_traced`](Self::with_sorter_traced)).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Whether a background tuner is attached.
@@ -638,14 +696,31 @@ impl SortService {
     /// returned [`Ticket`].
     pub fn submit_request(&self, req: SortRequest) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let tid = req.trace_id.unwrap_or(id);
+        self.tracer.emit(tid, EventKind::Submitted);
         let slot = JobSlot::pending();
-        let guard = CompletionGuard::new(Arc::clone(&slot));
+        // The terminal observer fires on whichever resolution wins the slot
+        // — explicit completion, cancel, or the guard's WorkerLost drop —
+        // so every submitted job emits exactly one terminal trace event.
+        let guard = if self.tracer.is_enabled() {
+            let tracer = self.tracer.clone();
+            CompletionGuard::new(Arc::clone(&slot)).with_observer(Box::new(move |result| {
+                match result {
+                    Ok(out) => tracer.emit(tid, EventKind::Completed { secs: out.secs }),
+                    Err(e) => tracer.emit(tid, EventKind::Failed { reason: fail_reason(e) }),
+                }
+            }))
+        } else {
+            CompletionGuard::new(Arc::clone(&slot))
+        };
         let sorter = Arc::clone(&self.sorter);
         let metrics = Arc::clone(&self.metrics);
+        let tracer = self.tracer.clone();
         let Resolution { params, observe, .. } =
             resolve_request(&self.cache, &self.model, &self.metrics, self.tuner.as_deref(), &req);
         let tuner = self.tuner.clone();
         self.metrics.incr("jobs.submitted");
+        self.tracer.emit(tid, EventKind::Queued);
         // If the pool refuses (shutdown) the closure is dropped unexecuted
         // and the guard resolves the ticket to WorkerLost — same for a
         // worker panic mid-sort. `wait` can always return.
@@ -656,8 +731,9 @@ impl SortService {
                 guard.complete(Err(JobError::Cancelled));
                 return;
             }
+            tracer.emit(tid, EventKind::Dispatched { shard: tracer.shard() });
             let outcome = with_worker_scratch(|scratch| {
-                execute_request(&sorter, &metrics, id, req, params, scratch)
+                execute_request(&sorter, &metrics, &tracer, id, req, params, scratch)
             });
             if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                 tuner.observe(Observation {
@@ -699,7 +775,13 @@ impl SortService {
         let queue: VecDeque<(usize, u64, SortRequest)> = requests
             .into_iter()
             .enumerate()
-            .map(|(idx, req)| (idx, self.next_id.fetch_add(1, Ordering::Relaxed), req))
+            .map(|(idx, req)| {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let tid = req.trace_id.unwrap_or(id);
+                self.tracer.emit(tid, EventKind::Submitted);
+                self.tracer.emit(tid, EventKind::Queued);
+                (idx, id, req)
+            })
             .collect();
         let queue = Arc::new(Mutex::new(queue));
         let shards = self.pool.threads().min(total.max(1));
@@ -710,6 +792,7 @@ impl SortService {
             let model = self.model;
             let metrics = Arc::clone(&self.metrics);
             let tuner = self.tuner.clone();
+            let tracer = self.tracer.clone();
             let hits = Arc::clone(&cache_hits);
             let misses = Arc::clone(&cache_misses);
             let tx = tx.clone();
@@ -721,6 +804,8 @@ impl SortService {
                 with_worker_scratch(|scratch| loop {
                     let item = queue.lock().unwrap().pop_front();
                     let Some((idx, id, req)) = item else { break };
+                    let tid = req.trace_id.unwrap_or(id);
+                    tracer.emit(tid, EventKind::Dispatched { shard: tracer.shard() });
                     let has_override = req.params.is_some();
                     // Per-job panic isolation: a poisonous job resolves to
                     // an error; the shard keeps draining the queue.
@@ -735,7 +820,7 @@ impl SortService {
                             }
                         }
                         let outcome =
-                            execute_request(&sorter, &metrics, id, req, params, &mut *scratch);
+                            execute_request(&sorter, &metrics, &tracer, id, req, params, &mut *scratch);
                         metrics.observe_sample("batch.job.latency", outcome.secs);
                         if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                             tuner.observe(Observation {
@@ -748,9 +833,14 @@ impl SortService {
                         outcome
                     }));
                     let result: JobResult = match ran {
-                        Ok(outcome) => Ok(outcome),
+                        Ok(outcome) => {
+                            tracer.emit(tid, EventKind::Completed { secs: outcome.secs });
+                            Ok(outcome)
+                        }
                         Err(_) => {
                             metrics.incr("jobs.panicked");
+                            tracer
+                                .emit(tid, EventKind::Failed { reason: FailReason::WorkerLost });
                             Err(JobError::WorkerLost)
                         }
                     };
@@ -818,6 +908,58 @@ mod tests {
         assert!(out.secs > 0.0);
         assert_eq!(svc.metrics().counter("jobs.completed"), 1);
         assert_eq!(svc.metrics().counter("jobs.dtype.i64"), 1);
+    }
+
+    #[test]
+    fn traced_service_emits_complete_span_chains() {
+        use crate::obs::{report, Tracer};
+        let tracer = Tracer::enabled(1024, 0);
+        let svc = SortService::new_traced(
+            ServiceConfig {
+                workers: 2,
+                sort_threads: 2,
+                queue_capacity: 8,
+                autotune: None,
+                exec: Default::default(),
+            },
+            tracer,
+        );
+        let data = generate_i64(150_000, Distribution::Uniform, 21, 2);
+        let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
+        assert!(out.valid);
+        let mut events = Vec::new();
+        svc.tracer().drain_into(&mut events);
+        for kind in ["submitted", "queued", "dispatched", "completed"] {
+            assert!(events.iter().any(|e| e.kind.name() == kind), "{kind} missing: {events:?}");
+        }
+        // The sort reported at least one kernel phase, and the phase also
+        // landed in the metrics sample windows under kernel.<k>.<phase>.
+        let phase = events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::KernelPhase { phase, .. } => Some(phase),
+                _ => None,
+            })
+            .expect("traced sort reports kernel phases");
+        assert!(svc.metrics().percentile(phase.metric_name(), 50.0).is_some());
+        // Exactly one terminal event, and the chain checker is satisfied.
+        assert_eq!(events.iter().filter(|e| e.kind.is_terminal()).count(), 1);
+        assert_eq!(report::check(&events), Vec::<String>::new());
+        assert_eq!(svc.tracer().dropped(), 0);
+    }
+
+    #[test]
+    fn untraced_service_skips_phase_accounting() {
+        let svc = service();
+        let data = generate_i64(100_000, Distribution::Uniform, 22, 2);
+        let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
+        assert!(out.valid);
+        assert!(!svc.tracer().is_enabled());
+        let mut events = Vec::new();
+        assert_eq!(svc.tracer().drain_into(&mut events), 0);
+        for p in crate::obs::Phase::all() {
+            assert!(svc.metrics().percentile(p.metric_name(), 50.0).is_none());
+        }
     }
 
     #[test]

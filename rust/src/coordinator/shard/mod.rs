@@ -55,14 +55,20 @@ use crate::coordinator::request::SortRequest;
 use crate::coordinator::service::{BatchTicket, ServiceConfig, SortService};
 use crate::coordinator::ticket::Ticket;
 use crate::coordinator::tuning_cache::TuningCache;
+use crate::obs::{TraceHub, Tracer, DEFAULT_RING_CAPACITY};
 
 /// A service that is either in-process ([`SortService`]) or sharded across
 /// worker processes ([`ShardRouter`]) behind one submission surface.
 /// `Ticket`/`BatchTicket`/`ResultStream` semantics are identical either way.
 pub enum ShardedService {
     /// A single local shard: the plain in-process service, zero sharding
-    /// overhead.
-    Local(SortService),
+    /// overhead. The hub (present when the spec asked for tracing) drains
+    /// the service's span events into the timeline / JSONL sink, exactly
+    /// like the router-side hub does for a fleet.
+    Local {
+        svc: SortService,
+        trace_hub: Option<TraceHub>,
+    },
     /// Two or more fleet slots (local and/or remote): router + worker
     /// processes.
     Sharded(ShardRouter),
@@ -73,13 +79,31 @@ impl ShardedService {
     /// shard and no remotes, cross-process otherwise.
     pub fn spawn(spec: ShardSpec) -> Result<ShardedService> {
         if spec.shards <= 1 && spec.remotes.is_empty() {
-            Ok(ShardedService::Local(SortService::new(ServiceConfig {
-                workers: spec.workers_per_shard,
-                sort_threads: spec.sort_threads,
-                queue_capacity: spec.queue_capacity,
-                autotune: spec.autotune,
-                exec: spec.exec,
-            })))
+            let tracer = if spec.trace {
+                Tracer::enabled(DEFAULT_RING_CAPACITY, 0)
+            } else {
+                Tracer::disabled()
+            };
+            let svc = SortService::new_traced(
+                ServiceConfig {
+                    workers: spec.workers_per_shard,
+                    sort_threads: spec.sort_threads,
+                    queue_capacity: spec.queue_capacity,
+                    autotune: spec.autotune,
+                    exec: spec.exec,
+                },
+                tracer.clone(),
+            );
+            let trace_hub = if spec.trace {
+                Some(TraceHub::new(
+                    tracer,
+                    spec.trace_log.as_deref(),
+                    Some(Arc::clone(svc.metrics())),
+                )?)
+            } else {
+                None
+            };
+            Ok(ShardedService::Local { svc, trace_hub })
         } else {
             Ok(ShardedService::Sharded(ShardRouter::spawn(spec)?))
         }
@@ -105,28 +129,28 @@ impl ShardedService {
     /// Fleet slots serving traffic (1 for the in-process path).
     pub fn shards(&self) -> usize {
         match self {
-            ShardedService::Local(_) => 1,
+            ShardedService::Local { .. } => 1,
             ShardedService::Sharded(router) => router.shards(),
         }
     }
 
     pub fn submit_request(&self, req: SortRequest) -> Ticket {
         match self {
-            ShardedService::Local(svc) => svc.submit_request(req),
+            ShardedService::Local { svc, .. } => svc.submit_request(req),
             ShardedService::Sharded(router) => router.submit_request(req),
         }
     }
 
     pub fn submit_batch_requests(&self, requests: Vec<SortRequest>) -> BatchTicket {
         match self {
-            ShardedService::Local(svc) => svc.submit_batch_requests(requests),
+            ShardedService::Local { svc, .. } => svc.submit_batch_requests(requests),
             ShardedService::Sharded(router) => router.submit_batch_requests(requests),
         }
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         match self {
-            ShardedService::Local(svc) => svc.metrics(),
+            ShardedService::Local { svc, .. } => svc.metrics(),
             ShardedService::Sharded(router) => router.metrics(),
         }
     }
@@ -135,7 +159,7 @@ impl ShardedService {
     /// sharded).
     pub fn cache(&self) -> &Arc<TuningCache> {
         match self {
-            ShardedService::Local(svc) => svc.cache(),
+            ShardedService::Local { svc, .. } => svc.cache(),
             ShardedService::Sharded(router) => router.cache(),
         }
     }
@@ -143,8 +167,17 @@ impl ShardedService {
     /// Bounded drain: `true` once nothing is queued or in flight.
     pub fn drain_timeout(&self, timeout: Duration) -> bool {
         match self {
-            ShardedService::Local(svc) => svc.drain_timeout(timeout),
+            ShardedService::Local { svc, .. } => svc.drain_timeout(timeout),
             ShardedService::Sharded(router) => router.drain_timeout(timeout),
+        }
+    }
+
+    /// The trace hub, when the spec asked for tracing (`None` otherwise):
+    /// the merged fleet timeline plus the JSONL sink.
+    pub fn trace_hub(&self) -> Option<&TraceHub> {
+        match self {
+            ShardedService::Local { trace_hub, .. } => trace_hub.as_ref(),
+            ShardedService::Sharded(router) => router.trace_hub(),
         }
     }
 
@@ -152,7 +185,7 @@ impl ShardedService {
     /// through this).
     pub fn router(&self) -> Option<&ShardRouter> {
         match self {
-            ShardedService::Local(_) => None,
+            ShardedService::Local { .. } => None,
             ShardedService::Sharded(router) => Some(router),
         }
     }
@@ -260,6 +293,21 @@ impl ShardedServiceBuilder {
     /// The `evosort` binary to spawn for local shards.
     pub fn binary(mut self, path: std::path::PathBuf) -> Self {
         self.spec.binary = Some(path);
+        self
+    }
+
+    /// Turn on end-to-end tracing: per-job span events on every shard,
+    /// streamed to the router and merged into one fleet timeline.
+    pub fn trace(mut self, trace: bool) -> Self {
+        self.spec.trace = trace;
+        self
+    }
+
+    /// Append the merged trace timeline to a JSONL file (implies
+    /// [`trace`](Self::trace)).
+    pub fn trace_log(mut self, path: std::path::PathBuf) -> Self {
+        self.spec.trace = true;
+        self.spec.trace_log = Some(path);
         self
     }
 

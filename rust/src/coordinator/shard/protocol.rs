@@ -12,10 +12,13 @@
 //!
 //! Frames router → shard: [`Frame::Job`], [`Frame::CacheSync`],
 //! [`Frame::Shutdown`]. Frames shard → router: [`Frame::JobDone`],
-//! [`Frame::CachePublish`], [`Frame::Telemetry`]. Cache frames carry the
-//! versioned `# evosort-tuning-cache v2` text interchange format
-//! ([`TuningCache::to_text`](crate::coordinator::TuningCache::to_text)), so
-//! the wire and the disk speak the same dialect.
+//! [`Frame::CachePublish`], [`Frame::Telemetry`], [`Frame::Trace`]. Cache
+//! frames carry the versioned `# evosort-tuning-cache v2` text interchange
+//! format ([`TuningCache::to_text`](crate::coordinator::TuningCache::to_text)),
+//! so the wire and the disk speak the same dialect. Trace frames batch
+//! [`TraceEvent`]s drained from the worker's ring; the router merges them
+//! into its fleet-wide timeline, so one trace id spans every process that
+//! touched the job — identically over Unix sockets and TCP.
 
 use std::io::{Read, Write};
 
@@ -23,6 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::request::SortRequest;
 use crate::coordinator::ticket::{JobError, JobResult, SortOutput};
+use crate::obs::{EventKind, FailReason, Phase, TraceEvent};
 use crate::params::SortParams;
 use crate::sort::{Dtype, SortPayload};
 
@@ -44,6 +48,7 @@ const TAG_CACHE_PUBLISH: u8 = 3;
 const TAG_CACHE_SYNC: u8 = 4;
 const TAG_TELEMETRY: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_TRACE: u8 = 7;
 
 /// Cache accounting carried per completed job (the router mirrors the
 /// in-process `params.*` counters from these).
@@ -65,6 +70,9 @@ pub enum Frame {
     CacheSync { text: String },
     /// Shard → router: counter snapshot for per-shard aggregation.
     Telemetry { counters: Vec<(String, u64)> },
+    /// Shard → router: a batch of span events drained from the worker's
+    /// trace ring, for the router's fleet-wide timeline.
+    Trace { events: Vec<TraceEvent> },
     /// Router → shard: drain and exit.
     Shutdown,
 }
@@ -73,6 +81,10 @@ pub enum Frame {
 
 fn put_u8(buf: &mut Vec<u8>, x: u8) {
     buf.push(x);
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
 }
 
 fn put_u64(buf: &mut Vec<u8>, x: u64) {
@@ -100,6 +112,48 @@ fn dtype_code(d: Dtype) -> u8 {
         Dtype::I32 => 1,
         Dtype::U64 => 2,
         Dtype::F64 => 3,
+    }
+}
+
+/// Per-event wire layout inside a [`Frame::Trace`]: the fixed header
+/// (trace id, shard, timestamp, kind tag) plus the kind's own fields.
+/// Kind tags are wire-stable — append-only, like the frame tags.
+fn put_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
+    put_u64(buf, ev.trace_id);
+    put_u32(buf, ev.shard);
+    put_u64(buf, ev.ts_micros);
+    match &ev.kind {
+        EventKind::Submitted => put_u8(buf, 0),
+        EventKind::Queued => put_u8(buf, 1),
+        EventKind::Dispatched { shard } => {
+            put_u8(buf, 2);
+            put_u32(buf, *shard);
+        }
+        EventKind::KernelPhase { phase, dur_secs } => {
+            put_u8(buf, 3);
+            put_u8(buf, phase.wire());
+            put_f64(buf, *dur_secs);
+        }
+        EventKind::Completed { secs } => {
+            put_u8(buf, 4);
+            put_f64(buf, *secs);
+        }
+        EventKind::Failed { reason } => {
+            put_u8(buf, 5);
+            put_u8(buf, reason.wire());
+        }
+        EventKind::TunerPublished { fingerprint, params, fitness, improvement_pct } => {
+            put_u8(buf, 6);
+            put_str(buf, fingerprint);
+            put_str(buf, params);
+            put_f64(buf, *fitness);
+            put_f64(buf, *improvement_pct);
+        }
+        EventKind::TunerRejected { fingerprint, reason } => {
+            put_u8(buf, 7);
+            put_str(buf, fingerprint);
+            put_str(buf, reason);
+        }
     }
 }
 
@@ -158,6 +212,10 @@ impl<'a> Dec<'a> {
         Ok(self.take(1)?[0])
     }
 
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
@@ -178,6 +236,37 @@ impl<'a> Dec<'a> {
             *g = i64::from_le_bytes(self.take(8)?.try_into().unwrap());
         }
         Ok(SortParams::from_genes(&genes))
+    }
+
+    fn event(&mut self) -> Result<TraceEvent> {
+        let trace_id = self.u64()?;
+        let shard = self.u32()?;
+        let ts_micros = self.u64()?;
+        let kind = match self.u8()? {
+            0 => EventKind::Submitted,
+            1 => EventKind::Queued,
+            2 => EventKind::Dispatched { shard: self.u32()? },
+            3 => {
+                let phase = Phase::from_wire(self.u8()?).context("unknown kernel phase code")?;
+                EventKind::KernelPhase { phase, dur_secs: self.f64()? }
+            }
+            4 => EventKind::Completed { secs: self.f64()? },
+            5 => EventKind::Failed {
+                reason: FailReason::from_wire(self.u8()?).context("unknown fail-reason code")?,
+            },
+            6 => EventKind::TunerPublished {
+                fingerprint: self.str()?.into_boxed_str(),
+                params: self.str()?.into_boxed_str(),
+                fitness: self.f64()?,
+                improvement_pct: self.f64()?,
+            },
+            7 => EventKind::TunerRejected {
+                fingerprint: self.str()?.into_boxed_str(),
+                reason: self.str()?.into_boxed_str(),
+            },
+            other => bail!("unknown trace-event kind {other}"),
+        };
+        Ok(TraceEvent { trace_id, shard, ts_micros, kind })
     }
 
     fn payload(&mut self) -> Result<SortPayload> {
@@ -283,6 +372,16 @@ pub fn encode_telemetry(counters: &[(String, u64)]) -> Vec<u8> {
     frame(TAG_TELEMETRY, buf)
 }
 
+/// Encode a [`Frame::Trace`] (shard → router).
+pub fn encode_trace(events: &[TraceEvent]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + events.len() * 32);
+    put_u64(&mut buf, events.len() as u64);
+    for ev in events {
+        put_event(&mut buf, ev);
+    }
+    frame(TAG_TRACE, buf)
+}
+
 /// Encode a [`Frame::Shutdown`].
 pub fn encode_shutdown() -> Vec<u8> {
     frame(TAG_SHUTDOWN, Vec::new())
@@ -337,7 +436,9 @@ fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
             };
             let validate = d.u8()? != 0;
             let payload = d.payload()?;
-            Frame::Job { id, req: SortRequest { payload, dist, params, validate } }
+            // The wire does not carry a trace id: the worker stamps the
+            // frame's router-level `id` as the trace id at execution time.
+            Frame::Job { id, req: SortRequest { payload, dist, params, validate, trace_id: None } }
         }
         TAG_JOB_DONE => {
             let id = d.u64()?;
@@ -375,6 +476,20 @@ fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
                 counters.push((name, value));
             }
             Frame::Telemetry { counters }
+        }
+        TAG_TRACE => {
+            let n = d.u64()? as usize;
+            // Every event takes at least 21 bytes (header + kind tag), so a
+            // count past payload/21 is corruption — same reserve-bounding
+            // rationale as the telemetry arm.
+            if n > payload.len() / 21 {
+                bail!("trace-event count {n} exceeds frame size");
+            }
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(d.event()?);
+            }
+            Frame::Trace { events }
         }
         TAG_SHUTDOWN => Frame::Shutdown,
         other => bail!("unknown frame tag {other}"),
@@ -493,6 +608,93 @@ mod tests {
         };
         assert_eq!(back, counters);
         assert!(matches!(roundtrip(encode_shutdown()), Frame::Shutdown));
+    }
+
+    #[test]
+    fn trace_roundtrip_every_event_kind() {
+        let events = vec![
+            TraceEvent { trace_id: 1, shard: 0, ts_micros: 100, kind: EventKind::Submitted },
+            TraceEvent { trace_id: 1, shard: 0, ts_micros: 101, kind: EventKind::Queued },
+            TraceEvent {
+                trace_id: 1,
+                shard: u32::MAX,
+                ts_micros: 102,
+                kind: EventKind::Dispatched { shard: 3 },
+            },
+            TraceEvent {
+                trace_id: 1,
+                shard: 3,
+                ts_micros: 103,
+                kind: EventKind::KernelPhase { phase: Phase::RadixScatter, dur_secs: 0.25 },
+            },
+            TraceEvent {
+                trace_id: 1,
+                shard: 3,
+                ts_micros: 104,
+                kind: EventKind::Completed { secs: 0.5 },
+            },
+            TraceEvent {
+                trace_id: 2,
+                shard: 3,
+                ts_micros: 105,
+                kind: EventKind::Failed { reason: FailReason::Overloaded },
+            },
+            TraceEvent {
+                trace_id: 0,
+                shard: 3,
+                ts_micros: 106,
+                kind: EventKind::TunerPublished {
+                    fingerprint: "b10:mix:uniq:w8:pm".into(),
+                    params: "tile=4096".into(),
+                    fitness: 0.004,
+                    improvement_pct: 12.5,
+                },
+            },
+            TraceEvent {
+                trace_id: 0,
+                shard: 3,
+                ts_micros: 107,
+                kind: EventKind::TunerRejected {
+                    fingerprint: "b10:mix:uniq:w8:pm".into(),
+                    reason: "below_margin".into(),
+                },
+            },
+        ];
+        let Frame::Trace { events: back } = roundtrip(encode_trace(&events)) else {
+            panic!("expected Trace frame");
+        };
+        assert_eq!(back, events);
+        // Empty batches are legal (idle ticker flush).
+        let Frame::Trace { events: back } = roundtrip(encode_trace(&[])) else {
+            panic!("expected Trace frame");
+        };
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn corrupt_trace_frames_error() {
+        // Hostile event count.
+        let mut inner = Vec::new();
+        put_u64(&mut inner, u64::MAX);
+        assert!(read_frame(&mut std::io::Cursor::new(frame(TAG_TRACE, inner))).is_err());
+        // Unknown kind tag.
+        let mut inner = Vec::new();
+        put_u64(&mut inner, 1);
+        put_u64(&mut inner, 1); // trace id
+        put_u32(&mut inner, 0); // shard
+        put_u64(&mut inner, 5); // ts
+        put_u8(&mut inner, 99); // bogus kind
+        assert!(read_frame(&mut std::io::Cursor::new(frame(TAG_TRACE, inner))).is_err());
+        // Unknown phase code inside a kernel-phase event.
+        let mut inner = Vec::new();
+        put_u64(&mut inner, 1);
+        put_u64(&mut inner, 1);
+        put_u32(&mut inner, 0);
+        put_u64(&mut inner, 5);
+        put_u8(&mut inner, 3); // KernelPhase
+        put_u8(&mut inner, 200); // bogus phase
+        put_f64(&mut inner, 0.1);
+        assert!(read_frame(&mut std::io::Cursor::new(frame(TAG_TRACE, inner))).is_err());
     }
 
     #[test]

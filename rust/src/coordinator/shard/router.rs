@@ -56,11 +56,12 @@ use crate::autotune::AutotunePolicy;
 use crate::coordinator::endpoint::{Endpoint, TransportKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::SortRequest;
-use crate::coordinator::service::{self, BatchTicket};
+use crate::coordinator::service::{self, fail_reason, BatchTicket};
 use crate::coordinator::shard::protocol::{self, Frame};
 use crate::coordinator::shard::transport::{Listener, Stream};
 use crate::coordinator::ticket::{JobError, JobResult, JobSlot, Ticket};
 use crate::coordinator::tuning_cache::TuningCache;
+use crate::obs::{EventKind, TraceHub, Tracer, DEFAULT_RING_CAPACITY, ROUTER_SHARD};
 
 /// How long a remote dial (initial or redial) keeps retrying before the
 /// shard is declared unreachable for this attempt.
@@ -123,6 +124,15 @@ pub struct ShardSpec {
     /// First backoff step when redialing a remote shard (doubles per
     /// attempt, capped at 1s, within an 8s per-death deadline).
     pub redial_backoff: Duration,
+    /// End-to-end tracing: the router records span events under
+    /// [`ROUTER_SHARD`], workers are spawned with `--trace` and stream
+    /// their events back in [`Frame::Trace`] batches, and everything merges
+    /// into one fleet-wide timeline keyed by `(shard, trace id)` —
+    /// identical over Unix sockets and TCP.
+    pub trace: bool,
+    /// With [`trace`](Self::trace), also append every event to this
+    /// schema-versioned JSONL file (`evosort trace <file>` renders it).
+    pub trace_log: Option<PathBuf>,
 }
 
 impl Default for ShardSpec {
@@ -143,6 +153,8 @@ impl Default for ShardSpec {
             remotes: Vec::new(),
             router_queue_capacity: 0,
             redial_backoff: Duration::from_millis(50),
+            trace: false,
+            trace_log: None,
         }
     }
 }
@@ -282,6 +294,12 @@ struct RouterInner {
     idle: Condvar,
     metrics: Arc<Metrics>,
     cache: Arc<TuningCache>,
+    /// The router's own span events (shard id [`ROUTER_SHARD`]); disabled
+    /// unless [`ShardSpec::trace`] asked for tracing.
+    tracer: Tracer,
+    /// Fleet-wide timeline + JSONL sink; `Some` iff tracing is on. Worker
+    /// [`Frame::Trace`] batches are ingested here by the reader threads.
+    trace_hub: Option<TraceHub>,
     next_id: AtomicU64,
     shutdown: AtomicBool,
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
@@ -336,6 +354,20 @@ impl ShardRouter {
         } else {
             spec.router_queue_capacity
         };
+        let metrics = Arc::new(Metrics::new());
+        let tracer = if spec.trace {
+            Tracer::enabled(DEFAULT_RING_CAPACITY, ROUTER_SHARD)
+        } else {
+            Tracer::disabled()
+        };
+        let trace_hub = if spec.trace {
+            Some(
+                TraceHub::new(tracer.clone(), spec.trace_log.as_deref(), Some(Arc::clone(&metrics)))
+                    .context("starting the trace hub")?,
+            )
+        } else {
+            None
+        };
         let inner = Arc::new(RouterInner {
             spec,
             origins,
@@ -358,8 +390,10 @@ impl ShardRouter {
             }),
             work_ready: Condvar::new(),
             idle: Condvar::new(),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             cache: Arc::new(TuningCache::new()),
+            tracer,
+            trace_hub,
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             reader_handles: Mutex::new(Vec::new()),
@@ -426,6 +460,11 @@ impl ShardRouter {
         &self.inner.cache
     }
 
+    /// The fleet-wide trace timeline (`Some` iff [`ShardSpec::trace`]).
+    pub fn trace_hub(&self) -> Option<&TraceHub> {
+        self.inner.trace_hub.as_ref()
+    }
+
     /// Submit one request; the returned [`Ticket`] behaves exactly as the
     /// in-process service's (poll / park / cancel-before-dispatch; a dead
     /// shard resolves it to `Err(WorkerLost)` instead of hanging; a
@@ -441,6 +480,10 @@ impl ShardRouter {
     pub fn submit_request_as(&self, client: u64, req: SortRequest) -> Ticket {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         self.inner.metrics.incr("jobs.submitted");
+        // The router traces every job under its router-level id — the same
+        // id the worker stamps on its own events, so the two streams merge
+        // into one trace.
+        self.inner.tracer.emit(id, EventKind::Submitted);
         let slot = JobSlot::pending();
         self.inner.enqueue(RoutedJob {
             id,
@@ -476,11 +519,12 @@ impl ShardRouter {
         let hits = Arc::new(AtomicU64::new(0));
         let misses = Arc::new(AtomicU64::new(0));
         let shutting_down = self.inner.shutdown.load(Ordering::SeqCst);
-        let mut rejected: Vec<Completer> = Vec::new();
+        let mut rejected: Vec<(u64, Completer)> = Vec::new();
         {
             let mut st = self.inner.state.lock().unwrap();
             for (idx, req) in requests.into_iter().enumerate() {
                 let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+                self.inner.tracer.emit(id, EventKind::Submitted);
                 let completer = Completer::Batch {
                     tx: tx.clone(),
                     idx,
@@ -488,18 +532,20 @@ impl ShardRouter {
                     misses: Arc::clone(&misses),
                 };
                 if shutting_down {
-                    rejected.push(completer);
+                    rejected.push((id, completer));
                 } else if st.queue.len() >= self.inner.admit_capacity {
                     self.inner.metrics.incr("shards.shed");
-                    rejected.push(completer);
+                    rejected.push((id, completer));
                 } else {
+                    self.inner.tracer.emit(id, EventKind::Queued);
                     st.queue.push(RoutedJob { id, client, req, completer });
                 }
             }
             self.inner.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
         }
-        for completer in rejected {
+        for (id, completer) in rejected {
             let err = if shutting_down { JobError::WorkerLost } else { JobError::Overloaded };
+            self.inner.tracer.emit(id, EventKind::Failed { reason: fail_reason(&err) });
             self.inner.complete(completer, Err(err), protocol::CACHE_FLAG_NONE);
         }
         self.inner.work_ready.notify_all();
@@ -569,14 +615,14 @@ impl Drop for ShardRouter {
         let (queued, pending) = {
             let mut st = inner.state.lock().unwrap();
             let queued: Vec<RoutedJob> = st.queue.drain_all();
-            let pending: Vec<Completer> = st.pending.drain().map(|(_, c)| c).collect();
+            let pending: Vec<(u64, Completer)> = st.pending.drain().collect();
             (queued, pending)
         };
         for job in queued {
-            inner.fail_job(job.completer);
+            inner.fail_job(job.id, job.completer);
         }
-        for completer in pending {
-            inner.fail_job(completer);
+        for (id, completer) in pending {
+            inner.fail_job(id, completer);
         }
         inner.idle.notify_all();
         // Ask every live local shard to exit; *detach* remote shards with a
@@ -749,6 +795,9 @@ impl RouterInner {
             .arg("--exec")
             .arg(self.spec.exec.name())
             .stdin(Stdio::null());
+        if self.spec.trace {
+            cmd.arg("--trace");
+        }
         if let Some(policy) = &self.spec.autotune {
             cmd.arg("--min-obs")
                 .arg(policy.min_observations.to_string())
@@ -825,7 +874,7 @@ impl RouterInner {
     /// Admit one job or shed it (`Err(Overloaded)`) if the queue is full.
     fn enqueue(&self, job: RoutedJob) {
         if self.shutdown.load(Ordering::SeqCst) {
-            self.fail_job(job.completer);
+            self.fail_job(job.id, job.completer);
             return;
         }
         let rejected = {
@@ -833,6 +882,7 @@ impl RouterInner {
             if st.queue.len() >= self.admit_capacity {
                 Some(job)
             } else {
+                self.tracer.emit(job.id, EventKind::Queued);
                 st.queue.push(job);
                 self.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
                 None
@@ -846,6 +896,8 @@ impl RouterInner {
                     self.admit_capacity,
                     job.id
                 );
+                self.tracer
+                    .emit(job.id, EventKind::Failed { reason: fail_reason(&JobError::Overloaded) });
                 self.complete(job.completer, Err(JobError::Overloaded), protocol::CACHE_FLAG_NONE);
             }
             None => self.work_ready.notify_all(),
@@ -873,6 +925,12 @@ impl RouterInner {
                             // `cancel() == true ⇒ Err(Cancelled)` guarantee.
                             if let Completer::Slot(slot) = &completer {
                                 if slot.start() {
+                                    inner.tracer.emit(
+                                        id,
+                                        EventKind::Failed {
+                                            reason: fail_reason(&JobError::Cancelled),
+                                        },
+                                    );
                                     slot.complete(Err(JobError::Cancelled));
                                     if st.queue.is_empty() && st.pending.is_empty() {
                                         inner.idle.notify_all();
@@ -902,7 +960,7 @@ impl RouterInner {
                             let idle_now = st.pending.is_empty();
                             drop(st);
                             for job in dead {
-                                inner.fail_job(job.completer);
+                                inner.fail_job(job.id, job.completer);
                             }
                             if idle_now {
                                 inner.idle.notify_all();
@@ -932,7 +990,7 @@ impl RouterInner {
                     bytes.len()
                 );
                 if let Some(completer) = completer {
-                    inner.fail_job(completer);
+                    inner.fail_job(id, completer);
                 }
                 if idle_now {
                     inner.idle.notify_all();
@@ -944,6 +1002,7 @@ impl RouterInner {
                 protocol::write_frame(&mut *w, &bytes).is_ok()
             };
             if sent {
+                inner.tracer.emit(id, EventKind::Dispatched { shard: idx as u32 });
                 inner.metrics.incr(&format!("shard.{idx}.jobs.routed"));
                 inner.metrics.incr(&format!("client.{client}.dispatched"));
             } else {
@@ -966,6 +1025,14 @@ impl RouterInner {
             }
             Frame::CachePublish { text } => self.on_cache_publish(idx, &text),
             Frame::Telemetry { counters } => self.on_telemetry(idx, counters),
+            Frame::Trace { events } => {
+                // Worker-side span events stream into the fleet timeline;
+                // without a hub (tracing off but a worker sent them anyway)
+                // they are dropped.
+                if let Some(hub) = &self.trace_hub {
+                    hub.ingest(&events);
+                }
+            }
             _ => {} // frames for the other direction: ignore
         }
     }
@@ -987,6 +1054,10 @@ impl RouterInner {
         let Some(completer) = completer else {
             return; // late reply for a job the death handler already failed
         };
+        match &result {
+            Ok(out) => self.tracer.emit(id, EventKind::Completed { secs: out.secs }),
+            Err(e) => self.tracer.emit(id, EventKind::Failed { reason: fail_reason(e) }),
+        }
         // Mirror the in-process service's per-job accounting at the
         // service level (each shard also keeps its own local metrics).
         match &result {
@@ -1074,7 +1145,7 @@ impl RouterInner {
     /// reroutes them to the survivors.
     fn on_shard_down(inner: &Arc<RouterInner>, idx: usize, generation: u64) {
         let shutting_down = inner.shutdown.load(Ordering::SeqCst);
-        let mut lost: Vec<Completer> = Vec::new();
+        let mut lost: Vec<(u64, Completer)> = Vec::new();
         let mut revive = false;
         {
             let mut st = inner.state.lock().unwrap();
@@ -1098,7 +1169,7 @@ impl RouterInner {
             let ids: Vec<u64> = sh.inflight.drain().collect();
             for id in &ids {
                 if let Some(completer) = st.pending.remove(id) {
-                    lost.push(completer);
+                    lost.push((*id, completer));
                 }
             }
             if !shutting_down && st.shards[idx].redials < inner.spec.max_redials_per_shard {
@@ -1109,8 +1180,8 @@ impl RouterInner {
                 inner.idle.notify_all();
             }
         }
-        for completer in lost {
-            inner.fail_job(completer);
+        for (id, completer) in lost {
+            inner.fail_job(id, completer);
         }
         if !shutting_down {
             inner.metrics.incr("shard.deaths");
@@ -1145,8 +1216,12 @@ impl RouterInner {
     }
 
     /// Resolve a job the transport lost: `Err(WorkerLost)`, never a hang.
-    fn fail_job(&self, completer: Completer) {
+    fn fail_job(&self, id: u64, completer: Completer) {
         self.metrics.incr("shard.jobs.lost");
+        self.tracer.emit(
+            id,
+            EventKind::Failed { reason: fail_reason(&JobError::WorkerLost) },
+        );
         self.complete(completer, Err(JobError::WorkerLost), protocol::CACHE_FLAG_NONE);
     }
 

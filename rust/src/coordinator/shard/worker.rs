@@ -43,6 +43,7 @@ use crate::coordinator::shard::protocol::{self, Frame};
 use crate::coordinator::shard::transport::{Listener, Stream};
 use crate::coordinator::ticket::Ticket;
 use crate::coordinator::tuning_cache::TuningCache;
+use crate::obs::{Tracer, DEFAULT_RING_CAPACITY};
 
 /// Everything a shard-worker process needs besides its socket.
 #[derive(Clone)]
@@ -53,6 +54,10 @@ pub struct ShardWorkerConfig {
     pub service: ServiceConfig,
     /// How often the ticker checks for cache changes and ships telemetry.
     pub publish_interval: Duration,
+    /// Emit per-job trace events and stream them back to the router
+    /// ([`Frame::Trace`] batches on the telemetry tick). Off by default:
+    /// a disabled tracer is a branch on the sort hot path, not a call.
+    pub trace: bool,
 }
 
 /// Why [`run_on_stream`] returned: an explicit [`Frame::Shutdown`] from the
@@ -104,9 +109,14 @@ pub fn run_listening(endpoint: &Endpoint, config: ShardWorkerConfig) -> Result<(
 
 /// Serve an already-connected router stream (see the module docs).
 pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitReason> {
-    let ShardWorkerConfig { shard_id, service: svc_config, publish_interval } = config;
+    let ShardWorkerConfig { shard_id, service: svc_config, publish_interval, trace } = config;
     let collector_count = svc_config.workers.max(1);
-    let svc = SortService::new(svc_config);
+    let tracer = if trace {
+        Tracer::enabled(DEFAULT_RING_CAPACITY, shard_id as u32)
+    } else {
+        Tracer::disabled()
+    };
+    let svc = SortService::new_traced(svc_config, tracer.clone());
     let cache = Arc::clone(svc.cache());
     let metrics = Arc::clone(svc.metrics());
     let writer = Arc::new(Mutex::new(stream.try_clone().context("cloning shard socket")?));
@@ -154,10 +164,12 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
         let cache = Arc::clone(&cache);
         let metrics = Arc::clone(&metrics);
         let writer = Arc::clone(&writer);
+        let tracer = tracer.clone();
         std::thread::Builder::new()
             .name(format!("evosort-shard{shard_id}-ticker"))
             .spawn(move || {
                 let mut last_local = cache.version();
+                let mut events = Vec::new();
                 'ticks: loop {
                     // Sleep in slices so shutdown stays snappy.
                     let mut slept = Duration::ZERO;
@@ -177,6 +189,25 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
                         let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
                         if protocol::write_frame(&mut *w, &bytes).is_err() {
                             break;
+                        }
+                    }
+                    // Trace events ride the same tick: drain the ring into a
+                    // Frame::Trace batch so the router can merge this shard's
+                    // stream into the fleet timeline. Ring-full drops surface
+                    // as the trace.dropped counter in the telemetry frame.
+                    if tracer.is_enabled() {
+                        let dropped = tracer.take_dropped();
+                        if dropped > 0 {
+                            metrics.add("trace.dropped", dropped);
+                        }
+                        events.clear();
+                        tracer.drain_into(&mut events);
+                        if !events.is_empty() {
+                            let bytes = protocol::encode_trace(&events);
+                            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                            if protocol::write_frame(&mut *w, &bytes).is_err() {
+                                break;
+                            }
                         }
                     }
                     let mut counters = metrics.counters_snapshot();
@@ -214,7 +245,10 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
                         protocol::CACHE_FLAG_MISS
                     }
                 };
-                let ticket = svc.submit_request(req);
+                // Stamp the router's frame id as the trace id so this
+                // shard's span events merge with the router's under one
+                // timeline key.
+                let ticket = svc.submit_request(req.with_trace_id(id));
                 if ticket_tx.send((id, cache_flag, ticket)).is_err() {
                     break ExitReason::Disconnected; // every collector died (router gone)
                 }
@@ -243,6 +277,18 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
     }
     stop.store(true, Ordering::Relaxed);
     let _ = ticker.join();
+    // Final trace drain: terminal events for the last tickets resolved after
+    // the ticker's last tick would otherwise strand in the ring. Best-effort
+    // — on Disconnected the write just fails.
+    if tracer.is_enabled() {
+        let mut events = Vec::new();
+        tracer.drain_into(&mut events);
+        if !events.is_empty() {
+            let bytes = protocol::encode_trace(&events);
+            let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = protocol::write_frame(&mut *w, &bytes);
+        }
+    }
     drop(svc);
     Ok(reason)
 }
@@ -270,6 +316,7 @@ mod tests {
                 exec: Default::default(),
             },
             publish_interval: Duration::from_millis(30),
+            trace: false,
         }
     }
 
@@ -327,6 +374,54 @@ mod tests {
         write_frame(&mut writer, &encode_shutdown()).unwrap();
         let reason = worker.join().expect("worker thread").expect("worker run");
         assert_eq!(reason, ExitReason::Shutdown, "an explicit Shutdown frame is deliberate");
+    }
+
+    #[test]
+    fn traced_worker_streams_span_events_stamped_with_the_frame_id() {
+        let (router_side, worker_side) = UnixStream::pair().expect("socketpair");
+        let mut config = quick_config();
+        config.shard_id = 3;
+        config.trace = true;
+        let worker = std::thread::spawn(move || run_on_stream(Stream::Unix(worker_side), config));
+        let mut reader = router_side.try_clone().expect("clone");
+        let mut writer = router_side;
+
+        let data = generate_i64(50_000, Distribution::Uniform, 11, 2);
+        write_frame(&mut writer, &encode_job(42, &SortRequest::new(data))).unwrap();
+
+        // Trace batches ride the telemetry tick; collect until the span for
+        // frame id 42 is complete (Submitted .. Completed).
+        let mut events = Vec::new();
+        let mut done = false;
+        while !(done
+            && events.iter().any(|e: &crate::obs::TraceEvent| {
+                e.trace_id == 42 && e.kind.name() == "completed"
+            }))
+        {
+            match read_frame(&mut reader).expect("frame") {
+                Frame::JobDone { id, result, .. } => {
+                    assert_eq!(id, 42);
+                    result.expect("job ok");
+                    done = true;
+                }
+                Frame::Trace { events: batch } => events.extend(batch),
+                _ => {}
+            }
+        }
+        for name in ["submitted", "queued", "dispatched", "kernel_phase", "completed"] {
+            assert!(
+                events.iter().any(|e| e.trace_id == 42 && e.kind.name() == name),
+                "span chain for frame 42 is missing a {name} event"
+            );
+        }
+        assert!(
+            events.iter().all(|e| e.shard == 3),
+            "every event must carry the worker's shard id"
+        );
+
+        write_frame(&mut writer, &encode_shutdown()).unwrap();
+        let reason = worker.join().expect("worker thread").expect("worker run");
+        assert_eq!(reason, ExitReason::Shutdown);
     }
 
     #[test]

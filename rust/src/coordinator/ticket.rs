@@ -122,11 +122,20 @@ impl JobSlot {
     /// `Drop` after an explicit completion raced with nothing — defensive)
     /// are ignored.
     pub(crate) fn complete(&self, result: JobResult) {
+        self.complete_with(result, |_| {});
+    }
+
+    /// [`complete`](JobSlot::complete), invoking `observe` on the result
+    /// **only when this resolution wins** the slot — the exactly-once seam
+    /// terminal trace events hang off. `observe` runs under the slot lock;
+    /// observers must be cheap and non-blocking (the tracer's ring push is).
+    pub(crate) fn complete_with<F: FnOnce(&JobResult)>(&self, result: JobResult, observe: F) {
         let mut state = self.state.lock().unwrap();
         if matches!(
             *state,
             SlotState::Pending | SlotState::CancelRequested | SlotState::Running
         ) {
+            observe(&result);
             *state = SlotState::Done(result);
             self.cv.notify_all();
         }
@@ -220,14 +229,28 @@ impl JobSlot {
 /// [`JobError::WorkerLost`] if dropped before an explicit
 /// [`complete`](CompletionGuard::complete) — including a drop *during panic
 /// unwind* or a drop of a never-run closure on a shut-down pool.
+/// Observer fired exactly once with the job's winning terminal result —
+/// every path through a [`CompletionGuard`] (explicit completion, panic
+/// unwind, dropped-unrun closure) funnels through it, which is what makes
+/// "exactly one terminal trace event per job" an invariant rather than a
+/// convention.
+pub(crate) type TerminalObserver = Box<dyn FnOnce(&JobResult) + Send>;
+
 pub(crate) struct CompletionGuard {
     slot: Arc<JobSlot>,
     done: bool,
+    observer: Option<TerminalObserver>,
 }
 
 impl CompletionGuard {
     pub(crate) fn new(slot: Arc<JobSlot>) -> CompletionGuard {
-        CompletionGuard { slot, done: false }
+        CompletionGuard { slot, done: false, observer: None }
+    }
+
+    /// Attach the terminal observer (builder style).
+    pub(crate) fn with_observer(mut self, observer: TerminalObserver) -> CompletionGuard {
+        self.observer = Some(observer);
+        self
     }
 
     /// See [`JobSlot::start`]: call at dequeue; `true` means the job was
@@ -237,7 +260,10 @@ impl CompletionGuard {
     }
 
     pub(crate) fn complete(mut self, result: JobResult) {
-        self.slot.complete(result);
+        match self.observer.take() {
+            Some(obs) => self.slot.complete_with(result, obs),
+            None => self.slot.complete(result),
+        }
         self.done = true;
     }
 }
@@ -245,7 +271,10 @@ impl CompletionGuard {
 impl Drop for CompletionGuard {
     fn drop(&mut self) {
         if !self.done {
-            self.slot.complete(Err(JobError::WorkerLost));
+            match self.observer.take() {
+                Some(obs) => self.slot.complete_with(Err(JobError::WorkerLost), obs),
+                None => self.slot.complete(Err(JobError::WorkerLost)),
+            }
         }
     }
 }
@@ -434,6 +463,53 @@ mod tests {
         slot.complete(Ok(output(6)));
         assert!(!ticket.cancel(), "completed jobs cannot be cancelled");
         assert!(ticket.wait().is_ok(), "result stays retrievable");
+    }
+
+    #[test]
+    fn terminal_observer_fires_exactly_once_per_path() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        // Explicit completion path.
+        let fired = Arc::new(AtomicU32::new(0));
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(10, Arc::clone(&slot));
+        let f = Arc::clone(&fired);
+        let guard = CompletionGuard::new(slot).with_observer(Box::new(move |r| {
+            assert!(r.is_ok());
+            f.fetch_add(1, Ordering::SeqCst);
+        }));
+        guard.complete(Ok(output(10)));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert!(ticket.wait().is_ok());
+
+        // Drop path (worker lost) fires with the WorkerLost result.
+        let fired = Arc::new(AtomicU32::new(0));
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(11, Arc::clone(&slot));
+        let f = Arc::clone(&fired);
+        drop(CompletionGuard::new(slot).with_observer(Box::new(move |r| {
+            assert_eq!(*r, Err(JobError::WorkerLost));
+            f.fetch_add(1, Ordering::SeqCst);
+        })));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert_eq!(ticket.wait().unwrap_err(), JobError::WorkerLost);
+    }
+
+    #[test]
+    fn terminal_observer_skipped_when_resolution_lost() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        // Someone else resolved the slot first: the guard's observer must
+        // NOT fire — its resolution did not win, so no second terminal
+        // event may be recorded.
+        let fired = Arc::new(AtomicU32::new(0));
+        let slot = JobSlot::pending();
+        let ticket = Ticket::new(12, Arc::clone(&slot));
+        slot.complete(Err(JobError::Overloaded));
+        let f = Arc::clone(&fired);
+        drop(CompletionGuard::new(slot).with_observer(Box::new(move |_| {
+            f.fetch_add(1, Ordering::SeqCst);
+        })));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        assert_eq!(ticket.wait().unwrap_err(), JobError::Overloaded);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod ga;
+pub mod obs;
 pub mod params;
 pub mod rng;
 pub mod runtime;

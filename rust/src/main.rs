@@ -20,6 +20,7 @@ fn main() {
         "repro" => commands::cmd_repro(&args),
         "bench" => commands::cmd_bench(&args),
         "serve" => commands::cmd_serve(&args),
+        "trace" => commands::cmd_trace(&args),
         // Internal: the child-process side of `serve --shards N` (spawned by
         // the shard router, not meant for direct use).
         "shard-worker" => commands::cmd_shard_worker(&args),

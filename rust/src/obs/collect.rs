@@ -1,0 +1,294 @@
+//! The drain side of tracing: one [`TraceHub`] per deployment collects
+//! events from the local ring **and** from remote shards into one ordered
+//! timeline, writing through to the JSONL log.
+//!
+//! A background drainer thread empties the [`Tracer`]'s ring every few
+//! milliseconds (the hot path only ever pushes), appends each batch to the
+//! trace log, folds it into a bounded in-memory timeline keyed by
+//! `(shard, trace id)`, and publishes the ring's drop counter as the
+//! `trace.dropped` metric — so the sort path never touches the metrics
+//! mutex or the file. The shard router feeds event batches streamed from
+//! worker processes into the same hub via [`ingest`](TraceHub::ingest);
+//! local and remote events land in one log and one timeline, identically
+//! over unix and TCP transports.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::event::TraceEvent;
+use super::jsonl::TraceLog;
+use super::Tracer;
+use crate::coordinator::metrics::Metrics;
+
+/// Timeline retention bound: the hub keeps the most recent traces' events
+/// in memory (the JSONL log keeps everything). Oldest-keyed traces are
+/// evicted past this many distinct `(shard, trace)` keys.
+const MAX_TIMELINE_KEYS: usize = 4096;
+
+/// Drainer cadence.
+const DRAIN_INTERVAL: Duration = Duration::from_millis(10);
+
+struct HubState {
+    log: Option<TraceLog>,
+    /// Ordered timeline: events per `(shard, trace id)`, in arrival order
+    /// (sorted by timestamp on read).
+    timeline: BTreeMap<(u32, u64), Vec<TraceEvent>>,
+    /// Insertion order of timeline keys, for bounded eviction.
+    key_order: Vec<(u32, u64)>,
+}
+
+struct HubInner {
+    tracer: Tracer,
+    metrics: Option<Arc<Metrics>>,
+    state: Mutex<HubState>,
+    stop: AtomicBool,
+    /// Ring drops folded in by the drainer (mirrors the `trace.dropped`
+    /// counter for hubs without a metrics registry).
+    dropped: AtomicU64,
+}
+
+impl HubInner {
+    /// One drain cycle: move ring contents into the sinks, publish drops.
+    fn drain_once(&self, scratch: &mut Vec<TraceEvent>) {
+        scratch.clear();
+        self.tracer.drain_into(scratch);
+        let dropped = self.tracer.take_dropped();
+        if dropped > 0 {
+            self.dropped.fetch_add(dropped, Ordering::Relaxed);
+            if let Some(m) = &self.metrics {
+                m.add("trace.dropped", dropped);
+            }
+        }
+        if !scratch.is_empty() {
+            self.sink(scratch);
+        }
+    }
+
+    fn sink(&self, events: &[TraceEvent]) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(log) = st.log.as_mut() {
+            let _ = log.append_all(events);
+        }
+        for ev in events {
+            let key = (ev.shard, ev.trace_id);
+            match st.timeline.get_mut(&key) {
+                Some(list) => list.push(ev.clone()),
+                None => {
+                    st.timeline.insert(key, vec![ev.clone()]);
+                    st.key_order.push(key);
+                }
+            }
+        }
+        // Bounded retention: evict the oldest traces wholesale.
+        while st.key_order.len() > MAX_TIMELINE_KEYS {
+            let key = st.key_order.remove(0);
+            st.timeline.remove(&key);
+        }
+    }
+}
+
+/// The deployment-wide trace collector. Owns the drainer thread; dropping
+/// the hub performs a final drain and flushes the log.
+pub struct TraceHub {
+    inner: Arc<HubInner>,
+    drainer: Option<JoinHandle<()>>,
+}
+
+impl TraceHub {
+    /// Build a hub over `tracer`, optionally writing through to a JSONL
+    /// log at `log_path` and publishing `trace.dropped` into `metrics`.
+    pub fn new(
+        tracer: Tracer,
+        log_path: Option<&Path>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<TraceHub> {
+        let log = match log_path {
+            Some(p) => Some(TraceLog::create(p)?),
+            None => None,
+        };
+        let inner = Arc::new(HubInner {
+            tracer,
+            metrics,
+            state: Mutex::new(HubState {
+                log,
+                timeline: BTreeMap::new(),
+                key_order: Vec::new(),
+            }),
+            stop: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+        });
+        let drainer = if inner.tracer.is_enabled() {
+            let inner = Arc::clone(&inner);
+            Some(
+                std::thread::Builder::new()
+                    .name("evosort-trace-drain".into())
+                    .spawn(move || {
+                        let mut scratch = Vec::with_capacity(256);
+                        while !inner.stop.load(Ordering::Relaxed) {
+                            inner.drain_once(&mut scratch);
+                            std::thread::sleep(DRAIN_INTERVAL);
+                        }
+                        inner.drain_once(&mut scratch);
+                    })
+                    .expect("spawn trace drainer"),
+            )
+        } else {
+            None
+        };
+        Ok(TraceHub { inner, drainer })
+    }
+
+    /// The tracer this hub drains — clone it into services/kernels/tuners.
+    pub fn tracer(&self) -> &Tracer {
+        &self.inner.tracer
+    }
+
+    /// Feed externally collected events (a worker's streamed batch) into
+    /// the log and timeline directly, bypassing the local ring.
+    pub fn ingest(&self, events: &[TraceEvent]) {
+        if events.is_empty() {
+            return;
+        }
+        if let Some(m) = &self.inner.metrics {
+            m.add("trace.ingested", events.len() as u64);
+        }
+        self.inner.sink(events);
+    }
+
+    /// Drain the ring now and flush the log (end-of-run synchronization —
+    /// the drainer also does this continuously).
+    pub fn flush(&self) {
+        let mut scratch = Vec::new();
+        self.inner.drain_once(&mut scratch);
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(log) = st.log.as_mut() {
+            let _ = log.flush();
+        }
+    }
+
+    /// Total ring-full drops observed so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed) + self.inner.tracer.dropped()
+    }
+
+    /// Distinct `(shard, trace id)` keys currently retained.
+    pub fn timeline_len(&self) -> usize {
+        self.inner.state.lock().unwrap_or_else(|e| e.into_inner()).timeline.len()
+    }
+
+    /// All retained events for one trace id, merged across shards and
+    /// ordered by timestamp.
+    pub fn events_for(&self, trace_id: u64) -> Vec<TraceEvent> {
+        let st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<TraceEvent> = st
+            .timeline
+            .iter()
+            .filter(|((_, t), _)| *t == trace_id)
+            .flat_map(|(_, evs)| evs.iter().cloned())
+            .collect();
+        out.sort_by_key(|e| e.ts_micros);
+        out
+    }
+
+    /// Every retained event, ordered by `(shard, trace id)` then timestamp
+    /// (tests and end-of-run summaries; bounded by the retention cap).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::new();
+        for evs in st.timeline.values() {
+            let mut evs: Vec<TraceEvent> = evs.clone();
+            evs.sort_by_key(|e| e.ts_micros);
+            out.extend(evs);
+        }
+        out
+    }
+}
+
+impl Drop for TraceHub {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.drainer.take() {
+            let _ = h.join();
+        }
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(log) = st.log.as_mut() {
+            let _ = log.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::{EventKind, FailReason};
+    use crate::obs::jsonl;
+
+    #[test]
+    fn hub_drains_ring_into_log_and_timeline() {
+        let dir = std::env::temp_dir().join(format!("evosort-hub-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hub.jsonl");
+        let metrics = Arc::new(Metrics::new());
+        let tracer = Tracer::enabled(64, 2);
+        {
+            let hub =
+                TraceHub::new(tracer.clone(), Some(&path), Some(Arc::clone(&metrics))).unwrap();
+            tracer.emit(5, EventKind::Submitted);
+            tracer.emit(5, EventKind::Completed { secs: 0.1 });
+            hub.flush();
+            assert_eq!(hub.timeline_len(), 1);
+            let evs = hub.events_for(5);
+            assert_eq!(evs.len(), 2);
+            assert_eq!(evs[0].kind, EventKind::Submitted);
+            assert_eq!(evs[0].shard, 2);
+            // Remote batches merge into the same timeline under their shard.
+            hub.ingest(&[TraceEvent {
+                trace_id: 5,
+                shard: 7,
+                ts_micros: u64::MAX,
+                kind: EventKind::Failed { reason: FailReason::WorkerLost },
+            }]);
+            assert_eq!(hub.events_for(5).len(), 3);
+            assert_eq!(hub.timeline_len(), 2, "distinct (shard, trace) keys");
+        } // drop flushes the log
+        let back = jsonl::read_events(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(metrics.counter("trace.ingested"), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ring_overflow_is_counted_not_blocking() {
+        let metrics = Arc::new(Metrics::new());
+        let tracer = Tracer::enabled(8, 0);
+        let hub = TraceHub::new(tracer.clone(), None, Some(Arc::clone(&metrics))).unwrap();
+        // Flood far past capacity, faster than the drainer can keep up;
+        // every push must return (drop, not block).
+        for i in 0..10_000u64 {
+            tracer.emit(i, EventKind::Queued);
+        }
+        drop(hub); // joins the drainer: every drop delta is published
+        let dropped = metrics.counter("trace.dropped");
+        assert!(dropped > 0, "an 8-slot ring cannot absorb 10k events");
+        assert!(dropped < 10_000, "some events still flow");
+    }
+
+    #[test]
+    fn disabled_tracer_hub_still_ingests() {
+        let hub = TraceHub::new(Tracer::disabled(), None, None).unwrap();
+        hub.ingest(&[TraceEvent {
+            trace_id: 1,
+            shard: 3,
+            ts_micros: 1,
+            kind: EventKind::Submitted,
+        }]);
+        assert_eq!(hub.timeline_len(), 1);
+        assert_eq!(hub.events_for(1).len(), 1);
+    }
+}

@@ -1,0 +1,391 @@
+//! Typed trace events and the per-phase kernel timer.
+//!
+//! Every event the observability layer moves — through the in-process ring,
+//! over the shard wire, into the JSONL log — is one [`TraceEvent`]: a trace
+//! id (the job's router-level id, or the service-local id when no router is
+//! involved), the shard that observed it, a wall-clock microsecond stamp,
+//! and a typed [`EventKind`]. The hot-path kinds (`Submitted` … `Failed`)
+//! carry only `Copy` data so emitting one never allocates; the tuner kinds
+//! carry owned strings but are produced on the tuner's background thread,
+//! never on a sort path.
+
+use std::time::Instant;
+
+/// The shard id the router stamps on its own events (`u32::MAX` — real
+/// shards are small indices). Rendered as `router` in the trace CLI.
+pub const ROUTER_SHARD: u32 = u32::MAX;
+
+/// Why a job terminated without a [`Completed`](EventKind::Completed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    Cancelled,
+    WorkerLost,
+    Overloaded,
+}
+
+impl FailReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailReason::Cancelled => "cancelled",
+            FailReason::WorkerLost => "worker_lost",
+            FailReason::Overloaded => "overloaded",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FailReason> {
+        Some(match s {
+            "cancelled" => FailReason::Cancelled,
+            "worker_lost" => FailReason::WorkerLost,
+            "overloaded" => FailReason::Overloaded,
+            _ => return None,
+        })
+    }
+
+    pub(crate) fn wire(self) -> u8 {
+        match self {
+            FailReason::Cancelled => 0,
+            FailReason::WorkerLost => 1,
+            FailReason::Overloaded => 2,
+        }
+    }
+
+    pub(crate) fn from_wire(code: u8) -> Option<FailReason> {
+        Some(match code {
+            0 => FailReason::Cancelled,
+            1 => FailReason::WorkerLost,
+            2 => FailReason::Overloaded,
+            _ => return None,
+        })
+    }
+}
+
+/// Which sort kernel a [`Phase`] belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    Radix,
+    Merge,
+    Sample,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Radix => "radix",
+            Kernel::Merge => "merge",
+            Kernel::Sample => "sample",
+        }
+    }
+}
+
+/// One internal phase of one kernel. Discriminants are globally unique (a
+/// phase belongs to exactly one kernel) so a [`PhaseTimer`] can accumulate
+/// into a fixed array with no allocation and no hashing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    // Radix: fused sign-flip + min/max reduce, per-pass histograms,
+    // scatter passes, final copy-back / sign-unflip.
+    RadixMinMax = 0,
+    RadixHistogram = 1,
+    RadixScatter = 2,
+    RadixCopyback = 3,
+    // Merge: insertion-sorted base runs, then width-doubling merge levels.
+    MergeRunSort = 4,
+    MergeLevels = 5,
+    // Samplesort: splitter sampling, classify+scatter partitioning,
+    // per-bucket sort + copy-back.
+    SampleSplitters = 6,
+    SamplePartition = 7,
+    SampleBucketSort = 8,
+}
+
+impl Phase {
+    /// Number of phases — the [`PhaseTimer`] accumulator width.
+    pub const COUNT: usize = 9;
+
+    /// Every phase, in discriminant order.
+    pub fn all() -> &'static [Phase] {
+        &[
+            Phase::RadixMinMax,
+            Phase::RadixHistogram,
+            Phase::RadixScatter,
+            Phase::RadixCopyback,
+            Phase::MergeRunSort,
+            Phase::MergeLevels,
+            Phase::SampleSplitters,
+            Phase::SamplePartition,
+            Phase::SampleBucketSort,
+        ]
+    }
+
+    pub fn kernel(self) -> Kernel {
+        match self {
+            Phase::RadixMinMax
+            | Phase::RadixHistogram
+            | Phase::RadixScatter
+            | Phase::RadixCopyback => Kernel::Radix,
+            Phase::MergeRunSort | Phase::MergeLevels => Kernel::Merge,
+            Phase::SampleSplitters | Phase::SamplePartition | Phase::SampleBucketSort => {
+                Kernel::Sample
+            }
+        }
+    }
+
+    /// The phase's short name (unique within its kernel).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::RadixMinMax => "minmax",
+            Phase::RadixHistogram => "histogram",
+            Phase::RadixScatter => "scatter",
+            Phase::RadixCopyback => "copyback",
+            Phase::MergeRunSort => "run_sort",
+            Phase::MergeLevels => "merge_levels",
+            Phase::SampleSplitters => "sample",
+            Phase::SamplePartition => "partition",
+            Phase::SampleBucketSort => "bucket_sort",
+        }
+    }
+
+    /// The `Metrics` sample-window name: `kernel.<kernel>.<phase>`.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Phase::RadixMinMax => "kernel.radix.minmax",
+            Phase::RadixHistogram => "kernel.radix.histogram",
+            Phase::RadixScatter => "kernel.radix.scatter",
+            Phase::RadixCopyback => "kernel.radix.copyback",
+            Phase::MergeRunSort => "kernel.merge.run_sort",
+            Phase::MergeLevels => "kernel.merge.merge_levels",
+            Phase::SampleSplitters => "kernel.sample.sample",
+            Phase::SamplePartition => "kernel.sample.partition",
+            Phase::SampleBucketSort => "kernel.sample.bucket_sort",
+        }
+    }
+
+    /// Inverse of `kernel().name()` + [`name`](Phase::name).
+    pub fn from_names(kernel: &str, phase: &str) -> Option<Phase> {
+        Phase::all()
+            .iter()
+            .copied()
+            .find(|p| p.kernel().name() == kernel && p.name() == phase)
+    }
+
+    pub(crate) fn wire(self) -> u8 {
+        self as u8
+    }
+
+    pub(crate) fn from_wire(code: u8) -> Option<Phase> {
+        Phase::all().get(code as usize).copied()
+    }
+}
+
+/// What happened. Hot-path kinds are `Copy`-only data; the tuner kinds own
+/// their strings (produced off the sort path).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// The job entered the service (or router).
+    Submitted,
+    /// The job was admitted to a pending queue.
+    Queued,
+    /// The job was handed to shard `shard` (the executing side emits
+    /// `shard ==` its own id; the router emits the target's).
+    Dispatched { shard: u32 },
+    /// One kernel phase of the job's sort took `dur_secs`.
+    KernelPhase { phase: Phase, dur_secs: f64 },
+    /// Terminal: the sort finished in `secs` (excludes queueing).
+    Completed { secs: f64 },
+    /// Terminal: the job resolved to an error.
+    Failed { reason: FailReason },
+    /// The autotuner published improved parameters for a fingerprint class.
+    TunerPublished {
+        fingerprint: Box<str>,
+        params: Box<str>,
+        fitness: f64,
+        improvement_pct: f64,
+    },
+    /// The autotuner finished a cycle without publishing.
+    TunerRejected { fingerprint: Box<str>, reason: Box<str> },
+}
+
+impl EventKind {
+    /// Short kind name (the JSONL `kind` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submitted => "submitted",
+            EventKind::Queued => "queued",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::KernelPhase { .. } => "kernel_phase",
+            EventKind::Completed { .. } => "completed",
+            EventKind::Failed { .. } => "failed",
+            EventKind::TunerPublished { .. } => "tuner_published",
+            EventKind::TunerRejected { .. } => "tuner_rejected",
+        }
+    }
+
+    /// Is this a terminal event for its job?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Completed { .. } | EventKind::Failed { .. })
+    }
+}
+
+/// One observed event, stamped with its job's trace id, the observing
+/// shard, and wall-clock microseconds since the Unix epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub trace_id: u64,
+    pub shard: u32,
+    pub ts_micros: u64,
+    pub kind: EventKind,
+}
+
+/// Wall-clock microseconds since the Unix epoch (0 if the clock is broken).
+pub fn now_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Per-sort kernel phase timer: a fixed accumulator array indexed by
+/// [`Phase`] discriminant. Lives on the worker's
+/// [`SortScratch`](crate::sort::key::SortScratch) so steady-state sorts
+/// never allocate for timing; disabled it is two branches per phase
+/// (`begin` returns `None`, `end` matches nothing). Kernels call
+/// `begin`/`end` around their `exec.run_*` fan-outs on the coordinating
+/// thread — the phases themselves are parallel inside.
+#[derive(Debug, Clone)]
+pub struct PhaseTimer {
+    enabled: bool,
+    accum: [f64; Phase::COUNT],
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        PhaseTimer::disabled()
+    }
+}
+
+impl PhaseTimer {
+    pub const fn disabled() -> PhaseTimer {
+        PhaseTimer { enabled: false, accum: [0.0; Phase::COUNT] }
+    }
+
+    pub const fn enabled() -> PhaseTimer {
+        PhaseTimer { enabled: true, accum: [0.0; Phase::COUNT] }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Enable or disable; either way the accumulators reset.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+        self.reset();
+    }
+
+    /// Start timing a phase (`None` when disabled — the matching
+    /// [`end`](PhaseTimer::end) is then a no-op).
+    #[inline]
+    pub fn begin(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Accumulate the elapsed time since `begin` into `phase`.
+    #[inline]
+    pub fn end(&mut self, phase: Phase, started: Option<Instant>) {
+        if let Some(t) = started {
+            self.accum[phase as usize] += t.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Directly accumulate a duration (for callers that timed externally).
+    #[inline]
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        if self.enabled {
+            self.accum[phase as usize] += secs;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.accum = [0.0; Phase::COUNT];
+    }
+
+    /// The non-zero `(phase, seconds)` accumulators, then reset. Call after
+    /// each sort to turn one job's phase times into events/samples.
+    pub fn drain(&mut self) -> Vec<(Phase, f64)> {
+        let mut out = Vec::new();
+        for &p in Phase::all() {
+            let v = self.accum[p as usize];
+            if v > 0.0 {
+                out.push((p, v));
+            }
+        }
+        self.reset();
+        out
+    }
+
+    /// Non-zero accumulators without resetting (bench aggregation).
+    pub fn snapshot(&self) -> Vec<(Phase, f64)> {
+        Phase::all()
+            .iter()
+            .map(|&p| (p, self.accum[p as usize]))
+            .filter(|(_, v)| *v > 0.0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_wire_roundtrip_and_uniqueness() {
+        let mut seen = std::collections::HashSet::new();
+        for &p in Phase::all() {
+            assert_eq!(Phase::from_wire(p.wire()), Some(p));
+            assert!(seen.insert(p.metric_name()), "metric name collision");
+            assert_eq!(Phase::from_names(p.kernel().name(), p.name()), Some(p));
+        }
+        assert_eq!(Phase::all().len(), Phase::COUNT);
+        assert_eq!(Phase::from_wire(99), None);
+    }
+
+    #[test]
+    fn fail_reason_roundtrips() {
+        for r in [FailReason::Cancelled, FailReason::WorkerLost, FailReason::Overloaded] {
+            assert_eq!(FailReason::from_wire(r.wire()), Some(r));
+            assert_eq!(FailReason::from_name(r.name()), Some(r));
+        }
+        assert_eq!(FailReason::from_wire(9), None);
+    }
+
+    #[test]
+    fn disabled_timer_accumulates_nothing() {
+        let mut t = PhaseTimer::disabled();
+        let h = t.begin();
+        assert!(h.is_none());
+        t.end(Phase::RadixScatter, h);
+        t.add(Phase::RadixScatter, 1.0);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_timer_accumulates_and_drains() {
+        let mut t = PhaseTimer::enabled();
+        let h = t.begin();
+        assert!(h.is_some());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.end(Phase::MergeRunSort, h);
+        t.add(Phase::MergeLevels, 0.5);
+        let drained = t.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].0, Phase::MergeRunSort);
+        assert!(drained[0].1 > 0.0);
+        assert_eq!(drained[1], (Phase::MergeLevels, 0.5));
+        assert!(t.drain().is_empty(), "drain resets");
+    }
+}

@@ -1,0 +1,139 @@
+//! A minimal Prometheus scrape endpoint: one background thread, one
+//! `TcpListener`, HTTP/1.1 `200 text/plain` responses carrying
+//! [`Metrics::render_prometheus`] — no HTTP library in the offline build,
+//! and none needed: scrapers send one GET and read one body.
+//!
+//! The server answers every path identically (scrape configs vary between
+//! `/metrics` and `/`), closes each connection after one response
+//! (`Connection: close`), and bounds how long a slow client can hold the
+//! handler with a read timeout. Dropping the handle stops the thread: the
+//! stop flag flips and a self-connect unblocks `accept`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+
+/// Handle to the scrape server; dropping it shuts the listener down.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port `0` for OS-assigned) and
+    /// serve `metrics` until dropped.
+    pub fn spawn(addr: &str, metrics: Arc<Metrics>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let addr = listener.local_addr().context("resolving metrics endpoint")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("evosort-metrics-http".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        // One request per connection; a stuck client times
+                        // out instead of pinning the accept loop.
+                        let _ = serve_one(stream, &metrics);
+                    }
+                })
+                .expect("spawn metrics http server")
+        };
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+fn serve_one(mut stream: TcpStream, metrics: &Metrics) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read until the end of the request head (or the 8 KiB bound — scrape
+    // requests are tiny; anything bigger is not a scraper).
+    let mut buf = [0u8; 1024];
+    let mut head: Vec<u8> = Vec::new();
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let body = metrics.render_prometheus();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop; the handler sees the flag and exits.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+            .expect("request");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("response");
+        out
+    }
+
+    #[test]
+    fn serves_prometheus_text_and_shuts_down() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.incr("jobs.completed");
+        metrics.set_gauge("router.queue.depth", 3.0);
+        let server = MetricsServer::spawn("127.0.0.1:0", Arc::clone(&metrics)).expect("spawn");
+        let addr = server.addr();
+        let response = scrape(addr);
+        assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+        assert!(response.contains("evosort_jobs_completed 1"), "{response}");
+        assert!(response.contains("evosort_router_queue_depth 3"), "{response}");
+        // Counters move between scrapes.
+        metrics.incr("jobs.completed");
+        assert!(scrape(addr).contains("evosort_jobs_completed 2"));
+        drop(server);
+        assert!(
+            TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_err(),
+            "listener must be gone after drop"
+        );
+    }
+}

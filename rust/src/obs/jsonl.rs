@@ -1,0 +1,570 @@
+//! Schema-versioned JSONL encoding of trace events (hand-rolled — no serde
+//! in the offline build, same policy as `bench_harness/json.rs`).
+//!
+//! A trace log is line-oriented: the first line is a header object carrying
+//! the schema tag, every following line is one [`TraceEvent`]:
+//!
+//! ```text
+//! {"schema":"evosort-trace-v1"}
+//! {"trace":17,"shard":4294967295,"ts_us":1760000000123456,"kind":"submitted"}
+//! {"trace":17,"shard":1,"ts_us":1760000000123999,"kind":"kernel_phase","kernel":"radix","phase":"scatter","dur_secs":0.0042}
+//! {"trace":17,"shard":1,"ts_us":1760000000124510,"kind":"completed","secs":0.0061}
+//! ```
+//!
+//! [`TraceLog`] appends events to a file (buffered, flushed on drop);
+//! [`read_events`] parses a whole log back for the `evosort trace` CLI.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::event::{EventKind, FailReason, Phase, TraceEvent};
+
+/// The trace-log schema tag (bump on breaking format changes).
+pub const SCHEMA: &str = "evosort-trace-v1";
+
+// --- writing ---------------------------------------------------------------
+
+fn quote(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn num(out: &mut String, v: f64) {
+    // JSON has no NaN/Infinity; clamp the degenerate cases to 0.
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+        // `{}` prints integral floats without a point; keep them numbers
+        // that round-trip as f64 regardless.
+    } else {
+        out.push('0');
+    }
+}
+
+/// One event as a single JSON line (no trailing newline).
+pub fn event_to_json(ev: &TraceEvent) -> String {
+    let mut s = String::with_capacity(96);
+    let _ = write!(
+        s,
+        "{{\"trace\":{},\"shard\":{},\"ts_us\":{},\"kind\":\"{}\"",
+        ev.trace_id,
+        ev.shard,
+        ev.ts_micros,
+        ev.kind.name()
+    );
+    match &ev.kind {
+        EventKind::Submitted | EventKind::Queued => {}
+        EventKind::Dispatched { shard } => {
+            let _ = write!(s, ",\"to_shard\":{shard}");
+        }
+        EventKind::KernelPhase { phase, dur_secs } => {
+            let _ = write!(s, ",\"kernel\":\"{}\",\"phase\":\"{}\"", phase.kernel().name(), phase.name());
+            s.push_str(",\"dur_secs\":");
+            num(&mut s, *dur_secs);
+        }
+        EventKind::Completed { secs } => {
+            s.push_str(",\"secs\":");
+            num(&mut s, *secs);
+        }
+        EventKind::Failed { reason } => {
+            let _ = write!(s, ",\"reason\":\"{}\"", reason.name());
+        }
+        EventKind::TunerPublished { fingerprint, params, fitness, improvement_pct } => {
+            s.push_str(",\"fingerprint\":");
+            quote(&mut s, fingerprint);
+            s.push_str(",\"params\":");
+            quote(&mut s, params);
+            s.push_str(",\"fitness\":");
+            num(&mut s, *fitness);
+            s.push_str(",\"improvement_pct\":");
+            num(&mut s, *improvement_pct);
+        }
+        EventKind::TunerRejected { fingerprint, reason } => {
+            s.push_str(",\"fingerprint\":");
+            quote(&mut s, fingerprint);
+            s.push_str(",\"reason\":");
+            quote(&mut s, reason);
+        }
+    }
+    s.push('}');
+    s
+}
+
+/// Append-only trace-log writer: opens (creating or truncating) `path`,
+/// writes the schema header, buffers event lines, flushes on
+/// [`flush`](TraceLog::flush) and on drop.
+pub struct TraceLog {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl TraceLog {
+    pub fn create(path: &Path) -> Result<TraceLog> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace log {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        writeln!(w, "{{\"schema\":\"{SCHEMA}\"}}").context("writing trace-log header")?;
+        Ok(TraceLog { w })
+    }
+
+    pub fn append(&mut self, ev: &TraceEvent) -> Result<()> {
+        writeln!(self.w, "{}", event_to_json(ev)).context("appending trace event")
+    }
+
+    pub fn append_all(&mut self, events: &[TraceEvent]) -> Result<()> {
+        for ev in events {
+            self.append(ev)?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush().context("flushing trace log")
+    }
+}
+
+impl Drop for TraceLog {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+// --- reading ---------------------------------------------------------------
+
+/// A parsed JSON value (recursive descent over one line; private — the
+/// public surface is [`parse_event_line`] / [`read_events`]).
+enum Json {
+    Object(Vec<(String, Json)>),
+    Array(Vec<Json>),
+    String(String),
+    Number(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn str(&self) -> Option<&str> {
+        match self {
+            Json::String(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn f64(&self) -> Option<f64> {
+        match self {
+            Json::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn u64(&self) -> Option<u64> {
+        self.f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as u64)
+    }
+
+    fn parse(input: &str) -> Result<Json> {
+        let mut p = Parser { s: input.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.s.len() {
+            bail!("trailing bytes after JSON value at offset {}", p.pos);
+        }
+        Ok(v)
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", c as char, self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::String(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at offset {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.s[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.pos)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Object(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Object(fields));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Array(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else { bail!("unterminated string") };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else { bail!("unterminated escape") };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.pos..self.pos + 4)
+                                .context("truncated \\u escape")?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).context("non-utf8 \\u escape")?,
+                                16,
+                            )
+                            .context("bad \\u escape")?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("unknown escape \\{}", other as char),
+                    }
+                }
+                c => {
+                    // Re-decode multi-byte UTF-8 from the raw bytes.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = match c {
+                            0xc0..=0xdf => 2,
+                            0xe0..=0xef => 3,
+                            _ => 4,
+                        };
+                        let chunk =
+                            self.s.get(start..start + width).context("truncated utf-8")?;
+                        let s = std::str::from_utf8(chunk).context("bad utf-8 in string")?;
+                        out.push_str(s);
+                        self.pos = start + width;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.pos]).unwrap();
+        let v: f64 = text.parse().with_context(|| format!("bad number {text:?}"))?;
+        Ok(Json::Number(v))
+    }
+}
+
+/// Parse one event line back into a [`TraceEvent`].
+pub fn parse_event_line(line: &str) -> Result<TraceEvent> {
+    let v = Json::parse(line)?;
+    let trace_id = v.get("trace").and_then(Json::u64).context("missing trace id")?;
+    let shard = v.get("shard").and_then(Json::u64).context("missing shard")? as u32;
+    let ts_micros = v.get("ts_us").and_then(Json::u64).context("missing ts_us")?;
+    let kind_name = v.get("kind").and_then(Json::str).context("missing kind")?;
+    let kind = match kind_name {
+        "submitted" => EventKind::Submitted,
+        "queued" => EventKind::Queued,
+        "dispatched" => EventKind::Dispatched {
+            shard: v.get("to_shard").and_then(Json::u64).context("missing to_shard")? as u32,
+        },
+        "kernel_phase" => {
+            let kernel = v.get("kernel").and_then(Json::str).context("missing kernel")?;
+            let phase = v.get("phase").and_then(Json::str).context("missing phase")?;
+            EventKind::KernelPhase {
+                phase: Phase::from_names(kernel, phase)
+                    .with_context(|| format!("unknown phase {kernel}.{phase}"))?,
+                dur_secs: v.get("dur_secs").and_then(Json::f64).context("missing dur_secs")?,
+            }
+        }
+        "completed" => EventKind::Completed {
+            secs: v.get("secs").and_then(Json::f64).context("missing secs")?,
+        },
+        "failed" => EventKind::Failed {
+            reason: v
+                .get("reason")
+                .and_then(Json::str)
+                .and_then(FailReason::from_name)
+                .context("missing/unknown failure reason")?,
+        },
+        "tuner_published" => EventKind::TunerPublished {
+            fingerprint: v
+                .get("fingerprint")
+                .and_then(Json::str)
+                .context("missing fingerprint")?
+                .into(),
+            params: v.get("params").and_then(Json::str).context("missing params")?.into(),
+            fitness: v.get("fitness").and_then(Json::f64).context("missing fitness")?,
+            improvement_pct: v
+                .get("improvement_pct")
+                .and_then(Json::f64)
+                .context("missing improvement_pct")?,
+        },
+        "tuner_rejected" => EventKind::TunerRejected {
+            fingerprint: v
+                .get("fingerprint")
+                .and_then(Json::str)
+                .context("missing fingerprint")?
+                .into(),
+            reason: v.get("reason").and_then(Json::str).context("missing reason")?.into(),
+        },
+        other => bail!("unknown event kind {other:?}"),
+    };
+    Ok(TraceEvent { trace_id, shard, ts_micros, kind })
+}
+
+/// Read a whole trace log: validates the schema header, parses every event
+/// line (empty lines are skipped; a malformed line is an error with its
+/// line number).
+pub fn read_events(path: &Path) -> Result<Vec<TraceEvent>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening trace log {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut events = Vec::new();
+    let mut saw_header = false;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("reading trace log")?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if !saw_header {
+            let header = Json::parse(trimmed)
+                .with_context(|| format!("line {}: bad header", lineno + 1))?;
+            let schema = header.get("schema").and_then(Json::str).unwrap_or("");
+            if schema != SCHEMA {
+                bail!("unsupported trace schema {schema:?} (want {SCHEMA:?})");
+            }
+            saw_header = true;
+            continue;
+        }
+        let ev = parse_event_line(trimmed)
+            .with_context(|| format!("line {}: bad trace event", lineno + 1))?;
+        events.push(ev);
+    }
+    if !saw_header {
+        bail!("empty trace log: no schema header");
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::now_micros;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let ts = now_micros();
+        vec![
+            TraceEvent { trace_id: 1, shard: u32::MAX, ts_micros: ts, kind: EventKind::Submitted },
+            TraceEvent { trace_id: 1, shard: u32::MAX, ts_micros: ts + 1, kind: EventKind::Queued },
+            TraceEvent {
+                trace_id: 1,
+                shard: u32::MAX,
+                ts_micros: ts + 2,
+                kind: EventKind::Dispatched { shard: 1 },
+            },
+            TraceEvent {
+                trace_id: 1,
+                shard: 1,
+                ts_micros: ts + 3,
+                kind: EventKind::KernelPhase { phase: Phase::RadixScatter, dur_secs: 0.0042 },
+            },
+            TraceEvent {
+                trace_id: 1,
+                shard: 1,
+                ts_micros: ts + 4,
+                kind: EventKind::Completed { secs: 0.0061 },
+            },
+            TraceEvent {
+                trace_id: 2,
+                shard: 0,
+                ts_micros: ts + 5,
+                kind: EventKind::Failed { reason: FailReason::Overloaded },
+            },
+            TraceEvent {
+                trace_id: 0,
+                shard: 1,
+                ts_micros: ts + 6,
+                kind: EventKind::TunerPublished {
+                    fingerprint: "b9:mix \"q\":w4".into(),
+                    params: "tile=4096".into(),
+                    fitness: 0.123,
+                    improvement_pct: 4.5,
+                },
+            },
+            TraceEvent {
+                trace_id: 0,
+                shard: 1,
+                ts_micros: ts + 7,
+                kind: EventKind::TunerRejected {
+                    fingerprint: "b9".into(),
+                    reason: "below noise margin".into(),
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn events_roundtrip_through_jsonl() {
+        for ev in sample_events() {
+            let line = event_to_json(&ev);
+            let back = parse_event_line(&line).expect("parse back");
+            assert_eq!(back, ev, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn log_file_roundtrip_with_header() {
+        let dir = std::env::temp_dir()
+            .join(format!("evosort-trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let events = sample_events();
+        {
+            let mut log = TraceLog::create(&path).expect("create");
+            log.append_all(&events).expect("append");
+        } // drop flushes
+        let back = read_events(&path).expect("read");
+        assert_eq!(back, events);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_schema_and_garbage_are_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("evosort-trace-test2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(&bad, "{\"schema\":\"evosort-trace-v999\"}\n").unwrap();
+        assert!(read_events(&bad).is_err());
+        std::fs::write(&bad, "").unwrap();
+        assert!(read_events(&bad).is_err(), "empty log has no header");
+        std::fs::write(&bad, format!("{{\"schema\":\"{SCHEMA}\"}}\nnot json\n")).unwrap();
+        assert!(read_events(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn nonfinite_durations_encode_as_zero() {
+        let ev = TraceEvent {
+            trace_id: 1,
+            shard: 0,
+            ts_micros: 0,
+            kind: EventKind::Completed { secs: f64::NAN },
+        };
+        let line = event_to_json(&ev);
+        let back = parse_event_line(&line).expect("NaN must not poison the line");
+        assert_eq!(back.kind, EventKind::Completed { secs: 0.0 });
+    }
+}

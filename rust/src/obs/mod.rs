@@ -1,0 +1,158 @@
+//! Observability: per-job trace spans, per-phase kernel timings, and the
+//! export surfaces (JSONL trace log, Prometheus text, span-tree CLI).
+//!
+//! The layering, hot side to cold side:
+//!
+//! * [`Tracer`] — the handle the service, router, workers, kernels and
+//!   tuner emit through. Internally an `Option<Arc<TraceRing>>`: a
+//!   **disabled tracer is a branch** (`emit` early-returns on `None` before
+//!   touching a clock), and an enabled one does one non-blocking push into
+//!   a preallocated lock-free ring ([`ring::TraceRing`]) — a full ring
+//!   drops the event and bumps a counter, it never stalls a sort.
+//! * [`event`] — the typed [`TraceEvent`]/[`EventKind`] vocabulary and the
+//!   [`PhaseTimer`] kernels accumulate per-phase durations into.
+//! * [`collect::TraceHub`] — the drain side: a background thread empties
+//!   the ring into the schema-versioned JSONL log ([`jsonl`]), folds events
+//!   into a bounded in-memory timeline keyed by `(shard, trace id)`, and
+//!   publishes ring drops as the `trace.dropped` counter. The shard router
+//!   [`ingest`](collect::TraceHub::ingest)s event batches streamed from
+//!   worker processes into the same hub, so one timeline covers the fleet.
+//! * [`http::MetricsServer`] — a minimal scrape endpoint serving
+//!   [`Metrics::render_prometheus`](crate::coordinator::Metrics::render_prometheus).
+//! * [`report`] — the `evosort trace` summary (per-phase p50/p99, slowest
+//!   traces, span-chain completeness check) over a JSONL file.
+
+pub mod collect;
+pub mod event;
+pub mod http;
+pub mod jsonl;
+pub mod report;
+pub mod ring;
+
+use std::sync::Arc;
+
+pub use collect::TraceHub;
+pub use event::{
+    now_micros, EventKind, FailReason, Kernel, Phase, PhaseTimer, TraceEvent, ROUTER_SHARD,
+};
+pub use http::MetricsServer;
+pub use ring::TraceRing;
+
+/// Default ring capacity (events) when tracing is enabled.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// The emission handle. Cheap to clone (an `Option<Arc>` plus a shard id);
+/// every clone feeds the same ring. `Tracer::default()` is disabled.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TraceRing>>,
+    shard: u32,
+}
+
+impl Tracer {
+    /// A tracer that does nothing: `emit` is one branch, no clock read, no
+    /// atomics.
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// An enabled tracer over a fresh ring of (at least) `capacity` slots,
+    /// stamping `shard` on every event.
+    pub fn enabled(capacity: usize, shard: u32) -> Tracer {
+        Tracer { inner: Some(Arc::new(TraceRing::with_capacity(capacity))), shard }
+    }
+
+    /// This tracer, re-stamped with a different shard id (shares the ring).
+    pub fn with_shard(&self, shard: u32) -> Tracer {
+        Tracer { inner: self.inner.clone(), shard }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// Emit one event. Disabled: returns before reading the clock.
+    /// Enabled: one `SystemTime` read plus one lock-free ring push; a full
+    /// ring drops the event (counted) without blocking.
+    #[inline]
+    pub fn emit(&self, trace_id: u64, kind: EventKind) {
+        let Some(ring) = &self.inner else { return };
+        ring.push(TraceEvent {
+            trace_id,
+            shard: self.shard,
+            ts_micros: event::now_micros(),
+            kind,
+        });
+    }
+
+    /// Move everything currently buffered into `out` (drain side).
+    pub fn drain_into(&self, out: &mut Vec<TraceEvent>) -> usize {
+        match &self.inner {
+            Some(ring) => ring.drain_into(out),
+            None => 0,
+        }
+    }
+
+    /// Events dropped to a full ring since the last call (delta).
+    pub fn take_dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |r| r.take_dropped())
+    }
+
+    /// Total events dropped since construction (plus any not yet taken).
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |r| r.dropped())
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.is_enabled())
+            .field("shard", &self.shard)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        t.emit(1, EventKind::Submitted);
+        let mut out = Vec::new();
+        assert_eq!(t.drain_into(&mut out), 0);
+        assert_eq!(t.take_dropped(), 0);
+    }
+
+    #[test]
+    fn enabled_tracer_stamps_shard_and_time() {
+        let t = Tracer::enabled(64, 3);
+        let before = now_micros();
+        t.emit(42, EventKind::Completed { secs: 0.5 });
+        let mut out = Vec::new();
+        t.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].trace_id, 42);
+        assert_eq!(out[0].shard, 3);
+        assert!(out[0].ts_micros >= before);
+        assert_eq!(out[0].kind, EventKind::Completed { secs: 0.5 });
+    }
+
+    #[test]
+    fn with_shard_shares_the_ring() {
+        let t = Tracer::enabled(64, 0);
+        let t2 = t.with_shard(7);
+        t2.emit(1, EventKind::Queued);
+        let mut out = Vec::new();
+        t.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shard, 7);
+    }
+}

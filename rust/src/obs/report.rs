@@ -1,0 +1,373 @@
+//! Span-tree summarisation for the `evosort trace` CLI: per-phase p50/p99,
+//! slowest traces, tuner decisions, and the span-chain completeness check
+//! the CI smoke leg gates on.
+
+use std::collections::BTreeMap;
+
+use super::event::{EventKind, Phase, TraceEvent, ROUTER_SHARD};
+use crate::coordinator::metrics::percentile_of_sorted;
+
+/// Aggregated per-phase timing across every job in a trace log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub count: usize,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub total_secs: f64,
+}
+
+/// One job trace, reduced to the span facts the summary needs.
+#[derive(Debug, Clone, Default)]
+struct TraceFacts {
+    submitted: bool,
+    dispatched: bool,
+    phases: usize,
+    completed_secs: Option<f64>,
+    failed: Option<&'static str>,
+    shards: Vec<u32>,
+}
+
+/// The whole-log summary.
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// Distinct job trace ids (tuner-only traces are excluded).
+    pub traces: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// Failure reasons, name → count.
+    pub failures_by_reason: BTreeMap<&'static str, usize>,
+    pub events: usize,
+    pub phase_stats: Vec<PhaseStat>,
+    /// `(trace id, sort seconds)`, slowest first, capped at 10.
+    pub slowest: Vec<(u64, f64)>,
+    pub tuner_published: usize,
+    pub tuner_rejected: usize,
+    /// Completed traces that also carry ≥ 1 kernel-phase span.
+    pub completed_with_phases: usize,
+    /// Span-chain problems ([`check`]'s findings; empty means every chain
+    /// is complete).
+    pub problems: Vec<String>,
+}
+
+fn shard_name(shard: u32) -> String {
+    if shard == ROUTER_SHARD {
+        "router".to_string()
+    } else {
+        shard.to_string()
+    }
+}
+
+/// Reduce a log to per-trace facts (job traces only — tuner events, which
+/// are not tied to a job, are counted separately).
+fn fold(events: &[TraceEvent]) -> (BTreeMap<u64, TraceFacts>, usize, usize) {
+    let mut traces: BTreeMap<u64, TraceFacts> = BTreeMap::new();
+    let (mut published, mut rejected) = (0usize, 0usize);
+    for ev in events {
+        match &ev.kind {
+            EventKind::TunerPublished { .. } => published += 1,
+            EventKind::TunerRejected { .. } => rejected += 1,
+            kind => {
+                let t = traces.entry(ev.trace_id).or_default();
+                if !t.shards.contains(&ev.shard) {
+                    t.shards.push(ev.shard);
+                }
+                match kind {
+                    EventKind::Submitted => t.submitted = true,
+                    EventKind::Queued => {}
+                    EventKind::Dispatched { .. } => t.dispatched = true,
+                    EventKind::KernelPhase { .. } => t.phases += 1,
+                    EventKind::Completed { secs } => {
+                        // Both the worker and the router may report a
+                        // completion; keep the longer (worker-side) time.
+                        let prev = t.completed_secs.unwrap_or(0.0);
+                        t.completed_secs = Some(prev.max(*secs));
+                    }
+                    EventKind::Failed { reason } => t.failed = Some(reason.name()),
+                    EventKind::TunerPublished { .. } | EventKind::TunerRejected { .. } => {}
+                }
+            }
+        }
+    }
+    (traces, published, rejected)
+}
+
+/// The span-chain completeness rules:
+///
+/// 1. Per `(shard, trace)` stream: a `Submitted` must be matched by
+///    **exactly one** terminal event (`Completed` or `Failed`) from that
+///    same shard — no lost jobs, no double terminals.
+/// 2. Per trace overall: at least one terminal event.
+/// 3. A trace that completed must carry a `Dispatched` span.
+pub fn check(events: &[TraceEvent]) -> Vec<String> {
+    let mut problems = Vec::new();
+    // Rule 1 over (shard, trace) streams.
+    let mut streams: BTreeMap<(u32, u64), (usize, usize)> = BTreeMap::new();
+    for ev in events {
+        let entry = streams.entry((ev.shard, ev.trace_id)).or_default();
+        match &ev.kind {
+            EventKind::Submitted => entry.0 += 1,
+            k if k.is_terminal() => entry.1 += 1,
+            _ => {}
+        }
+    }
+    for ((shard, trace), (submitted, terminals)) in &streams {
+        if *submitted > 0 && *terminals != 1 {
+            problems.push(format!(
+                "trace {trace} on shard {}: {terminals} terminal events for {submitted} \
+                 submission(s) (want exactly 1)",
+                shard_name(*shard)
+            ));
+        }
+    }
+    // Rules 2 and 3 over whole traces.
+    let (traces, _, _) = fold(events);
+    for (id, t) in &traces {
+        if t.completed_secs.is_none() && t.failed.is_none() {
+            problems.push(format!("trace {id}: no terminal event"));
+        }
+        if t.completed_secs.is_some() && !t.dispatched {
+            problems.push(format!("trace {id}: completed without a Dispatched span"));
+        }
+        if t.completed_secs.is_some() && !t.submitted {
+            problems.push(format!("trace {id}: completed without a Submitted span"));
+        }
+    }
+    problems
+}
+
+/// Build the summary (includes [`check`]'s findings).
+pub fn summarize(events: &[TraceEvent]) -> TraceSummary {
+    let (traces, tuner_published, tuner_rejected) = fold(events);
+    let mut per_phase: BTreeMap<u8, Vec<f64>> = BTreeMap::new();
+    for ev in events {
+        if let EventKind::KernelPhase { phase, dur_secs } = &ev.kind {
+            per_phase.entry(phase.wire()).or_default().push(*dur_secs);
+        }
+    }
+    let mut phase_stats = Vec::new();
+    for (code, mut durs) in per_phase {
+        let phase = Phase::from_wire(code).expect("folded from a valid phase");
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        phase_stats.push(PhaseStat {
+            phase,
+            count: durs.len(),
+            p50_secs: percentile_of_sorted(&durs, 50.0),
+            p99_secs: percentile_of_sorted(&durs, 99.0),
+            total_secs: durs.iter().sum(),
+        });
+    }
+    let mut slowest: Vec<(u64, f64)> = traces
+        .iter()
+        .filter_map(|(id, t)| t.completed_secs.map(|s| (*id, s)))
+        .collect();
+    slowest.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    slowest.truncate(10);
+    let mut failures_by_reason: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for t in traces.values() {
+        if let Some(reason) = t.failed {
+            *failures_by_reason.entry(reason).or_default() += 1;
+        }
+    }
+    TraceSummary {
+        traces: traces.len(),
+        completed: traces.values().filter(|t| t.completed_secs.is_some()).count(),
+        failed: traces.values().filter(|t| t.failed.is_some()).count(),
+        failures_by_reason,
+        events: events.len(),
+        phase_stats,
+        slowest,
+        tuner_published,
+        tuner_rejected,
+        completed_with_phases: traces
+            .values()
+            .filter(|t| t.completed_secs.is_some() && t.phases > 0)
+            .count(),
+        problems: check(events),
+    }
+}
+
+fn fmt_ms(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 0.001 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+/// Render the summary as the `evosort trace` report text.
+pub fn render(summary: &TraceSummary) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace summary: {} events, {} traces ({} completed, {} failed)",
+        summary.events, summary.traces, summary.completed, summary.failed
+    );
+    if !summary.failures_by_reason.is_empty() {
+        let breakdown: Vec<String> = summary
+            .failures_by_reason
+            .iter()
+            .map(|(r, n)| format!("{n} {r}"))
+            .collect();
+        let _ = writeln!(out, "  failures: {}", breakdown.join(", "));
+    }
+    if summary.tuner_published + summary.tuner_rejected > 0 {
+        let _ = writeln!(
+            out,
+            "  tuner: {} published, {} rejected",
+            summary.tuner_published, summary.tuner_rejected
+        );
+    }
+    if summary.phase_stats.is_empty() {
+        let _ = writeln!(out, "\nper-phase kernel timings: (no kernel_phase events)");
+    } else {
+        let _ = writeln!(out, "\nper-phase kernel timings");
+        let _ = writeln!(
+            out,
+            "  {:<28} {:>6} {:>10} {:>10} {:>10}",
+            "phase", "n", "p50", "p99", "total"
+        );
+        for s in &summary.phase_stats {
+            let _ = writeln!(
+                out,
+                "  {:<28} {:>6} {:>10} {:>10} {:>10}",
+                s.phase.metric_name(),
+                s.count,
+                fmt_ms(s.p50_secs),
+                fmt_ms(s.p99_secs),
+                fmt_ms(s.total_secs)
+            );
+        }
+    }
+    if !summary.slowest.is_empty() {
+        let _ = writeln!(out, "\nslowest traces");
+        for (id, secs) in &summary.slowest {
+            let _ = writeln!(out, "  trace {id:<12} {}", fmt_ms(*secs));
+        }
+    }
+    let _ = writeln!(
+        out,
+        "\nspan chains: {}/{} completed traces carry kernel phases; {} problem(s)",
+        summary.completed_with_phases, summary.completed, summary.problems.len()
+    );
+    for p in &summary.problems {
+        let _ = writeln!(out, "  problem: {p}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::FailReason;
+
+    fn ev(trace: u64, shard: u32, ts: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { trace_id: trace, shard, ts_micros: ts, kind }
+    }
+
+    fn full_chain(trace: u64, shard: u32, base: u64) -> Vec<TraceEvent> {
+        vec![
+            ev(trace, ROUTER_SHARD, base, EventKind::Submitted),
+            ev(trace, ROUTER_SHARD, base + 1, EventKind::Queued),
+            ev(trace, ROUTER_SHARD, base + 2, EventKind::Dispatched { shard }),
+            ev(trace, shard, base + 3, EventKind::Submitted),
+            ev(trace, shard, base + 4, EventKind::Dispatched { shard }),
+            ev(
+                trace,
+                shard,
+                base + 5,
+                EventKind::KernelPhase { phase: Phase::RadixHistogram, dur_secs: 0.002 },
+            ),
+            ev(
+                trace,
+                shard,
+                base + 6,
+                EventKind::KernelPhase { phase: Phase::RadixScatter, dur_secs: 0.004 },
+            ),
+            ev(trace, shard, base + 7, EventKind::Completed { secs: 0.01 }),
+            ev(trace, ROUTER_SHARD, base + 8, EventKind::Completed { secs: 0.012 }),
+        ]
+    }
+
+    #[test]
+    fn complete_chains_pass_the_check() {
+        let mut events = full_chain(1, 0, 100);
+        events.extend(full_chain(2, 1, 200));
+        assert!(check(&events).is_empty(), "{:?}", check(&events));
+        let s = summarize(&events);
+        assert_eq!(s.traces, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.completed_with_phases, 2);
+        assert_eq!(s.phase_stats.len(), 2);
+        assert_eq!(s.phase_stats[0].phase, Phase::RadixHistogram);
+        assert_eq!(s.phase_stats[0].count, 2);
+        assert!(s.problems.is_empty());
+        // Slowest keeps the worker-vs-router max.
+        assert_eq!(s.slowest[0].1, 0.012);
+        let text = render(&s);
+        assert!(text.contains("kernel.radix.scatter"), "{text}");
+        assert!(text.contains("2 traces"), "{text}");
+    }
+
+    #[test]
+    fn missing_terminal_is_flagged() {
+        let events = vec![
+            ev(5, 0, 1, EventKind::Submitted),
+            ev(5, 0, 2, EventKind::Queued),
+        ];
+        let problems = check(&events);
+        assert_eq!(problems.len(), 2, "{problems:?}"); // stream + trace rules
+        assert!(problems.iter().any(|p| p.contains("no terminal")), "{problems:?}");
+    }
+
+    #[test]
+    fn double_terminal_is_flagged() {
+        let events = vec![
+            ev(6, 0, 1, EventKind::Submitted),
+            ev(6, 0, 2, EventKind::Dispatched { shard: 0 }),
+            ev(6, 0, 3, EventKind::Completed { secs: 0.1 }),
+            ev(6, 0, 4, EventKind::Failed { reason: FailReason::WorkerLost }),
+        ];
+        let problems = check(&events);
+        assert!(problems.iter().any(|p| p.contains("2 terminal events")), "{problems:?}");
+    }
+
+    #[test]
+    fn failed_jobs_count_by_reason() {
+        let events = vec![
+            ev(7, ROUTER_SHARD, 1, EventKind::Submitted),
+            ev(7, ROUTER_SHARD, 2, EventKind::Failed { reason: FailReason::Overloaded }),
+            ev(8, ROUTER_SHARD, 3, EventKind::Submitted),
+            ev(8, ROUTER_SHARD, 4, EventKind::Failed { reason: FailReason::WorkerLost }),
+        ];
+        assert!(check(&events).is_empty());
+        let s = summarize(&events);
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.failures_by_reason.get("overloaded"), Some(&1));
+        assert_eq!(s.failures_by_reason.get("worker_lost"), Some(&1));
+        assert!(render(&s).contains("1 overloaded"), "{}", render(&s));
+    }
+
+    #[test]
+    fn tuner_events_do_not_create_job_traces() {
+        let events = vec![ev(
+            0,
+            1,
+            1,
+            EventKind::TunerPublished {
+                fingerprint: "fp".into(),
+                params: "p".into(),
+                fitness: 1.0,
+                improvement_pct: 2.0,
+            },
+        )];
+        assert!(check(&events).is_empty());
+        let s = summarize(&events);
+        assert_eq!(s.traces, 0);
+        assert_eq!(s.tuner_published, 1);
+    }
+}

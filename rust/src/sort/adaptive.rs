@@ -10,10 +10,11 @@
 
 use std::sync::Arc;
 
-use super::parallel_merge::{merge_runs_bottom_up, parallel_merge_sort_with_scratch, MergeTuning};
-use super::radix::{radix_sort_with_executor, RadixKey};
-use super::samplesort::{sample_sort_with_scratch, SampleSortTuning};
+use super::parallel_merge::{merge_runs_bottom_up, parallel_merge_sort_timed, MergeTuning};
+use super::radix::{radix_sort_timed, radix_sort_with_executor, RadixKey};
+use super::samplesort::{sample_sort_timed, SampleSortTuning};
 use crate::exec::{self, Executor};
+use crate::obs::PhaseTimer;
 use crate::params::{ACode, SortParams};
 
 /// Sort backend exporting "sort each fixed-size tile" — implemented by the
@@ -97,20 +98,37 @@ impl AdaptiveSorter {
         p: &SortParams,
         scratch: &mut Vec<i64>,
     ) {
+        self.sort_i64_timed(data, p, scratch, &mut PhaseTimer::disabled())
+    }
+
+    /// [`sort_i64_with_scratch`](Self::sort_i64_with_scratch) with the
+    /// dispatched kernel accumulating per-phase durations into `timer` (the
+    /// traced service enables the timer on its worker scratch and drains it
+    /// into span events after each job). Disabled-timer calls compile to the
+    /// untimed path.
+    pub fn sort_i64_timed(
+        &self,
+        data: &mut [i64],
+        p: &SortParams,
+        scratch: &mut Vec<i64>,
+        timer: &mut PhaseTimer,
+    ) {
         if data.len() < p.fallback_threshold {
             data.sort_unstable(); // the library fallback (T_numpy branch)
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
+            ACode::Radix => {
+                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+            }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);
-                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
+                sample_sort_timed(data, &tuning, self.executor(), scratch, timer)
             }
             // No 64-bit bitonic artifact is compiled; Algorithm 6's
             // "other cases" branch applies.
             ACode::Merge | ACode::XlaTile => {
-                parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch)
+                parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer)
             }
         }
     }
@@ -126,26 +144,43 @@ impl AdaptiveSorter {
         p: &SortParams,
         scratch: &mut Vec<i32>,
     ) {
+        self.sort_i32_timed(data, p, scratch, &mut PhaseTimer::disabled())
+    }
+
+    /// Timed variant; see [`sort_i64_timed`](Self::sort_i64_timed). The XLA
+    /// tile path (backend attached) is not phase-instrumented — its cost
+    /// structure lives in PJRT, outside the rust kernels.
+    pub fn sort_i32_timed(
+        &self,
+        data: &mut [i32],
+        p: &SortParams,
+        scratch: &mut Vec<i32>,
+        timer: &mut PhaseTimer,
+    ) {
         if data.len() < p.fallback_threshold {
             data.sort_unstable();
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
+            ACode::Radix => {
+                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+            }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);
-                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
+                sample_sort_timed(data, &tuning, self.executor(), scratch, timer)
             }
             ACode::XlaTile => match &self.xla {
                 Some(backend) => {
                     if let Err(e) = self.sort_i32_via_xla(data, p, backend.as_ref(), scratch) {
                         crate::log_warn!("xla tile sort failed ({e}); merge fallback");
-                        parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch);
+                        parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer);
                     }
                 }
-                None => parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch),
+                None => parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer),
             },
-            ACode::Merge => parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch),
+            ACode::Merge => {
+                parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer)
+            }
         }
     }
 
@@ -188,19 +223,32 @@ impl AdaptiveSorter {
         p: &SortParams,
         scratch: &mut Vec<u64>,
     ) {
+        self.sort_u64_timed(data, p, scratch, &mut PhaseTimer::disabled())
+    }
+
+    /// Timed variant; see [`sort_i64_timed`](Self::sort_i64_timed).
+    pub fn sort_u64_timed(
+        &self,
+        data: &mut [u64],
+        p: &SortParams,
+        scratch: &mut Vec<u64>,
+        timer: &mut PhaseTimer,
+    ) {
         if data.len() < p.fallback_threshold {
             data.sort_unstable();
             return;
         }
         match p.algorithm {
-            ACode::Radix => radix_sort_with_executor(data, self.threads, scratch, self.executor()),
+            ACode::Radix => {
+                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+            }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);
-                sample_sort_with_scratch(data, &tuning, self.executor(), scratch)
+                sample_sort_timed(data, &tuning, self.executor(), scratch, timer)
             }
             // No 64-bit bitonic artifact is compiled; "other cases" branch.
             ACode::Merge | ACode::XlaTile => {
-                parallel_merge_sort_with_scratch(data, &self.merge_tuning(p), scratch)
+                parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer)
             }
         }
     }
@@ -219,6 +267,19 @@ impl AdaptiveSorter {
         p: &SortParams,
         scratch: &mut Vec<u64>,
     ) {
+        self.sort_f64_timed(data, p, scratch, &mut PhaseTimer::disabled())
+    }
+
+    /// Timed variant; see [`sort_i64_timed`](Self::sort_i64_timed). The
+    /// bit transforms themselves are untimed (they are not a kernel phase);
+    /// the u64 dispatch between them reports as usual.
+    pub fn sort_f64_timed(
+        &self,
+        data: &mut [f64],
+        p: &SortParams,
+        scratch: &mut Vec<u64>,
+        timer: &mut PhaseTimer,
+    ) {
         // SAFETY: f64 and u64 have identical size/alignment; every u64 bit
         // pattern is a valid f64 and vice versa. The transforms are inverse
         // bijections, so the slice always holds valid patterns.
@@ -229,7 +290,7 @@ impl AdaptiveSorter {
                 *b = super::floats::f64_to_key(*b);
             }
         });
-        self.sort_u64_with_scratch(bits, p, scratch);
+        self.sort_u64_timed(bits, p, scratch, timer);
         self.executor().run_chunks(bits, self.threads, |_, chunk| {
             for b in chunk.iter_mut() {
                 *b = super::floats::f64_from_key(*b);

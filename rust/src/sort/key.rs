@@ -22,6 +22,7 @@ use std::cmp::Ordering;
 use super::adaptive::AdaptiveSorter;
 use crate::data::validate::{mix64, Fingerprint, Verdict};
 use crate::exec::{self, Executor};
+use crate::obs::PhaseTimer;
 use crate::params::SortParams;
 
 /// Key dtype the service can sort. `name()` is the tag carried by
@@ -97,6 +98,11 @@ pub struct SortScratch {
     peak_recent: usize,
     /// Checkouts since the last retention check.
     checkouts: u32,
+    /// Per-phase kernel timer for the job currently using this arena
+    /// (disabled by default — zero-cost; the traced service enables it and
+    /// drains it after each sort). Lives here so timing, like the buffers,
+    /// needs no per-job allocation.
+    timer: PhaseTimer,
 }
 
 impl SortScratch {
@@ -130,6 +136,31 @@ impl SortScratch {
     pub fn u64_for(&mut self, n: usize) -> &mut Vec<u64> {
         self.note(n);
         Self::ensure(&mut self.w_u64, n, &mut self.grows)
+    }
+
+    /// The phase timer (enable before a job, drain after).
+    pub fn timer_mut(&mut self) -> &mut PhaseTimer {
+        &mut self.timer
+    }
+
+    /// Split-borrow checkouts: the width buffer **and** the timer at once,
+    /// so `SortKey::sort_with` can hand both to the timed kernel entries
+    /// without fighting the borrow checker.
+    pub fn i64_and_timer(&mut self, n: usize) -> (&mut Vec<i64>, &mut PhaseTimer) {
+        self.note(n);
+        (Self::ensure(&mut self.w_i64, n, &mut self.grows), &mut self.timer)
+    }
+
+    /// See [`i64_and_timer`](Self::i64_and_timer).
+    pub fn i32_and_timer(&mut self, n: usize) -> (&mut Vec<i32>, &mut PhaseTimer) {
+        self.note(n);
+        (Self::ensure(&mut self.w_i32, n, &mut self.grows), &mut self.timer)
+    }
+
+    /// See [`i64_and_timer`](Self::i64_and_timer).
+    pub fn u64_and_timer(&mut self, n: usize) -> (&mut Vec<u64>, &mut PhaseTimer) {
+        self.note(n);
+        (Self::ensure(&mut self.w_u64, n, &mut self.grows), &mut self.timer)
     }
 
     /// Record this checkout in the retention window; on the window
@@ -231,7 +262,8 @@ impl SortKey for i64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_i64_with_scratch(data, params, scratch.i64_for(data.len()));
+        let (buf, timer) = scratch.i64_and_timer(data.len());
+        sorter.sort_i64_timed(data, params, buf, timer);
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -277,7 +309,8 @@ impl SortKey for i32 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_i32_with_scratch(data, params, scratch.i32_for(data.len()));
+        let (buf, timer) = scratch.i32_and_timer(data.len());
+        sorter.sort_i32_timed(data, params, buf, timer);
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -324,7 +357,8 @@ impl SortKey for u64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_u64_with_scratch(data, params, scratch.u64_for(data.len()));
+        let (buf, timer) = scratch.u64_and_timer(data.len());
+        sorter.sort_u64_timed(data, params, buf, timer);
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -372,7 +406,8 @@ impl SortKey for f64 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        sorter.sort_f64_with_scratch(data, params, scratch.u64_for(data.len()));
+        let (buf, timer) = scratch.u64_and_timer(data.len());
+        sorter.sort_f64_timed(data, params, buf, timer);
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -636,6 +671,20 @@ mod tests {
             let _ = s.i64_for(1024);
         }
         assert_eq!(s.grows(), g, "steady traffic stays allocation-free");
+    }
+
+    #[test]
+    fn scratch_timer_split_borrow() {
+        use crate::obs::Phase;
+        let mut s = SortScratch::new();
+        assert!(!s.timer_mut().is_enabled(), "timing is off by default");
+        s.timer_mut().set_enabled(true);
+        let (buf, timer) = s.i64_and_timer(100);
+        assert!(buf.capacity() >= 100);
+        timer.add(Phase::RadixScatter, 0.25);
+        assert_eq!(s.timer_mut().drain(), vec![(Phase::RadixScatter, 0.25)]);
+        // The split checkout still counts toward the grow/trim bookkeeping.
+        assert_eq!(s.grows(), 1);
     }
 
     #[test]

@@ -25,10 +25,13 @@ pub use adaptive::{AdaptiveSorter, TileSorter};
 pub use floats::{radix_sort_f32, radix_sort_f64};
 pub use key::{Dtype, SortKey, SortPayload, SortScratch};
 pub use parallel_merge::{
-    merge_runs_bottom_up, parallel_merge_sort, parallel_merge_sort_with_scratch, MergeTuning,
+    merge_runs_bottom_up, parallel_merge_sort, parallel_merge_sort_timed,
+    parallel_merge_sort_with_scratch, MergeTuning,
 };
-pub use radix::{radix_sort, radix_sort_with_executor, radix_sort_with_scratch, RadixKey};
-pub use samplesort::{sample_sort, sample_sort_with_scratch, SampleSortTuning};
+pub use radix::{
+    radix_sort, radix_sort_timed, radix_sort_with_executor, radix_sort_with_scratch, RadixKey,
+};
+pub use samplesort::{sample_sort, sample_sort_timed, sample_sort_with_scratch, SampleSortTuning};
 
 /// Baseline selector used by benches and the CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

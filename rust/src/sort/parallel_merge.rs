@@ -27,6 +27,7 @@ use std::sync::Arc;
 use super::insertion::insertion_sort;
 use super::merge::{merge_gallop_into, merge_path_split, merge_tiled_into};
 use crate::exec::{self, Executor};
+use crate::obs::{Phase, PhaseTimer};
 
 /// Tuning knobs for the refined parallel mergesort (a projection of the full
 /// [`crate::params::SortParams`] genome) plus the executor the parallel
@@ -77,13 +78,28 @@ pub fn parallel_merge_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
     tuning: &MergeTuning,
     scratch: &mut Vec<T>,
 ) {
+    parallel_merge_sort_timed(data, tuning, scratch, &mut PhaseTimer::disabled())
+}
+
+/// [`parallel_merge_sort_with_scratch`] with per-phase timing: the base-run
+/// insertion sort accumulates into `MergeRunSort`, the width-doubling merge
+/// levels into `MergeLevels`. With a disabled timer the brackets are
+/// branches — this *is* the untimed hot path.
+pub fn parallel_merge_sort_timed<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    tuning: &MergeTuning,
+    scratch: &mut Vec<T>,
+    timer: &mut PhaseTimer,
+) {
     let n = data.len();
     if n <= 1 {
         return;
     }
     let chunk = tuning.insertion_threshold.clamp(8, n.max(8));
     if n <= chunk {
+        let started = timer.begin();
         insertion_sort(data);
+        timer.end(Phase::MergeRunSort, started);
         return;
     }
 
@@ -92,6 +108,7 @@ pub fn parallel_merge_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
     // concurrency (the executor — especially the process-wide one — is
     // usually wider).
     {
+        let started = timer.begin();
         let nchunks = n.div_ceil(chunk);
         let ranges: Vec<Range<usize>> =
             (0..nchunks).map(|i| i * chunk..((i + 1) * chunk).min(n)).collect();
@@ -112,10 +129,13 @@ pub fn parallel_merge_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
                 }
             });
         }
+        timer.end(Phase::MergeRunSort, started);
     }
 
     // Phase 2 — bottom-up parallel merging, ping-pong between buffers.
+    let started = timer.begin();
     merge_runs_bottom_up(data, chunk, tuning, scratch);
+    timer.end(Phase::MergeLevels, started);
 }
 
 /// Bottom-up parallel merge of an array already composed of sorted runs of
@@ -360,6 +380,25 @@ mod tests {
     fn single_thread_path() {
         let data = generate_i64(5000, Distribution::Uniform, 19, 1);
         check(&data, &MergeTuning { threads: 1, ..Default::default() });
+    }
+
+    #[test]
+    fn timed_variant_reports_merge_phases_only() {
+        let tuning = MergeTuning { threads: 3, insertion_threshold: 256, ..Default::default() };
+        let mut timer = PhaseTimer::enabled();
+        let mut scratch = Vec::new();
+        let mut data = generate_i64(30_000, Distribution::Uniform, 21, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        parallel_merge_sort_timed(&mut data, &tuning, &mut scratch, &mut timer);
+        assert_eq!(data, expect);
+        let phases = timer.drain();
+        assert!(phases.iter().any(|(p, _)| *p == Phase::MergeRunSort), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::MergeLevels), "{phases:?}");
+        assert!(
+            phases.iter().all(|(p, _)| p.kernel() == crate::obs::Kernel::Merge),
+            "{phases:?}"
+        );
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //!   computed in one read sweep before pass 0, halving full-array reads.
 
 use crate::exec;
+use crate::obs::{Phase, PhaseTimer};
 
 const RADIX_BITS: usize = 8;
 const BUCKETS: usize = 1 << RADIX_BITS;
@@ -132,6 +133,20 @@ pub fn radix_sort_with_executor<T: RadixKey>(
     scratch: &mut Vec<T>,
     exec: &exec::Executor,
 ) {
+    radix_sort_timed(data, threads, scratch, exec, &mut PhaseTimer::disabled())
+}
+
+/// [`radix_sort_with_executor`] with per-phase timing: the coordinating
+/// thread brackets each fan-out (min/max reduce, per-pass histograms,
+/// scatters, final copy-back) into `timer`'s accumulators. With a disabled
+/// timer every bracket is a branch — this *is* the untimed hot path.
+pub fn radix_sort_timed<T: RadixKey>(
+    data: &mut [T],
+    threads: usize,
+    scratch: &mut Vec<T>,
+    exec: &exec::Executor,
+    timer: &mut PhaseTimer,
+) {
     let n = data.len();
     if n <= 1 {
         return;
@@ -157,6 +172,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
     // all-pass histogram pre-sweep that cost O(PASSES·n) increments).
     let bounds = exec::partition_even(n, threads);
     let nth = bounds.len();
+    let started = timer.begin();
     let (min_bits, max_bits) = {
         let views = exec::carve_mut(&mut *data, &bounds);
         // Each executor task owns one view and returns its (lo, hi) into a
@@ -182,6 +198,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
         });
         minmax.iter().fold((u64::MAX, 0u64), |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)))
     };
+    timer.end(Phase::RadixMinMax, started);
     let delta = max_bits - min_bits;
 
     let mut src_is_data = true;
@@ -196,6 +213,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
         // Per-thread local histograms of the *current* source layout
         // (Algorithm 4, line 5). These must be recomputed each pass: the
         // scatter permutes data, so block contents change.
+        let started = timer.begin();
         let src_now: &[T] = if src_is_data { &*data } else { &*scratch };
         let mut hists: Vec<[usize; BUCKETS]> = exec.run_map(nth, |t| {
             let chunk = &src_now[bounds[t].clone()];
@@ -214,6 +232,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
                 global[b] += h[b];
             }
         }
+        timer.end(Phase::RadixHistogram, started);
         if global.iter().any(|&c| c == n) {
             continue;
         }
@@ -238,6 +257,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
 
         // Scatter.
         {
+            let started = timer.begin();
             let (src, dst): (&[T], &mut [T]) = if src_is_data {
                 (&*data, &mut *scratch)
             } else {
@@ -257,6 +277,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
                     cursors[b] += 1;
                 }
             });
+            timer.end(Phase::RadixScatter, started);
         }
         src_is_data = !src_is_data;
     }
@@ -264,6 +285,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
     // If the last scatter landed in scratch, copy back (parallel). Views
     // are carved from the same `bounds2` the source is indexed with, so the
     // geometry coupling is structural.
+    let started = timer.begin();
     if !src_is_data {
         let bounds2 = exec::partition_even(n, threads);
         let src: &[T] = scratch;
@@ -279,6 +301,7 @@ pub fn radix_sort_with_executor<T: RadixKey>(
             }
         });
     }
+    timer.end(Phase::RadixCopyback, started);
 }
 
 #[cfg(test)]
@@ -394,6 +417,27 @@ mod tests {
         let mut expect = data;
         expect.sort_unstable();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn timed_variant_reports_radix_phases_only() {
+        let exec = crate::exec::Executor::new(3);
+        let mut timer = PhaseTimer::enabled();
+        let mut scratch = Vec::new();
+        let mut data = generate_i64(30_000, Distribution::Uniform, 55, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        radix_sort_timed(&mut data, 4, &mut scratch, &exec, &mut timer);
+        assert_eq!(data, expect);
+        let phases = timer.drain();
+        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixMinMax), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixHistogram), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixScatter), "{phases:?}");
+        assert!(
+            phases.iter().all(|(p, _)| p.kernel() == crate::obs::Kernel::Radix),
+            "{phases:?}"
+        );
+        assert!(phases.iter().all(|&(_, secs)| secs > 0.0));
     }
 
     #[test]

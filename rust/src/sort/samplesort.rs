@@ -18,6 +18,7 @@
 
 use super::introsort::introsort;
 use crate::exec::{self, Executor};
+use crate::obs::{Phase, PhaseTimer};
 use crate::rng::Xoshiro256pp;
 
 /// Tuning for samplesort.
@@ -60,22 +61,42 @@ pub fn sample_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
     exec: &Executor,
     scratch: &mut Vec<T>,
 ) {
+    sample_sort_timed(data, tuning, exec, scratch, &mut PhaseTimer::disabled())
+}
+
+/// [`sample_sort_with_scratch`] with per-phase timing: splitter sampling
+/// accumulates into `SampleSplitters`, classification + offsets + scatter
+/// into `SamplePartition`, the per-bucket sorts into `SampleBucketSort`.
+/// With a disabled timer the brackets are branches — this *is* the untimed
+/// hot path.
+pub fn sample_sort_timed<T: Copy + Ord + Send + Sync + Default>(
+    data: &mut [T],
+    tuning: &SampleSortTuning,
+    exec: &Executor,
+    scratch: &mut Vec<T>,
+    timer: &mut PhaseTimer,
+) {
     let n = data.len();
     if n <= tuning.sequential_threshold.max(64) {
+        let started = timer.begin();
         introsort(data);
+        timer.end(Phase::SampleBucketSort, started);
         return;
     }
     let buckets = tuning.buckets.clamp(2, n / 16);
 
     // 1. Splitters from an oversampled random sample.
+    let started = timer.begin();
     let mut rng = Xoshiro256pp::seeded(tuning.seed);
     let sample_n = (buckets * tuning.oversample.max(1)).min(n);
     let mut sample: Vec<T> = (0..sample_n).map(|_| data[rng.below(n)]).collect();
     sample.sort_unstable();
     let splitters: Vec<T> =
         (1..buckets).map(|i| sample[i * sample_n / buckets]).collect();
+    timer.end(Phase::SampleSplitters, started);
 
     // 2. Per-thread classification + bucket counts.
+    let started = timer.begin();
     let bounds = exec::partition_even(n, tuning.threads);
     let nth = bounds.len();
     let data_ro: &[T] = data;
@@ -136,11 +157,13 @@ pub fn sample_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
             }
         });
     }
+    timer.end(Phase::SamplePartition, started);
 
     // 5. Sort each bucket in parallel, buckets grouped round-robin into at
     //    most `threads` executor tasks (the caller's budget bounds
     //    concurrency), writing back into `data`.
     {
+        let started = timer.begin();
         let ranges: Vec<std::ops::Range<usize>> =
             (0..buckets).map(|b| bucket_start[b]..bucket_start[b + 1]).collect();
         let out_views = exec::carve_mut(data, &ranges);
@@ -156,6 +179,7 @@ pub fn sample_sort_with_scratch<T: Copy + Ord + Send + Sync + Default>(
                 introsort(out);
             }
         });
+        timer.end(Phase::SampleBucketSort, started);
     }
 }
 
@@ -226,6 +250,27 @@ mod tests {
     fn sequential_fallback_small() {
         let t = SampleSortTuning::for_threads(4);
         check(&generate_i64(5000, Distribution::Uniform, 77, 2), &t); // below threshold
+    }
+
+    #[test]
+    fn timed_variant_reports_sample_phases_only() {
+        let exec = crate::exec::Executor::new(3);
+        let t = SampleSortTuning { sequential_threshold: 1000, ..SampleSortTuning::for_threads(3) };
+        let mut timer = PhaseTimer::enabled();
+        let mut scratch = Vec::new();
+        let mut data = generate_i64(30_000, Distribution::Uniform, 79, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        sample_sort_timed(&mut data, &t, &exec, &mut scratch, &mut timer);
+        assert_eq!(data, expect);
+        let phases = timer.drain();
+        assert!(phases.iter().any(|(p, _)| *p == Phase::SampleSplitters), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::SamplePartition), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::SampleBucketSort), "{phases:?}");
+        assert!(
+            phases.iter().all(|(p, _)| p.kernel() == crate::obs::Kernel::Sample),
+            "{phases:?}"
+        );
     }
 
     #[test]

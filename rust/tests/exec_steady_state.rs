@@ -1,6 +1,11 @@
 //! PR-5 acceptance: after warmup, the steady-state service sort path
 //! performs **zero thread spawns** and **zero scratch allocations**.
 //!
+//! The service below is built the default way — with a *disabled* tracer —
+//! so the flat-alloc assertions double as the observability guarantee that
+//! tracing off means no hot-path cost: no ring, no clock reads, no trace
+//! buffers growing (asserted explicitly at the end).
+//!
 //! This file deliberately holds a single `#[test]`: the spawn counter is
 //! process-global (`exec::thread_spawn_count`), so the assertions are only
 //! race-free when nothing else in the same test binary constructs executors
@@ -39,6 +44,7 @@ fn steady_state_sort_path_is_spawn_free_and_alloc_free() {
         autotune: None,
         exec: Default::default(),
     });
+    assert!(!svc.tracer().is_enabled(), "the default service must not trace");
     // Warmup: first-sizes the worker's scratch arena and forces the
     // lazily-built global executor (data generation runs on it).
     batch(&svc, 8);
@@ -73,6 +79,17 @@ fn steady_state_sort_path_is_spawn_free_and_alloc_free() {
         grows_before,
         "single-job path reuses the warm arenas"
     );
+    // Tracing-disabled means fully inert: no events buffered, none dropped,
+    // and no kernel-phase sample windows accumulating behind the scenes.
+    assert_eq!(svc.tracer().dropped(), 0);
+    assert_eq!(svc.metrics().counter("trace.dropped"), 0);
+    for p in evosort::obs::Phase::all() {
+        assert!(
+            svc.metrics().percentile(p.metric_name(), 50.0).is_none(),
+            "{}: untraced sorts must not record phase samples",
+            p.metric_name()
+        );
+    }
 
     // --- Sorter level: every Algorithm-6 kernel keeps one arena warm
     // across 100 same-shape jobs. -------------------------------------

@@ -1,0 +1,338 @@
+//! End-to-end tracing invariants: every submitted job's span chain ends in
+//! **exactly one** terminal event — across normal completion, a
+//! cancel-before-dispatch, an overload shed, and a chaos-killed shard — and
+//! a flooded trace ring drops events (counted) without ever stalling a
+//! sort.
+//!
+//! The sharded tests spawn real `evosort shard-worker` child processes
+//! (the spec overrides the spawn path with `CARGO_BIN_EXE_evosort`, same as
+//! `shard_integration.rs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use evosort::coordinator::{
+    JobError, JobResult, ServiceConfig, ShardRouter, ShardSpec, SortRequest, SortService,
+};
+use evosort::data::{generate_i64, Distribution};
+use evosort::obs::{report, EventKind, FailReason, TraceEvent, TraceHub, Tracer, ROUTER_SHARD};
+
+fn wait_until(limit: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + limit;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[cfg(unix)]
+fn traced_spec(shards: usize) -> ShardSpec {
+    ShardSpec {
+        shards,
+        workers_per_shard: 1,
+        sort_threads: 2,
+        binary: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_evosort"))),
+        publish_interval: Duration::from_millis(50),
+        trace: true,
+        ..ShardSpec::default()
+    }
+}
+
+/// Flush the hub and wait until the retained timeline passes the
+/// span-chain check (worker batches arrive on telemetry ticks, so the
+/// timeline converges shortly after the jobs resolve).
+fn settled_snapshot(hub: &TraceHub, extra: impl Fn(&[TraceEvent]) -> bool) -> Vec<TraceEvent> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        hub.flush();
+        let snapshot = hub.snapshot();
+        if report::check(&snapshot).is_empty() && extra(&snapshot) {
+            return snapshot;
+        }
+        if Instant::now() > deadline {
+            return snapshot;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn terminals_for(events: &[TraceEvent], trace: u64) -> Vec<&TraceEvent> {
+    events.iter().filter(|e| e.trace_id == trace && e.kind.is_terminal()).collect()
+}
+
+#[test]
+fn traced_batch_yields_exactly_one_terminal_per_job() {
+    let tracer = Tracer::enabled(1 << 14, 0);
+    let svc = SortService::new_traced(
+        ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 64, ..Default::default() },
+        tracer.clone(),
+    );
+    let hub = TraceHub::new(tracer, None, Some(Arc::clone(svc.metrics()))).unwrap();
+
+    let jobs = 24usize;
+    let requests: Vec<SortRequest> = (0..jobs)
+        .map(|i| SortRequest::new(generate_i64(150_000, Distribution::Uniform, i as u64, 2)))
+        .collect();
+    let report_stats = svc.submit_batch_requests(requests).wait();
+    assert_eq!(report_stats.stats.failed, 0);
+    assert_eq!(report_stats.stats.jobs, jobs);
+
+    let snapshot = settled_snapshot(&hub, |evs| {
+        evs.iter().filter(|e| e.kind.is_terminal()).count() >= jobs
+    });
+    let problems = report::check(&snapshot);
+    assert!(problems.is_empty(), "span chains incomplete: {problems:?}");
+    let summary = report::summarize(&snapshot);
+    assert_eq!(summary.traces, jobs);
+    assert_eq!(summary.completed, jobs);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(
+        summary.completed_with_phases, jobs,
+        "every traced 150k-element sort must record kernel phases"
+    );
+    assert!(!summary.phase_stats.is_empty());
+    assert_eq!(hub.dropped(), 0, "a 16k ring absorbs a 24-job batch");
+}
+
+#[test]
+fn cancel_before_dispatch_terminates_as_exactly_one_cancelled() {
+    // One pool worker: while it sorts the big job, the small one is still
+    // queued — a cancel then must land before dispatch, and the trace must
+    // end in exactly one Failed{cancelled} with no Dispatched span.
+    let tracer = Tracer::enabled(1 << 12, 0);
+    let svc = SortService::new_traced(
+        ServiceConfig { workers: 1, sort_threads: 2, queue_capacity: 32, ..Default::default() },
+        tracer.clone(),
+    );
+    let big = svc.submit_request(SortRequest::new(generate_i64(
+        2_000_000,
+        Distribution::Uniform,
+        1,
+        2,
+    )));
+    let small =
+        svc.submit_request(SortRequest::new(generate_i64(1_000, Distribution::Uniform, 2, 2)));
+    assert!(small.cancel(), "cancel must land while the job is queued");
+    let cancelled_id = small.id();
+    assert_eq!(small.wait(), Err(JobError::Cancelled));
+    assert!(big.wait().is_ok());
+
+    // The terminal event is emitted when the worker honours the cancel,
+    // which can trail the ticket resolving — accumulate until it shows.
+    let mut events: Vec<TraceEvent> = Vec::new();
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            tracer.drain_into(&mut events);
+            events.iter().any(|e| {
+                e.trace_id == cancelled_id
+                    && e.kind == EventKind::Failed { reason: FailReason::Cancelled }
+            })
+        }),
+        "the cancelled job must emit its Failed{{cancelled}} terminal"
+    );
+    let problems = report::check(&events);
+    assert!(problems.is_empty(), "{problems:?}");
+    assert_eq!(terminals_for(&events, cancelled_id).len(), 1, "exactly one terminal");
+    assert!(
+        !events
+            .iter()
+            .any(|e| e.trace_id == cancelled_id
+                && matches!(e.kind, EventKind::Dispatched { .. })),
+        "a cancel-before-dispatch must never reach a Dispatched span"
+    );
+}
+
+#[test]
+fn flooded_tiny_ring_drops_events_but_never_stalls_sorts() {
+    // An 8-slot ring cannot hold even one job's span chain — every sort
+    // must still complete, and the overflow must surface as a drop count,
+    // not as blocking.
+    let tracer = Tracer::enabled(8, 0);
+    let svc = SortService::new_traced(
+        ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 64, ..Default::default() },
+        tracer.clone(),
+    );
+    let requests: Vec<SortRequest> = (0..40u64)
+        .map(|i| SortRequest::new(generate_i64(50_000, Distribution::Uniform, i, 2)))
+        .collect();
+    let report_stats = svc.submit_batch_requests(requests).wait();
+    assert_eq!(report_stats.stats.failed, 0, "drops must not fail sorts");
+    assert_eq!(report_stats.stats.invalid, 0);
+    assert!(
+        tracer.dropped() > 0,
+        "40 undrained span chains must overflow an 8-slot ring"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn overload_shed_jobs_get_exactly_one_overloaded_terminal() {
+    // Saturate a 1-shard fleet (window 1, router queue 2) like
+    // `shard_integration::saturated_router_sheds_…`, with tracing on: shed
+    // jobs must trace Submitted → Failed{overloaded} on the router stream,
+    // with no Dispatched span and no second terminal.
+    let spec = ShardSpec {
+        max_inflight_per_shard: 1,
+        router_queue_capacity: 2,
+        ..traced_spec(1)
+    };
+    let router = ShardRouter::spawn(spec).expect("router up");
+    let hub = router.trace_hub().expect("tracing was requested");
+
+    // Generate ahead of time so the burst is back-to-back enqueues.
+    let datasets: Vec<Vec<i64>> =
+        (0..16u64).map(|i| generate_i64(400_000, Distribution::Uniform, i, 2)).collect();
+    let tickets: Vec<_> = datasets
+        .into_iter()
+        .map(|data| router.submit_request(SortRequest::new(data)))
+        .collect();
+    let results: Vec<(u64, JobResult)> =
+        tickets.into_iter().map(|t| (t.id(), t.wait())).collect();
+    let shed: Vec<u64> = results
+        .iter()
+        .filter(|(_, r)| matches!(r, Err(JobError::Overloaded)))
+        .map(|(id, _)| *id)
+        .collect();
+    assert!(!shed.is_empty(), "a 16-job burst against capacity 2 must shed");
+
+    let snapshot = settled_snapshot(hub, |evs| {
+        evs.iter().filter(|e| e.kind.is_terminal() && e.shard == ROUTER_SHARD).count() >= 16
+    });
+    let problems = report::check(&snapshot);
+    assert!(problems.is_empty(), "span chains incomplete: {problems:?}");
+    let summary = report::summarize(&snapshot);
+    assert_eq!(summary.traces, 16);
+    assert_eq!(summary.failed, shed.len());
+    assert_eq!(summary.failures_by_reason.get("overloaded"), Some(&shed.len()));
+    for id in &shed {
+        assert_eq!(terminals_for(&snapshot, *id).len(), 1, "trace {id}");
+        assert!(
+            !snapshot
+                .iter()
+                .any(|e| e.trace_id == *id && matches!(e.kind, EventKind::Dispatched { .. })),
+            "shed trace {id} must never dispatch"
+        );
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn chaos_killed_shard_still_resolves_every_trace_on_the_router_stream() {
+    // Kill a busy shard mid-batch. The dead worker's own ring dies with it
+    // (its in-flight terminals are stranded in the killed process), but the
+    // router's stream must stay invariant-complete: every submission ends
+    // in exactly one terminal — Completed on the survivor, or
+    // Failed{worker_lost} for the lost window.
+    let router = ShardRouter::spawn(traced_spec(2)).expect("router up");
+    let hub = router.trace_hub().expect("tracing was requested");
+    let mut lost_any = false;
+
+    for attempt in 0..3u64 {
+        let requests: Vec<SortRequest> = (0..12u64)
+            .map(|i| {
+                SortRequest::new(generate_i64(800_000, Distribution::Uniform, i ^ (attempt * 7), 2))
+            })
+            .collect();
+        let stream = router.submit_batch_requests(requests).stream();
+        assert!(
+            wait_until(Duration::from_secs(30), || router.inflight(0) > 0),
+            "shard 0 never received work"
+        );
+        assert!(router.kill_shard(0), "kill must reach a live child");
+        let results: Vec<JobResult> = stream.collect();
+        assert_eq!(results.len(), 12, "every slot resolves");
+        if results.iter().any(|r| r.is_err()) {
+            lost_any = true;
+            break;
+        }
+    }
+    assert!(lost_any, "killing a busy shard must surface Err(WorkerLost)");
+
+    // The fleet-wide check would flag the killed worker's stranded stream;
+    // the invariant that must hold regardless of SIGKILL timing is the
+    // router's own stream.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let router_events = loop {
+        hub.flush();
+        let evs: Vec<TraceEvent> =
+            hub.snapshot().into_iter().filter(|e| e.shard == ROUTER_SHARD).collect();
+        if report::check(&evs).is_empty() || Instant::now() > deadline {
+            break evs;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let problems = report::check(&router_events);
+    assert!(problems.is_empty(), "router span chains incomplete: {problems:?}");
+    let summary = report::summarize(&router_events);
+    assert!(
+        summary.failures_by_reason.get("worker_lost").copied().unwrap_or(0) >= 1,
+        "the lost window must trace as Failed{{worker_lost}}: {:?}",
+        summary.failures_by_reason
+    );
+    for ev in router_events.iter().filter(|e| e.kind == EventKind::Submitted) {
+        assert_eq!(
+            terminals_for(&router_events, ev.trace_id).len(),
+            1,
+            "trace {} on the router stream",
+            ev.trace_id
+        );
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn fleet_traces_carry_shard_attribution_end_to_end() {
+    // A clean 2-shard batch: every trace's chain must span both the router
+    // stream and exactly the worker shard the router dispatched it to, and
+    // carry that worker's kernel phases.
+    let router = ShardRouter::spawn(traced_spec(2)).expect("router up");
+    let hub = router.trace_hub().expect("tracing was requested");
+
+    let jobs = 12u64;
+    let requests: Vec<SortRequest> = (0..jobs)
+        .map(|i| SortRequest::new(generate_i64(150_000, Distribution::Uniform, i, 2)))
+        .collect();
+    let report_stats = router.submit_batch_requests(requests).wait();
+    assert_eq!(report_stats.stats.failed, 0);
+
+    let snapshot = settled_snapshot(hub, |evs| {
+        let worker_terminals =
+            evs.iter().filter(|e| e.kind.is_terminal() && e.shard != ROUTER_SHARD).count();
+        worker_terminals >= jobs as usize
+    });
+    let problems = report::check(&snapshot);
+    assert!(problems.is_empty(), "span chains incomplete: {problems:?}");
+    let summary = report::summarize(&snapshot);
+    assert_eq!(summary.completed, jobs as usize);
+    assert_eq!(
+        summary.completed_with_phases, jobs as usize,
+        "every trace must carry the executing worker's kernel phases"
+    );
+
+    let trace_ids: std::collections::BTreeSet<u64> =
+        snapshot.iter().map(|e| e.trace_id).collect();
+    let mut shards_seen = std::collections::BTreeSet::new();
+    for id in trace_ids {
+        let chain: Vec<&TraceEvent> =
+            snapshot.iter().filter(|e| e.trace_id == id).collect();
+        let target = chain
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::Dispatched { shard } if e.shard == ROUTER_SHARD => Some(shard),
+                _ => None,
+            })
+            .expect("the router records where it dispatched");
+        let worker_shards: std::collections::BTreeSet<u32> =
+            chain.iter().map(|e| e.shard).filter(|s| *s != ROUTER_SHARD).collect();
+        assert_eq!(
+            worker_shards,
+            std::collections::BTreeSet::from([target]),
+            "trace {id}: worker events must come from the dispatched shard"
+        );
+        shards_seen.insert(target);
+    }
+    assert_eq!(shards_seen.len(), 2, "both shards took part in the batch");
+}
