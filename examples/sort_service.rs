@@ -20,6 +20,7 @@ fn main() {
         queue_capacity: 8, // small queue => visible backpressure
         autotune: None,    // see `serve --autotune` for the online tuner
         exec: Default::default(), // persistent parked executor (see README "Performance")
+        external: None, // see `serve --memory-budget` for out-of-core escalation
     });
 
     // Pre-warm the tuning cache for one workload class, as a tuned

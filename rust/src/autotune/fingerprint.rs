@@ -204,6 +204,24 @@ impl fmt::Display for Fingerprint {
     }
 }
 
+/// Suffix segment marking a *beyond-memory* fingerprint class: the same
+/// workload shape, but sorted out of core (crate::extsort). Spill genes are
+/// hardware- and disk-dependent in ways the in-memory genes are not, so the
+/// escalated jobs get their own cache classes instead of polluting the
+/// in-RAM ones.
+pub const BEYOND_MEMORY_TAG: &str = "xm";
+
+/// Derive the beyond-memory class label from a base fingerprint label, e.g.
+/// `b16:mix:uniq:w4:pm` → `b16:mix:uniq:w4:pm:xm`.
+pub fn beyond_memory_label(label: &str) -> String {
+    format!("{label}:{BEYOND_MEMORY_TAG}")
+}
+
+/// Is `label` a beyond-memory class?
+pub fn is_beyond_memory_label(label: &str) -> bool {
+    label.ends_with(":xm")
+}
+
 /// Classify sortedness from at most [`PROBE_CAP`] strided adjacent pairs
 /// (total order via the monotone `i64` projection).
 fn run_shape_keys<K: SortKey>(data: &[K]) -> RunShape {
@@ -336,6 +354,20 @@ mod tests {
         let data = generate_i64(30_000, Distribution::Zipf, 5, 2);
         assert_eq!(Fingerprint::of(&data), Fingerprint::of_keys(&data));
         assert_eq!(Fingerprint::of(&data).dtype, crate::sort::Dtype::I64);
+    }
+
+    #[test]
+    fn beyond_memory_labels_tag_and_detect() {
+        let base = Fingerprint::of(&generate_i64(10_000, Distribution::Uniform, 9, 2)).label();
+        let xm = beyond_memory_label(&base);
+        assert!(xm.ends_with(":xm"));
+        assert!(is_beyond_memory_label(&xm));
+        assert!(!is_beyond_memory_label(&base));
+        assert_eq!(xm.split(':').count(), base.split(':').count() + 1);
+        // Tagged dtypes compose: b..:f64:xm.
+        let f = beyond_memory_label("b12:mix:uniq:w8:pm:f64");
+        assert!(is_beyond_memory_label(&f));
+        assert_eq!(f.split(':').count(), 7);
     }
 
     #[test]

@@ -198,8 +198,8 @@ impl ClassState {
 }
 
 /// Persist fingerprint-keyed parameters in the versioned text format (the
-/// tuning cache writes a `# evosort-tuning-cache v2` header; loading accepts
-/// both the headered format and legacy v1 files).
+/// tuning cache writes a `# evosort-tuning-cache v3` header; loading accepts
+/// the headered formats and legacy v1 files).
 pub fn persist_params(cache: &TuningCache, path: &Path) -> Result<()> {
     cache.save(path)
 }

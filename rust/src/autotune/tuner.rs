@@ -27,11 +27,14 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::tuning_cache::TuningCache;
+use crate::extsort::ExtBounds;
 use crate::ga::{GaConfig, GaDriver, SortTimingFitness};
 use crate::obs::{EventKind, Tracer};
+use crate::rng::Xoshiro256pp;
 use crate::sort::AdaptiveSorter;
 use crate::symbolic::SymbolicModel;
 
+use super::fingerprint;
 use super::policy::{self, AutotunePolicy, ClassState};
 
 /// One observed job: everything the tuner needs, nothing it doesn't.
@@ -240,7 +243,13 @@ impl TunerWorker {
             if let Some(label) = eligible {
                 cycles += 1;
                 let state = classes.get_mut(&label).expect("picked class exists");
-                let spent = self.cycle(&label, state, &mut fitness_cache, cycles);
+                // Beyond-memory classes tune their spill genes against the
+                // merge proxy; in-RAM classes run the GA over the sort genome.
+                let spent = if fingerprint::is_beyond_memory_label(&label) {
+                    self.ext_cycle(&label, state, cycles)
+                } else {
+                    self.cycle(&label, state, &mut fitness_cache, cycles)
+                };
                 self.throttle(spent);
             }
         }
@@ -352,6 +361,101 @@ impl TunerWorker {
             if self.tracer.is_enabled() {
                 let reason =
                     if result.best_genome == seed_genome { "no_change" } else { "below_margin" };
+                self.tracer.emit(
+                    0,
+                    EventKind::TunerRejected { fingerprint: label.into(), reason: reason.into() },
+                );
+            }
+        }
+        state.mark_tuned(gens);
+        started.elapsed()
+    }
+
+    /// One tuning cycle for a beyond-memory (`:xm`) class: instead of
+    /// GA-refining the in-RAM genome, run a deterministic random search
+    /// over the spill genes (run size, merge fan-in) scored by the
+    /// in-memory merge proxy [`simulate_fitness`](crate::extsort::simulate_fitness)
+    /// on the retained sample. The spill threshold is an escalation knob,
+    /// not a merge-shape one, so the search leaves it alone.
+    fn ext_cycle(&self, label: &str, state: &mut ClassState, cycle_no: u64) -> Duration {
+        let started = Instant::now();
+        let seed_params = self
+            .cache
+            .get(state.n_hint, label)
+            .unwrap_or_else(|| self.model.params_for(state.n_hint));
+        let bounds = ExtBounds::default();
+        let seed_ext =
+            bounds.clamp(&self.cache.get_ext(state.n_hint, label).unwrap_or_default().to_genes());
+        let repeats = self.policy.repeats.max(1);
+        let seed_fit =
+            crate::extsort::simulate_fitness(&state.sample, state.n_hint, &seed_ext, repeats);
+        let gens = self.policy.generations_per_cycle.max(1);
+        let candidates = (self.policy.population.max(2) * gens).min(64);
+        let mut rng = Xoshiro256pp::seeded(
+            self.policy.ga_seed ^ cycle_no.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut best = seed_ext;
+        let mut best_fit = seed_fit;
+        for _ in 0..candidates {
+            let mut c = best;
+            // Log-uniform run size (2^10..=2^26) and uniform fan-in
+            // (2..=64), each mutated with probability 1/2 — a greedy
+            // hill-climb from the incumbent.
+            if rng.next_u32() % 2 == 0 {
+                c.run_size = 1i64 << (10 + rng.next_u32() % 17);
+            }
+            if rng.next_u32() % 2 == 0 {
+                c.merge_fan_in = 2 + (rng.next_u64() % 63) as i64;
+            }
+            let c = bounds.clamp(&c.to_genes());
+            if c == best {
+                continue;
+            }
+            let fit = crate::extsort::simulate_fitness(&state.sample, state.n_hint, &c, repeats);
+            if fit < best_fit {
+                best = c;
+                best_fit = fit;
+            }
+        }
+        self.metrics.incr("tuner.cycles");
+        self.metrics.add("tuner.generations", gens as u64);
+        let required = seed_fit * (1.0 - self.policy.min_improvement_pct.max(0.0) / 100.0);
+        if best != seed_ext && seed_fit > 0.0 && best_fit < required {
+            let improvement_pct = (seed_fit - best_fit) / seed_fit * 100.0;
+            self.cache.put_ext_with_fitness(state.n_hint, label, seed_params, best, best_fit);
+            self.metrics.incr("tuner.publishes");
+            self.metrics.incr("tuner.ext_publishes");
+            self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
+            if self.tracer.is_enabled() {
+                self.tracer.emit(
+                    0,
+                    EventKind::TunerPublished {
+                        fingerprint: label.into(),
+                        params: format!(
+                            "run_size={} merge_fan_in={} spill_threshold={}",
+                            best.run_size, best.merge_fan_in, best.spill_threshold
+                        )
+                        .into_boxed_str(),
+                        fitness: best_fit,
+                        improvement_pct,
+                    },
+                );
+            }
+            crate::log_info!(
+                "autotune: spill class {label} improved {improvement_pct:.1}% \
+                 (run_size={} fan_in={})",
+                best.run_size,
+                best.merge_fan_in
+            );
+            if let Some(path) = &self.policy.persist_path {
+                if let Err(e) = policy::persist_params(&self.cache, path) {
+                    crate::log_warn!("autotune: persist failed: {e:#}");
+                }
+            }
+        } else {
+            self.metrics.incr("tuner.no_change");
+            if self.tracer.is_enabled() {
+                let reason = if best == seed_ext { "no_change" } else { "below_margin" };
                 self.tracer.emit(
                     0,
                     EventKind::TunerRejected { fingerprint: label.into(), reason: reason.into() },
@@ -503,6 +607,34 @@ mod tests {
             "observe must never block the caller"
         );
         assert_eq!(metrics.counter("tuner.observations"), 500);
+        drop(tuner);
+    }
+
+    #[test]
+    fn beyond_memory_class_tunes_spill_genes() {
+        use crate::extsort::ExtParams;
+        let (tuner, cache, metrics) = tuner_fixture(AutotunePolicy::quick());
+        let data = generate_i64(20_000, Distribution::Uniform, 5, 2);
+        let label = fingerprint::beyond_memory_label(&Fingerprint::of(&data).label());
+        let n_hint = 5_000_000; // pretend the class is far beyond RAM
+        // Seed the class with pathological spill genes: minimum runs,
+        // minimum fan-in — almost any candidate the search tries beats it.
+        let awful = ExtParams { run_size: 1024, merge_fan_in: 2, spill_threshold: 0 };
+        cache.put_ext_with_fitness(n_hint, &label, SymbolicModel::paper().params_for(n_hint), awful, 1e9);
+        let sample = fingerprint::sample(&data, 4096);
+        let tuned = wait_until(30.0, || {
+            tuner.observe(Observation {
+                label: label.clone(),
+                n: n_hint,
+                secs: 0.5,
+                sample: Some(sample.clone()),
+            });
+            cache.get_ext(n_hint, &label) != Some(awful)
+        });
+        assert!(tuned, "spill genes never improved for the :xm class");
+        assert!(metrics.counter("tuner.ext_publishes") > 0);
+        let tuned_ext = cache.get_ext(n_hint, &label).expect("ext genes cached");
+        assert!(tuned_ext.run_size >= 1024 && tuned_ext.merge_fan_in >= 2);
         drop(tuner);
     }
 

@@ -155,6 +155,52 @@ fn threads_of(args: &Args) -> Result<usize> {
     args.usize_or("threads", default_threads())
 }
 
+/// Parse `--memory-budget <bytes>` / `--spill-dir <path>` into the
+/// out-of-core escalation config. No budget (the default) keeps every job
+/// in RAM — the historical behaviour.
+fn external_config_of(args: &Args) -> Result<Option<crate::extsort::ExternalConfig>> {
+    let budget = args.usize_or("memory-budget", 0)?;
+    if budget == 0 {
+        anyhow::ensure!(
+            args.get("spill-dir").is_none(),
+            "--spill-dir requires --memory-budget <bytes>"
+        );
+        return Ok(None);
+    }
+    let mut config = crate::extsort::ExternalConfig::new(budget);
+    if let Some(dir) = args.get("spill-dir") {
+        config = config.with_spill_dir(std::path::PathBuf::from(dir));
+    }
+    Ok(Some(config))
+}
+
+/// Post-run assertions for a `serve --memory-budget` run (the CI spill
+/// smoke): at least one run actually spilled, and — when the user pointed
+/// us at a dedicated `--spill-dir` — the root holds no leftover per-job
+/// spill directories.
+fn check_spill_smoke(svc: &SortService, spill_dir: Option<&std::path::Path>) -> Result<()> {
+    let escalated = svc.metrics().counter("extsort.jobs");
+    let spilled = svc.metrics().counter("extsort.runs_spilled");
+    println!(
+        "out-of-core: {escalated} jobs escalated, {spilled} runs spilled, \
+         last peak working set {:.0} bytes",
+        svc.metrics().gauge("extsort.last_peak_bytes").unwrap_or(0.0)
+    );
+    anyhow::ensure!(
+        spilled > 0,
+        "--memory-budget given but nothing spilled; raise --n or lower the budget"
+    );
+    if let Some(dir) = spill_dir {
+        let leftover = std::fs::read_dir(dir).map(|it| it.count()).unwrap_or(0);
+        anyhow::ensure!(
+            leftover == 0,
+            "{leftover} spill entries left under {} after the run",
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
 /// Parse `--exec parked|spawn` (the kernel execution backend; defaults to
 /// the persistent parked executor).
 fn exec_mode_of(args: &Args) -> Result<crate::exec::ExecMode> {
@@ -453,6 +499,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         crate::obs::Tracer::disabled()
     };
+    let external = external_config_of(args)?;
+    let escalating = external.is_some();
+    let spill_check = args.get("spill-dir").map(std::path::PathBuf::from);
     let svc = SortService::new_traced(
         ServiceConfig {
             workers,
@@ -460,6 +509,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             queue_capacity: 64,
             autotune: None,
             exec: exec_mode_of(args)?,
+            external,
         },
         tracer.clone(),
     );
@@ -492,6 +542,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         println!("\nmetrics:\n{}", svc.metrics().report());
         anyhow::ensure!(report.stats.invalid == 0, "{} jobs failed validation", report.stats.invalid);
         anyhow::ensure!(report.stats.failed == 0, "{} jobs failed to execute", report.stats.failed);
+        if escalating {
+            check_spill_smoke(&svc, spill_check.as_deref())?;
+        }
         if let Some(hub) = &hub {
             finish_trace(hub, args.get("trace-log"), true)?;
         }
@@ -525,6 +578,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         anyhow::ensure!(out.valid, "job {} failed validation", out.id);
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
+    if escalating {
+        check_spill_smoke(&svc, spill_check.as_deref())?;
+    }
     if let Some(hub) = &hub {
         finish_trace(hub, args.get("trace-log"), true)?;
     }
@@ -778,6 +834,7 @@ pub fn cmd_shard_worker(args: &Args) -> Result<()> {
                 queue_capacity: args.usize_or("queue-capacity", 64)?,
                 autotune,
                 exec: exec_mode_of(args)?,
+                external: external_config_of(args)?,
             },
             publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
             trace: args.has("trace"),
@@ -831,6 +888,7 @@ fn serve_autotune(
         queue_capacity: 64,
         autotune: Some(policy),
         exec: exec_mode_of(args)?,
+        external: external_config_of(args)?,
     });
     println!(
         "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} {dtype} jobs \
@@ -973,6 +1031,62 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 kernel_phases(&sorter, &data, &p),
             );
         }
+    }
+
+    // Out-of-core point: a beyond-budget sort through the external sorter
+    // (budget = 1/4 of the payload forces several spilled runs), with the
+    // v2 per-phase split — run formation + spill writes vs the loser-tree
+    // merge — as the `extsort/` row group. This is the perf surface the
+    // spill genes tune; the phase medians show where a policy change moved
+    // the time.
+    {
+        let xn = scaled_size(4_000_000);
+        let budget = xn * 2; // bytes: n * 8 / 4
+        let spill_root =
+            std::env::temp_dir().join(format!("evosort-bench-spill-{}", std::process::id()));
+        std::fs::create_dir_all(&spill_root)?;
+        let config =
+            crate::extsort::ExternalConfig::new(budget).with_spill_dir(spill_root.clone());
+        let ext = crate::extsort::ExtParams::default();
+        let xp = SymbolicModel::paper().params_for(xn);
+        let data = data::generate_i64(xn, Distribution::Uniform, 42, threads);
+        let m_std = measure(&cfg, "std", || data.clone(), |mut d| d.sort_unstable());
+        let mut ext_scratch = crate::sort::SortScratch::new();
+        let m = measure(
+            &cfg,
+            "extsort",
+            || data.clone(),
+            |d| {
+                let mut out = 0usize;
+                crate::extsort::ExternalSorter::new(&sorter, &config)
+                    .sort_streaming(
+                        d,
+                        &xp,
+                        ext,
+                        &mut ext_scratch,
+                        &mut |chunk| {
+                            out += chunk.len();
+                            Ok(())
+                        },
+                        &mut || false,
+                    )
+                    .expect("bench external sort failed");
+                assert_eq!(out, xn, "external sort dropped elements");
+            },
+        );
+        // Score against the in-memory std sort of the same payload — the
+        // out-of-core tax, hardware-normalised like the kernel rows.
+        let score = m_std.median() / m.median().max(1e-12);
+        push_entry_with_phases(
+            &mut entries,
+            &mut table,
+            format!("extsort/stream/uniform/n{xn}"),
+            &m,
+            xn as f64 / m.median().max(1e-12),
+            score,
+            extsort_phases(&sorter, &data, &xp, ext, &config),
+        );
+        let _ = std::fs::remove_dir_all(&spill_root);
     }
 
     // Service workload: many mid-sized jobs through the batched path, once
@@ -1120,6 +1234,32 @@ fn kernel_phases(sorter: &AdaptiveSorter, data: &[i64], p: &SortParams) -> Vec<(
     phases
 }
 
+/// One extra instrumented out-of-core pass: where the external sort's time
+/// went, split between run formation, spill writes, and the merge (the
+/// `kernel.ext.*` phase rows) plus the per-kernel phases of the run sorts
+/// themselves.
+fn extsort_phases(
+    sorter: &AdaptiveSorter,
+    data: &[i64],
+    p: &SortParams,
+    ext: crate::extsort::ExtParams,
+    config: &crate::extsort::ExternalConfig,
+) -> Vec<(String, f64)> {
+    let mut scratch = crate::sort::SortScratch::new();
+    scratch.timer_mut().set_enabled(true);
+    crate::extsort::ExternalSorter::new(sorter, config)
+        .sort_streaming(data.to_vec(), p, ext, &mut scratch, &mut |_chunk| Ok(()), &mut || false)
+        .expect("instrumented external sort failed");
+    let mut phases: Vec<(String, f64)> = scratch
+        .timer_mut()
+        .drain()
+        .into_iter()
+        .map(|(phase, secs)| (phase.metric_name().to_string(), secs))
+        .collect();
+    phases.sort_by(|a, b| a.0.cmp(&b.0));
+    phases
+}
+
 /// One service-workload measurement: a batch of `jobs` mid-sized mixed
 /// distribution i64 jobs through `submit_batch_requests`, on a service whose
 /// kernels run in the given executor mode. Returns the wall-clock
@@ -1138,6 +1278,7 @@ fn bench_service_batch(
         queue_capacity: jobs.max(64),
         autotune: None,
         exec: mode,
+        external: None,
     });
     let dists = [Distribution::Uniform, Distribution::Zipf, Distribution::NearlySorted];
     let payloads: Vec<Vec<i64>> = (0..jobs)

@@ -13,7 +13,9 @@
 //!             with a JSON report and regression gate (--json / --compare)
 //!   serve     run the sort service demo (concurrent jobs + metrics;
 //!             --shards N runs it cross-process; --trace-log / --metrics-addr
-//!             turn on end-to-end tracing and the Prometheus scrape endpoint)
+//!             turn on end-to-end tracing and the Prometheus scrape endpoint;
+//!             --memory-budget BYTES escalates oversized jobs to the
+//!             out-of-core spill sorter)
 //!   trace     summarize a trace JSONL file (per-phase p50/p99, slowest
 //!             spans; --check validates span-chain invariants)
 //!   info      platform, artifact and configuration report
@@ -180,6 +182,13 @@ COMMANDS
             [--metrics-addr HOST:PORT] (serve Prometheus text-format
             metrics over HTTP for the run and self-scrape once at the end;
             port 0 picks a free port)
+            [--memory-budget BYTES] (out-of-core escalation: jobs whose
+            payload exceeds the budget sort via spill-to-disk runs and a
+            k-way streaming merge; the run then fails unless something
+            spilled and the spill root is left clean — the CI spill smoke.
+            Single-process serve and shard-worker only)
+            [--spill-dir DIR] (spill-run root, needs --memory-budget;
+            default: the OS temp dir)
   trace     FILE [--check] (span-tree summary of a --trace-log file:
             per-phase and end-to-end p50/p99, slowest traces, per-shard
             event counts; --check exits non-zero on incomplete span chains)
@@ -191,6 +200,7 @@ COMMANDS
             --socket PATH (legacy unix --connect)
             [--workers N] [--sort-threads N] [--queue-capacity N]
             [--publish-ms MS] [--exec parked|spawn] [--autotune ...]
+            [--memory-budget BYTES] [--spill-dir DIR]
             [--trace] (emit span events and stream them to the router)
   info      (platform, threads, artifact status)
 

@@ -34,6 +34,9 @@
 //! connect        = "tcp://10.0.0.7:7070,tcp://10.0.0.8:7070"
 //!                          # externally started `shard-worker --listen`
 //!                          # processes to dial (comma-separated, quoted)
+//! memory_budget  = 0       # bytes; > 0 escalates bigger jobs to the
+//!                          # out-of-core spill sorter (0 = never)
+//! spill_dir      = "/tmp"  # spill-run root (default: the OS temp dir)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -80,17 +83,31 @@ pub struct ServiceSettings {
     /// Externally started `shard-worker --listen` endpoints to dial into
     /// the fleet.
     pub connect: Vec<Endpoint>,
+    /// Out-of-core escalation budget in bytes: jobs whose payload exceeds
+    /// it run through the spill-to-disk external sorter. `0` disables
+    /// escalation (the historical always-in-RAM behaviour).
+    pub memory_budget: usize,
+    /// Spill-run root directory; `None` uses the OS temp dir.
+    pub spill_dir: Option<std::path::PathBuf>,
 }
 
 impl ServiceSettings {
     /// Per-process service configuration (one shard's worth).
     pub fn to_config(&self) -> ServiceConfig {
+        let external = (self.memory_budget > 0).then(|| {
+            let mut x = crate::extsort::ExternalConfig::new(self.memory_budget);
+            if let Some(dir) = &self.spill_dir {
+                x = x.with_spill_dir(dir.clone());
+            }
+            x
+        });
         ServiceConfig {
             workers: self.workers,
             sort_threads: self.sort_threads,
             queue_capacity: self.queue_capacity,
             autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
             exec: self.exec,
+            external,
         }
     }
 
@@ -216,6 +233,13 @@ impl RunConfig {
             }
             None => listen.as_ref().map(Endpoint::transport).unwrap_or_default(),
         };
+        let spill_dir = match doc.get("service", "spill_dir") {
+            None => None,
+            Some(v) => {
+                let text = v.as_str().context("[service] spill_dir must be a quoted path")?;
+                Some(std::path::PathBuf::from(text))
+            }
+        };
         let service = ServiceSettings {
             workers: doc.count("service", "workers", 2)?.max(1),
             sort_threads: doc.count("service", "sort_threads", threads.div_ceil(2))?.max(1),
@@ -226,6 +250,8 @@ impl RunConfig {
             transport,
             listen,
             connect,
+            memory_budget: doc.count("service", "memory_budget", 0)?,
+            spill_dir,
         };
 
         Ok(RunConfig { threads, pipeline, service })
@@ -328,6 +354,33 @@ connect = "tcp://10.0.0.7:7070, tcp://10.0.0.8:7070"
         // An explicit transport key works without a listen base.
         let rc = parse("[service]\ntransport = tcp").unwrap();
         assert_eq!(rc.service.transport, TransportKind::Tcp);
+    }
+
+    #[test]
+    fn memory_budget_flows_into_the_external_config() {
+        // Default: no budget, no out-of-core escalation.
+        let rc = parse("").unwrap();
+        assert_eq!(rc.service.memory_budget, 0);
+        assert!(rc.service.spill_dir.is_none());
+        assert!(rc.service.to_config().external.is_none(), "escalation defaults off");
+        // Budget + spill root flow through to the service config.
+        let rc = parse(
+            r#"
+[service]
+memory_budget = 1048576
+spill_dir = "/tmp/evosort-spill"
+"#,
+        )
+        .unwrap();
+        let ext = rc.service.to_config().external.expect("budget > 0 turns escalation on");
+        assert_eq!(ext.memory_budget, 1_048_576);
+        assert_eq!(ext.spill_dir, std::path::PathBuf::from("/tmp/evosort-spill"));
+        // A budget without a spill_dir falls back to the OS temp dir.
+        let rc = parse("[service]\nmemory_budget = 4096").unwrap();
+        let ext = rc.service.to_config().external.unwrap();
+        assert_eq!(ext.spill_dir, std::env::temp_dir());
+        // An unquoted path is a parse error, not a silent ignore.
+        assert!(parse("[service]\nspill_dir = 7").is_err());
     }
 
     #[test]

@@ -368,6 +368,7 @@ mod tests {
                 queue_capacity: 8,
                 autotune: None,
                 exec: Default::default(),
+                external: None,
             });
             let report = svc.submit_batch_requests(reqs).wait();
             assert_eq!(report.stats.jobs, 8, "{dtype}");
@@ -393,6 +394,7 @@ mod tests {
             queue_capacity: 8,
             autotune: None,
             exec: Default::default(),
+            external: None,
         });
         let report = wl.run(&svc, 2);
         assert_eq!(report.stats.jobs, 40);

@@ -43,6 +43,7 @@ use crate::coordinator::ticket::{CompletionGuard, JobError, JobResult, JobSlot, 
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::data::validate::Verdict;
 use crate::exec::{ExecMode, Executor};
+use crate::extsort::{ExtError, ExtKey, ExtParams, ExtReport, ExternalConfig, ExternalSorter};
 use crate::obs::{EventKind, FailReason, Tracer};
 use crate::params::SortParams;
 use crate::sort::key::{self, Dtype, SortKey, SortPayload, SortScratch};
@@ -439,8 +440,149 @@ fn run_typed<K: SortKey>(
     SortOutput { id, payload: K::into_payload(data), params, secs, valid }
 }
 
+/// Out-of-core variant of [`run_typed`]: the same adaptive kernels form
+/// sorted runs, the runs spill through a guarded per-job directory, and the
+/// loser-tree merge streams chunks that are reassembled into one output
+/// payload (the single-`Ticket` contract; [`SortService::submit_external_streaming`]
+/// is the chunk-at-a-time surface). Run-formation/spill/merge timings drain
+/// as `kernel.ext.*` phases next to the per-run kernel phases. A spill-path
+/// failure (I/O, corrupt run) resolves to `valid = false` — the guard has
+/// already removed the spill directory — rather than poisoning the worker.
+fn run_external_typed<K: ExtKey>(
+    sorter: &AdaptiveSorter,
+    metrics: &Metrics,
+    tracer: &Tracer,
+    trace_id: u64,
+    id: u64,
+    data: Vec<K>,
+    validate: bool,
+    params: SortParams,
+    ext: ExtParams,
+    config: &ExternalConfig,
+    scratch: &mut SortScratch,
+) -> SortOutput {
+    let threads = sorter.threads();
+    let exec = sorter.executor();
+    let fp = validate.then(|| key::fingerprint_keys_on(exec, &data, threads));
+    let n = data.len();
+    let grows_before = scratch.grows();
+    let traced = tracer.is_enabled();
+    scratch.timer_mut().set_enabled(traced);
+    let external = ExternalSorter::new(sorter, config);
+    let mut out: Vec<K> = Vec::with_capacity(n);
+    let (result, secs) = timer::time(|| {
+        external.sort_streaming(
+            data,
+            &params,
+            ext,
+            scratch,
+            &mut |chunk| {
+                out.extend_from_slice(&chunk);
+                Ok(())
+            },
+            &mut || false,
+        )
+    });
+    if traced {
+        for (phase, dur) in scratch.timer_mut().drain() {
+            tracer.emit(trace_id, EventKind::KernelPhase { phase, dur_secs: dur });
+            metrics.observe_sample(phase.metric_name(), dur);
+        }
+    }
+    let grew = scratch.grows() - grows_before;
+    let ok = match result {
+        Ok(report) => {
+            metrics.incr("extsort.jobs");
+            metrics.add("extsort.runs_spilled", report.runs_spilled);
+            metrics.add("extsort.merge_passes", report.merge_passes);
+            metrics.add("extsort.chunks_streamed", report.chunks_streamed);
+            metrics.set_gauge("extsort.last_peak_bytes", report.peak_working_bytes as f64);
+            true
+        }
+        Err(e) => {
+            metrics.incr("extsort.errors");
+            crate::log_warn!("external sort failed (job {id}): {e}");
+            false
+        }
+    };
+    let valid = ok
+        && out.len() == n
+        && match fp {
+            Some(fp) => key::validate_keys_on(exec, fp, &out, threads) == Verdict::Valid,
+            None => true,
+        };
+    metrics.incr("jobs.completed");
+    metrics.incr(dtype_counter(K::DTYPE));
+    metrics.observe("sort.latency", secs);
+    metrics.add("elements.sorted", out.len() as u64);
+    if grew > 0 {
+        metrics.add("scratch.grows", grew);
+    }
+    if !valid {
+        metrics.incr("jobs.invalid");
+    }
+    SortOutput { id, payload: K::into_payload(out), params, secs, valid }
+}
+
+/// Drive one out-of-core job for [`SortService::submit_external_streaming`],
+/// sending each merged chunk through the batch channel as its own
+/// [`SortOutput`] the moment the loser tree produces it. Returns the sort
+/// result plus total wall seconds. A dropped receiver flips the cancel
+/// probe, so an abandoned stream tears the merge down (and the spill
+/// directory with it) instead of sorting into the void.
+fn stream_external_typed<K: ExtKey>(
+    sorter: &AdaptiveSorter,
+    metrics: &Metrics,
+    tracer: &Tracer,
+    trace_id: u64,
+    id: u64,
+    data: Vec<K>,
+    params: SortParams,
+    ext: ExtParams,
+    config: &ExternalConfig,
+    scratch: &mut SortScratch,
+    tx: &mpsc::Sender<(usize, JobResult)>,
+) -> (Result<ExtReport, ExtError>, f64) {
+    let traced = tracer.is_enabled();
+    scratch.timer_mut().set_enabled(traced);
+    let external = ExternalSorter::new(sorter, config);
+    let started = Instant::now();
+    let gone = std::cell::Cell::new(false);
+    let mut idx = 0usize;
+    let result = external.sort_streaming(
+        data,
+        &params,
+        ext,
+        scratch,
+        &mut |chunk| {
+            let out = SortOutput {
+                id,
+                payload: K::into_payload(chunk),
+                params,
+                secs: started.elapsed().as_secs_f64(),
+                valid: true,
+            };
+            if tx.send((idx, Ok(out))).is_err() {
+                gone.set(true);
+            }
+            idx += 1;
+            Ok(())
+        },
+        &mut || gone.get(),
+    );
+    let secs = started.elapsed().as_secs_f64();
+    if traced {
+        for (phase, dur) in scratch.timer_mut().drain() {
+            tracer.emit(trace_id, EventKind::KernelPhase { phase, dur_secs: dur });
+            metrics.observe_sample(phase.metric_name(), dur);
+        }
+    }
+    (result, secs)
+}
+
 /// Dtype dispatch over the erased payload — shared by the single-job and
-/// batched submission paths.
+/// batched submission paths. `ext = Some(genes)` routes the job through the
+/// out-of-core sorter under `config` instead of the in-RAM kernels.
 fn execute_request(
     sorter: &AdaptiveSorter,
     metrics: &Metrics,
@@ -448,10 +590,27 @@ fn execute_request(
     id: u64,
     req: SortRequest,
     params: SortParams,
+    escalation: Option<(&ExternalConfig, ExtParams)>,
     scratch: &mut SortScratch,
 ) -> SortOutput {
     let tid = req.trace_id.unwrap_or(id);
     let SortRequest { payload, validate, .. } = req;
+    if let Some((config, ext)) = escalation {
+        return match payload {
+            SortPayload::I64(v) => run_external_typed(
+                sorter, metrics, tracer, tid, id, v, validate, params, ext, config, scratch,
+            ),
+            SortPayload::I32(v) => run_external_typed(
+                sorter, metrics, tracer, tid, id, v, validate, params, ext, config, scratch,
+            ),
+            SortPayload::U64(v) => run_external_typed(
+                sorter, metrics, tracer, tid, id, v, validate, params, ext, config, scratch,
+            ),
+            SortPayload::F64(v) => run_external_typed(
+                sorter, metrics, tracer, tid, id, v, validate, params, ext, config, scratch,
+            ),
+        };
+    }
     match payload {
         SortPayload::I64(v) => {
             run_typed(sorter, metrics, tracer, tid, id, v, validate, params, scratch)
@@ -507,6 +666,11 @@ pub struct ServiceConfig {
     /// `SpawnPerCall` restores the historical scoped-spawn behaviour (A/B
     /// benchmarking, debugging).
     pub exec: ExecMode,
+    /// Out-of-core escalation: jobs whose payload exceeds the configured
+    /// memory budget run through the [`extsort`](crate::extsort) subsystem
+    /// (spilled runs + streaming loser-tree merge) instead of wholly in RAM.
+    /// `None` (default) never escalates.
+    pub external: Option<ExternalConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -518,6 +682,7 @@ impl Default for ServiceConfig {
             queue_capacity: 64,
             autotune: None,
             exec: ExecMode::Parked,
+            external: None,
         }
     }
 }
@@ -529,8 +694,12 @@ struct Resolution {
     /// overrides and symbolic fallbacks).
     cache_hit: bool,
     /// `(fingerprint label, retained pre-sort sample)` — `None` for
-    /// explicit-override jobs or when autotuning is off.
+    /// explicit-override jobs or when autotuning is off. Escalated jobs
+    /// carry the beyond-memory (`:xm`) label so the tuner refines the
+    /// spill genes of the out-of-core class, not the in-RAM one.
     observe: Option<(String, Vec<i64>)>,
+    /// `Some(spill genes)` when the job escalates to the external sorter.
+    ext: Option<ExtParams>,
 }
 
 /// The coordinator service.
@@ -545,6 +714,7 @@ pub struct SortService {
     metrics: Arc<Metrics>,
     tuner: Option<Arc<OnlineTuner>>,
     tracer: Tracer,
+    external: Option<ExternalConfig>,
     next_id: AtomicU64,
 }
 
@@ -562,21 +732,48 @@ fn resolve_request(
     model: &SymbolicModel,
     metrics: &Metrics,
     tuner: Option<&OnlineTuner>,
+    external: Option<&ExternalConfig>,
     req: &SortRequest,
 ) -> Resolution {
+    // The escalation decision is size-only, taken against the config-level
+    // genes (the operator override or the defaults) — it must not depend on
+    // which tuned class the data happens to land in, or a cache update could
+    // flip a job between the in-RAM and out-of-core paths mid-stream.
+    let escalate = external.is_some_and(|x| {
+        let probe = x.params.unwrap_or_default();
+        x.escalates(req.len() * req.dtype().width(), req.len(), &probe)
+    });
+    let ext_genes = |label: Option<&str>| {
+        external
+            .and_then(|x| x.params)
+            .or_else(|| label.and_then(|l| cache.get_ext(req.len(), l)))
+            .unwrap_or_default()
+    };
     if let Some(p) = req.params {
         metrics.incr("params.override");
-        return Resolution { params: p, cache_hit: false, observe: None };
+        let ext = escalate.then(|| ext_genes(None));
+        return Resolution { params: p, cache_hit: false, observe: None, ext };
     }
-    let label = payload_label(&req.payload);
+    let base = payload_label(&req.payload);
+    let label =
+        if escalate { fingerprint::beyond_memory_label(&base) } else { base.clone() };
     let (params, cache_hit) = if let Some(p) = cache.get(req.len(), &label) {
         metrics.incr("params.cache_hit");
         (p, true)
     } else {
         metrics.incr("params.cache_miss");
-        metrics.incr("params.symbolic");
-        (model.params_for(req.len()), false)
+        // An escalated class that has never been tuned borrows the in-RAM
+        // class's run-formation parameters before falling back to the model.
+        let fallback = if escalate { cache.get(req.len(), &base) } else { None };
+        match fallback {
+            Some(p) => (p, false),
+            None => {
+                metrics.incr("params.symbolic");
+                (model.params_for(req.len()), false)
+            }
+        }
     };
+    let ext = escalate.then(|| ext_genes(Some(&label)));
     // Retain a strided pre-sort sample for the tuner's GA fitness (the
     // post-sort data is sorted, which would bias tuning toward the
     // sorted-input special case). The copy is taken on only every k-th
@@ -591,7 +788,7 @@ fn resolve_request(
         };
         (label, sample)
     });
-    Resolution { params, cache_hit, observe }
+    Resolution { params, cache_hit, observe, ext }
 }
 
 impl SortService {
@@ -649,6 +846,7 @@ impl SortService {
             metrics,
             tuner,
             tracer,
+            external: config.external,
             next_id: AtomicU64::new(1),
         }
     }
@@ -716,8 +914,15 @@ impl SortService {
         let sorter = Arc::clone(&self.sorter);
         let metrics = Arc::clone(&self.metrics);
         let tracer = self.tracer.clone();
-        let Resolution { params, observe, .. } =
-            resolve_request(&self.cache, &self.model, &self.metrics, self.tuner.as_deref(), &req);
+        let Resolution { params, observe, ext, .. } = resolve_request(
+            &self.cache,
+            &self.model,
+            &self.metrics,
+            self.tuner.as_deref(),
+            self.external.as_ref(),
+            &req,
+        );
+        let external = self.external.clone();
         let tuner = self.tuner.clone();
         self.metrics.incr("jobs.submitted");
         self.tracer.emit(tid, EventKind::Queued);
@@ -732,8 +937,9 @@ impl SortService {
                 return;
             }
             tracer.emit(tid, EventKind::Dispatched { shard: tracer.shard() });
+            let escalation = external.as_ref().and_then(|c| ext.map(|x| (c, x)));
             let outcome = with_worker_scratch(|scratch| {
-                execute_request(&sorter, &metrics, &tracer, id, req, params, scratch)
+                execute_request(&sorter, &metrics, &tracer, id, req, params, escalation, scratch)
             });
             if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                 tuner.observe(Observation {
@@ -793,6 +999,7 @@ impl SortService {
             let metrics = Arc::clone(&self.metrics);
             let tuner = self.tuner.clone();
             let tracer = self.tracer.clone();
+            let external = self.external.clone();
             let hits = Arc::clone(&cache_hits);
             let misses = Arc::clone(&cache_misses);
             let tx = tx.clone();
@@ -810,8 +1017,14 @@ impl SortService {
                     // Per-job panic isolation: a poisonous job resolves to
                     // an error; the shard keeps draining the queue.
                     let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let Resolution { params, cache_hit, observe } =
-                            resolve_request(&cache, &model, &metrics, tuner.as_deref(), &req);
+                        let Resolution { params, cache_hit, observe, ext } = resolve_request(
+                            &cache,
+                            &model,
+                            &metrics,
+                            tuner.as_deref(),
+                            external.as_ref(),
+                            &req,
+                        );
                         if !has_override {
                             if cache_hit {
                                 hits.fetch_add(1, Ordering::Relaxed);
@@ -819,8 +1032,10 @@ impl SortService {
                                 misses.fetch_add(1, Ordering::Relaxed);
                             }
                         }
-                        let outcome =
-                            execute_request(&sorter, &metrics, &tracer, id, req, params, &mut *scratch);
+                        let escalation = external.as_ref().and_then(|c| ext.map(|x| (c, x)));
+                        let outcome = execute_request(
+                            &sorter, &metrics, &tracer, id, req, params, escalation, &mut *scratch,
+                        );
                         metrics.observe_sample("batch.job.latency", outcome.secs);
                         if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                             tuner.observe(Observation {
@@ -863,6 +1078,119 @@ impl SortService {
         }
     }
 
+    /// Out-of-core submission with **streaming** results: the job always
+    /// runs through the external sorter (no budget test — callers pick this
+    /// surface precisely because the payload should not stay resident), and
+    /// the returned [`BatchTicket`] yields each merged chunk as its own
+    /// [`SortOutput`], in key order. `stream()` hands over the first chunk
+    /// while later chunks are still merging, so consumption overlaps the
+    /// merge; the ticket's length is the spill plan's chunk count. Chunk
+    /// outputs skip multiset validation (each chunk is sorted by
+    /// construction; cross-chunk validation would re-materialise the whole
+    /// payload). Dropping the stream cancels the merge and removes the
+    /// spill files.
+    ///
+    /// Uses the service's [`ExternalConfig`] when one is configured; without
+    /// one, a default config (temp-dir spill root, minimum budget) applies.
+    pub fn submit_external_streaming(&self, req: SortRequest) -> BatchTicket {
+        let started = Instant::now();
+        let config = self.external.clone().unwrap_or_else(|| ExternalConfig::new(0));
+        // Resolution must see an always-escalating config: the job resolves
+        // through the beyond-memory class even when it would fit the budget.
+        let mut forced = config.clone();
+        forced.memory_budget = 0;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let tid = req.trace_id.unwrap_or(id);
+        self.tracer.emit(tid, EventKind::Submitted);
+        self.metrics.incr("jobs.submitted");
+        self.metrics.incr("batch.submitted");
+        let cache_hits = Arc::new(AtomicU64::new(0));
+        let cache_misses = Arc::new(AtomicU64::new(0));
+        // Resolve on the submitting thread: the ticket's chunk-count
+        // contract depends on the resolved spill genes.
+        let Resolution { params, cache_hit, observe, ext } = resolve_request(
+            &self.cache,
+            &self.model,
+            &self.metrics,
+            self.tuner.as_deref(),
+            Some(&forced),
+            &req,
+        );
+        if req.params.is_none() {
+            if cache_hit {
+                cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let ext = ext.unwrap_or_default();
+        let n = req.len();
+        let total =
+            crate::extsort::plan(n, req.dtype().width(), config.memory_budget, ext).total_chunks;
+        let dtype = req.dtype();
+        let (tx, rx) = mpsc::channel();
+        let sorter = Arc::clone(&self.sorter);
+        let metrics = Arc::clone(&self.metrics);
+        let tracer = self.tracer.clone();
+        let tuner = self.tuner.clone();
+        self.tracer.emit(tid, EventKind::Queued);
+        // A refused submit (pool shutdown) drops tx unexecuted; the ticket
+        // resolves every chunk slot as WorkerLost instead of hanging.
+        let _ = self.pool.submit(move || {
+            tracer.emit(tid, EventKind::Dispatched { shard: tracer.shard() });
+            let SortRequest { payload, .. } = req;
+            let (result, secs) = with_worker_scratch(|scratch| match payload {
+                SortPayload::I64(v) => stream_external_typed(
+                    &sorter, &metrics, &tracer, tid, id, v, params, ext, &config, scratch, &tx,
+                ),
+                SortPayload::I32(v) => stream_external_typed(
+                    &sorter, &metrics, &tracer, tid, id, v, params, ext, &config, scratch, &tx,
+                ),
+                SortPayload::U64(v) => stream_external_typed(
+                    &sorter, &metrics, &tracer, tid, id, v, params, ext, &config, scratch, &tx,
+                ),
+                SortPayload::F64(v) => stream_external_typed(
+                    &sorter, &metrics, &tracer, tid, id, v, params, ext, &config, scratch, &tx,
+                ),
+            });
+            match result {
+                Ok(report) => {
+                    metrics.incr("jobs.completed");
+                    metrics.incr(dtype_counter(dtype));
+                    metrics.observe("sort.latency", secs);
+                    metrics.add("elements.sorted", report.elements);
+                    metrics.incr("extsort.jobs");
+                    metrics.add("extsort.runs_spilled", report.runs_spilled);
+                    metrics.add("extsort.merge_passes", report.merge_passes);
+                    metrics.add("extsort.chunks_streamed", report.chunks_streamed);
+                    metrics
+                        .set_gauge("extsort.last_peak_bytes", report.peak_working_bytes as f64);
+                    tracer.emit(tid, EventKind::Completed { secs });
+                    if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
+                        tuner.observe(Observation { label, n, secs, sample: Some(sample) });
+                    }
+                }
+                Err(ExtError::Cancelled) => {
+                    metrics.incr("extsort.cancelled");
+                    tracer.emit(tid, EventKind::Failed { reason: FailReason::Cancelled });
+                }
+                Err(e) => {
+                    metrics.incr("extsort.errors");
+                    crate::log_warn!("external stream failed (job {id}): {e}");
+                    tracer.emit(tid, EventKind::Failed { reason: FailReason::WorkerLost });
+                }
+            }
+        });
+        BatchTicket {
+            total,
+            started,
+            rx,
+            completion: BatchCompletion { metrics: Arc::clone(&self.metrics), published: false },
+            cache_hits,
+            cache_misses,
+        }
+    }
+
     /// Block until every submitted job has completed. Parks on the worker
     /// pool's idle condvar — an idle drain costs zero CPU (no polling loop).
     pub fn drain(&self) {
@@ -888,6 +1216,7 @@ mod tests {
             queue_capacity: 8,
             autotune: None,
             exec: Default::default(),
+            external: None,
         })
     }
 
@@ -921,6 +1250,7 @@ mod tests {
                 queue_capacity: 8,
                 autotune: None,
                 exec: Default::default(),
+                external: None,
             },
             tracer,
         );
@@ -1116,6 +1446,7 @@ mod tests {
             queue_capacity: 16,
             autotune: None,
             exec: Default::default(),
+            external: None,
         });
         let blockers: Vec<Ticket> = (0..3)
             .map(|s| {
@@ -1245,6 +1576,7 @@ mod tests {
             queue_capacity: 16,
             autotune: None,
             exec: Default::default(),
+            external: None,
         });
         let tiny = generate_i64(1_000, Distribution::Uniform, 0, 2);
         let mut requests = vec![SortRequest::new(tiny)];
@@ -1349,4 +1681,106 @@ mod tests {
         assert_eq!(report.stats.per_dtype[0].dtype, Dtype::F64);
     }
 
+    fn spill_root(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("evosort-svc-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spill_dirs_left(root: &std::path::Path) -> usize {
+        std::fs::read_dir(root).map(|rd| rd.count()).unwrap_or(0)
+    }
+
+    fn external_service(budget: usize, root: &std::path::Path) -> SortService {
+        SortService::new(ServiceConfig {
+            workers: 2,
+            sort_threads: 2,
+            queue_capacity: 8,
+            autotune: None,
+            exec: Default::default(),
+            external: Some(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
+        })
+    }
+
+    #[test]
+    fn oversized_job_escalates_and_sorts_via_spill() {
+        let root = spill_root("escalate");
+        let svc = external_service(1 << 20, &root); // 1 MiB budget
+        let data = generate_i64(200_000, Distribution::Zipf, 31, 2); // 1.6 MiB payload
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
+        assert!(out.valid, "escalated sort must survive multiset validation");
+        assert_eq!(sorted_i64(&out), expect);
+        assert_eq!(svc.metrics().counter("extsort.jobs"), 1);
+        assert!(
+            svc.metrics().counter("extsort.runs_spilled") >= 3,
+            "a 1.6 MiB job under a 1 MiB budget spills several runs"
+        );
+        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
+        assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+        assert_eq!(spill_dirs_left(&root), 0, "spill directories must be cleaned up");
+        // A small job under the same config stays on the in-RAM path.
+        let small = generate_i64(10_000, Distribution::Uniform, 32, 2);
+        let out = svc.submit_request(SortRequest::new(small)).wait().expect("job ok");
+        assert!(out.valid);
+        assert_eq!(svc.metrics().counter("extsort.jobs"), 1, "small job must not escalate");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn external_streaming_chunks_reassemble_the_sorted_payload() {
+        let root = spill_root("stream");
+        let svc = external_service(1 << 20, &root);
+        let data = generate_i64(200_000, Distribution::Uniform, 33, 2);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let ticket = svc.submit_external_streaming(SortRequest::new(data));
+        let total = ticket.len();
+        assert!(total > 1, "a beyond-budget job streams multiple chunks");
+        let mut got: Vec<i64> = Vec::new();
+        let mut chunks = 0usize;
+        for r in ticket.stream() {
+            let out = r.expect("chunk ok");
+            got.extend_from_slice(out.data::<i64>().unwrap());
+            chunks += 1;
+        }
+        assert_eq!(chunks, total, "ticket length is the chunk-count contract");
+        assert_eq!(got, expect, "chunk concatenation is the sorted payload");
+        svc.drain();
+        assert_eq!(svc.metrics().counter("extsort.chunks_streamed"), total as u64);
+        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
+        assert_eq!(spill_dirs_left(&root), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn escalated_jobs_resolve_through_the_beyond_memory_class() {
+        use crate::autotune::fingerprint::beyond_memory_label;
+        let root = spill_root("xmclass");
+        let svc = external_service(512 * 1024, &root);
+        let data = generate_i64(120_000, Distribution::Uniform, 34, 2); // 960 KiB
+        let xm = beyond_memory_label(&SortService::fingerprint_label(&data));
+        assert!(xm.ends_with(":xm"), "{xm}");
+        let tuned_ext = ExtParams { run_size: 30_000, merge_fan_in: 4, spill_threshold: 0 };
+        svc.cache().put_ext_with_fitness(
+            data.len(),
+            &xm,
+            SortParams::paper_1e8(),
+            tuned_ext,
+            0.1,
+        );
+        let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
+        assert!(out.valid);
+        assert_eq!(
+            out.params,
+            SortParams::paper_1e8(),
+            "sort params resolve through the :xm class"
+        );
+        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        // The tuned run size drives the spill layout: ceil(120k / 30k) runs.
+        assert_eq!(svc.metrics().counter("extsort.runs_spilled"), 4);
+        assert_eq!(spill_dirs_left(&root), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
 }

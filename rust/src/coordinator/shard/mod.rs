@@ -91,6 +91,7 @@ impl ShardedService {
                     queue_capacity: spec.queue_capacity,
                     autotune: spec.autotune,
                     exec: spec.exec,
+                    external: None,
                 },
                 tracer.clone(),
             );

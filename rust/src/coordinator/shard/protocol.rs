@@ -13,7 +13,7 @@
 //! Frames router → shard: [`Frame::Job`], [`Frame::CacheSync`],
 //! [`Frame::Shutdown`]. Frames shard → router: [`Frame::JobDone`],
 //! [`Frame::CachePublish`], [`Frame::Telemetry`], [`Frame::Trace`]. Cache
-//! frames carry the versioned `# evosort-tuning-cache v2` text interchange
+//! frames carry the versioned `# evosort-tuning-cache v3` text interchange
 //! format ([`TuningCache::to_text`](crate::coordinator::TuningCache::to_text)),
 //! so the wire and the disk speak the same dialect. Trace frames batch
 //! [`TraceEvent`]s drained from the worker's ring; the router merges them

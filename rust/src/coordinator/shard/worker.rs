@@ -314,6 +314,7 @@ mod tests {
                 queue_capacity: 8,
                 autotune: None,
                 exec: Default::default(),
+                external: None,
             },
             publish_interval: Duration::from_millis(30),
             trace: false,

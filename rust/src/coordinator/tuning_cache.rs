@@ -18,13 +18,15 @@
 //! last writer, so a well-tuned class can never be clobbered by a worse one.
 //!
 //! Persistence is a versioned plain text file (no serde crate offline): a
-//! `# evosort-tuning-cache v2` header followed by
-//! `band class g0 g1 g2 g3 g4 [fitness]` lines (the fitness column is
-//! optional for back-compat). The same text form is the cross-process
-//! interchange format the sharded service broadcasts over its control
-//! channel ([`TuningCache::to_text`] / [`TuningCache::from_text`]). Loading
-//! is forgiving: corrupt, truncated, or out-of-bounds lines are skipped with
-//! a warning, never propagated as `Err` or bad genes.
+//! `# evosort-tuning-cache v3` header followed by
+//! `band class g0 g1 g2 g3 g4 [fitness] [x<run>,<fan>,<spill>]` lines (the
+//! fitness column is optional for back-compat; the `x`-prefixed column, new
+//! in v3, carries the out-of-core spill genes of beyond-memory classes).
+//! The same text form is the cross-process interchange format the sharded
+//! service broadcasts over its control channel ([`TuningCache::to_text`] /
+//! [`TuningCache::from_text`]). Loading is forgiving: corrupt, truncated,
+//! or out-of-bounds lines are skipped with a warning, never propagated as
+//! `Err` or bad genes.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -33,10 +35,11 @@ use std::sync::RwLock;
 
 use anyhow::{Context, Result};
 
+use crate::extsort::{ExtBounds, ExtParams};
 use crate::params::{Bounds, SortParams};
 
 /// Current on-disk format version (see [`TuningCache::save`]).
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 3;
 
 const HEADER_PREFIX: &str = "# evosort-tuning-cache v";
 
@@ -66,6 +69,9 @@ pub struct CacheEntry {
     /// Measured fitness recorded at publish time; `None` for explicit
     /// [`TuningCache::put`]s and legacy persisted files. Lower is better.
     pub fitness: Option<f64>,
+    /// Out-of-core spill genes (`run_size`/`merge_fan_in`/`spill_threshold`)
+    /// for beyond-memory (`:xm`) classes; `None` for in-RAM classes.
+    pub ext: Option<ExtParams>,
 }
 
 /// Thread-safe tuned-parameter cache with text persistence.
@@ -94,7 +100,7 @@ impl TuningCache {
     /// Insert with no recorded fitness (explicit pre-warm / override path).
     /// Unconditional: an explicit put expresses operator intent.
     pub fn put(&self, n: usize, dist: &str, params: SortParams) {
-        let entry = CacheEntry { params, fitness: None };
+        let entry = CacheEntry { params, fitness: None, ext: None };
         self.map.write().unwrap().insert(CacheKey::new(n, dist), entry);
         self.version.fetch_add(1, Ordering::Relaxed);
     }
@@ -103,7 +109,29 @@ impl TuningCache {
     /// (the online tuner's path). Non-finite fitness is stored as unknown.
     pub fn put_with_fitness(&self, n: usize, dist: &str, params: SortParams, fitness: f64) {
         let fitness = (fitness.is_finite() && fitness >= 0.0).then_some(fitness);
-        let entry = CacheEntry { params, fitness };
+        let entry = CacheEntry { params, fitness, ext: None };
+        self.map.write().unwrap().insert(CacheKey::new(n, dist), entry);
+        self.version.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Spill genes recorded for a beyond-memory class, if any.
+    pub fn get_ext(&self, n: usize, dist: &str) -> Option<ExtParams> {
+        self.map.read().unwrap().get(&CacheKey::new(n, dist)).and_then(|e| e.ext)
+    }
+
+    /// Insert sort parameters **plus** out-of-core spill genes under a
+    /// beyond-memory class (the ext-tuner's publish path). Non-finite
+    /// fitness is stored as unknown, same as [`TuningCache::put_with_fitness`].
+    pub fn put_ext_with_fitness(
+        &self,
+        n: usize,
+        dist: &str,
+        params: SortParams,
+        ext: ExtParams,
+        fitness: f64,
+    ) {
+        let fitness = (fitness.is_finite() && fitness >= 0.0).then_some(fitness);
+        let entry = CacheEntry { params, fitness, ext: Some(ext) };
         self.map.write().unwrap().insert(CacheKey::new(n, dist), entry);
         self.version.fetch_add(1, Ordering::Relaxed);
     }
@@ -146,7 +174,7 @@ impl TuningCache {
                     (Some(fi), Some(fl)) => fi < fl,
                     (Some(_), None) => true,
                     (None, Some(_)) => false,
-                    (None, None) => local.params != incoming.params,
+                    (None, None) => local != incoming,
                 },
             };
             if replace {
@@ -162,9 +190,12 @@ impl TuningCache {
     }
 
     /// Serialize to the versioned text format: a header plus
-    /// `band class g0 g1 g2 g3 g4 [fitness]` lines. This is both the on-disk
-    /// format ([`TuningCache::save`]) and the cross-process interchange the
-    /// sharded service ships over its control channel.
+    /// `band class g0 g1 g2 g3 g4 [fitness] [x<run>,<fan>,<spill>]` lines.
+    /// This is both the on-disk format ([`TuningCache::save`]) and the
+    /// cross-process interchange the sharded service ships over its control
+    /// channel. The `x`-prefixed spill-gene column is position-independent
+    /// of the fitness column: the parser disambiguates on the prefix, so an
+    /// ext entry without fitness is still representable.
     pub fn to_text(&self) -> String {
         let map = self.map.read().unwrap();
         let mut lines: Vec<String> = map
@@ -178,6 +209,10 @@ impl TuningCache {
                 if let Some(f) = e.fitness {
                     line.push_str(&format!(" {f:.9e}"));
                 }
+                if let Some(x) = e.ext {
+                    let xg = x.to_genes();
+                    line.push_str(&format!(" x{},{},{}", xg[0], xg[1], xg[2]));
+                }
                 line
             })
             .collect();
@@ -185,16 +220,17 @@ impl TuningCache {
         format!("{HEADER_PREFIX}{FORMAT_VERSION}\n{}\n", lines.join("\n"))
     }
 
-    /// Parse the text format (headered v2 or legacy headerless v1; 7-column
-    /// lines load with unknown fitness). Corrupt, truncated, or
-    /// out-of-bounds lines are skipped with a warning rather than failing
-    /// the whole cache or clamping garbage genes into plausible-looking
-    /// parameters.
+    /// Parse the text format (headered v2/v3 or legacy headerless v1;
+    /// 7-column lines load with unknown fitness, `x`-prefixed trailing
+    /// columns load as spill genes). Corrupt, truncated, or out-of-bounds
+    /// lines are skipped with a warning rather than failing the whole cache
+    /// or clamping garbage genes into plausible-looking parameters.
     pub fn from_text(text: &str) -> TuningCache {
         let cache = TuningCache::new();
         // The widest bounds any writer could have used: a persisted genome
         // outside them is corruption, not tuning.
         let bounds = Bounds::with_all_strategies();
+        let ext_bounds = ExtBounds::default();
         let mut legacy_keys = 0usize;
         {
             let mut map = cache.map.write().unwrap();
@@ -214,7 +250,7 @@ impl TuningCache {
                     continue; // comments
                 }
                 let parts: Vec<&str> = line.split_whitespace().collect();
-                if parts.len() != 7 && parts.len() != 8 {
+                if !(7..=9).contains(&parts.len()) {
                     if !line.trim().is_empty() {
                         crate::log_warn!("skipping malformed cache line: {line:?}");
                     }
@@ -229,19 +265,36 @@ impl TuningCache {
                     if !bounds.validate(&genes) {
                         return None;
                     }
-                    let fitness = match parts.get(7) {
-                        Some(tok) => {
+                    let mut fitness = None;
+                    let mut ext = None;
+                    for (pos, tok) in parts[7..].iter().enumerate() {
+                        if let Some(xg) = tok.strip_prefix('x') {
+                            if ext.is_some() {
+                                return None; // duplicate spill-gene column
+                            }
+                            let mut eg = [0i64; 3];
+                            let mut it = xg.split(',');
+                            for g in eg.iter_mut() {
+                                *g = it.next()?.parse().ok()?;
+                            }
+                            if it.next().is_some() || !ext_bounds.validate(&eg) {
+                                return None;
+                            }
+                            ext = Some(ExtParams::from_genes(&eg));
+                        } else {
+                            if pos != 0 {
+                                return None; // fitness must precede the x column
+                            }
                             let f: f64 = tok.parse().ok()?;
                             if !(f.is_finite() && f >= 0.0) {
                                 return None;
                             }
-                            Some(f)
+                            fitness = Some(f);
                         }
-                        None => None,
-                    };
+                    }
                     Some((
                         CacheKey { size_band: band, dist: parts[1].to_string() },
-                        CacheEntry { params: SortParams::from_genes(&genes), fitness },
+                        CacheEntry { params: SortParams::from_genes(&genes), fitness, ext },
                     ))
                 };
                 match parse() {
@@ -284,12 +337,12 @@ impl TuningCache {
 
 /// Does a cache key string look like a [`Fingerprint::label`]
 /// (`b<band>:<runs>:<dups>:w<bytes>:<signs>`, optionally suffixed with a
-/// dtype tag segment such as `:f64`) rather than a legacy v1 distribution
-/// name?
+/// dtype tag segment such as `:f64` and/or the beyond-memory `:xm` tag)
+/// rather than a legacy v1 distribution name?
 ///
 /// [`Fingerprint::label`]: crate::autotune::Fingerprint::label
 fn looks_like_fingerprint_label(key: &str) -> bool {
-    key.starts_with('b') && matches!(key.split(':').count(), 5 | 6)
+    key.starts_with('b') && matches!(key.split(':').count(), 5 | 6 | 7)
 }
 
 #[cfg(test)]
@@ -477,5 +530,59 @@ mod tests {
         assert_eq!(back.entry(5_000_000, "b13:mix:uniq:w8:pm:f64").unwrap().fitness, None);
         // Round-tripping again is a fixed point.
         assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn ext_genes_roundtrip_through_text() {
+        let xm = "b14:mix:uniq:w8:pm:xm";
+        let ext = ExtParams { run_size: 1 << 20, merge_fan_in: 8, spill_threshold: 5_000_000 };
+        let c = TuningCache::new();
+        c.put_ext_with_fitness(10_000_000, xm, SortParams::paper_1e7(), ext, 0.37);
+        assert_eq!(c.get_ext(10_000_000, xm), Some(ext));
+        assert!(c.get_ext(10_000_000, "b14:mix:uniq:w8:pm").is_none());
+
+        let text = c.to_text();
+        assert!(text.contains(" x1048576,8,5000000"), "missing spill column: {text:?}");
+        let back = TuningCache::from_text(&text);
+        assert_eq!(back.get_ext(10_000_000, xm), Some(ext));
+        assert!((back.entry(10_000_000, xm).unwrap().fitness.unwrap() - 0.37).abs() < 1e-9);
+        // Round-tripping again is a fixed point.
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn ext_column_without_fitness_parses_and_corrupt_ext_is_skipped() {
+        // `x` column directly after the genes (no fitness) is valid.
+        let ok = TuningCache::from_text("14 a:xm 3075 31291 4 99574 1418 x2097152,16,0\n");
+        assert_eq!(ok.len(), 1);
+        let e = ok.entry(10_000_000, "a:xm").unwrap();
+        assert_eq!(e.fitness, None);
+        assert_eq!(e.ext, Some(ExtParams { run_size: 1 << 21, merge_fan_in: 16, spill_threshold: 0 }));
+
+        // Corrupt spill columns (bad arity, out-of-bounds fan-in, fitness
+        // after the x column) are corruption: skip the whole line.
+        let bad = TuningCache::from_text(
+            "14 b 3075 31291 4 99574 1418 x1,2\n\
+             14 c 3075 31291 4 99574 1418 x2097152,9999,0\n\
+             14 d 3075 31291 4 99574 1418 x2097152,16,0 0.5\n",
+        );
+        assert!(bad.is_empty(), "corrupt ext lines must be skipped");
+    }
+
+    #[test]
+    fn xm_labels_count_as_fingerprint_keys() {
+        assert!(looks_like_fingerprint_label("b14:mix:uniq:w8:pm:xm"));
+        assert!(looks_like_fingerprint_label("b14:mix:uniq:w8:pm:f64:xm"));
+        assert!(!looks_like_fingerprint_label("uniform"));
+    }
+
+    #[test]
+    fn absorb_carries_ext_genes() {
+        let ext = ExtParams { run_size: 1 << 19, merge_fan_in: 4, spill_threshold: 0 };
+        let incoming = TuningCache::new();
+        incoming.put_ext_with_fitness(10_000_000, "k:xm", SortParams::paper_1e7(), ext, 0.2);
+        let live = TuningCache::new();
+        assert_eq!(live.absorb(&incoming), 1);
+        assert_eq!(live.get_ext(10_000_000, "k:xm"), Some(ext));
     }
 }

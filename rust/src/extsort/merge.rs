@@ -1,0 +1,289 @@
+//! Bounded-memory k-way merge over spilled runs.
+//!
+//! The merge is a classic loser tree (tournament tree): `k` leaves, one per
+//! run, `k - 1` internal nodes each remembering the *loser* of its match, and
+//! the overall winner at the root. Emitting the winner and replaying its leaf
+//! costs one root-to-leaf path — `O(log k)` comparisons per element instead
+//! of the `O(k)` of a linear scan, which is what makes wide fan-ins cheap.
+//!
+//! Each leaf draws from a double-buffered [`RunReader`], so the whole merge
+//! holds `k * 3` blocks plus one output chunk — all sized from the memory
+//! budget by the caller, never from file headers. Output leaves through a
+//! chunk callback so the first merged elements reach the consumer while the
+//! tail of the merge is still on disk.
+
+use std::path::Path;
+
+use super::run_file::{RunLoadError, RunReader, RunWriter};
+use super::{ExtError, ExtKey};
+
+/// Tournament tree over `k` run readers, padded to a power of two with
+/// permanently-exhausted virtual leaves.
+struct LoserTree<K: ExtKey> {
+    /// Padded leaf count (power of two, >= 1).
+    k: usize,
+    /// `tree[0]` is the current winner's leaf index; `tree[1..k]` hold the
+    /// loser of each internal match.
+    tree: Vec<usize>,
+    readers: Vec<RunReader<K>>,
+    /// Current head per leaf; `None` = exhausted (or virtual padding).
+    heads: Vec<Option<K>>,
+}
+
+impl<K: ExtKey> LoserTree<K> {
+    fn new(mut readers: Vec<RunReader<K>>) -> Result<Self, RunLoadError> {
+        let real = readers.len().max(1);
+        let k = real.next_power_of_two();
+        let mut heads = Vec::with_capacity(k);
+        for r in readers.iter_mut() {
+            heads.push(r.pop()?);
+        }
+        heads.resize(k, None);
+        let mut t = LoserTree {
+            k,
+            tree: vec![0; k],
+            readers,
+            heads,
+        };
+        t.tree[0] = t.build(1);
+        Ok(t)
+    }
+
+    /// `true` when leaf `a`'s head wins (sorts before) leaf `b`'s. Exhausted
+    /// leaves always lose; ties break toward the lower run index so the
+    /// merge order is deterministic.
+    fn beats(&self, a: usize, b: usize) -> bool {
+        match (&self.heads[a], &self.heads[b]) {
+            (Some(x), Some(y)) => match K::key_cmp(x, y) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => a < b,
+            },
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => a < b,
+        }
+    }
+
+    /// Recursively play the bracket below `node`, storing losers on the way
+    /// up; returns the subtree's winner.
+    fn build(&mut self, node: usize) -> usize {
+        if node >= self.k {
+            return node - self.k;
+        }
+        let l = self.build(2 * node);
+        let r = self.build(2 * node + 1);
+        let (win, lose) = if self.beats(l, r) { (l, r) } else { (r, l) };
+        self.tree[node] = lose;
+        win
+    }
+
+    /// Emit the current winner (if any), refill its leaf from the reader,
+    /// and replay its path to the root.
+    fn pop(&mut self) -> Result<Option<K>, RunLoadError> {
+        let w = self.tree[0];
+        let Some(val) = self.heads[w] else {
+            return Ok(None);
+        };
+        self.heads[w] = match self.readers.get_mut(w) {
+            Some(r) => r.pop()?,
+            None => None,
+        };
+        let mut winner = w;
+        let mut node = (w + self.k) / 2;
+        while node >= 1 {
+            if self.beats(self.tree[node], winner) {
+                std::mem::swap(&mut self.tree[node], &mut winner);
+            }
+            if node == 1 {
+                break;
+            }
+            node /= 2;
+        }
+        self.tree[0] = winner;
+        Ok(Some(val))
+    }
+}
+
+/// Merge `readers` and hand the output to `emit` in chunks of `chunk_elems`.
+///
+/// `cancel` is probed once per chunk boundary; a `true` aborts the merge with
+/// [`ExtError::Cancelled`] before the chunk is emitted. An empty input still
+/// emits exactly one empty chunk so streaming consumers always see at least
+/// one result. Returns the number of elements emitted.
+pub(crate) fn merge_streaming<K: ExtKey>(
+    readers: Vec<RunReader<K>>,
+    chunk_elems: usize,
+    emit: &mut dyn FnMut(Vec<K>) -> Result<(), ExtError>,
+    cancel: &mut dyn FnMut() -> bool,
+) -> Result<u64, ExtError> {
+    let total: u64 = readers.iter().map(|r| r.len()).sum();
+    let chunk_elems = chunk_elems.max(1);
+    let mut tree = LoserTree::new(readers)?;
+    let mut out: Vec<K> = Vec::with_capacity(chunk_elems.min(total.max(1) as usize));
+    let mut emitted = 0u64;
+    while let Some(v) = tree.pop()? {
+        out.push(v);
+        if out.len() >= chunk_elems {
+            if cancel() {
+                return Err(ExtError::Cancelled);
+            }
+            emitted += out.len() as u64;
+            let full = std::mem::replace(&mut out, Vec::with_capacity(chunk_elems));
+            emit(full)?;
+        }
+    }
+    if !out.is_empty() || emitted == 0 {
+        if cancel() {
+            return Err(ExtError::Cancelled);
+        }
+        emitted += out.len() as u64;
+        emit(out)?;
+    }
+    Ok(emitted)
+}
+
+/// Merge `readers` into a new intermediate run at `dest` (one multi-pass
+/// step when the live run count exceeds the fan-in). The writer's buffered
+/// staging plus `chunk_elems` decoded elements is the only extra memory.
+pub(crate) fn merge_to_run<K: ExtKey>(
+    readers: Vec<RunReader<K>>,
+    dest: &Path,
+    chunk_elems: usize,
+    cancel: &mut dyn FnMut() -> bool,
+) -> Result<u64, ExtError> {
+    let total: u64 = readers.iter().map(|r| r.len()).sum();
+    let mut writer = RunWriter::<K>::create(dest, total)?;
+    let written = merge_streaming(
+        readers,
+        chunk_elems,
+        &mut |chunk| {
+            writer.push_slice(&chunk)?;
+            Ok(())
+        },
+        cancel,
+    )?;
+    writer.finish()?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_file::write_run;
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "evosort-merge-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spill_runs(root: &Path, runs: &[Vec<i64>]) -> Vec<RunReader<i64>> {
+        runs.iter()
+            .enumerate()
+            .map(|(i, run)| {
+                let p = root.join(format!("run-{i}.evsr"));
+                write_run(&p, run).unwrap();
+                RunReader::<i64>::open(&p, 16).unwrap()
+            })
+            .collect()
+    }
+
+    fn collect(readers: Vec<RunReader<i64>>, chunk: usize) -> Vec<i64> {
+        let mut out = Vec::new();
+        merge_streaming(
+            readers,
+            chunk,
+            &mut |c| {
+                out.extend_from_slice(&c);
+                Ok(())
+            },
+            &mut || false,
+        )
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn merges_many_runs_in_order() {
+        let root = tmp_root("order");
+        // 7 runs (non-power-of-two fan) with overlap and duplicates.
+        let runs: Vec<Vec<i64>> = (0..7)
+            .map(|r| (0..200).map(|i| i * 7 + r as i64 * 3 - 400).collect())
+            .collect();
+        let mut expect: Vec<i64> = runs.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        let got = collect(spill_runs(&root, &runs), 37);
+        assert_eq!(got, expect);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn single_and_empty_runs() {
+        let root = tmp_root("edge");
+        let got = collect(spill_runs(&root, &[vec![5, 6, 7]]), 2);
+        assert_eq!(got, vec![5, 6, 7]);
+        // Empty run set: exactly one empty chunk.
+        let mut chunks = 0;
+        merge_streaming::<i64>(
+            Vec::new(),
+            8,
+            &mut |c| {
+                chunks += 1;
+                assert!(c.is_empty());
+                Ok(())
+            },
+            &mut || false,
+        )
+        .unwrap();
+        assert_eq!(chunks, 1);
+        // A present-but-empty spilled run merges away silently.
+        let got = collect(spill_runs(&root, &[vec![], vec![1, 2]]), 8);
+        assert_eq!(got, vec![1, 2]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cancel_stops_before_chunk_emission() {
+        let root = tmp_root("cancel");
+        let readers = spill_runs(&root, &[(0..100).collect(), (50..150).collect()]);
+        let mut emitted = 0usize;
+        let mut polls = 0usize;
+        let err = merge_streaming(
+            readers,
+            10,
+            &mut |_| {
+                emitted += 1;
+                Ok(())
+            },
+            &mut || {
+                polls += 1;
+                polls > 3 // cancel at the 4th chunk boundary
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, ExtError::Cancelled));
+        assert_eq!(emitted, 3, "no chunk may be emitted after cancellation");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn merge_to_run_produces_loadable_sorted_run() {
+        let root = tmp_root("rerun");
+        let runs: Vec<Vec<i64>> = vec![(0..50).collect(), (25..75).collect(), (60..90).collect()];
+        let mut expect: Vec<i64> = runs.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        let dest = root.join("merged.evsr");
+        let n = merge_to_run(spill_runs(&root, &runs), &dest, 16, &mut || false).unwrap();
+        assert_eq!(n, expect.len() as u64);
+        let got = collect(vec![RunReader::<i64>::open(&dest, 16).unwrap()], 16);
+        assert_eq!(got, expect);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,700 @@
+//! Out-of-core external sorting: spill-to-disk runs + k-way streaming merge.
+//!
+//! The paper scales EvoSort to 10-billion-element workloads; this module is
+//! the beyond-RAM half of that story. Oversized inputs are chunked into runs
+//! sorted *in place* by the existing adaptive kernels (Algorithm 6 dispatch,
+//! [`SortScratch`] arenas, the parked [`Executor`](crate::exec::Executor) —
+//! nothing is re-implemented), each run is spilled to a schema-versioned file
+//! under a per-job [`SpillGuard`] directory, and the runs are then k-way
+//! merged with a loser tree whose reader/chunk buffers are all sized from a
+//! byte budget. Merged output streams out through a chunk callback — the
+//! service forwards chunks over the normal `Ticket`/`ResultStream` contracts,
+//! so consumers see the first sorted elements while the tail of the merge is
+//! still on disk.
+//!
+//! The three policy knobs — `run_size`, `merge_fan_in`, `spill_threshold` —
+//! are GA-tunable genes keyed by a beyond-memory fingerprint class (the base
+//! workload label suffixed `:xm`, see
+//! [`beyond_memory_label`](crate::autotune::fingerprint::beyond_memory_label)),
+//! giving the online tuner genuinely new territory: the trade-off between
+//! many cheap runs and few expensive merge passes is exactly the kind of
+//! hardware-dependent constant the paper's GA discovers empirically.
+
+pub mod merge;
+pub mod run_file;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::obs::Phase;
+use crate::params::{GeneRange, SortParams};
+use crate::sort::adaptive::AdaptiveSorter;
+use crate::sort::key::{SortKey, SortScratch};
+
+pub use run_file::{RunLoadError, RunReader, RunWriter, SpillGuard, write_run};
+
+/// Extension of [`SortKey`] with the fixed-width little-endian encoding the
+/// on-disk run format needs. Floats round-trip through raw IEEE bits, so
+/// every NaN payload survives a spill byte-exactly.
+pub trait ExtKey: SortKey {
+    /// Serialized width in bytes.
+    const WIDTH: usize;
+    /// Dtype code in the run-file header.
+    const DTYPE_CODE: u8;
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Decode from exactly [`Self::WIDTH`] bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl ExtKey for i64 {
+    const WIDTH: usize = 8;
+    const DTYPE_CODE: u8 = 0;
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> Self {
+        i64::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl ExtKey for i32 {
+    const WIDTH: usize = 4;
+    const DTYPE_CODE: u8 = 1;
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl ExtKey for u64 {
+    const WIDTH: usize = 8;
+    const DTYPE_CODE: u8 = 2;
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> Self {
+        u64::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl ExtKey for f64 {
+    const WIDTH: usize = 8;
+    const DTYPE_CODE: u8 = 3;
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_bits().to_le_bytes());
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_bits(u64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+}
+
+/// Smallest run the planner will form (kernel dispatch below this is all
+/// overhead).
+pub const MIN_RUN_ELEMS: usize = 1024;
+/// Smallest reader/output block.
+pub const MIN_BLOCK_ELEMS: usize = 256;
+/// Planner floor on the byte budget — below this the buffer floors dominate
+/// and the budget is not honourable anyway.
+pub const MIN_BUDGET_BYTES: usize = 64 * 1024;
+
+/// The GA-tunable out-of-core policy genes.
+///
+/// Stored as `i64` to share the tuning cache's gene wire format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExtParams {
+    /// Elements per spilled run (the planner additionally caps this so one
+    /// run plus its kernel scratch fits in half the byte budget).
+    pub run_size: i64,
+    /// Maximum runs merged per pass; more runs than this triggers
+    /// intermediate merge passes.
+    pub merge_fan_in: i64,
+    /// Element count above which a job escalates out-of-core even when it
+    /// fits the byte budget; `0` means escalate on budget alone. This lets
+    /// the GA discover that spilling *earlier* than the hard budget can win
+    /// (e.g. when in-memory sorting starts thrashing caches).
+    pub spill_threshold: i64,
+}
+
+impl Default for ExtParams {
+    fn default() -> Self {
+        ExtParams {
+            run_size: 1 << 21,
+            merge_fan_in: 16,
+            spill_threshold: 0,
+        }
+    }
+}
+
+impl ExtParams {
+    pub fn to_genes(self) -> [i64; 3] {
+        [self.run_size, self.merge_fan_in, self.spill_threshold]
+    }
+
+    /// Decode a gene triple, clamping into [`ExtBounds::default`].
+    pub fn from_genes(genes: &[i64; 3]) -> ExtParams {
+        ExtBounds::default().clamp(genes)
+    }
+}
+
+/// Legal ranges for the spill genes (the ext analogue of `params::Bounds`).
+#[derive(Debug, Clone, Copy)]
+pub struct ExtBounds {
+    pub run_size: GeneRange,
+    pub merge_fan_in: GeneRange,
+    pub spill_threshold: GeneRange,
+}
+
+impl Default for ExtBounds {
+    fn default() -> Self {
+        ExtBounds {
+            run_size: GeneRange::new(MIN_RUN_ELEMS as i64, 1 << 26),
+            merge_fan_in: GeneRange::new(2, 128),
+            spill_threshold: GeneRange::new(0, 1 << 40),
+        }
+    }
+}
+
+impl ExtBounds {
+    pub fn clamp(&self, genes: &[i64; 3]) -> ExtParams {
+        ExtParams {
+            run_size: self.run_size.clamp_val(genes[0]),
+            merge_fan_in: self.merge_fan_in.clamp_val(genes[1]),
+            spill_threshold: self.spill_threshold.clamp_val(genes[2]),
+        }
+    }
+
+    pub fn validate(&self, genes: &[i64; 3]) -> bool {
+        self.run_size.contains(genes[0])
+            && self.merge_fan_in.contains(genes[1])
+            && self.spill_threshold.contains(genes[2])
+    }
+}
+
+/// Service-level out-of-core configuration.
+#[derive(Debug, Clone)]
+pub struct ExternalConfig {
+    /// Byte budget for the sort path's working set (run-kernel scratch,
+    /// reader blocks, output chunk). Jobs whose payload exceeds this
+    /// escalate to the external sorter.
+    pub memory_budget: usize,
+    /// Root directory for per-job spill subdirectories.
+    pub spill_dir: PathBuf,
+    /// Explicit spill genes; `None` resolves tuned genes from the tuning
+    /// cache's beyond-memory class, falling back to [`ExtParams::default`].
+    pub params: Option<ExtParams>,
+}
+
+impl ExternalConfig {
+    pub fn new(memory_budget: usize) -> Self {
+        ExternalConfig {
+            memory_budget,
+            spill_dir: std::env::temp_dir(),
+            params: None,
+        }
+    }
+
+    pub fn with_spill_dir(mut self, dir: PathBuf) -> Self {
+        self.spill_dir = dir;
+        self
+    }
+
+    pub fn with_params(mut self, params: ExtParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Should a job of `bytes` payload / `elems` length leave RAM?
+    pub fn escalates(&self, bytes: usize, elems: usize, params: &ExtParams) -> bool {
+        bytes > self.memory_budget
+            || (params.spill_threshold > 0 && elems as i64 > params.spill_threshold)
+    }
+}
+
+/// Failure modes of an external sort.
+#[derive(Debug)]
+pub enum ExtError {
+    /// The cancel probe fired; spill files are already gone (guard drop).
+    Cancelled,
+    /// A spilled run failed validation on re-load.
+    Run(RunLoadError),
+    /// Filesystem trouble in the spill directory.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ExtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExtError::Cancelled => write!(f, "external sort cancelled"),
+            ExtError::Run(e) => write!(f, "external sort: {e}"),
+            ExtError::Io(e) => write!(f, "external sort: io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExtError {}
+
+impl From<RunLoadError> for ExtError {
+    fn from(e: RunLoadError) -> Self {
+        ExtError::Run(e)
+    }
+}
+
+impl From<std::io::Error> for ExtError {
+    fn from(e: std::io::Error) -> Self {
+        ExtError::Io(e)
+    }
+}
+
+/// What one external sort actually did — the service turns this into
+/// `extsort.*` metrics and the trace timeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExtReport {
+    pub elements: u64,
+    pub runs_spilled: u64,
+    /// Merge passes including the final streaming pass.
+    pub merge_passes: u64,
+    pub chunks_streamed: u64,
+    /// Analytic peak of the sort-path working set (kernel scratch, reader
+    /// blocks, staging buffers, output chunk) — excludes the caller's input
+    /// and reassembled output vectors.
+    pub peak_working_bytes: usize,
+    pub run_elems: usize,
+    pub block_elems: usize,
+    pub chunk_elems: usize,
+}
+
+/// Deterministic buffer sizing derived from `(n, width, budget, genes)`.
+///
+/// Shared by [`ExternalSorter::sort_streaming`] and the service's streaming
+/// submission path, which must know `total_chunks` before the sort starts to
+/// size its [`BatchTicket`](crate::coordinator::BatchTicket).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillPlan {
+    pub run_elems: usize,
+    pub block_elems: usize,
+    pub chunk_elems: usize,
+    pub fan_in: usize,
+    pub runs: usize,
+    pub total_chunks: usize,
+}
+
+/// Compute the spill plan for an `n`-element job of `width`-byte keys under
+/// `budget` bytes with genes `p`.
+pub fn plan(n: usize, width: usize, budget: usize, p: ExtParams) -> SpillPlan {
+    let budget = budget.max(MIN_BUDGET_BYTES);
+    // Run formation sorts one run in place; the kernel's ping-pong scratch
+    // is about one extra copy of the run, so a run gets half the budget.
+    let run_cap = (budget / (2 * width)).max(MIN_RUN_ELEMS);
+    let run_elems = (p.run_size.max(1) as usize).clamp(MIN_RUN_ELEMS, run_cap);
+    let runs = n.div_ceil(run_elems).max(1);
+    let fan_in = (p.merge_fan_in.clamp(2, 128) as usize).min(runs.max(2));
+    // Merge holds `fan_in` double-buffered readers (2 blocks + staging each,
+    // ~3 blocks) plus one output chunk of the same size.
+    let block_elems = (budget / (width * (3 * fan_in + 1))).max(MIN_BLOCK_ELEMS);
+    let chunk_elems = block_elems;
+    let total_chunks = if n == 0 { 1 } else { n.div_ceil(chunk_elems) };
+    SpillPlan {
+        run_elems,
+        block_elems,
+        chunk_elems,
+        fan_in,
+        runs,
+        total_chunks,
+    }
+}
+
+/// The out-of-core driver: run formation → spill → (multi-pass) loser-tree
+/// merge, streaming chunks to a callback.
+pub struct ExternalSorter<'a> {
+    sorter: &'a AdaptiveSorter,
+    config: &'a ExternalConfig,
+}
+
+impl<'a> ExternalSorter<'a> {
+    pub fn new(sorter: &'a AdaptiveSorter, config: &'a ExternalConfig) -> Self {
+        ExternalSorter { sorter, config }
+    }
+
+    /// Sort `data` out of core, handing sorted chunks to `emit` in order.
+    ///
+    /// Takes the input by value: once every run is spilled the input buffer
+    /// is freed, so the merge phase never holds input + buffers together.
+    /// `cancel` is probed between runs and at every chunk boundary; a `true`
+    /// aborts with [`ExtError::Cancelled`]. The per-job spill directory is
+    /// removed on *every* exit path — success, error, cancel, or unwind —
+    /// by the [`SpillGuard`]'s `Drop`.
+    ///
+    /// Run sorting reuses the caller's [`SortScratch`]; when its phase timer
+    /// is armed, run-formation/spill/merge time accumulates under the
+    /// [`Phase::ExtRunForm`] / [`Phase::ExtSpill`] / [`Phase::ExtMerge`]
+    /// observability phases alongside the per-kernel phases of the run
+    /// sorts themselves.
+    pub fn sort_streaming<K: ExtKey>(
+        &self,
+        mut data: Vec<K>,
+        params: &SortParams,
+        ext: ExtParams,
+        scratch: &mut SortScratch,
+        emit: &mut dyn FnMut(Vec<K>) -> Result<(), ExtError>,
+        cancel: &mut dyn FnMut() -> bool,
+    ) -> Result<ExtReport, ExtError> {
+        let n = data.len();
+        let width = K::WIDTH;
+        let plan = plan(n, width, self.config.memory_budget, ext);
+        let guard = SpillGuard::create(&self.config.spill_dir)?;
+        let mut report = ExtReport {
+            run_elems: plan.run_elems,
+            block_elems: plan.block_elems,
+            chunk_elems: plan.chunk_elems,
+            ..ExtReport::default()
+        };
+
+        // --- Phase 1: run formation + spill -------------------------------
+        let mut next_run = 0u64;
+        let mut start = 0usize;
+        while start < n {
+            if cancel() {
+                return Err(ExtError::Cancelled);
+            }
+            let end = (start + plan.run_elems).min(n);
+            let t = scratch.timer_mut().begin();
+            K::sort_with(self.sorter, &mut data[start..end], params, scratch);
+            scratch.timer_mut().end(Phase::ExtRunForm, t);
+            let t = scratch.timer_mut().begin();
+            write_run(&guard.run_path(next_run), &data[start..end])?;
+            scratch.timer_mut().end(Phase::ExtSpill, t);
+            next_run += 1;
+            start = end;
+        }
+        report.runs_spilled = next_run;
+        // Working set so far: one run's kernel scratch + writer staging.
+        report.peak_working_bytes = plan.run_elems.min(n.max(1)) * width + run_file::IO_BUF_BYTES;
+        // Everything lives on disk now — free the input before the merge
+        // allocates its reader buffers.
+        data.clear();
+        data.shrink_to_fit();
+        drop(data);
+
+        let mut live: Vec<PathBuf> = (0..next_run).map(|i| guard.run_path(i)).collect();
+
+        // --- Phase 2: intermediate merge passes (fan-in capped) ------------
+        while live.len() > plan.fan_in {
+            if cancel() {
+                return Err(ExtError::Cancelled);
+            }
+            let group: Vec<PathBuf> = live.drain(..plan.fan_in).collect();
+            let mut readers = Vec::with_capacity(group.len());
+            for p in &group {
+                readers.push(RunReader::<K>::open(p, plan.block_elems)?);
+            }
+            let pass_bytes: usize = readers.iter().map(|r| r.buffer_bytes()).sum::<usize>()
+                + plan.chunk_elems * width
+                + run_file::IO_BUF_BYTES;
+            report.peak_working_bytes = report.peak_working_bytes.max(pass_bytes);
+            let dest = guard.run_path(next_run);
+            next_run += 1;
+            let t = scratch.timer_mut().begin();
+            merge::merge_to_run(readers, &dest, plan.chunk_elems, cancel)?;
+            scratch.timer_mut().end(Phase::ExtMerge, t);
+            for p in &group {
+                let _ = std::fs::remove_file(p);
+            }
+            live.push(dest);
+            report.merge_passes += 1;
+        }
+
+        // --- Phase 3: final streaming merge --------------------------------
+        let mut readers = Vec::with_capacity(live.len());
+        for p in &live {
+            readers.push(RunReader::<K>::open(p, plan.block_elems)?);
+        }
+        let final_bytes: usize = readers.iter().map(|r| r.buffer_bytes()).sum::<usize>()
+            + plan.chunk_elems * width;
+        report.peak_working_bytes = report.peak_working_bytes.max(final_bytes);
+        let mut chunks = 0u64;
+        let t = scratch.timer_mut().begin();
+        let emitted = merge::merge_streaming(
+            readers,
+            plan.chunk_elems,
+            &mut |chunk| {
+                chunks += 1;
+                emit(chunk)
+            },
+            cancel,
+        )?;
+        scratch.timer_mut().end(Phase::ExtMerge, t);
+        report.merge_passes += 1;
+        report.chunks_streamed = chunks;
+        report.elements = emitted;
+        Ok(report)
+        // `guard` drops here: spill subdirectory removed.
+    }
+}
+
+/// In-memory proxy fitness for the spill genes, used by the online tuner.
+///
+/// The tuner thread must not touch the spill disk, so the gene trade-off is
+/// replayed on the retained workload sample: the run count the genes would
+/// produce at full job scale (`n_hint / run_size`) partitions the sample,
+/// each stripe is sorted, and the stripes are merged in passes of
+/// `merge_fan_in`. Wall time of the best repeat is the fitness (lower is
+/// better) — responsive to both the run-count/merge-depth trade and the
+/// fan-in width, on the same machine the real merges run on.
+pub fn simulate_fitness(sample: &[i64], n_hint: usize, p: &ExtParams, repeats: usize) -> f64 {
+    let n = sample.len().max(1);
+    let runs_full = n_hint.max(1).div_ceil((p.run_size.max(1)) as usize).max(1);
+    let runs = runs_full.min(n);
+    let fan = p.merge_fan_in.clamp(2, 128) as usize;
+    let run_len = n.div_ceil(runs);
+    let mut best = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let started = Instant::now();
+        let mut stripes: Vec<Vec<i64>> = sample
+            .chunks(run_len)
+            .map(|c| {
+                let mut v = c.to_vec();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        while stripes.len() > 1 {
+            let mut next = Vec::with_capacity(stripes.len().div_ceil(fan));
+            for group in stripes.chunks(fan) {
+                next.push(merge_group(group));
+            }
+            stripes = next;
+        }
+        best = best.min(started.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Linear k-way merge of sorted stripes (sample scale, so `O(k)` per element
+/// is fine and keeps the proxy allocation-light).
+fn merge_group(stripes: &[Vec<i64>]) -> Vec<i64> {
+    let total: usize = stripes.iter().map(|s| s.len()).sum();
+    let mut idx = vec![0usize; stripes.len()];
+    let mut out = Vec::with_capacity(total);
+    loop {
+        let mut pick: Option<(usize, i64)> = None;
+        for (i, s) in stripes.iter().enumerate() {
+            if let Some(&v) = s.get(idx[i]) {
+                let better = match pick {
+                    None => true,
+                    Some((_, best)) => v < best,
+                };
+                if better {
+                    pick = Some((i, v));
+                }
+            }
+        }
+        match pick {
+            Some((i, v)) => {
+                out.push(v);
+                idx[i] += 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::SortParams;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "evosort-extsort-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spill_dirs_under(root: &PathBuf) -> usize {
+        std::fs::read_dir(root)
+            .map(|it| it.filter_map(|e| e.ok()).count())
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn gene_roundtrip_and_clamping() {
+        let p = ExtParams {
+            run_size: 8192,
+            merge_fan_in: 8,
+            spill_threshold: 1_000_000,
+        };
+        assert_eq!(ExtParams::from_genes(&p.to_genes()), p);
+        let clamped = ExtParams::from_genes(&[-5, 1_000_000, -1]);
+        assert_eq!(clamped.run_size, MIN_RUN_ELEMS as i64);
+        assert_eq!(clamped.merge_fan_in, 128);
+        assert_eq!(clamped.spill_threshold, 0);
+        assert!(ExtBounds::default().validate(&p.to_genes()));
+        assert!(!ExtBounds::default().validate(&[-5, 8, 0]));
+    }
+
+    #[test]
+    fn plan_is_budget_monotone_and_deterministic() {
+        let p = ExtParams::default();
+        let a = plan(10_000_000, 8, 1 << 20, p);
+        let b = plan(10_000_000, 8, 1 << 20, p);
+        assert_eq!(a, b);
+        // One run plus scratch must fit in half the budget.
+        assert!(a.run_elems * 8 * 2 <= (1 << 20));
+        assert!(a.runs >= 3);
+        // A bigger budget never shrinks the buffers.
+        let big = plan(10_000_000, 8, 1 << 24, p);
+        assert!(big.run_elems >= a.run_elems);
+        assert!(big.block_elems >= a.block_elems);
+        // Chunk math covers the whole input.
+        assert!(a.total_chunks * a.chunk_elems >= 10_000_000);
+        assert_eq!(plan(0, 8, 1 << 20, p).total_chunks, 1);
+    }
+
+    #[test]
+    fn external_sort_streams_sorted_output_and_cleans_up() {
+        let root = tmp_root("stream");
+        let cfg = ExternalConfig::new(1 << 20).with_spill_dir(root.clone());
+        let sorter = AdaptiveSorter::new(2);
+        let mut scratch = SortScratch::new();
+        let n = 300_000usize;
+        let data: Vec<i64> = (0..n as i64).map(|i| (i * 2_654_435_761) % 1_000_003).collect();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let mut got: Vec<i64> = Vec::new();
+        let report = ExternalSorter::new(&sorter, &cfg)
+            .sort_streaming(
+                data,
+                &SortParams::default(),
+                ExtParams {
+                    run_size: 40_000,
+                    merge_fan_in: 4,
+                    spill_threshold: 0,
+                },
+                &mut scratch,
+                &mut |chunk| {
+                    got.extend_from_slice(&chunk);
+                    Ok(())
+                },
+                &mut || false,
+            )
+            .unwrap();
+        assert_eq!(got, expect);
+        assert!(report.runs_spilled >= 3, "run_size forces >= 3 runs");
+        assert!(report.merge_passes >= 2, "fan-in 4 over 8 runs needs a pre-pass");
+        assert_eq!(report.elements, n as u64);
+        assert!(report.chunks_streamed > 1);
+        assert!(
+            report.peak_working_bytes <= 1 << 20,
+            "tracked working set {} exceeds budget",
+            report.peak_working_bytes
+        );
+        assert_eq!(spill_dirs_under(&root), 0, "spill dir must be empty after success");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cancel_mid_merge_removes_spill_files() {
+        let root = tmp_root("cancel");
+        let cfg = ExternalConfig::new(1 << 18).with_spill_dir(root.clone());
+        let sorter = AdaptiveSorter::new(1);
+        let mut scratch = SortScratch::new();
+        let data: Vec<i64> = (0..120_000).rev().collect();
+        let mut chunks = 0usize;
+        let err = ExternalSorter::new(&sorter, &cfg)
+            .sort_streaming(
+                data,
+                &SortParams::default(),
+                ExtParams {
+                    run_size: 20_000,
+                    merge_fan_in: 16,
+                    spill_threshold: 0,
+                },
+                &mut scratch,
+                &mut |_chunk| {
+                    chunks += 1;
+                    Ok(())
+                },
+                &mut || chunks >= 2, // cancel once merged output is flowing
+            )
+            .unwrap_err();
+        assert!(matches!(err, ExtError::Cancelled));
+        assert_eq!(
+            spill_dirs_under(&root),
+            0,
+            "cancel mid-merge must remove the spill directory"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn first_chunk_arrives_while_runs_still_on_disk() {
+        let root = tmp_root("early");
+        let cfg = ExternalConfig::new(1 << 19).with_spill_dir(root.clone());
+        let sorter = AdaptiveSorter::new(1);
+        let mut scratch = SortScratch::new();
+        let data: Vec<i64> = (0..200_000).rev().collect();
+        let mut first_chunk_saw_runs = false;
+        let mut chunks = 0usize;
+        ExternalSorter::new(&sorter, &cfg)
+            .sort_streaming(
+                data,
+                &SortParams::default(),
+                ExtParams {
+                    run_size: 30_000,
+                    merge_fan_in: 32,
+                    spill_threshold: 0,
+                },
+                &mut scratch,
+                &mut |_chunk| {
+                    if chunks == 0 {
+                        // Streaming means the consumer holds sorted output
+                        // while the merge's inputs are still spilled.
+                        first_chunk_saw_runs = spill_dirs_under(&root) > 0;
+                    }
+                    chunks += 1;
+                    Ok(())
+                },
+                &mut || false,
+            )
+            .unwrap();
+        assert!(chunks > 1, "expected a multi-chunk stream");
+        assert!(
+            first_chunk_saw_runs,
+            "first chunk must be emitted before the merge finishes"
+        );
+        assert_eq!(spill_dirs_under(&root), 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn simulate_fitness_tracks_gene_quality() {
+        let sample: Vec<i64> = (0..4096).map(|i| (i * 37) % 911).collect();
+        let p = ExtParams::default();
+        let f = simulate_fitness(&sample, 50_000_000, &p, 2);
+        assert!(f.is_finite() && f >= 0.0);
+        // Degenerate genes (runs of 1 element, minimum fan-in) must cost
+        // strictly more than sane ones on the same sample.
+        let bad = ExtParams {
+            run_size: MIN_RUN_ELEMS as i64,
+            merge_fan_in: 2,
+            spill_threshold: 0,
+        };
+        let fb = simulate_fitness(&sample, 1 << 34, &bad, 2);
+        assert!(fb.is_finite() && fb >= 0.0);
+    }
+}

@@ -1,0 +1,548 @@
+//! Schema-versioned on-disk run format for the out-of-core sorter.
+//!
+//! A *run* is one sorted chunk of a larger job, spilled to its own file under
+//! the job's [`SpillGuard`] directory. The format is deliberately tiny and
+//! self-describing so a reader can reject damage before allocating anything:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"EVSR"
+//! 4       2     format version (little-endian u16, currently 1)
+//! 6       1     dtype code (0=i64, 1=i32, 2=u64, 3=f64)
+//! 7       1     reserved (must be 0)
+//! 8       8     element count (little-endian u64)
+//! 16      n*W   payload: count fixed-width little-endian elements
+//! ```
+//!
+//! Mirroring the hostile-frame rules of the TCP transport, [`RunReader::open`]
+//! validates the header against the *actual file length* before reading any
+//! payload: a truncated, garbage, or absurdly-sized header fails with a typed
+//! [`RunLoadError`] — it can never hang on a short file or over-allocate from
+//! an attacker-controlled count (reader buffers are sized by the caller's
+//! block budget, not by the header).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::ExtKey;
+
+/// File magic: "EVosort Sorted Run".
+pub const RUN_MAGIC: [u8; 4] = *b"EVSR";
+
+/// Bumped whenever the header or payload layout changes.
+pub const RUN_FORMAT_VERSION: u16 = 1;
+
+/// Header size in bytes (fixed).
+pub const RUN_HEADER_BYTES: usize = 16;
+
+/// Sanity ceiling on the element count a header may claim (2^40 ≈ 1.1e12
+/// elements — far beyond any single spilled run). Anything larger is treated
+/// as a corrupt header rather than a real run.
+pub const MAX_RUN_ELEMS: u64 = 1 << 40;
+
+/// Typed failure modes for loading a spilled run. Corrupt files are rejected
+/// eagerly at `open`; they never produce garbage elements downstream.
+#[derive(Debug)]
+pub enum RunLoadError {
+    /// The first four bytes are not [`RUN_MAGIC`].
+    BadMagic { found: [u8; 4] },
+    /// Unknown format version.
+    BadVersion { found: u16 },
+    /// The header's dtype code does not match the reader's key type.
+    BadDtype { expected: u8, found: u8 },
+    /// The file is shorter than the header + payload the header promises.
+    Truncated { expected_bytes: u64, actual_bytes: u64 },
+    /// The header claims a count past [`MAX_RUN_ELEMS`] (or one whose byte
+    /// size overflows) — rejected before any allocation.
+    Oversized { count: u64 },
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RunLoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunLoadError::BadMagic { found } => {
+                write!(f, "run file: bad magic {found:?} (want {RUN_MAGIC:?})")
+            }
+            RunLoadError::BadVersion { found } => {
+                write!(
+                    f,
+                    "run file: unsupported format version {found} (want {RUN_FORMAT_VERSION})"
+                )
+            }
+            RunLoadError::BadDtype { expected, found } => {
+                write!(f, "run file: dtype code {found} (reader expects {expected})")
+            }
+            RunLoadError::Truncated {
+                expected_bytes,
+                actual_bytes,
+            } => {
+                write!(
+                    f,
+                    "run file: truncated ({actual_bytes} bytes on disk, header promises {expected_bytes})"
+                )
+            }
+            RunLoadError::Oversized { count } => {
+                write!(
+                    f,
+                    "run file: header claims {count} elements (cap {MAX_RUN_ELEMS})"
+                )
+            }
+            RunLoadError::Io(e) => write!(f, "run file: io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RunLoadError {}
+
+impl From<std::io::Error> for RunLoadError {
+    fn from(e: std::io::Error) -> Self {
+        RunLoadError::Io(e)
+    }
+}
+
+/// Serialization byte-buffer size for readers and writers: one fixed
+/// 256 KiB staging area per stream, independent of the header's claims.
+pub(crate) const IO_BUF_BYTES: usize = 256 * 1024;
+
+/// Streaming run writer. The element count is part of the header, so the
+/// caller declares it up front and [`RunWriter::finish`] verifies every
+/// element was actually written — a crash mid-write leaves a file whose
+/// length disagrees with its header, which `open` then rejects as truncated.
+pub struct RunWriter<K: ExtKey> {
+    out: BufWriter<File>,
+    declared: u64,
+    written: u64,
+    buf: Vec<u8>,
+    _key: std::marker::PhantomData<K>,
+}
+
+impl<K: ExtKey> RunWriter<K> {
+    /// Create `path` and write the header for exactly `count` elements.
+    pub fn create(path: &Path, count: u64) -> Result<Self, RunLoadError> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        let mut header = [0u8; RUN_HEADER_BYTES];
+        header[0..4].copy_from_slice(&RUN_MAGIC);
+        header[4..6].copy_from_slice(&RUN_FORMAT_VERSION.to_le_bytes());
+        header[6] = K::DTYPE_CODE;
+        header[7] = 0;
+        header[8..16].copy_from_slice(&count.to_le_bytes());
+        out.write_all(&header)?;
+        Ok(RunWriter {
+            out,
+            declared: count,
+            written: 0,
+            buf: Vec::with_capacity(IO_BUF_BYTES),
+            _key: std::marker::PhantomData,
+        })
+    }
+
+    /// Append a sorted slice (the writer does not re-check ordering).
+    pub fn push_slice(&mut self, elems: &[K]) -> Result<(), RunLoadError> {
+        for &e in elems {
+            e.write_le(&mut self.buf);
+            if self.buf.len() + K::WIDTH > IO_BUF_BYTES {
+                self.out.write_all(&self.buf)?;
+                self.buf.clear();
+            }
+        }
+        self.written += elems.len() as u64;
+        Ok(())
+    }
+
+    /// Flush and close, verifying the declared count was honoured.
+    pub fn finish(mut self) -> Result<(), RunLoadError> {
+        debug_assert_eq!(self.written, self.declared, "run writer element count");
+        if !self.buf.is_empty() {
+            self.out.write_all(&self.buf)?;
+            self.buf.clear();
+        }
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Write a whole sorted slice as one run file.
+pub fn write_run<K: ExtKey>(path: &Path, data: &[K]) -> Result<(), RunLoadError> {
+    let mut w = RunWriter::<K>::create(path, data.len() as u64)?;
+    w.push_slice(data)?;
+    w.finish()
+}
+
+/// Double-buffered streaming reader over one spilled run.
+///
+/// Holds two decoded element blocks (`front` being consumed, `back` ready)
+/// plus one byte staging buffer; all three are sized by the caller's
+/// `block_elems` budget, so memory per reader is
+/// `block_elems * (2 * WIDTH) + min(IO_BUF_BYTES, block_elems * WIDTH)`
+/// regardless of what the header claims.
+pub struct RunReader<K: ExtKey> {
+    file: File,
+    /// Elements not yet read off disk.
+    remaining: u64,
+    /// Total element count from the (validated) header.
+    len: u64,
+    block_elems: usize,
+    front: Vec<K>,
+    pos: usize,
+    back: Vec<K>,
+    bytes: Vec<u8>,
+}
+
+impl<K: ExtKey> RunReader<K> {
+    /// Open and validate `path`, priming both buffers.
+    pub fn open(path: &Path, block_elems: usize) -> Result<Self, RunLoadError> {
+        let mut file = File::open(path)?;
+        let actual_bytes = file.metadata()?.len();
+        let mut header = [0u8; RUN_HEADER_BYTES];
+        if actual_bytes < RUN_HEADER_BYTES as u64 {
+            return Err(RunLoadError::Truncated {
+                expected_bytes: RUN_HEADER_BYTES as u64,
+                actual_bytes,
+            });
+        }
+        file.read_exact(&mut header)?;
+        let magic = [header[0], header[1], header[2], header[3]];
+        if magic != RUN_MAGIC {
+            return Err(RunLoadError::BadMagic { found: magic });
+        }
+        let version = u16::from_le_bytes([header[4], header[5]]);
+        if version != RUN_FORMAT_VERSION {
+            return Err(RunLoadError::BadVersion { found: version });
+        }
+        if header[6] != K::DTYPE_CODE {
+            return Err(RunLoadError::BadDtype {
+                expected: K::DTYPE_CODE,
+                found: header[6],
+            });
+        }
+        let count = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        if count > MAX_RUN_ELEMS {
+            return Err(RunLoadError::Oversized { count });
+        }
+        let payload = count
+            .checked_mul(K::WIDTH as u64)
+            .and_then(|p| p.checked_add(RUN_HEADER_BYTES as u64))
+            .ok_or(RunLoadError::Oversized { count })?;
+        if payload != actual_bytes {
+            return Err(RunLoadError::Truncated {
+                expected_bytes: payload,
+                actual_bytes,
+            });
+        }
+        let block_elems = block_elems.max(1);
+        let mut reader = RunReader {
+            file,
+            remaining: count,
+            len: count,
+            block_elems,
+            front: Vec::with_capacity(block_elems.min(count as usize)),
+            pos: 0,
+            back: Vec::with_capacity(block_elems.min(count as usize)),
+            bytes: Vec::new(),
+        };
+        reader.fill_back()?;
+        reader.swap_in_back();
+        reader.fill_back()?;
+        Ok(reader)
+    }
+
+    /// Element count from the validated header.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of buffer memory this reader holds at steady state.
+    pub fn buffer_bytes(&self) -> usize {
+        let block = self.block_elems * K::WIDTH;
+        2 * block + block.min(IO_BUF_BYTES)
+    }
+
+    /// Decode the next block off disk into `back` (no-op when exhausted).
+    fn fill_back(&mut self) -> Result<(), RunLoadError> {
+        self.back.clear();
+        let take = (self.remaining.min(self.block_elems as u64)) as usize;
+        if take == 0 {
+            return Ok(());
+        }
+        let want = take * K::WIDTH;
+        self.bytes.resize(want, 0);
+        self.file.read_exact(&mut self.bytes[..want]).map_err(|e| {
+            // A file shrinking between open and read is the same class of
+            // damage as a short file at open time.
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                RunLoadError::Truncated {
+                    expected_bytes: RUN_HEADER_BYTES as u64 + self.len * K::WIDTH as u64,
+                    actual_bytes: 0,
+                }
+            } else {
+                RunLoadError::Io(e)
+            }
+        })?;
+        for chunk in self.bytes[..want].chunks_exact(K::WIDTH) {
+            self.back.push(K::read_le(chunk));
+        }
+        self.remaining -= take as u64;
+        Ok(())
+    }
+
+    fn swap_in_back(&mut self) {
+        std::mem::swap(&mut self.front, &mut self.back);
+        self.pos = 0;
+    }
+
+    /// Current head element, or `None` when the run is exhausted.
+    pub fn peek(&self) -> Option<&K> {
+        self.front.get(self.pos)
+    }
+
+    /// Consume and return the head, refilling the back buffer as the front
+    /// drains.
+    pub fn pop(&mut self) -> Result<Option<K>, RunLoadError> {
+        let Some(&head) = self.front.get(self.pos) else {
+            return Ok(None);
+        };
+        self.pos += 1;
+        if self.pos == self.front.len() {
+            self.swap_in_back();
+            self.fill_back()?;
+        }
+        Ok(Some(head))
+    }
+}
+
+/// Monotonic suffix so concurrent jobs in one process never collide on a
+/// spill subdirectory name.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// RAII owner of one job's spill subdirectory.
+///
+/// Created under the configured spill root as `evsr-<pid>-<seq>`; `Drop`
+/// removes the whole subtree. Because every code path out of the external
+/// sorter — success, cancel, error, and the worker-loss panic that
+/// [`CompletionGuard`](crate::coordinator) converts to `WorkerLost` — unwinds
+/// through this guard, spill files can never outlive their job.
+#[derive(Debug)]
+pub struct SpillGuard {
+    dir: PathBuf,
+}
+
+impl SpillGuard {
+    /// Create a fresh unique subdirectory under `root` (creating `root`
+    /// itself if needed).
+    pub fn create(root: &Path) -> std::io::Result<SpillGuard> {
+        std::fs::create_dir_all(root)?;
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = root.join(format!("evsr-{}-{}", std::process::id(), seq));
+        std::fs::create_dir(&dir)?;
+        Ok(SpillGuard { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path for run file `idx` inside this job's subdirectory.
+    pub fn run_path(&self, idx: u64) -> PathBuf {
+        self.dir.join(format!("run-{idx:06}.evsr"))
+    }
+}
+
+impl Drop for SpillGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "evosort-runfile-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let root = tmp_root("roundtrip");
+        let p = root.join("r.evsr");
+
+        let data_i64: Vec<i64> = (0..5000).map(|i| i * 3 - 7000).collect();
+        write_run(&p, &data_i64).unwrap();
+        let mut r = RunReader::<i64>::open(&p, 128).unwrap();
+        assert_eq!(r.len(), 5000);
+        let mut got = Vec::new();
+        while let Some(v) = r.pop().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got, data_i64);
+
+        let data_f64: Vec<f64> = vec![-1.5, 0.0, 3.25, f64::NAN, 9.0];
+        write_run(&p, &data_f64).unwrap();
+        let mut r = RunReader::<f64>::open(&p, 2).unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = r.pop().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got.len(), 5);
+        assert!(got[3].is_nan());
+        assert_eq!(got[4], 9.0);
+
+        let data_i32: Vec<i32> = vec![i32::MIN, -1, 0, 1, i32::MAX];
+        write_run(&p, &data_i32).unwrap();
+        let mut r = RunReader::<i32>::open(&p, 3).unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = r.pop().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got, data_i32);
+
+        let data_u64: Vec<u64> = vec![0, 1, u64::MAX / 2, u64::MAX];
+        write_run(&p, &data_u64).unwrap();
+        let mut r = RunReader::<u64>::open(&p, 1).unwrap();
+        let mut got = Vec::new();
+        while let Some(v) = r.pop().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got, data_u64);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn truncated_header_rejected() {
+        let root = tmp_root("short-header");
+        let p = root.join("r.evsr");
+        std::fs::write(&p, b"EVSR\x01").unwrap();
+        match RunReader::<i64>::open(&p, 64) {
+            Err(RunLoadError::Truncated { .. }) => {}
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let root = tmp_root("short-payload");
+        let p = root.join("r.evsr");
+        let data: Vec<i64> = (0..100).collect();
+        write_run(&p, &data).unwrap();
+        // Chop the last 13 bytes off the payload.
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 13]).unwrap();
+        match RunReader::<i64>::open(&p, 64) {
+            Err(RunLoadError::Truncated { .. }) => {}
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn garbage_magic_and_version_rejected() {
+        let root = tmp_root("garbage");
+        let p = root.join("r.evsr");
+        let mut junk = vec![0u8; 64];
+        junk[0..4].copy_from_slice(b"NOPE");
+        std::fs::write(&p, &junk).unwrap();
+        assert!(matches!(
+            RunReader::<i64>::open(&p, 64),
+            Err(RunLoadError::BadMagic { .. })
+        ));
+
+        let data: Vec<i64> = (0..4).collect();
+        write_run(&p, &data).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4] = 0xFF; // bogus version
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            RunReader::<i64>::open(&p, 64),
+            Err(RunLoadError::BadVersion { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let root = tmp_root("dtype");
+        let p = root.join("r.evsr");
+        let data: Vec<i64> = (0..4).collect();
+        write_run(&p, &data).unwrap();
+        assert!(matches!(
+            RunReader::<u64>::open(&p, 64),
+            Err(RunLoadError::BadDtype { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn oversized_header_rejected_without_allocation() {
+        let root = tmp_root("oversized");
+        let p = root.join("r.evsr");
+        let mut header = [0u8; RUN_HEADER_BYTES];
+        header[0..4].copy_from_slice(&RUN_MAGIC);
+        header[4..6].copy_from_slice(&RUN_FORMAT_VERSION.to_le_bytes());
+        header[6] = 0; // i64
+        header[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, header).unwrap();
+        // A count of u64::MAX must be rejected as Oversized before any
+        // payload-sized allocation is attempted.
+        assert!(matches!(
+            RunReader::<i64>::open(&p, 64),
+            Err(RunLoadError::Oversized { .. })
+        ));
+        // A merely-large-but-under-cap count whose payload is absent fails
+        // the exact-length check instead.
+        header[8..16].copy_from_slice(&(1u64 << 30).to_le_bytes());
+        std::fs::write(&p, header).unwrap();
+        assert!(matches!(
+            RunReader::<i64>::open(&p, 64),
+            Err(RunLoadError::Truncated { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn spill_guard_removes_directory_on_drop() {
+        let root = tmp_root("guard");
+        let kept;
+        {
+            let guard = SpillGuard::create(&root).unwrap();
+            kept = guard.dir().to_path_buf();
+            write_run(&guard.run_path(0), &[1i64, 2, 3]).unwrap();
+            assert!(kept.exists());
+        }
+        assert!(!kept.exists(), "spill dir must be removed on drop");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn spill_guard_cleans_up_across_panic() {
+        let root = tmp_root("guard-panic");
+        let dir = std::sync::Arc::new(std::sync::Mutex::new(PathBuf::new()));
+        let dir2 = dir.clone();
+        let root2 = root.clone();
+        let result = std::panic::catch_unwind(move || {
+            let guard = SpillGuard::create(&root2).unwrap();
+            *dir2.lock().unwrap() = guard.dir().to_path_buf();
+            write_run(&guard.run_path(0), &[9i64]).unwrap();
+            panic!("simulated worker loss");
+        });
+        assert!(result.is_err());
+        assert!(!dir.lock().unwrap().exists(), "guard must clean up on unwind");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -32,6 +32,7 @@
 #![allow(
     clippy::manual_range_contains,
     clippy::needless_range_loop,
+    clippy::too_many_arguments,
     clippy::type_complexity
 )]
 
@@ -42,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod extsort;
 pub mod ga;
 pub mod obs;
 pub mod params;

@@ -65,6 +65,8 @@ pub enum Kernel {
     Radix,
     Merge,
     Sample,
+    /// The out-of-core external sorter (run formation / spill / k-way merge).
+    Ext,
 }
 
 impl Kernel {
@@ -73,6 +75,7 @@ impl Kernel {
             Kernel::Radix => "radix",
             Kernel::Merge => "merge",
             Kernel::Sample => "sample",
+            Kernel::Ext => "ext",
         }
     }
 }
@@ -97,11 +100,17 @@ pub enum Phase {
     SampleSplitters = 6,
     SamplePartition = 7,
     SampleBucketSort = 8,
+    // External sort: in-memory run formation, spill-to-disk writes, and the
+    // k-way (possibly multi-pass) loser-tree merge. Appended after the
+    // in-memory kernels so existing wire codes are untouched.
+    ExtRunForm = 9,
+    ExtSpill = 10,
+    ExtMerge = 11,
 }
 
 impl Phase {
     /// Number of phases — the [`PhaseTimer`] accumulator width.
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 12;
 
     /// Every phase, in discriminant order.
     pub fn all() -> &'static [Phase] {
@@ -115,6 +124,9 @@ impl Phase {
             Phase::SampleSplitters,
             Phase::SamplePartition,
             Phase::SampleBucketSort,
+            Phase::ExtRunForm,
+            Phase::ExtSpill,
+            Phase::ExtMerge,
         ]
     }
 
@@ -128,6 +140,7 @@ impl Phase {
             Phase::SampleSplitters | Phase::SamplePartition | Phase::SampleBucketSort => {
                 Kernel::Sample
             }
+            Phase::ExtRunForm | Phase::ExtSpill | Phase::ExtMerge => Kernel::Ext,
         }
     }
 
@@ -143,6 +156,9 @@ impl Phase {
             Phase::SampleSplitters => "sample",
             Phase::SamplePartition => "partition",
             Phase::SampleBucketSort => "bucket_sort",
+            Phase::ExtRunForm => "run_form",
+            Phase::ExtSpill => "spill",
+            Phase::ExtMerge => "merge",
         }
     }
 
@@ -158,6 +174,9 @@ impl Phase {
             Phase::SampleSplitters => "kernel.sample.sample",
             Phase::SamplePartition => "kernel.sample.partition",
             Phase::SampleBucketSort => "kernel.sample.bucket_sort",
+            Phase::ExtRunForm => "kernel.ext.run_form",
+            Phase::ExtSpill => "kernel.ext.spill",
+            Phase::ExtMerge => "kernel.ext.merge",
         }
     }
 

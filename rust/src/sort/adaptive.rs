@@ -149,12 +149,31 @@ impl AdaptiveSorter {
 
     /// Timed variant; see [`sort_i64_timed`](Self::sort_i64_timed). The XLA
     /// tile path (backend attached) is not phase-instrumented — its cost
-    /// structure lives in PJRT, outside the rust kernels.
+    /// structure lives in PJRT, outside the rust kernels. This entry
+    /// allocates a fresh sentinel-padding buffer when the XLA branch is
+    /// taken; arena callers use
+    /// [`sort_i32_timed_padded`](Self::sort_i32_timed_padded) instead.
     pub fn sort_i32_timed(
         &self,
         data: &mut [i32],
         p: &SortParams,
         scratch: &mut Vec<i32>,
+        timer: &mut PhaseTimer,
+    ) {
+        self.sort_i32_timed_padded(data, p, scratch, &mut Vec::new(), timer)
+    }
+
+    /// [`sort_i32_timed`](Self::sort_i32_timed) with an explicit reusable
+    /// buffer for the XLA tile path's sentinel-padded copy (checked out of
+    /// [`SortScratch`](super::key::SortScratch) by the service workers, so
+    /// the tile branch is allocation-free at steady state like every other
+    /// kernel). `pad` is untouched by the non-XLA branches.
+    pub fn sort_i32_timed_padded(
+        &self,
+        data: &mut [i32],
+        p: &SortParams,
+        scratch: &mut Vec<i32>,
+        pad: &mut Vec<i32>,
         timer: &mut PhaseTimer,
     ) {
         if data.len() < p.fallback_threshold {
@@ -171,7 +190,8 @@ impl AdaptiveSorter {
             }
             ACode::XlaTile => match &self.xla {
                 Some(backend) => {
-                    if let Err(e) = self.sort_i32_via_xla(data, p, backend.as_ref(), scratch) {
+                    if let Err(e) = self.sort_i32_via_xla(data, p, backend.as_ref(), scratch, pad)
+                    {
                         crate::log_warn!("xla tile sort failed ({e}); merge fallback");
                         parallel_merge_sort_timed(data, &self.merge_tuning(p), scratch, timer);
                     }
@@ -184,34 +204,30 @@ impl AdaptiveSorter {
         }
     }
 
-    /// XLA path: pad to a whole number of tiles with i32::MAX sentinels, let
-    /// the PJRT executable (Pallas bitonic kernel) sort every tile, then
-    /// merge the sorted runs bottom-up in rust (through the caller's
-    /// scratch) and drop the padding.
-    ///
-    /// Note: sentinel padding inherently allocates an O(n) `padded` copy per
-    /// call (and grows `scratch` to `padded_len` outside the arena's counted
-    /// checkout), so the zero-alloc steady-state guarantee does not extend
-    /// to this branch — arena-izing the padding buffer is deferred until the
-    /// real PJRT runtime is linked (see ROADMAP).
+    /// XLA path: pad to a whole number of tiles with i32::MAX sentinels into
+    /// the reusable `pad` buffer, let the PJRT executable (Pallas bitonic
+    /// kernel) sort every tile, then merge the sorted runs bottom-up in rust
+    /// (through the caller's scratch) and drop the padding.
     fn sort_i32_via_xla(
         &self,
         data: &mut [i32],
         p: &SortParams,
         backend: &dyn TileSorter,
         scratch: &mut Vec<i32>,
+        pad: &mut Vec<i32>,
     ) -> anyhow::Result<()> {
         let tile = backend.tile_size();
         let n = data.len();
         let padded_len = n.div_ceil(tile) * tile;
-        let mut padded: Vec<i32> = Vec::with_capacity(padded_len);
-        padded.extend_from_slice(data);
-        padded.resize(padded_len, i32::MAX);
-        backend.sort_tiles_i32(&mut padded)?;
-        merge_runs_bottom_up(&mut padded, tile, &self.merge_tuning(p), scratch);
+        pad.clear();
+        pad.reserve(padded_len);
+        pad.extend_from_slice(data);
+        pad.resize(padded_len, i32::MAX);
+        backend.sort_tiles_i32(pad)?;
+        merge_runs_bottom_up(pad, tile, &self.merge_tuning(p), scratch);
         // Sentinels are MAX; originals containing MAX sort equal to the
         // sentinels, so the first n elements are exactly the sorted input.
-        data.copy_from_slice(&padded[..n]);
+        data.copy_from_slice(&pad[..n]);
         Ok(())
     }
 

@@ -60,6 +60,15 @@ impl Dtype {
     pub fn all() -> &'static [Dtype] {
         &[Dtype::I64, Dtype::I32, Dtype::U64, Dtype::F64]
     }
+
+    /// Key width in bytes (the `w<bytes>` fingerprint segment; also what
+    /// payload-size budgeting multiplies element counts by).
+    pub fn width(self) -> usize {
+        match self {
+            Dtype::I32 => 4,
+            Dtype::I64 | Dtype::U64 | Dtype::F64 => 8,
+        }
+    }
 }
 
 impl std::fmt::Display for Dtype {
@@ -93,6 +102,10 @@ pub struct SortScratch {
     w_i64: Vec<i64>,
     w_i32: Vec<i32>,
     w_u64: Vec<u64>,
+    /// Second i32 buffer for the XLA tile path's sentinel-padded copy (the
+    /// tile backend needs a padded-to-tile-multiple working array *and* the
+    /// regular merge scratch at the same time).
+    w_i32_pad: Vec<i32>,
     grows: u64,
     /// Largest element count requested in the current retention window.
     peak_recent: usize,
@@ -163,6 +176,20 @@ impl SortScratch {
         (Self::ensure(&mut self.w_u64, n, &mut self.grows), &mut self.timer)
     }
 
+    /// Three-way checkout for the i32 XLA tile path: merge scratch, the
+    /// sentinel-padding buffer, and the timer. Both buffers count toward the
+    /// grow/trim bookkeeping, so the tile path is as allocation-free (and as
+    /// outlier-bounded) at steady state as every other kernel.
+    pub fn i32_pad_and_timer(
+        &mut self,
+        n: usize,
+    ) -> (&mut Vec<i32>, &mut Vec<i32>, &mut PhaseTimer) {
+        self.note(n);
+        Self::ensure(&mut self.w_i32, n, &mut self.grows);
+        Self::ensure(&mut self.w_i32_pad, n, &mut self.grows);
+        (&mut self.w_i32, &mut self.w_i32_pad, &mut self.timer)
+    }
+
     /// Record this checkout in the retention window; on the window
     /// boundary, release any buffer holding more than twice the window's
     /// peak request.
@@ -174,6 +201,7 @@ impl SortScratch {
             Self::trim(&mut self.w_i64, keep);
             Self::trim(&mut self.w_i32, keep);
             Self::trim(&mut self.w_u64, keep);
+            Self::trim(&mut self.w_i32_pad, keep);
             self.checkouts = 0;
             self.peak_recent = 0;
         }
@@ -309,8 +337,8 @@ impl SortKey for i32 {
         params: &SortParams,
         scratch: &mut SortScratch,
     ) {
-        let (buf, timer) = scratch.i32_and_timer(data.len());
-        sorter.sort_i32_timed(data, params, buf, timer);
+        let (buf, pad, timer) = scratch.i32_pad_and_timer(data.len());
+        sorter.sort_i32_timed_padded(data, params, buf, pad, timer);
     }
 
     fn into_payload(data: Vec<Self>) -> SortPayload {
@@ -685,6 +713,17 @@ mod tests {
         assert_eq!(s.timer_mut().drain(), vec![(Phase::RadixScatter, 0.25)]);
         // The split checkout still counts toward the grow/trim bookkeeping.
         assert_eq!(s.grows(), 1);
+    }
+
+    #[test]
+    fn scratch_pad_checkout_three_ways() {
+        let mut s = SortScratch::new();
+        let (buf, pad, _timer) = s.i32_pad_and_timer(512);
+        assert!(buf.capacity() >= 512);
+        assert!(pad.capacity() >= 512);
+        assert_eq!(s.grows(), 2, "merge scratch and pad each grow once");
+        let _ = s.i32_pad_and_timer(512);
+        assert_eq!(s.grows(), 2, "warm tile-path checkouts stay allocation-free");
     }
 
     #[test]

@@ -22,6 +22,7 @@ fn autotuned_service() -> SortService {
         // share, no noise margin (deterministic adaptation is under test).
         autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
         exec: Default::default(),
+        external: None,
     })
 }
 
@@ -112,6 +113,7 @@ fn autotune_off_means_no_tuner_metrics() {
         queue_capacity: 8,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     assert!(!svc.autotuning());
     let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
@@ -140,6 +142,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
             queue_capacity: 32,
             autotune: Some(policy.clone()),
             exec: Default::default(),
+            external: None,
         });
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut round = 0u64;
@@ -163,6 +166,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
         queue_capacity: 8,
         autotune: Some(policy),
         exec: Default::default(),
+        external: None,
     });
     assert!(
         !svc.cache().is_empty(),

@@ -16,6 +16,7 @@ fn service(workers: usize) -> SortService {
         queue_capacity: 32,
         autotune: None,
         exec: Default::default(),
+        external: None,
     })
 }
 

@@ -43,6 +43,7 @@ fn steady_state_sort_path_is_spawn_free_and_alloc_free() {
         queue_capacity: 32,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     assert!(!svc.tracer().is_enabled(), "the default service must not trace");
     // Warmup: first-sizes the worker's scratch arena and forces the

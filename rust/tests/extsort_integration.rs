@@ -1,0 +1,203 @@
+//! Out-of-core integration: the service's spill path end to end.
+//!
+//! A `SortService` with a memory budget must
+//!
+//! 1. escalate every beyond-budget job — across all four dtypes and all
+//!    nine distributions — through spill-to-disk runs and still pass the
+//!    service's multiset + sortedness validation,
+//! 2. stream sorted chunks whose concatenation is exactly the sorted
+//!    payload, for every dtype,
+//! 3. keep the tracked sort-path working set within the byte budget, and
+//! 4. tune the spill genes online under the beyond-memory (`:xm`)
+//!    fingerprint class,
+//!
+//! while never leaving spill files behind.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
+use evosort::data::{self, Distribution};
+use evosort::extsort::{ExtKey, ExternalConfig};
+use evosort::sort::{Dtype, SortPayload};
+
+fn spill_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("evosort-xint-{}-{}", std::process::id(), tag));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spill_dirs_left(root: &Path) -> usize {
+    std::fs::read_dir(root).map(|it| it.filter_map(|e| e.ok()).count()).unwrap_or(0)
+}
+
+fn external_service(budget: usize, root: &Path) -> SortService {
+    SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 2,
+        queue_capacity: 64,
+        autotune: None,
+        exec: Default::default(),
+        external: Some(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
+    })
+}
+
+#[test]
+fn every_dtype_and_distribution_survives_the_spill_path() {
+    let root = spill_root("matrix");
+    // 128 KiB budget: a 60k-element job spills >= 4 runs at i32 width and
+    // 8 at i64 width — every cell of the matrix genuinely goes out of core.
+    let budget = 128 * 1024;
+    let svc = external_service(budget, &root);
+    let n = 60_000;
+    assert_eq!(Distribution::all().len(), 9, "the full distribution matrix");
+    let mut jobs = 0u64;
+    for (i, &dist) in Distribution::all().iter().enumerate() {
+        for (j, &dtype) in Dtype::all().iter().enumerate() {
+            let raw = data::generate_i64(n, dist, (i * 16 + j) as u64, 2);
+            let payload = SortPayload::from_i64_values(raw, dtype);
+            let out = svc
+                .submit_request(SortRequest::from_payload(payload).with_dist(dist.name()))
+                .wait()
+                .expect("job completed");
+            // `validate: true` makes the service itself check multiset
+            // equality (fingerprint) and sortedness of the spilled result.
+            assert!(out.valid, "{dtype} {} failed spill-path validation", dist.name());
+            jobs += 1;
+        }
+    }
+    svc.drain();
+    assert_eq!(svc.metrics().counter("extsort.jobs"), jobs, "every job escalated");
+    assert!(
+        svc.metrics().counter("extsort.runs_spilled") >= jobs * 3,
+        "each job must spill at least 3 runs"
+    );
+    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+    assert_eq!(spill_dirs_left(&root), 0, "spill root must be clean after the matrix");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Drive one payload through the chunk-streaming surface and require the
+/// in-order chunk concatenation to equal `expect`.
+fn stream_and_check<K: ExtKey + PartialEq + std::fmt::Debug>(
+    svc: &SortService,
+    payload: SortPayload,
+    expect: Vec<K>,
+) {
+    let dtype = payload.dtype();
+    let ticket = svc.submit_external_streaming(SortRequest::from_payload(payload));
+    let total = ticket.len();
+    assert!(total > 1, "{dtype}: a spilled job streams more than one chunk");
+    let mut got: Vec<K> = Vec::with_capacity(expect.len());
+    let mut chunks = 0usize;
+    for r in ticket.stream() {
+        let out = r.expect("chunk delivered");
+        got.extend_from_slice(out.data::<K>().expect("chunk carries the request dtype"));
+        chunks += 1;
+    }
+    assert_eq!(chunks, total, "{dtype}: ticket length is the chunk-count contract");
+    assert_eq!(got, expect, "{dtype}: chunk concatenation must be the sorted payload");
+}
+
+#[test]
+fn streaming_chunks_reassemble_for_every_dtype() {
+    let root = spill_root("stream-dtypes");
+    let svc = external_service(1 << 20, &root);
+    let n = 220_000;
+    for (j, &dtype) in Dtype::all().iter().enumerate() {
+        let raw = data::generate_i64(n, Distribution::Zipf, j as u64, 2);
+        let payload = SortPayload::from_i64_values(raw, dtype);
+        match payload.clone() {
+            SortPayload::I64(mut v) => {
+                v.sort_unstable();
+                stream_and_check(&svc, payload, v);
+            }
+            SortPayload::I32(mut v) => {
+                v.sort_unstable();
+                stream_and_check(&svc, payload, v);
+            }
+            SortPayload::U64(mut v) => {
+                v.sort_unstable();
+                stream_and_check(&svc, payload, v);
+            }
+            SortPayload::F64(mut v) => {
+                v.sort_unstable_by(f64::total_cmp);
+                stream_and_check(&svc, payload, v);
+            }
+        }
+    }
+    svc.drain();
+    assert_eq!(svc.metrics().counter("jobs.completed"), Dtype::all().len() as u64);
+    assert_eq!(spill_dirs_left(&root), 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn tracked_peak_working_set_honours_the_budget() {
+    let root = spill_root("peak");
+    let budget = 1 << 20;
+    let svc = external_service(budget, &root);
+    // 3.2 MiB of i64 against a 1 MiB budget.
+    let data = data::generate_i64(400_000, Distribution::Gaussian, 7, 2);
+    let out = svc.submit_request(SortRequest::new(data)).wait().expect("job completed");
+    assert!(out.valid);
+    svc.drain();
+    let peak = svc.metrics().gauge("extsort.last_peak_bytes").expect("gauge published") as usize;
+    assert!(peak > 0, "the external sort must report its working set");
+    assert!(
+        peak <= budget,
+        "tracked sort-path working set ({peak} bytes) exceeds the {budget}-byte budget"
+    );
+    assert_eq!(spill_dirs_left(&root), 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn spill_genes_tune_under_the_beyond_memory_class() {
+    use evosort::autotune::fingerprint::beyond_memory_label;
+    use evosort::autotune::AutotunePolicy;
+    use evosort::extsort::ExtParams;
+    use evosort::params::SortParams;
+
+    let root = spill_root("xm-tune");
+    let budget = 512 * 1024;
+    let svc = SortService::new(ServiceConfig {
+        workers: 2,
+        sort_threads: 2,
+        queue_capacity: 32,
+        // quick() = eager test policy (tiny observation thresholds, no
+        // noise margin), as in the in-RAM adaptation test.
+        autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
+        exec: Default::default(),
+        external: Some(ExternalConfig::new(budget).with_spill_dir(root.clone())),
+    });
+    let n = 120_000; // 960 KiB of i64 — every job escalates
+    let dist = Distribution::Uniform;
+    let xm = beyond_memory_label(&SortService::fingerprint_label(&data::generate_i64(n, dist, 0, 2)));
+    assert!(xm.ends_with(":xm"), "escalated jobs key the beyond-memory class: {xm}");
+
+    // Seed deliberately degenerate genes (1k-element runs, fan-in 2) so the
+    // hill-climb has obvious room and any publish visibly replaces them.
+    let awful = ExtParams { run_size: 1024, merge_fan_in: 2, spill_threshold: 0 };
+    svc.cache().put_ext_with_fitness(n, &xm, SortParams::paper_1e8(), awful, f64::NAN);
+    assert_eq!(svc.cache().get_ext(n, &xm), Some(awful));
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut round = 0u64;
+    while svc.cache().get_ext(n, &xm) == Some(awful) && Instant::now() < deadline {
+        let requests: Vec<SortRequest> = (0..4)
+            .map(|i| SortRequest::new(data::generate_i64(n, dist, round * 4 + i, 2)))
+            .collect();
+        let report = svc.submit_batch_requests(requests).wait();
+        assert_eq!(report.stats.failed, 0);
+        assert_eq!(report.stats.invalid, 0);
+        round += 1;
+    }
+
+    let tuned = svc.cache().get_ext(n, &xm).expect("ext genes stay cached for the class");
+    assert_ne!(tuned, awful, "the tuner published better spill genes for the xm class");
+    assert!(svc.metrics().counter("tuner.ext_publishes") > 0);
+    assert_eq!(spill_dirs_left(&root), 0, "tuning traffic must not leak spill files");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -15,6 +15,7 @@ fn service() -> SortService {
         queue_capacity: 16,
         autotune: None,
         exec: Default::default(),
+        external: None,
     })
 }
 

@@ -16,6 +16,7 @@ fn service_sorts_mixed_workloads_concurrently() {
         queue_capacity: 4,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let workloads = [
         (Distribution::Uniform, "uniform"),
@@ -53,6 +54,7 @@ fn backpressure_queue_smaller_than_jobs() {
         queue_capacity: 1,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let tickets: Vec<Ticket> = (0..8)
         .map(|i| {
@@ -76,6 +78,7 @@ fn ticket_wait_timeout_on_queued_job() {
         queue_capacity: 8,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let tickets: Vec<Ticket> = (0..4)
         .map(|i| {
@@ -112,6 +115,7 @@ fn tuning_cache_lifecycle_through_service() {
         queue_capacity: 8,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
 
     // Cold: symbolic model used.
@@ -148,6 +152,7 @@ fn dtype_tagged_cache_entries_persist_and_restore() {
         queue_capacity: 8,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let floats: Vec<f64> =
         generate_i64(300_000, Distribution::Uniform, 3, 2).iter().map(|&x| x as f64).collect();
@@ -173,6 +178,7 @@ fn throughput_accounting() {
         queue_capacity: 8,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let sizes = [10_000usize, 20_000, 30_000];
     for (i, &n) in sizes.iter().enumerate() {

@@ -210,6 +210,7 @@ fn hostile_tcp_frames_error_without_hanging_the_worker() {
             queue_capacity: 8,
             autotune: None,
             exec: Default::default(),
+            external: None,
         },
         publish_interval: Duration::from_secs(60), // quiet ticker
     };

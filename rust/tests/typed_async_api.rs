@@ -36,6 +36,7 @@ fn f64_and_u64_batches_autotune_into_distinct_dtype_classes() {
         // share, no noise margin (deterministic adaptation is under test).
         autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
         exec: Default::default(),
+        external: None,
     });
     let n = 30_000;
     let f64_label = SortService::fingerprint_label_for(&floats_of(n, 0));
@@ -98,6 +99,7 @@ fn streamed_batch_yields_first_result_before_last_job_completes() {
         queue_capacity: 16,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let total = 7u64;
     let mut requests = vec![SortRequest::new(generate_i64(500, Distribution::Uniform, 0, 2))];
@@ -128,6 +130,7 @@ fn mixed_dtype_batch_round_trips_with_per_dtype_stats() {
         queue_capacity: 16,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let ints = generate_i64(40_000, Distribution::Zipf, 1, 2);
     let mut requests = vec![
@@ -171,6 +174,7 @@ fn dropping_a_result_stream_does_not_lose_the_jobs() {
         queue_capacity: 16,
         autotune: None,
         exec: Default::default(),
+        external: None,
     });
     let requests: Vec<SortRequest> = (0..6u64)
         .map(|s| SortRequest::new(generate_i64(20_000, Distribution::Uniform, s, 1)))
