@@ -7,6 +7,7 @@
 //! cargo run --release --offline --example sort_service
 //! ```
 
+use evosort::coordinator::metrics::names;
 use evosort::coordinator::{ServiceConfig, SortRequest, SortService};
 use evosort::data::{generate_i64, Distribution};
 use evosort::prelude::*;
@@ -14,14 +15,7 @@ use evosort::util::{default_threads, fmt_count, fmt_secs};
 
 fn main() {
     let threads = default_threads();
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: threads.div_ceil(2),
-        queue_capacity: 8, // small queue => visible backpressure
-        autotune: None,    // see `serve --autotune` for the online tuner
-        exec: Default::default(), // persistent parked executor (see README "Performance")
-        external: None, // see `serve --memory-budget` for out-of-core escalation
-    });
+    let svc = SortService::new(ServiceConfig::sized(2, threads.div_ceil(2), 8));
 
     // Pre-warm the tuning cache for one workload class, as a tuned
     // deployment would (other classes fall back to the symbolic model).
@@ -86,10 +80,10 @@ fn main() {
 
     svc.drain();
     println!("\nmetrics:\n{}", svc.metrics().report());
-    let hits = svc.metrics().counter("params.cache_hit");
-    let sym = svc.metrics().counter("params.symbolic");
+    let hits = svc.metrics().counter(names::PARAMS_CACHE_HIT);
+    let sym = svc.metrics().counter(names::PARAMS_SYMBOLIC);
     println!("cache hits: {hits}, symbolic fallbacks: {sym}");
-    assert_eq!(svc.metrics().counter("jobs.completed"), 20);
-    assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
-    assert_eq!(svc.metrics().counter("jobs.dtype.f64"), 6);
+    assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 20);
+    assert_eq!(svc.metrics().counter(names::JOBS_INVALID), 0);
+    assert_eq!(svc.metrics().counter(names::JOBS_DTYPE_F64), 6);
 }

@@ -24,6 +24,11 @@
 //! (async interface, cross-process sharding) plug into: anything that can
 //! emit [`Observation`](tuner::Observation)s can drive adaptation.
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): No raw pointers or transmutes belong in the tuning layer;
+// the unsafe concurrency lives in `exec`/`obs::ring`/`sort` only.
+#![forbid(unsafe_code)]
+
 pub mod fingerprint;
 pub mod policy;
 pub mod tuner;

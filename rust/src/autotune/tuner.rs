@@ -25,7 +25,7 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{names, Metrics};
 use crate::coordinator::tuning_cache::TuningCache;
 use crate::extsort::ExtBounds;
 use crate::ga::{GaConfig, GaDriver, SortTimingFitness};
@@ -161,12 +161,12 @@ impl OnlineTuner {
     /// Feed one observation. Never blocks: a full queue drops the
     /// observation and bumps `tuner.dropped`.
     pub fn observe(&self, obs: Observation) {
-        self.metrics.incr("tuner.observations");
+        self.metrics.incr(names::TUNER_OBSERVATIONS);
         if let Some(tx) = &self.tx {
             match tx.try_send(obs) {
                 Ok(()) => {}
                 Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                    self.metrics.incr("tuner.dropped");
+                    self.metrics.incr(names::TUNER_DROPPED);
                 }
             }
         }
@@ -271,7 +271,7 @@ impl TunerWorker {
                 classes.remove(&coldest);
                 fitness_cache.remove(&coldest);
                 self.sampled.write().unwrap().remove(&coldest);
-                self.metrics.incr("tuner.evicted");
+                self.metrics.incr(names::TUNER_EVICTED);
             }
         }
         let state = classes.entry(label.clone()).or_default();
@@ -319,8 +319,8 @@ impl TunerWorker {
         };
         let gens = self.policy.generations_per_cycle.max(1);
         let result = GaDriver::new(cfg).refine(fitness, &seed_genome, gens);
-        self.metrics.incr("tuner.cycles");
-        self.metrics.add("tuner.generations", gens as u64);
+        self.metrics.incr(names::TUNER_CYCLES);
+        self.metrics.add(names::TUNER_GENERATIONS, gens as u64);
 
         // Publish only past the noise margin: a dozen single-shot timings
         // beat one seed timing by luck alone, so a raw `<` would churn the
@@ -332,8 +332,8 @@ impl TunerWorker {
             // cross-cache merges (router ↔ shard broadcast, persisted
             // restore) improvement-aware instead of last-writer-wins.
             self.cache.put_with_fitness(state.n_hint, label, result.best, result.best_fitness);
-            self.metrics.incr("tuner.publishes");
-            self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
+            self.metrics.incr(names::TUNER_PUBLISHES);
+            self.metrics.set_gauge(names::TUNER_LAST_IMPROVEMENT_PCT, improvement_pct);
             if self.tracer.is_enabled() {
                 self.tracer.emit(
                     0,
@@ -357,7 +357,7 @@ impl TunerWorker {
                 }
             }
         } else {
-            self.metrics.incr("tuner.no_change");
+            self.metrics.incr(names::TUNER_NO_CHANGE);
             if self.tracer.is_enabled() {
                 let reason =
                     if result.best_genome == seed_genome { "no_change" } else { "below_margin" };
@@ -417,15 +417,15 @@ impl TunerWorker {
                 best_fit = fit;
             }
         }
-        self.metrics.incr("tuner.cycles");
-        self.metrics.add("tuner.generations", gens as u64);
+        self.metrics.incr(names::TUNER_CYCLES);
+        self.metrics.add(names::TUNER_GENERATIONS, gens as u64);
         let required = seed_fit * (1.0 - self.policy.min_improvement_pct.max(0.0) / 100.0);
         if best != seed_ext && seed_fit > 0.0 && best_fit < required {
             let improvement_pct = (seed_fit - best_fit) / seed_fit * 100.0;
             self.cache.put_ext_with_fitness(state.n_hint, label, seed_params, best, best_fit);
-            self.metrics.incr("tuner.publishes");
-            self.metrics.incr("tuner.ext_publishes");
-            self.metrics.set_gauge("tuner.last_improvement_pct", improvement_pct);
+            self.metrics.incr(names::TUNER_PUBLISHES);
+            self.metrics.incr(names::TUNER_EXT_PUBLISHES);
+            self.metrics.set_gauge(names::TUNER_LAST_IMPROVEMENT_PCT, improvement_pct);
             if self.tracer.is_enabled() {
                 self.tracer.emit(
                     0,
@@ -453,7 +453,7 @@ impl TunerWorker {
                 }
             }
         } else {
-            self.metrics.incr("tuner.no_change");
+            self.metrics.incr(names::TUNER_NO_CHANGE);
             if self.tracer.is_enabled() {
                 let reason = if best == seed_ext { "no_change" } else { "below_margin" };
                 self.tracer.emit(
@@ -467,9 +467,9 @@ impl TunerWorker {
     }
 
     fn publish_gauges(&self, classes: &HashMap<String, ClassState>) {
-        self.metrics.set_gauge("tuner.classes", classes.len() as f64);
-        if let Some(rate) = self.metrics.counter_ratio("params.cache_hit", "params.cache_miss") {
-            self.metrics.set_gauge("tuner.cache_hit_rate", rate);
+        self.metrics.set_gauge(names::TUNER_CLASSES, classes.len() as f64);
+        if let Some(rate) = self.metrics.counter_ratio(names::PARAMS_CACHE_HIT, names::PARAMS_CACHE_MISS) {
+            self.metrics.set_gauge(names::TUNER_CACHE_HIT_RATE, rate);
         }
     }
 
@@ -542,7 +542,7 @@ mod tests {
             });
         }
         assert!(
-            wait_until(30.0, || metrics.counter("tuner.cycles") > 0),
+            wait_until(30.0, || metrics.counter(names::TUNER_CYCLES) > 0),
             "tuner never ran a cycle"
         );
         // A cycle ran; the cache gains the class params once the GA finds an
@@ -558,7 +558,7 @@ mod tests {
             cache.get(data.len(), &label).is_some()
         });
         assert!(published, "no parameters published for the hot class");
-        assert!(metrics.counter("tuner.generations") > 0);
+        assert!(metrics.counter(names::TUNER_GENERATIONS) > 0);
         // The publish decision was traced (trace id 0, tuner-scoped).
         let mut events = Vec::new();
         tracer.drain_into(&mut events);
@@ -606,7 +606,7 @@ mod tests {
             started.elapsed() < Duration::from_secs(2),
             "observe must never block the caller"
         );
-        assert_eq!(metrics.counter("tuner.observations"), 500);
+        assert_eq!(metrics.counter(names::TUNER_OBSERVATIONS), 500);
         drop(tuner);
     }
 
@@ -632,7 +632,7 @@ mod tests {
             cache.get_ext(n_hint, &label) != Some(awful)
         });
         assert!(tuned, "spill genes never improved for the :xm class");
-        assert!(metrics.counter("tuner.ext_publishes") > 0);
+        assert!(metrics.counter(names::TUNER_EXT_PUBLISHES) > 0);
         let tuned_ext = cache.get_ext(n_hint, &label).expect("ext genes cached");
         assert!(tuned_ext.run_size >= 1024 && tuned_ext.merge_fan_in >= 2);
         drop(tuner);
@@ -654,8 +654,8 @@ mod tests {
                 sample: None,
             });
         }
-        assert!(wait_until(10.0, || metrics.counter("tuner.evicted") >= 28));
-        assert!(wait_until(10.0, || metrics.gauge("tuner.classes") == Some(4.0)));
+        assert!(wait_until(10.0, || metrics.counter(names::TUNER_EVICTED) >= 28));
+        assert!(wait_until(10.0, || metrics.gauge(names::TUNER_CLASSES) == Some(4.0)));
         drop(tuner);
     }
 }

@@ -6,6 +6,10 @@
 //! this module; each regenerates one of the paper's tables/figures and
 //! prints the paper's reference values alongside the measured ones.
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): timing and table printing stay entirely safe.
+#![forbid(unsafe_code)]
+
 pub mod json;
 pub mod tables;
 

@@ -5,6 +5,7 @@ use anyhow::{bail, Result};
 use crate::bench_harness::json::{self as bench_json, BenchDoc, BenchEntry};
 use crate::bench_harness::{measure, scale_div, scaled_size, BenchConfig, Table};
 use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortRequest, SortService};
+use crate::coordinator::metrics::names;
 use crate::data::{self, Distribution};
 use crate::ga::{GaConfig, GaDriver};
 use crate::params::{ACode, SortParams};
@@ -179,12 +180,12 @@ fn external_config_of(args: &Args) -> Result<Option<crate::extsort::ExternalConf
 /// us at a dedicated `--spill-dir` — the root holds no leftover per-job
 /// spill directories.
 fn check_spill_smoke(svc: &SortService, spill_dir: Option<&std::path::Path>) -> Result<()> {
-    let escalated = svc.metrics().counter("extsort.jobs");
-    let spilled = svc.metrics().counter("extsort.runs_spilled");
+    let escalated = svc.metrics().counter(names::EXTSORT_JOBS);
+    let spilled = svc.metrics().counter(names::EXTSORT_RUNS_SPILLED);
     println!(
         "out-of-core: {escalated} jobs escalated, {spilled} runs spilled, \
          last peak working set {:.0} bytes",
-        svc.metrics().gauge("extsort.last_peak_bytes").unwrap_or(0.0)
+        svc.metrics().gauge(names::EXTSORT_LAST_PEAK_BYTES).unwrap_or(0.0)
     );
     anyhow::ensure!(
         spilled > 0,
@@ -199,6 +200,15 @@ fn check_spill_smoke(svc: &SortService, spill_dir: Option<&std::path::Path>) -> 
         );
     }
     Ok(())
+}
+
+/// `--sort-threads` / `--queue-capacity` for the serve paths, defaulting to
+/// the thread budget split across workers and the stock queue depth (the
+/// same defaults as the `[service]` config keys).
+fn serve_sizing(args: &Args, workers: usize, threads: usize) -> Result<(usize, usize)> {
+    let sort_threads = args.usize_or("sort-threads", (threads / workers.max(1)).max(1))?;
+    let queue_capacity = args.usize_or("queue-capacity", 64)?;
+    Ok((sort_threads.max(1), queue_capacity.max(1)))
 }
 
 /// Parse `--exec parked|spawn` (the kernel execution backend; defaults to
@@ -502,15 +512,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let external = external_config_of(args)?;
     let escalating = external.is_some();
     let spill_check = args.get("spill-dir").map(std::path::PathBuf::from);
+    let (sort_threads, queue_capacity) = serve_sizing(args, workers, threads)?;
     let svc = SortService::new_traced(
-        ServiceConfig {
-            workers,
-            sort_threads: (threads / workers.max(1)).max(1),
-            queue_capacity: 64,
-            autotune: None,
-            exec: exec_mode_of(args)?,
-            external,
-        },
+        ServiceConfig::sized(workers, sort_threads, queue_capacity)
+            .with_exec(exec_mode_of(args)?),
         tracer.clone(),
     );
     let hub = if traced {
@@ -620,10 +625,12 @@ fn serve_sharded(
         None
     };
     let autotuned = autotune.is_some();
+    let per_shard_default = (threads / (workers * shards.max(1)).max(1)).max(1);
     let mut builder = ShardedService::builder()
         .shards(shards)
         .workers_per_shard(workers)
-        .sort_threads((threads / (workers * shards.max(1)).max(1)).max(1))
+        .sort_threads(args.usize_or("sort-threads", per_shard_default)?)
+        .queue_capacity(args.usize_or("queue-capacity", 64)?)
         .exec(exec_mode_of(args)?);
     if let Some(policy) = autotune {
         builder = builder.autotune(policy);
@@ -694,8 +701,8 @@ fn serve_sharded(
         );
         let metrics = svc.metrics();
         let all_active =
-            (0..fleet).all(|s| metrics.counter(&format!("shard.{s}.jobs.completed")) > 0);
-        if all_active && (!autotuned || metrics.counter("shard.cache.broadcasts") > 0) {
+            (0..fleet).all(|s| metrics.counter(&names::shard_jobs_completed(s)) > 0);
+        if all_active && (!autotuned || metrics.counter(names::SHARD_CACHE_BROADCASTS) > 0) {
             break;
         }
     }
@@ -703,7 +710,7 @@ fn serve_sharded(
         // Grace period: in-flight tuner cycles publish asynchronously; the
         // first publication triggers the first broadcast.
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
-        while svc.metrics().counter("shard.cache.broadcasts") == 0
+        while svc.metrics().counter(names::SHARD_CACHE_BROADCASTS) == 0
             && std::time::Instant::now() < deadline
         {
             std::thread::sleep(std::time::Duration::from_millis(100));
@@ -711,12 +718,12 @@ fn serve_sharded(
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
     for s in 0..fleet {
-        let completed = svc.metrics().counter(&format!("shard.{s}.jobs.completed"));
+        let completed = svc.metrics().counter(&names::shard_jobs_completed(s));
         println!("shard {s}: {completed} jobs completed");
         anyhow::ensure!(completed > 0, "sharded smoke failed: shard {s} served no jobs");
     }
     if autotuned {
-        let broadcasts = svc.metrics().counter("shard.cache.broadcasts");
+        let broadcasts = svc.metrics().counter(names::SHARD_CACHE_BROADCASTS);
         println!("cross-shard cache broadcasts: {broadcasts}");
         anyhow::ensure!(
             broadcasts > 0,
@@ -777,10 +784,10 @@ fn serve_chaos_round(
          (no job hung)"
     );
     let deadline = Instant::now() + Duration::from_secs(15);
-    while svc.metrics().counter("shards.redials") == 0 && Instant::now() < deadline {
+    while svc.metrics().counter(names::SHARDS_REDIALS) == 0 && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(10));
     }
-    let redials = svc.metrics().counter("shards.redials");
+    let redials = svc.metrics().counter(names::SHARDS_REDIALS);
     anyhow::ensure!(redials >= 1, "chaos round: shard 0 was never redialed");
     println!("chaos round: shard redials observed: {redials}");
     Ok(())
@@ -828,14 +835,13 @@ pub fn cmd_shard_worker(args: &Args) -> Result<()> {
         };
         let config = ShardWorkerConfig {
             shard_id: args.usize_or("shard-id", 0)?,
-            service: ServiceConfig {
-                workers: args.usize_or("workers", 2)?,
-                sort_threads: args.usize_or("sort-threads", 2)?,
-                queue_capacity: args.usize_or("queue-capacity", 64)?,
-                autotune,
-                exec: exec_mode_of(args)?,
-                external: external_config_of(args)?,
-            },
+            service: ServiceConfig::sized(
+                args.usize_or("workers", 2)?,
+                args.usize_or("sort-threads", 2)?,
+                args.usize_or("queue-capacity", 64)?,
+            )
+            .with_exec(exec_mode_of(args)?)
+            .with_external(external_config_of(args)?),
             publish_interval: std::time::Duration::from_millis(args.u64_or("publish-ms", 200)?),
             trace: args.has("trace"),
         };
@@ -882,14 +888,13 @@ fn serve_autotune(
     let rounds = args.usize_or("rounds", 12)?;
     let dist = dist_of(args)?;
     let seed = args.u64_or("seed", 42)?;
-    let svc = SortService::new(ServiceConfig {
-        workers,
-        sort_threads: (threads / workers.max(1)).max(1),
-        queue_capacity: 64,
-        autotune: Some(policy),
-        exec: exec_mode_of(args)?,
-        external: external_config_of(args)?,
-    });
+    let (sort_threads, queue_capacity) = serve_sizing(args, workers, threads)?;
+    let svc = SortService::new(
+        ServiceConfig::sized(workers, sort_threads, queue_capacity)
+            .with_autotune(policy)
+            .with_exec(exec_mode_of(args)?)
+            .with_external(external_config_of(args)?),
+    );
     println!(
         "autotune service: {workers} workers, up to {rounds} rounds of {jobs} {} {dtype} jobs \
          of {} elements",
@@ -916,20 +921,22 @@ fn serve_autotune(
             fmt_secs(report.stats.p99_secs),
             report.stats.cache_hits,
             report.stats.cache_hits + report.stats.cache_misses,
-            svc.metrics().counter("tuner.cycles"),
-            svc.metrics().counter("tuner.publishes"),
+            svc.metrics().counter(names::TUNER_CYCLES),
+            svc.metrics().counter(names::TUNER_PUBLISHES),
         );
         // Adapted this run (a restored --cache-file alone doesn't count) and
         // observed serving cached params.
-        if svc.metrics().counter("tuner.publishes") > 0
-            && svc.metrics().counter("params.cache_hit") > 0
+        if svc.metrics().counter(names::TUNER_PUBLISHES) > 0
+            && svc.metrics().counter(names::PARAMS_CACHE_HIT) > 0
         {
             break;
         }
     }
     // Grace period: let in-flight tuning cycles land.
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
-    while svc.metrics().counter("tuner.publishes") == 0 && std::time::Instant::now() < deadline {
+    while svc.metrics().counter(names::TUNER_PUBLISHES) == 0
+        && std::time::Instant::now() < deadline
+    {
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
     println!("\nmetrics:\n{}", svc.metrics().report());
@@ -939,7 +946,7 @@ fn serve_autotune(
         println!("  band {:>2}  {}  ->  {params}", key.size_band, key.dist);
     }
     anyhow::ensure!(
-        svc.metrics().counter("tuner.publishes") > 0,
+        svc.metrics().counter(names::TUNER_PUBLISHES) > 0,
         "autotune smoke failed: the tuner published no parameters this run"
     );
     Ok(())
@@ -1272,14 +1279,10 @@ fn bench_service_batch(
     workers: usize,
     threads: usize,
 ) -> Result<crate::bench_harness::Measurement> {
-    let svc = SortService::new(ServiceConfig {
-        workers,
-        sort_threads: (threads / workers.max(1)).max(1),
-        queue_capacity: jobs.max(64),
-        autotune: None,
-        exec: mode,
-        external: None,
-    });
+    let svc = SortService::new(
+        ServiceConfig::sized(workers, (threads / workers.max(1)).max(1), jobs.max(64))
+            .with_exec(mode),
+    );
     let dists = [Distribution::Uniform, Distribution::Zipf, Distribution::NearlySorted];
     let payloads: Vec<Vec<i64>> = (0..jobs)
         .map(|i| data::generate_i64(n, dists[i % dists.len()], i as u64, threads))

@@ -26,6 +26,10 @@
 //! (`--connect`), or started standalone on remote hosts (`--listen
 //! tcp://…`) for a router to dial with `serve --connect`.)
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): argument parsing and dispatch stay entirely safe.
+#![forbid(unsafe_code)]
+
 pub mod commands;
 
 use std::collections::HashMap;
@@ -150,6 +154,9 @@ COMMANDS
             parked executor vs the spawn-per-call baseline; --json emits the
             BENCH_*.json report, --compare gates on score regressions)
   serve     [--jobs 16] [--workers 2] [--n 1e6] [--dtype i64|i32|u64|f64]
+            [--sort-threads N] (fork-join width per sort; default: the
+            thread budget split across workers)
+            [--queue-capacity 64] (pending-job admission bound per service)
             [--exec parked|spawn] (kernel execution backend; default parked)
             [--batch] (service demo + metrics; --dtype picks the key dtype —
             floats sort in IEEE total_cmp order; --batch submits one mixed

@@ -17,6 +17,10 @@
 //! Typed views: [`RunConfig`] maps a file onto pipeline / GA / service
 //! settings, used by `evosort pipeline --config run.toml`.
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): a config parser has no business with raw memory.
+#![forbid(unsafe_code)]
+
 pub mod run;
 
 use std::collections::HashMap;

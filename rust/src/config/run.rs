@@ -101,14 +101,10 @@ impl ServiceSettings {
             }
             x
         });
-        ServiceConfig {
-            workers: self.workers,
-            sort_threads: self.sort_threads,
-            queue_capacity: self.queue_capacity,
-            autotune: self.autotune.then(crate::autotune::AutotunePolicy::default),
-            exec: self.exec,
-            external,
-        }
+        ServiceConfig::sized(self.workers, self.sort_threads, self.queue_capacity)
+            .with_autotune(self.autotune.then(crate::autotune::AutotunePolicy::default))
+            .with_exec(self.exec)
+            .with_external(external)
     }
 
     /// Deployment-level spec for [`ShardedService::spawn`] — a thin shim

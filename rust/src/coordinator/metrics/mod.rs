@@ -9,6 +9,11 @@
 //! state, so recovering the guard from a [`PoisonError`] is always safe.
 //! Before this, one panicking job could cascade `PoisonError` unwraps
 //! through every later `incr`/`report` call in the process.
+//!
+//! Series names come from the [`names`] registry — production code never
+//! spells a metric name inline (enforced by `cargo xtask lint`).
+
+pub mod names;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

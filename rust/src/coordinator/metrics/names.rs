@@ -1,0 +1,338 @@
+//! Central registry of every metric-series name the service emits.
+//!
+//! Production code must name a series through these constants (or the
+//! dynamic-name helpers below) — never through an inline string literal.
+//! `cargo xtask lint` enforces that rule across `rust/src`, which keeps
+//! three vocabularies from drifting apart as the codebase grows:
+//!
+//! 1. the names emitted at runtime (this module),
+//! 2. the Prometheus-sanitized forms scraped from `--metrics-addr`,
+//! 3. the metric table documented in the README's Observability section.
+//!
+//! Kernel-phase series (`kernel.*` / `kernel.ext.*`) also live here so the
+//! [`Phase`](crate::obs::event::Phase) enum, the trace span names, and the
+//! bench phase tables all resolve through one definition.
+//!
+//! Adding a metric: add the constant (and a README table row), then use it.
+//! The `ALL` table below is the linter's ground truth; a constant that is
+//! not listed there fails the registry's own unit tests.
+
+// --- job lifecycle -------------------------------------------------------
+
+/// Jobs accepted by `submit_request`/`submit_batch_requests` (counter).
+pub const JOBS_SUBMITTED: &str = "jobs.submitted";
+/// Jobs that ran to completion (counter).
+pub const JOBS_COMPLETED: &str = "jobs.completed";
+/// Jobs whose output failed multiset validation (counter).
+pub const JOBS_INVALID: &str = "jobs.invalid";
+/// Jobs that panicked inside a worker and resolved `Err(WorkerLost)` (counter).
+pub const JOBS_PANICKED: &str = "jobs.panicked";
+/// Completed jobs by key dtype (counters).
+pub const JOBS_DTYPE_I64: &str = "jobs.dtype.i64";
+pub const JOBS_DTYPE_I32: &str = "jobs.dtype.i32";
+pub const JOBS_DTYPE_U64: &str = "jobs.dtype.u64";
+pub const JOBS_DTYPE_F64: &str = "jobs.dtype.f64";
+
+// --- batch submission ----------------------------------------------------
+
+/// Batches submitted (counter).
+pub const BATCH_SUBMITTED: &str = "batch.submitted";
+/// Batches fully waited/streamed to completion (counter).
+pub const BATCH_COMPLETED: &str = "batch.completed";
+/// Jobs submitted through the batch path (counter).
+pub const BATCH_JOBS_SUBMITTED: &str = "batch.jobs.submitted";
+/// Per-job latency sample window feeding batch p50/p99 (samples).
+pub const BATCH_JOB_LATENCY: &str = "batch.job.latency";
+/// Stats of the most recently completed batch (gauges).
+pub const BATCH_LAST_P50_SECS: &str = "batch.last.p50_secs";
+pub const BATCH_LAST_P99_SECS: &str = "batch.last.p99_secs";
+pub const BATCH_LAST_JOBS_PER_SEC: &str = "batch.last.jobs_per_sec";
+
+// --- parameter resolution ------------------------------------------------
+
+/// Caller supplied explicit params — cache/model bypassed (counter).
+pub const PARAMS_OVERRIDE: &str = "params.override";
+/// Fingerprint class found in the tuning cache (counter).
+pub const PARAMS_CACHE_HIT: &str = "params.cache_hit";
+/// Fingerprint class missed the tuning cache (counter).
+pub const PARAMS_CACHE_MISS: &str = "params.cache_miss";
+/// Cache miss fell through to the symbolic model (counter).
+pub const PARAMS_SYMBOLIC: &str = "params.symbolic";
+
+// --- sort execution ------------------------------------------------------
+
+/// End-to-end per-job sort latency (latency series).
+pub const SORT_LATENCY: &str = "sort.latency";
+/// Total elements sorted (counter).
+pub const ELEMENTS_SORTED: &str = "elements.sorted";
+/// Worker-scratch arena growth reallocations (counter).
+pub const SCRATCH_GROWS: &str = "scratch.grows";
+
+// --- online tuner --------------------------------------------------------
+
+/// Tuner refinement cycles run (counter).
+pub const TUNER_CYCLES: &str = "tuner.cycles";
+/// GA generations executed across all cycles (counter).
+pub const TUNER_GENERATIONS: &str = "tuner.generations";
+/// Observations ingested from the service (counter).
+pub const TUNER_OBSERVATIONS: &str = "tuner.observations";
+/// Observations dropped by backpressure (counter).
+pub const TUNER_DROPPED: &str = "tuner.dropped";
+/// Improvements published to the tuning cache (counter).
+pub const TUNER_PUBLISHES: &str = "tuner.publishes";
+/// Publishes that updated external-sort (`:xm`) spill genes (counter).
+pub const TUNER_EXT_PUBLISHES: &str = "tuner.ext_publishes";
+/// Cycles that found no improvement worth publishing (counter).
+pub const TUNER_NO_CHANGE: &str = "tuner.no_change";
+/// Tracked classes evicted by the retention policy (counter).
+pub const TUNER_EVICTED: &str = "tuner.evicted";
+/// Fingerprint classes currently tracked (gauge).
+pub const TUNER_CLASSES: &str = "tuner.classes";
+/// Improvement percentage of the most recent publish (gauge).
+pub const TUNER_LAST_IMPROVEMENT_PCT: &str = "tuner.last_improvement_pct";
+/// params.cache_hit / (hit + miss) ratio (gauge).
+pub const TUNER_CACHE_HIT_RATE: &str = "tuner.cache_hit_rate";
+
+// --- tracing -------------------------------------------------------------
+
+/// Trace events dropped at full rings, fleet-wide (counter).
+pub const TRACE_DROPPED: &str = "trace.dropped";
+/// Trace events ingested by the collector hub (counter).
+pub const TRACE_INGESTED: &str = "trace.ingested";
+
+// --- shard fleet ---------------------------------------------------------
+
+/// Shard processes/connections that died (counter).
+pub const SHARD_DEATHS: &str = "shard.deaths";
+/// Dead local shards respawned (counter).
+pub const SHARD_RESPAWNS: &str = "shard.respawns";
+/// Jobs lost to a dying shard (counter).
+pub const SHARD_JOBS_LOST: &str = "shard.jobs.lost";
+/// Jobs refused because they exceed the frame size limit (counter).
+pub const SHARD_JOBS_OVERSIZED: &str = "shard.jobs.oversized";
+/// Tuning-cache publishes received from shards (counter).
+pub const SHARD_CACHE_PUBLISHES: &str = "shard.cache.publishes";
+/// Entries a shard absorbed from a router broadcast (counter).
+pub const SHARD_CACHE_ABSORBED: &str = "shard.cache.absorbed";
+/// Entries the router absorbed from shard publishes (counter).
+pub const SHARD_CACHE_ENTRIES_ABSORBED: &str = "shard.cache.entries_absorbed";
+/// Router-side merged tuning-cache size (gauge).
+pub const SHARD_CACHE_ENTRIES: &str = "shard.cache.entries";
+/// Cross-shard cache broadcasts sent (counter).
+pub const SHARD_CACHE_BROADCASTS: &str = "shard.cache.broadcasts";
+/// Remote-shard redial attempts (counter).
+pub const SHARDS_REDIALS: &str = "shards.redials";
+/// Jobs shed at the admission gate (`Err(Overloaded)`) (counter).
+pub const SHARDS_SHED: &str = "shards.shed";
+/// Router dispatch-queue depth (gauge).
+pub const ROUTER_QUEUE_DEPTH: &str = "router.queue.depth";
+/// Shard-local tuning-cache size, as reported in telemetry (counter key).
+pub const CACHE_ENTRIES: &str = "cache.entries";
+
+// --- out-of-core (external sort) -----------------------------------------
+
+/// Jobs escalated to the external spill sorter (counter).
+pub const EXTSORT_JOBS: &str = "extsort.jobs";
+/// Sorted runs spilled to disk (counter).
+pub const EXTSORT_RUNS_SPILLED: &str = "extsort.runs_spilled";
+/// K-way merge passes executed (counter).
+pub const EXTSORT_MERGE_PASSES: &str = "extsort.merge_passes";
+/// Result chunks streamed to tickets (counter).
+pub const EXTSORT_CHUNKS_STREAMED: &str = "extsort.chunks_streamed";
+/// Peak working-set bytes of the most recent external job (gauge).
+pub const EXTSORT_LAST_PEAK_BYTES: &str = "extsort.last_peak_bytes";
+/// External jobs cancelled mid-stream (counter).
+pub const EXTSORT_CANCELLED: &str = "extsort.cancelled";
+/// External jobs that failed with an I/O or plan error (counter).
+pub const EXTSORT_ERRORS: &str = "extsort.errors";
+
+// --- kernel phases -------------------------------------------------------
+//
+// One name per `Phase` variant; `Phase::metric_name` resolves through these
+// constants, and `cargo xtask lint` cross-checks this block against the
+// `Phase` enum and the README phase list. Order matches `Phase::all()`.
+
+pub const KERNEL_RADIX_MINMAX: &str = "kernel.radix.minmax";
+pub const KERNEL_RADIX_HISTOGRAM: &str = "kernel.radix.histogram";
+pub const KERNEL_RADIX_SCATTER: &str = "kernel.radix.scatter";
+pub const KERNEL_RADIX_COPYBACK: &str = "kernel.radix.copyback";
+pub const KERNEL_MERGE_RUN_SORT: &str = "kernel.merge.run_sort";
+pub const KERNEL_MERGE_MERGE_LEVELS: &str = "kernel.merge.merge_levels";
+pub const KERNEL_SAMPLE_SAMPLE: &str = "kernel.sample.sample";
+pub const KERNEL_SAMPLE_PARTITION: &str = "kernel.sample.partition";
+pub const KERNEL_SAMPLE_BUCKET_SORT: &str = "kernel.sample.bucket_sort";
+pub const KERNEL_EXT_RUN_FORM: &str = "kernel.ext.run_form";
+pub const KERNEL_EXT_SPILL: &str = "kernel.ext.spill";
+pub const KERNEL_EXT_MERGE: &str = "kernel.ext.merge";
+
+/// The kernel-phase names in [`Phase::all()`](crate::obs::event::Phase::all)
+/// order. Indexed by `Phase::wire()`.
+pub const KERNEL_PHASES: [&str; 12] = [
+    KERNEL_RADIX_MINMAX,
+    KERNEL_RADIX_HISTOGRAM,
+    KERNEL_RADIX_SCATTER,
+    KERNEL_RADIX_COPYBACK,
+    KERNEL_MERGE_RUN_SORT,
+    KERNEL_MERGE_MERGE_LEVELS,
+    KERNEL_SAMPLE_SAMPLE,
+    KERNEL_SAMPLE_PARTITION,
+    KERNEL_SAMPLE_BUCKET_SORT,
+    KERNEL_EXT_RUN_FORM,
+    KERNEL_EXT_SPILL,
+    KERNEL_EXT_MERGE,
+];
+
+// --- dynamic names -------------------------------------------------------
+//
+// Per-shard / per-client series names are minted through these helpers so
+// the template lives here (and the linter can whitelist the helper call
+// sites instead of chasing `format!` strings through the tree).
+
+/// `shard.{idx}.jobs.completed` — jobs completed by one shard (counter).
+pub fn shard_jobs_completed(idx: usize) -> String {
+    format!("shard.{idx}.jobs.completed")
+}
+
+/// `shard.{idx}.jobs.routed` — jobs dispatched to one shard (counter).
+pub fn shard_jobs_routed(idx: usize) -> String {
+    format!("shard.{idx}.jobs.routed")
+}
+
+/// `shard.{idx}.local.{name}` — a shard-local counter re-exported by the
+/// router from shard telemetry (gauge).
+pub fn shard_local(idx: usize, name: &str) -> String {
+    format!("shard.{idx}.local.{name}")
+}
+
+/// `shards.{name}` — a shard-local counter summed across the fleet (gauge).
+pub fn shards_total(name: &str) -> String {
+    format!("shards.{name}")
+}
+
+/// `client.{client}.dispatched` — per-client dispatch counter under the
+/// round-robin fairness scheduler (counter).
+pub fn client_dispatched(client: u64) -> String {
+    format!("client.{client}.dispatched")
+}
+
+/// Every static series name in the registry except the kernel phases
+/// (those live in [`KERNEL_PHASES`]). The linter and the registry's own
+/// tests treat `ALL` + `KERNEL_PHASES` as the canonical vocabulary;
+/// dynamic helper templates are represented by their `{}`-form
+/// documentation strings in [`DYNAMIC`].
+pub const ALL: [&str; 55] = [
+    JOBS_SUBMITTED,
+    JOBS_COMPLETED,
+    JOBS_INVALID,
+    JOBS_PANICKED,
+    JOBS_DTYPE_I64,
+    JOBS_DTYPE_I32,
+    JOBS_DTYPE_U64,
+    JOBS_DTYPE_F64,
+    BATCH_SUBMITTED,
+    BATCH_COMPLETED,
+    BATCH_JOBS_SUBMITTED,
+    BATCH_JOB_LATENCY,
+    BATCH_LAST_P50_SECS,
+    BATCH_LAST_P99_SECS,
+    BATCH_LAST_JOBS_PER_SEC,
+    PARAMS_OVERRIDE,
+    PARAMS_CACHE_HIT,
+    PARAMS_CACHE_MISS,
+    PARAMS_SYMBOLIC,
+    SORT_LATENCY,
+    ELEMENTS_SORTED,
+    SCRATCH_GROWS,
+    TUNER_CYCLES,
+    TUNER_GENERATIONS,
+    TUNER_OBSERVATIONS,
+    TUNER_DROPPED,
+    TUNER_PUBLISHES,
+    TUNER_EXT_PUBLISHES,
+    TUNER_NO_CHANGE,
+    TUNER_EVICTED,
+    TUNER_CLASSES,
+    TUNER_LAST_IMPROVEMENT_PCT,
+    TUNER_CACHE_HIT_RATE,
+    TRACE_DROPPED,
+    TRACE_INGESTED,
+    SHARD_DEATHS,
+    SHARD_RESPAWNS,
+    SHARD_JOBS_LOST,
+    SHARD_JOBS_OVERSIZED,
+    SHARD_CACHE_PUBLISHES,
+    SHARD_CACHE_ABSORBED,
+    SHARD_CACHE_ENTRIES_ABSORBED,
+    SHARD_CACHE_ENTRIES,
+    SHARD_CACHE_BROADCASTS,
+    SHARDS_REDIALS,
+    SHARDS_SHED,
+    ROUTER_QUEUE_DEPTH,
+    CACHE_ENTRIES,
+    EXTSORT_JOBS,
+    EXTSORT_RUNS_SPILLED,
+    EXTSORT_MERGE_PASSES,
+    EXTSORT_CHUNKS_STREAMED,
+    EXTSORT_LAST_PEAK_BYTES,
+    EXTSORT_CANCELLED,
+    EXTSORT_ERRORS,
+];
+
+/// Documentation templates for the dynamic helpers above (`{}` marks the
+/// interpolated part). The linter uses these to match README rows.
+pub const DYNAMIC: [&str; 5] = [
+    "shard.{idx}.jobs.completed",
+    "shard.{idx}.jobs.routed",
+    "shard.{idx}.local.{name}",
+    "shards.{name}",
+    "client.{client}.dispatched",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Phase;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for name in ALL.iter().chain(KERNEL_PHASES.iter()) {
+            assert!(seen.insert(*name), "duplicate metric name {name}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || "._".contains(c)),
+                "bad metric name {name:?}"
+            );
+            assert!(!name.starts_with('.') && !name.ends_with('.'), "bad name {name:?}");
+        }
+    }
+
+    #[test]
+    fn prometheus_sanitized_forms_stay_unique() {
+        let sanitize = |n: &str| {
+            let body: String =
+                n.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+            format!("evosort_{body}")
+        };
+        let mut seen = std::collections::HashSet::new();
+        for name in ALL.iter().chain(KERNEL_PHASES.iter()) {
+            assert!(seen.insert(sanitize(name)), "prometheus collision for {name}");
+        }
+    }
+
+    #[test]
+    fn kernel_phase_table_matches_phase_enum() {
+        assert_eq!(KERNEL_PHASES.len(), Phase::COUNT);
+        for phase in Phase::all() {
+            assert_eq!(KERNEL_PHASES[phase.wire() as usize], phase.metric_name());
+        }
+    }
+
+    #[test]
+    fn dynamic_helpers_match_their_templates() {
+        assert_eq!(shard_jobs_completed(3), "shard.3.jobs.completed");
+        assert_eq!(shard_jobs_routed(0), "shard.0.jobs.routed");
+        assert_eq!(shard_local(1, "jobs"), "shard.1.local.jobs");
+        assert_eq!(shards_total("jobs"), "shards.jobs");
+        assert_eq!(client_dispatched(7), "client.7.dispatched");
+    }
+}

@@ -6,6 +6,12 @@
 //! processes — locally spawned or remote — on a frame transport addressed
 //! by typed [`Endpoint`]s (`unix:///path.sock`, `tcp://host:port`)).
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): the whole coordination layer (service, shards,
+// pipeline, metrics) is safe Rust; unsafe is confined to `exec`, `obs::ring`
+// and the `sort` kernels.
+#![forbid(unsafe_code)]
+
 pub mod endpoint;
 pub mod metrics;
 pub mod pipeline;

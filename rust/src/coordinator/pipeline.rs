@@ -362,14 +362,7 @@ mod tests {
             };
             let reqs = wl.generate(2);
             assert!(reqs.iter().all(|r| r.dtype() == dtype), "{dtype}");
-            let svc = SortService::new(crate::coordinator::ServiceConfig {
-                workers: 2,
-                sort_threads: 2,
-                queue_capacity: 8,
-                autotune: None,
-                exec: Default::default(),
-                external: None,
-            });
+            let svc = SortService::new(crate::coordinator::ServiceConfig::sized(2, 2, 8));
             let report = svc.submit_batch_requests(reqs).wait();
             assert_eq!(report.stats.jobs, 8, "{dtype}");
             assert_eq!(report.stats.invalid, 0, "{dtype}");
@@ -388,14 +381,7 @@ mod tests {
             seed: 3,
             ..Default::default()
         };
-        let svc = SortService::new(crate::coordinator::ServiceConfig {
-            workers: 2,
-            sort_threads: 2,
-            queue_capacity: 8,
-            autotune: None,
-            exec: Default::default(),
-            external: None,
-        });
+        let svc = SortService::new(crate::coordinator::ServiceConfig::sized(2, 2, 8));
         let report = wl.run(&svc, 2);
         assert_eq!(report.stats.jobs, 40);
         assert_eq!(report.stats.invalid, 0);

@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 use crate::autotune::policy::AutotunePolicy;
 use crate::autotune::tuner::{Observation, OnlineTuner};
 use crate::autotune::{fingerprint, Fingerprint};
-use crate::coordinator::metrics::{self, Metrics};
+use crate::coordinator::metrics::{self, names, Metrics};
 use crate::coordinator::request::SortRequest;
 use crate::coordinator::ticket::{CompletionGuard, JobError, JobResult, JobSlot, SortOutput, Ticket};
 use crate::coordinator::tuning_cache::TuningCache;
@@ -179,7 +179,7 @@ impl BatchCompletion {
     fn publish(&mut self) {
         if !self.published {
             self.published = true;
-            self.metrics.incr("batch.completed");
+            self.metrics.incr(names::BATCH_COMPLETED);
         }
     }
 }
@@ -245,9 +245,9 @@ impl BatchTicket {
         );
         self.completion.publish();
         let metrics = &self.completion.metrics;
-        metrics.set_gauge("batch.last.jobs_per_sec", stats.jobs_per_sec);
-        metrics.set_gauge("batch.last.p50_secs", stats.p50_secs);
-        metrics.set_gauge("batch.last.p99_secs", stats.p99_secs);
+        metrics.set_gauge(names::BATCH_LAST_JOBS_PER_SEC, stats.jobs_per_sec);
+        metrics.set_gauge(names::BATCH_LAST_P50_SECS, stats.p50_secs);
+        metrics.set_gauge(names::BATCH_LAST_P99_SECS, stats.p99_secs);
         BatchReport { outcomes, wall_secs, stats }
     }
 
@@ -357,10 +357,10 @@ impl ResultStream {
 /// mirrors the in-process accounting for cross-process jobs).
 pub(crate) fn dtype_counter(d: Dtype) -> &'static str {
     match d {
-        Dtype::I64 => "jobs.dtype.i64",
-        Dtype::I32 => "jobs.dtype.i32",
-        Dtype::U64 => "jobs.dtype.u64",
-        Dtype::F64 => "jobs.dtype.f64",
+        Dtype::I64 => names::JOBS_DTYPE_I64,
+        Dtype::I32 => names::JOBS_DTYPE_I32,
+        Dtype::U64 => names::JOBS_DTYPE_U64,
+        Dtype::F64 => names::JOBS_DTYPE_F64,
     }
 }
 
@@ -425,17 +425,17 @@ fn run_typed<K: SortKey>(
         Some(fp) => key::validate_keys_on(exec, fp, &data, threads) == Verdict::Valid,
         None => true,
     };
-    metrics.incr("jobs.completed");
+    metrics.incr(names::JOBS_COMPLETED);
     metrics.incr(dtype_counter(K::DTYPE));
-    metrics.observe("sort.latency", secs);
-    metrics.add("elements.sorted", data.len() as u64);
+    metrics.observe(names::SORT_LATENCY, secs);
+    metrics.add(names::ELEMENTS_SORTED, data.len() as u64);
     if grew > 0 {
         // Arena growth events — flat once the service is warm; the
         // steady-state test gates on this counter.
-        metrics.add("scratch.grows", grew);
+        metrics.add(names::SCRATCH_GROWS, grew);
     }
     if !valid {
-        metrics.incr("jobs.invalid");
+        metrics.incr(names::JOBS_INVALID);
     }
     SortOutput { id, payload: K::into_payload(data), params, secs, valid }
 }
@@ -492,15 +492,15 @@ fn run_external_typed<K: ExtKey>(
     let grew = scratch.grows() - grows_before;
     let ok = match result {
         Ok(report) => {
-            metrics.incr("extsort.jobs");
-            metrics.add("extsort.runs_spilled", report.runs_spilled);
-            metrics.add("extsort.merge_passes", report.merge_passes);
-            metrics.add("extsort.chunks_streamed", report.chunks_streamed);
-            metrics.set_gauge("extsort.last_peak_bytes", report.peak_working_bytes as f64);
+            metrics.incr(names::EXTSORT_JOBS);
+            metrics.add(names::EXTSORT_RUNS_SPILLED, report.runs_spilled);
+            metrics.add(names::EXTSORT_MERGE_PASSES, report.merge_passes);
+            metrics.add(names::EXTSORT_CHUNKS_STREAMED, report.chunks_streamed);
+            metrics.set_gauge(names::EXTSORT_LAST_PEAK_BYTES, report.peak_working_bytes as f64);
             true
         }
         Err(e) => {
-            metrics.incr("extsort.errors");
+            metrics.incr(names::EXTSORT_ERRORS);
             crate::log_warn!("external sort failed (job {id}): {e}");
             false
         }
@@ -511,15 +511,15 @@ fn run_external_typed<K: ExtKey>(
             Some(fp) => key::validate_keys_on(exec, fp, &out, threads) == Verdict::Valid,
             None => true,
         };
-    metrics.incr("jobs.completed");
+    metrics.incr(names::JOBS_COMPLETED);
     metrics.incr(dtype_counter(K::DTYPE));
-    metrics.observe("sort.latency", secs);
-    metrics.add("elements.sorted", out.len() as u64);
+    metrics.observe(names::SORT_LATENCY, secs);
+    metrics.add(names::ELEMENTS_SORTED, out.len() as u64);
     if grew > 0 {
-        metrics.add("scratch.grows", grew);
+        metrics.add(names::SCRATCH_GROWS, grew);
     }
     if !valid {
-        metrics.incr("jobs.invalid");
+        metrics.incr(names::JOBS_INVALID);
     }
     SortOutput { id, payload: K::into_payload(out), params, secs, valid }
 }
@@ -687,6 +687,62 @@ impl Default for ServiceConfig {
     }
 }
 
+// The builder below is the only sanctioned way to assemble a config outside
+// this module: `cargo xtask lint` rejects `ServiceConfig` struct literals
+// elsewhere, so adding a field means touching exactly this file (plus the
+// places that opt into the new field) instead of every construction site.
+impl ServiceConfig {
+    /// The default configuration; chain `with_*` setters to customise.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Explicitly sized config — the common construction shape
+    /// (`workers` x `sort_threads`, `queue_capacity` pending-job bound).
+    pub fn sized(workers: usize, sort_threads: usize, queue_capacity: usize) -> Self {
+        Self::new()
+            .with_workers(workers)
+            .with_sort_threads(sort_threads)
+            .with_queue_capacity(queue_capacity)
+    }
+
+    /// Set the concurrent-job worker count.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Set the per-sort thread budget.
+    pub fn with_sort_threads(mut self, sort_threads: usize) -> Self {
+        self.sort_threads = sort_threads;
+        self
+    }
+
+    /// Set the pending-job queue bound.
+    pub fn with_queue_capacity(mut self, queue_capacity: usize) -> Self {
+        self.queue_capacity = queue_capacity;
+        self
+    }
+
+    /// Attach (or detach, with `None`) a background autotune policy.
+    pub fn with_autotune(mut self, autotune: impl Into<Option<AutotunePolicy>>) -> Self {
+        self.autotune = autotune.into();
+        self
+    }
+
+    /// Select the kernel execution backend.
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Attach (or detach, with `None`) out-of-core escalation.
+    pub fn with_external(mut self, external: impl Into<Option<ExternalConfig>>) -> Self {
+        self.external = external.into();
+        self
+    }
+}
+
 /// A job's resolved parameters plus the observation the tuner wants back.
 struct Resolution {
     params: SortParams,
@@ -750,7 +806,7 @@ fn resolve_request(
             .unwrap_or_default()
     };
     if let Some(p) = req.params {
-        metrics.incr("params.override");
+        metrics.incr(names::PARAMS_OVERRIDE);
         let ext = escalate.then(|| ext_genes(None));
         return Resolution { params: p, cache_hit: false, observe: None, ext };
     }
@@ -758,17 +814,17 @@ fn resolve_request(
     let label =
         if escalate { fingerprint::beyond_memory_label(&base) } else { base.clone() };
     let (params, cache_hit) = if let Some(p) = cache.get(req.len(), &label) {
-        metrics.incr("params.cache_hit");
+        metrics.incr(names::PARAMS_CACHE_HIT);
         (p, true)
     } else {
-        metrics.incr("params.cache_miss");
+        metrics.incr(names::PARAMS_CACHE_MISS);
         // An escalated class that has never been tuned borrows the in-RAM
         // class's run-formation parameters before falling back to the model.
         let fallback = if escalate { cache.get(req.len(), &base) } else { None };
         match fallback {
             Some(p) => (p, false),
             None => {
-                metrics.incr("params.symbolic");
+                metrics.incr(names::PARAMS_SYMBOLIC);
                 (model.params_for(req.len()), false)
             }
         }
@@ -924,7 +980,7 @@ impl SortService {
         );
         let external = self.external.clone();
         let tuner = self.tuner.clone();
-        self.metrics.incr("jobs.submitted");
+        self.metrics.incr(names::JOBS_SUBMITTED);
         self.tracer.emit(tid, EventKind::Queued);
         // If the pool refuses (shutdown) the closure is dropped unexecuted
         // and the guard resolves the ticket to WorkerLost — same for a
@@ -973,9 +1029,9 @@ impl SortService {
         let (tx, rx) = mpsc::channel();
         // Keep the shared counters consistent with the single-job path
         // (jobs.submitted >= jobs.completed must hold across mixed traffic).
-        self.metrics.add("jobs.submitted", total as u64);
-        self.metrics.add("batch.jobs.submitted", total as u64);
-        self.metrics.incr("batch.submitted");
+        self.metrics.add(names::JOBS_SUBMITTED, total as u64);
+        self.metrics.add(names::BATCH_JOBS_SUBMITTED, total as u64);
+        self.metrics.incr(names::BATCH_SUBMITTED);
         let cache_hits = Arc::new(AtomicU64::new(0));
         let cache_misses = Arc::new(AtomicU64::new(0));
         let queue: VecDeque<(usize, u64, SortRequest)> = requests
@@ -1036,7 +1092,7 @@ impl SortService {
                         let outcome = execute_request(
                             &sorter, &metrics, &tracer, id, req, params, escalation, &mut *scratch,
                         );
-                        metrics.observe_sample("batch.job.latency", outcome.secs);
+                        metrics.observe_sample(names::BATCH_JOB_LATENCY, outcome.secs);
                         if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                             tuner.observe(Observation {
                                 label,
@@ -1053,7 +1109,7 @@ impl SortService {
                             Ok(outcome)
                         }
                         Err(_) => {
-                            metrics.incr("jobs.panicked");
+                            metrics.incr(names::JOBS_PANICKED);
                             tracer
                                 .emit(tid, EventKind::Failed { reason: FailReason::WorkerLost });
                             Err(JobError::WorkerLost)
@@ -1102,8 +1158,8 @@ impl SortService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let tid = req.trace_id.unwrap_or(id);
         self.tracer.emit(tid, EventKind::Submitted);
-        self.metrics.incr("jobs.submitted");
-        self.metrics.incr("batch.submitted");
+        self.metrics.incr(names::JOBS_SUBMITTED);
+        self.metrics.incr(names::BATCH_SUBMITTED);
         let cache_hits = Arc::new(AtomicU64::new(0));
         let cache_misses = Arc::new(AtomicU64::new(0));
         // Resolve on the submitting thread: the ticket's chunk-count
@@ -1155,27 +1211,29 @@ impl SortService {
             });
             match result {
                 Ok(report) => {
-                    metrics.incr("jobs.completed");
+                    metrics.incr(names::JOBS_COMPLETED);
                     metrics.incr(dtype_counter(dtype));
-                    metrics.observe("sort.latency", secs);
-                    metrics.add("elements.sorted", report.elements);
-                    metrics.incr("extsort.jobs");
-                    metrics.add("extsort.runs_spilled", report.runs_spilled);
-                    metrics.add("extsort.merge_passes", report.merge_passes);
-                    metrics.add("extsort.chunks_streamed", report.chunks_streamed);
-                    metrics
-                        .set_gauge("extsort.last_peak_bytes", report.peak_working_bytes as f64);
+                    metrics.observe(names::SORT_LATENCY, secs);
+                    metrics.add(names::ELEMENTS_SORTED, report.elements);
+                    metrics.incr(names::EXTSORT_JOBS);
+                    metrics.add(names::EXTSORT_RUNS_SPILLED, report.runs_spilled);
+                    metrics.add(names::EXTSORT_MERGE_PASSES, report.merge_passes);
+                    metrics.add(names::EXTSORT_CHUNKS_STREAMED, report.chunks_streamed);
+                    metrics.set_gauge(
+                        names::EXTSORT_LAST_PEAK_BYTES,
+                        report.peak_working_bytes as f64,
+                    );
                     tracer.emit(tid, EventKind::Completed { secs });
                     if let (Some(tuner), Some((label, sample))) = (&tuner, observe) {
                         tuner.observe(Observation { label, n, secs, sample: Some(sample) });
                     }
                 }
                 Err(ExtError::Cancelled) => {
-                    metrics.incr("extsort.cancelled");
+                    metrics.incr(names::EXTSORT_CANCELLED);
                     tracer.emit(tid, EventKind::Failed { reason: FailReason::Cancelled });
                 }
                 Err(e) => {
-                    metrics.incr("extsort.errors");
+                    metrics.incr(names::EXTSORT_ERRORS);
                     crate::log_warn!("external stream failed (job {id}): {e}");
                     tracer.emit(tid, EventKind::Failed { reason: FailReason::WorkerLost });
                 }
@@ -1210,14 +1268,7 @@ mod tests {
     use crate::data::{generate_i64, Distribution};
 
     fn service() -> SortService {
-        SortService::new(ServiceConfig {
-            workers: 2,
-            sort_threads: 2,
-            queue_capacity: 8,
-            autotune: None,
-            exec: Default::default(),
-            external: None,
-        })
+        SortService::new(ServiceConfig::sized(2, 2, 8))
     }
 
     fn sorted_i64(out: &SortOutput) -> Vec<i64> {
@@ -1235,8 +1286,8 @@ mod tests {
         assert_eq!(out.dtype(), Dtype::I64);
         assert_eq!(sorted_i64(&out), expect);
         assert!(out.secs > 0.0);
-        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
-        assert_eq!(svc.metrics().counter("jobs.dtype.i64"), 1);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 1);
+        assert_eq!(svc.metrics().counter(names::JOBS_DTYPE_I64), 1);
     }
 
     #[test]
@@ -1244,14 +1295,7 @@ mod tests {
         use crate::obs::{report, Tracer};
         let tracer = Tracer::enabled(1024, 0);
         let svc = SortService::new_traced(
-            ServiceConfig {
-                workers: 2,
-                sort_threads: 2,
-                queue_capacity: 8,
-                autotune: None,
-                exec: Default::default(),
-                external: None,
-            },
+            ServiceConfig::sized(2, 2, 8),
             tracer,
         );
         let data = generate_i64(150_000, Distribution::Uniform, 21, 2);
@@ -1309,8 +1353,8 @@ mod tests {
             ids.insert(out.id);
         }
         assert_eq!(ids.len(), 10, "unique job ids");
-        assert_eq!(svc.metrics().counter("jobs.completed"), 10);
-        assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 10);
+        assert_eq!(svc.metrics().counter(names::JOBS_INVALID), 0);
     }
 
     #[test]
@@ -1322,22 +1366,22 @@ mod tests {
             .wait()
             .unwrap();
         assert!(out.valid);
-        assert_eq!(svc.metrics().counter("params.symbolic"), 1);
-        assert_eq!(svc.metrics().counter("params.cache_miss"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_SYMBOLIC), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_MISS), 1);
         // 2. cache hit after put under the data's fingerprint label.
         let data = generate_i64(200_000, Distribution::Uniform, 4, 2);
         let label = SortService::fingerprint_label(&data);
         svc.cache().put(data.len(), &label, SortParams::paper_1e7());
         let out = svc.submit_request(SortRequest::new(data)).wait().unwrap();
         assert_eq!(out.params, SortParams::paper_1e7());
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 1);
         // 3. explicit override wins.
         let custom = SortParams { tile: 777, ..SortParams::paper_1e7() };
         let req = SortRequest::new(generate_i64(200_000, Distribution::Uniform, 5, 2))
             .with_params(custom);
         let out = svc.submit_request(req).wait().unwrap();
         assert_eq!(out.params.tile, 777);
-        assert_eq!(svc.metrics().counter("params.override"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_OVERRIDE), 1);
     }
 
     #[test]
@@ -1363,12 +1407,12 @@ mod tests {
         let out = svc.submit_request(mislabeled).wait().unwrap();
         assert!(out.valid);
         assert_ne!(out.params, poison, "mislabeled job must not resolve through the uniform class");
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 0);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 0);
 
         // …while genuinely uniform data still hits its class.
         let out = svc.submit_request(SortRequest::new(uniform)).wait().unwrap();
         assert_eq!(out.params, poison);
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 1);
     }
 
     #[test]
@@ -1388,7 +1432,7 @@ mod tests {
         let out = svc.submit_request(SortRequest::new(floats)).wait().unwrap();
         assert!(out.valid);
         assert_ne!(out.params, poison, "f64 must not resolve through the i64 class");
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 0);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 0);
         let out = svc.submit_request(SortRequest::new(ints)).wait().unwrap();
         assert_eq!(out.params, poison);
     }
@@ -1402,7 +1446,7 @@ mod tests {
             let _ = svc.submit_request(SortRequest::new(data));
         }
         svc.drain();
-        assert_eq!(svc.metrics().counter("jobs.completed"), 5);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 5);
         assert!(svc.drain_timeout(Duration::from_millis(50)), "idle drain returns immediately");
     }
 
@@ -1440,14 +1484,7 @@ mod tests {
     fn cancel_queued_job_resolves_cancelled() {
         // One worker, deep queue: occupy the worker with slow jobs so a
         // later job is still queued when we cancel it.
-        let svc = SortService::new(ServiceConfig {
-            workers: 1,
-            sort_threads: 1,
-            queue_capacity: 16,
-            autotune: None,
-            exec: Default::default(),
-            external: None,
-        });
+        let svc = SortService::new(ServiceConfig::sized(1, 1, 16));
         let blockers: Vec<Ticket> = (0..3)
             .map(|s| {
                 let data = generate_i64(400_000, Distribution::Uniform, s, 1);
@@ -1508,11 +1545,11 @@ mod tests {
         assert_eq!(report.stats.per_dtype[0].dtype, Dtype::I64);
         assert_eq!(report.stats.per_dtype[0].jobs, 24);
         // Metrics published.
-        assert_eq!(svc.metrics().counter("batch.jobs.submitted"), 24);
-        assert_eq!(svc.metrics().counter("batch.completed"), 1);
-        assert_eq!(svc.metrics().counter("jobs.completed"), 24);
-        assert!(svc.metrics().gauge("batch.last.jobs_per_sec").unwrap() > 0.0);
-        assert!(svc.metrics().percentile("batch.job.latency", 99.0).is_some());
+        assert_eq!(svc.metrics().counter(names::BATCH_JOBS_SUBMITTED), 24);
+        assert_eq!(svc.metrics().counter(names::BATCH_COMPLETED), 1);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 24);
+        assert!(svc.metrics().gauge(names::BATCH_LAST_JOBS_PER_SEC).unwrap() > 0.0);
+        assert!(svc.metrics().percentile(names::BATCH_JOB_LATENCY, 99.0).is_some());
     }
 
     #[test]
@@ -1557,8 +1594,8 @@ mod tests {
         let report = svc.submit_batch_requests(vec![override_req, cached_req]).wait();
         assert_eq!(report.output(0).params.tile, 333);
         assert_eq!(report.output(1).params, SortParams::paper_1e8());
-        assert_eq!(svc.metrics().counter("params.override"), 1);
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_OVERRIDE), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 1);
         // The batch report carries its own hit/miss accounting (overrides
         // count as neither).
         assert_eq!(report.stats.cache_hits, 1);
@@ -1570,14 +1607,7 @@ mod tests {
         // One worker: jobs execute in submission order, so the first (tiny)
         // job finishes while the remaining (large) jobs are still queued —
         // the stream must hand it over before the batch completes.
-        let svc = SortService::new(ServiceConfig {
-            workers: 1,
-            sort_threads: 2,
-            queue_capacity: 16,
-            autotune: None,
-            exec: Default::default(),
-            external: None,
-        });
+        let svc = SortService::new(ServiceConfig::sized(1, 2, 16));
         let tiny = generate_i64(1_000, Distribution::Uniform, 0, 2);
         let mut requests = vec![SortRequest::new(tiny)];
         for seed in 1..6u64 {
@@ -1589,7 +1619,7 @@ mod tests {
         assert_eq!(stream.remaining(), total as usize);
         let first = stream.next().expect("stream has items").expect("job ok");
         assert_eq!(first.len(), 1_000, "first yield is the first-submitted job");
-        let completed_at_first_yield = svc.metrics().counter("jobs.completed");
+        let completed_at_first_yield = svc.metrics().counter(names::JOBS_COMPLETED);
         assert!(
             completed_at_first_yield < total,
             "first result must arrive before the whole batch completes \
@@ -1602,7 +1632,7 @@ mod tests {
             assert_eq!(out.len(), 400_000, "order: item {i}");
             assert!(out.valid);
         }
-        assert_eq!(svc.metrics().counter("batch.completed"), 1);
+        assert_eq!(svc.metrics().counter(names::BATCH_COMPLETED), 1);
     }
 
     #[test]
@@ -1645,9 +1675,9 @@ mod tests {
         let ticket = svc.submit_batch_requests(requests);
         drop(ticket); // fire-and-forget
         svc.drain();
-        assert_eq!(svc.metrics().counter("jobs.completed"), 3);
-        assert_eq!(svc.metrics().counter("batch.submitted"), 1);
-        assert_eq!(svc.metrics().counter("batch.completed"), 1);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 3);
+        assert_eq!(svc.metrics().counter(names::BATCH_SUBMITTED), 1);
+        assert_eq!(svc.metrics().counter(names::BATCH_COMPLETED), 1);
     }
 
     #[test]
@@ -1692,14 +1722,10 @@ mod tests {
     }
 
     fn external_service(budget: usize, root: &std::path::Path) -> SortService {
-        SortService::new(ServiceConfig {
-            workers: 2,
-            sort_threads: 2,
-            queue_capacity: 8,
-            autotune: None,
-            exec: Default::default(),
-            external: Some(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
-        })
+        SortService::new(
+            ServiceConfig::sized(2, 2, 8)
+                .with_external(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
+        )
     }
 
     #[test]
@@ -1712,19 +1738,19 @@ mod tests {
         let out = svc.submit_request(SortRequest::new(data)).wait().expect("job ok");
         assert!(out.valid, "escalated sort must survive multiset validation");
         assert_eq!(sorted_i64(&out), expect);
-        assert_eq!(svc.metrics().counter("extsort.jobs"), 1);
+        assert_eq!(svc.metrics().counter(names::EXTSORT_JOBS), 1);
         assert!(
-            svc.metrics().counter("extsort.runs_spilled") >= 3,
+            svc.metrics().counter(names::EXTSORT_RUNS_SPILLED) >= 3,
             "a 1.6 MiB job under a 1 MiB budget spills several runs"
         );
-        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
-        assert_eq!(svc.metrics().counter("jobs.invalid"), 0);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 1);
+        assert_eq!(svc.metrics().counter(names::JOBS_INVALID), 0);
         assert_eq!(spill_dirs_left(&root), 0, "spill directories must be cleaned up");
         // A small job under the same config stays on the in-RAM path.
         let small = generate_i64(10_000, Distribution::Uniform, 32, 2);
         let out = svc.submit_request(SortRequest::new(small)).wait().expect("job ok");
         assert!(out.valid);
-        assert_eq!(svc.metrics().counter("extsort.jobs"), 1, "small job must not escalate");
+        assert_eq!(svc.metrics().counter(names::EXTSORT_JOBS), 1, "small job must not escalate");
         let _ = std::fs::remove_dir_all(&root);
     }
 
@@ -1748,8 +1774,8 @@ mod tests {
         assert_eq!(chunks, total, "ticket length is the chunk-count contract");
         assert_eq!(got, expect, "chunk concatenation is the sorted payload");
         svc.drain();
-        assert_eq!(svc.metrics().counter("extsort.chunks_streamed"), total as u64);
-        assert_eq!(svc.metrics().counter("jobs.completed"), 1);
+        assert_eq!(svc.metrics().counter(names::EXTSORT_CHUNKS_STREAMED), total as u64);
+        assert_eq!(svc.metrics().counter(names::JOBS_COMPLETED), 1);
         assert_eq!(spill_dirs_left(&root), 0);
         let _ = std::fs::remove_dir_all(&root);
     }
@@ -1777,9 +1803,9 @@ mod tests {
             SortParams::paper_1e8(),
             "sort params resolve through the :xm class"
         );
-        assert_eq!(svc.metrics().counter("params.cache_hit"), 1);
+        assert_eq!(svc.metrics().counter(names::PARAMS_CACHE_HIT), 1);
         // The tuned run size drives the spill layout: ceil(120k / 30k) runs.
-        assert_eq!(svc.metrics().counter("extsort.runs_spilled"), 4);
+        assert_eq!(svc.metrics().counter(names::EXTSORT_RUNS_SPILLED), 4);
         assert_eq!(spill_dirs_left(&root), 0);
         let _ = std::fs::remove_dir_all(&root);
     }

@@ -85,14 +85,9 @@ impl ShardedService {
                 Tracer::disabled()
             };
             let svc = SortService::new_traced(
-                ServiceConfig {
-                    workers: spec.workers_per_shard,
-                    sort_threads: spec.sort_threads,
-                    queue_capacity: spec.queue_capacity,
-                    autotune: spec.autotune,
-                    exec: spec.exec,
-                    external: None,
-                },
+                ServiceConfig::sized(spec.workers_per_shard, spec.sort_threads, spec.queue_capacity)
+                    .with_autotune(spec.autotune)
+                    .with_exec(spec.exec),
                 tracer.clone(),
             );
             let trace_hub = if spec.trace {

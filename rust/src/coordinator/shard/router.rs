@@ -54,7 +54,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::autotune::AutotunePolicy;
 use crate::coordinator::endpoint::{Endpoint, TransportKind};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{names, Metrics};
 use crate::coordinator::request::SortRequest;
 use crate::coordinator::service::{self, fail_reason, BatchTicket};
 use crate::coordinator::shard::protocol::{self, Frame};
@@ -479,7 +479,7 @@ impl ShardRouter {
     /// jobs. Client ids are caller-assigned (tenant id, connection id, …).
     pub fn submit_request_as(&self, client: u64, req: SortRequest) -> Ticket {
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.inner.metrics.incr("jobs.submitted");
+        self.inner.metrics.incr(names::JOBS_SUBMITTED);
         // The router traces every job under its router-level id — the same
         // id the worker stamps on its own events, so the two streams merge
         // into one trace.
@@ -513,9 +513,9 @@ impl ShardRouter {
         let total = requests.len();
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::clone(&self.inner.metrics);
-        metrics.add("jobs.submitted", total as u64);
-        metrics.add("batch.jobs.submitted", total as u64);
-        metrics.incr("batch.submitted");
+        metrics.add(names::JOBS_SUBMITTED, total as u64);
+        metrics.add(names::BATCH_JOBS_SUBMITTED, total as u64);
+        metrics.incr(names::BATCH_SUBMITTED);
         let hits = Arc::new(AtomicU64::new(0));
         let misses = Arc::new(AtomicU64::new(0));
         let shutting_down = self.inner.shutdown.load(Ordering::SeqCst);
@@ -534,14 +534,14 @@ impl ShardRouter {
                 if shutting_down {
                     rejected.push((id, completer));
                 } else if st.queue.len() >= self.inner.admit_capacity {
-                    self.inner.metrics.incr("shards.shed");
+                    self.inner.metrics.incr(names::SHARDS_SHED);
                     rejected.push((id, completer));
                 } else {
                     self.inner.tracer.emit(id, EventKind::Queued);
                     st.queue.push(RoutedJob { id, client, req, completer });
                 }
             }
-            self.inner.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
+            self.inner.metrics.set_gauge(names::ROUTER_QUEUE_DEPTH, st.queue.len() as f64);
         }
         for (id, completer) in rejected {
             let err = if shutting_down { JobError::WorkerLost } else { JobError::Overloaded };
@@ -884,13 +884,13 @@ impl RouterInner {
             } else {
                 self.tracer.emit(job.id, EventKind::Queued);
                 st.queue.push(job);
-                self.metrics.set_gauge("router.queue.depth", st.queue.len() as f64);
+                self.metrics.set_gauge(names::ROUTER_QUEUE_DEPTH, st.queue.len() as f64);
                 None
             }
         };
         match rejected {
             Some(job) => {
-                self.metrics.incr("shards.shed");
+                self.metrics.incr(names::SHARDS_SHED);
                 crate::log_debug!(
                     "router queue saturated ({} jobs); shedding job {}",
                     self.admit_capacity,
@@ -941,7 +941,7 @@ impl RouterInner {
                             st.pending.insert(id, completer);
                             st.shards[idx].inflight.insert(id);
                             inner.metrics.set_gauge(
-                                "router.queue.depth",
+                                names::ROUTER_QUEUE_DEPTH,
                                 st.queue.len() as f64,
                             );
                             let conn = st.shards[idx].conn.as_ref().expect("picked shard is live");
@@ -984,7 +984,7 @@ impl RouterInner {
                     let completer = st.pending.remove(&id);
                     (completer, st.pending.is_empty() && st.queue.is_empty())
                 };
-                inner.metrics.incr("shard.jobs.oversized");
+                inner.metrics.incr(names::SHARD_JOBS_OVERSIZED);
                 crate::log_error!(
                     "job {id} ({} bytes) exceeds the shard frame bound; failing it",
                     bytes.len()
@@ -1003,8 +1003,8 @@ impl RouterInner {
             };
             if sent {
                 inner.tracer.emit(id, EventKind::Dispatched { shard: idx as u32 });
-                inner.metrics.incr(&format!("shard.{idx}.jobs.routed"));
-                inner.metrics.incr(&format!("client.{client}.dispatched"));
+                inner.metrics.incr(&names::shard_jobs_routed(idx));
+                inner.metrics.incr(&names::client_dispatched(client));
             } else {
                 // The shard died between pick and write. Its reader thread
                 // handles the death; reclaim the job for rerouting unless
@@ -1062,21 +1062,21 @@ impl RouterInner {
         // service level (each shard also keeps its own local metrics).
         match &result {
             Ok(out) => {
-                self.metrics.incr("jobs.completed");
+                self.metrics.incr(names::JOBS_COMPLETED);
                 self.metrics.incr(service::dtype_counter(out.dtype()));
-                self.metrics.observe("sort.latency", out.secs);
-                self.metrics.add("elements.sorted", out.len() as u64);
+                self.metrics.observe(names::SORT_LATENCY, out.secs);
+                self.metrics.add(names::ELEMENTS_SORTED, out.len() as u64);
                 if !out.valid {
-                    self.metrics.incr("jobs.invalid");
+                    self.metrics.incr(names::JOBS_INVALID);
                 }
-                self.metrics.incr(&format!("shard.{idx}.jobs.completed"));
+                self.metrics.incr(&names::shard_jobs_completed(idx));
                 match cache_flag {
-                    protocol::CACHE_FLAG_HIT => self.metrics.incr("params.cache_hit"),
-                    protocol::CACHE_FLAG_MISS => self.metrics.incr("params.cache_miss"),
-                    _ => self.metrics.incr("params.override"),
+                    protocol::CACHE_FLAG_HIT => self.metrics.incr(names::PARAMS_CACHE_HIT),
+                    protocol::CACHE_FLAG_MISS => self.metrics.incr(names::PARAMS_CACHE_MISS),
+                    _ => self.metrics.incr(names::PARAMS_OVERRIDE),
                 }
             }
-            Err(_) => self.metrics.incr("shard.jobs.lost"),
+            Err(_) => self.metrics.incr(names::SHARD_JOBS_LOST),
         }
         self.complete(completer, result, cache_flag);
     }
@@ -1086,13 +1086,13 @@ impl RouterInner {
     /// actually changed the service-level cache, broadcast the union back
     /// to every live shard.
     fn on_cache_publish(&self, idx: usize, text: &str) {
-        self.metrics.incr("shard.cache.publishes");
+        self.metrics.incr(names::SHARD_CACHE_PUBLISHES);
         let absorbed = self.cache.absorb(&TuningCache::from_text(text));
         if absorbed == 0 {
             return;
         }
-        self.metrics.add("shard.cache.entries_absorbed", absorbed as u64);
-        self.metrics.set_gauge("shard.cache.entries", self.cache.len() as f64);
+        self.metrics.add(names::SHARD_CACHE_ENTRIES_ABSORBED, absorbed as u64);
+        self.metrics.set_gauge(names::SHARD_CACHE_ENTRIES, self.cache.len() as f64);
         crate::log_debug!("router: absorbed {absorbed} cache entries from shard {idx}");
         let bytes = protocol::encode_cache_sync(&self.cache.to_text());
         let writers: Vec<Arc<Mutex<Stream>>> = {
@@ -1107,7 +1107,7 @@ impl RouterInner {
             let mut w = w.lock().unwrap_or_else(|e| e.into_inner());
             let _ = protocol::write_frame(&mut *w, &bytes);
         }
-        self.metrics.incr("shard.cache.broadcasts");
+        self.metrics.incr(names::SHARD_CACHE_BROADCASTS);
     }
 
     /// Fold one shard's counter snapshot into per-shard and fleet gauges.
@@ -1131,10 +1131,10 @@ impl RouterInner {
         // and `shard.0.local.jobs.completed` (gauge, child-process view)
         // must not share a name.
         for (name, value) in this {
-            self.metrics.set_gauge(&format!("shard.{idx}.local.{name}"), value as f64);
+            self.metrics.set_gauge(&names::shard_local(idx, &name), value as f64);
         }
         for (name, value) in totals {
-            self.metrics.set_gauge(&format!("shards.{name}"), value as f64);
+            self.metrics.set_gauge(&names::shards_total(&name), value as f64);
         }
     }
 
@@ -1184,7 +1184,7 @@ impl RouterInner {
             inner.fail_job(id, completer);
         }
         if !shutting_down {
-            inner.metrics.incr("shard.deaths");
+            inner.metrics.incr(names::SHARD_DEATHS);
             if revive {
                 match RouterInner::bring_up_shard(inner, idx) {
                     Ok(()) => {
@@ -1192,9 +1192,9 @@ impl RouterInner {
                         // legacy per-origin counter keeps older dashboards
                         // (and the PR-4 failover test) working for local
                         // respawns.
-                        inner.metrics.incr("shards.redials");
+                        inner.metrics.incr(names::SHARDS_REDIALS);
                         if matches!(inner.origins[idx], ShardOrigin::Local) {
-                            inner.metrics.incr("shard.respawns");
+                            inner.metrics.incr(names::SHARD_RESPAWNS);
                         }
                     }
                     Err(e) => {
@@ -1217,7 +1217,7 @@ impl RouterInner {
 
     /// Resolve a job the transport lost: `Err(WorkerLost)`, never a hang.
     fn fail_job(&self, id: u64, completer: Completer) {
-        self.metrics.incr("shard.jobs.lost");
+        self.metrics.incr(names::SHARD_JOBS_LOST);
         self.tracer.emit(
             id,
             EventKind::Failed { reason: fail_reason(&JobError::WorkerLost) },
@@ -1230,7 +1230,7 @@ impl RouterInner {
             Completer::Slot(slot) => slot.complete(result),
             Completer::Batch { tx, idx, hits, misses } => {
                 if let Ok(out) = &result {
-                    self.metrics.observe_sample("batch.job.latency", out.secs);
+                    self.metrics.observe_sample(names::BATCH_JOB_LATENCY, out.secs);
                     match cache_flag {
                         protocol::CACHE_FLAG_HIT => {
                             hits.fetch_add(1, Ordering::Relaxed);

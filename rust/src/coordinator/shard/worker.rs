@@ -38,6 +38,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::endpoint::Endpoint;
+use crate::coordinator::metrics::names;
 use crate::coordinator::service::{self, ServiceConfig, SortService};
 use crate::coordinator::shard::protocol::{self, Frame};
 use crate::coordinator::shard::transport::{Listener, Stream};
@@ -198,7 +199,7 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
                     if tracer.is_enabled() {
                         let dropped = tracer.take_dropped();
                         if dropped > 0 {
-                            metrics.add("trace.dropped", dropped);
+                            metrics.add(names::TRACE_DROPPED, dropped);
                         }
                         events.clear();
                         tracer.drain_into(&mut events);
@@ -211,7 +212,7 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
                         }
                     }
                     let mut counters = metrics.counters_snapshot();
-                    counters.push(("cache.entries".to_string(), cache.len() as u64));
+                    counters.push((names::CACHE_ENTRIES.to_string(), cache.len() as u64));
                     let bytes = protocol::encode_telemetry(&counters);
                     let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
                     if protocol::write_frame(&mut *w, &bytes).is_err() {
@@ -257,7 +258,7 @@ pub fn run_on_stream(stream: Stream, config: ShardWorkerConfig) -> Result<ExitRe
                 let absorbed = cache.absorb(&TuningCache::from_text(&text));
                 if absorbed > 0 {
                     sync_bumps.fetch_add(1, Ordering::Relaxed);
-                    metrics.add("shard.cache.absorbed", absorbed as u64);
+                    metrics.add(names::SHARD_CACHE_ABSORBED, absorbed as u64);
                     crate::log_debug!(
                         "shard {shard_id}: absorbed {absorbed} broadcast cache entries"
                     );
@@ -308,14 +309,7 @@ mod tests {
     fn quick_config() -> ShardWorkerConfig {
         ShardWorkerConfig {
             shard_id: 0,
-            service: ServiceConfig {
-                workers: 2,
-                sort_threads: 2,
-                queue_capacity: 8,
-                autotune: None,
-                exec: Default::default(),
-                external: None,
-            },
+            service: ServiceConfig::sized(2, 2, 8),
             publish_interval: Duration::from_millis(30),
             trace: false,
         }
@@ -362,7 +356,7 @@ mod tests {
         let mut entries_seen = 0u64;
         for _ in 0..400 {
             if let Frame::Telemetry { counters } = read_frame(&mut reader).expect("frame") {
-                if let Some((_, v)) = counters.iter().find(|(k, _)| k == "cache.entries") {
+                if let Some((_, v)) = counters.iter().find(|(k, _)| k == names::CACHE_ENTRIES) {
                     entries_seen = *v;
                     if entries_seen >= 1 {
                         break;

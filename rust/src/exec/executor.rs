@@ -31,14 +31,20 @@
 
 use std::ops::Range;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
-use std::thread::JoinHandle;
+use std::sync::atomic::AtomicU64;
+use std::sync::{OnceLock, PoisonError};
+
+// Synchronization primitives come from the feature-switched shim so the
+// `loom_model` tests below can model-check the batch latch and the park/
+// unpark hand-off; in a normal build these are exactly the std types.
+use crate::util::sync::{thread, Arc, AtomicUsize, Condvar, Mutex, Ordering};
 
 /// Process-wide count of OS threads ever spawned by this module: parked
 /// workers at executor construction plus every scoped thread in
 /// spawn-per-call mode. Steady-state tests assert this stays flat across
-/// sort traffic.
+/// sort traffic. (Deliberately `std`, not the loom shim: loom atomics cannot
+/// be `const`-constructed, and a process-global counter is metrics plumbing,
+/// not part of the modeled protocol.)
 static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
 
 /// See [`THREAD_SPAWNS`].
@@ -142,7 +148,7 @@ struct Inner {
 }
 
 enum Mode {
-    Parked { inner: Arc<Inner>, workers: Vec<JoinHandle<()>> },
+    Parked { inner: Arc<Inner>, workers: Vec<thread::JoinHandle<()>> },
     SpawnPerCall,
 }
 
@@ -174,7 +180,7 @@ impl Executor {
             .map(|i| {
                 THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
                 let inner = Arc::clone(&inner);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("evosort-exec-{i}"))
                     .spawn(move || worker_loop(inner))
                     .expect("spawn executor worker")
@@ -341,6 +347,7 @@ impl Executor {
                 // both the input take and the output put.
                 let item = unsafe { in_list.take(i) }.expect("item taken once");
                 let r = f(i, item);
+                // SAFETY: one claimant per index, as above.
                 unsafe { out_list.put(i, r) };
             });
         }
@@ -472,7 +479,14 @@ struct SlotList<T> {
     len: usize,
 }
 
+// SAFETY: the list is a pointer into a `Vec<Option<T>>` owned by the parked
+// submitter; sending it to a worker moves elements of type `T: Send` across
+// threads, nothing else.
 unsafe impl<T: Send> Send for SlotList<T> {}
+// SAFETY: shared access is per-element disjoint — the batch's `fetch_add`
+// hands each index to exactly one claimant, so two threads never touch the
+// same slot (see `take`/`put` contracts). `T: Send` suffices because no `&T`
+// is ever shared across threads, only whole elements moved.
 unsafe impl<T: Send> Sync for SlotList<T> {}
 
 impl<T> SlotList<T> {
@@ -486,14 +500,17 @@ impl<T> SlotList<T> {
     /// parks until the batch completes).
     unsafe fn take(&self, i: usize) -> Option<T> {
         assert!(i < self.len);
-        (*self.ptr.add(i)).take()
+        // SAFETY: in-bounds (asserted above); exclusive by the caller's
+        // one-claimant-per-index contract; backing vec alive per the contract.
+        unsafe { (*self.ptr.add(i)).take() }
     }
 
     /// # Safety
     /// As [`take`](Self::take).
     unsafe fn put(&self, i: usize, value: T) {
         assert!(i < self.len);
-        *self.ptr.add(i) = Some(value);
+        // SAFETY: as in `take`.
+        unsafe { *self.ptr.add(i) = Some(value) };
     }
 }
 
@@ -503,7 +520,9 @@ impl<T> SlotList<T> {
 /// The caller must not return (or otherwise invalidate `f`) until the batch
 /// built on the result has fully completed — see the [`Batch`] safety notes.
 unsafe fn erase_task_lifetime(f: &(dyn Fn(usize) + Sync)) -> &'static (dyn Fn(usize) + Sync) {
-    let erased: &'static (dyn Fn(usize) + Sync) = std::mem::transmute(f);
+    // SAFETY: a pure lifetime transmute on a fat reference (same layout both
+    // sides); the caller guarantees the referent outlives every use.
+    let erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
     erased
 }
 
@@ -532,7 +551,7 @@ pub fn global() -> &'static Arc<Executor> {
     GLOBAL.get_or_init(|| Arc::new(Executor::new(crate::util::default_threads())))
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
@@ -712,5 +731,79 @@ mod tests {
         assert_eq!(ExecMode::parse("nope"), None);
         assert_eq!(ExecMode::default(), ExecMode::Parked);
         assert_eq!(ExecMode::Parked.name(), "parked");
+    }
+}
+
+/// Loom models for the batch latch, the claim protocol, and the panic
+/// hand-off. Run with:
+///
+/// ```text
+/// cargo test --features loom --lib -- loom_model
+/// ```
+///
+/// Each body constructs its own tiny executor (width 2 = one parked worker
+/// plus the submitter) so the model stays within loom's thread budget; the
+/// vendored shim replays each body as a bounded stress loop instead (see
+/// `rust/vendor/loom`).
+#[cfg(all(test, feature = "loom"))]
+mod loom_model {
+    use super::*;
+
+    /// The done-latch: the submitter must observe every task's effects after
+    /// `run_indexed` returns, under every interleaving of claim order and
+    /// finish order (the AcqRel on `finished` plus the mutex hand-off is what
+    /// makes the Relaxed increments below visible).
+    #[test]
+    fn batch_latch_publishes_every_task_effect() {
+        loom::model(|| {
+            let exec = Executor::new(2);
+            let hits = AtomicUsize::new(0);
+            exec.run_indexed(3, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 3, "every task ran exactly once");
+        });
+    }
+
+    /// The park/unpark hand-off: with exactly one task per lane, whichever
+    /// side finishes last must wake the submitter — the `done_flag` mutex
+    /// guarantees the flag store and the condvar wait cannot miss each other.
+    #[test]
+    fn submitter_park_cannot_miss_the_last_finisher() {
+        loom::model(|| {
+            let exec = Executor::new(2);
+            let hits = AtomicUsize::new(0);
+            exec.run_indexed(2, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 2);
+        });
+    }
+
+    /// Panic capture and re-raise: under any interleaving, a panicking task
+    /// still counts toward the latch (the submitter is released, not hung),
+    /// the sibling task runs, the payload surfaces on the submitter, and the
+    /// pool survives for the next batch.
+    #[test]
+    fn panic_reraised_on_submitter_without_hanging_or_poisoning() {
+        loom::model(|| {
+            let exec = Executor::new(2);
+            let survivors = AtomicUsize::new(0);
+            let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                exec.run_indexed(2, |i| {
+                    if i == 0 {
+                        panic!("model boom");
+                    }
+                    survivors.fetch_add(1, Ordering::Relaxed);
+                });
+            }));
+            assert!(result.is_err(), "the panic must reach the submitter");
+            assert_eq!(survivors.load(Ordering::Relaxed), 1, "the sibling task still ran");
+            let hits = AtomicUsize::new(0);
+            exec.run_indexed(2, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 2, "pool usable after the panic");
+        });
     }
 }

@@ -20,6 +20,10 @@
 //! many cheap runs and few expensive merge passes is exactly the kind of
 //! hardware-dependent constant the paper's GA discovers empirically.
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): spill/merge I/O is built on safe std APIs only.
+#![forbid(unsafe_code)]
+
 pub mod merge;
 pub mod run_file;
 

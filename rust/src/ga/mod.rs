@@ -5,6 +5,10 @@
 //! 30, ~10 generations, uniform recombination with probability 0.7, uniform
 //! mutation with probability 0.3, elitism.
 
+// Enforced boundary of the unsafe audit surface (see README
+// “Correctness tooling”): the evolutionary search is pure safe Rust.
+#![forbid(unsafe_code)]
+
 pub mod fitness;
 pub mod individual;
 pub mod operators;

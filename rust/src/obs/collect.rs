@@ -24,7 +24,7 @@ use anyhow::Result;
 use super::event::TraceEvent;
 use super::jsonl::TraceLog;
 use super::Tracer;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{names, Metrics};
 
 /// Timeline retention bound: the hub keeps the most recent traces' events
 /// in memory (the JSONL log keeps everything). Oldest-keyed traces are
@@ -62,7 +62,7 @@ impl HubInner {
         if dropped > 0 {
             self.dropped.fetch_add(dropped, Ordering::Relaxed);
             if let Some(m) = &self.metrics {
-                m.add("trace.dropped", dropped);
+                m.add(names::TRACE_DROPPED, dropped);
             }
         }
         if !scratch.is_empty() {
@@ -156,7 +156,7 @@ impl TraceHub {
             return;
         }
         if let Some(m) = &self.inner.metrics {
-            m.add("trace.ingested", events.len() as u64);
+            m.add(names::TRACE_INGESTED, events.len() as u64);
         }
         self.inner.sink(events);
     }
@@ -259,7 +259,7 @@ mod tests {
         } // drop flushes the log
         let back = jsonl::read_events(&path).unwrap();
         assert_eq!(back.len(), 3);
-        assert_eq!(metrics.counter("trace.ingested"), 1);
+        assert_eq!(metrics.counter(names::TRACE_INGESTED), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -274,7 +274,7 @@ mod tests {
             tracer.emit(i, EventKind::Queued);
         }
         drop(hub); // joins the drainer: every drop delta is published
-        let dropped = metrics.counter("trace.dropped");
+        let dropped = metrics.counter(names::TRACE_DROPPED);
         assert!(dropped > 0, "an 8-slot ring cannot absorb 10k events");
         assert!(dropped < 10_000, "some events still flow");
     }

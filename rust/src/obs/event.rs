@@ -11,6 +11,8 @@
 
 use std::time::Instant;
 
+use crate::coordinator::metrics::names;
+
 /// The shard id the router stamps on its own events (`u32::MAX` — real
 /// shards are small indices). Rendered as `router` in the trace CLI.
 pub const ROUTER_SHARD: u32 = u32::MAX;
@@ -162,21 +164,23 @@ impl Phase {
         }
     }
 
-    /// The `Metrics` sample-window name: `kernel.<kernel>.<phase>`.
+    /// The `Metrics` sample-window name: `kernel.<kernel>.<phase>`,
+    /// resolved through the central [`names`] registry (one definition for
+    /// the span names, the bench phase tables, and the README).
     pub fn metric_name(self) -> &'static str {
         match self {
-            Phase::RadixMinMax => "kernel.radix.minmax",
-            Phase::RadixHistogram => "kernel.radix.histogram",
-            Phase::RadixScatter => "kernel.radix.scatter",
-            Phase::RadixCopyback => "kernel.radix.copyback",
-            Phase::MergeRunSort => "kernel.merge.run_sort",
-            Phase::MergeLevels => "kernel.merge.merge_levels",
-            Phase::SampleSplitters => "kernel.sample.sample",
-            Phase::SamplePartition => "kernel.sample.partition",
-            Phase::SampleBucketSort => "kernel.sample.bucket_sort",
-            Phase::ExtRunForm => "kernel.ext.run_form",
-            Phase::ExtSpill => "kernel.ext.spill",
-            Phase::ExtMerge => "kernel.ext.merge",
+            Phase::RadixMinMax => names::KERNEL_RADIX_MINMAX,
+            Phase::RadixHistogram => names::KERNEL_RADIX_HISTOGRAM,
+            Phase::RadixScatter => names::KERNEL_RADIX_SCATTER,
+            Phase::RadixCopyback => names::KERNEL_RADIX_COPYBACK,
+            Phase::MergeRunSort => names::KERNEL_MERGE_RUN_SORT,
+            Phase::MergeLevels => names::KERNEL_MERGE_MERGE_LEVELS,
+            Phase::SampleSplitters => names::KERNEL_SAMPLE_SAMPLE,
+            Phase::SamplePartition => names::KERNEL_SAMPLE_PARTITION,
+            Phase::SampleBucketSort => names::KERNEL_SAMPLE_BUCKET_SORT,
+            Phase::ExtRunForm => names::KERNEL_EXT_RUN_FORM,
+            Phase::ExtSpill => names::KERNEL_EXT_SPILL,
+            Phase::ExtMerge => names::KERNEL_EXT_MERGE,
         }
     }
 

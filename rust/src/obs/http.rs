@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{names, Metrics};
 
 /// Handle to the scrape server; dropping it shuts the listener down.
 pub struct MetricsServer {
@@ -119,8 +119,8 @@ mod tests {
     #[test]
     fn serves_prometheus_text_and_shuts_down() {
         let metrics = Arc::new(Metrics::new());
-        metrics.incr("jobs.completed");
-        metrics.set_gauge("router.queue.depth", 3.0);
+        metrics.incr(names::JOBS_COMPLETED);
+        metrics.set_gauge(names::ROUTER_QUEUE_DEPTH, 3.0);
         let server = MetricsServer::spawn("127.0.0.1:0", Arc::clone(&metrics)).expect("spawn");
         let addr = server.addr();
         let response = scrape(addr);
@@ -128,7 +128,7 @@ mod tests {
         assert!(response.contains("evosort_jobs_completed 1"), "{response}");
         assert!(response.contains("evosort_router_queue_depth 3"), "{response}");
         // Counters move between scrapes.
-        metrics.incr("jobs.completed");
+        metrics.incr(names::JOBS_COMPLETED);
         assert!(scrape(addr).contains("evosort_jobs_completed 2"));
         drop(server);
         assert!(

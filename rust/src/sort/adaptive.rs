@@ -296,9 +296,13 @@ impl AdaptiveSorter {
         scratch: &mut Vec<u64>,
         timer: &mut PhaseTimer,
     ) {
-        // SAFETY: f64 and u64 have identical size/alignment; every u64 bit
-        // pattern is a valid f64 and vice versa. The transforms are inverse
-        // bijections, so the slice always holds valid patterns.
+        debug_assert_eq!(std::mem::size_of::<f64>(), std::mem::size_of::<u64>());
+        debug_assert_eq!(std::mem::align_of::<f64>(), std::mem::align_of::<u64>());
+        debug_assert_eq!(data.as_ptr() as usize % std::mem::align_of::<u64>(), 0);
+        // SAFETY: f64 and u64 have identical size/alignment and every bit
+        // pattern is valid for both (guarded above in debug builds). The
+        // transforms are inverse bijections, so the slice always holds valid
+        // patterns.
         let bits: &mut [u64] =
             unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u64, data.len()) };
         self.executor().run_chunks(bits, self.threads, |_, chunk| {
@@ -351,18 +355,21 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn radix_branch() {
         let p = SortParams { algorithm: ACode::Radix, fallback_threshold: 100, ..Default::default() };
         check_i64(&generate_i64(20_000, Distribution::Uniform, 83, 2), &p);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn merge_branch() {
         let p = SortParams { algorithm: ACode::Merge, fallback_threshold: 100, ..Default::default() };
         check_i64(&generate_i64(20_000, Distribution::Uniform, 85, 2), &p);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn xla_code_without_backend_uses_merge() {
         let p = SortParams { algorithm: ACode::XlaTile, fallback_threshold: 100, ..Default::default() };
         check_i64(&generate_i64(10_000, Distribution::Uniform, 87, 2), &p);
@@ -390,6 +397,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn xla_tile_path_with_fake_backend() {
         let s = AdaptiveSorter::new(4).with_xla(std::sync::Arc::new(FakeTileSorter(256)));
         assert!(s.has_xla());
@@ -406,6 +414,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn explicit_executor_preserved_across_rebudget() {
         let exec = Arc::new(Executor::new(3));
         let s = AdaptiveSorter::new(2).with_executor(Arc::clone(&exec)).rebudget(4);
@@ -424,6 +433,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn paper_configs_sort_correctly() {
         for p in [SortParams::paper_1e7(), SortParams::paper_5e8()] {
             check_i64(&generate_i64(50_000, Distribution::Uniform, 91, 4), &p);
@@ -431,6 +441,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn u64_dispatch_all_branches() {
         let base: Vec<u64> = generate_i64(20_000, Distribution::Uniform, 94, 2)
             .iter()
@@ -452,6 +463,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn f64_dispatch_total_order_with_specials() {
         let mut base: Vec<f64> = generate_i64(20_000, Distribution::Gaussian, 96, 2)
             .iter()

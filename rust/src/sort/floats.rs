@@ -59,9 +59,13 @@ pub(crate) fn f64_from_key(k: u64) -> u64 {
 
 /// Sort f32s into `total_cmp` order with the parallel LSD radix sort.
 pub fn radix_sort_f32(data: &mut [f32], threads: usize) {
-    // SAFETY: f32 and u32 have identical size/alignment; every u32 bit
-    // pattern is a valid f32 and vice versa. The transforms below are
-    // inverse bijections, so the slice always holds valid patterns.
+    debug_assert_eq!(std::mem::size_of::<f32>(), std::mem::size_of::<u32>());
+    debug_assert_eq!(std::mem::align_of::<f32>(), std::mem::align_of::<u32>());
+    debug_assert_eq!(data.as_ptr() as usize % std::mem::align_of::<u32>(), 0);
+    // SAFETY: f32 and u32 have identical size/alignment and every bit
+    // pattern is valid for both (guarded above in debug builds). The
+    // transforms below are inverse bijections, so the slice always holds
+    // valid patterns.
     let bits: &mut [u32] =
         unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u32, data.len()) };
     crate::exec::parallel_for_chunks(bits, threads, |_, chunk| {
@@ -79,6 +83,9 @@ pub fn radix_sort_f32(data: &mut [f32], threads: usize) {
 
 /// Sort f64s into `total_cmp` order with the parallel LSD radix sort.
 pub fn radix_sort_f64(data: &mut [f64], threads: usize) {
+    debug_assert_eq!(std::mem::size_of::<f64>(), std::mem::size_of::<u64>());
+    debug_assert_eq!(std::mem::align_of::<f64>(), std::mem::align_of::<u64>());
+    debug_assert_eq!(data.as_ptr() as usize % std::mem::align_of::<u64>(), 0);
     // SAFETY: as above, for f64/u64.
     let bits: &mut [u64] =
         unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u64, data.len()) };
@@ -160,6 +167,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn sorts_random_f64() {
         let mut rng = Xoshiro256pp::seeded(404);
         let data: Vec<f64> = (0..50_000)
@@ -169,6 +177,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn sorts_random_f32() {
         let mut rng = Xoshiro256pp::seeded(405);
         let data: Vec<f32> = (0..50_000)

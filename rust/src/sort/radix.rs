@@ -91,12 +91,24 @@ impl RadixKey for u64 {
     }
 }
 
-/// Shared mutable scatter target. Safety: every writer thread owns a disjoint
-/// set of destination indices, guaranteed by the exclusive-prefix-sum offset
-/// construction (each (thread, bucket) pair gets a private, non-overlapping
-/// output range whose sizes are exactly that thread's bucket counts).
+/// Shared mutable scatter target: a raw pointer to the scratch (or data)
+/// buffer that every scatter task writes through concurrently.
+///
+/// The aliasing discipline is positional, not locked: each (thread, bucket)
+/// pair owns a private, non-overlapping destination interval produced by the
+/// exclusive prefix sum over the per-thread histograms, and a task only ever
+/// writes inside its own intervals. The buffer is allocated to full length
+/// before the batch, and the submitter keeps it alive while parked on the
+/// batch, so writes are always in-bounds into live memory.
 struct ScatterBuf<T>(*mut T);
+// SAFETY: sending the pointer moves `T: Send` payload writes to another
+// thread; the pointee buffer outlives the batch (owned by the parked
+// submitter), so the pointer never dangles on the receiving thread.
 unsafe impl<T: Send> Send for ScatterBuf<T> {}
+// SAFETY: concurrent `&ScatterBuf` use is write-only through disjoint
+// (thread, bucket) intervals per the prefix-sum construction above — no two
+// tasks write one index, and nobody reads until the batch completes, so no
+// `&T` is ever shared while writes are in flight.
 unsafe impl<T: Send> Sync for ScatterBuf<T> {}
 
 /// Sort `data` in place with the block-based LSD radix sort using up to
@@ -327,6 +339,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn negative_handling_i32() {
         let data = generate_i32(50_000, Distribution::Uniform, 41, 4);
         assert!(data.iter().any(|&x| x < 0), "workload must contain negatives");
@@ -338,6 +351,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn negative_handling_i64() {
         let data = generate_i64(50_000, Distribution::Uniform, 43, 4);
         assert!(data.iter().any(|&x| x < 0));
@@ -345,6 +359,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn unsigned_types() {
         let src = generate_i64(20_000, Distribution::Uniform, 45, 4);
         let u32s: Vec<u32> = src.iter().map(|&x| x as u32).collect();
@@ -363,6 +378,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn distributions_and_thread_counts() {
         for dist in [
             Distribution::Uniform,
@@ -408,6 +424,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn executor_variant_matches_std_sort() {
         let exec = crate::exec::Executor::new(3);
         let mut scratch = Vec::new();
@@ -420,6 +437,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn timed_variant_reports_radix_phases_only() {
         let exec = crate::exec::Executor::new(3);
         let mut timer = PhaseTimer::enabled();
@@ -441,6 +459,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn scratch_reuse() {
         let mut scratch = Vec::new();
         for seed in 0..5u64 {

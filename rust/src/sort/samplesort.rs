@@ -140,7 +140,12 @@ pub fn sample_sort_timed<T: Copy + Ord + Send + Sync + Default>(
     let temp = &mut scratch[..n];
     {
         struct Buf<T>(*mut T);
+        // SAFETY: the pointee (`temp`) is owned by this frame and outlives
+        // the batch below; sending the pointer only moves `T: Send` writes.
         unsafe impl<T: Send> Send for Buf<T> {}
+        // SAFETY: tasks write through disjoint (thread, bucket) cursor
+        // ranges from the exclusive prefix sum — no index is written twice
+        // and nothing reads `temp` until the batch completes.
         unsafe impl<T: Send> Sync for Buf<T> {}
         let dst = Buf(temp.as_mut_ptr());
         let cursors_ref = &cursors;
@@ -206,6 +211,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn random_inputs_cross_tunings() {
         let data = generate_i64(60_000, Distribution::Uniform, 71, 3);
         for buckets in [2usize, 8, 64] {
@@ -222,6 +228,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn skewed_and_adversarial() {
         let t = SampleSortTuning {
             sequential_threshold: 500,
@@ -253,6 +260,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn timed_variant_reports_sample_phases_only() {
         let exec = crate::exec::Executor::new(3);
         let t = SampleSortTuning { sequential_threshold: 1000, ..SampleSortTuning::for_threads(3) };
@@ -274,6 +282,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn explicit_executor_and_scratch_reuse() {
         let exec = crate::exec::Executor::new(3);
         let t = SampleSortTuning { sequential_threshold: 1000, ..SampleSortTuning::for_threads(3) };

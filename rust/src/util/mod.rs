@@ -2,10 +2,13 @@
 //!
 //! These are deliberately dependency-free (`std` only) — the offline build
 //! environment carries no `log`/`tracing`/`humantime` crates, and the needs of
-//! the framework are simple enough that a few hundred lines cover them.
+//! the framework are simple enough that a few hundred lines cover them. The
+//! one exception is [`sync`], which swaps `std` primitives for the `loom`
+//! model checker's doubles under `--features loom`.
 
 pub mod logging;
 pub mod stats;
+pub(crate) mod sync;
 pub mod timer;
 
 /// Format an element count like the paper does: `1e7`, `5e8`, `1e10`.

@@ -1,0 +1,71 @@
+//! Feature-switched synchronization primitives for model checking.
+//!
+//! The hand-rolled concurrent structures (`obs::ring::TraceRing`,
+//! `exec::Executor`) import their atomics, locks, and threads from this module
+//! instead of `std::sync` directly. In a normal build the re-exports below are
+//! exactly the `std` types with zero overhead. With `--features loom` they
+//! switch to the [`loom`] model checker's instrumented doubles, letting the
+//! `loom_model` test modules in those files explore thread interleavings:
+//!
+//! ```text
+//! cargo test --features loom --lib -- loom_model
+//! ```
+//!
+//! The vendored `loom` at `rust/vendor/loom` is an offline API-compatible shim
+//! (bounded stress loop instead of exhaustive permutation search) so the build
+//! never needs the network; pointing Cargo at the real crates.io `loom` makes
+//! every call site an exhaustive model check with no source changes.
+//!
+//! Two deliberate exceptions stay on `std` even under the feature:
+//! * `const`-initialized `static` counters (loom atomics cannot be `const`
+//!   constructed), e.g. `exec::THREAD_SPAWNS`;
+//! * the process-global executor behind `OnceLock` (loom types must not
+//!   outlive a single `model()` iteration).
+
+#[cfg(feature = "loom")]
+pub(crate) use loom::cell::UnsafeCell;
+#[cfg(feature = "loom")]
+pub(crate) use loom::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(feature = "loom")]
+pub(crate) use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(feature = "loom")]
+pub(crate) use loom::thread;
+
+#[cfg(not(feature = "loom"))]
+pub(crate) use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(feature = "loom"))]
+pub(crate) use std::sync::{Arc, Condvar, Mutex};
+#[cfg(not(feature = "loom"))]
+pub(crate) use std::thread;
+
+#[cfg(not(feature = "loom"))]
+mod cell {
+    /// `loom::cell::UnsafeCell`-shaped wrapper over [`std::cell::UnsafeCell`].
+    ///
+    /// Loom tracks every access to its `UnsafeCell` through the
+    /// `with`/`with_mut` closures to detect data races; the std build lowers
+    /// the same calls to plain pointer dereferences. Writing the accesses in
+    /// closure form once keeps the production path and the model path
+    /// byte-for-byte identical.
+    #[derive(Debug, Default)]
+    pub(crate) struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        pub(crate) fn new(value: T) -> Self {
+            Self(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Run `f` with a shared raw pointer to the contents.
+        pub(crate) fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with an exclusive raw pointer to the contents. The caller
+        /// upholds aliasing discipline exactly as with `UnsafeCell::get`.
+        pub(crate) fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+#[cfg(not(feature = "loom"))]
+pub(crate) use cell::UnsafeCell;

@@ -14,16 +14,10 @@ use evosort::data::{generate_i64, Distribution};
 use evosort::symbolic::SymbolicModel;
 
 fn autotuned_service() -> SortService {
-    SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 32,
-        // quick() = eager test policy: tiny observation thresholds, full CPU
-        // share, no noise margin (deterministic adaptation is under test).
-        autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
-        exec: Default::default(),
-        external: None,
-    })
+    // quick() = eager test policy: tiny observation thresholds, full CPU
+    // share, no noise margin (deterministic adaptation is under test).
+    let policy = AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() };
+    SortService::new(ServiceConfig::sized(2, 2, 32).with_autotune(policy))
 }
 
 #[test]
@@ -107,14 +101,7 @@ fn service_adapts_to_repeated_workload_shape() {
 
 #[test]
 fn autotune_off_means_no_tuner_metrics() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 8,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 8));
     assert!(!svc.autotuning());
     let data = generate_i64(20_000, Distribution::Uniform, 1, 2);
     let out = svc.submit_request(SortRequest::new(data)).wait().expect("job completed");
@@ -136,14 +123,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
 
     // First service lifetime: adapt and persist.
     {
-        let svc = SortService::new(ServiceConfig {
-            workers: 2,
-            sort_threads: 2,
-            queue_capacity: 32,
-            autotune: Some(policy.clone()),
-            exec: Default::default(),
-            external: None,
-        });
+        let svc = SortService::new(ServiceConfig::sized(2, 2, 32).with_autotune(policy.clone()));
         let deadline = Instant::now() + Duration::from_secs(120);
         let mut round = 0u64;
         while svc.cache().is_empty() && Instant::now() < deadline {
@@ -160,14 +140,7 @@ fn tuned_params_persist_and_restore_across_service_restarts() {
     assert!(path.exists(), "publishing must persist the versioned cache file");
 
     // Second lifetime: the tuned classes are restored at startup.
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 8,
-        autotune: Some(policy),
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 8).with_autotune(Some(policy)));
     assert!(
         !svc.cache().is_empty(),
         "restart must restore fingerprint-keyed params from disk"

@@ -10,14 +10,7 @@ use evosort::testkit::{check, Arbitrary, PropConfig};
 use evosort::util::timer;
 
 fn service(workers: usize) -> SortService {
-    SortService::new(ServiceConfig {
-        workers,
-        sort_threads: 2,
-        queue_capacity: 32,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    })
+    SortService::new(ServiceConfig::sized(workers, 2, 32))
 }
 
 #[test]

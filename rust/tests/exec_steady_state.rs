@@ -37,14 +37,7 @@ fn steady_state_sort_path_is_spawn_free_and_alloc_free() {
     // arena assertion deterministic: with several workers, one could sleep
     // through the whole warmup batch (its queue shard drains first) and
     // first-grow its thread-local arena mid-measurement. ----------------
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 32,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 32));
     assert!(!svc.tracer().is_enabled(), "the default service must not trace");
     // Warmup: first-sizes the worker's scratch arena and forces the
     // lazily-built global executor (data generation runs on it).

@@ -33,14 +33,10 @@ fn spill_dirs_left(root: &Path) -> usize {
 }
 
 fn external_service(budget: usize, root: &Path) -> SortService {
-    SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 64,
-        autotune: None,
-        exec: Default::default(),
-        external: Some(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
-    })
+    SortService::new(
+        ServiceConfig::sized(2, 2, 64)
+            .with_external(ExternalConfig::new(budget).with_spill_dir(root.to_path_buf())),
+    )
 }
 
 #[test]
@@ -162,16 +158,14 @@ fn spill_genes_tune_under_the_beyond_memory_class() {
 
     let root = spill_root("xm-tune");
     let budget = 512 * 1024;
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 32,
-        // quick() = eager test policy (tiny observation thresholds, no
-        // noise margin), as in the in-RAM adaptation test.
-        autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
-        exec: Default::default(),
-        external: Some(ExternalConfig::new(budget).with_spill_dir(root.clone())),
-    });
+    // quick() = eager test policy (tiny observation thresholds, no
+    // noise margin), as in the in-RAM adaptation test.
+    let policy = AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() };
+    let svc = SortService::new(
+        ServiceConfig::sized(2, 2, 32)
+            .with_autotune(policy)
+            .with_external(ExternalConfig::new(budget).with_spill_dir(root.clone())),
+    );
     let n = 120_000; // 960 KiB of i64 — every job escalates
     let dist = Distribution::Uniform;
     let xm = beyond_memory_label(&SortService::fingerprint_label(&data::generate_i64(n, dist, 0, 2)));

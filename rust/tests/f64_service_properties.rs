@@ -9,14 +9,7 @@ use evosort::data::{generate_i64, Distribution};
 use evosort::testkit::{check, PropConfig};
 
 fn service() -> SortService {
-    SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 16,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    })
+    SortService::new(ServiceConfig::sized(2, 2, 16))
 }
 
 /// Sort `data` through the service (validation on) and compare bit-exactly

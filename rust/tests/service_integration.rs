@@ -10,14 +10,7 @@ use evosort::params::SortParams;
 
 #[test]
 fn service_sorts_mixed_workloads_concurrently() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 3,
-        sort_threads: 2,
-        queue_capacity: 4,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(3, 2, 4));
     let workloads = [
         (Distribution::Uniform, "uniform"),
         (Distribution::Zipf, "zipf"),
@@ -48,14 +41,7 @@ fn service_sorts_mixed_workloads_concurrently() {
 #[test]
 fn backpressure_queue_smaller_than_jobs() {
     // queue_capacity 1 with 1 worker: submissions block but all complete.
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 1,
-        queue_capacity: 1,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 1, 1));
     let tickets: Vec<Ticket> = (0..8)
         .map(|i| {
             let data = generate_i64(30_000, Distribution::Uniform, i, 1);
@@ -72,14 +58,7 @@ fn backpressure_queue_smaller_than_jobs() {
 fn ticket_wait_timeout_on_queued_job() {
     // A single busy worker: a queued job's ticket times out while pending,
     // then resolves normally — no polling, no hang, no panic.
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 1,
-        queue_capacity: 8,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 1, 8));
     let tickets: Vec<Ticket> = (0..4)
         .map(|i| {
             let data = generate_i64(600_000, Distribution::Uniform, i, 1);
@@ -109,14 +88,7 @@ fn ticket_wait_timeout_on_queued_job() {
 
 #[test]
 fn tuning_cache_lifecycle_through_service() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 8,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 8));
 
     // Cold: symbolic model used.
     let data = generate_i64(400_000, Distribution::Uniform, 1, 2);
@@ -146,14 +118,7 @@ fn tuning_cache_lifecycle_through_service() {
 #[test]
 fn dtype_tagged_cache_entries_persist_and_restore() {
     // An f64 class round-trips the versioned text format with its dtype tag.
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 8,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 8));
     let floats: Vec<f64> =
         generate_i64(300_000, Distribution::Uniform, 3, 2).iter().map(|&x| x as f64).collect();
     let label = SortService::fingerprint_label_for(&floats);
@@ -172,14 +137,7 @@ fn dtype_tagged_cache_entries_persist_and_restore() {
 
 #[test]
 fn throughput_accounting() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 1,
-        queue_capacity: 8,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(2, 1, 8));
     let sizes = [10_000usize, 20_000, 30_000];
     for (i, &n) in sizes.iter().enumerate() {
         let data = generate_i64(n, Distribution::Uniform, i as u64, 1);

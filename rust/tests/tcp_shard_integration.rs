@@ -204,14 +204,7 @@ fn hostile_tcp_frames_error_without_hanging_the_worker() {
 
     let config = ShardWorkerConfig {
         shard_id: 0,
-        service: ServiceConfig {
-            workers: 1,
-            sort_threads: 1,
-            queue_capacity: 8,
-            autotune: None,
-            exec: Default::default(),
-            external: None,
-        },
+        service: ServiceConfig::sized(1, 1, 8),
         publish_interval: Duration::from_secs(60), // quiet ticker
     };
 

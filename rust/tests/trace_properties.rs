@@ -67,7 +67,7 @@ fn terminals_for(events: &[TraceEvent], trace: u64) -> Vec<&TraceEvent> {
 fn traced_batch_yields_exactly_one_terminal_per_job() {
     let tracer = Tracer::enabled(1 << 14, 0);
     let svc = SortService::new_traced(
-        ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 64, ..Default::default() },
+        ServiceConfig::sized(2, 2, 64),
         tracer.clone(),
     );
     let hub = TraceHub::new(tracer, None, Some(Arc::clone(svc.metrics()))).unwrap();
@@ -104,7 +104,7 @@ fn cancel_before_dispatch_terminates_as_exactly_one_cancelled() {
     // end in exactly one Failed{cancelled} with no Dispatched span.
     let tracer = Tracer::enabled(1 << 12, 0);
     let svc = SortService::new_traced(
-        ServiceConfig { workers: 1, sort_threads: 2, queue_capacity: 32, ..Default::default() },
+        ServiceConfig::sized(1, 2, 32),
         tracer.clone(),
     );
     let big = svc.submit_request(SortRequest::new(generate_i64(
@@ -152,7 +152,7 @@ fn flooded_tiny_ring_drops_events_but_never_stalls_sorts() {
     // not as blocking.
     let tracer = Tracer::enabled(8, 0);
     let svc = SortService::new_traced(
-        ServiceConfig { workers: 2, sort_threads: 2, queue_capacity: 64, ..Default::default() },
+        ServiceConfig::sized(2, 2, 64),
         tracer.clone(),
     );
     let requests: Vec<SortRequest> = (0..40u64)

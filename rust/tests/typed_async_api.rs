@@ -28,16 +28,10 @@ fn u64s_of(n: usize, seed: u64) -> Vec<u64> {
 
 #[test]
 fn f64_and_u64_batches_autotune_into_distinct_dtype_classes() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 32,
-        // quick() = eager test policy: tiny observation thresholds, full CPU
-        // share, no noise margin (deterministic adaptation is under test).
-        autotune: Some(AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() }),
-        exec: Default::default(),
-        external: None,
-    });
+    // quick() = eager test policy: tiny observation thresholds, full CPU
+    // share, no noise margin (deterministic adaptation is under test).
+    let policy = AutotunePolicy { generations_per_cycle: 2, ..AutotunePolicy::quick() };
+    let svc = SortService::new(ServiceConfig::sized(2, 2, 32).with_autotune(policy));
     let n = 30_000;
     let f64_label = SortService::fingerprint_label_for(&floats_of(n, 0));
     let u64_label = SortService::fingerprint_label_for(&u64s_of(n, 0));
@@ -93,14 +87,7 @@ fn streamed_batch_yields_first_result_before_last_job_completes() {
     // One worker: jobs run in submission order, so the tiny first job is
     // done while the big tail is still sorting. The stream must hand the
     // first result over at that point — the whole point of streaming.
-    let svc = SortService::new(ServiceConfig {
-        workers: 1,
-        sort_threads: 2,
-        queue_capacity: 16,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(1, 2, 16));
     let total = 7u64;
     let mut requests = vec![SortRequest::new(generate_i64(500, Distribution::Uniform, 0, 2))];
     for seed in 1..total {
@@ -124,14 +111,7 @@ fn streamed_batch_yields_first_result_before_last_job_completes() {
 
 #[test]
 fn mixed_dtype_batch_round_trips_with_per_dtype_stats() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 2,
-        queue_capacity: 16,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(2, 2, 16));
     let ints = generate_i64(40_000, Distribution::Zipf, 1, 2);
     let mut requests = vec![
         SortRequest::new(ints.clone()),
@@ -168,14 +148,7 @@ fn mixed_dtype_batch_round_trips_with_per_dtype_stats() {
 
 #[test]
 fn dropping_a_result_stream_does_not_lose_the_jobs() {
-    let svc = SortService::new(ServiceConfig {
-        workers: 2,
-        sort_threads: 1,
-        queue_capacity: 16,
-        autotune: None,
-        exec: Default::default(),
-        external: None,
-    });
+    let svc = SortService::new(ServiceConfig::sized(2, 1, 16));
     let requests: Vec<SortRequest> = (0..6u64)
         .map(|s| SortRequest::new(generate_i64(20_000, Distribution::Uniform, s, 1)))
         .collect();

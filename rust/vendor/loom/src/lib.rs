@@ -1,0 +1,130 @@
+//! Offline shim of the [loom](https://crates.io/crates/loom) model checker.
+//!
+//! The real loom replaces `std::sync` primitives with instrumented doubles
+//! and runs the test closure under **every** feasible thread interleaving
+//! (bounded by a preemption budget), turning heisenbug hunts into exhaustive
+//! proofs. This vendored stand-in keeps the *API surface* — `model()`,
+//! `sync::*`, `thread`, `cell::UnsafeCell` with its `with`/`with_mut` access
+//! protocol — but implements [`model`] as a bounded stress loop over the real
+//! `std` primitives, because the build environment has no registry access.
+//!
+//! That trade-off is deliberate and documented at the call sites: the model
+//! tests in `evosort` are written against loom's *stricter* API (all
+//! `UnsafeCell` traffic goes through closures, no `const` atomics, no
+//! `std::time` inside models), so pointing the workspace at the real
+//! crates.io loom upgrades every test to an exhaustive interleaving search
+//! with **zero source changes**:
+//!
+//! ```toml
+//! # rust/Cargo.toml
+//! loom = { version = "0.7", optional = true }   # instead of the path dep
+//! ```
+//!
+//! The stress loop still catches real bugs (it runs each closure many times
+//! with spawned OS threads and randomized-by-scheduler timing), it just
+//! cannot prove their absence the way the real checker can.
+
+/// Run `f` repeatedly as a bounded stress loop.
+///
+/// The real loom explores all interleavings; this shim re-runs the closure
+/// `LOOM_SHIM_ITERS` times (default 64) and lets the OS scheduler provide
+/// timing variation. Keep per-iteration work small, exactly as loom's own
+/// documentation demands of model bodies.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let iters: usize = std::env::var("LOOM_SHIM_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    for _ in 0..iters {
+        f();
+    }
+}
+
+pub mod sync {
+    pub use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard, RwLock};
+
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+        };
+    }
+}
+
+pub mod thread {
+    pub use std::thread::{current, park, spawn, yield_now, Builder, JoinHandle};
+}
+
+pub mod hint {
+    pub use std::hint::spin_loop;
+}
+
+pub mod cell {
+    /// Mirror of `loom::cell::UnsafeCell`: all access goes through closures
+    /// receiving raw pointers, which is what lets the real loom intercept and
+    /// race-check every read and write. Here the closures lower to plain
+    /// `std::cell::UnsafeCell::get` calls.
+    #[derive(Debug, Default)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        pub fn new(value: T) -> Self {
+            Self(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Run `f` with a shared raw pointer to the contents.
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with an exclusive raw pointer to the contents.
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cell::UnsafeCell;
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::Arc;
+
+    #[test]
+    fn model_runs_the_closure_multiple_times() {
+        static RUNS: AtomicUsize = AtomicUsize::new(0);
+        super::model(|| {
+            RUNS.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(RUNS.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn unsafe_cell_round_trips_through_closures() {
+        let cell = UnsafeCell::new(41u32);
+        // SAFETY: single-threaded test, no aliasing access in flight.
+        cell.with_mut(|p| unsafe { *p += 1 });
+        // SAFETY: as above.
+        let read = cell.with(|p| unsafe { *p });
+        assert_eq!(read, 42);
+        assert_eq!(cell.into_inner(), 42);
+    }
+
+    #[test]
+    fn model_closures_can_spawn_threads() {
+        super::model(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = Arc::clone(&n);
+            let h = super::thread::spawn(move || n2.fetch_add(1, Ordering::SeqCst));
+            n.fetch_add(1, Ordering::SeqCst);
+            h.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+}

@@ -1,0 +1,1049 @@
+//! `cargo xtask lint` — the repo-native invariant linter.
+//!
+//! The compiler proves types; this tool proves the cross-file naming and
+//! protocol invariants nothing in rustc's lattice can see:
+//!
+//! 1. **Metric-name registry** — production code never spells a metric name
+//!    as a string literal; every series name flows through
+//!    `coordinator::metrics::names`. (Test modules may use literals — that
+//!    is what pins the registry's values.)
+//! 2. **Phase table coherence** — the `obs::event::Phase` enum, the
+//!    `names::KERNEL_PHASES` span-name table, and the phase keys in
+//!    committed `BENCH_*.json` reports all describe the same set of kernel
+//!    phases (dense discriminants, `kernel.`-prefixed names, one registry
+//!    const per variant).
+//! 3. **Frame-tag discipline** — the shard protocol's `TAG_*` constants are
+//!    unique and dense, so a new frame type cannot shadow or skip a wire
+//!    tag.
+//! 4. **Knob parity** — every `[service]` config key is mirrored by a serve
+//!    CLI flag and documented in the README knob table, and vice versa.
+//! 5. **Sanctioned construction** — `ServiceConfig` struct literals exist
+//!    only in `coordinator/service.rs`; everything else goes through the
+//!    builder, so adding a field cannot silently default at stray sites.
+//! 6. **Bench report schema** — committed `BENCH_*.json` files carry a known
+//!    `schema` version, and their Prometheus-facing names in the README
+//!    match the registry's sanitized forms.
+//!
+//! Exit status 0 = clean, 1 = violations (printed one per line), 2 = usage.
+//! Pure `std`: the checks are line/token-oriented text analysis over a
+//! comment-and-string-aware mask of the sources, so no `syn` stack is
+//! needed and the tool builds offline.
+
+#![forbid(unsafe_code)]
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let violations = run_lint(&repo_root());
+            if violations.is_empty() {
+                println!("xtask lint: all invariants hold");
+                ExitCode::SUCCESS
+            } else {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                eprintln!("xtask lint: {} violation(s)", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask sits in the workspace").into()
+}
+
+/// Run every check against the real tree; returns all violations.
+fn run_lint(root: &Path) -> Vec<String> {
+    let mut v = Vec::new();
+    let read = |rel: &str| -> String {
+        std::fs::read_to_string(root.join(rel))
+            .unwrap_or_else(|e| panic!("xtask lint: cannot read {rel}: {e}"))
+    };
+
+    // Per-file source rules over the crate, the examples, and the benches.
+    let mut files: Vec<PathBuf> = Vec::new();
+    rs_files(&root.join("rust/src"), &mut files);
+    rs_files(&root.join("rust/benches"), &mut files);
+    rs_files(&root.join("examples"), &mut files);
+    files.sort();
+    for f in &files {
+        let rel = f.strip_prefix(root).unwrap_or(f).display().to_string();
+        let text = std::fs::read_to_string(f)
+            .unwrap_or_else(|e| panic!("xtask lint: cannot read {rel}: {e}"));
+        if !rel.ends_with("coordinator/metrics/names.rs") {
+            v.extend(find_metric_literals(&rel, &text));
+        }
+        if !rel.ends_with("coordinator/service.rs") {
+            v.extend(find_service_config_literals(&rel, &text));
+        }
+    }
+
+    let names_src = read("rust/src/coordinator/metrics/names.rs");
+    let event_src = read("rust/src/obs/event.rs");
+    v.extend(check_phase_registry(&names_src, &event_src));
+    v.extend(check_frame_tags(
+        "rust/src/coordinator/shard/protocol.rs",
+        &read("rust/src/coordinator/shard/protocol.rs"),
+    ));
+
+    let readme = read("README.md");
+    let cli_all = read("rust/src/cli/mod.rs") + &read("rust/src/cli/commands.rs");
+    v.extend(check_service_knob_parity(&read("rust/src/config/run.rs"), &readme, &cli_all));
+    v.extend(check_readme_metric_names(&readme, &registry_prometheus_forms(&names_src)));
+
+    // Committed bench reports: known schema, phase keys from the registry.
+    let phases = parse_str_array(&names_src, "KERNEL_PHASES").unwrap_or_default();
+    let mut reports: Vec<PathBuf> = std::fs::read_dir(root)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            name.starts_with("BENCH_") && name.ends_with(".json")
+        })
+        .collect();
+    reports.sort();
+    for r in &reports {
+        let rel = r.strip_prefix(root).unwrap_or(r).display().to_string();
+        let text = std::fs::read_to_string(r)
+            .unwrap_or_else(|e| panic!("xtask lint: cannot read {rel}: {e}"));
+        v.extend(check_bench_report(&rel, &text, &phases));
+    }
+    v
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            // The vendored shims are excluded from first-party rules.
+            if p.file_name().is_some_and(|n| n == "vendor") {
+                continue;
+            }
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source masking: comment- and string-aware views of a Rust file.
+// ---------------------------------------------------------------------------
+
+/// Byte-preserving masks of one source file. Offsets (and therefore line
+/// numbers) are identical to the original in every view.
+struct Mask {
+    /// Comments blanked to spaces; string contents kept.
+    code: String,
+    /// Comments *and* string/char contents blanked; quotes kept. Safe for
+    /// brace matching and identifier scans.
+    bare: String,
+}
+
+impl Mask {
+    fn of(src: &str) -> Mask {
+        let b = src.as_bytes();
+        let mut code = Vec::with_capacity(b.len());
+        let mut bare = Vec::with_capacity(b.len());
+        let blank = |v: &mut Vec<u8>, c: u8| v.push(if c == b'\n' { b'\n' } else { b' ' });
+        let mut i = 0;
+        while i < b.len() {
+            let c = b[i];
+            match c {
+                b'/' if b.get(i + 1) == Some(&b'/') => {
+                    while i < b.len() && b[i] != b'\n' {
+                        blank(&mut code, b[i]);
+                        blank(&mut bare, b[i]);
+                        i += 1;
+                    }
+                }
+                b'/' if b.get(i + 1) == Some(&b'*') => {
+                    let mut depth = 0usize;
+                    while i < b.len() {
+                        if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                            depth += 1;
+                            blank(&mut code, b[i]);
+                            blank(&mut bare, b[i]);
+                            i += 1;
+                        } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                            depth -= 1;
+                            blank(&mut code, b[i]);
+                            blank(&mut bare, b[i]);
+                            blank(&mut code, b[i + 1]);
+                            blank(&mut bare, b[i + 1]);
+                            i += 2;
+                            if depth == 0 {
+                                break;
+                            }
+                            continue;
+                        }
+                        blank(&mut code, b[i]);
+                        blank(&mut bare, b[i]);
+                        i += 1;
+                    }
+                }
+                b'r' if matches!(b.get(i + 1), Some(b'"') | Some(b'#'))
+                    && !prev_is_ident(b, i) =>
+                {
+                    // Raw string r"…" / r#"…"# (any hash count).
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while b.get(j) == Some(&b'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) != Some(&b'"') {
+                        // `r#ident` raw identifier, not a string.
+                        code.push(c);
+                        bare.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    for &byte in &b[i..=j] {
+                        code.push(byte);
+                        bare.push(byte);
+                    }
+                    i = j + 1;
+                    loop {
+                        if i >= b.len() {
+                            break;
+                        }
+                        if b[i] == b'"' && (0..hashes).all(|h| b.get(i + 1 + h) == Some(&b'#')) {
+                            for &byte in &b[i..=i + hashes] {
+                                code.push(byte);
+                                bare.push(byte);
+                            }
+                            i += hashes + 1;
+                            break;
+                        }
+                        code.push(b[i]);
+                        blank(&mut bare, b[i]);
+                        i += 1;
+                    }
+                }
+                b'"' => {
+                    code.push(c);
+                    bare.push(c);
+                    i += 1;
+                    while i < b.len() {
+                        if b[i] == b'\\' {
+                            code.push(b[i]);
+                            blank(&mut bare, b[i]);
+                            if i + 1 < b.len() {
+                                code.push(b[i + 1]);
+                                blank(&mut bare, b[i + 1]);
+                            }
+                            i += 2;
+                            continue;
+                        }
+                        if b[i] == b'"' {
+                            code.push(b[i]);
+                            bare.push(b[i]);
+                            i += 1;
+                            break;
+                        }
+                        code.push(b[i]);
+                        blank(&mut bare, b[i]);
+                        i += 1;
+                    }
+                }
+                b'\'' => {
+                    // Char literal vs lifetime: 'x' / '\…' are literals,
+                    // anything else ('a in types) is a lifetime tick.
+                    if b.get(i + 1) == Some(&b'\\') {
+                        code.push(c);
+                        bare.push(c);
+                        i += 1;
+                        while i < b.len() && b[i] != b'\'' {
+                            code.push(b[i]);
+                            blank(&mut bare, b[i]);
+                            if b[i] == b'\\' && i + 1 < b.len() {
+                                code.push(b[i + 1]);
+                                blank(&mut bare, b[i + 1]);
+                                i += 2;
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        if i < b.len() {
+                            code.push(b'\'');
+                            bare.push(b'\'');
+                            i += 1;
+                        }
+                    } else if b.get(i + 2) == Some(&b'\'') {
+                        code.push(c);
+                        bare.push(c);
+                        code.push(b[i + 1]);
+                        blank(&mut bare, b[i + 1]);
+                        code.push(b'\'');
+                        bare.push(b'\'');
+                        i += 3;
+                    } else {
+                        code.push(c);
+                        bare.push(c);
+                        i += 1;
+                    }
+                }
+                _ => {
+                    code.push(c);
+                    bare.push(c);
+                    i += 1;
+                }
+            }
+        }
+        let fix = |v: Vec<u8>| String::from_utf8(v).expect("mask preserves UTF-8");
+        Mask { code: fix(code), bare: fix(bare) }
+    }
+
+    /// The `code` view with every `#[cfg(test)]` / `#[cfg(all(test, …))]`
+    /// module body blanked out (test code may use metric-name literals —
+    /// that is how the registry's values get pinned).
+    fn code_without_test_mods(&self) -> String {
+        let mut out = self.code.clone().into_bytes();
+        let bare = self.bare.as_bytes();
+        for needle in ["#[cfg(test)]", "#[cfg(all(test"] {
+            let mut from = 0;
+            while let Some(p) = self.bare[from..].find(needle) {
+                let start = from + p;
+                // Find the block the attribute guards and blank it wholly.
+                let Some(open_rel) = self.bare[start..].find('{') else { break };
+                let open = start + open_rel;
+                let mut depth = 0usize;
+                let mut end = bare.len();
+                for (k, &c) in bare.iter().enumerate().skip(open) {
+                    if c == b'{' {
+                        depth += 1;
+                    } else if c == b'}' {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = k + 1;
+                            break;
+                        }
+                    }
+                }
+                for item in out.iter_mut().take(end).skip(start) {
+                    if *item != b'\n' {
+                        *item = b' ';
+                    }
+                }
+                from = end;
+            }
+        }
+        String::from_utf8(out).expect("blanking preserves UTF-8")
+    }
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+fn line_of(s: &str, byte_pos: usize) -> usize {
+    s.as_bytes()[..byte_pos].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: no metric-name string literals in production code.
+// ---------------------------------------------------------------------------
+
+/// Metrics-API calls whose first argument names a series. A string literal
+/// in that position bypasses the registry.
+const METRIC_CALLS: [&str; 10] = [
+    ".incr(\"",
+    ".add(\"",
+    ".observe(\"",
+    ".observe_sample(\"",
+    ".set_gauge(\"",
+    ".counter(\"",
+    ".counter_ratio(\"",
+    ".gauge(\"",
+    ".latency(\"",
+    ".percentile(\"",
+];
+
+fn find_metric_literals(label: &str, src: &str) -> Vec<String> {
+    let code = Mask::of(src).code_without_test_mods();
+    let mut out = Vec::new();
+    for pat in METRIC_CALLS {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(pat) {
+            let at = from + p;
+            out.push(format!(
+                "{label}:{}: metric name spelled as a literal ({}\"…\")) — route it through \
+                 coordinator::metrics::names",
+                line_of(&code, at),
+                &pat[..pat.len() - 1],
+            ));
+            from = at + pat.len();
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: Phase enum ↔ KERNEL_PHASES span table coherence.
+// ---------------------------------------------------------------------------
+
+/// Parse `pub const NAME: [&str; N] = [..];` → entries. Elements may be
+/// string literals or idents of `pub const X: &str = "…";` constants
+/// declared in the same file (the registry's style). Returns None if the
+/// array is absent; unresolvable idents resolve to `"<ident>?"` so the
+/// caller's comparisons fail loudly instead of silently shrinking.
+fn parse_str_array(src: &str, name: &str) -> Option<Vec<String>> {
+    let needle = format!("pub const {name}: [&str; ");
+    let start = src.find(&needle)?;
+    let open = start + src[start..].find('[')?;
+    let close_ty = open + src[open..].find(']')?;
+    let body_open = close_ty + src[close_ty..].find('[')?;
+    let body_close = body_open + src[body_open..].find(']')?;
+    let mut entries = Vec::new();
+    for tok in src[body_open + 1..body_close].split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue; // trailing comma
+        }
+        if let Some(lit) = tok.strip_prefix('"') {
+            entries.push(lit.trim_end_matches('"').to_string());
+        } else {
+            let decl = format!("pub const {tok}: &str = \"");
+            match src.find(&decl) {
+                Some(p) => {
+                    let val = &src[p + decl.len()..];
+                    entries.push(val[..val.find('"')?].to_string());
+                }
+                None => entries.push(format!("{tok}?")),
+            }
+        }
+    }
+    Some(entries)
+}
+
+fn check_phase_registry(names_src: &str, event_src: &str) -> Vec<String> {
+    let mut v = Vec::new();
+    let names_label = "rust/src/coordinator/metrics/names.rs";
+    let event_label = "rust/src/obs/event.rs";
+
+    let Some(phases) = parse_str_array(names_src, "KERNEL_PHASES") else {
+        return vec![format!("{names_label}: KERNEL_PHASES table not found")];
+    };
+    let declared: Option<usize> = names_src
+        .split("pub const KERNEL_PHASES: [&str; ")
+        .nth(1)
+        .and_then(|r| r.split(']').next())
+        .and_then(|n| n.trim().parse().ok());
+    if declared != Some(phases.len()) {
+        v.push(format!(
+            "{names_label}: KERNEL_PHASES declared arity {declared:?} != {} entries",
+            phases.len()
+        ));
+    }
+    let unique: BTreeSet<&String> = phases.iter().collect();
+    if unique.len() != phases.len() {
+        v.push(format!("{names_label}: KERNEL_PHASES entries are not unique"));
+    }
+    for p in &phases {
+        if !p.starts_with("kernel.") {
+            v.push(format!("{names_label}: phase span {p:?} must start with \"kernel.\""));
+        }
+    }
+
+    // Phase enum: dense discriminants 0..N, COUNT == N, one registry const
+    // per variant in metric_name().
+    let bare = Mask::of(event_src).bare;
+    let mut discs = Vec::new();
+    if let Some(enum_start) = bare.find("pub enum Phase") {
+        if let Some(open_rel) = bare[enum_start..].find('{') {
+            let open = enum_start + open_rel;
+            if let Some(close_rel) = bare[open..].find('}') {
+                for line in bare[open + 1..open + close_rel].lines() {
+                    let t = line.trim().trim_end_matches(',');
+                    if let Some((ident, disc)) = t.split_once('=') {
+                        let ident = ident.trim();
+                        if ident.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                            match disc.trim().parse::<usize>() {
+                                Ok(d) => discs.push(d),
+                                Err(_) => v.push(format!(
+                                    "{event_label}: Phase::{ident} needs an explicit integer \
+                                     discriminant"
+                                )),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if discs.is_empty() {
+        v.push(format!("{event_label}: Phase enum with explicit discriminants not found"));
+        return v;
+    }
+    let expect: Vec<usize> = (0..discs.len()).collect();
+    if discs != expect {
+        v.push(format!("{event_label}: Phase discriminants {discs:?} are not dense from 0"));
+    }
+    if discs.len() != phases.len() {
+        v.push(format!(
+            "{event_label}: Phase has {} variants but KERNEL_PHASES lists {}",
+            discs.len(),
+            phases.len()
+        ));
+    }
+    let count: Option<usize> = event_src
+        .split("pub const COUNT: usize = ")
+        .nth(1)
+        .and_then(|r| r.split(';').next())
+        .and_then(|n| n.trim().parse().ok());
+    if count != Some(discs.len()) {
+        v.push(format!(
+            "{event_label}: Phase::COUNT is {count:?} but the enum has {} variants",
+            discs.len()
+        ));
+    }
+    let mut kernel_consts: BTreeSet<String> = BTreeSet::new();
+    let event_code = Mask::of(event_src).code; // comments may cite consts freely
+    let mut rest = event_code.as_str();
+    while let Some(p) = rest.find("names::KERNEL_") {
+        let tail = &rest[p + "names::".len()..];
+        let end =
+            tail.find(|c: char| !(c.is_ascii_alphanumeric() || c == '_')).unwrap_or(tail.len());
+        kernel_consts.insert(tail[..end].to_string());
+        rest = &tail[end..];
+    }
+    kernel_consts.remove("KERNEL_PHASES");
+    if kernel_consts.len() != discs.len() {
+        v.push(format!(
+            "{event_label}: metric_name() references {} distinct names::KERNEL_* consts for {} \
+             variants",
+            kernel_consts.len(),
+            discs.len()
+        ));
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: protocol frame tags unique and dense.
+// ---------------------------------------------------------------------------
+
+fn check_frame_tags(label: &str, src: &str) -> Vec<String> {
+    let mut v = Vec::new();
+    let mut tags: Vec<(String, u64)> = Vec::new();
+    for line in Mask::of(src).bare.lines() {
+        let t = line.trim();
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        let Some(rest) = t.strip_prefix("const TAG_") else { continue };
+        let Some((name, rhs)) = rest.split_once(':') else { continue };
+        let Some(value) = rhs.split('=').nth(1) else { continue };
+        match value.trim().trim_end_matches(';').parse::<u64>() {
+            Ok(n) => tags.push((format!("TAG_{name}"), n)),
+            Err(_) => v.push(format!("{label}: cannot parse tag value in {t:?}")),
+        }
+    }
+    if tags.is_empty() {
+        return vec![format!("{label}: no TAG_* frame tags found")];
+    }
+    let mut seen = BTreeSet::new();
+    for (name, n) in &tags {
+        if !seen.insert(n) {
+            v.push(format!("{label}: duplicate frame tag value {n} at {name}"));
+        }
+    }
+    let max = tags.iter().map(|&(_, n)| n).max().unwrap_or(0);
+    let want: BTreeSet<u64> = (1..=max).collect();
+    let missing: Vec<u64> = want.difference(&seen).copied().collect();
+    if !missing.is_empty() {
+        v.push(format!("{label}: frame tags are not dense — missing {missing:?} below {max}"));
+    }
+    if seen.contains(&0) {
+        v.push(format!("{label}: tag 0 is reserved (uninitialised frame guard)"));
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: [service] keys ↔ serve CLI flags ↔ README knob table.
+// ---------------------------------------------------------------------------
+
+fn parse_service_keys(run_src: &str) -> BTreeSet<String> {
+    // Every typed lookup is `doc.<kind>("service", "<key>", …)`.
+    let mut keys = BTreeSet::new();
+    let code = &Mask::of(run_src).code;
+    let mut rest = code.as_str();
+    while let Some(p) = rest.find("\"service\", \"") {
+        let after = &rest[p + "\"service\", \"".len()..];
+        if let Some(q) = after.find('"') {
+            keys.insert(after[..q].to_string());
+            rest = &after[q..];
+        } else {
+            break;
+        }
+    }
+    keys
+}
+
+fn parse_readme_knob_keys(readme: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut in_table = false;
+    for line in readme.lines() {
+        let t = line.trim();
+        if t.starts_with("| Key | Default |") {
+            in_table = true;
+            continue;
+        }
+        if in_table {
+            if !t.starts_with('|') {
+                in_table = false;
+                continue;
+            }
+            if t.starts_with("|---") {
+                continue;
+            }
+            if let Some(cell) = t.trim_start_matches('|').split('|').next() {
+                let key = cell.trim().trim_matches('`');
+                if !key.is_empty() {
+                    keys.insert(key.to_string());
+                }
+            }
+        }
+    }
+    keys
+}
+
+fn check_service_knob_parity(run_src: &str, readme: &str, cli_src: &str) -> Vec<String> {
+    let mut v = Vec::new();
+    let keys = parse_service_keys(run_src);
+    if keys.is_empty() {
+        return vec![
+            "rust/src/config/run.rs: no [service] keys found (lookup pattern drifted?)".into(),
+        ];
+    }
+    let readme_keys = parse_readme_knob_keys(readme);
+    if readme_keys.is_empty() {
+        return vec!["README.md: `| Key | Default |` service knob table not found".into()];
+    }
+    for key in &keys {
+        if !readme_keys.contains(key) {
+            v.push(format!(
+                "README.md: [service] key `{key}` is missing from the service knob table"
+            ));
+        }
+        let flag = key.replace('_', "-");
+        if !cli_src.contains(&format!("\"{flag}\"")) && !cli_src.contains(&format!("--{flag}")) {
+            v.push(format!(
+                "rust/src/cli: [service] key `{key}` has no matching `--{flag}` serve flag"
+            ));
+        }
+    }
+    for key in &readme_keys {
+        if !keys.contains(key) {
+            v.push(format!(
+                "README.md: knob table lists `{key}` which is not a [service] key in \
+                 config/run.rs"
+            ));
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: ServiceConfig struct literals only in coordinator/service.rs.
+// ---------------------------------------------------------------------------
+
+fn find_service_config_literals(label: &str, src: &str) -> Vec<String> {
+    // Applies to tests too: the builder (`ServiceConfig::sized` + `with_*`)
+    // is the only sanctioned construction outside service.rs.
+    let bare = &Mask::of(src).bare;
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = bare[from..].find("ServiceConfig") {
+        let at = from + p;
+        from = at + "ServiceConfig".len();
+        if prev_is_ident(bare.as_bytes(), at) {
+            continue; // ShardWorkerServiceConfig etc.
+        }
+        // Type positions (`-> ServiceConfig {`, `impl ServiceConfig {`,
+        // `impl Default for ServiceConfig {`) are not struct literals.
+        let before = bare[..at].trim_end();
+        if before.ends_with("->") || before.ends_with("impl") || before.ends_with("for") {
+            continue;
+        }
+        let tail = bare[from..].trim_start();
+        if tail.starts_with('{') {
+            out.push(format!(
+                "{label}:{}: `ServiceConfig {{ … }}` struct literal — construct through \
+                 ServiceConfig::sized()/with_*() so new fields cannot silently default here",
+                line_of(bare, at),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: bench report schema + README Prometheus names.
+// ---------------------------------------------------------------------------
+
+const KNOWN_BENCH_SCHEMAS: [&str; 2] = ["evosort-bench-v1", "evosort-bench-v2"];
+
+fn check_bench_report(label: &str, json: &str, kernel_phases: &[String]) -> Vec<String> {
+    let mut v = Vec::new();
+    let schema = json
+        .split("\"schema\"")
+        .nth(1)
+        .and_then(|r| r.split('"').nth(1))
+        .map(str::to_string);
+    match schema {
+        None => v.push(format!("{label}: no \"schema\" field")),
+        Some(s) if !KNOWN_BENCH_SCHEMAS.contains(&s.as_str()) => {
+            v.push(format!("{label}: unknown schema {s:?} (known: {KNOWN_BENCH_SCHEMAS:?})"));
+        }
+        Some(_) => {}
+    }
+    // Any per-phase timing keys must come from the span-name table.
+    let mut rest = json;
+    while let Some(p) = rest.find("\"phases\"") {
+        let after = &rest[p + "\"phases\"".len()..];
+        let Some(open) = after.find('{') else { break };
+        let Some(close) = after[open..].find('}') else { break };
+        let body = &after[open + 1..open + close];
+        let mut b = body;
+        while let Some(q) = b.find('"') {
+            let tail = &b[q + 1..];
+            let Some(q2) = tail.find('"') else { break };
+            let key = &tail[..q2];
+            let after_key = tail[q2 + 1..].trim_start();
+            if after_key.starts_with(':') && !kernel_phases.iter().any(|k| k == key) {
+                v.push(format!(
+                    "{label}: phase key {key:?} is not in names::KERNEL_PHASES"
+                ));
+            }
+            b = &tail[q2 + 1..];
+        }
+        rest = &after[open + close..];
+    }
+    v
+}
+
+/// All static registry names, in their Prometheus-sanitized (`evosort_*`)
+/// forms — what the README metrics table is allowed to mention.
+fn registry_prometheus_forms(names_src: &str) -> BTreeSet<String> {
+    let mut forms = BTreeSet::new();
+    let code = &Mask::of(names_src).code;
+    let mut rest = code.as_str();
+    while let Some(p) = rest.find(": &str = \"") {
+        let after = &rest[p + ": &str = \"".len()..];
+        let Some(q) = after.find('"') else { break };
+        let name = &after[..q];
+        if !name.contains("{}") {
+            forms.insert(prometheus_form(name));
+        }
+        rest = &after[q..];
+    }
+    forms
+}
+
+/// Mirror of `metrics::prometheus_name` (kept in lockstep by the metrics
+/// unit tests pinning the same examples).
+fn prometheus_form(name: &str) -> String {
+    let mut out = String::from("evosort_");
+    out.extend(name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }));
+    out
+}
+
+fn check_readme_metric_names(readme: &str, registry: &BTreeSet<String>) -> Vec<String> {
+    let mut v = Vec::new();
+    for (idx, line) in readme.lines().enumerate() {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let mut rest = line;
+        while let Some(p) = rest.find("`evosort_") {
+            let token_start = &rest[p + 1..];
+            let Some(close) = token_start.find('`') else { break };
+            let token = &token_start[..close];
+            // Pattern rows (`evosort_kernel_<kernel>_<phase>`) are schemas,
+            // not literal series names.
+            if !token.contains('<') && !registry.contains(token) {
+                v.push(format!(
+                    "README.md:{}: metrics table names {token:?} which no registry entry \
+                     sanitizes to",
+                    idx + 1
+                ));
+            }
+            rest = &token_start[close..];
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: each rule must catch a seeded violation of its class and
+// stay quiet on the conforming shape.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_literal_in_production_code_is_caught() {
+        let bad = r#"
+            fn publish(m: &Metrics) {
+                m.incr("jobs.completed");
+                m.set_gauge("router.queue_depth", 3.0);
+            }
+        "#;
+        let hits = find_metric_literals("fixture.rs", bad);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert!(hits[0].contains("fixture.rs:3"));
+    }
+
+    #[test]
+    fn metric_literal_in_tests_comments_or_strings_is_allowed() {
+        let ok = r#"
+            fn publish(m: &Metrics) {
+                m.incr(names::JOBS_COMPLETED);
+                // a comment may say m.incr("jobs.completed") freely
+                let msg = "call m.incr(\"jobs.completed\") here";
+            }
+            #[cfg(test)]
+            mod tests {
+                fn pins_registry(m: &Metrics) {
+                    m.incr("jobs.completed");
+                    assert_eq!(m.counter("jobs.completed"), 1);
+                }
+            }
+        "#;
+        assert!(find_metric_literals("fixture.rs", ok).is_empty());
+        let gated = r#"
+            #[cfg(all(test, feature = "loom"))]
+            mod loom_tests {
+                fn pins(m: &Metrics) { m.incr("trace.dropped"); }
+            }
+        "#;
+        assert!(find_metric_literals("fixture.rs", gated).is_empty());
+    }
+
+    #[test]
+    fn service_config_struct_literal_is_caught_everywhere() {
+        let bad = r#"
+            fn build() -> ServiceConfig {
+                ServiceConfig { workers: 2, ..ServiceConfig::default() }
+            }
+            #[cfg(test)]
+            mod tests {
+                fn also_in_tests() {
+                    let _ = ServiceConfig { workers: 1, ..Default::default() };
+                }
+            }
+        "#;
+        let hits = find_service_config_literals("fixture.rs", bad);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+    }
+
+    #[test]
+    fn sanctioned_builder_calls_and_type_positions_are_allowed() {
+        let ok = r#"
+            fn build() -> ServiceConfig {
+                ServiceConfig::sized(2, 4, 64).with_exec(ExecMode::Parked)
+            }
+            impl ServiceConfig {
+                fn tweak(self) -> ServiceConfig {
+                    self
+                }
+            }
+            impl Default for ServiceConfig {
+                fn default() -> ServiceConfig {
+                    ServiceConfig::sized(1, 1, 1)
+                }
+            }
+            struct ShardWorkerServiceConfig {
+                x: u8,
+            }
+        "#;
+        assert!(find_service_config_literals("fixture.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn duplicate_or_sparse_frame_tags_are_caught() {
+        let dup = "const TAG_A: u8 = 1;\nconst TAG_B: u8 = 1;\n";
+        assert!(check_frame_tags("f.rs", dup).iter().any(|v| v.contains("duplicate")));
+        let sparse = "const TAG_A: u8 = 1;\nconst TAG_B: u8 = 3;\n";
+        assert!(check_frame_tags("f.rs", sparse).iter().any(|v| v.contains("not dense")));
+        let zero = "const TAG_A: u8 = 0;\nconst TAG_B: u8 = 1;\n";
+        assert!(check_frame_tags("f.rs", zero).iter().any(|v| v.contains("reserved")));
+        let ok = "const TAG_A: u8 = 1;\nconst TAG_B: u8 = 2;\nconst TAG_C: u8 = 3;\n";
+        assert!(check_frame_tags("f.rs", ok).is_empty());
+    }
+
+    // Ident-style array, matching the real registry's shape.
+    const NAMES_FIXTURE: &str = r#"
+        pub const KERNEL_A: &str = "kernel.radix.minmax";
+        pub const KERNEL_B: &str = "kernel.radix.scatter";
+        pub const KERNEL_PHASES: [&str; 2] = [KERNEL_A, KERNEL_B];
+    "#;
+
+    const EVENT_FIXTURE: &str = r#"
+        pub enum Phase {
+            RadixMinMax = 0,
+            RadixScatter = 1,
+        }
+        impl Phase {
+            pub const COUNT: usize = 2;
+            pub fn metric_name(self) -> &'static str {
+                match self {
+                    Phase::RadixMinMax => names::KERNEL_A,
+                    Phase::RadixScatter => names::KERNEL_B,
+                }
+            }
+        }
+    "#;
+
+    #[test]
+    fn coherent_phase_tables_pass() {
+        assert_eq!(check_phase_registry(NAMES_FIXTURE, EVENT_FIXTURE), Vec::<String>::new());
+    }
+
+    #[test]
+    fn phase_table_drift_is_caught() {
+        // A variant added to the enum without a KERNEL_PHASES entry.
+        let grown = EVENT_FIXTURE
+            .replace("RadixScatter = 1,", "RadixScatter = 1,\n            RadixCopyback = 2,")
+            .replace("COUNT: usize = 2", "COUNT: usize = 3");
+        assert!(check_phase_registry(NAMES_FIXTURE, &grown)
+            .iter()
+            .any(|v| v.contains("variants but KERNEL_PHASES")));
+        // Sparse discriminants.
+        let sparse = EVENT_FIXTURE.replace("RadixScatter = 1,", "RadixScatter = 5,");
+        assert!(check_phase_registry(NAMES_FIXTURE, &sparse)
+            .iter()
+            .any(|v| v.contains("not dense")));
+        // COUNT out of step.
+        let stale = EVENT_FIXTURE.replace("COUNT: usize = 2", "COUNT: usize = 7");
+        assert!(check_phase_registry(NAMES_FIXTURE, &stale)
+            .iter()
+            .any(|v| v.contains("Phase::COUNT")));
+        // A span name outside the kernel.* namespace.
+        let off = NAMES_FIXTURE.replace("\"kernel.radix.scatter\"", "\"radix.scatter\"");
+        assert!(check_phase_registry(&off, EVENT_FIXTURE)
+            .iter()
+            .any(|v| v.contains("must start with")));
+    }
+
+    #[test]
+    fn str_arrays_parse_both_literal_and_ident_elements() {
+        assert_eq!(
+            parse_str_array(NAMES_FIXTURE, "KERNEL_PHASES").unwrap(),
+            vec!["kernel.radix.minmax", "kernel.radix.scatter"]
+        );
+        let literal = r#"pub const XS: [&str; 2] = ["a.b", "c.d"];"#;
+        assert_eq!(parse_str_array(literal, "XS").unwrap(), vec!["a.b", "c.d"]);
+        // An ident with no matching const resolves to a loud sentinel.
+        let dangling = "pub const XS: [&str; 1] = [MISSING];";
+        assert_eq!(parse_str_array(dangling, "XS").unwrap(), vec!["MISSING?"]);
+    }
+
+    const RUN_FIXTURE: &str = r#"
+        let workers = doc.count("service", "workers", 2)?;
+        let autotune = doc.bool("service", "autotune", false)?;
+    "#;
+    const README_FIXTURE: &str = "\
+| Key | Default | Meaning |\n\
+|---|---|---|\n\
+| `workers` | 2 | concurrent jobs |\n\
+| `autotune` | off | background GA |\n";
+    const CLI_FIXTURE: &str = r#"
+        let w = args.usize_or("workers", 2)?;
+        if args.has("autotune") {}
+    "#;
+
+    #[test]
+    fn knob_parity_passes_when_all_three_surfaces_agree() {
+        assert_eq!(
+            check_service_knob_parity(RUN_FIXTURE, README_FIXTURE, CLI_FIXTURE),
+            Vec::<String>::new()
+        );
+    }
+
+    #[test]
+    fn knob_drift_is_caught_in_each_direction() {
+        // Key missing from the README table.
+        let run_extra = format!(
+            "{RUN_FIXTURE}\nlet q = doc.count(\"service\", \"queue_capacity\", 64)?;"
+        );
+        let v = check_service_knob_parity(&run_extra, README_FIXTURE, CLI_FIXTURE);
+        assert!(v.iter().any(|x| x.contains("queue_capacity") && x.contains("README")), "{v:?}");
+        // …and the same key has no CLI flag.
+        assert!(v.iter().any(|x| x.contains("--queue-capacity")), "{v:?}");
+        // README documents a knob that does not exist.
+        let readme_extra = format!("{README_FIXTURE}| `ghost_knob` | 1 | nothing |\n");
+        assert!(check_service_knob_parity(RUN_FIXTURE, &readme_extra, CLI_FIXTURE)
+            .iter()
+            .any(|x| x.contains("ghost_knob")));
+    }
+
+    #[test]
+    fn bench_schema_and_phase_keys_are_validated() {
+        let phases = vec!["kernel.radix.scatter".to_string()];
+        let ok = r#"{ "schema": "evosort-bench-v1", "entries": [] }"#;
+        assert!(check_bench_report("B.json", ok, &phases).is_empty());
+        let bad_schema = r#"{ "schema": "evosort-bench-v9" }"#;
+        assert!(check_bench_report("B.json", bad_schema, &phases)
+            .iter()
+            .any(|v| v.contains("unknown schema")));
+        let missing = r#"{ "entries": [] }"#;
+        assert!(check_bench_report("B.json", missing, &phases)
+            .iter()
+            .any(|v| v.contains("no \"schema\"")));
+        let stray_phase =
+            r#"{ "schema": "evosort-bench-v2", "phases": { "kernel.bogus.step": 0.1 } }"#;
+        assert!(check_bench_report("B.json", stray_phase, &phases)
+            .iter()
+            .any(|v| v.contains("kernel.bogus.step")));
+        let good_phase =
+            r#"{ "schema": "evosort-bench-v2", "phases": { "kernel.radix.scatter": 0.1 } }"#;
+        assert!(check_bench_report("B.json", good_phase, &phases).is_empty());
+    }
+
+    #[test]
+    fn readme_metric_names_must_sanitize_from_the_registry() {
+        let names = r#"
+            pub const JOBS_COMPLETED: &str = "jobs.completed";
+            pub const ROUTER_QUEUE_DEPTH: &str = "router.queue_depth";
+        "#;
+        let registry = registry_prometheus_forms(names);
+        assert!(registry.contains("evosort_jobs_completed"));
+        let ok = "| `evosort_jobs_completed` | counter | jobs |\n\
+                  | `evosort_kernel_<kernel>_<phase>` | summary | pattern row |\n";
+        assert!(check_readme_metric_names(ok, &registry).is_empty());
+        let bad = "| `evosort_jobs_compelted` | counter | typo |\n";
+        assert!(check_readme_metric_names(bad, &registry)
+            .iter()
+            .any(|v| v.contains("evosort_jobs_compelted")));
+    }
+
+    #[test]
+    fn prometheus_form_matches_the_metrics_module() {
+        // Pinned to the same example as metrics::prometheus_name's test.
+        assert_eq!(prometheus_form("jobs.completed"), "evosort_jobs_completed");
+        assert_eq!(prometheus_form("kernel.radix.minmax"), "evosort_kernel_radix_minmax");
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        let root = repo_root();
+        assert_eq!(run_lint(&root), Vec::<String>::new());
+    }
+}
