@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::SampleWindow;
 use crate::coordinator::tuning_cache::TuningCache;
+use crate::params::Bounds;
 
 /// Knobs for the online tuner. All bounds are per-class unless noted.
 #[derive(Debug, Clone)]
@@ -69,6 +70,10 @@ pub struct AutotunePolicy {
     pub regression_ratio: f64,
     /// Bounded observation queue (hot path drops, never blocks, when full).
     pub queue_capacity: usize,
+    /// Gene bounds for the per-cycle GA runs. The defaults match the
+    /// offline driver's; tests (and deployments that want to pin a gene,
+    /// e.g. force one radix digit width) narrow ranges here.
+    pub bounds: Bounds,
     /// Base seed for the per-cycle GA runs.
     pub ga_seed: u64,
     /// When set, the tuning cache is restored from this file at startup and
@@ -92,6 +97,7 @@ impl Default for AutotunePolicy {
             max_cpu_share: 0.25,
             regression_ratio: 1.5,
             queue_capacity: 1024,
+            bounds: Bounds::default(),
             ga_seed: 0xA070_7E4E,
             persist_path: None,
         }
@@ -198,7 +204,7 @@ impl ClassState {
 }
 
 /// Persist fingerprint-keyed parameters in the versioned text format (the
-/// tuning cache writes a `# evosort-tuning-cache v3` header; loading accepts
+/// tuning cache writes a `# evosort-tuning-cache v4` header; loading accepts
 /// the headered formats and legacy v1 files).
 pub fn persist_params(cache: &TuningCache, path: &Path) -> Result<()> {
     cache.save(path)

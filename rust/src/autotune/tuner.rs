@@ -314,6 +314,7 @@ impl TunerWorker {
             population: self.policy.population.max(2),
             generations: self.policy.generations_per_cycle,
             repeats: self.policy.repeats,
+            bounds: self.policy.bounds,
             seed: self.policy.ga_seed ^ cycle_no.wrapping_mul(0x9E37_79B9_7F4A_7C15),
             ..GaConfig::default()
         };
@@ -635,6 +636,41 @@ mod tests {
         assert!(metrics.counter(names::TUNER_EXT_PUBLISHES) > 0);
         let tuned_ext = cache.get_ext(n_hint, &label).expect("ext genes cached");
         assert!(tuned_ext.run_size >= 1024 && tuned_ext.merge_fan_in >= 2);
+        drop(tuner);
+    }
+
+    #[test]
+    fn width_gene_publishes_non_default_radix_width() {
+        use crate::params::{Bounds, GeneRange, RadixWidth, SortParams};
+        // Pin the width gene to W11 via the policy bounds: every genome the
+        // GA generates carries the non-default width, so a publish proves
+        // the gene flows GA -> cache end to end.
+        let policy = AutotunePolicy {
+            bounds: Bounds { radix: GeneRange::new(10, 11), ..Bounds::default() },
+            ..AutotunePolicy::quick()
+        };
+        let (tuner, cache, _metrics) = tuner_fixture(policy);
+        let data = generate_i64(20_000, Distribution::Uniform, 7, 2);
+        let label = Fingerprint::of(&data).label();
+        // Seed the class with a pathologically slow genome (insertion-sorts
+        // the whole retained sample at the default W8 width) so GA cycles
+        // reliably find something to publish over it.
+        cache.put(data.len(), &label, SortParams::from_genes(&[100_000, 31291, 4, 99574, 1418, 8]));
+        let sample = fingerprint::sample(&data, 4096);
+        let published = wait_until(30.0, || {
+            tuner.observe(Observation {
+                label: label.clone(),
+                n: data.len(),
+                secs: 0.004,
+                sample: Some(sample.clone()),
+            });
+            // fitness.is_some() = the entry came from the tuner's publish
+            // path, not our explicit pre-seed put.
+            cache
+                .entry(data.len(), &label)
+                .is_some_and(|e| e.fitness.is_some() && e.params.radix_width == RadixWidth::W11)
+        });
+        assert!(published, "tuner never published a W11-width genome for the class");
         drop(tuner);
     }
 

@@ -439,7 +439,7 @@ mod tests {
                     throughput: 81_300_000.0,
                     score: 3.4,
                     phases: vec![
-                        ("kernel.radix.histogram".into(), 0.0004),
+                        ("kernel.radix.count".into(), 0.0004),
                         ("kernel.radix.scatter".into(), 0.0007),
                     ],
                 },

@@ -8,7 +8,7 @@ use crate::coordinator::{ParamSource, PipelineConfig, ServiceConfig, SortRequest
 use crate::coordinator::metrics::names;
 use crate::data::{self, Distribution};
 use crate::ga::{GaConfig, GaDriver};
-use crate::params::{ACode, SortParams};
+use crate::params::{ACode, RadixWidth, SortParams};
 use crate::runtime::{Manifest, XlaTileSorter};
 use crate::sort::{AdaptiveSorter, Baseline, Dtype, SortPayload};
 use crate::symbolic::SymbolicModel;
@@ -1038,6 +1038,47 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
                 kernel_phases(&sorter, &data, &p),
             );
         }
+        // Digit-width matrix: the radix kernel across the GA-tunable widths
+        // (genome gene 5) on the uniform point. The `kernel/radix` rows
+        // above measure whatever width the symbolic model seeds (W8), so
+        // their ids — and the v1/v2 baseline compare armed on them — stay
+        // untouched; the explicit w6/w8/w11 group makes the three-way
+        // comparison readable off one row cluster.
+        if matches!(dist, Distribution::Uniform) {
+            for width in [RadixWidth::W6, RadixWidth::W8, RadixWidth::W11] {
+                // fallback 0: these rows measure the kernel itself, so the
+                // sort must reach it even at scaled-down CI sizes where the
+                // symbolic fallback threshold would shunt to sort_unstable
+                // (which would also trip the phase-coverage gate below).
+                let p = SortParams {
+                    algorithm: ACode::Radix,
+                    radix_width: width,
+                    fallback_threshold: 0,
+                    ..base_params
+                };
+                let m = measure(
+                    &cfg,
+                    "radix-w",
+                    || data.clone(),
+                    |mut d| sorter.sort_i64_with_scratch(&mut d, &p, &mut scratch),
+                );
+                let score = std_median / m.median().max(1e-12);
+                let phases = kernel_phases(&sorter, &data, &p);
+                // Smoke gate: the instrumented pass must show time in every
+                // `kernel.radix.*` phase — a silently skipped count/scan/
+                // scatter would make the width rows unreadable.
+                check_radix_phase_coverage(&phases)?;
+                push_entry_with_phases(
+                    &mut entries,
+                    &mut table,
+                    format!("kernel/radix-w{}/{}/n{n}", width.bits(), dist.name()),
+                    &m,
+                    n as f64 / m.median().max(1e-12),
+                    score,
+                    phases,
+                );
+            }
+        }
     }
 
     // Out-of-core point: a beyond-budget sort through the external sorter
@@ -1222,6 +1263,22 @@ fn push_entry_with_phases(
         score,
         phases,
     });
+}
+
+/// Phase-coverage gate for the radix width-matrix rows: every
+/// `kernel.radix.*` phase (minmax, count, scan, scatter, copyback) must
+/// report nonzero time in the instrumented pass. Guards the three-phase
+/// kernel's timer wiring — a phase that stops being timed would otherwise
+/// just vanish from the v2 report.
+fn check_radix_phase_coverage(phases: &[(String, f64)]) -> Result<()> {
+    for want in names::KERNEL_PHASES.iter().filter(|p| p.starts_with("kernel.radix.")) {
+        let secs = phases.iter().find(|(p, _)| p == want).map(|(_, s)| *s);
+        anyhow::ensure!(
+            secs.is_some_and(|s| s > 0.0),
+            "bench smoke: radix phase {want} reported no time (got {phases:?})"
+        );
+    }
+    Ok(())
 }
 
 /// One extra instrumented pass for a kernel bench point: run the sort with

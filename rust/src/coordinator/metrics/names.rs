@@ -153,7 +153,8 @@ pub const EXTSORT_ERRORS: &str = "extsort.errors";
 // `Phase` enum and the README phase list. Order matches `Phase::all()`.
 
 pub const KERNEL_RADIX_MINMAX: &str = "kernel.radix.minmax";
-pub const KERNEL_RADIX_HISTOGRAM: &str = "kernel.radix.histogram";
+pub const KERNEL_RADIX_COUNT: &str = "kernel.radix.count";
+pub const KERNEL_RADIX_SCAN: &str = "kernel.radix.scan";
 pub const KERNEL_RADIX_SCATTER: &str = "kernel.radix.scatter";
 pub const KERNEL_RADIX_COPYBACK: &str = "kernel.radix.copyback";
 pub const KERNEL_MERGE_RUN_SORT: &str = "kernel.merge.run_sort";
@@ -167,9 +168,10 @@ pub const KERNEL_EXT_MERGE: &str = "kernel.ext.merge";
 
 /// The kernel-phase names in [`Phase::all()`](crate::obs::event::Phase::all)
 /// order. Indexed by `Phase::wire()`.
-pub const KERNEL_PHASES: [&str; 12] = [
+pub const KERNEL_PHASES: [&str; 13] = [
     KERNEL_RADIX_MINMAX,
-    KERNEL_RADIX_HISTOGRAM,
+    KERNEL_RADIX_COUNT,
+    KERNEL_RADIX_SCAN,
     KERNEL_RADIX_SCATTER,
     KERNEL_RADIX_COPYBACK,
     KERNEL_MERGE_RUN_SORT,

@@ -13,7 +13,7 @@
 //! Frames router → shard: [`Frame::Job`], [`Frame::CacheSync`],
 //! [`Frame::Shutdown`]. Frames shard → router: [`Frame::JobDone`],
 //! [`Frame::CachePublish`], [`Frame::Telemetry`], [`Frame::Trace`]. Cache
-//! frames carry the versioned `# evosort-tuning-cache v3` text interchange
+//! frames carry the versioned `# evosort-tuning-cache v4` text interchange
 //! format ([`TuningCache::to_text`](crate::coordinator::TuningCache::to_text)),
 //! so the wire and the disk speak the same dialect. Trace frames batch
 //! [`TraceEvent`]s drained from the worker's ring; the router merges them
@@ -231,7 +231,7 @@ impl<'a> Dec<'a> {
     }
 
     fn genes(&mut self) -> Result<SortParams> {
-        let mut genes = [0i64; 5];
+        let mut genes = [0i64; 6];
         for g in genes.iter_mut() {
             *g = i64::from_le_bytes(self.take(8)?.try_into().unwrap());
         }

@@ -18,10 +18,12 @@
 //! last writer, so a well-tuned class can never be clobbered by a worse one.
 //!
 //! Persistence is a versioned plain text file (no serde crate offline): a
-//! `# evosort-tuning-cache v3` header followed by
-//! `band class g0 g1 g2 g3 g4 [fitness] [x<run>,<fan>,<spill>]` lines (the
+//! `# evosort-tuning-cache v4` header followed by
+//! `band class g0 g1 g2 g3 g4 g5 [fitness] [x<run>,<fan>,<spill>]` lines (the
 //! fitness column is optional for back-compat; the `x`-prefixed column, new
-//! in v3, carries the out-of-core spill genes of beyond-memory classes).
+//! in v3, carries the out-of-core spill genes of beyond-memory classes; the
+//! sixth gene column `g5`, new in v4, is the radix digit width — files from
+//! earlier writers carry five gene columns and load with the default width).
 //! The same text form is the cross-process interchange format the sharded
 //! service broadcasts over its control channel ([`TuningCache::to_text`] /
 //! [`TuningCache::from_text`]). Loading is forgiving: corrupt, truncated,
@@ -36,10 +38,10 @@ use std::sync::RwLock;
 use anyhow::{Context, Result};
 
 use crate::extsort::{ExtBounds, ExtParams};
-use crate::params::{Bounds, SortParams};
+use crate::params::{Bounds, RadixWidth, SortParams};
 
 /// Current on-disk format version (see [`TuningCache::save`]).
-pub const FORMAT_VERSION: u32 = 3;
+pub const FORMAT_VERSION: u32 = 4;
 
 const HEADER_PREFIX: &str = "# evosort-tuning-cache v";
 
@@ -190,7 +192,7 @@ impl TuningCache {
     }
 
     /// Serialize to the versioned text format: a header plus
-    /// `band class g0 g1 g2 g3 g4 [fitness] [x<run>,<fan>,<spill>]` lines.
+    /// `band class g0 g1 g2 g3 g4 g5 [fitness] [x<run>,<fan>,<spill>]` lines.
     /// This is both the on-disk format ([`TuningCache::save`]) and the
     /// cross-process interchange the sharded service ships over its control
     /// channel. The `x`-prefixed spill-gene column is position-independent
@@ -203,8 +205,8 @@ impl TuningCache {
             .map(|(k, e)| {
                 let g = e.params.to_genes();
                 let mut line = format!(
-                    "{} {} {} {} {} {} {}",
-                    k.size_band, k.dist, g[0], g[1], g[2], g[3], g[4]
+                    "{} {} {} {} {} {} {} {}",
+                    k.size_band, k.dist, g[0], g[1], g[2], g[3], g[4], g[5]
                 );
                 if let Some(f) = e.fitness {
                     line.push_str(&format!(" {f:.9e}"));
@@ -220,11 +222,14 @@ impl TuningCache {
         format!("{HEADER_PREFIX}{FORMAT_VERSION}\n{}\n", lines.join("\n"))
     }
 
-    /// Parse the text format (headered v2/v3 or legacy headerless v1;
-    /// 7-column lines load with unknown fitness, `x`-prefixed trailing
-    /// columns load as spill genes). Corrupt, truncated, or out-of-bounds
-    /// lines are skipped with a warning rather than failing the whole cache
-    /// or clamping garbage genes into plausible-looking parameters.
+    /// Parse the text format (headered v2/v3/v4 or legacy headerless v1;
+    /// the header version selects the gene-column count — five for pre-v4
+    /// writers, whose entries load with the default radix width, six for v4.
+    /// Trailing fitness-only lines load with unknown fitness, `x`-prefixed
+    /// trailing columns load as spill genes). Corrupt, truncated, or
+    /// out-of-bounds lines are skipped with a warning rather than failing
+    /// the whole cache or clamping garbage genes into plausible-looking
+    /// parameters.
     pub fn from_text(text: &str) -> TuningCache {
         let cache = TuningCache::new();
         // The widest bounds any writer could have used: a persisted genome
@@ -232,11 +237,16 @@ impl TuningCache {
         let bounds = Bounds::with_all_strategies();
         let ext_bounds = ExtBounds::default();
         let mut legacy_keys = 0usize;
+        // Headerless files are the PR-1 v1 format: five gene columns.
+        let mut gene_cols = 5usize;
         {
             let mut map = cache.map.write().unwrap();
             for line in text.lines() {
                 if let Some(rest) = line.strip_prefix(HEADER_PREFIX) {
                     if let Ok(v) = rest.trim().parse::<u32>() {
+                        // v4 grew the radix-width gene column; an unknown
+                        // future version is assumed to share v4's layout.
+                        gene_cols = if v >= 4 { 6 } else { 5 };
                         if v > FORMAT_VERSION {
                             crate::log_warn!(
                                 "cache data is format v{v} (this build writes \
@@ -249,8 +259,9 @@ impl TuningCache {
                 if line.trim_start().starts_with('#') {
                     continue; // comments
                 }
+                let base = 2 + gene_cols;
                 let parts: Vec<&str> = line.split_whitespace().collect();
-                if !(7..=9).contains(&parts.len()) {
+                if !(base..=base + 2).contains(&parts.len()) {
                     if !line.trim().is_empty() {
                         crate::log_warn!("skipping malformed cache line: {line:?}");
                     }
@@ -258,8 +269,10 @@ impl TuningCache {
                 }
                 let parse = || -> Option<(CacheKey, CacheEntry)> {
                     let band: u32 = parts[0].parse().ok()?;
-                    let mut genes = [0i64; 5];
-                    for (i, g) in genes.iter_mut().enumerate() {
+                    // Pre-v4 lines have no width column: imply the default.
+                    let mut genes = [0i64; 6];
+                    genes[5] = RadixWidth::default().gene();
+                    for (i, g) in genes.iter_mut().enumerate().take(gene_cols) {
                         *g = parts[2 + i].parse().ok()?;
                     }
                     if !bounds.validate(&genes) {
@@ -267,7 +280,7 @@ impl TuningCache {
                     }
                     let mut fitness = None;
                     let mut ext = None;
-                    for (pos, tok) in parts[7..].iter().enumerate() {
+                    for (pos, tok) in parts[base..].iter().enumerate() {
                         if let Some(xg) = tok.strip_prefix('x') {
                             if ext.is_some() {
                                 return None; // duplicate spill-gene column
@@ -462,9 +475,42 @@ mod tests {
 
     #[test]
     fn future_version_header_loads_best_effort() {
+        // An unknown future version is assumed to share v4's six-gene layout.
         let loaded =
-            TuningCache::from_text("# evosort-tuning-cache v9\n14 x 3075 31291 4 99574 1418\n");
+            TuningCache::from_text("# evosort-tuning-cache v9\n14 x 3075 31291 4 99574 1418 8\n");
         assert_eq!(loaded.len(), 1);
+    }
+
+    #[test]
+    fn pre_v4_files_load_with_default_radix_width() {
+        // Regression: every pre-v4 wire form (five gene columns) must keep
+        // loading, with the radix width defaulting to W8. Covers a headered
+        // v3 line with fitness + spill columns and a headerless v1 line.
+        let v3 = TuningCache::from_text(
+            "# evosort-tuning-cache v3\n\
+             14 b14:mix:uniq:w4:pm:xm 3075 31291 4 99574 1418 4.2e-3 x2097152,16,0\n",
+        );
+        assert_eq!(v3.len(), 1);
+        let e = v3.entry(10_000_000, "b14:mix:uniq:w4:pm:xm").unwrap();
+        assert_eq!(e.params, SortParams::paper_1e7());
+        assert_eq!(e.params.radix_width, RadixWidth::W8);
+        assert!((e.fitness.unwrap() - 4.2e-3).abs() < 1e-12);
+        assert!(e.ext.is_some());
+
+        let v1 = TuningCache::from_text("14 uniform 3075 31291 4 99574 1418\n");
+        assert_eq!(v1.get(10_000_000, "uniform").unwrap().radix_width, RadixWidth::W8);
+    }
+
+    #[test]
+    fn radix_width_gene_roundtrips_through_text() {
+        let tuned = SortParams { radix_width: RadixWidth::W11, ..SortParams::paper_1e7() };
+        let c = TuningCache::new();
+        c.put_with_fitness(10_000_000, "b14:mix:uniq:w8:pm", tuned, 0.01);
+        let text = c.to_text();
+        let back = TuningCache::from_text(&text);
+        let got = back.get(10_000_000, "b14:mix:uniq:w8:pm").unwrap();
+        assert_eq!(got.radix_width, RadixWidth::W11);
+        assert_eq!(got, tuned);
     }
 
     #[test]

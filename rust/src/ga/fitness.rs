@@ -113,7 +113,7 @@ mod tests {
     #[test]
     fn eval_returns_positive_time() {
         let mut f = fitness_fixture(20_000);
-        let t = f.eval(&[3075, 31291, 4, 99574, 1418]);
+        let t = f.eval(&[3075, 31291, 4, 99574, 1418, 8]);
         assert!(t.is_finite() && t > 0.0);
         assert_eq!(f.evals(), 1);
     }
@@ -121,7 +121,7 @@ mod tests {
     #[test]
     fn cache_prevents_reevaluation() {
         let mut f = fitness_fixture(10_000);
-        let g = [64i64, 4096, 3, 1000, 512];
+        let g = [64i64, 4096, 3, 1000, 512, 8];
         let t1 = f.eval(&g);
         let t2 = f.eval(&g);
         assert_eq!(t1, t2, "cached value must be bit-identical");
@@ -132,8 +132,8 @@ mod tests {
     #[test]
     fn different_genomes_timed_separately() {
         let mut f = fitness_fixture(10_000);
-        f.eval(&[64, 4096, 3, 1000, 512]);
-        f.eval(&[64, 4096, 4, 1000, 512]);
+        f.eval(&[64, 4096, 3, 1000, 512, 8]);
+        f.eval(&[64, 4096, 4, 1000, 512, 6]);
         assert_eq!(f.evals(), 2);
     }
 
@@ -141,7 +141,7 @@ mod tests {
     fn sample_survives_evaluations() {
         let mut f = fitness_fixture(5_000);
         let before = f.sample.clone();
-        f.eval(&[100, 2048, 4, 500, 256]);
+        f.eval(&[100, 2048, 4, 500, 256, 11]);
         assert_eq!(f.sample, before, "sample must not be sorted in place");
     }
 }

@@ -1,18 +1,19 @@
 //! Genome representation and random initialisation.
 //!
 //! A candidate solution is the paper's 5-integer vector
-//! `x = (T_insertion, T_merge, A_code, T_numpy, T_tile)`. Threshold genes
-//! span several orders of magnitude, so random initialisation samples them
-//! **log-uniformly** — a uniform draw over [16, 1e5] would almost never
-//! propose values below 1e4, starving the search of small-threshold
-//! candidates (the paper's Generation-0 spread, e.g. 6.6 s → 0.24 s at 1e7,
-//! shows the initial population does explore both extremes).
+//! `x = (T_insertion, T_merge, A_code, T_numpy, T_tile)` plus the `W_radix`
+//! digit-width gene. Threshold genes span several orders of magnitude, so
+//! random initialisation samples them **log-uniformly** — a uniform draw over
+//! [16, 1e5] would almost never propose values below 1e4, starving the search
+//! of small-threshold candidates (the paper's Generation-0 spread, e.g.
+//! 6.6 s → 0.24 s at 1e7, shows the initial population does explore both
+//! extremes). Categorical genes (`A_code`, `W_radix`) sample uniformly.
 
 use crate::params::{Bounds, GeneRange};
 use crate::rng::Xoshiro256pp;
 
-/// The raw 5-gene chromosome (paper ordering).
-pub type Genome = [i64; 5];
+/// The raw 6-gene chromosome (paper ordering + `W_radix`).
+pub type Genome = [i64; 6];
 
 /// Sample one gene log-uniformly within its range (categorical genes, i.e.
 /// the algorithm code, are sampled uniformly).
@@ -34,6 +35,7 @@ pub fn random_genome(bounds: &Bounds, rng: &mut Xoshiro256pp) -> Genome {
         random_gene(bounds.algorithm, true, rng),
         random_gene(bounds.fallback, false, rng),
         random_gene(bounds.tile, false, rng),
+        random_gene(bounds.radix, true, rng),
     ]
 }
 
@@ -100,12 +102,23 @@ mod tests {
     }
 
     #[test]
+    fn width_gene_uniform_over_snap_targets() {
+        let bounds = Bounds::default();
+        let mut rng = Xoshiro256pp::seeded(4);
+        let mut saw = std::collections::HashSet::new();
+        for _ in 0..500 {
+            saw.insert(random_gene(bounds.radix, true, &mut rng));
+        }
+        assert_eq!(saw, (6i64..=11).collect(), "uniform draw covers the whole range");
+    }
+
+    #[test]
     fn individual_comparison() {
-        let a = Individual { genome: [1; 5], fitness: 0.5 };
-        let b = Individual { genome: [2; 5], fitness: 0.7 };
+        let a = Individual { genome: [1; 6], fitness: 0.5 };
+        let b = Individual { genome: [2; 6], fitness: 0.7 };
         assert!(a.better_than(&b));
         assert!(!b.better_than(&a));
-        let u = Individual::unevaluated([0; 5]);
+        let u = Individual::unevaluated([0; 6]);
         assert!(a.better_than(&u));
     }
 }

@@ -77,7 +77,9 @@ pub fn uniform_mutation(
 
 fn mutate_gene(g: &mut Genome, i: usize, bounds: &Bounds, rng: &mut Xoshiro256pp) {
     let range = bounds.gene(i);
-    let categorical = i == 2;
+    // Gene 2 is the algorithm code; gene 5 is the radix digit width — both
+    // categorical: a ±50% perturbation of a code is meaningless.
+    let categorical = i == 2 || i == 5;
     if categorical || rng.next_f64() < 0.5 {
         g[i] = random_gene(range, categorical, rng);
     } else {
@@ -109,7 +111,7 @@ mod tests {
         fitnesses
             .iter()
             .enumerate()
-            .map(|(i, &f)| Individual { genome: [i as i64; 5], fitness: f })
+            .map(|(i, &f)| Individual { genome: [i as i64; 6], fitness: f })
             .collect()
     }
 
@@ -120,7 +122,7 @@ mod tests {
         // With k = population size the winner is almost always the global best.
         let mut best_wins = 0;
         for _ in 0..200 {
-            if tournament(&pop, 16, &mut rng).genome == [3; 5] {
+            if tournament(&pop, 16, &mut rng).genome == [3; 6] {
                 best_wins += 1;
             }
         }
@@ -129,12 +131,12 @@ mod tests {
 
     #[test]
     fn crossover_preserves_gene_pool() {
-        let a = [1i64, 2, 3, 4, 5];
-        let b = [10i64, 20, 4, 40, 50];
+        let a = [1i64, 2, 3, 4, 5, 6];
+        let b = [10i64, 20, 4, 40, 50, 11];
         let mut rng = Xoshiro256pp::seeded(6);
         for _ in 0..100 {
             let (c, d) = uniform_crossover(&a, &b, 1.0, &mut rng);
-            for i in 0..5 {
+            for i in 0..6 {
                 // Each child gene comes from one of the parents, and the pair
                 // (c[i], d[i]) is a permutation of (a[i], b[i]).
                 assert!(
@@ -147,8 +149,8 @@ mod tests {
 
     #[test]
     fn crossover_prob_zero_clones() {
-        let a = [1i64, 2, 3, 4, 5];
-        let b = [9i64, 8, 4, 6, 5];
+        let a = [1i64, 2, 3, 4, 5, 6];
+        let b = [9i64, 8, 4, 6, 5, 8];
         let mut rng = Xoshiro256pp::seeded(7);
         let (c, d) = uniform_crossover(&a, &b, 0.0, &mut rng);
         assert_eq!(c, a);
@@ -161,28 +163,27 @@ mod tests {
         let mut rng = Xoshiro256pp::seeded(8);
         let mut changed = 0;
         for _ in 0..300 {
-            let mut g = [3075i64, 31291, 4, 99574, 1418];
+            let mut g = [3075i64, 31291, 4, 99574, 1418, 8];
             uniform_mutation(&mut g, &bounds, 1.0, &mut rng);
             assert!(bounds.validate(&g), "{g:?}");
-            if g != [3075, 31291, 4, 99574, 1418] {
+            if g != [3075, 31291, 4, 99574, 1418, 8] {
                 changed += 1;
             }
         }
         // A mutation attempt can re-draw the same value (relative factor
-        // rounding to 1.0, or the categorical gene resampling itself), so
-        // require "nearly always changes" rather than strict equality. The
-        // observed rate for this seed sits right at ~280/300; leave margin
-        // for libm ulp differences across platforms.
-        assert!(changed >= 270, "p=1.0 should nearly always change a gene ({changed}/300)");
+        // rounding to 1.0, or a categorical gene resampling itself), so
+        // require "nearly always changes" rather than strict equality, with
+        // margin for seed drift and libm ulp differences across platforms.
+        assert!(changed >= 250, "p=1.0 should nearly always change a gene ({changed}/300)");
     }
 
     #[test]
     fn mutation_prob_zero_is_identity() {
         let bounds = Bounds::default();
         let mut rng = Xoshiro256pp::seeded(9);
-        let mut g = [100i64, 2000, 3, 5000, 700];
+        let mut g = [100i64, 2000, 3, 5000, 700, 8];
         uniform_mutation(&mut g, &bounds, 0.0, &mut rng);
-        assert_eq!(g, [100, 2000, 3, 5000, 700]);
+        assert_eq!(g, [100, 2000, 3, 5000, 700, 8]);
     }
 
     #[test]

@@ -89,7 +89,7 @@ mod tests {
     use super::*;
 
     fn ind(f: f64) -> Individual {
-        Individual { genome: [0; 5], fitness: f }
+        Individual { genome: [0; 6], fitness: f }
     }
 
     #[test]

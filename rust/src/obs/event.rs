@@ -88,37 +88,40 @@ impl Kernel {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Phase {
-    // Radix: fused sign-flip + min/max reduce, per-pass histograms,
-    // scatter passes, final copy-back / sign-unflip.
+    // Radix: fused sign-flip + min/max reduce, then per-pass
+    // count / scan / scatter, final copy-back / sign-unflip. Wire codes are
+    // same-binary only (both ends of the shard protocol run one build), so
+    // the insertion of `RadixScan` renumbering later phases is safe.
     RadixMinMax = 0,
-    RadixHistogram = 1,
-    RadixScatter = 2,
-    RadixCopyback = 3,
+    RadixCount = 1,
+    RadixScan = 2,
+    RadixScatter = 3,
+    RadixCopyback = 4,
     // Merge: insertion-sorted base runs, then width-doubling merge levels.
-    MergeRunSort = 4,
-    MergeLevels = 5,
+    MergeRunSort = 5,
+    MergeLevels = 6,
     // Samplesort: splitter sampling, classify+scatter partitioning,
     // per-bucket sort + copy-back.
-    SampleSplitters = 6,
-    SamplePartition = 7,
-    SampleBucketSort = 8,
+    SampleSplitters = 7,
+    SamplePartition = 8,
+    SampleBucketSort = 9,
     // External sort: in-memory run formation, spill-to-disk writes, and the
-    // k-way (possibly multi-pass) loser-tree merge. Appended after the
-    // in-memory kernels so existing wire codes are untouched.
-    ExtRunForm = 9,
-    ExtSpill = 10,
-    ExtMerge = 11,
+    // k-way (possibly multi-pass) loser-tree merge.
+    ExtRunForm = 10,
+    ExtSpill = 11,
+    ExtMerge = 12,
 }
 
 impl Phase {
     /// Number of phases — the [`PhaseTimer`] accumulator width.
-    pub const COUNT: usize = 12;
+    pub const COUNT: usize = 13;
 
     /// Every phase, in discriminant order.
     pub fn all() -> &'static [Phase] {
         &[
             Phase::RadixMinMax,
-            Phase::RadixHistogram,
+            Phase::RadixCount,
+            Phase::RadixScan,
             Phase::RadixScatter,
             Phase::RadixCopyback,
             Phase::MergeRunSort,
@@ -135,7 +138,8 @@ impl Phase {
     pub fn kernel(self) -> Kernel {
         match self {
             Phase::RadixMinMax
-            | Phase::RadixHistogram
+            | Phase::RadixCount
+            | Phase::RadixScan
             | Phase::RadixScatter
             | Phase::RadixCopyback => Kernel::Radix,
             Phase::MergeRunSort | Phase::MergeLevels => Kernel::Merge,
@@ -150,7 +154,8 @@ impl Phase {
     pub fn name(self) -> &'static str {
         match self {
             Phase::RadixMinMax => "minmax",
-            Phase::RadixHistogram => "histogram",
+            Phase::RadixCount => "count",
+            Phase::RadixScan => "scan",
             Phase::RadixScatter => "scatter",
             Phase::RadixCopyback => "copyback",
             Phase::MergeRunSort => "run_sort",
@@ -170,7 +175,8 @@ impl Phase {
     pub fn metric_name(self) -> &'static str {
         match self {
             Phase::RadixMinMax => names::KERNEL_RADIX_MINMAX,
-            Phase::RadixHistogram => names::KERNEL_RADIX_HISTOGRAM,
+            Phase::RadixCount => names::KERNEL_RADIX_COUNT,
+            Phase::RadixScan => names::KERNEL_RADIX_SCAN,
             Phase::RadixScatter => names::KERNEL_RADIX_SCATTER,
             Phase::RadixCopyback => names::KERNEL_RADIX_COPYBACK,
             Phase::MergeRunSort => names::KERNEL_MERGE_RUN_SORT,

@@ -279,7 +279,7 @@ mod tests {
                 trace,
                 shard,
                 base + 5,
-                EventKind::KernelPhase { phase: Phase::RadixHistogram, dur_secs: 0.002 },
+                EventKind::KernelPhase { phase: Phase::RadixCount, dur_secs: 0.002 },
             ),
             ev(
                 trace,
@@ -303,7 +303,7 @@ mod tests {
         assert_eq!(s.failed, 0);
         assert_eq!(s.completed_with_phases, 2);
         assert_eq!(s.phase_stats.len(), 2);
-        assert_eq!(s.phase_stats[0].phase, Phase::RadixHistogram);
+        assert_eq!(s.phase_stats[0].phase, Phase::RadixCount);
         assert_eq!(s.phase_stats[0].count, 2);
         assert!(s.problems.is_empty());
         // Slowest keeps the worker-vs-router max.

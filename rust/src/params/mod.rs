@@ -2,10 +2,13 @@
 //!
 //! The paper's candidate solution is
 //! `x = (T_insertion, T_merge, A_code, T_numpy, T_tile)` (§3.2, §4.2). We keep
-//! the exact encoding — five integers — with `A_code` interpreted as the
-//! algorithm selector (3 = refined parallel mergesort, 4 = block-based LSD
-//! radix sort, both per Algorithm 6; 5 = the XLA tile-sort backend this
-//! reproduction adds as a first-class strategy).
+//! the exact encoding — the paper's five integers, with `A_code` interpreted
+//! as the algorithm selector (3 = refined parallel mergesort, 4 = block-based
+//! LSD radix sort, both per Algorithm 6; 5 = the XLA tile-sort backend this
+//! reproduction adds as a first-class strategy) — extended with a sixth gene,
+//! `W_radix`: the radix digit width in bits (6, 8, or 11), a structural
+//! parameter of the count/scan/scatter kernel the GA can hill-climb per
+//! workload class.
 
 use std::fmt;
 
@@ -52,7 +55,61 @@ impl ACode {
     }
 }
 
-/// The five-gene EvoSort configuration.
+/// Digit width of one LSD radix pass (the `W_radix` gene).
+///
+/// Only three widths are worth searching: 6 bits (64 buckets — histogram
+/// matrix fits L1 even at high thread counts, more passes), 8 bits (256
+/// buckets — the classic byte-digit balance), 11 bits (2048 buckets — fewer
+/// passes, heavier per-pass tables; wins when passes dominate). Gene values
+/// snap to the nearest representable width, so mutation anywhere in the
+/// bounds range lands on a valid kernel configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RadixWidth {
+    /// 6-bit digits, 64 buckets.
+    W6,
+    /// 8-bit digits, 256 buckets (default).
+    W8,
+    /// 11-bit digits, 2048 buckets.
+    W11,
+}
+
+impl RadixWidth {
+    /// Digit width in bits.
+    pub fn bits(self) -> usize {
+        match self {
+            RadixWidth::W6 => 6,
+            RadixWidth::W8 => 8,
+            RadixWidth::W11 => 11,
+        }
+    }
+
+    /// Bucket count of one pass (`1 << bits`).
+    pub fn buckets(self) -> usize {
+        1 << self.bits()
+    }
+
+    /// Snap an arbitrary gene value to the nearest representable width.
+    pub fn from_bits(bits: i64) -> RadixWidth {
+        match bits {
+            i64::MIN..=7 => RadixWidth::W6,
+            8..=9 => RadixWidth::W8,
+            _ => RadixWidth::W11,
+        }
+    }
+
+    /// Encode as the gene value (the width in bits).
+    pub fn gene(self) -> i64 {
+        self.bits() as i64
+    }
+}
+
+impl Default for RadixWidth {
+    fn default() -> Self {
+        RadixWidth::W8
+    }
+}
+
+/// The six-gene EvoSort configuration (the paper's five plus `W_radix`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SortParams {
     /// `T_insertion` — base chunk size handled by insertion sort.
@@ -66,6 +123,8 @@ pub struct SortParams {
     pub fallback_threshold: usize,
     /// `T_tile` — cache tile for blocked merging / histogram staging.
     pub tile: usize,
+    /// `W_radix` — digit width of one radix pass (6/8/11 bits).
+    pub radix_width: RadixWidth,
 }
 
 impl Default for SortParams {
@@ -78,6 +137,7 @@ impl Default for SortParams {
             algorithm: ACode::Merge,
             fallback_threshold: 4096,
             tile: 1024,
+            radix_width: RadixWidth::W8,
         }
     }
 }
@@ -85,31 +145,31 @@ impl Default for SortParams {
 impl SortParams {
     /// The paper's §6.2 best individual for 1e7: [3075, 31291, 4, 99574, 1418].
     pub fn paper_1e7() -> Self {
-        SortParams::from_genes(&[3075, 31291, 4, 99574, 1418])
+        SortParams::from_genes(&[3075, 31291, 4, 99574, 1418, 8])
     }
 
     /// §6.3 best for 1e8: [4074, 20251, 4, 92531, 7649].
     pub fn paper_1e8() -> Self {
-        SortParams::from_genes(&[4074, 20251, 4, 92531, 7649])
+        SortParams::from_genes(&[4074, 20251, 4, 92531, 7649, 8])
     }
 
     /// §6.4 best for 5e8: [1148, 1424, 4, 67698, 22136].
     pub fn paper_5e8() -> Self {
-        SortParams::from_genes(&[1148, 1424, 4, 67698, 22136])
+        SortParams::from_genes(&[1148, 1424, 4, 67698, 22136, 8])
     }
 
     /// §6.5 best for 1e9: [2514, 24721, 4, 50840, 2020].
     pub fn paper_1e9() -> Self {
-        SortParams::from_genes(&[2514, 24721, 4, 50840, 2020])
+        SortParams::from_genes(&[2514, 24721, 4, 50840, 2020, 8])
     }
 
     /// §6.6 best for 1e10: [2670, 12456, 4, 77432, 845].
     pub fn paper_1e10() -> Self {
-        SortParams::from_genes(&[2670, 12456, 4, 77432, 845])
+        SortParams::from_genes(&[2670, 12456, 4, 77432, 845, 8])
     }
 
-    /// Decode from the paper's 5-integer genome ordering.
-    pub fn from_genes(g: &[i64; 5]) -> Self {
+    /// Decode from the genome ordering (the paper's five genes + `W_radix`).
+    pub fn from_genes(g: &[i64; 6]) -> Self {
         let b = Bounds::default();
         SortParams {
             insertion_threshold: b.insertion.clamp_val(g[0]),
@@ -117,17 +177,19 @@ impl SortParams {
             algorithm: ACode::from_code(g[2]),
             fallback_threshold: b.fallback.clamp_val(g[3]),
             tile: b.tile.clamp_val(g[4]),
+            radix_width: RadixWidth::from_bits(g[5]),
         }
     }
 
     /// Encode to the genome ordering.
-    pub fn to_genes(&self) -> [i64; 5] {
+    pub fn to_genes(&self) -> [i64; 6] {
         [
             self.insertion_threshold as i64,
             self.parallel_merge_threshold as i64,
             self.algorithm.code(),
             self.fallback_threshold as i64,
             self.tile as i64,
+            self.radix_width.gene(),
         ]
     }
 }
@@ -137,13 +199,14 @@ impl fmt::Display for SortParams {
         let g = self.to_genes();
         write!(
             f,
-            "[{}, {}, {} ({}), {}, {}]",
+            "[{}, {}, {} ({}), {}, {}, w{}]",
             g[0],
             g[1],
             g[2],
             self.algorithm.name(),
             g[3],
-            g[4]
+            g[4],
+            g[5]
         )
     }
 }
@@ -185,6 +248,8 @@ pub struct Bounds {
     pub algorithm: GeneRange,
     pub fallback: GeneRange,
     pub tile: GeneRange,
+    /// `W_radix` digit-width gene, in bits; values snap to {6, 8, 11}.
+    pub radix: GeneRange,
 }
 
 impl Default for Bounds {
@@ -195,6 +260,7 @@ impl Default for Bounds {
             algorithm: GeneRange::new(3, 4),
             fallback: GeneRange::new(256, 1_000_000),
             tile: GeneRange::new(64, 100_000),
+            radix: GeneRange::new(6, 11),
         }
     }
 }
@@ -217,13 +283,14 @@ impl Bounds {
             2 => self.algorithm,
             3 => self.fallback,
             4 => self.tile,
+            5 => self.radix,
             _ => panic!("gene index {i} out of range"),
         }
     }
 
     /// Validate a genome against the bounds.
-    pub fn validate(&self, g: &[i64; 5]) -> bool {
-        (0..5).all(|i| self.gene(i).contains(g[i]))
+    pub fn validate(&self, g: &[i64; 6]) -> bool {
+        (0..6).all(|i| self.gene(i).contains(g[i]))
     }
 }
 
@@ -245,35 +312,56 @@ mod tests {
     #[test]
     fn genome_roundtrip_paper_values() {
         let p = SortParams::paper_1e7();
-        assert_eq!(p.to_genes(), [3075, 31291, 4, 99574, 1418]);
+        assert_eq!(p.to_genes(), [3075, 31291, 4, 99574, 1418, 8]);
         assert_eq!(p.algorithm, ACode::Radix);
+        assert_eq!(p.radix_width, RadixWidth::W8);
         let q = SortParams::from_genes(&p.to_genes());
         assert_eq!(p, q);
     }
 
     #[test]
     fn from_genes_clamps() {
-        let p = SortParams::from_genes(&[-5, 0, 4, 999_999_999, 1]);
+        let p = SortParams::from_genes(&[-5, 0, 4, 999_999_999, 1, 99]);
         let b = Bounds::default();
         assert_eq!(p.insertion_threshold as i64, b.insertion.lo);
         assert_eq!(p.parallel_merge_threshold as i64, b.parallel_merge.lo);
         assert_eq!(p.fallback_threshold as i64, b.fallback.hi);
         assert_eq!(p.tile as i64, b.tile.lo);
+        assert_eq!(p.radix_width, RadixWidth::W11, "out-of-range width snaps");
+    }
+
+    #[test]
+    fn radix_width_snaps_to_representable_values() {
+        assert_eq!(RadixWidth::from_bits(i64::MIN), RadixWidth::W6);
+        assert_eq!(RadixWidth::from_bits(6), RadixWidth::W6);
+        assert_eq!(RadixWidth::from_bits(7), RadixWidth::W6);
+        assert_eq!(RadixWidth::from_bits(8), RadixWidth::W8);
+        assert_eq!(RadixWidth::from_bits(9), RadixWidth::W8);
+        assert_eq!(RadixWidth::from_bits(10), RadixWidth::W11);
+        assert_eq!(RadixWidth::from_bits(11), RadixWidth::W11);
+        assert_eq!(RadixWidth::from_bits(i64::MAX), RadixWidth::W11);
+        for w in [RadixWidth::W6, RadixWidth::W8, RadixWidth::W11] {
+            assert_eq!(RadixWidth::from_bits(w.gene()), w, "gene roundtrip");
+            assert_eq!(w.buckets(), 1 << w.bits());
+        }
     }
 
     #[test]
     fn bounds_validate() {
         let b = Bounds::default();
-        assert!(b.validate(&[3075, 31291, 4, 99574, 1418]));
-        assert!(!b.validate(&[3075, 31291, 5, 99574, 1418]), "xla needs with_xla()");
-        assert!(Bounds::with_xla().validate(&[3075, 31291, 5, 99574, 1418]));
-        assert!(!b.validate(&[0, 31291, 4, 99574, 1418]));
+        assert!(b.validate(&[3075, 31291, 4, 99574, 1418, 8]));
+        assert!(!b.validate(&[3075, 31291, 5, 99574, 1418, 8]), "xla needs with_xla()");
+        assert!(Bounds::with_xla().validate(&[3075, 31291, 5, 99574, 1418, 8]));
+        assert!(!b.validate(&[0, 31291, 4, 99574, 1418, 8]));
+        assert!(!b.validate(&[3075, 31291, 4, 99574, 1418, 12]), "width above bounds");
+        assert!(b.validate(&[3075, 31291, 4, 99574, 1418, 6]));
+        assert!(b.validate(&[3075, 31291, 4, 99574, 1418, 11]));
     }
 
     #[test]
     fn display_matches_paper_format() {
         let s = format!("{}", SortParams::paper_1e8());
-        assert!(s.contains("4074") && s.contains("radix"), "{s}");
+        assert!(s.contains("4074") && s.contains("radix") && s.contains("w8"), "{s}");
     }
 
     #[test]

@@ -119,7 +119,7 @@ impl AdaptiveSorter {
         }
         match p.algorithm {
             ACode::Radix => {
-                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+                radix_sort_timed(data, self.threads, p.radix_width, scratch, self.executor(), timer)
             }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);
@@ -182,7 +182,7 @@ impl AdaptiveSorter {
         }
         match p.algorithm {
             ACode::Radix => {
-                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+                radix_sort_timed(data, self.threads, p.radix_width, scratch, self.executor(), timer)
             }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);
@@ -256,7 +256,7 @@ impl AdaptiveSorter {
         }
         match p.algorithm {
             ACode::Radix => {
-                radix_sort_timed(data, self.threads, scratch, self.executor(), timer)
+                radix_sort_timed(data, self.threads, p.radix_width, scratch, self.executor(), timer)
             }
             ACode::Sample => {
                 let tuning = SampleSortTuning::for_threads(self.threads);

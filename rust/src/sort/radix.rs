@@ -1,36 +1,51 @@
-//! Block-based LSD radix sort — Algorithms 4 and 5 of the paper.
+//! Block-based LSD radix sort — Algorithms 4 and 5 of the paper — in
+//! explicit **count → scan → scatter** form.
 //!
-//! Structure (identical for 32- and 64-bit keys, differing only in pass count
+//! Structure (identical for 32- and 64-bit keys, differing only in key width
 //! and sign mask, exactly as the paper describes):
 //!
 //! 1. XOR every element with the sign mask, mapping signed order onto
-//!    unsigned order (`0x8000_0000` / `0x8000_0000_0000_0000`).
-//! 2. For each 8-bit digit (4 passes for 32-bit, 8 for 64-bit):
-//!    a. each thread builds a **local histogram** over its contiguous block;
-//!    b. histograms are reduced into global prefix sums;
-//!    c. per-thread write offsets are derived so every thread scatters into
-//!       disjoint destination slots;
-//!    d. threads redistribute their block into the temporary buffer;
-//!    e. buffers are swapped.
-//! 3. XOR with the sign mask again to restore values.
+//!    unsigned order (`0x8000_0000` / `0x8000_0000_0000_0000`), fused with a
+//!    min/max reduction that drives range narrowing.
+//! 2. For each digit of `W_radix` bits (a GA gene: 6, 8, or 11):
+//!    a. **count** — each thread histograms its contiguous block into its own
+//!       row of a flat `threads × buckets` matrix. Digit extraction runs
+//!       8-wide over fixed-stride blocks with no per-element branching, so
+//!       the `(bits - min) >> shift & mask` pipeline autovectorizes; only
+//!       the bucket increments stay scalar.
+//!    b. **scan** — one serial exclusive scan over the histogram matrix
+//!       (O(threads·buckets), negligible next to the O(n) sweeps) turns
+//!       every `(thread, bucket)` cell into that task's private write
+//!       cursor, so scatter destinations are disjoint by construction.
+//!    c. **scatter** — threads redistribute their block through the
+//!       [`ScatterBuf`] seam into the temporary buffer; buffers swap.
+//! 3. XOR with the sign mask again to restore values (copy-back first if the
+//!    last scatter landed in scratch).
 //!
 //! Two refinements over the paper's pseudocode (both standard, both covered
 //! by ablation benches):
-//! * **skip trivial passes** — if a digit's histogram puts every element in
-//!   one bucket, the pass is a no-op permutation and is skipped;
-//! * **fused first-pass histogram** — histograms for *all* digits are
-//!   computed in one read sweep before pass 0, halving full-array reads.
+//! * **skip trivial passes** — range narrowing skips passes above the
+//!   min/max delta outright, and a pass whose scan finds every element in
+//!   one bucket is a no-op permutation and is skipped;
+//! * **one histogram allocation** — the flat matrix is allocated once per
+//!   sort and reused across passes (count re-zeroes its own row), instead of
+//!   a fresh `Vec` of per-thread histograms every pass.
+//!
+//! All three phases share one [`RadixPlan`] — the effective thread count and
+//! per-thread block bounds are computed exactly once per sort, so count,
+//! scatter, and copy-back can never disagree on geometry.
+
+use std::ops::Range;
 
 use crate::exec;
 use crate::obs::{Phase, PhaseTimer};
-
-const RADIX_BITS: usize = 8;
-const BUCKETS: usize = 1 << RADIX_BITS;
+use crate::params::RadixWidth;
 
 /// Integer key sortable by the block-based LSD radix sort.
 pub trait RadixKey: Copy + Ord + Send + Sync + Default {
-    /// Number of 8-bit passes needed (4 for 32-bit, 8 for 64-bit).
-    const PASSES: usize;
+    /// Width of the key's bit pattern (32 or 64); with the digit width it
+    /// determines the pass count (`KEY_BITS.div_ceil(width.bits())`).
+    const KEY_BITS: usize;
     /// XOR mask flipping the sign bit (0 for unsigned types).
     const SIGN_MASK: u64;
     /// The key's bit pattern widened to u64.
@@ -40,7 +55,7 @@ pub trait RadixKey: Copy + Ord + Send + Sync + Default {
 }
 
 impl RadixKey for i32 {
-    const PASSES: usize = 4;
+    const KEY_BITS: usize = 32;
     const SIGN_MASK: u64 = 0x8000_0000;
     #[inline]
     fn bits(self) -> u64 {
@@ -53,7 +68,7 @@ impl RadixKey for i32 {
 }
 
 impl RadixKey for i64 {
-    const PASSES: usize = 8;
+    const KEY_BITS: usize = 64;
     const SIGN_MASK: u64 = 0x8000_0000_0000_0000;
     #[inline]
     fn bits(self) -> u64 {
@@ -66,7 +81,7 @@ impl RadixKey for i64 {
 }
 
 impl RadixKey for u32 {
-    const PASSES: usize = 4;
+    const KEY_BITS: usize = 32;
     const SIGN_MASK: u64 = 0;
     #[inline]
     fn bits(self) -> u64 {
@@ -79,7 +94,7 @@ impl RadixKey for u32 {
 }
 
 impl RadixKey for u64 {
-    const PASSES: usize = 8;
+    const KEY_BITS: usize = 64;
     const SIGN_MASK: u64 = 0;
     #[inline]
     fn bits(self) -> u64 {
@@ -88,6 +103,36 @@ impl RadixKey for u64 {
     #[inline]
     fn from_bits(bits: u64) -> Self {
         bits
+    }
+}
+
+/// The geometry of one radix sort, computed **once** and shared by every
+/// phase: count, scan, scatter, and copy-back all index the same per-thread
+/// block bounds, so no phase can re-derive a different thread count.
+pub(crate) struct RadixPlan {
+    /// Effective worker count (always `bounds.len()`).
+    pub(crate) threads: usize,
+    /// Contiguous per-thread block bounds tiling `0..n`.
+    pub(crate) bounds: Vec<Range<usize>>,
+    /// Digit width of every pass.
+    pub(crate) width: RadixWidth,
+    /// Buckets per digit (`1 << width.bits()`).
+    pub(crate) buckets: usize,
+    /// Maximum pass count covering the key (range narrowing may use fewer).
+    pub(crate) passes: usize,
+}
+
+impl RadixPlan {
+    pub(crate) fn new(n: usize, threads: usize, width: RadixWidth, key_bits: usize) -> RadixPlan {
+        let threads = effective_threads(threads, n);
+        let bounds = exec::partition_even(n, threads);
+        RadixPlan {
+            threads: bounds.len(),
+            bounds,
+            width,
+            buckets: width.buckets(),
+            passes: key_bits.div_ceil(width.bits()),
+        }
     }
 }
 
@@ -112,7 +157,7 @@ unsafe impl<T: Send> Send for ScatterBuf<T> {}
 unsafe impl<T: Send> Sync for ScatterBuf<T> {}
 
 /// Sort `data` in place with the block-based LSD radix sort using up to
-/// `threads` threads.
+/// `threads` threads (default 8-bit digits).
 pub fn radix_sort<T: RadixKey>(data: &mut [T], threads: usize) {
     radix_sort_with_scratch(data, threads, &mut Vec::new());
 }
@@ -138,23 +183,32 @@ pub(crate) fn effective_threads(threads: usize, n: usize) -> usize {
 
 /// Fully explicit variant: caller-provided scratch *and* executor — the form
 /// the adaptive dispatcher uses so every service worker's jobs share one
-/// parked pool and one arena.
+/// parked pool and one arena. Default 8-bit digits.
 pub fn radix_sort_with_executor<T: RadixKey>(
     data: &mut [T],
     threads: usize,
     scratch: &mut Vec<T>,
     exec: &exec::Executor,
 ) {
-    radix_sort_timed(data, threads, scratch, exec, &mut PhaseTimer::disabled())
+    radix_sort_timed(
+        data,
+        threads,
+        RadixWidth::W8,
+        scratch,
+        exec,
+        &mut PhaseTimer::disabled(),
+    )
 }
 
-/// [`radix_sort_with_executor`] with per-phase timing: the coordinating
-/// thread brackets each fan-out (min/max reduce, per-pass histograms,
-/// scatters, final copy-back) into `timer`'s accumulators. With a disabled
-/// timer every bracket is a branch — this *is* the untimed hot path.
+/// [`radix_sort_with_executor`] with an explicit digit width (the `W_radix`
+/// gene) and per-phase timing: the coordinating thread brackets each phase
+/// (min/max reduce, per-pass count/scan/scatter, final copy-back) into
+/// `timer`'s accumulators. With a disabled timer every bracket is a branch —
+/// this *is* the untimed hot path.
 pub fn radix_sort_timed<T: RadixKey>(
     data: &mut [T],
     threads: usize,
+    width: RadixWidth,
     scratch: &mut Vec<T>,
     exec: &exec::Executor,
     timer: &mut PhaseTimer,
@@ -168,7 +222,7 @@ pub fn radix_sort_timed<T: RadixKey>(
         data.sort_unstable();
         return;
     }
-    let threads = effective_threads(threads, n);
+    let plan = RadixPlan::new(n, threads, width, T::KEY_BITS);
     if scratch.len() < n {
         scratch.resize(n, T::default());
     }
@@ -177,16 +231,15 @@ pub fn radix_sort_timed<T: RadixKey>(
     // Phase 1 — sign flip (parallel) fused with a min/max reduction over the
     // flipped (unsigned-ordered) bit patterns. The min/max range drives
     // *range narrowing*: keys are subsequently viewed as `bits - min`, so
-    // only `ceil(log256(max - min + 1))` digit passes carry information and
-    // the rest are skipped outright — no histogram sweep, no scatter. For
-    // the paper's workload (i64 in [-1e9, 1e9]) this halves the pass count
-    // from 8 to 4 (§Perf iteration 2; iteration 1 removed a redundant fused
-    // all-pass histogram pre-sweep that cost O(PASSES·n) increments).
-    let bounds = exec::partition_even(n, threads);
-    let nth = bounds.len();
+    // only `ceil(log_buckets(max - min + 1))` digit passes carry information
+    // and the rest are skipped outright — no count sweep, no scatter. For
+    // the paper's workload (i64 in [-1e9, 1e9]) this halves the 8-bit pass
+    // count from 8 to 4 (§Perf iteration 2; iteration 1 removed a redundant
+    // fused all-pass histogram pre-sweep that cost O(passes·n) increments).
+    let nth = plan.threads;
     let started = timer.begin();
     let (min_bits, max_bits) = {
-        let views = exec::carve_mut(&mut *data, &bounds);
+        let views = exec::carve_mut(&mut *data, &plan.bounds);
         // Each executor task owns one view and returns its (lo, hi) into a
         // private result slot — lock-free, results already in thread order.
         let minmax: Vec<(u64, u64)> = exec.run_consume_map(views, |_, view| {
@@ -213,61 +266,74 @@ pub fn radix_sort_timed<T: RadixKey>(
     timer.end(Phase::RadixMinMax, started);
     let delta = max_bits - min_bits;
 
+    // One flat `threads × buckets` histogram matrix for the whole sort; row
+    // `t` is thread `t`'s histogram during count and its write cursors after
+    // scan. Row bounds let the executor carve disjoint `&mut` rows.
+    let buckets = plan.buckets;
+    let mask = (buckets - 1) as u64;
+    let mut hist = vec![0usize; nth * buckets];
+    let row_bounds: Vec<Range<usize>> =
+        (0..nth).map(|t| t * buckets..(t + 1) * buckets).collect();
+    let mut totals = vec![0usize; buckets];
+
     let mut src_is_data = true;
-    for pass in 0..T::PASSES {
-        let shift = RADIX_BITS * pass;
+    for pass in 0..plan.passes {
+        let shift = plan.width.bits() * pass;
         if (delta >> shift) == 0 {
             // No key differs at or above this digit: all remaining passes
             // are the identity permutation on `bits - min`.
             break;
         }
 
-        // Per-thread local histograms of the *current* source layout
-        // (Algorithm 4, line 5). These must be recomputed each pass: the
-        // scatter permutes data, so block contents change.
+        // Phase (a) — count. Per-thread local histograms of the *current*
+        // source layout (Algorithm 4, line 5). These must be recomputed each
+        // pass: the scatter permutes data, so block contents change.
         let started = timer.begin();
         let src_now: &[T] = if src_is_data { &*data } else { &*scratch };
-        let mut hists: Vec<[usize; BUCKETS]> = exec.run_map(nth, |t| {
-            let chunk = &src_now[bounds[t].clone()];
-            let mut h = [0usize; BUCKETS];
-            for &x in chunk {
-                h[(((x.bits() - min_bits) >> shift) & 0xFF) as usize] += 1;
-            }
-            h
-        });
+        {
+            let rows = exec::carve_mut(&mut hist[..], &row_bounds);
+            let bounds = &plan.bounds;
+            exec.run_consume(rows, |t, row| {
+                count_digits(&src_now[bounds[t].clone()], min_bits, shift, mask, row);
+            });
+        }
+        timer.end(Phase::RadixCount, started);
 
-        // Global histogram for this pass + single-bucket skip (all keys can
-        // still share a digit inside the informative range).
-        let mut global = [0usize; BUCKETS];
-        for h in hists.iter() {
-            for b in 0..BUCKETS {
-                global[b] += h[b];
+        // Phase (b) — scan. Column totals, single-bucket skip (all keys can
+        // still share a digit inside the informative range), then one
+        // exclusive scan turning every (thread, bucket) cell into that
+        // task's private write cursor: cell[t][b] becomes
+        // bucket_prefix[b] + sum_{t' < t} count[t'][b].
+        let started = timer.begin();
+        totals.fill(0);
+        for t in 0..nth {
+            let row = &hist[t * buckets..(t + 1) * buckets];
+            for (total, &c) in totals.iter_mut().zip(row) {
+                *total += c;
             }
         }
-        timer.end(Phase::RadixHistogram, started);
-        if global.iter().any(|&c| c == n) {
+        let single_bucket = totals.iter().any(|&c| c == n);
+        if !single_bucket {
+            let mut acc = 0usize;
+            for b in 0..buckets {
+                let mut cursor = acc;
+                acc += totals[b];
+                for t in 0..nth {
+                    let cell = &mut hist[t * buckets + b];
+                    let count = *cell;
+                    *cell = cursor;
+                    cursor += count;
+                }
+            }
+        }
+        timer.end(Phase::RadixScan, started);
+        if single_bucket {
             continue;
         }
 
-        // Exclusive prefix over buckets, then per-(bucket, thread) offsets:
-        // offset[t][b] = global_prefix[b] + sum_{t' < t} hist[t'][b].
-        let mut bucket_start = [0usize; BUCKETS];
-        let mut acc = 0usize;
-        for b in 0..BUCKETS {
-            bucket_start[b] = acc;
-            acc += global[b];
-        }
-        // Convert each thread's histogram into its private write cursors.
-        for b in 0..BUCKETS {
-            let mut cursor = bucket_start[b];
-            for h in hists.iter_mut() {
-                let count = h[b];
-                h[b] = cursor;
-                cursor += count;
-            }
-        }
-
-        // Scatter.
+        // Phase (c) — scatter. Fully independent per-thread partitions: each
+        // task advances its own cursor row in place and writes through the
+        // shared destination pointer.
         {
             let started = timer.begin();
             let (src, dst): (&[T], &mut [T]) = if src_is_data {
@@ -276,13 +342,13 @@ pub fn radix_sort_timed<T: RadixKey>(
                 (&*scratch, &mut *data)
             };
             let dst_ptr = ScatterBuf(dst.as_mut_ptr());
-            let hists_ref: &Vec<[usize; BUCKETS]> = &hists;
-            exec.run_indexed(nth, |t| {
-                let src = &src[bounds[t].clone()];
-                let mut cursors = hists_ref[t];
+            let rows = exec::carve_mut(&mut hist[..], &row_bounds);
+            let bounds = &plan.bounds;
+            exec.run_consume(rows, |t, cursors| {
+                let chunk = &src[bounds[t].clone()];
                 let p = dst_ptr.0;
-                for &x in src {
-                    let b = (((x.bits() - min_bits) >> shift) & 0xFF) as usize;
+                for &x in chunk {
+                    let b = (((x.bits() - min_bits) >> shift) & mask) as usize;
                     // SAFETY: cursors[b] ranges over this task's private
                     // (thread, bucket) output interval only.
                     unsafe { p.add(cursors[b]).write(x) };
@@ -294,26 +360,54 @@ pub fn radix_sort_timed<T: RadixKey>(
         src_is_data = !src_is_data;
     }
 
-    // If the last scatter landed in scratch, copy back (parallel). Views
-    // are carved from the same `bounds2` the source is indexed with, so the
-    // geometry coupling is structural.
+    // If the last scatter landed in scratch, copy back (parallel) — through
+    // the *same* plan bounds every other phase used, so the geometry
+    // coupling is structural.
     let started = timer.begin();
     if !src_is_data {
-        let bounds2 = exec::partition_even(n, threads);
         let src: &[T] = scratch;
-        let views = exec::carve_mut(&mut *data, &bounds2);
-        exec.run_consume(views, |i, view| view.copy_from_slice(&src[bounds2[i].clone()]));
+        let bounds = &plan.bounds;
+        let views = exec::carve_mut(&mut *data, bounds);
+        exec.run_consume(views, |i, view| view.copy_from_slice(&src[bounds[i].clone()]));
     }
 
     // Phase 3 — undo the sign flip.
     if T::SIGN_MASK != 0 {
-        exec.run_chunks(data, threads, |_, chunk| {
+        exec.run_chunks(data, nth, |_, chunk| {
             for x in chunk.iter_mut() {
                 *x = T::from_bits(x.bits() ^ T::SIGN_MASK);
             }
         });
     }
     timer.end(Phase::RadixCopyback, started);
+}
+
+/// Count-phase inner loop. Digit extraction runs 8-wide over fixed-stride
+/// blocks — no branch-per-element bucket math, so the subtract/shift/mask
+/// pipeline autovectorizes; only the bucket increments (a gather/scatter the
+/// hardware cannot vectorize profitably) stay scalar.
+#[inline]
+fn count_digits<T: RadixKey>(
+    chunk: &[T],
+    min_bits: u64,
+    shift: usize,
+    mask: u64,
+    row: &mut [usize],
+) {
+    row.fill(0);
+    let mut blocks = chunk.chunks_exact(8);
+    for block in blocks.by_ref() {
+        let mut digits = [0usize; 8];
+        for (d, x) in digits.iter_mut().zip(block) {
+            *d = (((x.bits() - min_bits) >> shift) & mask) as usize;
+        }
+        for d in digits {
+            row[d] += 1;
+        }
+    }
+    for x in blocks.remainder() {
+        row[(((x.bits() - min_bits) >> shift) & mask) as usize] += 1;
+    }
 }
 
 #[cfg(test)]
@@ -424,6 +518,84 @@ mod tests {
     }
 
     #[test]
+    fn radix_plan_computes_geometry_once() {
+        // The plan must agree with `effective_threads` at the 64/4096
+        // boundaries, and its bounds must tile 0..n contiguously — every
+        // phase (count, scatter, copy-back) indexes these same bounds.
+        for (threads, n, expect) in [
+            (8usize, 64usize, 1usize),
+            (8, 4096, 1),
+            (8, 4097, 2),
+            (8, 8 * 4096, 8),
+            (8, 8 * 4096 + 1, 8),
+            (2, 1 << 20, 2),
+            (0, 10_000, 1),
+        ] {
+            let plan = RadixPlan::new(n, threads, RadixWidth::W8, 64);
+            assert_eq!(plan.threads, expect, "threads={threads} n={n}");
+            assert_eq!(plan.bounds.len(), plan.threads, "threads is always bounds.len()");
+            let mut next = 0;
+            for r in &plan.bounds {
+                assert_eq!(r.start, next, "bounds must tile contiguously");
+                next = r.end;
+            }
+            assert_eq!(next, n, "bounds must cover 0..n");
+        }
+        // Width drives buckets and the worst-case pass count.
+        let p6 = RadixPlan::new(1 << 20, 4, RadixWidth::W6, 64);
+        assert_eq!((p6.buckets, p6.passes), (64, 11));
+        let p8 = RadixPlan::new(1 << 20, 4, RadixWidth::W8, 64);
+        assert_eq!((p8.buckets, p8.passes), (256, 8));
+        let p11 = RadixPlan::new(1 << 20, 4, RadixWidth::W11, 64);
+        assert_eq!((p11.buckets, p11.passes), (2048, 6));
+        let p11_32 = RadixPlan::new(1 << 20, 4, RadixWidth::W11, 32);
+        assert_eq!((p11_32.buckets, p11_32.passes), (2048, 3));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
+    fn every_digit_width_matches_std_sort() {
+        let exec = crate::exec::Executor::new(3);
+        for width in [RadixWidth::W6, RadixWidth::W8, RadixWidth::W11] {
+            let data = generate_i64(10_000, Distribution::Zipf, 57, 4);
+            let mut got = data.clone();
+            let mut scratch = Vec::new();
+            radix_sort_timed(&mut got, 4, width, &mut scratch, &exec, &mut PhaseTimer::disabled());
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(got, expect, "{width:?}");
+        }
+    }
+
+    #[test]
+    fn digit_widths_small_n_all_dtypes() {
+        // Miri-sized: exercises count/scan/scatter at every width and every
+        // RadixKey dtype without the minutes-long big-n sweeps.
+        fn check<T: RadixKey + std::fmt::Debug>(data: Vec<T>, width: RadixWidth) {
+            let exec = crate::exec::Executor::new(2);
+            let mut got = data.clone();
+            radix_sort_timed(
+                &mut got,
+                2,
+                width,
+                &mut Vec::new(),
+                &exec,
+                &mut PhaseTimer::disabled(),
+            );
+            let mut expect = data;
+            expect.sort_unstable();
+            assert_eq!(got, expect, "{width:?}");
+        }
+        let i64s = generate_i64(300, Distribution::Uniform, 59, 2);
+        for width in [RadixWidth::W6, RadixWidth::W8, RadixWidth::W11] {
+            check(i64s.clone(), width);
+            check(i64s.iter().map(|&x| x as i32).collect::<Vec<i32>>(), width);
+            check(i64s.iter().map(|&x| x as u32).collect::<Vec<u32>>(), width);
+            check(i64s.iter().map(|&x| x as u64).collect::<Vec<u64>>(), width);
+        }
+    }
+
+    #[test]
     #[cfg_attr(miri, ignore = "minutes-slow under Miri; the small-n tests cover this path")]
     fn executor_variant_matches_std_sort() {
         let exec = crate::exec::Executor::new(3);
@@ -445,11 +617,12 @@ mod tests {
         let mut data = generate_i64(30_000, Distribution::Uniform, 55, 2);
         let mut expect = data.clone();
         expect.sort_unstable();
-        radix_sort_timed(&mut data, 4, &mut scratch, &exec, &mut timer);
+        radix_sort_timed(&mut data, 4, RadixWidth::W8, &mut scratch, &exec, &mut timer);
         assert_eq!(data, expect);
         let phases = timer.drain();
         assert!(phases.iter().any(|(p, _)| *p == Phase::RadixMinMax), "{phases:?}");
-        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixHistogram), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixCount), "{phases:?}");
+        assert!(phases.iter().any(|(p, _)| *p == Phase::RadixScan), "{phases:?}");
         assert!(phases.iter().any(|(p, _)| *p == Phase::RadixScatter), "{phases:?}");
         assert!(
             phases.iter().all(|(p, _)| p.kernel() == crate::obs::Kernel::Radix),

@@ -137,6 +137,7 @@ impl SymbolicModel {
             algorithm: ACode::Radix,
             fallback_threshold: clamp(&self.fallback, b.fallback),
             tile: clamp(&self.tile, b.tile),
+            radix_width: crate::params::RadixWidth::W8,
         }
     }
 }

@@ -147,7 +147,7 @@ impl Arbitrary for Vec<i64> {
 /// Random genome within default bounds (occasionally out-of-bounds to test
 /// clamping at API boundaries).
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ArbGenome(pub [i64; 5]);
+pub struct ArbGenome(pub [i64; 6]);
 
 impl Arbitrary for ArbGenome {
     fn generate(rng: &mut Xoshiro256pp) -> Self {
@@ -156,7 +156,7 @@ impl Arbitrary for ArbGenome {
             crate::ga::individual::random_genome(&bounds, rng);
         // 10% of cases: perturb one gene out of bounds.
         if rng.below(10) == 0 {
-            let i = rng.below(5);
+            let i = rng.below(6);
             g[i] = if rng.below(2) == 0 { -1 } else { i64::MAX / 2 };
         }
         ArbGenome(g)
@@ -164,7 +164,7 @@ impl Arbitrary for ArbGenome {
 
     fn shrink(&self) -> Vec<Self> {
         let mut out = Vec::new();
-        for i in 0..5 {
+        for i in 0..6 {
             let lo = crate::params::Bounds::default().gene(i).lo;
             if self.0[i] != lo {
                 let mut g = self.0;

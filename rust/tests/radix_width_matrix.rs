@@ -1,0 +1,86 @@
+//! Three-phase radix kernel matrix: the count → scan → scatter rewrite must
+//! match the std-sort oracle for every dtype × distribution × digit width ×
+//! thread count combination the adaptive dispatcher can reach. The digit
+//! width is a GA gene (`W_radix` ∈ {6, 8, 11}), so every width is a live
+//! production configuration, not a debug knob.
+//!
+//! The in-crate Miri job runs `--lib` only; the Miri-sized companions of
+//! these sweeps live in `sort/radix.rs` (`digit_widths_small_n_all_dtypes`).
+
+use evosort::data::{self, Distribution};
+use evosort::params::{ACode, RadixWidth, SortParams};
+use evosort::sort::AdaptiveSorter;
+
+/// Forced-radix parameters: a zero fallback threshold sends every size into
+/// the kernel instead of `sort_unstable`.
+fn radix_params(width: RadixWidth) -> SortParams {
+    SortParams {
+        algorithm: ACode::Radix,
+        fallback_threshold: 0,
+        radix_width: width,
+        ..SortParams::paper_1e7()
+    }
+}
+
+const WIDTHS: [RadixWidth; 3] = [RadixWidth::W6, RadixWidth::W8, RadixWidth::W11];
+const THREADS: [usize; 3] = [1, 3, 8];
+
+/// Run the full 4-dtype × 9-distribution × 3-width × 3-thread matrix at
+/// size `n`; each dtype derives its workload from the same i64 draw so a
+/// failure pins one (dist, width, threads, dtype) cell.
+fn run_matrix(n: usize) {
+    for &dist in Distribution::all() {
+        for threads in THREADS {
+            let sorter = AdaptiveSorter::new(threads);
+            let i64s = data::generate_i64(n, dist, 61, threads);
+            let i32s = data::generate_i32(n, dist, 61, threads);
+            let u64s: Vec<u64> = i64s.iter().map(|&x| x as u64).collect();
+            let f64s: Vec<f64> = i64s.iter().map(|&x| x as f64).collect();
+            for width in WIDTHS {
+                let p = radix_params(width);
+                let ctx = format!("{} {width:?} t{threads} n{n}", dist.name());
+
+                let mut got = i64s.clone();
+                sorter.sort_i64(&mut got, &p);
+                let mut expect = i64s.clone();
+                expect.sort_unstable();
+                assert_eq!(got, expect, "i64 {ctx}");
+
+                let mut got = i32s.clone();
+                sorter.sort_i32(&mut got, &p);
+                let mut expect = i32s.clone();
+                expect.sort_unstable();
+                assert_eq!(got, expect, "i32 {ctx}");
+
+                let mut got = u64s.clone();
+                sorter.sort_u64(&mut got, &p);
+                let mut expect = u64s.clone();
+                expect.sort_unstable();
+                assert_eq!(got, expect, "u64 {ctx}");
+
+                let mut got = f64s.clone();
+                sorter.sort_f64(&mut got, &p);
+                let mut expect = f64s.clone();
+                expect.sort_by(f64::total_cmp);
+                let same = got.len() == expect.len()
+                    && got.iter().zip(&expect).all(|(a, b)| a.total_cmp(b).is_eq());
+                assert!(same, "f64 {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "minutes-slow under Miri; lib small-n variants cover the kernel")]
+fn radix_width_matrix_matches_std_sort() {
+    run_matrix(6_000);
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "integration tests are not part of the Miri job")]
+fn radix_width_matrix_small_n() {
+    // Small enough that per-thread blocks collapse to one worker and the
+    // narrow-range skip fires on the clustered distributions — the geometry
+    // edge cases the big sweep's sizes never hit.
+    run_matrix(96);
+}
